@@ -1,0 +1,49 @@
+//! §7 lower bounds demo: on a path every considered algorithm needs
+//! Ω(log n) phases — LocalContraction shortens the path at most 5x per
+//! phase (Thm 7.1), TreeContraction survives w.h.p. for log_26 n rounds
+//! (Thm 7.2), and Hash-Min pays the full Θ(n) diameter.
+//!
+//!     cargo run --release --example path_worst_case
+
+use lcc::coordinator::{Driver, RunConfig};
+use lcc::graph::generators;
+use lcc::util::stats::AsciiTable;
+
+fn main() {
+    let algos = ["lc", "tc-dht", "cracker", "htm", "hash-min"];
+    let mut t = AsciiTable::new(&["n", "log5 n", "lc", "tc-dht", "cracker", "htm", "hash-min"]);
+    for exp in [8u32, 10, 12, 14] {
+        let n = 1usize << exp;
+        let g = generators::path(n);
+        let mut cells = vec![
+            n.to_string(),
+            format!("{:.1}", (n as f64).ln() / 5f64.ln()),
+        ];
+        for algo in algos {
+            // hash-min needs Θ(n) rounds on a path and Hash-To-Min's
+            // cluster state is Θ(n·2^round) — cap both to small sizes so
+            // the example stays interactive (the paper's "X" entries).
+            if (algo == "hash-min" && exp > 10) || (algo == "htm" && exp > 11) {
+                cells.push("(skipped)".into());
+                continue;
+            }
+            let driver = Driver::new(RunConfig {
+                algorithm: algo.to_string(),
+                finisher_threshold: 0,
+                max_phases: 20_000,
+                verify: true,
+                ..Default::default()
+            });
+            let r = driver.run(&g);
+            assert_eq!(r.verified, Some(true), "{algo} wrong on path({n})");
+            cells.push(r.phases.to_string());
+        }
+        t.row(cells);
+    }
+    println!("{}", t.render());
+    println!(
+        "Expected shape (§7): the contraction algorithms track log n (each\n\
+         phase shortens the path by a constant factor; ~log5 n for lc), while\n\
+         hash-min pays the full diameter n."
+    );
+}

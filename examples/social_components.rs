@@ -1,0 +1,63 @@
+//! Social-network workload: the Table 2/3 comparison on the Orkut and
+//! Friendster analogues — all five paper algorithms, phases and relative
+//! running times.
+//!
+//!     cargo run --release --example social_components [n]
+
+use lcc::cc::PAPER_ALGORITHMS;
+use lcc::coordinator::{Driver, RunConfig};
+use lcc::graph::generators::presets;
+use lcc::util::stats::AsciiTable;
+
+fn main() {
+    let n: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(30_000);
+
+    for dataset in ["orkut", "friendster"] {
+        let g = presets::generate(dataset, Some(n), 42);
+        println!(
+            "\n=== {dataset} analogue: n={} m={} ===",
+            g.num_vertices(),
+            g.num_edges()
+        );
+        let mut t = AsciiTable::new(&["algorithm", "phases", "rounds", "rel. time", "verified"]);
+        let mut rows = Vec::new();
+        for algo in PAPER_ALGORITHMS {
+            let driver = Driver::new(RunConfig {
+                algorithm: algo.to_string(),
+                finisher_threshold: g.num_edges() / 100,
+                state_cap: 20 * g.num_edges() as u64,
+                verify: true,
+                ..Default::default()
+            });
+            let r = driver.run_median(&g, dataset, 3);
+            rows.push(r);
+        }
+        let best = rows
+            .iter()
+            .filter(|r| r.completed)
+            .map(|r| r.wall_ms)
+            .fold(f64::INFINITY, f64::min);
+        for r in &rows {
+            t.row(vec![
+                r.algorithm.clone(),
+                if r.completed {
+                    r.phases.to_string()
+                } else {
+                    "X".into()
+                },
+                r.rounds.to_string(),
+                if r.completed {
+                    format!("{:.2}", r.wall_ms / best)
+                } else {
+                    "X".into()
+                },
+                format!("{:?}", r.verified == Some(true)),
+            ]);
+        }
+        println!("{}", t.render());
+    }
+    println!("(compare with Tables 2 and 3 of the paper: LocalContraction wins or ties,\n Hash-To-Min needs the most phases and blows up first)");
+}

@@ -1,0 +1,135 @@
+"""AOT lowering: Layer-2 phase graphs -> HLO text artifacts for the Rust runtime.
+
+Interchange format is **HLO text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the ``xla`` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Run as ``python -m compile.aot --out-dir ../artifacts`` (the Makefile does
+this).  Emits one artifact per (function, shard size) plus a
+``manifest.json`` the Rust artifact registry reads.
+
+This is the ONLY place Python touches the system: artifacts are built once;
+the Rust binary is self-contained afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# Shard sizes the Rust runtime can pack.  Must be multiples of the kernel
+# block sizes (128).
+SHARD_SIZES = (256, 1024)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _specs(n: int):
+    mask = jax.ShapeDtypeStruct((n, n), jnp.int32)
+    prio = jax.ShapeDtypeStruct((n,), jnp.int32)
+    return mask, prio
+
+
+def build_entries(n: int):
+    """(name, jitted fn, example args, input descs, n_outputs) per artifact.
+
+    CPU artifacts are lowered with (n/2, n/2) tiles — a 2x2 grid.  The
+    interpret-mode Pallas grid becomes an HLO while-loop, so on the CPU
+    PJRT plugin fewer, wider steps are ~8x faster at identical numerics
+    (§Perf); a TPU build would keep the kernel's (128, 128) VMEM tiles.
+    """
+    mask, prio = _specs(n)
+    jump_steps = max(1, math.ceil(math.log2(n)))
+    bv = bn = n // 2
+    return [
+        (
+            f"local_labels_{n}",
+            jax.jit(lambda m, p: model.local_labels(m, p, block_v=bv, block_n=bn)),
+            (mask, prio),
+            [["mask", "i32", [n, n]], ["prio", "i32", [n]]],
+            1,
+        ),
+        (
+            f"hash_min_step_{n}",
+            jax.jit(lambda m, p: model.hash_min_step(m, p, block_v=bv, block_n=bn)),
+            (mask, prio),
+            [["mask", "i32", [n, n]], ["prio", "i32", [n]]],
+            1,
+        ),
+        (
+            f"pointer_jump_{n}",
+            jax.jit(model.pointer_jump),
+            (prio,),
+            [["f", "i32", [n]]],
+            1,
+        ),
+        (
+            f"tree_roots_{n}",
+            jax.jit(lambda f: model.tree_roots(f, jump_steps)),
+            (prio,),
+            [["f", "i32", [n]]],
+            1,
+        ),
+        (
+            f"phase_shrink_stats_{n}",
+            jax.jit(model.phase_shrink_stats),
+            (mask, prio),
+            [["mask", "i32", [n, n]], ["prio", "i32", [n]]],
+            2,
+        ),
+    ]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--sizes", type=int, nargs="*", default=list(SHARD_SIZES),
+        help="shard sizes to specialize artifacts for",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"format": "hlo-text", "artifacts": []}
+    for n in args.sizes:
+        for name, fn, ex_args, inputs, n_out in build_entries(n):
+            lowered = fn.lower(*ex_args)
+            text = to_hlo_text(lowered)
+            path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+            with open(path, "w") as f:
+                f.write(text)
+            manifest["artifacts"].append(
+                {
+                    "name": name,
+                    "file": f"{name}.hlo.txt",
+                    "shard_size": n,
+                    "inputs": inputs,
+                    "outputs": n_out,
+                }
+            )
+            print(f"wrote {path} ({len(text)} chars)")
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath} ({len(manifest['artifacts'])} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

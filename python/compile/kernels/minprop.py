@@ -1,0 +1,132 @@
+"""Layer-1 Pallas kernels for contraction-based connected components.
+
+The per-phase hot spot of every algorithm in the paper (LocalContraction,
+Cracker's label step, Hash-Min) is *neighborhood min aggregation*: for each
+vertex ``v`` compute the minimum priority over a masked set of columns,
+
+    out[v] = min_{j : mask[v, j] != 0} prio[j]           (INF if row empty)
+
+i.e. a matrix-vector product over the tropical (min, +) semiring with a 0/1
+matrix.  On a MapReduce worker this is a key-grouped reducer fold; on TPU we
+re-think it as a *blocked masked VPU min-reduction*: the adjacency mask is
+streamed HBM -> VMEM tile by tile via BlockSpec, priorities are broadcast
+along rows, and a per-vertex-block accumulator folds the min across neighbor
+blocks (see DESIGN.md `§Hardware-Adaptation`).
+
+Priorities are int32 (exact min semantics, sentinel ``INF = iinfo(int32).max``).
+The mask is int32 on the interchange boundary because the Rust `xla` crate
+exposes {i,u}{32,64} / f{32,64} literals only.
+
+All ``pallas_call``s use ``interpret=True``: the CPU PJRT plugin cannot run
+Mosaic custom-calls, so interpret mode is the only lowering that round-trips
+through HLO text into the Rust runtime (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INF = jnp.iinfo(jnp.int32).max
+
+# Default tile sizes.  128 matches the TPU VPU lane width; a (128, 128) int32
+# mask tile is 64 KiB, far under VMEM, and lets the compiler double-buffer the
+# HBM -> VMEM stream of neighbor blocks.
+BLOCK_V = 128
+BLOCK_N = 128
+
+
+def _minprop_kernel(mask_ref, prio_ref, out_ref):
+    """One (vertex-block, neighbor-block) grid step of the tropical SpMV.
+
+    Grid is (num_vertex_blocks, num_neighbor_blocks); the second axis is the
+    reduction axis, so ``out_ref`` maps to the same block for every ``j`` and
+    is initialized on the first reduction step.
+    """
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.full_like(out_ref, INF)
+
+    mask = mask_ref[...]  # [BLOCK_V, BLOCK_N] int32 (0/1)
+    prio = prio_ref[...]  # [BLOCK_N] int32
+    # Masked broadcast + row min: the VPU-friendly form of the reducer fold.
+    vals = jnp.where(mask != 0, prio[None, :], INF)  # [BLOCK_V, BLOCK_N]
+    out_ref[...] = jnp.minimum(out_ref[...], jnp.min(vals, axis=1))
+
+
+@functools.partial(jax.jit, static_argnames=("block_v", "block_n"))
+def minprop(mask, prio, *, block_v=BLOCK_V, block_n=BLOCK_N):
+    """Tropical SpMV: ``out[v] = min_{j: mask[v,j]!=0} prio[j]`` (INF if none).
+
+    Args:
+      mask: ``[n, n]`` int32 0/1 adjacency mask.  Callers that want the
+        paper's self-inclusive ``N(v)`` semantics must set the diagonal.
+      prio: ``[n]`` int32 priorities; ``INF`` is reserved as the identity.
+      block_v / block_n: tile sizes; ``n`` must be divisible by both
+        (the Rust packer always pads shards to the artifact size).
+
+    Returns:
+      ``[n]`` int32 per-vertex masked minimum.
+    """
+    n = mask.shape[0]
+    if mask.shape != (n, n):
+        raise ValueError(f"mask must be square, got {mask.shape}")
+    if prio.shape != (n,):
+        raise ValueError(f"prio must be [{n}], got {prio.shape}")
+    if n % block_v or n % block_n:
+        raise ValueError(f"n={n} not divisible by blocks ({block_v},{block_n})")
+
+    grid = (n // block_v, n // block_n)
+    return pl.pallas_call(
+        _minprop_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_v, block_n), lambda i, j: (i, j)),
+            pl.BlockSpec((block_n,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((block_v,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        interpret=True,
+    )(mask.astype(jnp.int32), prio.astype(jnp.int32))
+
+
+def _gather_kernel(idx_ref, src_ref, out_ref):
+    """Per-vertex-block gather: ``out[v] = src[idx[v]]``.
+
+    ``src`` is mapped as a single full-width block (it is the pointer array
+    of the *whole* shard and must be addressable from every vertex block);
+    indices and output are tiled over the vertex axis.
+    """
+    out_ref[...] = src_ref[...][idx_ref[...]]
+
+
+@functools.partial(jax.jit, static_argnames=("block_v",))
+def gather(idx, src, *, block_v=BLOCK_V):
+    """Pointer-jump gather ``out[v] = src[idx[v]]`` (TreeContraction, Thm 4.7).
+
+    Args:
+      idx: ``[n]`` int32 indices into ``src`` (each in ``[0, n)``).
+      src: ``[n]`` int32 values.
+    """
+    n = idx.shape[0]
+    if src.shape != (n,):
+        raise ValueError(f"src must be [{n}], got {src.shape}")
+    if n % block_v:
+        raise ValueError(f"n={n} not divisible by block_v={block_v}")
+
+    return pl.pallas_call(
+        _gather_kernel,
+        grid=(n // block_v,),
+        in_specs=[
+            pl.BlockSpec((block_v,), lambda i: (i,)),
+            pl.BlockSpec((n,), lambda i: (0,)),  # whole pointer array in VMEM
+        ],
+        out_specs=pl.BlockSpec((block_v,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        interpret=True,
+    )(idx.astype(jnp.int32), src.astype(jnp.int32))

@@ -1,0 +1,101 @@
+"""Layer-2 JAX phase graphs for contraction-based connected components.
+
+Each function here is one *phase-level* computation of the paper, expressed
+over the Layer-1 Pallas kernels so that everything lowers into a single HLO
+module per artifact.  ``aot.py`` lowers these once per shard size; the Rust
+coordinator executes the resulting artifacts on its hot path — Python never
+runs at request time.
+
+Shard convention (shared with ``rust/src/runtime/shard.rs``):
+  * a shard is a padded dense graph of exactly ``n`` slots (artifact shape);
+  * ``mask[v, u] = 1`` iff ``{v, u}`` is an edge; the diagonal is set for
+    every *live* slot (self-inclusive ``N(v)``, §3 of the paper);
+  * padding slots have an all-zero row/column and priority ``INF``, so they
+    decay to label ``INF`` and are dropped by the unpacker.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from compile.kernels import minprop as k
+
+INF = k.INF
+
+
+def _blocks(mask, block_v, block_n):
+    """Resolve per-artifact tile sizes.
+
+    Defaults to the kernel's 128-lane TPU tiles.  The CPU AOT artifacts
+    override to an (n/2, n/2) 2x2 grid: interpret-mode Pallas executes the
+    grid as a python-level loop lowered into an HLO while-loop, so on the
+    CPU plugin fewer/wider steps win by ~8x (§Perf, EXPERIMENTS.md) while
+    the accumulate-across-neighbor-blocks structure stays exercised.  On a
+    real TPU build the (128, 128) default is the VMEM-sized choice.
+    """
+    n = mask.shape[0]
+    return block_v or min(k.BLOCK_V, n), block_n or min(k.BLOCK_N, n)
+
+
+def local_labels(mask, prio, block_v=None, block_n=None):
+    """LocalContraction phase labels: ``l(v) = min_{w in N(N(v))} rho(w)``.
+
+    Two hops of the tropical SpMV over the self-inclusive adjacency mask
+    (§3, "LocalContraction").  Returns int32 labels; vertices sharing a
+    label merge into one node of the contracted graph.
+    """
+    bv, bn = _blocks(mask, block_v, block_n)
+    h1 = k.minprop(mask, prio, block_v=bv, block_n=bn)
+    # Padding rows came back INF; re-injecting them through `where` is not
+    # needed because their mask row is all-zero in hop 2 as well.
+    return (k.minprop(mask, h1, block_v=bv, block_n=bn),)
+
+
+def hash_min_step(mask, prio, block_v=None, block_n=None):
+    """One Hash-Min hop / the Cracker label step: min over N(v) (diag set)."""
+    bv, bn = _blocks(mask, block_v, block_n)
+    return (k.minprop(mask, prio, block_v=bv, block_n=bn),)
+
+
+def pointer_jump(f):
+    """One pointer-jumping squaring step ``f <- f o f`` (Thm 4.7).
+
+    Used by TreeContraction to resolve ``f_rho`` forests in
+    ``O(log max d(v)) = O(log log n)`` steps w.h.p. (Lemma 4.5).
+    """
+    return (k.gather(f, f),)
+
+
+def tree_roots(f, steps: int):
+    """``steps`` pointer-jump squarings fused into one module.
+
+    After ``ceil(log2(max d(v)))`` squarings every vertex points into its
+    terminal 2-cycle (Lemma 4.4).  Squared powers all share one parity, so
+    to see *both* cycle elements we take one extra step of the **original**
+    pointer array: ``min(f0^(2^s)(v), f0^(2^s + 1)(v))`` is the canonical
+    (minimum) element of the 2-cycle — the root label Lemma 4.6 merges on.
+    """
+    f0 = f
+    for _ in range(steps):
+        f = k.gather(f, f)
+    fnext = k.gather(f, f0)  # f0[f^(2^steps)(v)] — the opposite-parity element
+    return (jnp.minimum(f, fnext),)
+
+
+def phase_shrink_stats(mask, prio):
+    """Diagnostics variant: labels plus the number of distinct live labels.
+
+    Exercised by the ablation bench (Lemma 4.1: E[#labels] <= 3n/4).
+
+    Requires the Rust packer's priority convention: live priorities are a
+    permutation of ``[0, live)`` and padding slots carry ``INF``.  Distinct
+    labels are then counted with a scatter-max into an ``n``-slot table;
+    out-of-range (``INF``, i.e. padding) labels drop out of the scatter.
+    """
+    n2 = mask.shape[0] // 2
+    (labels,) = local_labels(mask, prio, block_v=n2, block_n=n2)
+    n = labels.shape[0]
+    hits = jnp.zeros((n,), jnp.int32).at[labels].max(
+        jnp.ones_like(labels), mode="drop"
+    )
+    return labels, jnp.sum(hits)

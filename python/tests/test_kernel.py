@@ -1,0 +1,150 @@
+"""Layer-1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+This is the CORE correctness signal for the compiled hot path: everything the
+Rust runtime executes lowers through these kernels.  hypothesis sweeps
+shapes, block sizes, densities, and priority ranges.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import minprop as k
+from compile.kernels import ref
+
+INF = ref.INF
+
+SIZES = [128, 256, 384]
+BLOCKS = [32, 64, 128]
+
+
+def random_mask(rng, n, density, symmetric=True, diag=True):
+    mask = (rng.random((n, n)) < density).astype(np.int32)
+    if symmetric:
+        mask = np.maximum(mask, mask.T)
+    if diag:
+        np.fill_diagonal(mask, 1)
+    return mask
+
+
+# ---------------------------------------------------------------------------
+# minprop
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n=st.sampled_from(SIZES),
+    bv=st.sampled_from(BLOCKS),
+    bn=st.sampled_from(BLOCKS),
+    density=st.floats(0.0, 0.3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_minprop_matches_ref(n, bv, bn, density, seed):
+    rng = np.random.default_rng(seed)
+    mask = random_mask(rng, n, density, diag=bool(seed % 2))
+    prio = rng.integers(-(2**31) + 1, 2**31 - 2, size=n, dtype=np.int32)
+    got = np.asarray(k.minprop(jnp.array(mask), jnp.array(prio), block_v=bv, block_n=bn))
+    want = np.asarray(ref.minprop_ref(mask, prio))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_minprop_empty_rows_yield_inf():
+    n = 128
+    mask = np.zeros((n, n), np.int32)
+    prio = np.arange(n, dtype=np.int32)
+    out = np.asarray(k.minprop(jnp.array(mask), jnp.array(prio)))
+    assert (out == INF).all()
+
+
+def test_minprop_identity_mask_is_identity():
+    n = 256
+    mask = np.eye(n, dtype=np.int32)
+    prio = np.random.default_rng(1).permutation(n).astype(np.int32)
+    out = np.asarray(k.minprop(jnp.array(mask), jnp.array(prio)))
+    np.testing.assert_array_equal(out, prio)
+
+
+def test_minprop_full_mask_is_global_min():
+    n = 128
+    mask = np.ones((n, n), np.int32)
+    prio = np.random.default_rng(2).integers(-1000, 1000, n).astype(np.int32)
+    out = np.asarray(k.minprop(jnp.array(mask), jnp.array(prio)))
+    assert (out == prio.min()).all()
+
+
+def test_minprop_accepts_bool_mask_and_casts():
+    n = 128
+    rng = np.random.default_rng(3)
+    mask = random_mask(rng, n, 0.05).astype(bool)
+    prio = rng.permutation(n).astype(np.int32)
+    got = np.asarray(k.minprop(jnp.array(mask), jnp.array(prio)))
+    want = np.asarray(ref.minprop_ref(mask.astype(np.int32), prio))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_minprop_monotone_in_mask():
+    """Adding edges can only lower the per-vertex min (tropical monotonicity)."""
+    n = 128
+    rng = np.random.default_rng(4)
+    m1 = random_mask(rng, n, 0.02)
+    extra = random_mask(rng, n, 0.02, diag=False)
+    m2 = np.maximum(m1, extra)
+    prio = rng.permutation(n).astype(np.int32)
+    o1 = np.asarray(k.minprop(jnp.array(m1), jnp.array(prio)))
+    o2 = np.asarray(k.minprop(jnp.array(m2), jnp.array(prio)))
+    assert (o2 <= o1).all()
+
+
+@pytest.mark.parametrize("n,bv,bn", [(100, 128, 128), (256, 100, 128), (256, 128, 100)])
+def test_minprop_rejects_bad_blocking(n, bv, bn):
+    mask = jnp.zeros((n, n), jnp.int32)
+    prio = jnp.zeros((n,), jnp.int32)
+    with pytest.raises(ValueError):
+        k.minprop(mask, prio, block_v=bv, block_n=bn)
+
+
+def test_minprop_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        k.minprop(jnp.zeros((128, 256), jnp.int32), jnp.zeros((128,), jnp.int32))
+    with pytest.raises(ValueError):
+        k.minprop(jnp.zeros((128, 128), jnp.int32), jnp.zeros((256,), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# gather
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.sampled_from(SIZES),
+    bv=st.sampled_from(BLOCKS),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gather_matches_ref(n, bv, seed):
+    rng = np.random.default_rng(seed)
+    idx = rng.integers(0, n, size=n, dtype=np.int32)
+    src = rng.integers(-(2**20), 2**20, size=n, dtype=np.int32)
+    got = np.asarray(k.gather(jnp.array(idx), jnp.array(src), block_v=bv))
+    np.testing.assert_array_equal(got, np.asarray(ref.gather_ref(idx, src)))
+
+
+def test_gather_identity():
+    n = 256
+    idx = np.arange(n, dtype=np.int32)
+    src = np.random.default_rng(5).permutation(n).astype(np.int32)
+    got = np.asarray(k.gather(jnp.array(idx), jnp.array(src)))
+    np.testing.assert_array_equal(got, src)
+
+
+def test_gather_pointer_jump_converges_on_chain():
+    """f(v) = v-1 chain: repeated squaring converges to all-zeros in log steps."""
+    n = 256
+    f = np.maximum(np.arange(n) - 1, 0).astype(np.int32)
+    steps = 0
+    cur = jnp.array(f)
+    while not (np.asarray(cur) == 0).all():
+        cur = k.gather(cur, cur)
+        steps += 1
+        assert steps <= 10, "pointer jumping failed to converge in log2(n) steps"
+    assert steps <= 8  # ceil(log2(255))

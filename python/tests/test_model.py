@@ -1,0 +1,163 @@
+"""Layer-2 correctness: phase graphs vs oracles + semantic invariants.
+
+Beyond numeric agreement with ref.py, these tests check the *algorithmic*
+meaning of the phase computation: labels never leave the connected component,
+label values only decrease with more hops, one phase on a clique collapses it,
+and `tree_roots` resolves pointer forests to canonical roots.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+INF = ref.INF
+
+
+def random_graph(rng, n, density):
+    mask = (rng.random((n, n)) < density).astype(np.int32)
+    mask = np.maximum(mask, mask.T)
+    np.fill_diagonal(mask, 1)
+    return mask
+
+
+def components(mask):
+    """Union-find oracle over the mask (diag ignored)."""
+    n = mask.shape[0]
+    parent = list(range(n))
+
+    def find(x):
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    for v in range(n):
+        for u in range(v + 1, n):
+            if mask[v, u]:
+                rv, ru = find(v), find(u)
+                if rv != ru:
+                    parent[rv] = ru
+    return [find(v) for v in range(n)]
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.sampled_from([128, 256]),
+    density=st.floats(0.0, 0.1),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_local_labels_matches_ref(n, density, seed):
+    rng = np.random.default_rng(seed)
+    mask = random_graph(rng, n, density)
+    prio = rng.permutation(n).astype(np.int32)
+    (got,) = model.local_labels(jnp.array(mask), jnp.array(prio))
+    want = ref.local_labels_ref(mask, prio)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.sampled_from([128, 256]), seed=st.integers(0, 2**31 - 1))
+def test_local_labels_stay_within_component(n, seed):
+    """l(v) is the priority of some vertex in v's component (merge soundness)."""
+    rng = np.random.default_rng(seed)
+    mask = random_graph(rng, n, 0.02)
+    prio = rng.permutation(n).astype(np.int32)
+    (labels,) = model.local_labels(jnp.array(mask), jnp.array(prio))
+    labels = np.asarray(labels)
+    comp = components(mask)
+    owner = {int(p): v for v, p in enumerate(prio)}
+    for v in range(n):
+        assert comp[owner[int(labels[v])]] == comp[v]
+
+
+def test_two_hops_dominate_one_hop():
+    """min over N(N(v)) <= min over N(v): hop-2 labels can't exceed hop-1."""
+    rng = np.random.default_rng(7)
+    n = 128
+    mask = random_graph(rng, n, 0.03)
+    prio = rng.permutation(n).astype(np.int32)
+    (h1,) = model.hash_min_step(jnp.array(mask), jnp.array(prio))
+    (h2,) = model.local_labels(jnp.array(mask), jnp.array(prio))
+    assert (np.asarray(h2) <= np.asarray(h1)).all()
+
+
+def test_clique_collapses_in_one_phase():
+    n = 128
+    mask = np.ones((n, n), np.int32)
+    prio = np.random.default_rng(8).permutation(n).astype(np.int32)
+    (labels,) = model.local_labels(jnp.array(mask), jnp.array(prio))
+    assert len(np.unique(np.asarray(labels))) == 1
+
+
+def test_padding_slots_decay_to_inf():
+    """Rust packer convention: zero rows + INF priority stay inert."""
+    n, live = 256, 100
+    rng = np.random.default_rng(9)
+    mask = np.zeros((n, n), np.int32)
+    sub = random_graph(rng, live, 0.05)
+    mask[:live, :live] = sub
+    prio = np.full(n, INF, np.int32)
+    prio[:live] = rng.permutation(live).astype(np.int32)
+    (labels,) = model.local_labels(jnp.array(mask), jnp.array(prio))
+    labels = np.asarray(labels)
+    assert (labels[live:] == INF).all()
+    want = np.asarray(ref.local_labels_ref(sub, prio[:live]))
+    np.testing.assert_array_equal(labels[:live], want)
+
+
+def test_tree_roots_resolves_forest():
+    """Random f_rho-style forest: tree_roots returns the canonical 2-cycle min."""
+    rng = np.random.default_rng(10)
+    n = 256
+    # Build a pointer array whose terminal structure is 2-cycles (like f_rho):
+    # pair up roots, then hang random chains below them.
+    f = np.zeros(n, np.int32)
+    f[0], f[1] = 1, 0  # one 2-cycle
+    for v in range(2, n):
+        f[v] = rng.integers(0, v)  # points to an earlier vertex -> same tree
+    (roots,) = model.tree_roots(jnp.array(f), steps=8)
+    roots = np.asarray(roots)
+    assert (roots == 0).all()  # canonical min of the {0,1} 2-cycle
+
+
+def test_tree_roots_two_forests():
+    n = 256
+    half = n // 2
+    f = np.zeros(n, np.int32)
+    f[0], f[1] = 1, 0
+    f[half], f[half + 1] = half + 1, half
+    rng = np.random.default_rng(11)
+    for v in range(2, half):
+        f[v] = rng.integers(0, v)
+    for v in range(half + 2, n):
+        f[v] = rng.integers(half, v)
+    (roots,) = model.tree_roots(jnp.array(f), steps=8)
+    roots = np.asarray(roots)
+    assert (roots[:half] == 0).all()
+    assert (roots[half:] == half).all()
+
+
+def test_phase_shrink_stats_counts_distinct_labels():
+    rng = np.random.default_rng(12)
+    n = 256
+    mask = random_graph(rng, n, 0.01)
+    prio = rng.permutation(n).astype(np.int32)
+    labels, cnt = model.phase_shrink_stats(jnp.array(mask), jnp.array(prio))
+    assert int(cnt) == len(np.unique(np.asarray(labels)))
+
+
+def test_phase_shrink_lemma41_on_gnp():
+    """Lemma 4.1: E[#labels after one phase] <= 3n/4 — check with margin."""
+    rng = np.random.default_rng(13)
+    n = 256
+    counts = []
+    for seed in range(10):
+        r = np.random.default_rng(seed)
+        mask = random_graph(r, n, 4.0 / n)
+        prio = r.permutation(n).astype(np.int32)
+        _, cnt = model.phase_shrink_stats(jnp.array(mask), jnp.array(prio))
+        counts.append(int(cnt))
+    assert np.mean(counts) <= 0.75 * n

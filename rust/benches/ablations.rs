@@ -1,0 +1,23 @@
+//! `cargo bench --bench ablations` — design-choice ablations: §6 finisher
+//! threshold + isolated-node pruning, §5 MergeToLarge schedule, MPC
+//! machine scaling, and the compiled dense backend on/off.
+
+fn main() {
+    let seed = 42;
+    let _ = std::fs::create_dir_all("bench_results");
+    for (name, (text, json)) in [
+        ("finisher threshold (§6)", lcc::bench::ablations::finisher(seed)),
+        ("isolated-node pruning (§6)", lcc::bench::ablations::pruning(seed)),
+        ("MergeToLarge schedule (§5)", lcc::bench::ablations::mtl_schedule(seed)),
+        ("machine scaling (§2.1)", lcc::bench::ablations::machines(seed)),
+        ("dense XLA backend", lcc::bench::ablations::dense_backend(seed)),
+    ] {
+        println!("=== ablation: {name} ===");
+        println!("{text}");
+        let file = format!(
+            "bench_results/ablation_{}.json",
+            json.get("exp").and_then(|e| e.as_str()).unwrap_or("x")
+        );
+        std::fs::write(file, json.pretty()).ok();
+    }
+}

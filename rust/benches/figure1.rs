@@ -1,0 +1,15 @@
+//! `cargo bench --bench figure1` — regenerate Figure 1 (edges at the
+//! beginning of each phase; the >=10x decay observation).
+//! Scale with LCC_BENCH_SCALE (default 50000).
+
+fn main() {
+    let cfg = lcc::bench::tables::SweepConfig {
+        scale: std::env::var("LCC_BENCH_SCALE").ok().and_then(|s| s.parse().ok()).or(Some(50_000)),
+        ..Default::default()
+    };
+    let (text, json) = lcc::bench::tables::figure1(&cfg, &["clueweb", "webpages"]);
+    println!("=== Figure 1: numbers of edges at the beginning of each iteration ===");
+    println!("{text}");
+    let _ = std::fs::create_dir_all("bench_results");
+    std::fs::write("bench_results/figure1.json", json.pretty()).ok();
+}

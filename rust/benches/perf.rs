@@ -1,0 +1,11 @@
+//! `cargo bench --bench perf` — §Perf micro-benchmarks across all layers
+//! (see EXPERIMENTS.md §Perf for the iteration log and targets).
+//! LCC_BENCH_QUICK=1 for a fast pass.
+
+fn main() {
+    let quick = std::env::var("LCC_BENCH_QUICK").is_ok();
+    println!("=== §Perf micro-benchmarks (quick={quick}) ===");
+    for m in lcc::bench::perf::standard_suite(quick) {
+        println!("{}", m.report_line());
+    }
+}

@@ -1,0 +1,18 @@
+//! `cargo bench --bench table1` — regenerate Table 1 (dataset inventory).
+//! Scale with LCC_BENCH_SCALE (default: preset defaults).
+
+fn scale() -> Option<usize> {
+    std::env::var("LCC_BENCH_SCALE").ok().and_then(|s| s.parse().ok())
+}
+
+fn main() {
+    let cfg = lcc::bench::tables::SweepConfig {
+        scale: scale(),
+        ..Default::default()
+    };
+    let (text, json) = lcc::bench::tables::table1(&cfg);
+    println!("=== Table 1: graphs used in the empirical study (analogues) ===");
+    println!("{text}");
+    let _ = std::fs::create_dir_all("bench_results");
+    std::fs::write("bench_results/table1.json", json.pretty()).ok();
+}

@@ -1,0 +1,16 @@
+//! `cargo bench --bench table2` — regenerate Table 2 (phases per
+//! algorithm x dataset, median of 3 seeds, "X" = resource guard tripped).
+//! Scale with LCC_BENCH_SCALE (default 20000 for bench runtime sanity).
+
+fn main() {
+    let cfg = lcc::bench::tables::SweepConfig {
+        scale: std::env::var("LCC_BENCH_SCALE").ok().and_then(|s| s.parse().ok()).or(Some(20_000)),
+        ..Default::default()
+    };
+    let reports = lcc::bench::tables::sweep(&cfg);
+    let (text, json) = lcc::bench::tables::table2(&reports);
+    println!("=== Table 2: numbers of phases used by each algorithm ===");
+    println!("{text}");
+    let _ = std::fs::create_dir_all("bench_results");
+    std::fs::write("bench_results/table2.json", json.pretty()).ok();
+}

@@ -1,0 +1,16 @@
+//! `cargo bench --bench table3` — regenerate Table 3 (relative running
+//! times, normalized per dataset to the fastest algorithm, median of 3).
+//! Scale with LCC_BENCH_SCALE (default 20000).
+
+fn main() {
+    let cfg = lcc::bench::tables::SweepConfig {
+        scale: std::env::var("LCC_BENCH_SCALE").ok().and_then(|s| s.parse().ok()).or(Some(20_000)),
+        ..Default::default()
+    };
+    let reports = lcc::bench::tables::sweep(&cfg);
+    let (text, json) = lcc::bench::tables::table3(&reports);
+    println!("=== Table 3: relative running times ===");
+    println!("{text}");
+    let _ = std::fs::create_dir_all("bench_results");
+    std::fs::write("bench_results/table3.json", json.pretty()).ok();
+}

@@ -1,0 +1,24 @@
+//! `cargo bench --bench theory` — all theory-validation experiments:
+//! L4.1 decay, L4.5 depth, T5.5 loglog, T7.1/7.2 path bounds, O(m) comm,
+//! and the YV17 cycles instance.
+
+fn main() {
+    let seed = 42;
+    let _ = std::fs::create_dir_all("bench_results");
+    for (name, (text, json)) in [
+        ("decay (Lemma 4.1)", lcc::bench::theory::decay(seed)),
+        ("depth (Lemma 4.5)", lcc::bench::theory::depth(seed)),
+        ("loglog (Theorem 5.5)", lcc::bench::theory::loglog(seed)),
+        ("path (Theorems 7.1/7.2)", lcc::bench::theory::path_lower_bound(seed)),
+        ("comm (§1.1 O(m))", lcc::bench::theory::comm(seed, None)),
+        ("cycles (YV17)", lcc::bench::theory::cycles(seed)),
+    ] {
+        println!("=== theory: {name} ===");
+        println!("{text}");
+        let file = format!(
+            "bench_results/theory_{}.json",
+            json.get("exp").and_then(|e| e.as_str()).unwrap_or("x")
+        );
+        std::fs::write(file, json.pretty()).ok();
+    }
+}

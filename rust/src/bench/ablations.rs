@@ -1,0 +1,252 @@
+//! Ablation studies for the design choices DESIGN.md calls out:
+//! the §6 optimizations (finisher threshold, isolated-node pruning), the
+//! MergeToLarge schedule of §5, MPC machine-count scaling, and the
+//! compiled dense backend.  `lcc ablation --exp <name>` / `cargo bench
+//! --bench ablations`.
+
+use crate::cc::{self, oracle, RunOptions};
+use crate::coordinator::{Driver, RunConfig};
+use crate::graph::generators;
+use crate::mpc::{MpcConfig, Simulator};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::util::stats::AsciiTable;
+
+/// §6 finisher-threshold sweep: phases and wall time vs threshold.
+/// Shows the trade-off the paper describes ("if after some phase the
+/// contracted graph is small enough, we send it to one machine").
+pub fn finisher(seed: u64) -> (String, Json) {
+    let g = generators::presets::generate("videos", Some(40_000), seed);
+    let m = g.num_edges();
+    let mut t = AsciiTable::new(&["finisher threshold", "phases", "rounds", "wall ms", "verified"]);
+    let mut rows = Vec::new();
+    for frac in [0.0, 0.001, 0.01, 0.1, 1.0] {
+        let threshold = (m as f64 * frac) as usize;
+        let driver = Driver::new(RunConfig {
+            algorithm: "lc".into(),
+            seed,
+            finisher_threshold: threshold,
+            verify: true,
+            ..Default::default()
+        });
+        let r = driver.run_median(&g, "videos", 3);
+        t.row(vec![
+            format!("{threshold} ({frac} m)"),
+            r.phases.to_string(),
+            r.rounds.to_string(),
+            format!("{:.1}", r.wall_ms),
+            format!("{:?}", r.verified == Some(true)),
+        ]);
+        rows.push(
+            Json::obj()
+                .set("threshold", threshold)
+                .set("phases", u64::from(r.phases))
+                .set("wall_ms", r.wall_ms),
+        );
+    }
+    (
+        t.render(),
+        Json::obj().set("exp", "finisher").set("rows", rows),
+    )
+}
+
+/// §6 isolated-node pruning on/off: total shuffled bytes and wall time on
+/// a fragmenting dataset (pruning pays off when components finish early).
+pub fn pruning(seed: u64) -> (String, Json) {
+    let g = generators::presets::generate("webpages", Some(60_000), seed);
+    let mut t = AsciiTable::new(&["prune_isolated", "phases", "total shuffle MB", "wall ms"]);
+    let mut rows = Vec::new();
+    for prune in [true, false] {
+        let driver = Driver::new(RunConfig {
+            algorithm: "lc".into(),
+            seed,
+            prune_isolated: prune,
+            verify: true,
+            ..Default::default()
+        });
+        let r = driver.run_median(&g, "webpages", 3);
+        assert_ne!(r.verified, Some(false));
+        t.row(vec![
+            prune.to_string(),
+            r.phases.to_string(),
+            format!("{:.2}", r.total_shuffle_bytes as f64 / 1e6),
+            format!("{:.1}", r.wall_ms),
+        ]);
+        rows.push(
+            Json::obj()
+                .set("prune", prune)
+                .set("bytes", r.total_shuffle_bytes)
+                .set("wall_ms", r.wall_ms),
+        );
+    }
+    (
+        t.render(),
+        Json::obj().set("exp", "pruning").set("rows", rows),
+    )
+}
+
+/// MergeToLarge schedule sweep (§5): the `c` multiplier on `ln n` controls
+/// how aggressively nodes chase large neighbors.
+pub fn mtl_schedule(seed: u64) -> (String, Json) {
+    use cc::local_contraction::LocalContraction;
+    use cc::merge_to_large::Schedule;
+    use cc::CcAlgorithm;
+    let g = generators::gnp_log_regime(1 << 15, 2.0, &mut Rng::new(seed));
+    let want = oracle::components(&g);
+    let mut t = AsciiTable::new(&["schedule", "phases", "rounds", "correct"]);
+    let mut rows = Vec::new();
+    let mut cases: Vec<(String, Option<Schedule>)> = vec![("off (plain lc)".into(), None)];
+    for c in [0.25, 0.5, 1.0, 2.0, 4.0] {
+        cases.push((format!("c={c}"), Some(Schedule { c, floor: 2 })));
+    }
+    for (name, schedule) in cases {
+        let algo = LocalContraction {
+            merge_to_large: schedule,
+        };
+        let mut sim = Simulator::new(MpcConfig::default());
+        let mut rng = Rng::new(seed);
+        let res = algo.run(&g, &mut sim, &mut rng, &RunOptions::default());
+        let ok = res.labels == want;
+        t.row(vec![
+            name.clone(),
+            res.phases.to_string(),
+            res.metrics.num_rounds().to_string(),
+            ok.to_string(),
+        ]);
+        rows.push(
+            Json::obj()
+                .set("schedule", name.as_str())
+                .set("phases", u64::from(res.phases))
+                .set("correct", ok),
+        );
+    }
+    (t.render(), Json::obj().set("exp", "mtl").set("rows", rows))
+}
+
+/// Machine-count scaling: model-level quantities (max per-machine load)
+/// must scale ~1/p while totals stay constant — the MPC(0) balance claim.
+pub fn machines(seed: u64) -> (String, Json) {
+    let g = generators::gnp(50_000, 8.0 / 50_000.0, &mut Rng::new(seed));
+    let mut t = AsciiTable::new(&["machines", "total MB", "max machine MB (round 1)", "balance (fair=1.0)"]);
+    let mut rows = Vec::new();
+    for p in [1usize, 4, 16, 64, 256] {
+        let algo = cc::by_name("lc");
+        let mut sim = Simulator::new(MpcConfig {
+            machines: p,
+            space_per_machine: None,
+            threads: 4,
+        });
+        let mut rng = Rng::new(seed);
+        let res = algo.run(&g, &mut sim, &mut rng, &RunOptions::default());
+        let r0 = &res.metrics.rounds[0];
+        let fair = r0.bytes as f64 / p as f64;
+        let balance = r0.max_machine_bytes as f64 / fair;
+        t.row(vec![
+            p.to_string(),
+            format!("{:.2}", res.metrics.total_bytes() as f64 / 1e6),
+            format!("{:.3}", r0.max_machine_bytes as f64 / 1e6),
+            format!("{balance:.2}"),
+        ]);
+        rows.push(
+            Json::obj()
+                .set("machines", p)
+                .set("total_bytes", res.metrics.total_bytes())
+                .set("max_machine_bytes", r0.max_machine_bytes)
+                .set("balance", balance),
+        );
+    }
+    (
+        t.render(),
+        Json::obj().set("exp", "machines").set("rows", rows),
+    )
+}
+
+/// Dense backend on/off on shard-sized graphs: the XLA artifact vs the
+/// MPC shuffle path for the full run (identical labels, same accounting).
+pub fn dense_backend(seed: u64) -> (String, Json) {
+    let mut t = AsciiTable::new(&["n", "mpc-path ms", "xla-path ms", "xla calls", "same labels"]);
+    let mut rows = Vec::new();
+    let xla_available = crate::runtime::try_default_executor().is_ok();
+    for n in [256usize, 512, 1024] {
+        let g = generators::gnp(n, 8.0 / n as f64, &mut Rng::new(seed + n as u64));
+        let run = |use_xla: bool| {
+            let driver = Driver::new(RunConfig {
+                algorithm: "lc".into(),
+                seed,
+                use_xla,
+                verify: true,
+                ..Default::default()
+            });
+            driver.run_median(&g, "dense", 3)
+        };
+        let mpc = run(false);
+        let xla = run(xla_available);
+        t.row(vec![
+            n.to_string(),
+            format!("{:.2}", mpc.wall_ms),
+            if xla_available {
+                format!("{:.2}", xla.wall_ms)
+            } else {
+                "n/a".into()
+            },
+            xla.xla_calls.to_string(),
+            (mpc.num_components == xla.num_components
+                && mpc.verified == Some(true)
+                && xla.verified == Some(true))
+            .to_string(),
+        ]);
+        rows.push(
+            Json::obj()
+                .set("n", n)
+                .set("mpc_ms", mpc.wall_ms)
+                .set("xla_ms", xla.wall_ms)
+                .set("xla_calls", xla.xla_calls),
+        );
+    }
+    (
+        t.render(),
+        Json::obj().set("exp", "dense").set("rows", rows),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mtl_schedule_all_correct() {
+        // (smaller instance than the bench: correctness of every schedule)
+        use cc::local_contraction::LocalContraction;
+        use cc::merge_to_large::Schedule;
+        use cc::CcAlgorithm;
+        let g = generators::gnp_log_regime(1500, 2.0, &mut Rng::new(1));
+        let want = oracle::components(&g);
+        for c in [0.25, 1.0, 4.0] {
+            let algo = LocalContraction {
+                merge_to_large: Some(Schedule { c, floor: 2 }),
+            };
+            let mut sim = Simulator::new(MpcConfig::default());
+            let mut rng = Rng::new(2);
+            let res = algo.run(&g, &mut sim, &mut rng, &RunOptions::default());
+            assert_eq!(res.labels, want, "c={c}");
+        }
+    }
+
+    #[test]
+    fn machines_balance_improves_with_p() {
+        let (_, json) = machines(3);
+        let rows = json.get("rows").unwrap().as_arr().unwrap();
+        // total bytes identical across machine counts (model invariant)
+        let totals: Vec<i64> = rows
+            .iter()
+            .map(|r| r.get("total_bytes").unwrap().as_i64().unwrap())
+            .collect();
+        assert!(totals.windows(2).all(|w| w[0] == w[1]), "{totals:?}");
+        // per-machine max shrinks as p grows
+        let maxes: Vec<i64> = rows
+            .iter()
+            .map(|r| r.get("max_machine_bytes").unwrap().as_i64().unwrap())
+            .collect();
+        assert!(maxes.windows(2).all(|w| w[1] <= w[0]), "{maxes:?}");
+    }
+}

@@ -1,0 +1,147 @@
+//! Micro-benchmark harness (criterion is not available offline; this
+//! implements the same warmup + sampling protocol and reports
+//! median / p95 / mean).
+
+use crate::util::stats;
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub samples: Vec<f64>, // seconds per iteration
+    /// Optional work units per iteration (edges, messages...) for
+    /// throughput reporting.
+    pub units_per_iter: Option<f64>,
+}
+
+impl Measurement {
+    pub fn median_s(&self) -> f64 {
+        stats::median(&self.samples)
+    }
+
+    pub fn p95_s(&self) -> f64 {
+        stats::percentile(&self.samples, 0.95)
+    }
+
+    pub fn mean_s(&self) -> f64 {
+        stats::mean(&self.samples)
+    }
+
+    /// Units per second at the median.
+    pub fn throughput(&self) -> Option<f64> {
+        self.units_per_iter.map(|u| u / self.median_s())
+    }
+
+    pub fn report_line(&self) -> String {
+        let tp = match self.throughput() {
+            Some(t) if t >= 1e6 => format!("  {:8.2} Munit/s", t / 1e6),
+            Some(t) => format!("  {:8.2} unit/s", t),
+            None => String::new(),
+        };
+        format!(
+            "{:<40} median {:>10.3} ms   p95 {:>10.3} ms   mean {:>10.3} ms{}",
+            self.name,
+            self.median_s() * 1e3,
+            self.p95_s() * 1e3,
+            self.mean_s() * 1e3,
+            tp
+        )
+    }
+}
+
+/// Benchmark runner configuration.
+#[derive(Debug, Clone)]
+pub struct Bench {
+    pub warmup_iters: usize,
+    pub sample_iters: usize,
+    /// Skip warmup+extra samples for slow cases (>this many seconds/iter).
+    pub slow_cutoff_s: f64,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            warmup_iters: 2,
+            sample_iters: 7,
+            slow_cutoff_s: 2.0,
+        }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Bench {
+            warmup_iters: 1,
+            sample_iters: 3,
+            slow_cutoff_s: 1.0,
+        }
+    }
+
+    /// Measure `f`, which performs one full iteration per call.
+    pub fn run<F: FnMut()>(&self, name: &str, units_per_iter: Option<f64>, mut f: F) -> Measurement {
+        // calibration / warmup
+        let t0 = std::time::Instant::now();
+        f();
+        let first = t0.elapsed().as_secs_f64();
+        let (warmup, samples_n) = if first > self.slow_cutoff_s {
+            (0, 1) // slow case: the calibration run is the sample
+        } else {
+            (self.warmup_iters, self.sample_iters)
+        };
+        for _ in 0..warmup {
+            f();
+        }
+        let mut samples = Vec::with_capacity(samples_n);
+        if first > self.slow_cutoff_s {
+            samples.push(first);
+        } else {
+            for _ in 0..samples_n {
+                let t = std::time::Instant::now();
+                f();
+                samples.push(t.elapsed().as_secs_f64());
+            }
+        }
+        Measurement {
+            name: name.to_string(),
+            samples,
+            units_per_iter,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_and_reports() {
+        let b = Bench {
+            warmup_iters: 1,
+            sample_iters: 5,
+            slow_cutoff_s: 10.0,
+        };
+        let mut count = 0;
+        let m = b.run("spin", Some(1000.0), || {
+            count += 1;
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert_eq!(count, 1 + 1 + 5); // calibration + warmup + samples
+        assert_eq!(m.samples.len(), 5);
+        assert!(m.median_s() >= 0.0);
+        assert!(m.throughput().unwrap() > 0.0);
+        assert!(m.report_line().contains("spin"));
+    }
+
+    #[test]
+    fn slow_case_single_sample() {
+        let b = Bench {
+            warmup_iters: 3,
+            sample_iters: 9,
+            slow_cutoff_s: 0.0, // everything is "slow"
+        };
+        let mut count = 0;
+        let m = b.run("slow", None, || count += 1);
+        assert_eq!(count, 1);
+        assert_eq!(m.samples.len(), 1);
+    }
+}

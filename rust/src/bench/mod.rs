@@ -1,0 +1,14 @@
+//! Benchmark + experiment harness: regenerates every table and figure of
+//! the paper's evaluation (§6) and the theory-validation experiments
+//! (§4, §5, §7), plus the §Perf micro-benchmarks.
+//!
+//! Shared by the `lcc` CLI subcommands and the `cargo bench` targets in
+//! `rust/benches/` (one per paper artifact).
+
+pub mod ablations;
+pub mod harness;
+pub mod perf;
+pub mod tables;
+pub mod theory;
+
+pub use harness::{Bench, Measurement};

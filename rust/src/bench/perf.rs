@@ -1,0 +1,159 @@
+//! Performance micro-benchmarks for the §Perf pass: hot-path primitives of
+//! each layer, measured with the in-repo harness (see EXPERIMENTS.md §Perf
+//! for the iteration log).
+
+use super::harness::{Bench, Measurement};
+use crate::cc::backend::{CpuBackend, DenseBackend};
+use crate::cc::common::{min_hop, Priorities};
+use crate::graph::generators;
+use crate::mpc::{MpcConfig, Simulator};
+use crate::util::rng::Rng;
+
+/// L3 primitive: one min-hop MPC round over a G(n,p) graph.
+pub fn bench_min_hop(b: &Bench, n: usize, avg_deg: f64, threads: usize) -> Measurement {
+    let g = generators::gnp(n, avg_deg / n as f64, &mut Rng::new(1));
+    let vals: Vec<u32> = (0..n as u32).collect();
+    let m = g.num_edges() as f64;
+    let mut sim = Simulator::new(MpcConfig {
+        machines: 16,
+        space_per_machine: None,
+        threads,
+    });
+    b.run(
+        &format!("L3/min_hop n={n} m={} threads={threads}", g.num_edges()),
+        Some(m),
+        || {
+            let out = min_hop(&mut sim, "bench", &g, &vals, true);
+            std::hint::black_box(out);
+            sim.metrics.rounds.clear();
+        },
+    )
+}
+
+/// L3 primitive: a full LocalContraction phase (2 hops + contraction).
+pub fn bench_lc_phase(b: &Bench, n: usize, avg_deg: f64, threads: usize) -> Measurement {
+    let g = generators::gnp(n, avg_deg / n as f64, &mut Rng::new(2));
+    let m = g.num_edges() as f64;
+    let mut rng = Rng::new(3);
+    let mut sim = Simulator::new(MpcConfig {
+        machines: 16,
+        space_per_machine: None,
+        threads,
+    });
+    b.run(
+        &format!("L3/lc_phase n={n} m={} threads={threads}", g.num_edges()),
+        Some(m),
+        || {
+            let rho = Priorities::sample(g.num_vertices(), &mut rng);
+            let labels = crate::cc::local_contraction::phase_labels(&g, &mut sim, &rho, None);
+            let out = crate::cc::common::contract_mpc(&mut sim, &g, &labels);
+            std::hint::black_box(out);
+            sim.metrics.rounds.clear();
+        },
+    )
+}
+
+/// End-to-end: full LocalContraction run.
+pub fn bench_lc_end_to_end(b: &Bench, n: usize, avg_deg: f64) -> Measurement {
+    let g = generators::gnp(n, avg_deg / n as f64, &mut Rng::new(4));
+    let m = g.num_edges() as f64;
+    let driver = crate::coordinator::Driver::new(crate::coordinator::RunConfig {
+        algorithm: "lc".into(),
+        ..Default::default()
+    });
+    b.run(
+        &format!("L3/lc_full n={n} m={}", g.num_edges()),
+        Some(m),
+        || {
+            let r = driver.run(&g);
+            std::hint::black_box(r);
+        },
+    )
+}
+
+/// Streaming pipeline throughput (edges/s through shard-local contraction).
+pub fn bench_pipeline(b: &Bench, n: usize, avg_deg: f64, workers: usize) -> Measurement {
+    let g = generators::gnp(n, avg_deg / n as f64, &mut Rng::new(5));
+    let m = g.num_edges() as f64;
+    let cfg = crate::coordinator::PipelineConfig {
+        num_workers: workers,
+        ..Default::default()
+    };
+    b.run(
+        &format!("L3/pipeline n={n} m={} workers={workers}", g.num_edges()),
+        Some(m),
+        || {
+            let res = crate::coordinator::pipeline::run(n, g.edges().iter().copied(), &cfg);
+            std::hint::black_box(res.stats.summary_edges);
+        },
+    )
+}
+
+/// Dense backend: CPU reference for the phase-label kernel on a shard.
+pub fn bench_dense_cpu(b: &Bench, n: usize, avg_deg: f64) -> Measurement {
+    let g = generators::gnp(n, avg_deg / n as f64, &mut Rng::new(6));
+    let prio: Vec<i32> = Rng::new(7).permutation(n).iter().map(|&x| x as i32).collect();
+    let backend = CpuBackend::default();
+    b.run(
+        &format!("L1/dense_cpu_ref n={n}"),
+        Some((n * n) as f64),
+        || {
+            let out = backend.local_labels(&g, &prio).unwrap();
+            std::hint::black_box(out);
+        },
+    )
+}
+
+/// Dense backend: the compiled XLA artifact (None when artifacts missing).
+pub fn bench_dense_xla(b: &Bench, avg_deg: f64) -> Option<Measurement> {
+    let exec = crate::runtime::try_default_executor().ok()?;
+    let n = exec.shard_size();
+    let g = generators::gnp(n, avg_deg / n as f64, &mut Rng::new(8));
+    let prio: Vec<i32> = Rng::new(9).permutation(n).iter().map(|&x| x as i32).collect();
+    Some(b.run(
+        &format!("L1/dense_xla n={n} ({})", exec.platform()),
+        Some((n * n) as f64),
+        || {
+            let out = exec.local_labels(&g, &prio).unwrap();
+            std::hint::black_box(out);
+        },
+    ))
+}
+
+/// The whole standard suite (used by `lcc perf` and `cargo bench`).
+pub fn standard_suite(quick: bool) -> Vec<Measurement> {
+    let b = if quick { Bench::quick() } else { Bench::default() };
+    let mut out = vec![
+        bench_min_hop(&b, 100_000, 8.0, 1),
+        bench_min_hop(&b, 100_000, 8.0, 8),
+        bench_lc_phase(&b, 100_000, 8.0, 8),
+        bench_lc_end_to_end(&b, 50_000, 8.0),
+        bench_pipeline(&b, 200_000, 8.0, 1),
+        bench_pipeline(&b, 200_000, 8.0, 4),
+        bench_dense_cpu(&b, 1024, 16.0),
+    ];
+    if let Some(m) = bench_dense_xla(&b, 16.0) {
+        out.push(m);
+    } else {
+        eprintln!("[perf] XLA artifacts not built; skipping L1/dense_xla");
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn microbenches_run_quickly() {
+        let b = Bench {
+            warmup_iters: 0,
+            sample_iters: 1,
+            slow_cutoff_s: 30.0,
+        };
+        let m = bench_min_hop(&b, 2000, 4.0, 1);
+        assert!(m.median_s() > 0.0);
+        let m = bench_dense_cpu(&b, 256, 8.0);
+        assert!(m.throughput().unwrap() > 0.0);
+    }
+}

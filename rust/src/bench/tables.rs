@@ -1,0 +1,313 @@
+//! Regeneration of the paper's evaluation artifacts: Tables 1–3 and
+//! Figure 1 (§6).  Each function returns both the rendered table and the
+//! raw JSON so `lcc tableN --json` and the cargo benches share one code
+//! path.
+
+use crate::cc::PAPER_ALGORITHMS;
+use crate::coordinator::{Driver, Report, RunConfig};
+use crate::graph::generators::presets;
+use crate::graph::{stats as gstats, Graph};
+use crate::util::json::Json;
+use crate::util::stats::AsciiTable;
+
+/// Shared sweep configuration.
+#[derive(Debug, Clone)]
+pub struct SweepConfig {
+    /// Analogue size per dataset (None = preset default).
+    pub scale: Option<usize>,
+    pub seed: u64,
+    /// Runs per cell; the median is reported (§6 protocol).
+    pub runs: usize,
+    /// §6 finisher threshold as a fraction of the input edges.
+    pub finisher_frac: f64,
+    /// Hash-To-Min memory guard as a multiple of m (the "X" behavior).
+    pub htm_state_factor: u64,
+    pub use_xla: bool,
+    pub machines: usize,
+}
+
+impl Default for SweepConfig {
+    fn default() -> Self {
+        SweepConfig {
+            scale: None,
+            seed: 42,
+            runs: 3,
+            finisher_frac: 0.01,
+            htm_state_factor: 20,
+            use_xla: false,
+            machines: 16,
+        }
+    }
+}
+
+fn dataset(name: &str, cfg: &SweepConfig) -> Graph {
+    presets::generate(name, cfg.scale, cfg.seed)
+}
+
+fn driver_for(algo: &str, g: &Graph, cfg: &SweepConfig) -> Driver {
+    let m = g.num_edges();
+    Driver::new(RunConfig {
+        algorithm: algo.to_string(),
+        seed: cfg.seed,
+        machines: cfg.machines,
+        finisher_threshold: ((m as f64 * cfg.finisher_frac) as usize).max(64),
+        prune_isolated: true,
+        max_phases: 100,
+        state_cap: cfg.htm_state_factor * m.max(1) as u64,
+        use_xla: cfg.use_xla,
+        verify: true,
+        ..Default::default()
+    })
+}
+
+/// Table 1: the dataset inventory — paper numbers next to the analogue's
+/// measured shape.
+pub fn table1(cfg: &SweepConfig) -> (String, Json) {
+    let mut t = AsciiTable::new(&[
+        "dataset",
+        "paper nodes",
+        "paper edges",
+        "paper largest CC",
+        "analogue n",
+        "analogue m",
+        "largest CC",
+        "avg deg",
+    ]);
+    let mut rows = Vec::new();
+    for name in presets::ALL {
+        let spec = presets::spec(name);
+        let g = dataset(name, cfg);
+        let comp = gstats::component_stats(&g);
+        let deg = gstats::degree_stats(&g);
+        t.row(vec![
+            name.to_string(),
+            human(spec.paper_nodes),
+            human(spec.paper_edges),
+            human(spec.paper_largest_cc),
+            g.num_vertices().to_string(),
+            g.num_edges().to_string(),
+            comp.largest.to_string(),
+            format!("{:.1}", deg.avg),
+        ]);
+        rows.push(
+            Json::obj()
+                .set("dataset", name)
+                .set("paper_nodes", spec.paper_nodes)
+                .set("paper_edges", spec.paper_edges)
+                .set("paper_largest_cc", spec.paper_largest_cc)
+                .set("n", g.num_vertices())
+                .set("m", g.num_edges())
+                .set("largest_cc", comp.largest)
+                .set("components", comp.count)
+                .set("avg_deg", deg.avg),
+        );
+    }
+    (t.render(), Json::obj().set("table", 1i64).set("rows", rows))
+}
+
+/// One full Tables-2/3 sweep: every paper algorithm on every dataset.
+/// Returns the per-cell median reports.
+pub fn sweep(cfg: &SweepConfig) -> Vec<Report> {
+    let mut out = Vec::new();
+    for name in presets::ALL {
+        let g = dataset(name, cfg);
+        for algo in PAPER_ALGORITHMS {
+            let driver = driver_for(algo, &g, cfg);
+            let r = driver.run_median(&g, name, cfg.runs);
+            eprintln!("[sweep] {}", r.summary());
+            out.push(r);
+        }
+    }
+    out
+}
+
+/// Table 2: numbers of phases used by each algorithm ("X" = did not finish,
+/// matching the paper's out-of-memory / timeout entries).
+pub fn table2(reports: &[Report]) -> (String, Json) {
+    let mut t = AsciiTable::new(&[
+        "dataset",
+        "LocalContraction",
+        "TreeContraction",
+        "Cracker",
+        "Two-Phase",
+        "Hash-To-Min",
+    ]);
+    let mut rows = Vec::new();
+    for name in presets::ALL {
+        let mut cells = vec![name.to_string()];
+        let mut row = Json::obj().set("dataset", name);
+        for algo in PAPER_ALGORITHMS {
+            let r = find(reports, name, algo);
+            let cell = if r.completed {
+                r.phases.to_string()
+            } else {
+                "X".to_string()
+            };
+            row = row.set(algo, cell.as_str());
+            cells.push(cell);
+        }
+        t.row(cells);
+        rows.push(row);
+    }
+    (t.render(), Json::obj().set("table", 2i64).set("rows", rows))
+}
+
+/// Table 3: relative running times, normalized to the fastest completed
+/// algorithm per dataset (row-wise, as in the paper).
+pub fn table3(reports: &[Report]) -> (String, Json) {
+    let mut t = AsciiTable::new(&[
+        "dataset",
+        "LocalContraction",
+        "TreeContraction",
+        "Cracker",
+        "Two-Phase",
+        "Hash-To-Min",
+    ]);
+    let mut rows = Vec::new();
+    for name in presets::ALL {
+        let best = PAPER_ALGORITHMS
+            .iter()
+            .map(|a| find(reports, name, a))
+            .filter(|r| r.completed)
+            .map(|r| r.wall_ms)
+            .fold(f64::INFINITY, f64::min);
+        let mut cells = vec![name.to_string()];
+        let mut row = Json::obj().set("dataset", name);
+        for algo in PAPER_ALGORITHMS {
+            let r = find(reports, name, algo);
+            let cell = if r.completed {
+                format!("{:.2}", r.wall_ms / best)
+            } else {
+                "X".to_string()
+            };
+            row = row.set(algo, cell.as_str());
+            cells.push(cell);
+        }
+        t.row(cells);
+        rows.push(row);
+    }
+    (t.render(), Json::obj().set("table", 3i64).set("rows", rows))
+}
+
+/// Figure 1: numbers of edges at the beginning of each phase for the
+/// contracting algorithms on two datasets (the paper plots two and notes
+/// the rest look similar).
+pub fn figure1(cfg: &SweepConfig, datasets: &[&str]) -> (String, Json) {
+    let algos = ["lc", "tc-dht", "cracker"];
+    let mut out = String::new();
+    let mut series = Vec::new();
+    for name in datasets {
+        let g = dataset(name, cfg);
+        out.push_str(&format!(
+            "--- {name} (n={}, m={}) ---\n",
+            g.num_vertices(),
+            g.num_edges()
+        ));
+        for algo in algos {
+            let mut c = SweepConfig {
+                finisher_frac: 0.0, // disable the finisher to see the full decay
+                ..cfg.clone()
+            };
+            c.runs = 1;
+            let mut dcfg = driver_for(algo, &g, &c);
+            let _ = &mut dcfg;
+            let driver = Driver::new(RunConfig {
+                algorithm: algo.to_string(),
+                seed: cfg.seed,
+                machines: cfg.machines,
+                finisher_threshold: 0,
+                verify: false,
+                ..Default::default()
+            });
+            let r = driver.run_named(&g, name);
+            out.push_str(&format!(
+                "{:<10} edges/phase: {:?}\n",
+                algo, r.edges_per_phase
+            ));
+            // the paper's headline: each phase shrinks edges >= 10x
+            let decays: Vec<String> = r
+                .edges_per_phase
+                .windows(2)
+                .filter(|w| w[1] > 0)
+                .map(|w| format!("{:.1}x", w[0] as f64 / w[1] as f64))
+                .collect();
+            out.push_str(&format!("{:<10} decay:       {:?}\n", algo, decays));
+            series.push(
+                Json::obj()
+                    .set("dataset", *name)
+                    .set("algorithm", algo)
+                    .set("edges_per_phase", r.edges_per_phase.clone()),
+            );
+        }
+    }
+    (out, Json::obj().set("figure", 1i64).set("series", series))
+}
+
+fn find<'a>(reports: &'a [Report], dataset: &str, algo: &str) -> &'a Report {
+    let want = crate::cc::by_name(algo).name();
+    reports
+        .iter()
+        .find(|r| r.dataset == dataset && r.algorithm == want)
+        .unwrap_or_else(|| panic!("missing report {dataset}/{algo}"))
+}
+
+fn human(x: f64) -> String {
+    if x >= 1e12 {
+        format!("{:.1}T", x / 1e12)
+    } else if x >= 1e9 {
+        format!("{:.1}B", x / 1e9)
+    } else if x >= 1e6 {
+        format!("{:.0}M", x / 1e6)
+    } else {
+        format!("{x:.0}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> SweepConfig {
+        SweepConfig {
+            scale: Some(800),
+            runs: 1,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn table1_renders_all_presets() {
+        let (text, json) = table1(&tiny());
+        for name in presets::ALL {
+            assert!(text.contains(name), "{text}");
+        }
+        assert_eq!(json.get("rows").unwrap().as_arr().unwrap().len(), 5);
+    }
+
+    #[test]
+    fn sweep_and_tables_2_3() {
+        let cfg = tiny();
+        let reports = sweep(&cfg);
+        assert_eq!(reports.len(), 25);
+        assert!(
+            reports.iter().all(|r| r.verified != Some(false)),
+            "some run produced wrong labels"
+        );
+        let (t2, j2) = table2(&reports);
+        let (t3, _) = table3(&reports);
+        assert!(t2.contains("orkut"));
+        assert!(t3.contains("webpages"));
+        // every row has a 1.00 (the normalizer) in table 3
+        for line in t3.lines().skip(2) {
+            assert!(line.contains("1.00"), "{line}");
+        }
+        assert_eq!(j2.get("rows").unwrap().as_arr().unwrap().len(), 5);
+    }
+
+    #[test]
+    fn figure1_shows_decay() {
+        let (text, json) = figure1(&tiny(), &["orkut"]);
+        assert!(text.contains("edges/phase"));
+        assert!(!json.get("series").unwrap().as_arr().unwrap().is_empty());
+    }
+}

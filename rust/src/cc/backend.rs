@@ -1,0 +1,164 @@
+//! Dense-phase backend abstraction.
+//!
+//! The per-phase label computation of LocalContraction (`l(v)` = min
+//! priority over `N(N(v))`) has two interchangeable implementations:
+//! the pure-Rust reference walk and the **compiled XLA artifact** produced
+//! by `python/compile/aot.py` (the Layer-1 Pallas kernel inside the Layer-2
+//! JAX graph).  The algorithms depend only on this trait; the PJRT-backed
+//! implementation lives in [`crate::runtime`] so `cc` stays
+//! hardware-agnostic.
+
+use crate::graph::{Csr, Graph};
+
+/// Identity of the INF sentinel shared with the Python side
+/// (`python/compile/kernels/minprop.py`).
+pub const INF: i32 = i32::MAX;
+
+/// A backend that can evaluate dense-shard phase computations.
+pub trait DenseBackend {
+    /// Largest vertex count a single invocation can handle (artifact shape).
+    fn max_vertices(&self) -> usize;
+
+    /// LocalContraction phase labels over a dense shard: for each live
+    /// vertex `v`, the minimum priority over `N(N(v))` (self-inclusive).
+    ///
+    /// `g` must have at most [`max_vertices`](Self::max_vertices) vertices;
+    /// `prio[v]` are unique priorities in `[0, n)`.
+    /// Returns `labels[v]` = min priority value over `N(N(v))`.
+    fn local_labels(&self, g: &Graph, prio: &[i32]) -> anyhow::Result<Vec<i32>>;
+
+    /// One min-hop (`min over N(v) ∪ {v}`) — Hash-Min / Cracker step.
+    fn hash_min_step(&self, g: &Graph, prio: &[i32]) -> anyhow::Result<Vec<i32>>;
+
+    /// Resolve a pointer forest to canonical (minimum) 2-cycle roots.
+    fn tree_roots(&self, f: &[i32]) -> anyhow::Result<Vec<i32>>;
+}
+
+/// Pure-Rust reference implementation of the same contract; used in tests
+/// to cross-validate the compiled artifacts and as the CPU fallback.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct CpuBackend {
+    /// Mirror the artifact's shape limit when emulating it (0 = unlimited).
+    pub max_n: usize,
+}
+
+impl CpuBackend {
+    fn min_hop(g: &Graph, vals: &[i32]) -> Vec<i32> {
+        let csr = Csr::build(g);
+        (0..g.num_vertices())
+            .map(|v| {
+                let mut best = vals[v];
+                for &u in csr.neighbors(v as u32) {
+                    best = best.min(vals[u as usize]);
+                }
+                best
+            })
+            .collect()
+    }
+}
+
+impl DenseBackend for CpuBackend {
+    fn max_vertices(&self) -> usize {
+        if self.max_n == 0 {
+            usize::MAX
+        } else {
+            self.max_n
+        }
+    }
+
+    fn local_labels(&self, g: &Graph, prio: &[i32]) -> anyhow::Result<Vec<i32>> {
+        anyhow::ensure!(prio.len() == g.num_vertices(), "prio length mismatch");
+        let h1 = Self::min_hop(g, prio);
+        Ok(Self::min_hop(g, &h1))
+    }
+
+    fn hash_min_step(&self, g: &Graph, prio: &[i32]) -> anyhow::Result<Vec<i32>> {
+        anyhow::ensure!(prio.len() == g.num_vertices(), "prio length mismatch");
+        Ok(Self::min_hop(g, prio))
+    }
+
+    fn tree_roots(&self, f: &[i32]) -> anyhow::Result<Vec<i32>> {
+        let n = f.len();
+        let mut cur: Vec<i32> = f.to_vec();
+        // repeated squaring to a fixed point, then canonical 2-cycle min
+        for _ in 0..(64 - (n.max(2) as u64).leading_zeros()) + 1 {
+            let next: Vec<i32> = (0..n).map(|v| cur[cur[v] as usize]).collect();
+            if next == cur {
+                break;
+            }
+            cur = next;
+        }
+        Ok((0..n)
+            .map(|v| {
+                let a = cur[v];
+                let b = f[a as usize]; // opposite-parity cycle element
+                a.min(b)
+            })
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn cpu_local_labels_on_path() {
+        let g = generators::path(6);
+        let prio: Vec<i32> = vec![3, 5, 0, 1, 4, 2];
+        let b = CpuBackend::default();
+        let labels = b.local_labels(&g, &prio).unwrap();
+        // N(N(v)) spans distance <= 2
+        assert_eq!(labels, vec![0, 0, 0, 0, 0, 1]);
+    }
+
+    #[test]
+    fn cpu_hash_min_step_is_one_hop() {
+        let g = generators::star(4); // center 0
+        let prio = vec![7, 1, 2, 3];
+        let b = CpuBackend::default();
+        assert_eq!(b.hash_min_step(&g, &prio).unwrap(), vec![1, 1, 2, 3]);
+    }
+
+    #[test]
+    fn cpu_tree_roots_on_chain() {
+        // f: v -> v-1, f(0)=1 makes {0,1} a 2-cycle
+        let mut f: Vec<i32> = (0..64).map(|v: i32| (v - 1).max(0)).collect();
+        f[0] = 1;
+        let b = CpuBackend::default();
+        let roots = b.tree_roots(&f).unwrap();
+        assert!(roots.iter().all(|&r| r == 0), "{roots:?}");
+    }
+
+    #[test]
+    fn cpu_tree_roots_self_loops_are_fixed_points() {
+        let f: Vec<i32> = (0..8).collect();
+        let b = CpuBackend::default();
+        assert_eq!(b.tree_roots(&f).unwrap(), f);
+    }
+
+    #[test]
+    fn cpu_matches_on_random_graph_vs_bruteforce() {
+        let mut rng = Rng::new(5);
+        let g = generators::gnp(200, 0.02, &mut rng);
+        let prio: Vec<i32> = rng.permutation(200).iter().map(|&x| x as i32).collect();
+        let b = CpuBackend::default();
+        let got = b.local_labels(&g, &prio).unwrap();
+        // brute force N(N(v))
+        let csr = crate::graph::Csr::build(&g);
+        for v in 0..200u32 {
+            let mut best = prio[v as usize];
+            let mut seen = vec![v];
+            seen.extend_from_slice(csr.neighbors(v));
+            for &u in seen.clone().iter() {
+                best = best.min(prio[u as usize]);
+                for &w in csr.neighbors(u) {
+                    best = best.min(prio[w as usize]);
+                }
+            }
+            assert_eq!(got[v as usize], best, "vertex {v}");
+        }
+    }
+}

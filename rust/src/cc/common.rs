@@ -1,0 +1,236 @@
+//! Shared building blocks for the MPC algorithms: per-phase priorities,
+//! neighborhood min/max hops as MPC rounds, and contraction as MPC rounds
+//! (Lemma 3.1).
+
+use crate::graph::{Graph, Vertex};
+use crate::mpc::Simulator;
+use crate::util::rng::Rng;
+
+/// Per-phase random ordering `rho` plus its inverse.
+///
+/// The paper samples "a random hash chosen uniformly from [0,1]"; since the
+/// algorithms only *compare* priorities (§3), a uniform random permutation
+/// of `[0, n)` is an equivalent and exactly-invertible encoding: `rho[v]`
+/// is the priority of `v`, `inv[p]` the vertex holding priority `p`.
+#[derive(Debug, Clone)]
+pub struct Priorities {
+    pub rho: Vec<u32>,
+    pub inv: Vec<u32>,
+}
+
+impl Priorities {
+    pub fn sample(n: usize, rng: &mut Rng) -> Self {
+        let mut inv = rng.permutation(n); // inv[p] = vertex with priority p
+        // actually build rho first, then invert — permutation() returns a
+        // uniformly random bijection either way.
+        let rho = std::mem::take(&mut inv);
+        let mut inv = vec![0u32; n];
+        for (v, &p) in rho.iter().enumerate() {
+            inv[p as usize] = v as u32;
+        }
+        Priorities { rho, inv }
+    }
+}
+
+/// One MPC round computing, for every vertex, `op` over the values of its
+/// neighbors (and itself if `include_self`).
+///
+/// Mapper: each edge `(u,v)` emits `(u, vals[v])` and `(v, vals[u])`;
+/// each vertex emits its own value when `include_self`.  Reducer folds
+/// with `op`.  This is exactly the label-computation round of Lemma 3.1.
+pub fn neighborhood_fold<V>(
+    sim: &mut Simulator,
+    label: &str,
+    g: &Graph,
+    vals: &[V],
+    include_self: bool,
+    op: fn(V, V) -> V,
+) -> Vec<V>
+where
+    V: crate::mpc::WireSize + Copy + Send + Sync,
+{
+    let n = g.num_vertices();
+    debug_assert_eq!(vals.len(), n);
+    // Associative+commutative per-key fold -> the simulator's grouping-free
+    // fast path (identical semantics and accounting; §Perf).
+    let mut out: Vec<V> = vals.to_vec();
+    let edge_msgs = g.edges().iter().flat_map(|&(u, v)| {
+        [
+            (u as u64, vals[v as usize]),
+            (v as u64, vals[u as usize]),
+        ]
+    });
+    let self_msgs = (0..if include_self { n } else { 0 }).map(|v| (v as u64, vals[v]));
+    // vertices with no messages keep their own value (out prefilled), and
+    // round_fold overwrites on first touch, so self-inclusion is exact.
+    // round_fold *replaces* on a key's first message, so with
+    // include_self=false a vertex's own value correctly drops out as soon
+    // as any neighbor message arrives, and is kept otherwise.
+    sim.round_fold(label, &mut out, edge_msgs.chain(self_msgs), op);
+    out
+}
+
+/// `min` over `N(v) (∪ {v})` — the hop both LocalContraction hops and
+/// Hash-Min use.
+pub fn min_hop(
+    sim: &mut Simulator,
+    label: &str,
+    g: &Graph,
+    vals: &[u32],
+    include_self: bool,
+) -> Vec<u32> {
+    neighborhood_fold(sim, label, g, vals, include_self, u32::min)
+}
+
+/// `max` over `N(v) (∪ {v})` — used by the MergeToLarge step to pick the
+/// large node of largest priority within reach.
+pub fn max_hop(
+    sim: &mut Simulator,
+    label: &str,
+    g: &Graph,
+    vals: &[u32],
+    include_self: bool,
+) -> Vec<u32> {
+    neighborhood_fold(sim, label, g, vals, include_self, u32::max)
+}
+
+/// Contraction step as MPC rounds (Lemma 3.1): relabel both endpoints of
+/// every edge through `labels`, dedup, and build the contracted graph.
+///
+/// Two shuffle rounds: round 1 keys edges by `u` and rewrites the left
+/// endpoint; round 2 keys the half-rewritten edges by `v` and rewrites the
+/// right endpoint ("these messages are grouped again by vertices and the
+/// label mapping is applied").  Returns the contracted graph plus the
+/// old-node -> new-node compaction map.
+pub fn contract_mpc(
+    sim: &mut Simulator,
+    g: &Graph,
+    labels: &[Vertex],
+) -> (Graph, Vec<Vertex>) {
+    // Both rounds are per-message transforms (the machine owning the key
+    // applies the label map) -> the simulator's grouping-free map path.
+    // round 1: (u, v) -> (l(u), v), keyed by u
+    let half: Vec<(u32, u32)> = sim.round_map(
+        "contract/left",
+        g.edges().iter().map(|&(u, v)| (u as u64, v)),
+        |u, v| (labels[u as usize], v),
+    );
+    // round 2: (l(u), v) -> (l(u), l(v)), keyed by v
+    let relabeled: Vec<(u32, u32)> = sim.round_map(
+        "contract/right",
+        half.into_iter().map(|(lu, v)| (v as u64, lu)),
+        |v, lu| (lu, labels[v as usize]),
+    );
+
+    // Build the contracted graph over the compacted label space (duplicate
+    // removal is "standard", charged inside the same rounds).  Labels are
+    // vertex ids < n, so compaction is a rank table rather than per-edge
+    // binary search (§Perf).
+    let n = labels.len();
+    let mut present = vec![false; n];
+    for &l in labels {
+        present[l as usize] = true;
+    }
+    let mut rank_of = vec![0 as Vertex; n];
+    let mut next = 0 as Vertex;
+    for l in 0..n {
+        if present[l] {
+            rank_of[l] = next;
+            next += 1;
+        }
+    }
+    let compact: Vec<Vertex> = labels.iter().map(|&l| rank_of[l as usize]).collect();
+    let edges: Vec<(Vertex, Vertex)> = relabeled
+        .into_iter()
+        .map(|(lu, lv)| (rank_of[lu as usize], rank_of[lv as usize]))
+        .collect();
+    (Graph::from_edges(next as usize, edges), compact)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::mpc::MpcConfig;
+
+    fn sim() -> Simulator {
+        Simulator::new(MpcConfig {
+            machines: 4,
+            space_per_machine: None,
+            threads: 1,
+        })
+    }
+
+    #[test]
+    fn priorities_are_inverse_consistent() {
+        let mut rng = Rng::new(1);
+        let p = Priorities::sample(100, &mut rng);
+        for v in 0..100usize {
+            assert_eq!(p.inv[p.rho[v] as usize], v as u32);
+        }
+    }
+
+    #[test]
+    fn min_hop_on_path() {
+        let g = generators::path(5);
+        let vals = vec![4, 3, 0, 1, 2];
+        let mut s = sim();
+        let out = min_hop(&mut s, "t", &g, &vals, true);
+        assert_eq!(out, vec![3, 0, 0, 0, 1]);
+        let out2 = min_hop(&mut s, "t", &g, &out, true);
+        assert_eq!(out2, vec![0, 0, 0, 0, 0]);
+        assert_eq!(s.metrics.num_rounds(), 2);
+    }
+
+    #[test]
+    fn min_hop_excluding_self() {
+        let g = generators::path(3);
+        let vals = vec![0, 5, 9];
+        let mut s = sim();
+        let out = min_hop(&mut s, "t", &g, &vals, false);
+        // vertex 0 sees only neighbor 1; vertex 1 sees {0,2}; vertex 2 sees {1}
+        assert_eq!(out, vec![5, 0, 5]);
+    }
+
+    #[test]
+    fn isolated_vertex_keeps_value() {
+        let g = Graph::from_edges(3, vec![(0, 1)]);
+        let vals = vec![2, 1, 7];
+        let mut s = sim();
+        let out = min_hop(&mut s, "t", &g, &vals, false);
+        assert_eq!(out[2], 7);
+    }
+
+    #[test]
+    fn max_hop_on_star() {
+        let g = generators::star(4);
+        let vals = vec![0, 5, 9, 2];
+        let mut s = sim();
+        let out = max_hop(&mut s, "t", &g, &vals, true);
+        assert_eq!(out, vec![9, 5, 9, 2]);
+    }
+
+    #[test]
+    fn contract_mpc_matches_graph_contract() {
+        let g = generators::cycle(6);
+        let labels: Vec<Vertex> = vec![0, 0, 2, 2, 4, 4];
+        let mut s = sim();
+        let (cm, compact_m) = contract_mpc(&mut s, &g, &labels);
+        let (cg, compact_g) = g.contract(&labels);
+        assert_eq!(cm, cg);
+        assert_eq!(compact_m, compact_g);
+        assert_eq!(s.metrics.num_rounds(), 2, "contraction is O(1) rounds");
+    }
+
+    #[test]
+    fn contract_mpc_charges_o_m_bytes() {
+        let mut rng = Rng::new(2);
+        let g = generators::gnp(300, 0.02, &mut rng);
+        let labels: Vec<Vertex> = (0..300u32).map(|v| v / 2).collect();
+        let mut s = sim();
+        let _ = contract_mpc(&mut s, &g, &labels);
+        let bytes = s.metrics.total_bytes();
+        let m = g.num_edges() as u64;
+        assert!(bytes >= m * 12 && bytes <= m * 40, "bytes {bytes} vs m {m}");
+    }
+}

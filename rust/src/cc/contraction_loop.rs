@@ -1,0 +1,310 @@
+//! The shared phase loop of the contraction algorithms.
+//!
+//! LocalContraction, TreeContraction and Cracker all follow the same outer
+//! structure: repeatedly (a) run a phase that *contracts* the current graph,
+//! (b) apply the §6 optimizations (prune isolated nodes, ship small graphs
+//! to the single-machine finisher), and (c) stop when no edges remain.
+//! This module owns that loop plus the bookkeeping that maps contracted
+//! node ids back to canonical original-vertex labels.
+
+use super::oracle;
+use super::CcResult;
+use crate::graph::{Graph, Vertex};
+use crate::mpc::Simulator;
+use crate::util::rng::Rng;
+
+/// Outcome of one contraction phase: the contracted graph plus the map from
+/// the phase-input node ids to the contracted node ids.
+pub struct PhaseOutcome {
+    pub contracted: Graph,
+    pub node_map: Vec<Vertex>,
+}
+
+/// Loop options (a view over [`super::RunOptions`]).
+#[derive(Debug, Clone, Copy)]
+pub struct LoopOptions {
+    pub finisher_threshold: usize,
+    pub prune_isolated: bool,
+    pub max_phases: u32,
+}
+
+/// Run the contraction loop.  `phase` receives the current graph and must
+/// return a [`PhaseOutcome`] whose `node_map` merges only vertices of the
+/// same connected component (the soundness invariant every algorithm's
+/// label step guarantees).
+pub fn run<F>(
+    g: &Graph,
+    sim: &mut Simulator,
+    rng: &mut Rng,
+    opts: LoopOptions,
+    mut phase: F,
+) -> CcResult
+where
+    F: FnMut(&Graph, &mut Simulator, &mut Rng, u32) -> PhaseOutcome,
+{
+    let n_orig = g.num_vertices();
+    // node_of[v]: current node id of original vertex v (when unresolved)
+    let mut node_of: Vec<Vertex> = (0..n_orig as u32).collect();
+    let mut resolved: Vec<bool> = vec![false; n_orig];
+    let mut final_label: Vec<Vertex> = vec![0; n_orig];
+    let mut cur = g.clone();
+    let mut phases = 0u32;
+    let mut completed = true;
+    let mut edges_per_phase = Vec::new();
+    let mut nodes_per_phase = Vec::new();
+
+    // min original vertex id per current node (canonical-label carrier)
+    let min_orig = |cur_n: usize, node_of: &[Vertex], resolved: &[bool]| -> Vec<Vertex> {
+        let mut m = vec![Vertex::MAX; cur_n];
+        for v in 0..n_orig {
+            if !resolved[v] {
+                let node = node_of[v] as usize;
+                if (v as Vertex) < m[node] {
+                    m[node] = v as Vertex;
+                }
+            }
+        }
+        m
+    };
+
+    loop {
+        edges_per_phase.push(cur.num_edges() as u64);
+        nodes_per_phase.push(cur.num_vertices() as u64);
+
+        // Termination: no edges -> every remaining node is a finished component.
+        if cur.num_edges() == 0 {
+            let m = min_orig(cur.num_vertices(), &node_of, &resolved);
+            for v in 0..n_orig {
+                if !resolved[v] {
+                    resolved[v] = true;
+                    final_label[v] = m[node_of[v] as usize];
+                }
+            }
+            break;
+        }
+
+        // §6 finisher: small graph -> one machine, streaming union-find.
+        // Charged as one round shipping every remaining edge.
+        if opts.finisher_threshold > 0 && cur.num_edges() <= opts.finisher_threshold {
+            let msgs: Vec<(u64, (u32, u32))> = cur
+                .edges()
+                .iter()
+                .map(|&(u, v)| (0u64, (u, v))) // key 0: everything to one machine
+                .collect();
+            let _: Vec<()> = sim.round("finisher/ship", msgs, |_, _| vec![]);
+            let node_labels = oracle::components(&cur); // min node id per comp
+            let m = min_orig(cur.num_vertices(), &node_of, &resolved);
+            // canonical original label per component = min over member nodes
+            let mut comp_min = vec![Vertex::MAX; cur.num_vertices()];
+            for node in 0..cur.num_vertices() {
+                let c = node_labels[node] as usize;
+                comp_min[c] = comp_min[c].min(m[node]);
+            }
+            for v in 0..n_orig {
+                if !resolved[v] {
+                    resolved[v] = true;
+                    let c = node_labels[node_of[v] as usize] as usize;
+                    final_label[v] = comp_min[c];
+                }
+            }
+            phases += 1; // the finisher consumes one round = one phase
+            break;
+        }
+
+        if phases >= opts.max_phases {
+            // Resource guard tripped: resolve via the oracle so the result
+            // is still usable, but mark the run incomplete.
+            completed = false;
+            let node_labels = oracle::components(&cur);
+            let m = min_orig(cur.num_vertices(), &node_of, &resolved);
+            let mut comp_min = vec![Vertex::MAX; cur.num_vertices()];
+            for node in 0..cur.num_vertices() {
+                let c = node_labels[node] as usize;
+                comp_min[c] = comp_min[c].min(m[node]);
+            }
+            for v in 0..n_orig {
+                if !resolved[v] {
+                    resolved[v] = true;
+                    let c = node_labels[node_of[v] as usize] as usize;
+                    final_label[v] = comp_min[c];
+                }
+            }
+            break;
+        }
+
+        // ---- one contraction phase -----------------------------------------
+        let outcome = phase(&cur, sim, rng, phases);
+        phases += 1;
+        debug_assert_eq!(outcome.node_map.len(), cur.num_vertices());
+        for v in 0..n_orig {
+            if !resolved[v] {
+                node_of[v] = outcome.node_map[node_of[v] as usize];
+            }
+        }
+        cur = outcome.contracted;
+
+        // §6: prune isolated nodes — their component is complete.
+        if opts.prune_isolated {
+            let m = min_orig(cur.num_vertices(), &node_of, &resolved);
+            let (pruned, map) = cur.prune_isolated();
+            if pruned.num_vertices() < cur.num_vertices() {
+                for v in 0..n_orig {
+                    if !resolved[v] {
+                        match map[node_of[v] as usize] {
+                            Some(new_id) => node_of[v] = new_id,
+                            None => {
+                                resolved[v] = true;
+                                final_label[v] = m[node_of[v] as usize];
+                            }
+                        }
+                    }
+                }
+                cur = pruned;
+            }
+        }
+    }
+
+    CcResult {
+        labels: final_label,
+        phases,
+        completed,
+        edges_per_phase,
+        nodes_per_phase,
+        metrics: std::mem::take(&mut sim.metrics),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::mpc::MpcConfig;
+
+    fn sim() -> Simulator {
+        Simulator::new(MpcConfig {
+            machines: 4,
+            space_per_machine: None,
+            threads: 1,
+        })
+    }
+
+    /// A toy phase: merge every node with its minimum neighbor (Hash-Min
+    /// style single hop) — converges, merges only within components.
+    fn toy_phase(g: &Graph, _s: &mut Simulator, _r: &mut Rng, _p: u32) -> PhaseOutcome {
+        let csr = crate::graph::Csr::build(g);
+        let labels: Vec<Vertex> = (0..g.num_vertices() as u32)
+            .map(|v| {
+                csr.neighbors(v)
+                    .iter()
+                    .copied()
+                    .chain(std::iter::once(v))
+                    .min()
+                    .unwrap()
+            })
+            .collect();
+        let (contracted, node_map) = g.contract(&labels);
+        PhaseOutcome {
+            contracted,
+            node_map,
+        }
+    }
+
+    #[test]
+    fn loop_terminates_and_labels_are_canonical() {
+        let g = generators::path(17).disjoint_union(generators::complete(5));
+        let mut s = sim();
+        let mut rng = Rng::new(1);
+        let opts = LoopOptions {
+            finisher_threshold: 0,
+            prune_isolated: true,
+            max_phases: 100,
+        };
+        let res = run(&g, &mut s, &mut rng, opts, toy_phase);
+        assert!(res.completed);
+        assert!(oracle::verify(&g, &res.labels).is_ok());
+        assert!(res.phases >= 2);
+        assert_eq!(res.edges_per_phase[0], g.num_edges() as u64);
+    }
+
+    #[test]
+    fn finisher_short_circuits() {
+        let g = generators::path(64);
+        let mut s = sim();
+        let mut rng = Rng::new(2);
+        let with_fin = run(
+            &g,
+            &mut s,
+            &mut rng,
+            LoopOptions {
+                finisher_threshold: 1000, // larger than the graph
+                prune_isolated: true,
+                max_phases: 100,
+            },
+            toy_phase,
+        );
+        assert_eq!(with_fin.phases, 1, "finisher takes over immediately");
+        assert!(oracle::verify(&g, &with_fin.labels).is_ok());
+    }
+
+    #[test]
+    fn max_phases_guard_marks_incomplete() {
+        let g = generators::path(1 << 10);
+        let mut s = sim();
+        let mut rng = Rng::new(3);
+        let res = run(
+            &g,
+            &mut s,
+            &mut rng,
+            LoopOptions {
+                finisher_threshold: 0,
+                prune_isolated: false,
+                max_phases: 1,
+            },
+            toy_phase,
+        );
+        assert!(!res.completed);
+        // labels still correct thanks to the guard resolution
+        assert!(oracle::verify(&g, &res.labels).is_ok());
+    }
+
+    #[test]
+    fn isolated_vertices_resolve_immediately() {
+        let g = Graph::empty(5);
+        let mut s = sim();
+        let mut rng = Rng::new(4);
+        let res = run(
+            &g,
+            &mut s,
+            &mut rng,
+            LoopOptions {
+                finisher_threshold: 0,
+                prune_isolated: true,
+                max_phases: 10,
+            },
+            toy_phase,
+        );
+        assert_eq!(res.labels, vec![0, 1, 2, 3, 4]);
+        assert_eq!(res.phases, 0);
+    }
+
+    #[test]
+    fn edges_per_phase_is_monotone_for_contractive_phase() {
+        let mut rng = Rng::new(5);
+        let g = generators::gnp(300, 0.02, &mut Rng::new(50));
+        let mut s = sim();
+        let res = run(
+            &g,
+            &mut s,
+            &mut rng,
+            LoopOptions {
+                finisher_threshold: 0,
+                prune_isolated: true,
+                max_phases: 100,
+            },
+            toy_phase,
+        );
+        for w in res.edges_per_phase.windows(2) {
+            assert!(w[1] <= w[0], "{:?}", res.edges_per_phase);
+        }
+    }
+}

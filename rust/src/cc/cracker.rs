@@ -1,0 +1,180 @@
+//! **Cracker** [LCD+17] — the strongest published baseline in Tables 2–3,
+//! implemented in the equivalent formulation the paper gives in §6:
+//!
+//! "Assume that each node is assigned a random priority.  First, rewire the
+//! edges of the graph just as in Hash-To-Min.  Then, compute labels
+//! `l_p(v) = min_{w in N(v)} rho(w)` and merge together all vertices that
+//! have the same label."
+//!
+//! The rewiring: every vertex `v` connects its closed neighborhood to its
+//! minimum-priority closed neighbor `m(v)`.  One phase = rewire (2 rounds)
+//! + label (1 round) + contraction (2 rounds); phases iterate under the
+//! shared [`contraction_loop`].
+
+use super::common::{contract_mpc, Priorities};
+use super::contraction_loop::{self, LoopOptions, PhaseOutcome};
+use super::{CcAlgorithm, CcResult, RunOptions};
+use crate::graph::{Graph, Vertex};
+use crate::mpc::Simulator;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Cracker;
+
+/// Compute `m(v)` = the vertex of minimum priority in `N(v) ∪ {v}`
+/// (one MPC round carrying `(priority, id)` pairs).
+pub fn min_neighbor(g: &Graph, rho: &Priorities, sim: &mut Simulator) -> Vec<Vertex> {
+    let n = g.num_vertices();
+    // per-key (priority, id) min fold, self-inclusive
+    let mut out: Vec<(u32, u32)> = (0..n as u32)
+        .map(|v| (rho.rho[v as usize], v))
+        .collect();
+    let edge_msgs = g.edges().iter().flat_map(|&(u, v)| {
+        [
+            (u as u64, (rho.rho[v as usize], v)),
+            (v as u64, (rho.rho[u as usize], u)),
+        ]
+    });
+    let self_msgs = (0..n as u32).map(|v| (v as u64, (rho.rho[v as usize], v)));
+    sim.round_fold(
+        "cracker/min-nbr",
+        &mut out,
+        edge_msgs.chain(self_msgs),
+        |a, b| a.min(b),
+    );
+    out.into_iter().map(|(_, v)| v).collect()
+}
+
+/// Hash-To-Min style rewiring: edges `{(m(v), u) : u ∈ N(v) ∪ {v}}`.
+/// One MPC round (each vertex's neighborhood is shipped to `m(v)`).
+pub fn rewire(g: &Graph, m: &[Vertex], sim: &mut Simulator) -> Graph {
+    let n = g.num_vertices();
+    let edge_msgs = g.edges().iter().flat_map(|&(u, v)| {
+        [
+            (m[u as usize] as u64, (m[u as usize], v)),
+            (m[v as usize] as u64, (m[v as usize], u)),
+        ]
+    });
+    let self_msgs = (0..n as u32).map(|v| (m[v as usize] as u64, (m[v as usize], v)));
+    // pure message delivery: each new edge materializes at its hub machine
+    let edges: Vec<(u32, u32)> =
+        sim.round_map("cracker/rewire", edge_msgs.chain(self_msgs), |_, pair| pair);
+    Graph::from_edges(n, edges)
+}
+
+impl CcAlgorithm for Cracker {
+    fn name(&self) -> &'static str {
+        "cracker"
+    }
+
+    fn run(
+        &self,
+        g: &Graph,
+        sim: &mut Simulator,
+        rng: &mut Rng,
+        opts: &RunOptions,
+    ) -> CcResult {
+        let loop_opts = LoopOptions {
+            finisher_threshold: opts.finisher_threshold,
+            prune_isolated: opts.prune_isolated,
+            max_phases: opts.max_phases,
+        };
+        contraction_loop::run(g, sim, rng, loop_opts, |cur, sim, rng, _phase| {
+            let rho = Priorities::sample(cur.num_vertices(), rng);
+            let m = min_neighbor(cur, &rho, sim);
+            let rewired = rewire(cur, &m, sim);
+            // label on the rewired graph: min-priority closed neighbor
+            let labels = min_neighbor(&rewired, &rho, sim);
+            let (contracted, node_map) = contract_mpc(sim, cur, &labels);
+            PhaseOutcome {
+                contracted,
+                node_map,
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cc::oracle;
+    use crate::graph::generators;
+    use crate::mpc::MpcConfig;
+
+    fn sim() -> Simulator {
+        Simulator::new(MpcConfig {
+            machines: 4,
+            space_per_machine: None,
+            threads: 1,
+        })
+    }
+
+    #[test]
+    fn min_neighbor_identity_priorities() {
+        let g = generators::path(4);
+        let rho = Priorities {
+            rho: vec![0, 1, 2, 3],
+            inv: vec![0, 1, 2, 3],
+        };
+        let mut s = sim();
+        let m = min_neighbor(&g, &rho, &mut s);
+        assert_eq!(m, vec![0, 0, 1, 2]);
+    }
+
+    #[test]
+    fn rewire_connects_neighborhood_to_min() {
+        let g = generators::path(4);
+        let m = vec![0, 0, 1, 2];
+        let mut s = sim();
+        let r = rewire(&g, &m, &mut s);
+        // v=1's neighborhood {0,1,2} hangs off m(1)=0; v=2's {1,2,3} off 1...
+        assert!(r.edges().contains(&(0, 1)));
+        assert!(r.edges().contains(&(0, 2)));
+        assert!(r.edges().contains(&(1, 3)));
+        assert_eq!(r.num_vertices(), 4);
+    }
+
+    fn check(g: &Graph, seed: u64) -> CcResult {
+        let mut s = sim();
+        let mut rng = Rng::new(seed);
+        let res = Cracker.run(g, &mut s, &mut rng, &RunOptions::default());
+        assert!(res.completed);
+        oracle::verify(g, &res.labels).unwrap();
+        res
+    }
+
+    #[test]
+    fn correct_on_zoo() {
+        check(&generators::path(30), 1);
+        check(&generators::cycle(21), 2);
+        check(&generators::star(40), 3);
+        check(&generators::complete(10), 4);
+        check(&generators::grid(5, 8), 5);
+        check(&Graph::empty(6), 6);
+        check(
+            &generators::binary_tree(31).disjoint_union(generators::cycle(7)),
+            7,
+        );
+    }
+
+    #[test]
+    fn correct_on_random_graphs() {
+        for seed in 0..4 {
+            check(&generators::gnp(250, 0.015, &mut Rng::new(seed + 60)), seed);
+        }
+    }
+
+    #[test]
+    fn few_phases_on_dense_random_graph() {
+        let g = generators::gnp_log_regime(1000, 4.0, &mut Rng::new(5));
+        let res = check(&g, 8);
+        assert!(res.phases <= 6, "phases {}", res.phases);
+    }
+
+    #[test]
+    fn lower_bound_on_path() {
+        // Thm 7.1: Cracker needs Ω(log n) on a path.
+        let res = check(&generators::path(1024), 9);
+        assert!(res.phases >= 3, "phases {}", res.phases);
+    }
+}

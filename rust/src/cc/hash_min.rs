@@ -1,0 +1,122 @@
+//! **Hash-Min** — the trivial `O(d)`-round label-propagation baseline
+//! (mentioned in §1 via [CDSMR13]): every vertex repeatedly adopts the
+//! minimum label in its closed neighborhood.  No contraction, no rewiring;
+//! `d+1` rounds on a graph of diameter `d`, `O(m)` communication per round.
+
+use super::common::min_hop;
+use super::{CcAlgorithm, CcResult, RunOptions};
+use crate::graph::{Graph, Vertex};
+use crate::mpc::Simulator;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct HashMin;
+
+impl CcAlgorithm for HashMin {
+    fn name(&self) -> &'static str {
+        "hash-min"
+    }
+
+    fn run(
+        &self,
+        g: &Graph,
+        sim: &mut Simulator,
+        _rng: &mut Rng,
+        opts: &RunOptions,
+    ) -> CcResult {
+        let n = g.num_vertices();
+        let mut labels: Vec<u32> = (0..n as u32).collect();
+        let mut phases = 0u32;
+        let mut completed = true;
+        let mut edges_per_phase = Vec::new();
+        let mut nodes_per_phase = Vec::new();
+        loop {
+            edges_per_phase.push(g.num_edges() as u64); // never contracts
+            nodes_per_phase.push(n as u64);
+            let next = min_hop(sim, "hash-min/hop", g, &labels, true);
+            phases += 1;
+            if next == labels {
+                break;
+            }
+            labels = next;
+            if phases >= opts.max_phases {
+                completed = false;
+                break;
+            }
+        }
+        let labels: Vec<Vertex> = if completed {
+            labels
+        } else {
+            super::oracle::components(g) // guard: salvage a correct answer
+        };
+        CcResult {
+            labels,
+            phases,
+            completed,
+            edges_per_phase,
+            nodes_per_phase,
+            metrics: std::mem::take(&mut sim.metrics),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cc::oracle;
+    use crate::graph::generators;
+    use crate::mpc::MpcConfig;
+
+    fn sim() -> Simulator {
+        Simulator::new(MpcConfig {
+            machines: 4,
+            space_per_machine: None,
+            threads: 1,
+        })
+    }
+
+    #[test]
+    fn correct_and_diameter_bounded() {
+        let g = generators::path(33);
+        let mut s = sim();
+        let mut rng = Rng::new(1);
+        let res = HashMin.run(&g, &mut s, &mut rng, &RunOptions::default());
+        assert!(res.completed);
+        oracle::verify(&g, &res.labels).unwrap();
+        // exactly diameter+1 hops: 32 to propagate + 1 to detect stability
+        assert_eq!(res.phases, 33);
+    }
+
+    #[test]
+    fn fast_on_low_diameter() {
+        let g = generators::star(100);
+        let mut s = sim();
+        let mut rng = Rng::new(2);
+        let res = HashMin.run(&g, &mut s, &mut rng, &RunOptions::default());
+        assert!(res.phases <= 3);
+        oracle::verify(&g, &res.labels).unwrap();
+    }
+
+    #[test]
+    fn guard_trips_on_long_path() {
+        let g = generators::path(1000);
+        let mut s = sim();
+        let mut rng = Rng::new(3);
+        let opts = RunOptions {
+            max_phases: 5,
+            ..Default::default()
+        };
+        let res = HashMin.run(&g, &mut s, &mut rng, &opts);
+        assert!(!res.completed);
+        oracle::verify(&g, &res.labels).unwrap(); // salvaged
+    }
+
+    #[test]
+    fn correct_on_random_graph() {
+        let g = generators::gnp(300, 0.02, &mut Rng::new(9));
+        let mut s = sim();
+        let mut rng = Rng::new(4);
+        let res = HashMin.run(&g, &mut s, &mut rng, &RunOptions::default());
+        oracle::verify(&g, &res.labels).unwrap();
+    }
+}

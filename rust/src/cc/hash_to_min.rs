@@ -1,0 +1,181 @@
+//! **Hash-To-Min** [CDSMR13] — the cluster-growing baseline.
+//!
+//! Every vertex maintains a cluster `C(v)` (initially `N(v) ∪ {v}`).  Each
+//! round: `m = min C(v)`; send `C(v)` to `m` and `{m}` to every `u ∈ C(v)`;
+//! the new `C(v)` is the union of everything received.  Converges with the
+//! component minimum holding the full component.  Communication can blow up
+//! (the paper's Tables 2–3 show "X" — out of memory — on the large
+//! datasets), so the run is guarded by `RunOptions::state_cap`.
+
+use super::{CcAlgorithm, CcResult, RunOptions};
+use crate::graph::{Csr, Graph, Vertex};
+use crate::mpc::Simulator;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct HashToMin;
+
+impl CcAlgorithm for HashToMin {
+    fn name(&self) -> &'static str {
+        "hash-to-min"
+    }
+
+    fn run(
+        &self,
+        g: &Graph,
+        sim: &mut Simulator,
+        _rng: &mut Rng,
+        opts: &RunOptions,
+    ) -> CcResult {
+        let n = g.num_vertices();
+        let csr = Csr::build(g);
+        let mut clusters: Vec<Vec<u32>> = (0..n as u32)
+            .map(|v| {
+                let mut c: Vec<u32> = csr.neighbors(v).to_vec();
+                c.push(v);
+                c.sort_unstable();
+                c
+            })
+            .collect();
+        let mut phases = 0u32;
+        let mut completed = true;
+        let mut edges_per_phase = Vec::new();
+        let mut nodes_per_phase = Vec::new();
+
+        loop {
+            // "edges" for the Figure-1 series = total cluster state here
+            let state: u64 = clusters.iter().map(|c| c.len() as u64).sum();
+            edges_per_phase.push(state);
+            nodes_per_phase.push(n as u64);
+
+            if opts.state_cap > 0 && state > opts.state_cap {
+                completed = false; // the paper's "X": out of memory
+                break;
+            }
+
+            // map: send C(v) to min(C(v)); send {min} to every member
+            let mut msgs: Vec<(u64, Vec<u32>)> = Vec::new();
+            for (v, c) in clusters.iter().enumerate() {
+                let m = c[0]; // sorted
+                if c.len() == 1 && m == v as u32 {
+                    msgs.push((v as u64, vec![v as u32])); // stable singleton
+                    continue;
+                }
+                msgs.push((m as u64, c.clone()));
+                for &u in c {
+                    msgs.push((u as u64, vec![m]));
+                }
+            }
+            let folded: Vec<(u32, Vec<u32>)> = sim.round("htm/round", msgs, |key, groups| {
+                let mut merged: Vec<u32> = groups.iter().flatten().copied().collect();
+                merged.sort_unstable();
+                merged.dedup();
+                vec![(key as u32, merged)]
+            });
+            let mut next: Vec<Vec<u32>> = vec![Vec::new(); n];
+            for (v, c) in folded {
+                next[v as usize] = c;
+            }
+            for (v, c) in next.iter_mut().enumerate() {
+                if c.is_empty() {
+                    c.push(v as u32); // nothing received: own singleton
+                }
+            }
+            phases += 1;
+            if next == clusters {
+                break;
+            }
+            clusters = next;
+            if phases >= opts.max_phases {
+                completed = false;
+                break;
+            }
+        }
+
+        let labels: Vec<Vertex> = if completed {
+            clusters.iter().map(|c| c[0]).collect()
+        } else {
+            super::oracle::components(g)
+        };
+        CcResult {
+            labels,
+            phases,
+            completed,
+            edges_per_phase,
+            nodes_per_phase,
+            metrics: std::mem::take(&mut sim.metrics),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cc::oracle;
+    use crate::graph::generators;
+    use crate::mpc::MpcConfig;
+
+    fn sim() -> Simulator {
+        Simulator::new(MpcConfig {
+            machines: 4,
+            space_per_machine: None,
+            threads: 1,
+        })
+    }
+
+    fn check(g: &Graph) -> CcResult {
+        let mut s = sim();
+        let mut rng = Rng::new(1);
+        let res = HashToMin.run(g, &mut s, &mut rng, &RunOptions::default());
+        assert!(res.completed);
+        oracle::verify(g, &res.labels).unwrap();
+        res
+    }
+
+    #[test]
+    fn correct_on_zoo() {
+        check(&generators::path(20));
+        check(&generators::cycle(15));
+        check(&generators::star(25));
+        check(&generators::complete(8));
+        check(&Graph::empty(4));
+        check(&generators::path(9).disjoint_union(generators::star(7)));
+    }
+
+    #[test]
+    fn correct_on_random_graph() {
+        for seed in 0..3 {
+            check(&generators::gnp(200, 0.02, &mut Rng::new(seed)));
+        }
+    }
+
+    #[test]
+    fn converges_in_log_d_ish_rounds_on_path() {
+        // conjectured O(log d): path of 64 should need ~log-ish rounds,
+        // far fewer than the 64 Hash-Min needs.
+        let res = check(&generators::path(64));
+        assert!(res.phases <= 20, "phases {}", res.phases);
+        assert!(res.phases >= 4);
+    }
+
+    #[test]
+    fn state_blows_up_on_star_like_graphs() {
+        // min vertex accumulates the whole component: state Ω(n) at center
+        let res = check(&generators::star(200));
+        let max_state = res.edges_per_phase.iter().max().copied().unwrap();
+        assert!(max_state >= 400, "state {max_state}");
+    }
+
+    #[test]
+    fn state_cap_aborts_as_oom() {
+        let g = generators::complete(40); // clusters explode instantly
+        let mut s = sim();
+        let mut rng = Rng::new(2);
+        let opts = RunOptions {
+            state_cap: 100,
+            ..Default::default()
+        };
+        let res = HashToMin.run(&g, &mut s, &mut rng, &opts);
+        assert!(!res.completed, "should have tripped the state cap");
+    }
+}

@@ -1,0 +1,283 @@
+//! **LocalContraction** (§3) — the paper's headline algorithm.
+//!
+//! Each phase: sample a random ordering `rho`; every vertex computes the
+//! label `l_rho(v)` = vertex with the smallest priority in `N(N(v))`
+//! (self-inclusive, two min-hops = two MPC rounds); vertices with equal
+//! labels merge (contraction, two more rounds by Lemma 3.1).  Terminates
+//! when the graph has no edges — `O(log n)` phases w.h.p. (Lemma 4.1),
+//! `O(log log n)` with the [`super::merge_to_large`] step on `G(n,p)`-class
+//! inputs (Theorem 5.5).
+
+use super::backend::{DenseBackend, INF};
+use super::common::{contract_mpc, min_hop, Priorities};
+use super::contraction_loop::{self, LoopOptions, PhaseOutcome};
+use super::merge_to_large::{self, Schedule};
+use super::{CcAlgorithm, CcResult, RunOptions};
+use crate::graph::{Graph, Vertex};
+use crate::mpc::Simulator;
+use crate::util::rng::Rng;
+
+/// LocalContraction, optionally with the MergeToLarge step of §5.
+#[derive(Debug, Clone, Default)]
+pub struct LocalContraction {
+    pub merge_to_large: Option<Schedule>,
+}
+
+/// One phase's label computation: `labels[v]` = the *vertex id* holding the
+/// minimum priority over `N(N(v))` — two min-hops over `rho`, then the
+/// inverse permutation recovers the representative vertex.
+pub fn phase_labels(
+    g: &Graph,
+    sim: &mut Simulator,
+    rho: &Priorities,
+    dense: Option<&dyn DenseBackend>,
+) -> Vec<Vertex> {
+    let n = g.num_vertices();
+
+    // Dense path: the compiled XLA artifact evaluates both hops in one
+    // executable when the graph fits a shard. The shuffle the artifact
+    // replaces is still charged to the model (same messages either way);
+    // only the *compute* moves onto the compiled kernel.
+    if let Some(backend) = dense {
+        if n <= backend.max_vertices() {
+            let prio: Vec<i32> = rho.rho.iter().map(|&p| p as i32).collect();
+            if let Ok(labels) = backend.local_labels(g, &prio) {
+                charge_label_rounds(sim, g, n);
+                return labels
+                    .into_iter()
+                    .enumerate()
+                    .map(|(v, l)| {
+                        if l == INF {
+                            v as Vertex // empty neighborhood: own label
+                        } else {
+                            rho.inv[l as usize]
+                        }
+                    })
+                    .collect();
+            }
+            // fall through to the MPC path on backend error
+        }
+    }
+
+    let h1 = min_hop(sim, "lc/hop1", g, &rho.rho, true);
+    let h2 = min_hop(sim, "lc/hop2", g, &h1, true);
+    h2.into_iter().map(|p| rho.inv[p as usize]).collect()
+}
+
+/// Charge the two label rounds to the metrics when the dense backend
+/// computed the values (communication is identical; see Lemma 3.1).
+fn charge_label_rounds(sim: &mut Simulator, g: &Graph, n: usize) {
+    for label in ["lc/hop1(dense)", "lc/hop2(dense)"] {
+        let msgs = 2 * g.num_edges() as u64 + n as u64;
+        sim.metrics.record(crate::mpc::RoundMetrics {
+            label: label.to_string(),
+            messages: msgs,
+            bytes: msgs * 12,
+            max_machine_bytes: msgs * 12 / sim.cfg.machines.max(1) as u64,
+            ..Default::default()
+        });
+    }
+}
+
+impl CcAlgorithm for LocalContraction {
+    fn name(&self) -> &'static str {
+        if self.merge_to_large.is_some() {
+            "local-contraction+mtl"
+        } else {
+            "local-contraction"
+        }
+    }
+
+    fn run(
+        &self,
+        g: &Graph,
+        sim: &mut Simulator,
+        rng: &mut Rng,
+        opts: &RunOptions,
+    ) -> CcResult {
+        let loop_opts = LoopOptions {
+            finisher_threshold: opts.finisher_threshold,
+            prune_isolated: opts.prune_isolated,
+            max_phases: opts.max_phases,
+        };
+        let mtl = self.merge_to_large.clone();
+        let dense = opts.dense_backend;
+        contraction_loop::run(g, sim, rng, loop_opts, move |cur, sim, rng, phase| {
+            let rho = Priorities::sample(cur.num_vertices(), rng);
+            let labels = phase_labels(cur, sim, &rho, dense);
+            let (contracted, node_map) = contract_mpc(sim, cur, &labels);
+
+            match &mtl {
+                None => PhaseOutcome {
+                    contracted,
+                    node_map,
+                },
+                Some(schedule) => {
+                    // §5: merge small nodes into nearby large nodes.
+                    let (g2, map2) = merge_to_large::step(
+                        &contracted,
+                        &node_map,
+                        &rho,
+                        schedule.alpha(phase, cur.num_vertices()),
+                        sim,
+                    );
+                    let node_map = node_map
+                        .iter()
+                        .map(|&m| map2[m as usize])
+                        .collect();
+                    PhaseOutcome {
+                        contracted: g2,
+                        node_map,
+                    }
+                }
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cc::oracle;
+    use crate::graph::generators;
+    use crate::mpc::MpcConfig;
+
+    fn sim() -> Simulator {
+        Simulator::new(MpcConfig {
+            machines: 8,
+            space_per_machine: None,
+            threads: 1,
+        })
+    }
+
+    fn check(g: &Graph, seed: u64) -> CcResult {
+        let mut s = sim();
+        let mut rng = Rng::new(seed);
+        let res = LocalContraction::default().run(g, &mut s, &mut rng, &RunOptions::default());
+        assert!(res.completed);
+        oracle::verify(g, &res.labels).unwrap();
+        res
+    }
+
+    #[test]
+    fn correct_on_zoo() {
+        check(&generators::path(50), 1);
+        check(&generators::cycle(33), 2);
+        check(&generators::star(40), 3);
+        check(&generators::complete(12), 4);
+        check(&generators::grid(7, 9), 5);
+        check(&generators::binary_tree(63), 6);
+        check(&Graph::empty(7), 7);
+        check(
+            &generators::path(20).disjoint_union(generators::cycle(9)),
+            8,
+        );
+    }
+
+    #[test]
+    fn correct_on_random_graphs() {
+        for seed in 0..5 {
+            let g = generators::gnp(400, 0.01, &mut Rng::new(seed + 100));
+            check(&g, seed);
+        }
+    }
+
+    #[test]
+    fn phase_labels_match_min_of_two_hop() {
+        let g = generators::path(6);
+        let mut s = sim();
+        let mut rng = Rng::new(9);
+        let rho = Priorities::sample(6, &mut rng);
+        let labels = phase_labels(&g, &mut s, &rho, None);
+        // each label's priority must equal min rho over N(N(v))
+        let csr = crate::graph::Csr::build(&g);
+        for v in 0..6u32 {
+            let mut best = rho.rho[v as usize];
+            let mut two_hop = vec![v];
+            two_hop.extend_from_slice(csr.neighbors(v));
+            for &u in two_hop.clone().iter() {
+                best = best.min(rho.rho[u as usize]);
+                for &w in csr.neighbors(u) {
+                    best = best.min(rho.rho[w as usize]);
+                }
+            }
+            assert_eq!(rho.rho[labels[v as usize] as usize], best);
+        }
+    }
+
+    #[test]
+    fn star_collapses_in_one_phase() {
+        let g = generators::star(100);
+        let res = check(&g, 11);
+        assert_eq!(res.phases, 1);
+    }
+
+    #[test]
+    fn clique_collapses_in_one_phase() {
+        let res = check(&generators::complete(32), 12);
+        assert_eq!(res.phases, 1);
+    }
+
+    #[test]
+    fn phases_logarithmic_on_path() {
+        // Thm 7.1: Ω(log n); Lemma 4.1: O(log n). A path of 4^5=1024
+        // shortens at most 5x per phase -> at least log_5(1024) ≈ 4.3.
+        let res = check(&generators::path(1024), 13);
+        assert!(res.phases >= 4, "phases {}", res.phases);
+        assert!(res.phases <= 30, "phases {}", res.phases);
+    }
+
+    #[test]
+    fn mtl_variant_is_correct() {
+        for seed in 0..3 {
+            let g = generators::gnp_log_regime(600, 5.0, &mut Rng::new(seed + 50));
+            let mut s = sim();
+            let mut rng = Rng::new(seed);
+            let algo = LocalContraction {
+                merge_to_large: Some(Schedule::default()),
+            };
+            let res = algo.run(&g, &mut s, &mut rng, &RunOptions::default());
+            assert!(res.completed);
+            oracle::verify(&g, &res.labels).unwrap();
+        }
+    }
+
+    #[test]
+    fn dense_backend_path_matches_mpc_path() {
+        use crate::cc::backend::CpuBackend;
+        let g = generators::gnp(200, 0.02, &mut Rng::new(77));
+        let backend = CpuBackend { max_n: 1024 };
+        let run_with = |dense: Option<&dyn DenseBackend>| {
+            let mut s = sim();
+            let mut rng = Rng::new(5);
+            let opts = RunOptions {
+                dense_backend: dense,
+                ..RunOptions::default()
+            };
+            LocalContraction::default().run(&g, &mut s, &mut rng, &opts)
+        };
+        let a = run_with(None);
+        let b = run_with(Some(&backend));
+        assert_eq!(a.labels, b.labels);
+        assert_eq!(a.phases, b.phases);
+    }
+
+    #[test]
+    fn communication_is_linear_in_m_per_phase() {
+        // §1.1: the communication in each round is O(m).
+        let g = generators::gnp(500, 0.02, &mut Rng::new(88));
+        let mut s = sim();
+        let mut rng = Rng::new(6);
+        let res = LocalContraction::default().run(&g, &mut s, &mut rng, &RunOptions::default());
+        let m0 = g.num_edges() as u64;
+        for r in &res.metrics.rounds {
+            assert!(
+                r.bytes <= 40 * m0 + 1000,
+                "round {} bytes {} vs m {}",
+                r.label,
+                r.bytes,
+                m0
+            );
+        }
+    }
+}

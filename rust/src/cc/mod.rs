@@ -1,0 +1,120 @@
+//! Connected-components algorithms (§3–§7 of the paper).
+//!
+//! The paper's contributions — [`local_contraction`] (with the
+//! [`merge_to_large`] step of §5) and [`tree_contraction`] — plus the
+//! published baselines it evaluates against: [`cracker`], [`two_phase`],
+//! [`hash_to_min`], and the trivial O(d) [`hash_min`].  All run on the
+//! [`crate::mpc`] simulator and are checked against the sequential
+//! [`oracle`].
+//!
+//! Every algorithm returns [`CcResult`] with **canonical labels**
+//! (`labels[v]` = minimum original vertex id in `v`'s component) so outputs
+//! are comparable with plain equality across algorithms and the oracle.
+
+pub mod backend;
+pub mod common;
+pub mod contraction_loop;
+pub mod cracker;
+pub mod hash_min;
+pub mod hash_to_min;
+pub mod local_contraction;
+pub mod merge_to_large;
+pub mod oracle;
+pub mod tree_contraction;
+pub mod two_phase;
+
+use crate::graph::{Graph, Vertex};
+use crate::mpc::{Metrics, Simulator};
+use crate::util::rng::Rng;
+
+/// Result of a connected-components run.
+#[derive(Debug, Clone)]
+pub struct CcResult {
+    /// Canonical labels: `labels[v]` = min original vertex id in the
+    /// component of `v`.
+    pub labels: Vec<Vertex>,
+    /// Logical phases executed (the unit Tables 2/3 count).
+    pub phases: u32,
+    /// Whether the run completed (Hash-To-Min style algorithms can be
+    /// aborted by the resource guard — the paper's "X" entries).
+    pub completed: bool,
+    /// Edges at the *beginning* of each phase (Figure 1 series).
+    pub edges_per_phase: Vec<u64>,
+    /// Nodes at the beginning of each phase.
+    pub nodes_per_phase: Vec<u64>,
+    /// MPC round/communication accounting.
+    pub metrics: Metrics,
+}
+
+impl CcResult {
+    pub fn num_components(&self) -> usize {
+        let mut ls: Vec<Vertex> = self.labels.clone();
+        ls.sort_unstable();
+        ls.dedup();
+        ls.len()
+    }
+}
+
+/// Per-run options shared by the algorithms.
+#[derive(Clone, Copy)]
+pub struct RunOptions<'a> {
+    /// Ship the graph to one machine (streaming union-find) once it has at
+    /// most this many edges (§6 optimization).  0 disables.
+    pub finisher_threshold: usize,
+    /// Drop isolated nodes after each phase (§6 optimization).
+    pub prune_isolated: bool,
+    /// Hard cap on phases (resource guard; generous default).
+    pub max_phases: u32,
+    /// Hard cap on live state per vertex-set for cluster-growing algorithms
+    /// (Hash-To-Min guard, in total stored vertex ids). 0 = unlimited.
+    pub state_cap: u64,
+    /// Optional compiled dense backend (the XLA artifact path) used for the
+    /// per-phase label computation when the current graph fits a shard.
+    pub dense_backend: Option<&'a dyn backend::DenseBackend>,
+}
+
+impl Default for RunOptions<'_> {
+    fn default() -> Self {
+        RunOptions {
+            finisher_threshold: 0,
+            prune_isolated: true,
+            max_phases: 200,
+            state_cap: 0,
+            dense_backend: None,
+        }
+    }
+}
+
+/// Common interface: run on `g` under `sim`, seeded deterministically.
+pub trait CcAlgorithm {
+    fn name(&self) -> &'static str;
+    fn run(&self, g: &Graph, sim: &mut Simulator, rng: &mut Rng, opts: &RunOptions)
+        -> CcResult;
+}
+
+/// Instantiate an algorithm by CLI name.
+pub fn by_name(name: &str) -> Box<dyn CcAlgorithm> {
+    match name {
+        "lc" | "local-contraction" => Box::new(local_contraction::LocalContraction::default()),
+        "lc-mtl" | "local-contraction-mtl" => Box::new(local_contraction::LocalContraction {
+            merge_to_large: Some(merge_to_large::Schedule::default()),
+        }),
+        "tc" | "tree-contraction" => Box::new(tree_contraction::TreeContraction { use_dht: false }),
+        "tc-dht" | "tree-contraction-dht" => {
+            Box::new(tree_contraction::TreeContraction { use_dht: true })
+        }
+        "cracker" => Box::new(cracker::Cracker),
+        "two-phase" => Box::new(two_phase::TwoPhase),
+        "htm" | "hash-to-min" => Box::new(hash_to_min::HashToMin),
+        "hash-min" => Box::new(hash_min::HashMin),
+        other => panic!("unknown algorithm {other:?} (try: lc, lc-mtl, tc, tc-dht, cracker, two-phase, htm, hash-min)"),
+    }
+}
+
+/// All algorithm CLI names (for table sweeps).
+pub const ALL_ALGORITHMS: [&str; 8] = [
+    "lc", "lc-mtl", "tc", "tc-dht", "cracker", "two-phase", "htm", "hash-min",
+];
+
+/// The five algorithms of Tables 2–3.
+pub const PAPER_ALGORITHMS: [&str; 5] = ["lc", "tc-dht", "cracker", "two-phase", "htm"];

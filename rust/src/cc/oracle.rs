@@ -1,0 +1,100 @@
+//! Sequential oracle + single-machine streaming finisher (§6).
+
+use crate::graph::{Graph, Vertex};
+use crate::util::dsu::DisjointSet;
+
+/// Exact canonical component labels by streaming union-find:
+/// `labels[v]` = minimum vertex id in `v`'s component.
+///
+/// This is both the correctness oracle for every distributed algorithm and
+/// the paper's single-machine finisher ("it can process incoming edges in a
+/// streaming fashion and only use space proportional to the number of
+/// vertices").
+pub fn components(g: &Graph) -> Vec<Vertex> {
+    let mut dsu = DisjointSet::new(g.num_vertices());
+    for &(u, v) in g.edges() {
+        dsu.union(u, v);
+    }
+    dsu.canonical_labels()
+}
+
+/// Streaming variant: consumes an edge iterator without materializing a
+/// `Graph` (the shape the coordinator's pipeline feeds it).
+pub fn components_streaming(
+    n: usize,
+    edges: impl Iterator<Item = (Vertex, Vertex)>,
+) -> Vec<Vertex> {
+    let mut dsu = DisjointSet::new(n);
+    for (u, v) in edges {
+        dsu.union(u, v);
+    }
+    dsu.canonical_labels()
+}
+
+/// Check a candidate labeling against the oracle.  Returns `Ok(())` or a
+/// description of the first disagreement.
+pub fn verify(g: &Graph, labels: &[Vertex]) -> Result<(), String> {
+    if labels.len() != g.num_vertices() {
+        return Err(format!(
+            "labels len {} != n {}",
+            labels.len(),
+            g.num_vertices()
+        ));
+    }
+    let want = components(g);
+    for v in 0..labels.len() {
+        if labels[v] != want[v] {
+            return Err(format!(
+                "vertex {v}: got label {}, oracle says {}",
+                labels[v], want[v]
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn path_is_one_component() {
+        let labels = components(&generators::path(10));
+        assert!(labels.iter().all(|&l| l == 0));
+    }
+
+    #[test]
+    fn mixture_components() {
+        let g = generators::path(3).disjoint_union(generators::complete(3));
+        let labels = components(&g);
+        assert_eq!(labels, vec![0, 0, 0, 3, 3, 3]);
+    }
+
+    #[test]
+    fn isolated_vertices_self_labeled() {
+        let g = Graph::empty(4);
+        assert_eq!(components(&g), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn streaming_matches_batch() {
+        let mut rng = Rng::new(1);
+        let g = generators::gnp(500, 0.005, &mut rng);
+        let a = components(&g);
+        let b = components_streaming(500, g.edges().iter().copied());
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn verify_accepts_oracle_and_rejects_wrong() {
+        let g = generators::cycle(5);
+        let ok = components(&g);
+        assert!(verify(&g, &ok).is_ok());
+        let mut bad = ok;
+        bad[3] = 3;
+        assert!(verify(&g, &bad).is_err());
+        assert!(verify(&g, &[0, 0]).is_err());
+    }
+}

@@ -1,0 +1,338 @@
+//! **TreeContraction** (§3, Theorem 4.7).
+//!
+//! Each phase: sample priorities; `f_rho(v)` = the neighbor of `v` with the
+//! lowest priority; contract the weakly connected components of the
+//! functional graph H induced by `f_rho`.  Components halve each phase
+//! (Lemma 4.3: every cluster has ≥ 2 vertices), so `O(log n)` phases.
+//!
+//! Resolving H's components (Lemma 4.6: every weak component terminates in
+//! one 2-cycle) has two implementations, matching Theorem 4.7:
+//!  * **pointer jumping** — `O(log max d(v)) = O(log log n)` w.h.p. rounds
+//!    of squaring (`f ← f ∘ f`), each one MPC round;
+//!  * **distributed hash table** — publish `f` (O(n) writes), then every
+//!    vertex walks its chain in a single round (`O(d(v))` reads).
+
+use super::common::{contract_mpc, Priorities};
+use super::contraction_loop::{self, LoopOptions, PhaseOutcome};
+use super::{CcAlgorithm, CcResult, RunOptions};
+use crate::graph::{Graph, Vertex};
+use crate::mpc::{Dht, Simulator};
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TreeContraction {
+    /// Use the §2.1 DHT extension (Theorem 4.7 second claim).
+    pub use_dht: bool,
+}
+
+/// Build `f_rho`: lowest-priority neighbor, or self for isolated vertices.
+/// One MPC round (each edge sends both endpoint priorities).
+pub fn build_pointers(g: &Graph, rho: &Priorities, sim: &mut Simulator) -> Vec<Vertex> {
+    // messages: (v, (rho[u], u)) for each edge both ways; per-key min fold
+    // (self excluded: f_rho(v) picks from N(v) \ {v}); isolated vertices
+    // keep the (MAX, self) sentinel and thus point at themselves.
+    let n = g.num_vertices();
+    let mut out: Vec<(u32, u32)> = (0..n as u32).map(|v| (u32::MAX, v)).collect();
+    let msgs = g.edges().iter().flat_map(|&(u, v)| {
+        [
+            (u as u64, (rho.rho[v as usize], v)),
+            (v as u64, (rho.rho[u as usize], u)),
+        ]
+    });
+    sim.round_fold("tc/pointers", &mut out, msgs, |a, b| a.min(b));
+    out.into_iter().map(|(_, target)| target).collect()
+}
+
+/// Resolve roots by pointer jumping (squaring); each step is one MPC round
+/// (vertex v asks machine of `f(v)` for `f(f(v))`).  Returns canonical
+/// (minimum-of-2-cycle) roots and the number of jump rounds used.
+pub fn roots_by_jumping(f0: &[Vertex], sim: &mut Simulator) -> (Vec<Vertex>, u32) {
+    let n = f0.len();
+    let mut cur: Vec<Vertex> = f0.to_vec();
+    let mut rounds = 0u32;
+    loop {
+        // one squaring step as an MPC round: key = cur[v], value = v
+        let msgs: Vec<(u64, u32)> = (0..n).map(|v| (cur[v] as u64, v as u32)).collect();
+        let next_pairs = sim.round("tc/jump", msgs, |key, group| {
+            // machine owning `key` knows cur[key]; answers every requester
+            let target = cur[key as usize];
+            group.iter().map(|&v| (v, target)).collect::<Vec<_>>()
+        });
+        let mut next = cur.clone();
+        for (v, t) in next_pairs {
+            next[v as usize] = t;
+        }
+        rounds += 1;
+        if next == cur {
+            break;
+        }
+        cur = next;
+        if rounds > 2 * (usize::BITS - n.leading_zeros()) {
+            break; // safety: cannot exceed log2(n) squarings + slack
+        }
+    }
+    // canonical root: min of the terminal 2-cycle = min(stable, f0[stable])
+    let roots = (0..n)
+        .map(|v| {
+            let a = cur[v];
+            a.min(f0[a as usize])
+        })
+        .collect();
+    (roots, rounds)
+}
+
+/// Resolve roots with the DHT: publish `f`, then walk each chain until the
+/// 2-cycle is detected.  One logical round; `Σ d(v)` reads charged.
+pub fn roots_by_dht(f0: &[Vertex], sim: &mut Simulator, dht: &mut Dht) -> Vec<Vertex> {
+    let n = f0.len();
+    dht.reset();
+    for (v, &t) in f0.iter().enumerate() {
+        dht.put(v as u64, t as u64);
+    }
+    dht.publish();
+    // The publish is the write half of a round; charge it on a round record.
+    let msgs: Vec<(u64, u32)> = (0..n).map(|v| (v as u64, 0u32)).collect();
+    let _: Vec<()> = sim.round("tc/dht-walk", msgs, |_, _| vec![]);
+    let mut roots = vec![0 as Vertex; n];
+    for v in 0..n {
+        let mut prev = v as u64;
+        let mut cur = dht.get(prev).unwrap();
+        loop {
+            let next = dht.get(cur).unwrap();
+            if next == prev {
+                break; // 2-cycle {prev, cur}
+            }
+            prev = cur;
+            cur = next;
+        }
+        roots[v] = prev.min(cur) as Vertex;
+    }
+    let (reads, writes) = dht.take_counters();
+    sim.charge_dht(reads, writes);
+    roots
+}
+
+/// Max pointer-chain depth `max_v d(v)` (Lemma 4.5 diagnostics).
+pub fn max_chain_depth(f: &[Vertex]) -> u32 {
+    let n = f.len();
+    let mut depth = vec![u32::MAX; n];
+    let mut best = 0;
+    for v in 0..n {
+        // walk with a visited stack until a known depth or a 2-cycle
+        let mut stack = Vec::new();
+        let mut x = v;
+        loop {
+            if depth[x] != u32::MAX {
+                break;
+            }
+            // 2-cycle detection: f(f(x)) == x
+            let fx = f[x] as usize;
+            if f[fx] as usize == x {
+                depth[x] = 0;
+                if depth[fx] == u32::MAX {
+                    depth[fx] = 0;
+                }
+                break;
+            }
+            stack.push(x);
+            x = fx;
+            if stack.len() > n {
+                unreachable!("pointer walk exceeded n — not a functional graph");
+            }
+        }
+        while let Some(y) = stack.pop() {
+            depth[y] = depth[f[y] as usize].saturating_add(1);
+        }
+        best = best.max(depth[v]);
+    }
+    best
+}
+
+impl CcAlgorithm for TreeContraction {
+    fn name(&self) -> &'static str {
+        if self.use_dht {
+            "tree-contraction+dht"
+        } else {
+            "tree-contraction"
+        }
+    }
+
+    fn run(
+        &self,
+        g: &Graph,
+        sim: &mut Simulator,
+        rng: &mut Rng,
+        opts: &RunOptions,
+    ) -> CcResult {
+        let loop_opts = LoopOptions {
+            finisher_threshold: opts.finisher_threshold,
+            prune_isolated: opts.prune_isolated,
+            max_phases: opts.max_phases,
+        };
+        let use_dht = self.use_dht;
+        let mut dht = Dht::new();
+        contraction_loop::run(g, sim, rng, loop_opts, move |cur, sim, rng, _phase| {
+            let rho = Priorities::sample(cur.num_vertices(), rng);
+            let f = build_pointers(cur, &rho, sim);
+            let roots = if use_dht {
+                roots_by_dht(&f, sim, &mut dht)
+            } else {
+                roots_by_jumping(&f, sim).0
+            };
+            let (contracted, node_map) = contract_mpc(sim, cur, &roots);
+            PhaseOutcome {
+                contracted,
+                node_map,
+            }
+        })
+    }
+}
+
+/// Reference (non-MPC) root computation used by tests: weak components of
+/// the functional graph via union-find.
+pub fn roots_reference(f: &[Vertex]) -> Vec<Vertex> {
+    let mut dsu = crate::util::dsu::DisjointSet::new(f.len());
+    for (v, &t) in f.iter().enumerate() {
+        dsu.union(v as u32, t);
+    }
+    dsu.canonical_labels()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cc::oracle;
+    use crate::graph::generators;
+    use crate::mpc::MpcConfig;
+
+    fn sim() -> Simulator {
+        Simulator::new(MpcConfig {
+            machines: 8,
+            space_per_machine: None,
+            threads: 1,
+        })
+    }
+
+    #[test]
+    fn pointers_choose_min_priority_neighbor() {
+        let g = generators::path(4);
+        let rho = Priorities {
+            rho: vec![2, 0, 3, 1],
+            inv: vec![1, 3, 0, 2],
+        };
+        let mut s = sim();
+        let f = build_pointers(&g, &rho, &mut s);
+        // f(0)=1 (prio 0); f(1)=0 (only smaller-prio option among {0,2} is 0);
+        // f(2)=1 (prio 0 beats prio 1 of v3); f(3)=2 (its only neighbor)
+        assert_eq!(f, vec![1, 0, 1, 2]);
+    }
+
+    #[test]
+    fn jumping_matches_reference_partition() {
+        let mut rng = Rng::new(1);
+        for seed in 0..5u64 {
+            let g = generators::gnp(200, 0.015, &mut Rng::new(seed + 10));
+            let rho = Priorities::sample(200, &mut rng);
+            let mut s = sim();
+            let f = build_pointers(&g, &rho, &mut s);
+            let (roots, _) = roots_by_jumping(&f, &mut s);
+            let want = roots_reference(&f);
+            // same partition: roots equal iff reference labels equal
+            for a in 0..200 {
+                for b in (a + 1)..200 {
+                    assert_eq!(
+                        roots[a] == roots[b],
+                        want[a] == want[b],
+                        "seed {seed} pair ({a},{b})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dht_matches_jumping() {
+        let mut rng = Rng::new(2);
+        let g = generators::gnp(150, 0.03, &mut Rng::new(99));
+        let rho = Priorities::sample(150, &mut rng);
+        let mut s = sim();
+        let f = build_pointers(&g, &rho, &mut s);
+        let (a, _) = roots_by_jumping(&f, &mut s);
+        let mut dht = Dht::new();
+        let b = roots_by_dht(&f, &mut s, &mut dht);
+        assert_eq!(a, b);
+        assert!(s.metrics.total_dht_ops() > 0);
+    }
+
+    #[test]
+    fn jump_rounds_are_log_of_depth() {
+        // chain f: v -> v-1 with a 2-cycle at the bottom
+        let n = 1024usize;
+        let mut f: Vec<Vertex> = (0..n as u32).map(|v| v.saturating_sub(1)).collect();
+        f[0] = 1;
+        let mut s = sim();
+        let (roots, rounds) = roots_by_jumping(&f, &mut s);
+        assert!(roots.iter().all(|&r| r == 0));
+        assert!(rounds <= 12, "rounds {rounds} for depth {n}"); // log2(1024)=10 + slack
+    }
+
+    #[test]
+    fn max_chain_depth_on_chain() {
+        let mut f: Vec<Vertex> = (0..10u32).map(|v| v.saturating_sub(1)).collect();
+        f[0] = 1;
+        // depth: v=0,1 are on the cycle (0); v=2 -> 1 step to cycle...
+        assert_eq!(max_chain_depth(&f), 8);
+    }
+
+    fn check(algo: TreeContraction, g: &Graph, seed: u64) -> CcResult {
+        let mut s = sim();
+        let mut rng = Rng::new(seed);
+        let res = algo.run(g, &mut s, &mut rng, &RunOptions::default());
+        assert!(res.completed);
+        oracle::verify(g, &res.labels).unwrap();
+        res
+    }
+
+    #[test]
+    fn correct_on_zoo_both_variants() {
+        for use_dht in [false, true] {
+            let algo = TreeContraction { use_dht };
+            check(algo, &generators::path(40), 1);
+            check(algo, &generators::cycle(25), 2);
+            check(algo, &generators::star(30), 3);
+            check(algo, &generators::grid(6, 7), 4);
+            check(algo, &Graph::empty(5), 5);
+            check(
+                algo,
+                &generators::complete(10).disjoint_union(generators::path(11)),
+                6,
+            );
+        }
+    }
+
+    #[test]
+    fn correct_on_random_graphs() {
+        for seed in 0..4 {
+            let g = generators::gnp(300, 0.012, &mut Rng::new(seed + 30));
+            check(TreeContraction { use_dht: false }, &g, seed);
+            check(TreeContraction { use_dht: true }, &g, seed + 100);
+        }
+    }
+
+    #[test]
+    fn phases_halve_vertices() {
+        // Lemma 4.3: every cluster has >= 2 vertices, n halves per phase.
+        let g = generators::path(256);
+        let res = check(TreeContraction { use_dht: true }, &g, 7);
+        for w in res.nodes_per_phase.windows(2) {
+            if w[0] > 1 {
+                assert!(
+                    w[1] <= w[0].div_ceil(2),
+                    "nodes did not halve: {:?}",
+                    res.nodes_per_phase
+                );
+            }
+        }
+        assert!(res.phases as usize <= 10, "phases {}", res.phases); // log2(256)=8 + slack
+    }
+}

@@ -1,0 +1,208 @@
+//! **Two-Phase** [KLM+14] — alternating large-star / small-star edge
+//! rewriting until the graph becomes a star forest rooted at component
+//! minima.
+//!
+//! * `large-star(u)`: connect every strictly larger neighbor of `u` to
+//!   `m(u) = min(Γ(u) ∪ {u})`;
+//! * `small-star(u)`: connect `u` and its not-larger neighbors to `m(u)`.
+//!
+//! Following the paper's §6 note on its own implementation, one *phase* is
+//! a sequence of large-star operations (to convergence) followed by one
+//! small-star — "It allows to execute a sequence of large-star operations
+//! followed by a small-star operation in constant number of rounds and
+//! thus we count this whole sequence as one phase."  Each individual star
+//! operation is still one shuffle round in the metrics.
+//!
+//! The vertex set never shrinks (no contraction), so the §6 small-graph
+//! finisher/pruning optimizations do not apply — exactly as the paper
+//! notes.
+
+use super::{CcAlgorithm, CcResult, RunOptions};
+use crate::graph::{Graph, Vertex};
+use crate::mpc::Simulator;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TwoPhase;
+
+/// One star operation as an MPC round.  `large == true` emits edges for
+/// strictly larger neighbors only; otherwise for not-larger neighbors plus
+/// the center itself.
+pub fn star_round(g: &Graph, large: bool, sim: &mut Simulator) -> Graph {
+    let n = g.num_vertices();
+    let msgs: Vec<(u64, u32)> = g
+        .edges()
+        .iter()
+        .flat_map(|&(u, v)| [(u as u64, v), (v as u64, u)])
+        .collect();
+    let label = if large { "two-phase/large-star" } else { "two-phase/small-star" };
+    let edges: Vec<(u32, u32)> = sim.round(label, msgs, |key, nbrs| {
+        let u = key as u32;
+        let m = nbrs.iter().copied().min().unwrap().min(u);
+        let mut out = Vec::new();
+        if large {
+            for &w in nbrs.iter() {
+                if w > u {
+                    out.push((w, m));
+                }
+            }
+        } else {
+            for &w in nbrs.iter() {
+                if w <= u {
+                    out.push((w, m));
+                }
+            }
+            out.push((u, m));
+        }
+        out
+    });
+    Graph::from_edges(n, edges)
+}
+
+impl CcAlgorithm for TwoPhase {
+    fn name(&self) -> &'static str {
+        "two-phase"
+    }
+
+    fn run(
+        &self,
+        g: &Graph,
+        sim: &mut Simulator,
+        _rng: &mut Rng,
+        opts: &RunOptions,
+    ) -> CcResult {
+        let n = g.num_vertices();
+        let mut cur = g.clone();
+        let mut phases = 0u32;
+        let mut completed = true;
+        let mut edges_per_phase = Vec::new();
+        let mut nodes_per_phase = Vec::new();
+
+        loop {
+            edges_per_phase.push(cur.num_edges() as u64);
+            nodes_per_phase.push(n as u64);
+            if cur.num_edges() == 0 {
+                break;
+            }
+            if phases >= opts.max_phases {
+                completed = false;
+                break;
+            }
+
+            // one phase: large-star to convergence, then one small-star
+            let mut changed_any = false;
+            loop {
+                let next = star_round(&cur, true, sim);
+                let stable = next == cur;
+                cur = next;
+                if stable {
+                    break;
+                }
+                changed_any = true;
+            }
+            let next = star_round(&cur, false, sim);
+            let small_changed = next != cur;
+            cur = next;
+            phases += 1;
+            if !changed_any && !small_changed {
+                break; // fully converged: star forest
+            }
+        }
+
+        // At convergence the graph is a star forest rooted at component
+        // minima (or empty for already-finished components): every vertex's
+        // minimum closed neighbor is its component minimum.
+        let labels: Vec<Vertex> = if completed {
+            let csr = crate::graph::Csr::build(&cur);
+            (0..n as u32)
+                .map(|v| {
+                    csr.neighbors(v)
+                        .iter()
+                        .copied()
+                        .chain(std::iter::once(v))
+                        .min()
+                        .unwrap()
+                })
+                .collect()
+        } else {
+            super::oracle::components(g)
+        };
+
+        CcResult {
+            labels,
+            phases,
+            completed,
+            edges_per_phase,
+            nodes_per_phase,
+            metrics: std::mem::take(&mut sim.metrics),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cc::oracle;
+    use crate::graph::generators;
+    use crate::mpc::MpcConfig;
+
+    fn sim() -> Simulator {
+        Simulator::new(MpcConfig {
+            machines: 4,
+            space_per_machine: None,
+            threads: 1,
+        })
+    }
+
+    #[test]
+    fn large_star_hangs_bigger_neighbors_on_min() {
+        // star with center 2 over {0,1,2,3}: edges (2,0),(2,1),(2,3)
+        let g = Graph::from_edges(4, vec![(2, 0), (2, 1), (2, 3)]);
+        let mut s = sim();
+        let r = star_round(&g, true, &mut s);
+        // center 2: m = 0; larger neighbor 3 -> (3,0); neighbors 0,1 emit
+        // for their own stars: 0 has nbr {2}: 2>0 -> (2,0); 1: (2,1)->m=1
+        assert!(r.edges().contains(&(0, 3)));
+        assert!(r.edges().contains(&(0, 2)));
+    }
+
+    fn check(g: &Graph) -> CcResult {
+        let mut s = sim();
+        let mut rng = Rng::new(1);
+        let res = TwoPhase.run(g, &mut s, &mut rng, &RunOptions::default());
+        assert!(res.completed, "did not converge");
+        oracle::verify(g, &res.labels).unwrap();
+        res
+    }
+
+    #[test]
+    fn correct_on_zoo() {
+        check(&generators::path(25));
+        check(&generators::cycle(16));
+        check(&generators::star(30));
+        check(&generators::complete(9));
+        check(&generators::grid(4, 6));
+        check(&Graph::empty(5));
+        check(&generators::path(12).disjoint_union(generators::complete(4)));
+    }
+
+    #[test]
+    fn correct_on_random_graphs() {
+        for seed in 0..4 {
+            check(&generators::gnp(250, 0.015, &mut Rng::new(seed + 70)));
+        }
+    }
+
+    #[test]
+    fn star_input_converges_immediately() {
+        let res = check(&generators::star(50));
+        assert!(res.phases <= 2, "phases {}", res.phases);
+    }
+
+    #[test]
+    fn phase_count_moderate_on_random_graph() {
+        let g = generators::gnp_log_regime(800, 4.0, &mut Rng::new(3));
+        let res = check(&g);
+        assert!(res.phases <= 8, "phases {}", res.phases);
+    }
+}

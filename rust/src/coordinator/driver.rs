@@ -1,0 +1,213 @@
+//! The run driver: configuration -> simulator -> algorithm -> report.
+
+use super::report::Report;
+use crate::cc::{self, RunOptions};
+use crate::graph::Graph;
+use crate::mpc::{MpcConfig, Simulator};
+use crate::runtime::ShardExecutor;
+use crate::util::rng::Rng;
+
+/// Full configuration of one run.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    /// Algorithm CLI name (see [`cc::by_name`]).
+    pub algorithm: String,
+    pub seed: u64,
+    pub machines: usize,
+    /// Simulation threads (not a model parameter).
+    pub threads: usize,
+    /// §6 small-graph finisher threshold in edges (0 = off).
+    pub finisher_threshold: usize,
+    /// §6 isolated-node pruning.
+    pub prune_isolated: bool,
+    pub max_phases: u32,
+    /// Hash-To-Min state guard (total stored ids; 0 = off).
+    pub state_cap: u64,
+    /// Use the compiled XLA dense backend when the graph fits a shard.
+    pub use_xla: bool,
+    /// Cross-check the labels against the sequential oracle.
+    pub verify: bool,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            algorithm: "lc".into(),
+            seed: 42,
+            machines: 16,
+            threads: std::thread::available_parallelism()
+                .map(|n| n.get().min(16))
+                .unwrap_or(4),
+            finisher_threshold: 0,
+            prune_isolated: true,
+            max_phases: 200,
+            state_cap: 0,
+            use_xla: false,
+            verify: false,
+        }
+    }
+}
+
+/// Owns the (optionally XLA-backed) execution environment for runs.
+pub struct Driver {
+    cfg: RunConfig,
+    executor: Option<ShardExecutor>,
+}
+
+impl Driver {
+    /// Build a driver; when `use_xla` is set, loads + compiles the
+    /// artifacts once (they are reused across runs and phases).
+    pub fn new(cfg: RunConfig) -> Driver {
+        let executor = if cfg.use_xla {
+            match crate::runtime::try_default_executor() {
+                Ok(e) => {
+                    eprintln!(
+                        "[driver] XLA dense backend ready: platform={}, shard={}",
+                        e.platform(),
+                        e.shard_size()
+                    );
+                    Some(e)
+                }
+                Err(e) => {
+                    eprintln!(
+                        "[driver] WARNING: --use-xla requested but artifacts unavailable \
+                         ({e}); falling back to the MPC path. Run `make artifacts`."
+                    );
+                    None
+                }
+            }
+        } else {
+            None
+        };
+        Driver { cfg, executor }
+    }
+
+    pub fn config(&self) -> &RunConfig {
+        &self.cfg
+    }
+
+    pub fn has_xla(&self) -> bool {
+        self.executor.is_some()
+    }
+
+    /// Run the configured algorithm on `g`, returning the full report.
+    pub fn run(&self, g: &Graph) -> Report {
+        self.run_named(g, "graph")
+    }
+
+    /// Run with a dataset name recorded in the report.
+    pub fn run_named(&self, g: &Graph, dataset: &str) -> Report {
+        self.run_with_seed(g, dataset, self.cfg.seed)
+    }
+
+    fn run_with_seed(&self, g: &Graph, dataset: &str, seed: u64) -> Report {
+        let algo = cc::by_name(&self.cfg.algorithm);
+        let mut sim = Simulator::new(MpcConfig {
+            machines: self.cfg.machines,
+            space_per_machine: None,
+            threads: self.cfg.threads,
+        });
+        let mut rng = Rng::new(seed);
+        let xla_before = self.executor.as_ref().map(|e| e.calls.get()).unwrap_or(0);
+        let opts = RunOptions {
+            finisher_threshold: self.cfg.finisher_threshold,
+            prune_isolated: self.cfg.prune_isolated,
+            max_phases: self.cfg.max_phases,
+            state_cap: self.cfg.state_cap,
+            dense_backend: self
+                .executor
+                .as_ref()
+                .map(|e| e as &dyn cc::backend::DenseBackend),
+        };
+        let t0 = std::time::Instant::now();
+        let res = algo.run(g, &mut sim, &mut rng, &opts);
+        let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+        let mut report = Report::from_result(
+            algo.name(),
+            dataset,
+            g.num_vertices(),
+            g.num_edges(),
+            &res,
+            wall_ms,
+        );
+        report.xla_calls =
+            self.executor.as_ref().map(|e| e.calls.get()).unwrap_or(0) - xla_before;
+        if self.cfg.verify {
+            report.verified = Some(cc::oracle::verify(g, &res.labels).is_ok());
+        }
+        report
+    }
+
+    /// Median-of-`k`-seeds wall time protocol (§6: "we have taken a median
+    /// from three runs").  Returns the median-wall-time report.
+    pub fn run_median(&self, g: &Graph, dataset: &str, k: usize) -> Report {
+        assert!(k >= 1);
+        let mut reports: Vec<Report> = (0..k)
+            .map(|i| {
+                self.run_with_seed(g, dataset, self.cfg.seed.wrapping_add(i as u64 * 1000))
+            })
+            .collect();
+        reports.sort_by(|a, b| a.wall_ms.partial_cmp(&b.wall_ms).unwrap());
+        reports.swap_remove(k / 2)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn driver_runs_and_reports() {
+        let g = generators::gnp(300, 0.01, &mut Rng::new(7));
+        let cfg = RunConfig {
+            verify: true,
+            ..Default::default()
+        };
+        let report = Driver::new(cfg).run_named(&g, "gnp300");
+        assert!(report.completed);
+        assert_eq!(report.verified, Some(true));
+        assert_eq!(report.n, 300);
+        assert!(report.rounds >= report.phases as usize);
+    }
+
+    #[test]
+    fn driver_all_algorithms_agree() {
+        let g = generators::gnp(150, 0.02, &mut Rng::new(8));
+        let want = crate::cc::oracle::components(&g);
+        for name in crate::cc::ALL_ALGORITHMS {
+            let cfg = RunConfig {
+                algorithm: name.to_string(),
+                ..Default::default()
+            };
+            let d = Driver::new(cfg);
+            let algo = cc::by_name(name);
+            let mut sim = Simulator::new(MpcConfig::default());
+            let mut rng = Rng::new(1);
+            let res = algo.run(&g, &mut sim, &mut rng, &RunOptions::default());
+            assert_eq!(res.labels, want, "{name}");
+            drop(d);
+        }
+    }
+
+    #[test]
+    fn median_of_three() {
+        let g = generators::path(100);
+        let d = Driver::new(RunConfig::default());
+        let r = d.run_median(&g, "path", 3);
+        assert!(r.completed);
+        assert_eq!(r.num_components, 1);
+    }
+
+    #[test]
+    fn finisher_reduces_phases() {
+        let g = generators::path(2000);
+        let mut cfg = RunConfig::default();
+        let baseline = Driver::new(cfg.clone()).run(&g);
+        cfg.finisher_threshold = 500;
+        let with_fin = Driver::new(cfg).run(&g);
+        assert!(with_fin.phases <= baseline.phases);
+        assert!(with_fin.completed);
+    }
+}

@@ -1,0 +1,14 @@
+//! Layer-3 coordinator: configuration, run driver, streaming shard
+//! pipeline, and reports.
+//!
+//! This is the deployment surface of the system: the `lcc` binary's
+//! subcommands are thin wrappers over [`Driver`] (single runs and table
+//! sweeps) and [`pipeline`] (the streaming scale-out path).
+
+pub mod driver;
+pub mod pipeline;
+pub mod report;
+
+pub use driver::{Driver, RunConfig};
+pub use pipeline::{PipelineConfig, PipelineResult, PipelineStats};
+pub use report::Report;

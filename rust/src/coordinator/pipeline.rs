@@ -1,0 +1,227 @@
+//! Streaming shard pipeline: the scale-out ingestion path.
+//!
+//! Mirrors the paper's deployment shape at laptop scale: the edge stream is
+//! partitioned over shard workers (hash sharding), each worker performs a
+//! *local contraction* of its partition (streaming union-find — the same
+//! primitive as the §6 finisher), and the much smaller **summary graph**
+//! (one spanning edge per worker-local merge) is handed to a global
+//! finisher — by default the paper's LocalContraction running on the MPC
+//! simulator, with the compiled XLA dense backend when it fits a shard.
+//!
+//! Backpressure is real: workers consume from bounded channels; a slow
+//! worker stalls the generator (counted in [`PipelineStats`]).
+
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+
+use crate::graph::{Graph, Vertex};
+use crate::util::dsu::DisjointSet;
+
+/// Pipeline configuration.
+#[derive(Debug, Clone)]
+pub struct PipelineConfig {
+    pub num_workers: usize,
+    /// Edges per chunk sent over a channel.
+    pub chunk_size: usize,
+    /// Bounded channel capacity, in chunks (the backpressure knob).
+    pub channel_capacity: usize,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig {
+            num_workers: std::thread::available_parallelism()
+                .map(|n| n.get().clamp(2, 8))
+                .unwrap_or(4),
+            chunk_size: 64 * 1024,
+            channel_capacity: 4,
+        }
+    }
+}
+
+/// Observability counters for a pipeline run.
+#[derive(Debug, Clone, Default)]
+pub struct PipelineStats {
+    pub edges_streamed: u64,
+    pub chunks: u64,
+    /// Times the generator found a worker queue full and had to wait.
+    pub backpressure_stalls: u64,
+    pub per_worker_edges: Vec<u64>,
+    /// Summary-graph (spanning) edges emitted by all workers.
+    pub summary_edges: u64,
+    pub generate_ms: f64,
+    pub merge_ms: f64,
+}
+
+/// Result: canonical labels plus stats.
+pub struct PipelineResult {
+    pub labels: Vec<Vertex>,
+    pub stats: PipelineStats,
+    /// The summary graph, exposed so callers can run a paper algorithm on
+    /// it (the end-to-end example feeds it to LocalContraction + XLA).
+    pub summary: Graph,
+}
+
+/// Run the pipeline: stream `edges` over `n` vertices through shard-local
+/// contraction, returning the summary graph and per-worker stats.
+///
+/// The final global merge is left to the caller (see
+/// [`merge_summary`] for the plain union-find finisher).
+pub fn run<I>(n: usize, edges: I, cfg: &PipelineConfig) -> PipelineResult
+where
+    I: IntoIterator<Item = (Vertex, Vertex)>,
+{
+    let w = cfg.num_workers.max(1);
+    let mut stats = PipelineStats {
+        per_worker_edges: vec![0; w],
+        ..Default::default()
+    };
+
+    // worker channels + threads
+    let mut senders: Vec<SyncSender<Vec<(Vertex, Vertex)>>> = Vec::with_capacity(w);
+    let mut handles = Vec::with_capacity(w);
+    for _ in 0..w {
+        let (tx, rx): (_, Receiver<Vec<(Vertex, Vertex)>>) =
+            sync_channel(cfg.channel_capacity.max(1));
+        senders.push(tx);
+        handles.push(std::thread::spawn(move || {
+            // Shard-local contraction: streaming union-find over the shard's
+            // edges; emits one spanning edge per successful union.
+            let mut dsu = DisjointSet::new(n);
+            let mut summary: Vec<(Vertex, Vertex)> = Vec::new();
+            let mut edges_seen = 0u64;
+            while let Ok(chunk) = rx.recv() {
+                for (u, v) in chunk {
+                    edges_seen += 1;
+                    if dsu.union(u, v) {
+                        summary.push((u, v));
+                    }
+                }
+            }
+            (summary, edges_seen)
+        }));
+    }
+
+    // generator: route chunks by min-endpoint hash, with backpressure
+    let t0 = std::time::Instant::now();
+    let mut buffers: Vec<Vec<(Vertex, Vertex)>> = vec![Vec::new(); w];
+    let send_chunk = |wid: usize,
+                          chunk: Vec<(Vertex, Vertex)>,
+                          stalls: &mut u64| {
+        let mut pending = chunk;
+        loop {
+            match senders[wid].try_send(pending) {
+                Ok(()) => break,
+                Err(TrySendError::Full(back)) => {
+                    *stalls += 1;
+                    pending = back;
+                    std::thread::yield_now();
+                    // blocking send after one counted stall
+                    senders[wid].send(pending).expect("worker died");
+                    break;
+                }
+                Err(TrySendError::Disconnected(_)) => panic!("worker died"),
+            }
+        }
+    };
+    for (u, v) in edges {
+        let wid =
+            (crate::util::rng::splitmix64(u.min(v) as u64) % w as u64) as usize;
+        stats.edges_streamed += 1;
+        stats.per_worker_edges[wid] += 1;
+        buffers[wid].push((u, v));
+        if buffers[wid].len() >= cfg.chunk_size {
+            let chunk = std::mem::take(&mut buffers[wid]);
+            stats.chunks += 1;
+            send_chunk(wid, chunk, &mut stats.backpressure_stalls);
+        }
+    }
+    for (wid, buf) in buffers.into_iter().enumerate() {
+        if !buf.is_empty() {
+            stats.chunks += 1;
+            send_chunk(wid, buf, &mut stats.backpressure_stalls);
+        }
+    }
+    drop(senders); // close channels
+    stats.generate_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    // collect summaries
+    let t1 = std::time::Instant::now();
+    let mut summary_edges: Vec<(Vertex, Vertex)> = Vec::new();
+    for h in handles {
+        let (summary, _edges_seen) = h.join().expect("worker panicked");
+        summary_edges.extend(summary);
+    }
+    stats.summary_edges = summary_edges.len() as u64;
+    let summary = Graph::from_edges(n, summary_edges);
+    stats.merge_ms = t1.elapsed().as_secs_f64() * 1e3;
+
+    PipelineResult {
+        labels: Vec::new(), // filled by the caller's merge step
+        stats,
+        summary,
+    }
+}
+
+/// Plain global finisher: union-find over the summary graph.
+pub fn merge_summary(summary: &Graph) -> Vec<Vertex> {
+    crate::cc::oracle::components(summary)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::util::rng::Rng;
+
+    fn cfg(workers: usize) -> PipelineConfig {
+        PipelineConfig {
+            num_workers: workers,
+            chunk_size: 128,
+            channel_capacity: 2,
+        }
+    }
+
+    #[test]
+    fn pipeline_matches_oracle() {
+        let g = generators::gnp(2000, 0.002, &mut Rng::new(3));
+        let res = run(2000, g.edges().iter().copied(), &cfg(4));
+        let labels = merge_summary(&res.summary);
+        assert_eq!(labels, crate::cc::oracle::components(&g));
+        assert_eq!(res.stats.edges_streamed, g.num_edges() as u64);
+    }
+
+    #[test]
+    fn summary_is_much_smaller_than_input_on_dense_graph() {
+        let g = generators::complete(300); // ~45k edges, 1 component
+        let res = run(300, g.edges().iter().copied(), &cfg(4));
+        // spanning edges per worker <= n-1 each
+        assert!(res.stats.summary_edges < 4 * 300);
+        assert!(res.stats.summary_edges >= 299);
+        let labels = merge_summary(&res.summary);
+        assert!(labels.iter().all(|&l| l == 0));
+    }
+
+    #[test]
+    fn single_worker_works() {
+        let g = generators::path(500);
+        let res = run(500, g.edges().iter().copied(), &cfg(1));
+        assert_eq!(merge_summary(&res.summary), crate::cc::oracle::components(&g));
+    }
+
+    #[test]
+    fn stats_account_all_edges() {
+        let g = generators::grid(30, 30);
+        let res = run(900, g.edges().iter().copied(), &cfg(3));
+        let per_worker: u64 = res.stats.per_worker_edges.iter().sum();
+        assert_eq!(per_worker, g.num_edges() as u64);
+        assert!(res.stats.chunks >= 1);
+    }
+
+    #[test]
+    fn empty_stream() {
+        let res = run(10, std::iter::empty(), &cfg(2));
+        assert_eq!(res.stats.edges_streamed, 0);
+        let labels = merge_summary(&res.summary);
+        assert_eq!(labels, (0..10u32).collect::<Vec<_>>());
+    }
+}

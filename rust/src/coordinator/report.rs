@@ -1,0 +1,166 @@
+//! Run reports: the JSON/text record every harness run emits.
+
+use crate::cc::CcResult;
+use crate::util::json::Json;
+
+/// Everything a single algorithm run produced.
+#[derive(Debug, Clone)]
+pub struct Report {
+    pub algorithm: String,
+    pub dataset: String,
+    pub n: usize,
+    pub m: usize,
+    pub phases: u32,
+    pub rounds: usize,
+    pub completed: bool,
+    pub num_components: usize,
+    pub largest_component: usize,
+    pub edges_per_phase: Vec<u64>,
+    pub nodes_per_phase: Vec<u64>,
+    pub total_shuffle_bytes: u64,
+    pub max_round_bytes: u64,
+    pub dht_ops: u64,
+    pub wall_ms: f64,
+    /// Some(true/false) when the oracle check ran.
+    pub verified: Option<bool>,
+    /// Dense-backend executions (XLA artifact calls), if used.
+    pub xla_calls: u64,
+}
+
+impl Report {
+    pub fn from_result(
+        algorithm: &str,
+        dataset: &str,
+        n: usize,
+        m: usize,
+        res: &CcResult,
+        wall_ms: f64,
+    ) -> Report {
+        let mut labels = res.labels.clone();
+        labels.sort_unstable();
+        let mut largest = 0usize;
+        let mut run = 0usize;
+        let mut prev = None;
+        for &l in &labels {
+            if Some(l) == prev {
+                run += 1;
+            } else {
+                run = 1;
+                prev = Some(l);
+            }
+            largest = largest.max(run);
+        }
+        Report {
+            algorithm: algorithm.to_string(),
+            dataset: dataset.to_string(),
+            n,
+            m,
+            phases: res.phases,
+            rounds: res.metrics.num_rounds(),
+            completed: res.completed,
+            num_components: res.num_components(),
+            largest_component: largest,
+            edges_per_phase: res.edges_per_phase.clone(),
+            nodes_per_phase: res.nodes_per_phase.clone(),
+            total_shuffle_bytes: res.metrics.total_bytes(),
+            max_round_bytes: res.metrics.max_round_bytes(),
+            dht_ops: res.metrics.total_dht_ops(),
+            wall_ms,
+            verified: None,
+            xla_calls: 0,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("algorithm", self.algorithm.as_str())
+            .set("dataset", self.dataset.as_str())
+            .set("n", self.n)
+            .set("m", self.m)
+            .set("phases", u64::from(self.phases))
+            .set("rounds", self.rounds)
+            .set("completed", self.completed)
+            .set("num_components", self.num_components)
+            .set("largest_component", self.largest_component)
+            .set("edges_per_phase", self.edges_per_phase.clone())
+            .set("nodes_per_phase", self.nodes_per_phase.clone())
+            .set("total_shuffle_bytes", self.total_shuffle_bytes)
+            .set("max_round_bytes", self.max_round_bytes)
+            .set("dht_ops", self.dht_ops)
+            .set("wall_ms", self.wall_ms)
+            .set(
+                "verified",
+                match self.verified {
+                    None => Json::Null,
+                    Some(b) => Json::Bool(b),
+                },
+            )
+            .set("xla_calls", self.xla_calls)
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<22} {:>9} comps  {:>3} phases  {:>4} rounds  {:>12} shuffle-B  {:>9.1} ms{}{}",
+            format!("{}/{}", self.algorithm, self.dataset),
+            self.num_components,
+            self.phases,
+            self.rounds,
+            self.total_shuffle_bytes,
+            self.wall_ms,
+            if self.completed { "" } else { "  [INCOMPLETE]" },
+            match self.verified {
+                Some(true) => "  [verified]",
+                Some(false) => "  [VERIFY-FAILED]",
+                None => "",
+            },
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpc::Metrics;
+
+    fn dummy_result() -> CcResult {
+        CcResult {
+            labels: vec![0, 0, 0, 3, 3],
+            phases: 2,
+            completed: true,
+            edges_per_phase: vec![10, 1, 0],
+            nodes_per_phase: vec![5, 2, 2],
+            metrics: Metrics::new(),
+        }
+    }
+
+    #[test]
+    fn report_aggregates() {
+        let r = Report::from_result("lc", "test", 5, 10, &dummy_result(), 1.5);
+        assert_eq!(r.num_components, 2);
+        assert_eq!(r.largest_component, 3);
+        assert_eq!(r.phases, 2);
+        assert!(r.completed);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let r = Report::from_result("lc", "test", 5, 10, &dummy_result(), 1.5);
+        let j = r.to_json();
+        let parsed = crate::util::json::parse(&j.pretty()).unwrap();
+        assert_eq!(parsed.get("phases").unwrap().as_i64(), Some(2));
+        assert_eq!(parsed.get("algorithm").unwrap().as_str(), Some("lc"));
+        assert_eq!(
+            parsed.get("edges_per_phase").unwrap().as_arr().unwrap().len(),
+            3
+        );
+    }
+
+    #[test]
+    fn summary_flags_incomplete() {
+        let mut res = dummy_result();
+        res.completed = false;
+        let r = Report::from_result("htm", "big", 5, 10, &res, 0.1);
+        assert!(r.summary().contains("INCOMPLETE"));
+    }
+}

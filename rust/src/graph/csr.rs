@@ -1,0 +1,130 @@
+//! Compressed sparse row adjacency, built from an edge list.
+//!
+//! Used wherever per-vertex neighborhood iteration is the access pattern:
+//! BFS-based statistics, the dense-shard packer, and the single-machine
+//! reference implementations of the per-phase label computations.
+
+use super::edgelist::{Graph, Vertex};
+
+/// Symmetric CSR adjacency (each undirected edge appears in both rows).
+#[derive(Debug, Clone)]
+pub struct Csr {
+    offsets: Vec<usize>,
+    nbrs: Vec<Vertex>,
+}
+
+impl Csr {
+    pub fn build(g: &Graph) -> Csr {
+        let n = g.num_vertices();
+        let mut deg = vec![0usize; n + 1];
+        for &(u, v) in g.edges() {
+            deg[u as usize + 1] += 1;
+            deg[v as usize + 1] += 1;
+        }
+        for i in 0..n {
+            deg[i + 1] += deg[i];
+        }
+        let offsets = deg.clone();
+        let mut cursor = deg;
+        let mut nbrs = vec![0 as Vertex; offsets[n]];
+        for &(u, v) in g.edges() {
+            nbrs[cursor[u as usize]] = v;
+            cursor[u as usize] += 1;
+            nbrs[cursor[v as usize]] = u;
+            cursor[v as usize] += 1;
+        }
+        // Sort each row for deterministic iteration + binary-searchable rows.
+        let mut csr = Csr { offsets, nbrs };
+        for v in 0..n {
+            let (s, e) = (csr.offsets[v], csr.offsets[v + 1]);
+            csr.nbrs[s..e].sort_unstable();
+        }
+        csr
+    }
+
+    pub fn num_vertices(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    #[inline]
+    pub fn neighbors(&self, v: Vertex) -> &[Vertex] {
+        &self.nbrs[self.offsets[v as usize]..self.offsets[v as usize + 1]]
+    }
+
+    #[inline]
+    pub fn degree(&self, v: Vertex) -> usize {
+        self.offsets[v as usize + 1] - self.offsets[v as usize]
+    }
+
+    /// BFS from `src`; returns (distance array, farthest vertex).
+    /// Unreachable vertices get `u32::MAX`.
+    pub fn bfs(&self, src: Vertex) -> (Vec<u32>, Vertex) {
+        let n = self.num_vertices();
+        let mut dist = vec![u32::MAX; n];
+        let mut queue = std::collections::VecDeque::new();
+        dist[src as usize] = 0;
+        queue.push_back(src);
+        let mut far = src;
+        while let Some(v) = queue.pop_front() {
+            for &u in self.neighbors(v) {
+                if dist[u as usize] == u32::MAX {
+                    dist[u as usize] = dist[v as usize] + 1;
+                    if dist[u as usize] > dist[far as usize] {
+                        far = u;
+                    }
+                    queue.push_back(u);
+                }
+            }
+        }
+        (dist, far)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn path(n: usize) -> Graph {
+        Graph::from_edges(n, (1..n as u32).map(|v| (v - 1, v)).collect())
+    }
+
+    #[test]
+    fn neighbors_of_path() {
+        let csr = Csr::build(&path(4));
+        assert_eq!(csr.neighbors(0), &[1]);
+        assert_eq!(csr.neighbors(1), &[0, 2]);
+        assert_eq!(csr.neighbors(3), &[2]);
+        assert_eq!(csr.degree(1), 2);
+    }
+
+    #[test]
+    fn rows_are_sorted() {
+        let g = Graph::from_edges(5, vec![(0, 4), (0, 2), (0, 1), (0, 3)]);
+        let csr = Csr::build(&g);
+        assert_eq!(csr.neighbors(0), &[1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn bfs_distances_on_path() {
+        let csr = Csr::build(&path(5));
+        let (dist, far) = csr.bfs(0);
+        assert_eq!(dist, vec![0, 1, 2, 3, 4]);
+        assert_eq!(far, 4);
+    }
+
+    #[test]
+    fn bfs_unreachable_is_max() {
+        let g = Graph::from_edges(4, vec![(0, 1)]);
+        let csr = Csr::build(&g);
+        let (dist, _) = csr.bfs(0);
+        assert_eq!(dist[2], u32::MAX);
+        assert_eq!(dist[3], u32::MAX);
+    }
+
+    #[test]
+    fn empty_graph() {
+        let csr = Csr::build(&Graph::empty(3));
+        assert_eq!(csr.num_vertices(), 3);
+        assert_eq!(csr.neighbors(0), &[] as &[Vertex]);
+    }
+}

@@ -1,0 +1,223 @@
+//! Undirected edge-list graph representation.
+//!
+//! This is the wire format of the whole system: the MPC simulator shuffles
+//! edges, the contraction step rewrites them, and the generators emit them.
+//! Vertices are dense `u32` ids `0..n`; edges are stored canonically as
+//! `(min, max)` with no self-loops after [`Graph::normalize`].
+
+pub type Vertex = u32;
+
+/// An undirected graph as `n` vertex slots plus an edge list.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Graph {
+    n: usize,
+    edges: Vec<(Vertex, Vertex)>,
+}
+
+impl Graph {
+    /// Empty graph on `n` vertices.
+    pub fn empty(n: usize) -> Self {
+        assert!(n <= u32::MAX as usize, "vertex ids are u32");
+        Graph { n, edges: Vec::new() }
+    }
+
+    /// Build from raw edges; normalizes (canonical order, dedup, no loops).
+    pub fn from_edges(n: usize, edges: Vec<(Vertex, Vertex)>) -> Self {
+        let mut g = Graph { n, edges };
+        g.normalize();
+        g
+    }
+
+    /// Build without normalizing (for internal steps that guarantee shape).
+    pub fn from_edges_unchecked(n: usize, edges: Vec<(Vertex, Vertex)>) -> Self {
+        Graph { n, edges }
+    }
+
+    pub fn num_vertices(&self) -> usize {
+        self.n
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    pub fn edges(&self) -> &[(Vertex, Vertex)] {
+        &self.edges
+    }
+
+    pub fn into_edges(self) -> Vec<(Vertex, Vertex)> {
+        self.edges
+    }
+
+    pub fn add_edge(&mut self, u: Vertex, v: Vertex) {
+        debug_assert!((u as usize) < self.n && (v as usize) < self.n);
+        self.edges.push((u, v));
+    }
+
+    /// Canonicalize to `(min,max)`, drop self-loops, sort + dedup.
+    pub fn normalize(&mut self) {
+        for e in &mut self.edges {
+            assert!(
+                (e.0 as usize) < self.n && (e.1 as usize) < self.n,
+                "edge ({},{}) out of range n={}",
+                e.0,
+                e.1,
+                self.n
+            );
+            if e.0 > e.1 {
+                *e = (e.1, e.0);
+            }
+        }
+        self.edges.retain(|e| e.0 != e.1);
+        self.edges.sort_unstable();
+        self.edges.dedup();
+    }
+
+    /// Per-vertex degree (normalized-graph semantics: no loops, no multi-edges).
+    pub fn degrees(&self) -> Vec<u32> {
+        let mut deg = vec![0u32; self.n];
+        for &(u, v) in &self.edges {
+            deg[u as usize] += 1;
+            deg[v as usize] += 1;
+        }
+        deg
+    }
+
+    /// Vertices with degree zero.
+    pub fn isolated_vertices(&self) -> Vec<Vertex> {
+        self.degrees()
+            .iter()
+            .enumerate()
+            .filter(|(_, &d)| d == 0)
+            .map(|(v, _)| v as Vertex)
+            .collect()
+    }
+
+    /// Disjoint union with `other`: vertices of `other` are shifted by
+    /// `self.n`.  Used by the dataset presets to assemble many-component
+    /// mixtures (videos/webpages analogues).
+    pub fn disjoint_union(mut self, other: Graph) -> Graph {
+        let off = self.n as u32;
+        self.n += other.n;
+        assert!(self.n <= u32::MAX as usize);
+        self.edges
+            .extend(other.edges.into_iter().map(|(u, v)| (u + off, v + off)));
+        self
+    }
+
+    /// Apply a vertex relabeling `label[v]` and compact to the image space.
+    ///
+    /// This is the *contraction* G/r of §2: vertices with equal labels merge
+    /// into one node; self-loops and duplicate edges vanish in `normalize`.
+    /// Returns the contracted graph plus `compact`, mapping each old vertex
+    /// to its node id in the new graph.
+    pub fn contract(&self, labels: &[Vertex]) -> (Graph, Vec<Vertex>) {
+        assert_eq!(labels.len(), self.n, "labels len != n");
+        // Compact label image -> dense ids, preserving label order so that
+        // canonical (minimum) labels stay comparable across phases.
+        let mut sorted: Vec<Vertex> = labels.to_vec();
+        sorted.sort_unstable();
+        sorted.dedup();
+        let rank = |l: Vertex| sorted.binary_search(&l).unwrap() as Vertex;
+        let compact: Vec<Vertex> = labels.iter().map(|&l| rank(l)).collect();
+        let edges: Vec<(Vertex, Vertex)> = self
+            .edges
+            .iter()
+            .map(|&(u, v)| (compact[u as usize], compact[v as usize]))
+            .collect();
+        (Graph::from_edges(sorted.len(), edges), compact)
+    }
+
+    /// Drop isolated vertices, compacting ids.  Returns the pruned graph and
+    /// the mapping old-id -> Some(new-id) (None for dropped vertices).
+    ///
+    /// §6: "after each phase we can get rid of all isolated nodes from the
+    /// contracted graph, as their connected component assignment is clear."
+    pub fn prune_isolated(&self) -> (Graph, Vec<Option<Vertex>>) {
+        let deg = self.degrees();
+        let mut map = vec![None; self.n];
+        let mut next = 0u32;
+        for v in 0..self.n {
+            if deg[v] > 0 {
+                map[v] = Some(next);
+                next += 1;
+            }
+        }
+        let edges = self
+            .edges
+            .iter()
+            .map(|&(u, v)| (map[u as usize].unwrap(), map[v as usize].unwrap()))
+            .collect();
+        (Graph::from_edges_unchecked(next as usize, edges), map)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normalize_dedups_and_drops_loops() {
+        let g = Graph::from_edges(4, vec![(1, 0), (0, 1), (2, 2), (3, 2)]);
+        assert_eq!(g.edges(), &[(0, 1), (2, 3)]);
+        assert_eq!(g.num_edges(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn normalize_rejects_out_of_range() {
+        Graph::from_edges(2, vec![(0, 5)]);
+    }
+
+    #[test]
+    fn degrees_and_isolated() {
+        let g = Graph::from_edges(5, vec![(0, 1), (1, 2)]);
+        assert_eq!(g.degrees(), vec![1, 2, 1, 0, 0]);
+        assert_eq!(g.isolated_vertices(), vec![3, 4]);
+    }
+
+    #[test]
+    fn disjoint_union_shifts() {
+        let a = Graph::from_edges(2, vec![(0, 1)]);
+        let b = Graph::from_edges(3, vec![(0, 2)]);
+        let u = a.disjoint_union(b);
+        assert_eq!(u.num_vertices(), 5);
+        assert_eq!(u.edges(), &[(0, 1), (2, 4)]);
+    }
+
+    #[test]
+    fn contract_merges_label_classes() {
+        // path 0-1-2-3, merge {0,1} and {2,3}
+        let g = Graph::from_edges(4, vec![(0, 1), (1, 2), (2, 3)]);
+        let (c, compact) = g.contract(&[0, 0, 2, 2]);
+        assert_eq!(c.num_vertices(), 2);
+        assert_eq!(c.edges(), &[(0, 1)]); // loops gone, dedup
+        assert_eq!(compact, vec![0, 0, 1, 1]);
+    }
+
+    #[test]
+    fn contract_preserves_label_order() {
+        let g = Graph::from_edges(3, vec![(0, 1), (1, 2)]);
+        // labels 5 and 9: node ids must be rank-ordered 5->0, 9->1
+        let (c, compact) = g.contract(&[9, 5, 5]);
+        assert_eq!(c.num_vertices(), 2);
+        assert_eq!(compact, vec![1, 0, 0]);
+    }
+
+    #[test]
+    fn prune_isolated_compacts() {
+        let g = Graph::from_edges(5, vec![(1, 3)]);
+        let (p, map) = g.prune_isolated();
+        assert_eq!(p.num_vertices(), 2);
+        assert_eq!(p.edges(), &[(0, 1)]);
+        assert_eq!(map, vec![None, Some(0), None, Some(1), None]);
+    }
+
+    #[test]
+    fn contract_to_single_node_has_no_edges() {
+        let g = Graph::from_edges(3, vec![(0, 1), (1, 2), (0, 2)]);
+        let (c, _) = g.contract(&[7, 7, 7]);
+        assert_eq!(c.num_vertices(), 1);
+        assert_eq!(c.num_edges(), 0);
+    }
+}

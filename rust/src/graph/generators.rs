@@ -1,0 +1,517 @@
+//! Graph generators: the workload side of the benchmark harness.
+//!
+//! Three families:
+//!  * **structured** graphs for the theory experiments (§4, §7): paths,
+//!    cycles, stars, grids, trees, cliques — including the two-cycles
+//!    instance of the [YV17] hardness conjecture;
+//!  * **random** models: `G(n,p)` (Gilbert) via skip sampling, the paper's
+//!    superset class `𝒢(n,p)` (Definition 5.1), Chung–Lu, preferential
+//!    attachment, and R-MAT;
+//!  * **dataset presets** mirroring Table 1 at configurable scale (see
+//!    [`presets`] and DESIGN.md §2 for the substitution argument).
+
+use super::edgelist::{Graph, Vertex};
+use crate::util::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// Structured graphs
+// ---------------------------------------------------------------------------
+
+/// Path `0-1-...-(n-1)` — the Ω(log n) lower-bound instance (Thm 7.1/7.2).
+pub fn path(n: usize) -> Graph {
+    Graph::from_edges(n, (1..n as Vertex).map(|v| (v - 1, v)).collect())
+}
+
+/// Cycle on `n` vertices.
+pub fn cycle(n: usize) -> Graph {
+    assert!(n >= 3, "cycle needs n >= 3");
+    let mut edges: Vec<(Vertex, Vertex)> = (1..n as Vertex).map(|v| (v - 1, v)).collect();
+    edges.push((0, n as Vertex - 1));
+    Graph::from_edges(n, edges)
+}
+
+/// One cycle of length `2n` vs two cycles of length `n`: the instance the
+/// [YV17] conjecture says needs Ω(log n) rounds to distinguish.
+pub fn one_or_two_cycles(n: usize, two: bool) -> Graph {
+    if two {
+        cycle(n).disjoint_union(cycle(n))
+    } else {
+        cycle(2 * n)
+    }
+}
+
+/// Star with center 0 — the CREW-PRAM worst case discussed in §1.2.
+pub fn star(n: usize) -> Graph {
+    Graph::from_edges(n, (1..n as Vertex).map(|v| (0, v)).collect())
+}
+
+/// Complete graph `K_n`.
+pub fn complete(n: usize) -> Graph {
+    let mut edges = Vec::with_capacity(n * (n - 1) / 2);
+    for u in 0..n as Vertex {
+        for v in (u + 1)..n as Vertex {
+            edges.push((u, v));
+        }
+    }
+    Graph::from_edges(n, edges)
+}
+
+/// `w x h` grid (diameter `w+h-2`, the moderate-diameter regime).
+pub fn grid(w: usize, h: usize) -> Graph {
+    let id = |x: usize, y: usize| (y * w + x) as Vertex;
+    let mut edges = Vec::new();
+    for y in 0..h {
+        for x in 0..w {
+            if x + 1 < w {
+                edges.push((id(x, y), id(x + 1, y)));
+            }
+            if y + 1 < h {
+                edges.push((id(x, y), id(x, y + 1)));
+            }
+        }
+    }
+    Graph::from_edges(w * h, edges)
+}
+
+/// Complete binary tree on `n` vertices (vertex 0 is the root).
+pub fn binary_tree(n: usize) -> Graph {
+    let edges = (1..n as Vertex).map(|v| ((v - 1) / 2, v)).collect();
+    Graph::from_edges(n, edges)
+}
+
+/// Caterpillar: a spine path of length `spine` with `legs` leaves per
+/// spine vertex.  Mixes the path lower bound with star-like fan-out.
+pub fn caterpillar(spine: usize, legs: usize) -> Graph {
+    let n = spine * (1 + legs);
+    let mut edges = Vec::new();
+    for s in 1..spine {
+        edges.push(((s - 1) as Vertex, s as Vertex));
+    }
+    for s in 0..spine {
+        for l in 0..legs {
+            edges.push((s as Vertex, (spine + s * legs + l) as Vertex));
+        }
+    }
+    Graph::from_edges(n, edges)
+}
+
+// ---------------------------------------------------------------------------
+// Random models
+// ---------------------------------------------------------------------------
+
+/// Gilbert `G(n,p)` by geometric skip sampling: `O(n + m)` expected time.
+pub fn gnp(n: usize, p: f64, rng: &mut Rng) -> Graph {
+    assert!((0.0..=1.0).contains(&p), "p={p}");
+    let mut edges = Vec::new();
+    if p > 0.0 {
+        for u in 0..n.saturating_sub(1) {
+            let mut v = u as u64 + 1 + rng.skip_geometric(p);
+            while (v as usize) < n {
+                edges.push((u as Vertex, v as Vertex));
+                v += 1 + rng.skip_geometric(p);
+            }
+        }
+    }
+    Graph::from_edges_unchecked(n, edges)
+}
+
+/// The paper's `𝒢(n,p)` class (Definition 5.1): a `G(n,p)` sample with an
+/// arbitrary *fixed* edge set overlaid — every edge is at least as likely as
+/// under `G(n,p)`.  Used to test that Theorem 5.5 survives adversarial
+/// extra edges.
+pub fn gnp_class(n: usize, p: f64, extra: &[(Vertex, Vertex)], rng: &mut Rng) -> Graph {
+    let mut g = gnp(n, p, rng);
+    for &(u, v) in extra {
+        g.add_edge(u, v);
+    }
+    g.normalize();
+    g
+}
+
+/// `G(n, c·ln n / n)` — the regime of §5 (connected w.h.p. for c > 1,
+/// diameter ~ log n / log log n).
+pub fn gnp_log_regime(n: usize, c: f64, rng: &mut Rng) -> Graph {
+    let p = (c * (n as f64).ln() / n as f64).min(1.0);
+    gnp(n, p, rng)
+}
+
+/// Chung–Lu: `m` endpoint-sampled edges with weights `w_v ∝ (v+1)^(-1/(β-1))`
+/// (expected power-law degree exponent `β`).  May leave isolated vertices
+/// and parallel edges (deduped); components are not guaranteed connected.
+pub fn chung_lu(n: usize, avg_deg: f64, beta: f64, rng: &mut Rng) -> Graph {
+    assert!(beta > 2.0, "beta must be > 2 for a finite mean");
+    let gamma = 1.0 / (beta - 1.0);
+    // cumulative weights for inverse-CDF endpoint sampling
+    let mut cum = Vec::with_capacity(n);
+    let mut total = 0.0f64;
+    for v in 0..n {
+        total += ((v + 1) as f64).powf(-gamma);
+        cum.push(total);
+    }
+    let m = ((n as f64) * avg_deg / 2.0).round() as usize;
+    let sample = |rng: &mut Rng| -> Vertex {
+        let x = rng.next_f64() * total;
+        cum.partition_point(|&c| c < x).min(n - 1) as Vertex
+    };
+    let mut edges = Vec::with_capacity(m);
+    for _ in 0..m {
+        let (u, v) = (sample(rng), sample(rng));
+        if u != v {
+            edges.push((u, v));
+        }
+    }
+    Graph::from_edges(n, edges)
+}
+
+/// Preferential attachment (Barabási–Albert flavor): each new vertex
+/// attaches to `m_per_vertex` earlier vertices chosen proportionally to
+/// degree (via the repeated-endpoint trick).  Connected by construction,
+/// power-law degrees — the "giant social component" building block.
+pub fn preferential_attachment(n: usize, m_per_vertex: usize, rng: &mut Rng) -> Graph {
+    assert!(m_per_vertex >= 1);
+    let m = m_per_vertex;
+    let mut targets: Vec<Vertex> = Vec::with_capacity(2 * n * m);
+    let mut edges = Vec::with_capacity(n * m);
+    for v in 1..n {
+        for i in 0..m.min(v) {
+            // Choose uniformly from the endpoint multiset = degree-biased.
+            let t = if targets.is_empty() || rng.gen_bool(0.5) && v > 1 {
+                // mix in a uniform choice to keep the tail from exploding
+                rng.gen_range(v as u64) as Vertex
+            } else {
+                targets[rng.gen_range(targets.len() as u64) as usize]
+            };
+            let t = if t as usize >= v { (v - 1 - i) as Vertex } else { t };
+            edges.push((v as Vertex, t));
+            targets.push(t);
+            targets.push(v as Vertex);
+        }
+    }
+    Graph::from_edges(n, edges)
+}
+
+/// R-MAT recursive quadrant sampler (webgraph analogue).  `scale` is
+/// `log2(n)`; emits `m` (possibly duplicate) edges, deduped on build.
+pub fn rmat(scale: u32, m: usize, probs: (f64, f64, f64, f64), rng: &mut Rng) -> Graph {
+    let (a, b, c, d) = probs;
+    assert!((a + b + c + d - 1.0).abs() < 1e-9, "R-MAT probs must sum to 1");
+    let n = 1usize << scale;
+    let mut edges = Vec::with_capacity(m);
+    for _ in 0..m {
+        let (mut u, mut v) = (0usize, 0usize);
+        for _ in 0..scale {
+            let x = rng.next_f64();
+            let (du, dv) = if x < a {
+                (0, 0)
+            } else if x < a + b {
+                (0, 1)
+            } else if x < a + b + c {
+                (1, 0)
+            } else {
+                (1, 1)
+            };
+            u = (u << 1) | du;
+            v = (v << 1) | dv;
+        }
+        if u != v {
+            edges.push((u as Vertex, v as Vertex));
+        }
+    }
+    Graph::from_edges(n, edges)
+}
+
+/// A guaranteed-connected component with roughly `avg_deg` average degree:
+/// random-attachment spanning tree + Chung–Lu style extra edges.
+pub fn connected_component(n: usize, avg_deg: f64, rng: &mut Rng) -> Graph {
+    if n == 1 {
+        return Graph::empty(1);
+    }
+    let mut edges: Vec<(Vertex, Vertex)> = Vec::new();
+    for v in 1..n as Vertex {
+        edges.push((v, rng.gen_range(v as u64) as Vertex));
+    }
+    let extra = (((avg_deg / 2.0 - 1.0).max(0.0)) * n as f64) as usize;
+    for _ in 0..extra {
+        let u = rng.gen_range(n as u64) as Vertex;
+        let v = rng.gen_range(n as u64) as Vertex;
+        if u != v {
+            edges.push((u, v));
+        }
+    }
+    Graph::from_edges(n, edges)
+}
+
+// ---------------------------------------------------------------------------
+// Dataset presets (Table 1 analogues)
+// ---------------------------------------------------------------------------
+
+pub mod presets {
+    //! Scaled synthetic analogues of the paper's Table 1 datasets.
+    //!
+    //! Each preset preserves the *structural* properties that drive phase
+    //! counts — average degree `m/n`, heavy-tailed degree distribution, and
+    //! the largest-CC fraction — while scaling `n` down to laptop size
+    //! (the substitution table in DESIGN.md §2).
+
+    use super::*;
+
+    /// Paper-reported shape of a Table 1 dataset plus our generator.
+    pub struct DatasetSpec {
+        pub name: &'static str,
+        /// Paper values (for EXPERIMENTS.md reporting).
+        pub paper_nodes: f64,
+        pub paper_edges: f64,
+        pub paper_largest_cc: f64,
+        /// Structural targets for the analogue.
+        pub avg_deg: f64,
+        pub largest_cc_frac: f64,
+        /// Default analogue size (`lcc --scale` overrides).
+        pub default_n: usize,
+    }
+
+    pub const ALL: [&str; 5] = ["orkut", "friendster", "clueweb", "videos", "webpages"];
+
+    pub fn spec(name: &str) -> DatasetSpec {
+        match name {
+            "orkut" => DatasetSpec {
+                name: "orkut",
+                paper_nodes: 3e6,
+                paper_edges: 117e6,
+                paper_largest_cc: 3e6,
+                avg_deg: 39.0,
+                largest_cc_frac: 1.0,
+                default_n: 50_000,
+            },
+            "friendster" => DatasetSpec {
+                name: "friendster",
+                paper_nodes: 65e6,
+                paper_edges: 1.8e9,
+                paper_largest_cc: 65e6,
+                avg_deg: 28.0,
+                largest_cc_frac: 1.0,
+                default_n: 80_000,
+            },
+            "clueweb" => DatasetSpec {
+                name: "clueweb",
+                paper_nodes: 955e6,
+                paper_edges: 37e9,
+                paper_largest_cc: 950e6,
+                avg_deg: 39.0,
+                largest_cc_frac: 0.995,
+                default_n: 100_000,
+            },
+            "videos" => DatasetSpec {
+                name: "videos",
+                paper_nodes: 92e9,
+                paper_edges: 626e9,
+                paper_largest_cc: 18e9,
+                avg_deg: 6.8,
+                largest_cc_frac: 0.20,
+                default_n: 120_000,
+            },
+            "webpages" => DatasetSpec {
+                name: "webpages",
+                paper_nodes: 854e9,
+                paper_edges: 6.5e12,
+                paper_largest_cc: 7e9,
+                avg_deg: 7.6,
+                largest_cc_frac: 0.008,
+                default_n: 150_000,
+            },
+            other => panic!("unknown dataset preset {other:?}"),
+        }
+    }
+
+    /// Generate the analogue at `n` vertices (None = the preset default).
+    pub fn generate(name: &str, n: Option<usize>, seed: u64) -> Graph {
+        let s = spec(name);
+        let n = n.unwrap_or(s.default_n);
+        let mut rng = Rng::new(seed ^ crate::util::rng::splitmix64(name.len() as u64));
+        match name {
+            // Single giant social component, power-law degrees.
+            "orkut" | "friendster" => {
+                let mpv = (s.avg_deg / 2.0).round() as usize;
+                preferential_attachment(n, mpv.max(1), &mut rng)
+            }
+            // Webgraph: R-MAT skew (isolated vertices + one dominant CC).
+            "clueweb" => {
+                let scale = (n as f64).log2().ceil() as u32;
+                let m = (n as f64 * s.avg_deg / 2.0) as usize;
+                rmat(scale, m, (0.57, 0.19, 0.19, 0.05), &mut rng)
+            }
+            // Similarity graphs: many components with a bounded largest CC.
+            "videos" | "webpages" => component_mixture(
+                n,
+                s.largest_cc_frac,
+                s.avg_deg,
+                &mut rng,
+            ),
+            other => panic!("unknown dataset preset {other:?}"),
+        }
+    }
+
+    /// Mixture of connected components: one of size `largest_frac * n`,
+    /// the rest drawn from a Pareto-ish size distribution — the shape of
+    /// the paper's entity-similarity graphs (videos/webpages rows).
+    pub fn component_mixture(
+        n: usize,
+        largest_frac: f64,
+        avg_deg: f64,
+        rng: &mut Rng,
+    ) -> Graph {
+        let largest = ((n as f64 * largest_frac) as usize).max(2).min(n);
+        let mut g = connected_component(largest, avg_deg, rng);
+        let mut remaining = n - largest;
+        while remaining > 0 {
+            // Pareto(α≈1.5) component sizes, capped below the largest.
+            let u = rng.next_f64().max(1e-12);
+            let size = ((2.0 / u.powf(1.0 / 1.5)) as usize)
+                .clamp(1, largest.saturating_sub(1).max(1))
+                .min(remaining);
+            let c = if size == 1 {
+                Graph::empty(1)
+            } else {
+                connected_component(size, avg_deg.min(size as f64 - 1.0), rng)
+            };
+            g = g.disjoint_union(c);
+            remaining -= size;
+        }
+        g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::dsu::DisjointSet;
+
+    fn components(g: &Graph) -> DisjointSet {
+        let mut d = DisjointSet::new(g.num_vertices());
+        for &(u, v) in g.edges() {
+            d.union(u, v);
+        }
+        d
+    }
+
+    #[test]
+    fn structured_shapes() {
+        assert_eq!(path(5).num_edges(), 4);
+        assert_eq!(cycle(5).num_edges(), 5);
+        assert_eq!(star(5).num_edges(), 4);
+        assert_eq!(complete(5).num_edges(), 10);
+        assert_eq!(grid(3, 4).num_edges(), 2 * 4 + 3 * 3); // 17
+        assert_eq!(binary_tree(7).num_edges(), 6);
+        let cat = caterpillar(4, 2);
+        assert_eq!(cat.num_vertices(), 12);
+        assert_eq!(cat.num_edges(), 3 + 8);
+    }
+
+    #[test]
+    fn one_or_two_cycles_component_counts() {
+        assert_eq!(components(&one_or_two_cycles(10, false)).components(), 1);
+        assert_eq!(components(&one_or_two_cycles(10, true)).components(), 2);
+    }
+
+    #[test]
+    fn gnp_density_close_to_p() {
+        let mut rng = Rng::new(1);
+        let (n, p) = (500, 0.02);
+        let g = gnp(n, p, &mut rng);
+        let expected = p * (n * (n - 1) / 2) as f64;
+        let got = g.num_edges() as f64;
+        assert!(
+            (got - expected).abs() < 0.15 * expected,
+            "edges {got} vs expected {expected}"
+        );
+    }
+
+    #[test]
+    fn gnp_extremes() {
+        let mut rng = Rng::new(2);
+        assert_eq!(gnp(50, 0.0, &mut rng).num_edges(), 0);
+        assert_eq!(gnp(20, 1.0, &mut rng).num_edges(), 190);
+    }
+
+    #[test]
+    fn gnp_log_regime_is_connected_whp() {
+        let mut rng = Rng::new(3);
+        let g = gnp_log_regime(2000, 4.0, &mut rng);
+        assert_eq!(components(&g).components(), 1);
+    }
+
+    #[test]
+    fn gnp_class_superset_contains_extra() {
+        let mut rng = Rng::new(4);
+        let extra = vec![(0, 999)];
+        let g = gnp_class(1000, 0.001, &extra, &mut rng);
+        assert!(g.edges().contains(&(0, 999)));
+    }
+
+    #[test]
+    fn chung_lu_has_heavy_tail() {
+        let mut rng = Rng::new(5);
+        let g = chung_lu(5000, 10.0, 2.5, &mut rng);
+        let deg = g.degrees();
+        let max = *deg.iter().max().unwrap() as f64;
+        let avg = deg.iter().map(|&d| d as f64).sum::<f64>() / deg.len() as f64;
+        assert!(avg > 5.0 && avg < 15.0, "avg {avg}");
+        assert!(max > 8.0 * avg, "max {max} not heavy-tailed vs avg {avg}");
+    }
+
+    #[test]
+    fn preferential_attachment_is_connected() {
+        let mut rng = Rng::new(6);
+        let g = preferential_attachment(3000, 3, &mut rng);
+        assert_eq!(components(&g).components(), 1);
+        let deg = g.degrees();
+        assert!(*deg.iter().max().unwrap() > 30);
+    }
+
+    #[test]
+    fn rmat_shape() {
+        let mut rng = Rng::new(7);
+        let g = rmat(10, 5000, (0.57, 0.19, 0.19, 0.05), &mut rng);
+        assert_eq!(g.num_vertices(), 1024);
+        assert!(g.num_edges() > 3000); // some dedup/self-loop loss ok
+    }
+
+    #[test]
+    fn connected_component_is_connected() {
+        let mut rng = Rng::new(8);
+        let g = connected_component(500, 6.0, &mut rng);
+        assert_eq!(components(&g).components(), 1);
+        let avg = 2.0 * g.num_edges() as f64 / 500.0;
+        assert!(avg > 3.0, "avg degree {avg}");
+    }
+
+    #[test]
+    fn presets_generate_and_match_shape() {
+        for name in presets::ALL {
+            let spec = presets::spec(name);
+            let g = presets::generate(name, Some(5000), 42);
+            assert!(g.num_vertices() >= 5000, "{name}");
+            let mut d = components(&g);
+            let largest = (0..g.num_vertices() as u32)
+                .map(|v| d.set_size(v))
+                .max()
+                .unwrap() as f64;
+            let frac = largest / g.num_vertices() as f64;
+            // loose structural check: giant components stay giant, highly
+            // fragmented presets stay fragmented
+            if spec.largest_cc_frac >= 0.99 {
+                assert!(frac > 0.6, "{name}: largest CC frac {frac}");
+            } else if spec.largest_cc_frac <= 0.01 {
+                assert!(frac < 0.2, "{name}: largest CC frac {frac}");
+            }
+        }
+    }
+
+    #[test]
+    fn generators_are_deterministic_per_seed() {
+        let a = presets::generate("orkut", Some(1000), 7);
+        let b = presets::generate("orkut", Some(1000), 7);
+        let c = presets::generate("orkut", Some(1000), 8);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+}

@@ -1,0 +1,14 @@
+//! Graph substrate: storage, generators, IO, statistics.
+//!
+//! Everything above this layer (MPC simulator, algorithms, coordinator)
+//! speaks [`edgelist::Graph`] — dense `u32` vertex ids plus a canonical
+//! undirected edge list.
+
+pub mod csr;
+pub mod edgelist;
+pub mod generators;
+pub mod io;
+pub mod stats;
+
+pub use csr::Csr;
+pub use edgelist::{Graph, Vertex};

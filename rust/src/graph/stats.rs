@@ -1,0 +1,129 @@
+//! Graph statistics: component structure, degree profile, diameter estimate.
+//!
+//! Backs the `lcc table1` harness (regenerating the dataset-inventory table)
+//! and the structural assertions in the preset tests.
+
+use super::csr::Csr;
+use super::edgelist::Graph;
+use crate::util::dsu::DisjointSet;
+use crate::util::stats::Log2Histogram;
+
+/// Connected-component structure computed by the sequential oracle.
+#[derive(Debug, Clone)]
+pub struct ComponentStats {
+    pub count: usize,
+    pub largest: usize,
+    /// log2 histogram of component sizes
+    pub size_hist: Log2Histogram,
+}
+
+pub fn component_stats(g: &Graph) -> ComponentStats {
+    let mut d = DisjointSet::new(g.num_vertices());
+    for &(u, v) in g.edges() {
+        d.union(u, v);
+    }
+    let mut size_hist = Log2Histogram::new();
+    let mut largest = 0usize;
+    let mut seen = std::collections::HashMap::new();
+    for v in 0..g.num_vertices() as u32 {
+        let r = d.find(v);
+        *seen.entry(r).or_insert(0usize) += 1;
+    }
+    for &s in seen.values() {
+        size_hist.add(s as u64);
+        largest = largest.max(s);
+    }
+    ComponentStats {
+        count: d.components(),
+        largest,
+        size_hist,
+    }
+}
+
+/// Degree profile.
+#[derive(Debug, Clone)]
+pub struct DegreeStats {
+    pub avg: f64,
+    pub max: u32,
+    pub hist: Log2Histogram,
+}
+
+pub fn degree_stats(g: &Graph) -> DegreeStats {
+    let deg = g.degrees();
+    let mut hist = Log2Histogram::new();
+    let mut max = 0u32;
+    let mut sum = 0u64;
+    for &d in &deg {
+        hist.add(d as u64);
+        max = max.max(d);
+        sum += d as u64;
+    }
+    DegreeStats {
+        avg: if deg.is_empty() { 0.0 } else { sum as f64 / deg.len() as f64 },
+        max,
+        hist,
+    }
+}
+
+/// Double-sweep BFS lower bound on the diameter of the component of `src`
+/// (exact on trees, a good estimate elsewhere).  The paper's motivation in
+/// §1 — real graphs have `d ≈ log n` — is checked with this.
+pub fn diameter_estimate(g: &Graph) -> u32 {
+    if g.num_edges() == 0 {
+        return 0;
+    }
+    let csr = Csr::build(g);
+    // start from an endpoint of the first edge (inside some component)
+    let src = g.edges()[0].0;
+    let (_, far) = csr.bfs(src);
+    let (dist, far2) = csr.bfs(far);
+    dist[far2 as usize]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn component_stats_on_mixture() {
+        let g = generators::path(10)
+            .disjoint_union(generators::complete(5))
+            .disjoint_union(Graph::empty(3));
+        let s = component_stats(&g);
+        assert_eq!(s.count, 2 + 3); // path, clique, 3 isolated
+        assert_eq!(s.largest, 10);
+    }
+
+    #[test]
+    fn degree_stats_on_star() {
+        let s = degree_stats(&generators::star(11));
+        assert_eq!(s.max, 10);
+        assert!((s.avg - 20.0 / 11.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn diameter_of_path_is_exact() {
+        assert_eq!(diameter_estimate(&generators::path(100)), 99);
+    }
+
+    #[test]
+    fn diameter_of_clique_is_one() {
+        assert_eq!(diameter_estimate(&generators::complete(10)), 1);
+    }
+
+    #[test]
+    fn diameter_of_random_graph_is_logarithmic() {
+        let mut rng = Rng::new(1);
+        let g = generators::gnp_log_regime(4000, 3.0, &mut rng);
+        let d = diameter_estimate(&g);
+        // log2(4000) ~ 12; the paper's d ≈ log n observation
+        assert!(d >= 3 && d <= 24, "diameter {d}");
+    }
+
+    #[test]
+    fn empty_graph_diameter_zero() {
+        assert_eq!(diameter_estimate(&Graph::empty(5)), 0);
+    }
+}

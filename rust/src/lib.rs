@@ -1,0 +1,24 @@
+//! # lcc — Connected Components at Scale via Local Contractions
+//!
+//! A three-layer reproduction of Łącki, Mirrokni & Włodarczyk (2018):
+//!
+//! * **Layer 3 (this crate)** — an MPC(0) execution engine with explicit
+//!   machines, shuffles, and communication accounting ([`mpc`]); the paper's
+//!   contraction algorithms and the published baselines ([`cc`]); a
+//!   streaming coordinator with sharding, backpressure, and run reports
+//!   ([`coordinator`]); and the benchmark harness regenerating every table
+//!   and figure of the paper's evaluation ([`bench`]).
+//! * **Layer 2/1 (build time)** — `python/compile/` lowers the per-phase
+//!   label computation (a Pallas tropical-SpMV kernel inside a JAX graph)
+//!   to HLO-text artifacts; [`runtime`] loads and executes them via PJRT.
+//!
+//! Python never runs on the request path: after `make artifacts`, the
+//! `lcc` binary is self-contained.
+
+pub mod bench;
+pub mod cc;
+pub mod coordinator;
+pub mod graph;
+pub mod mpc;
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,307 @@
+//! `lcc` — the coordinator binary.
+//!
+//! Subcommands:
+//!   run       run one algorithm on a generated or loaded graph
+//!   pipeline  stream a graph through the sharded local-contraction pipeline
+//!   table1    regenerate Table 1 (dataset inventory)
+//!   table2    regenerate Table 2 (phases per algorithm)
+//!   table3    regenerate Table 3 (relative running times)
+//!   figure1   regenerate Figure 1 (edges per phase)
+//!   theory    run a theory-validation experiment (--exp decay|depth|loglog|path|comm|cycles)
+//!   perf      run the §Perf micro-benchmark suite
+//!   generate  write a dataset preset to a file
+//!   runtime-check  smoke-test the compiled XLA artifacts
+
+use lcc::bench::{ablations, perf, tables, theory};
+use lcc::coordinator::{pipeline, Driver, PipelineConfig, RunConfig};
+use lcc::graph::{generators, io};
+use lcc::util::cli::Args;
+use lcc::util::json::Json;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("help");
+    match cmd {
+        "run" => cmd_run(&args),
+        "pipeline" => cmd_pipeline(&args),
+        "table1" => cmd_table(&args, 1),
+        "table2" | "table3" => cmd_table(&args, if cmd == "table2" { 2 } else { 3 }),
+        "figure1" => cmd_figure1(&args),
+        "theory" => cmd_theory(&args),
+        "ablation" => cmd_ablation(&args),
+        "perf" => cmd_perf(&args),
+        "generate" => cmd_generate(&args),
+        "runtime-check" => cmd_runtime_check(),
+        _ => {
+            eprintln!("{}", HELP);
+            std::process::exit(if cmd == "help" { 0 } else { 2 });
+        }
+    }
+    let unknown = args.unknown_flags();
+    if !unknown.is_empty() {
+        eprintln!("warning: unused flags: {unknown:?}");
+    }
+}
+
+const HELP: &str = "lcc — Connected Components at Scale via Local Contractions
+
+USAGE: lcc <run|pipeline|table1|table2|table3|figure1|theory|ablation|perf|generate|runtime-check> [flags]
+
+Common flags:
+  --algo lc|lc-mtl|tc|tc-dht|cracker|two-phase|htm|hash-min
+  --graph <preset|path|cycle|star|grid|gnp|gnp-log|file:PATH>   --n <vertices>
+  --seed N  --machines N  --finisher N  --use-xla  --verify  --json
+  --scale N (table/figure dataset size)  --runs N (median-of-N)
+  --exp decay|depth|loglog|path|comm|cycles (theory)
+  --exp finisher|pruning|mtl|machines|dense (ablation)";
+
+/// Build the graph a command operates on.
+fn load_graph(args: &Args) -> (lcc::graph::Graph, String) {
+    let spec = args.str_or("graph", "gnp");
+    let n = args.usize_or("n", 100_000);
+    let seed = args.u64_or("seed", 42);
+    let mut rng = lcc::util::rng::Rng::new(seed);
+    let g = match spec.as_str() {
+        "gnp" => {
+            let avg = args.f64_or("avg-deg", 8.0);
+            generators::gnp(n, avg / n as f64, &mut rng)
+        }
+        "gnp-log" => generators::gnp_log_regime(n, args.f64_or("c", 2.0), &mut rng),
+        "path" => generators::path(n),
+        "cycle" => generators::cycle(n),
+        "star" => generators::star(n),
+        "grid" => {
+            let w = (n as f64).sqrt() as usize;
+            generators::grid(w, w)
+        }
+        "orkut" | "friendster" | "clueweb" | "videos" | "webpages" => {
+            generators::presets::generate(&spec, Some(n), seed)
+        }
+        other => {
+            if let Some(path) = other.strip_prefix("file:") {
+                if path.ends_with(".bin") {
+                    io::read_binary(path).expect("read binary graph")
+                } else {
+                    io::read_snap_text(path).expect("read SNAP graph")
+                }
+            } else {
+                panic!("unknown --graph {other:?}");
+            }
+        }
+    };
+    (g, spec)
+}
+
+fn cmd_run(args: &Args) {
+    let (g, name) = load_graph(args);
+    let cfg = RunConfig {
+        algorithm: args.str_or("algo", "lc"),
+        seed: args.u64_or("seed", 42),
+        machines: args.usize_or("machines", 16),
+        finisher_threshold: args.usize_or("finisher", 0),
+        prune_isolated: args.bool_or("prune-isolated", true),
+        max_phases: args.u64_or("max-phases", 200) as u32,
+        state_cap: args.u64_or("state-cap", 0),
+        use_xla: args.bool_or("use-xla", false),
+        verify: args.bool_or("verify", true),
+        ..Default::default()
+    };
+    let driver = Driver::new(cfg);
+    let report = driver.run_named(&g, &name);
+    if args.bool_or("json", false) {
+        println!("{}", report.to_json().pretty());
+    } else {
+        println!("{}", report.summary());
+        println!("edges per phase: {:?}", report.edges_per_phase);
+    }
+    if report.verified == Some(false) {
+        std::process::exit(1);
+    }
+}
+
+fn cmd_pipeline(args: &Args) {
+    let (g, name) = load_graph(args);
+    let cfg = PipelineConfig {
+        num_workers: args.usize_or("workers", 4),
+        chunk_size: args.usize_or("chunk", 64 * 1024),
+        channel_capacity: args.usize_or("capacity", 4),
+    };
+    let t0 = std::time::Instant::now();
+    let res = pipeline::run(g.num_vertices(), g.edges().iter().copied(), &cfg);
+
+    // Global merge: the paper's LocalContraction on the summary graph,
+    // with the XLA dense backend when requested.
+    let driver = Driver::new(RunConfig {
+        algorithm: args.str_or("algo", "lc"),
+        use_xla: args.bool_or("use-xla", true),
+        verify: false,
+        ..Default::default()
+    });
+    let merge_report = driver.run_named(&res.summary, "summary");
+    let wall = t0.elapsed().as_secs_f64() * 1e3;
+
+    let labels = pipeline::merge_summary(&res.summary);
+    let ok = lcc::cc::oracle::verify(&g, &labels).is_ok();
+
+    println!(
+        "pipeline on {name}: n={} m={}",
+        g.num_vertices(),
+        g.num_edges()
+    );
+    println!(
+        "  streamed {} edges in {} chunks ({} backpressure stalls)",
+        res.stats.edges_streamed, res.stats.chunks, res.stats.backpressure_stalls
+    );
+    println!(
+        "  summary graph: {} edges ({:.1}x reduction)",
+        res.stats.summary_edges,
+        res.stats.edges_streamed as f64 / res.stats.summary_edges.max(1) as f64
+    );
+    println!("  merge: {}", merge_report.summary());
+    println!("  end-to-end {wall:.1} ms, oracle-verified: {ok}");
+    if !ok {
+        std::process::exit(1);
+    }
+}
+
+fn sweep_config(args: &Args) -> tables::SweepConfig {
+    tables::SweepConfig {
+        scale: args.str_opt("scale").map(|s| s.parse().expect("--scale")),
+        seed: args.u64_or("seed", 42),
+        runs: args.usize_or("runs", 3),
+        finisher_frac: args.f64_or("finisher-frac", 0.01),
+        htm_state_factor: args.u64_or("htm-state-factor", 20),
+        use_xla: args.bool_or("use-xla", false),
+        machines: args.usize_or("machines", 16),
+    }
+}
+
+fn cmd_table(args: &Args, which: u32) {
+    let cfg = sweep_config(args);
+    let (text, json) = match which {
+        1 => tables::table1(&cfg),
+        _ => {
+            let reports = tables::sweep(&cfg);
+            if which == 2 {
+                tables::table2(&reports)
+            } else {
+                tables::table3(&reports)
+            }
+        }
+    };
+    emit(args, &text, json);
+}
+
+fn cmd_figure1(args: &Args) {
+    let cfg = sweep_config(args);
+    let datasets = args.str_or("datasets", "clueweb,webpages");
+    let names: Vec<&str> = datasets.split(',').collect();
+    let (text, json) = tables::figure1(&cfg, &names);
+    emit(args, &text, json);
+}
+
+fn cmd_theory(args: &Args) {
+    let seed = args.u64_or("seed", 42);
+    let exp = args.str_or("exp", "loglog");
+    let (text, json) = match exp.as_str() {
+        "decay" => theory::decay(seed),
+        "depth" => theory::depth(seed),
+        "loglog" => theory::loglog(seed),
+        "path" => theory::path_lower_bound(seed),
+        "comm" => theory::comm(seed, args.str_opt("scale").map(|s| s.parse().unwrap())),
+        "cycles" => theory::cycles(seed),
+        other => panic!("unknown --exp {other:?}"),
+    };
+    emit(args, &text, json);
+}
+
+fn cmd_ablation(args: &Args) {
+    let seed = args.u64_or("seed", 42);
+    let exp = args.str_or("exp", "finisher");
+    let (text, json) = match exp.as_str() {
+        "finisher" => ablations::finisher(seed),
+        "pruning" => ablations::pruning(seed),
+        "mtl" => ablations::mtl_schedule(seed),
+        "machines" => ablations::machines(seed),
+        "dense" => ablations::dense_backend(seed),
+        other => panic!("unknown --exp {other:?} (finisher|pruning|mtl|machines|dense)"),
+    };
+    emit(args, &text, json);
+}
+
+fn cmd_perf(args: &Args) {
+    let quick = args.bool_or("quick", false);
+    let measurements = perf::standard_suite(quick);
+    for m in &measurements {
+        println!("{}", m.report_line());
+    }
+    if args.bool_or("json", false) {
+        let rows: Vec<Json> = measurements
+            .iter()
+            .map(|m| {
+                Json::obj()
+                    .set("name", m.name.as_str())
+                    .set("median_s", m.median_s())
+                    .set("p95_s", m.p95_s())
+                    .set(
+                        "throughput",
+                        m.throughput().map(Json::Num).unwrap_or(Json::Null),
+                    )
+            })
+            .collect();
+        println!("{}", Json::Arr(rows).pretty());
+    }
+}
+
+fn cmd_generate(args: &Args) {
+    let (g, name) = load_graph(args);
+    let out = args.str_or("out", &format!("{name}.bin"));
+    if out.ends_with(".bin") {
+        io::write_binary(&g, &out).expect("write binary");
+    } else {
+        io::write_snap_text(&g, &out).expect("write text");
+    }
+    println!("wrote {out}: n={} m={}", g.num_vertices(), g.num_edges());
+}
+
+fn cmd_runtime_check() {
+    match lcc::runtime::try_default_executor() {
+        Err(e) => {
+            eprintln!("artifacts NOT usable: {e}\nrun `make artifacts` first");
+            std::process::exit(1);
+        }
+        Ok(exec) => {
+            use lcc::cc::backend::{CpuBackend, DenseBackend};
+            let n = 200;
+            let g = generators::gnp(n, 0.03, &mut lcc::util::rng::Rng::new(1));
+            let prio: Vec<i32> = lcc::util::rng::Rng::new(2)
+                .permutation(n)
+                .iter()
+                .map(|&x| x as i32)
+                .collect();
+            let xla = exec.local_labels(&g, &prio).expect("xla local_labels");
+            let cpu = CpuBackend::default().local_labels(&g, &prio).unwrap();
+            assert_eq!(xla, cpu, "XLA vs CPU mismatch");
+            println!(
+                "runtime OK: platform={} shard={} — local_labels matches CPU reference on {n} vertices",
+                exec.platform(),
+                exec.shard_size(),
+            );
+        }
+    }
+}
+
+fn emit(args: &Args, text: &str, json: Json) {
+    if args.bool_or("json", false) {
+        println!("{}", json.pretty());
+    } else {
+        println!("{text}");
+    }
+    if let Some(path) = args.str_opt("out") {
+        std::fs::write(path, json.pretty()).expect("write --out");
+    }
+}

@@ -1,0 +1,122 @@
+//! Distributed hash table extension of the MPC model (§2.1).
+//!
+//! "In each round all other machines can send messages of total size O(n)
+//! that define the stored key-value pairs.  In the following round, all
+//! machines can query the distributed hash table ... and for each query the
+//! value corresponding to a key is returned immediately."
+//!
+//! The simulator models this with a publish/freeze cycle: writes go to a
+//! staging map and become visible only after [`Dht::publish`] (the round
+//! boundary); reads before the first publish see nothing.  All traffic is
+//! counted and charged to the owning [`Simulator`] via
+//! [`Dht::take_counters`] / `Simulator::charge_dht`.
+
+use std::collections::HashMap;
+
+/// A u64 -> u64 distributed hash table with round-boundary visibility.
+///
+/// TreeContraction's labels and Two-Phase's representative lookups only
+/// need fixed-width values, so the table is monomorphic; this matches the
+/// Bigtable-style store the paper cites [CDG+08].
+#[derive(Debug, Default)]
+pub struct Dht {
+    visible: HashMap<u64, u64>,
+    staged: HashMap<u64, u64>,
+    reads: u64,
+    writes: u64,
+}
+
+impl Dht {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Stage a write; visible after the next [`publish`](Self::publish).
+    pub fn put(&mut self, key: u64, value: u64) {
+        self.writes += 1;
+        self.staged.insert(key, value);
+    }
+
+    /// Query the table (counted).  Returns `None` for absent keys.
+    pub fn get(&mut self, key: u64) -> Option<u64> {
+        self.reads += 1;
+        self.visible.get(&key).copied()
+    }
+
+    /// Round boundary: staged writes become visible.
+    pub fn publish(&mut self) {
+        for (k, v) in self.staged.drain() {
+            self.visible.insert(k, v);
+        }
+    }
+
+    /// Number of visible entries.
+    pub fn len(&self) -> usize {
+        self.visible.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.visible.is_empty()
+    }
+
+    /// Drain `(reads, writes)` counters (for `Simulator::charge_dht`).
+    pub fn take_counters(&mut self) -> (u64, u64) {
+        let out = (self.reads, self.writes);
+        self.reads = 0;
+        self.writes = 0;
+        out
+    }
+
+    /// Clear everything (between phases).
+    pub fn reset(&mut self) {
+        self.visible.clear();
+        self.staged.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_invisible_until_publish() {
+        let mut d = Dht::new();
+        d.put(1, 10);
+        assert_eq!(d.get(1), None);
+        d.publish();
+        assert_eq!(d.get(1), Some(10));
+    }
+
+    #[test]
+    fn publish_overwrites() {
+        let mut d = Dht::new();
+        d.put(1, 10);
+        d.publish();
+        d.put(1, 20);
+        assert_eq!(d.get(1), Some(10), "old value until boundary");
+        d.publish();
+        assert_eq!(d.get(1), Some(20));
+    }
+
+    #[test]
+    fn counters_drain() {
+        let mut d = Dht::new();
+        d.put(1, 1);
+        d.put(2, 2);
+        d.publish();
+        d.get(1);
+        d.get(9);
+        assert_eq!(d.take_counters(), (2, 2));
+        assert_eq!(d.take_counters(), (0, 0));
+    }
+
+    #[test]
+    fn reset_clears() {
+        let mut d = Dht::new();
+        d.put(1, 1);
+        d.publish();
+        d.reset();
+        assert_eq!(d.get(1), None);
+        assert_eq!(d.len(), 0);
+    }
+}

@@ -1,0 +1,170 @@
+//! Round-level accounting for the MPC simulator.
+//!
+//! The paper's claims are stated in terms the simulator measures exactly:
+//! number of **rounds**, per-round **communication** (bytes shuffled), and
+//! per-machine **load** (max bytes received by one machine — the MPC(ε)
+//! constraint of §2.1).  The `O(m)` communication-per-round observation of
+//! §1.1 is checked against these counters by `lcc theory --exp comm`.
+
+/// Counters for a single computation-communication round.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RoundMetrics {
+    /// Human-readable label of the step this round implements.
+    pub label: String,
+    /// Shuffled key-value messages.
+    pub messages: u64,
+    /// Total shuffled bytes.
+    pub bytes: u64,
+    /// Max bytes received by a single machine (load balance / space bound).
+    pub max_machine_bytes: u64,
+    /// Distributed-hash-table traffic (§2.1 extension).
+    pub dht_writes: u64,
+    pub dht_reads: u64,
+    /// Rounds where a machine exceeded the configured space bound.
+    pub space_violation: bool,
+}
+
+/// Accumulated metrics for a run.
+#[derive(Debug, Clone, Default)]
+pub struct Metrics {
+    pub rounds: Vec<RoundMetrics>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, round: RoundMetrics) {
+        self.rounds.push(round);
+    }
+
+    pub fn num_rounds(&self) -> usize {
+        self.rounds.len()
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.rounds.iter().map(|r| r.bytes).sum()
+    }
+
+    pub fn total_messages(&self) -> u64 {
+        self.rounds.iter().map(|r| r.messages).sum()
+    }
+
+    pub fn total_dht_ops(&self) -> u64 {
+        self.rounds.iter().map(|r| r.dht_reads + r.dht_writes).sum()
+    }
+
+    pub fn max_round_bytes(&self) -> u64 {
+        self.rounds.iter().map(|r| r.bytes).max().unwrap_or(0)
+    }
+
+    pub fn any_space_violation(&self) -> bool {
+        self.rounds.iter().any(|r| r.space_violation)
+    }
+
+    /// Merge metrics from a sub-computation (e.g. a per-phase job).
+    pub fn extend(&mut self, other: Metrics) {
+        self.rounds.extend(other.rounds);
+    }
+}
+
+/// Wire-size model for shuffled values.
+///
+/// The simulator charges `8 (key) + value.wire_size()` bytes per message —
+/// the natural encoding a MapReduce shuffle would use.
+pub trait WireSize {
+    fn wire_size(&self) -> u64;
+}
+
+impl WireSize for u32 {
+    fn wire_size(&self) -> u64 {
+        4
+    }
+}
+impl WireSize for u64 {
+    fn wire_size(&self) -> u64 {
+        8
+    }
+}
+impl WireSize for i64 {
+    fn wire_size(&self) -> u64 {
+        8
+    }
+}
+impl WireSize for () {
+    fn wire_size(&self) -> u64 {
+        0
+    }
+}
+impl<A: WireSize, B: WireSize> WireSize for (A, B) {
+    fn wire_size(&self) -> u64 {
+        self.0.wire_size() + self.1.wire_size()
+    }
+}
+impl<A: WireSize, B: WireSize, C: WireSize> WireSize for (A, B, C) {
+    fn wire_size(&self) -> u64 {
+        self.0.wire_size() + self.1.wire_size() + self.2.wire_size()
+    }
+}
+impl<T: WireSize> WireSize for Vec<T> {
+    fn wire_size(&self) -> u64 {
+        8 + self.iter().map(|x| x.wire_size()).sum::<u64>()
+    }
+}
+impl<T: WireSize> WireSize for Option<T> {
+    fn wire_size(&self) -> u64 {
+        1 + self.as_ref().map(|x| x.wire_size()).unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn totals_accumulate() {
+        let mut m = Metrics::new();
+        m.record(RoundMetrics {
+            label: "a".into(),
+            messages: 10,
+            bytes: 100,
+            max_machine_bytes: 30,
+            ..Default::default()
+        });
+        m.record(RoundMetrics {
+            label: "b".into(),
+            messages: 5,
+            bytes: 50,
+            dht_reads: 7,
+            ..Default::default()
+        });
+        assert_eq!(m.num_rounds(), 2);
+        assert_eq!(m.total_bytes(), 150);
+        assert_eq!(m.total_messages(), 15);
+        assert_eq!(m.total_dht_ops(), 7);
+        assert_eq!(m.max_round_bytes(), 100);
+        assert!(!m.any_space_violation());
+    }
+
+    #[test]
+    fn wire_sizes() {
+        assert_eq!(3u32.wire_size(), 4);
+        assert_eq!((1u32, 2u32).wire_size(), 8);
+        assert_eq!((1u64, 2u32, 3u32).wire_size(), 16);
+        assert_eq!(vec![1u32, 2u32].wire_size(), 16);
+        assert_eq!(Some(1u32).wire_size(), 5);
+        assert_eq!(None::<u32>.wire_size(), 1);
+    }
+
+    #[test]
+    fn extend_merges() {
+        let mut a = Metrics::new();
+        a.record(RoundMetrics::default());
+        let mut b = Metrics::new();
+        b.record(RoundMetrics::default());
+        b.record(RoundMetrics::default());
+        a.extend(b);
+        assert_eq!(a.num_rounds(), 3);
+    }
+}

@@ -1,0 +1,15 @@
+//! MPC(ε = 0) execution substrate (§2.1 of the paper).
+//!
+//! The simulator gives the algorithms the exact interface the paper's model
+//! defines — rounds of local computation + key-shuffled communication, an
+//! optional distributed hash table — while measuring the model-level
+//! quantities every claim is stated in: rounds, shuffled bytes, per-machine
+//! load.
+
+pub mod dht;
+pub mod metrics;
+pub mod simulator;
+
+pub use dht::Dht;
+pub use metrics::{Metrics, RoundMetrics, WireSize};
+pub use simulator::{MpcConfig, Simulator};

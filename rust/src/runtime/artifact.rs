@@ -1,0 +1,156 @@
+//! Artifact registry: the `manifest.json` written by `python/compile/aot.py`.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// Metadata for one compiled artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub shard_size: usize,
+    pub outputs: usize,
+}
+
+/// The artifact manifest (one per `artifacts/` directory).
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load<P: AsRef<Path>>(dir: P) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {}", path.display()))?;
+        let root = json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("parse {}: {e}", path.display()))?;
+        if root.get("format").and_then(Json::as_str) != Some("hlo-text") {
+            bail!("unsupported artifact format in {}", path.display());
+        }
+        let mut artifacts = Vec::new();
+        for a in root
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .context("manifest: missing artifacts array")?
+        {
+            artifacts.push(ArtifactMeta {
+                name: a
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .context("artifact: missing name")?
+                    .to_string(),
+                file: a
+                    .get("file")
+                    .and_then(Json::as_str)
+                    .context("artifact: missing file")?
+                    .to_string(),
+                shard_size: a
+                    .get("shard_size")
+                    .and_then(Json::as_i64)
+                    .context("artifact: missing shard_size")? as usize,
+                outputs: a
+                    .get("outputs")
+                    .and_then(Json::as_i64)
+                    .unwrap_or(1) as usize,
+            });
+        }
+        Ok(Manifest { dir, artifacts })
+    }
+
+    /// Find an artifact by exact name.
+    pub fn find(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Full path of an artifact's HLO text file.
+    pub fn path_of(&self, meta: &ArtifactMeta) -> PathBuf {
+        self.dir.join(&meta.file)
+    }
+
+    /// Shard sizes available for a given artifact family (e.g.
+    /// `"local_labels"` -> `[256, 1024]`), ascending.
+    pub fn shard_sizes(&self, family: &str) -> Vec<usize> {
+        let mut sizes: Vec<usize> = self
+            .artifacts
+            .iter()
+            .filter(|a| {
+                a.name
+                    .strip_prefix(family)
+                    .map(|rest| rest.starts_with('_'))
+                    .unwrap_or(false)
+            })
+            .map(|a| a.shard_size)
+            .collect();
+        sizes.sort_unstable();
+        sizes.dedup();
+        sizes
+    }
+}
+
+/// Default artifacts directory: `$LCC_ARTIFACTS` or `./artifacts`.
+pub fn default_dir() -> PathBuf {
+    std::env::var("LCC_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+    }
+
+    #[test]
+    fn load_and_query() {
+        let dir = std::env::temp_dir().join("lcc_manifest_test");
+        write_manifest(
+            &dir,
+            r#"{"format":"hlo-text","artifacts":[
+                {"name":"local_labels_256","file":"local_labels_256.hlo.txt","shard_size":256,"inputs":[],"outputs":1},
+                {"name":"local_labels_1024","file":"local_labels_1024.hlo.txt","shard_size":1024,"inputs":[],"outputs":1},
+                {"name":"tree_roots_256","file":"tree_roots_256.hlo.txt","shard_size":256,"inputs":[],"outputs":1}
+            ]}"#,
+        );
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.artifacts.len(), 3);
+        assert_eq!(m.find("local_labels_256").unwrap().shard_size, 256);
+        assert!(m.find("nope").is_none());
+        assert_eq!(m.shard_sizes("local_labels"), vec![256, 1024]);
+        assert_eq!(m.shard_sizes("tree_roots"), vec![256]);
+        assert!(m
+            .path_of(m.find("tree_roots_256").unwrap())
+            .ends_with("tree_roots_256.hlo.txt"));
+    }
+
+    #[test]
+    fn rejects_bad_format() {
+        let dir = std::env::temp_dir().join("lcc_manifest_bad");
+        write_manifest(&dir, r#"{"format":"protobuf","artifacts":[]}"#);
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn missing_manifest_errors() {
+        assert!(Manifest::load("/nonexistent/dir").is_err());
+    }
+
+    #[test]
+    fn real_manifest_loads_if_built() {
+        // best-effort check against the actual artifacts dir when present
+        let dir = default_dir();
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(!m.shard_sizes("local_labels").is_empty());
+        }
+    }
+}

@@ -1,0 +1,75 @@
+//! PJRT client wrapper: load HLO-text artifacts and compile them once.
+//!
+//! Interchange is HLO **text** (`HloModuleProto::from_text_file`): the
+//! xla_extension 0.5.1 bundled with the `xla` 0.1.6 crate rejects jax≥0.5's
+//! serialized protos (64-bit instruction ids), while the text parser
+//! reassigns ids and round-trips cleanly.  See `python/compile/aot.py` and
+//! /opt/xla-example/README.md.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// A PJRT CPU client owning compiled executables.
+pub struct XlaClient {
+    client: xla::PjRtClient,
+}
+
+impl XlaClient {
+    /// Create the CPU client (the only PJRT plugin available in this image;
+    /// TPU lowering is compile-only — see DESIGN.md §Hardware-Adaptation).
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(XlaClient { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO text file and compile it for this client.
+    pub fn compile_hlo_text<P: AsRef<Path>>(
+        &self,
+        path: P,
+    ) -> Result<xla::PjRtLoadedExecutable> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .with_context(|| format!("non-utf8 path {path:?}"))?,
+        )
+        .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .with_context(|| format!("compile {}", path.display()))
+    }
+}
+
+/// Execute a compiled single-output-tuple artifact on int32 inputs and
+/// return the first tuple element as an `i32` vector.
+pub fn run_i32(
+    exe: &xla::PjRtLoadedExecutable,
+    inputs: &[xla::Literal],
+) -> Result<Vec<i32>> {
+    let result = exe
+        .execute::<xla::Literal>(inputs)
+        .context("execute artifact")?[0][0]
+        .to_literal_sync()
+        .context("fetch result")?;
+    // aot.py lowers with return_tuple=True
+    let out = result.to_tuple1().context("unwrap result tuple")?;
+    out.to_vec::<i32>().context("read i32 result")
+}
+
+/// Build an `[n] i32` literal.
+pub fn lit_vec_i32(xs: &[i32]) -> xla::Literal {
+    xla::Literal::vec1(xs)
+}
+
+/// Build an `[n, n] i32` literal from a row-major buffer.
+pub fn lit_mat_i32(xs: &[i32], n: usize) -> Result<xla::Literal> {
+    anyhow::ensure!(xs.len() == n * n, "matrix buffer size mismatch");
+    xla::Literal::vec1(xs)
+        .reshape(&[n as i64, n as i64])
+        .context("reshape mask literal")
+}

@@ -1,0 +1,161 @@
+//! Dense shard executor: the Layer-3 ↔ Layer-1 bridge.
+//!
+//! Packs a (sub)graph into the dense shard form the AOT artifacts expect —
+//! `[n, n]` int32 adjacency mask with the diagonal set on live slots,
+//! `[n]` int32 priorities with `INF` padding — executes the compiled
+//! executables, and unpacks the labels.  Implements
+//! [`crate::cc::backend::DenseBackend`], so LocalContraction's phase labels
+//! transparently run on the compiled Pallas kernel whenever the current
+//! graph fits a shard (the "dense finisher" of DESIGN.md).
+
+use anyhow::{Context, Result};
+
+use super::artifact::Manifest;
+use super::client::{lit_mat_i32, lit_vec_i32, run_i32, XlaClient};
+use crate::cc::backend::{DenseBackend, INF};
+use crate::graph::Graph;
+
+/// Compiled executables for one shard size.
+pub struct ShardExecutor {
+    client: XlaClient,
+    n: usize,
+    local_labels: xla::PjRtLoadedExecutable,
+    hash_min_step: xla::PjRtLoadedExecutable,
+    tree_roots: xla::PjRtLoadedExecutable,
+    phase_shrink: Option<xla::PjRtLoadedExecutable>,
+    /// Executions performed (for perf reporting).
+    pub calls: std::cell::Cell<u64>,
+}
+
+impl ShardExecutor {
+    /// Load + compile the artifacts for shard size `n` from `manifest`.
+    pub fn load(manifest: &Manifest, n: usize) -> Result<ShardExecutor> {
+        let client = XlaClient::cpu()?;
+        let get = |family: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let name = format!("{family}_{n}");
+            let meta = manifest
+                .find(&name)
+                .with_context(|| format!("artifact {name} not in manifest"))?;
+            client.compile_hlo_text(manifest.path_of(meta))
+        };
+        Ok(ShardExecutor {
+            n,
+            local_labels: get("local_labels")?,
+            hash_min_step: get("hash_min_step")?,
+            tree_roots: get("tree_roots")?,
+            phase_shrink: get("phase_shrink_stats").ok(),
+            client,
+            calls: std::cell::Cell::new(0),
+        })
+    }
+
+    /// Load using the largest shard size available in `manifest`.
+    pub fn load_largest(manifest: &Manifest) -> Result<ShardExecutor> {
+        let sizes = manifest.shard_sizes("local_labels");
+        let n = *sizes
+            .last()
+            .context("no local_labels artifacts in manifest")?;
+        Self::load(manifest, n)
+    }
+
+    pub fn shard_size(&self) -> usize {
+        self.n
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform()
+    }
+
+    /// Pack a graph into the dense `[n, n]` mask (diag set on live slots).
+    pub fn pack_mask(&self, g: &Graph) -> Result<Vec<i32>> {
+        let live = g.num_vertices();
+        anyhow::ensure!(
+            live <= self.n,
+            "graph ({live} vertices) exceeds shard size {}",
+            self.n
+        );
+        let n = self.n;
+        let mut mask = vec![0i32; n * n];
+        for v in 0..live {
+            mask[v * n + v] = 1;
+        }
+        for &(u, v) in g.edges() {
+            mask[u as usize * n + v as usize] = 1;
+            mask[v as usize * n + u as usize] = 1;
+        }
+        Ok(mask)
+    }
+
+    /// Pad live priorities with INF up to the shard size.
+    fn pack_prio(&self, prio: &[i32]) -> Vec<i32> {
+        let mut p = vec![INF; self.n];
+        p[..prio.len()].copy_from_slice(prio);
+        p
+    }
+
+    fn run_mask_prio(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        g: &Graph,
+        prio: &[i32],
+    ) -> Result<Vec<i32>> {
+        anyhow::ensure!(
+            prio.len() == g.num_vertices(),
+            "prio length {} != vertices {}",
+            prio.len(),
+            g.num_vertices()
+        );
+        let mask = lit_mat_i32(&self.pack_mask(g)?, self.n)?;
+        let prio_l = lit_vec_i32(&self.pack_prio(prio));
+        self.calls.set(self.calls.get() + 1);
+        let mut out = run_i32(exe, &[mask, prio_l])?;
+        out.truncate(g.num_vertices());
+        Ok(out)
+    }
+
+    /// Labels + distinct-label count (Lemma 4.1 diagnostics artifact).
+    /// Requires priorities forming a permutation of `[0, live)`.
+    pub fn phase_shrink_stats(&self, g: &Graph, prio: &[i32]) -> Result<(Vec<i32>, i32)> {
+        let exe = self
+            .phase_shrink
+            .as_ref()
+            .context("phase_shrink_stats artifact not loaded")?;
+        let mask = lit_mat_i32(&self.pack_mask(g)?, self.n)?;
+        let prio_l = lit_vec_i32(&self.pack_prio(prio));
+        self.calls.set(self.calls.get() + 1);
+        let result = exe
+            .execute::<xla::Literal>(&[mask, prio_l])
+            .context("execute phase_shrink_stats")?[0][0]
+            .to_literal_sync()?;
+        let (labels_l, count_l) = result.to_tuple2().context("unwrap 2-tuple")?;
+        let mut labels = labels_l.to_vec::<i32>()?;
+        labels.truncate(g.num_vertices());
+        let count = count_l.get_first_element::<i32>()?;
+        Ok((labels, count))
+    }
+}
+
+impl DenseBackend for ShardExecutor {
+    fn max_vertices(&self) -> usize {
+        self.n
+    }
+
+    fn local_labels(&self, g: &Graph, prio: &[i32]) -> Result<Vec<i32>> {
+        self.run_mask_prio(&self.local_labels, g, prio)
+    }
+
+    fn hash_min_step(&self, g: &Graph, prio: &[i32]) -> Result<Vec<i32>> {
+        self.run_mask_prio(&self.hash_min_step, g, prio)
+    }
+
+    fn tree_roots(&self, f: &[i32]) -> Result<Vec<i32>> {
+        anyhow::ensure!(f.len() <= self.n, "pointer array exceeds shard");
+        // pad with identity pointers (fixed points stay put)
+        let mut padded: Vec<i32> = (0..self.n as i32).collect();
+        padded[..f.len()].copy_from_slice(f);
+        self.calls.set(self.calls.get() + 1);
+        let mut out = run_i32(&self.tree_roots, &[lit_vec_i32(&padded)])?;
+        out.truncate(f.len());
+        Ok(out)
+    }
+}

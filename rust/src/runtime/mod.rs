@@ -1,0 +1,21 @@
+//! PJRT runtime: load the AOT HLO-text artifacts built by
+//! `python/compile/aot.py` and execute them from the Rust hot path.
+//!
+//! `make artifacts` runs Python once; afterwards the `lcc` binary is
+//! self-contained — this module never shells out to Python.
+
+pub mod artifact;
+pub mod client;
+pub mod executor;
+
+pub use artifact::{default_dir, ArtifactMeta, Manifest};
+pub use client::XlaClient;
+pub use executor::ShardExecutor;
+
+/// Convenience: load the best shard executor from the default artifacts
+/// directory, or an error string when artifacts are not built.
+pub fn try_default_executor() -> Result<ShardExecutor, String> {
+    let dir = default_dir();
+    let manifest = Manifest::load(&dir).map_err(|e| format!("{e:#}"))?;
+    ShardExecutor::load_largest(&manifest).map_err(|e| format!("{e:#}"))
+}

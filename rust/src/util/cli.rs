@@ -1,0 +1,172 @@
+//! Tiny CLI argument parser (no `clap` in the offline crate set).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
+//! arguments.  Typed getters with defaults; unknown-flag detection so the
+//! binary can fail fast on typos.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    /// Flags that were consumed by a getter — for unknown-flag reporting.
+    seen: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (exclude argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut args = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    args.flags.insert(body.to_string(), v);
+                } else {
+                    args.flags.insert(body.to_string(), "true".to_string());
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        args
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    fn mark(&self, key: &str) {
+        self.seen.borrow_mut().push(key.to_string());
+    }
+
+    pub fn str_opt(&self, key: &str) -> Option<&str> {
+        self.mark(key);
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.str_opt(key).unwrap_or(default).to_string()
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.typed_or(key, default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.typed_or(key, default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.typed_or(key, default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.mark(key);
+        match self.flags.get(key).map(|s| s.as_str()) {
+            None => default,
+            Some("true") | Some("1") | Some("yes") => true,
+            Some("false") | Some("0") | Some("no") => false,
+            Some(v) => panic!("--{key}: expected bool, got {v:?}"),
+        }
+    }
+
+    fn typed_or<T: std::str::FromStr>(&self, key: &str, default: T) -> T
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.str_opt(key) {
+            None => default,
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|e| panic!("--{key}: cannot parse {v:?}: {e}")),
+        }
+    }
+
+    /// Comma-separated list getter, e.g. `--sizes 10,20,30`.
+    pub fn u64_list_or(&self, key: &str, default: &[u64]) -> Vec<u64> {
+        match self.str_opt(key) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| {
+                    s.trim()
+                        .parse()
+                        .unwrap_or_else(|e| panic!("--{key}: bad item {s:?}: {e}"))
+                })
+                .collect(),
+        }
+    }
+
+    /// Flags present on the command line but never consumed by a getter.
+    pub fn unknown_flags(&self) -> Vec<String> {
+        let seen = self.seen.borrow();
+        self.flags
+            .keys()
+            .filter(|k| !seen.iter().any(|s| s == *k))
+            .cloned()
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn key_value_forms() {
+        let a = parse(&["run", "--n", "100", "--p=0.5", "--verbose"]);
+        assert_eq!(a.positional, vec!["run"]);
+        assert_eq!(a.u64_or("n", 0), 100);
+        assert_eq!(a.f64_or("p", 0.0), 0.5);
+        assert!(a.bool_or("verbose", false));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&[]);
+        assert_eq!(a.u64_or("n", 7), 7);
+        assert_eq!(a.str_or("algo", "lc"), "lc");
+        assert!(!a.bool_or("x", false));
+    }
+
+    #[test]
+    fn negative_numbers_as_values() {
+        let a = parse(&["--dx", "-5"]);
+        assert_eq!(a.typed_or::<i64>("dx", 0), -5);
+    }
+
+    #[test]
+    fn list_flag() {
+        let a = parse(&["--sizes", "1,2,3"]);
+        assert_eq!(a.u64_list_or("sizes", &[9]), vec![1, 2, 3]);
+        assert_eq!(a.u64_list_or("other", &[9]), vec![9]);
+    }
+
+    #[test]
+    fn unknown_flags_detected() {
+        let a = parse(&["--good", "1", "--oops", "2"]);
+        let _ = a.u64_or("good", 0);
+        assert_eq!(a.unknown_flags(), vec!["oops".to_string()]);
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot parse")]
+    fn bad_parse_panics() {
+        let a = parse(&["--n", "xyz"]);
+        let _ = a.u64_or("n", 0);
+    }
+}

@@ -1,0 +1,145 @@
+//! Disjoint-set union (union-find) with path halving + union by size.
+//!
+//! Used as (a) the sequential correctness oracle every distributed algorithm
+//! is checked against, (b) the single-machine streaming finisher the paper
+//! applies once the contracted graph is small (§6: "we use union-find ... as
+//! it can process incoming edges in a streaming fashion and only use space
+//! proportional to the number of vertices").
+
+/// Union-find over `0..n`.
+#[derive(Debug, Clone)]
+pub struct DisjointSet {
+    parent: Vec<u32>,
+    size: Vec<u32>,
+    components: usize,
+}
+
+impl DisjointSet {
+    pub fn new(n: usize) -> Self {
+        assert!(n <= u32::MAX as usize, "DisjointSet limited to u32 ids");
+        DisjointSet {
+            parent: (0..n as u32).collect(),
+            size: vec![1; n],
+            components: n,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.parent.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.parent.is_empty()
+    }
+
+    /// Number of disjoint sets.
+    pub fn components(&self) -> usize {
+        self.components
+    }
+
+    /// Find with path halving (iterative, streaming-friendly).
+    pub fn find(&mut self, mut x: u32) -> u32 {
+        loop {
+            let p = self.parent[x as usize];
+            if p == x {
+                return x;
+            }
+            let gp = self.parent[p as usize];
+            self.parent[x as usize] = gp;
+            x = gp;
+        }
+    }
+
+    /// Union by size; returns true if the edge merged two sets.
+    pub fn union(&mut self, a: u32, b: u32) -> bool {
+        let (mut ra, mut rb) = (self.find(a), self.find(b));
+        if ra == rb {
+            return false;
+        }
+        if self.size[ra as usize] < self.size[rb as usize] {
+            std::mem::swap(&mut ra, &mut rb);
+        }
+        self.parent[rb as usize] = ra;
+        self.size[ra as usize] += self.size[rb as usize];
+        self.components -= 1;
+        true
+    }
+
+    /// Size of the set containing `x`.
+    pub fn set_size(&mut self, x: u32) -> u32 {
+        let r = self.find(x);
+        self.size[r as usize]
+    }
+
+    /// Canonical labels: `label[v] = min vertex id in v's set`.
+    ///
+    /// Using the *minimum* member (not the DSU root) makes labels
+    /// implementation-independent, so oracle and distributed outputs can be
+    /// compared with plain equality.
+    pub fn canonical_labels(&mut self) -> Vec<u32> {
+        let n = self.parent.len();
+        let mut min_of_root: Vec<u32> = (0..n as u32).collect();
+        for v in 0..n as u32 {
+            let r = self.find(v) as usize;
+            if v < min_of_root[r] {
+                min_of_root[r] = v;
+            }
+        }
+        (0..n as u32)
+            .map(|v| {
+                let r = self.find(v) as usize;
+                min_of_root[r]
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fresh_sets_are_singletons() {
+        let mut d = DisjointSet::new(5);
+        assert_eq!(d.components(), 5);
+        for v in 0..5 {
+            assert_eq!(d.find(v), v);
+            assert_eq!(d.set_size(v), 1);
+        }
+    }
+
+    #[test]
+    fn union_merges_and_counts() {
+        let mut d = DisjointSet::new(6);
+        assert!(d.union(0, 1));
+        assert!(d.union(2, 3));
+        assert!(!d.union(1, 0), "already merged");
+        assert!(d.union(1, 2));
+        assert_eq!(d.components(), 3); // {0,1,2,3} {4} {5}
+        assert_eq!(d.set_size(3), 4);
+        assert_eq!(d.find(0), d.find(3));
+        assert_ne!(d.find(0), d.find(4));
+    }
+
+    #[test]
+    fn canonical_labels_are_min_member() {
+        let mut d = DisjointSet::new(5);
+        d.union(4, 2);
+        d.union(2, 3);
+        let labels = d.canonical_labels();
+        assert_eq!(labels, vec![0, 1, 2, 2, 2]);
+    }
+
+    #[test]
+    fn long_chain_is_flattened() {
+        let n = 10_000;
+        let mut d = DisjointSet::new(n);
+        for v in 1..n as u32 {
+            d.union(v - 1, v);
+        }
+        assert_eq!(d.components(), 1);
+        assert_eq!(d.set_size(0), n as u32);
+        let labels = d.canonical_labels();
+        assert!(labels.iter().all(|&l| l == 0));
+    }
+}

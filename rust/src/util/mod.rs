@@ -1,0 +1,13 @@
+//! Hand-rolled substrate utilities.
+//!
+//! The offline crate set for this build contains only the `xla` 0.1.6
+//! dependency closure (+`anyhow`), so the usual ecosystem crates (`rand`,
+//! `serde`, `clap`, `proptest`, `criterion`) are unavailable; these modules
+//! provide the small slices of them the system needs (see DESIGN.md §5).
+
+pub mod cli;
+pub mod dsu;
+pub mod json;
+pub mod quickcheck;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,170 @@
+//! Minimal property-testing runner (no `proptest` in the offline crate set).
+//!
+//! The proptest-shaped invariant suites (`rust/tests/prop_*.rs`) run each
+//! property over many generated inputs with a deterministic, reportable seed
+//! and a size-based shrink: when a sized case fails, the runner retries
+//! smaller sizes with the same per-case stream to report the smallest
+//! failing size.  Override the base seed with `LCC_PROP_SEED=<u64>`.
+
+use super::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone)]
+pub struct Prop {
+    pub cases: u64,
+    pub seed: u64,
+}
+
+impl Default for Prop {
+    fn default() -> Self {
+        let seed = std::env::var("LCC_PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xC0FFEE);
+        Prop { cases: 64, seed }
+    }
+}
+
+impl Prop {
+    pub fn new(cases: u64) -> Self {
+        Prop {
+            cases,
+            ..Prop::default()
+        }
+    }
+
+    /// Check `prop` over `cases` generated inputs; panics with the seed and
+    /// case index on the first failure.
+    pub fn check<T, G, P>(&self, name: &str, mut generate: G, mut prop: P)
+    where
+        G: FnMut(&mut Rng) -> T,
+        P: FnMut(&T) -> Result<(), String>,
+        T: std::fmt::Debug,
+    {
+        for case in 0..self.cases {
+            let mut rng = Rng::new(self.seed ^ case.wrapping_mul(0x9E37_79B9));
+            let input = generate(&mut rng);
+            if let Err(msg) = prop(&input) {
+                panic!(
+                    "property {name:?} failed at case {case} \
+                     (LCC_PROP_SEED={}): {msg}\ninput: {input:#?}",
+                    self.seed
+                );
+            }
+        }
+    }
+
+    /// Sized variant with shrink-by-size: `generate(rng, size)` receives a
+    /// size that ramps up over cases; on failure the runner re-runs the same
+    /// case stream at smaller sizes and reports the smallest failure.
+    pub fn check_sized<T, G, P>(&self, name: &str, max_size: usize, mut generate: G, mut prop: P)
+    where
+        G: FnMut(&mut Rng, usize) -> T,
+        P: FnMut(&T) -> Result<(), String>,
+        T: std::fmt::Debug,
+    {
+        for case in 0..self.cases {
+            let size = 1 + (max_size - 1) * case as usize / (self.cases.max(2) - 1) as usize;
+            let mk_rng = |c: u64| Rng::new(self.seed ^ c.wrapping_mul(0x9E37_79B9));
+            let input = generate(&mut mk_rng(case), size);
+            if let Err(first_msg) = prop(&input) {
+                // shrink: binary-search-ish descent over sizes
+                let mut best = (size, first_msg);
+                let mut s = size / 2;
+                while s >= 1 {
+                    let small = generate(&mut mk_rng(case), s);
+                    match prop(&small) {
+                        Err(m) => {
+                            best = (s, m);
+                            s /= 2;
+                        }
+                        Ok(()) => break,
+                    }
+                }
+                panic!(
+                    "property {name:?} failed at case {case} size {} \
+                     (shrunk from {size}; LCC_PROP_SEED={}): {}",
+                    best.0, self.seed, best.1
+                );
+            }
+        }
+    }
+}
+
+/// Assert-style helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut ran = 0;
+        Prop::new(16).check(
+            "sum-commutes",
+            |rng| (rng.gen_range(100), rng.gen_range(100)),
+            |&(a, b)| {
+                ran += 1;
+                if a + b == b + a {
+                    Ok(())
+                } else {
+                    Err("math broke".into())
+                }
+            },
+        );
+        assert_eq!(ran, 16);
+    }
+
+    #[test]
+    #[should_panic(expected = "always-fails")]
+    fn failing_property_panics_with_name() {
+        Prop::new(4).check("always-fails", |rng| rng.gen_range(10), |_| Err("always-fails".into()));
+    }
+
+    #[test]
+    fn sized_cases_ramp_up() {
+        let mut sizes = Vec::new();
+        Prop::new(8).check_sized(
+            "sizes",
+            100,
+            |_rng, size| size,
+            |&s| {
+                sizes.push(s);
+                Ok(())
+            },
+        );
+        assert!(sizes.windows(2).all(|w| w[0] <= w[1]));
+        assert_eq!(*sizes.last().unwrap(), 100);
+        assert_eq!(sizes[0], 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "size 1")]
+    fn shrink_reports_minimal_size() {
+        // Fails for every size, so the shrinker must land on 1.
+        Prop::new(4).check_sized("shrinks", 64, |_rng, size| size, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let collect = |seed| {
+            let p = Prop { cases: 8, seed };
+            let mut xs = Vec::new();
+            p.check("gen", |rng| rng.next_u64(), |&x| {
+                xs.push(x);
+                Ok(())
+            });
+            xs
+        };
+        assert_eq!(collect(7), collect(7));
+        assert_ne!(collect(7), collect(8));
+    }
+}

@@ -1,0 +1,224 @@
+//! Deterministic PRNGs.
+//!
+//! The offline crate set has no `rand`, so we carry our own: SplitMix64 for
+//! seeding/hashing and Xoshiro256++ as the workhorse generator.  Both are
+//! public-domain algorithms (Vigna); determinism across runs is load-bearing
+//! for the experiment harness (median-of-3-seeds protocol, §6 of the paper).
+
+/// SplitMix64 step: also used as the stateless vertex-hash in the algorithms
+/// (the paper assigns each vertex "a random hash chosen uniformly"; we hash
+/// `(seed, vertex)` so machines can evaluate priorities without a broadcast).
+#[inline]
+pub fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e3779b97f4a7c15);
+    let mut z = x;
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+    z ^ (z >> 31)
+}
+
+/// Stateless uniform hash of a vertex under a per-phase seed.
+///
+/// Collision-free in practice for our scales (64-bit); the algorithms only
+/// compare hashes, matching the paper's "we can only compare the priorities"
+/// observation (§3).
+#[inline]
+pub fn vertex_hash(seed: u64, v: u64) -> u64 {
+    splitmix64(seed ^ splitmix64(v.wrapping_add(0x517cc1b727220a95)))
+}
+
+/// Xoshiro256++ PRNG (Blackman & Vigna).
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    /// Seed via SplitMix64, as recommended by the Xoshiro authors.
+    pub fn new(seed: u64) -> Self {
+        let mut x = seed;
+        let mut s = [0u64; 4];
+        for slot in &mut s {
+            x = x.wrapping_add(0x9e3779b97f4a7c15);
+            *slot = splitmix64(x);
+        }
+        Rng { s }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[0]
+            .wrapping_add(s[3])
+            .rotate_left(23)
+            .wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in `[0, 1)` with 53 bits of precision.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in `[0, n)`; unbiased via Lemire rejection.
+    #[inline]
+    pub fn gen_range(&mut self, n: u64) -> u64 {
+        assert!(n > 0, "gen_range(0)");
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (n as u128);
+        let mut lo = m as u64;
+        if lo < n {
+            let t = n.wrapping_neg() % n;
+            while lo < t {
+                x = self.next_u64();
+                m = (x as u128) * (n as u128);
+                lo = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    #[inline]
+    pub fn gen_bool(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.gen_range((i + 1) as u64) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Random permutation of `0..n`.
+    pub fn permutation(&mut self, n: usize) -> Vec<u32> {
+        let mut p: Vec<u32> = (0..n as u32).collect();
+        self.shuffle(&mut p);
+        p
+    }
+
+    /// Geometric-like sample: number of failures before a success with
+    /// probability `p` (used by the G(n,p) skip-sampling generator).
+    #[inline]
+    pub fn skip_geometric(&mut self, p: f64) -> u64 {
+        if p >= 1.0 {
+            return 0;
+        }
+        let u = self.next_f64().max(f64::MIN_POSITIVE);
+        (u.ln() / (1.0 - p).ln()).floor() as u64
+    }
+
+    /// Split off an independent stream (for per-thread determinism).
+    pub fn fork(&mut self, stream: u64) -> Rng {
+        Rng::new(self.next_u64() ^ splitmix64(stream))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        assert_ne!(Rng::new(1).next_u64(), Rng::new(2).next_u64());
+    }
+
+    #[test]
+    fn gen_range_bounds_and_coverage() {
+        let mut rng = Rng::new(3);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let x = rng.gen_range(10) as usize;
+            assert!(x < 10);
+            seen[x] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "all buckets hit");
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut rng = Rng::new(4);
+        for _ in 0..1000 {
+            let x = rng.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn permutation_is_permutation() {
+        let mut rng = Rng::new(5);
+        let p = rng.permutation(100);
+        let mut sorted = p.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100u32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn shuffle_preserves_multiset() {
+        let mut rng = Rng::new(6);
+        let mut xs: Vec<u32> = (0..50).map(|i| i % 7).collect();
+        let mut want = xs.clone();
+        rng.shuffle(&mut xs);
+        want.sort_unstable();
+        xs.sort_unstable();
+        assert_eq!(xs, want);
+    }
+
+    #[test]
+    fn vertex_hash_stable_and_spread() {
+        let h1 = vertex_hash(42, 7);
+        assert_eq!(h1, vertex_hash(42, 7));
+        assert_ne!(h1, vertex_hash(42, 8));
+        assert_ne!(h1, vertex_hash(43, 7));
+        // rough uniformity: high bit set about half the time
+        let hi = (0..10_000)
+            .filter(|&v| vertex_hash(9, v) >> 63 == 1)
+            .count();
+        assert!((4_000..6_000).contains(&hi), "hi-bit count {hi}");
+    }
+
+    #[test]
+    fn skip_geometric_mean_close_to_inverse_p() {
+        let mut rng = Rng::new(8);
+        let p = 0.01;
+        let n = 20_000;
+        let total: u64 = (0..n).map(|_| rng.skip_geometric(p)).sum();
+        let mean = total as f64 / n as f64;
+        // E[failures before success] = (1-p)/p = 99
+        assert!((mean - 99.0).abs() < 5.0, "mean {mean}");
+    }
+
+    #[test]
+    fn fork_streams_are_independent() {
+        let mut base = Rng::new(11);
+        let mut a = base.fork(0);
+        let mut b = base.fork(1);
+        let same = (0..100).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn gen_bool_extremes() {
+        let mut rng = Rng::new(12);
+        assert!(!(0..100).any(|_| rng.gen_bool(0.0)));
+        assert!((0..100).all(|_| rng.gen_bool(1.0)));
+    }
+}

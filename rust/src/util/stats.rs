@@ -1,0 +1,196 @@
+//! Summary statistics and histograms for the experiment harness.
+
+/// Mean of a sample (0.0 for empty input).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation (n-1 denominator; 0.0 for n < 2).
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Percentile via linear interpolation on the sorted sample; `q` in [0,1].
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    assert!((0.0..=1.0).contains(&q), "percentile q={q}");
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut s: Vec<f64> = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = q * (s.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        s[lo]
+    } else {
+        s[lo] + (pos - lo as f64) * (s[hi] - s[lo])
+    }
+}
+
+pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 0.5)
+}
+
+/// Log-2 bucketed histogram (bucket k counts values in [2^k, 2^(k+1))),
+/// used for degree distributions and pointer-chain depth profiles.
+#[derive(Debug, Clone, Default)]
+pub struct Log2Histogram {
+    pub buckets: Vec<u64>,
+    pub zeros: u64,
+    pub count: u64,
+    pub max: u64,
+}
+
+impl Log2Histogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, v: u64) {
+        self.count += 1;
+        self.max = self.max.max(v);
+        if v == 0 {
+            self.zeros += 1;
+            return;
+        }
+        let b = 63 - v.leading_zeros() as usize;
+        if self.buckets.len() <= b {
+            self.buckets.resize(b + 1, 0);
+        }
+        self.buckets[b] += 1;
+    }
+
+    /// Render as `(bucket_floor, count)` rows.
+    pub fn rows(&self) -> Vec<(u64, u64)> {
+        let mut out = Vec::new();
+        if self.zeros > 0 {
+            out.push((0, self.zeros));
+        }
+        for (b, &c) in self.buckets.iter().enumerate() {
+            if c > 0 {
+                out.push((1u64 << b, c));
+            }
+        }
+        out
+    }
+}
+
+/// Fixed-width ASCII table writer for harness output (the "same rows the
+/// paper reports" formatting used by `lcc table2` etc.).
+pub struct AsciiTable {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl AsciiTable {
+    pub fn new(header: &[&str]) -> Self {
+        AsciiTable {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let mut out = fmt_row(&self.header);
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_median_stddev() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-12);
+        assert!((median(&xs) - 2.5).abs() < 1e-12);
+        assert!((stddev(&xs) - 1.2909944487).abs() < 1e-6);
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(stddev(&[5.0]), 0.0);
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs = [5.0, 1.0, 3.0, 2.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 1.0), 5.0);
+        assert_eq!(percentile(&xs, 0.5), 3.0);
+        assert!((percentile(&xs, 0.25) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn log2_histogram_buckets() {
+        let mut h = Log2Histogram::new();
+        for v in [0, 1, 1, 2, 3, 4, 7, 8, 1024] {
+            h.add(v);
+        }
+        assert_eq!(h.count, 9);
+        assert_eq!(h.zeros, 1);
+        assert_eq!(h.max, 1024);
+        let rows = h.rows();
+        assert!(rows.contains(&(0, 1)));
+        assert!(rows.contains(&(1, 2))); // 1,1
+        assert!(rows.contains(&(2, 2))); // 2,3
+        assert!(rows.contains(&(4, 2))); // 4,7
+        assert!(rows.contains(&(8, 1)));
+        assert!(rows.contains(&(1024, 1)));
+    }
+
+    #[test]
+    fn ascii_table_renders_aligned() {
+        let mut t = AsciiTable::new(&["name", "value"]);
+        t.row(vec!["orkut".into(), "2".into()]);
+        t.row(vec!["friendster".into(), "3".into()]);
+        let s = t.render();
+        assert!(s.contains("orkut"));
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        // value column aligned
+        assert_eq!(
+            lines[2].find('2'),
+            lines[3].find('3'),
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn ascii_table_rejects_bad_row() {
+        let mut t = AsciiTable::new(&["a", "b"]);
+        t.row(vec!["x".into()]);
+    }
+}

@@ -1,0 +1,209 @@
+//! Integration: every algorithm produces oracle-identical canonical labels
+//! on a zoo of structured and random graphs, across seeds and with the §6
+//! optimizations toggled.
+
+use lcc::cc::{self, oracle, RunOptions};
+use lcc::graph::{generators, Graph};
+use lcc::mpc::{MpcConfig, Simulator};
+use lcc::util::rng::Rng;
+
+fn run(algo: &str, g: &Graph, seed: u64, opts: &RunOptions) -> cc::CcResult {
+    let algorithm = cc::by_name(algo);
+    let mut sim = Simulator::new(MpcConfig {
+        machines: 8,
+        space_per_machine: None,
+        threads: 2,
+    });
+    let mut rng = Rng::new(seed);
+    algorithm.run(g, &mut sim, &mut rng, opts)
+}
+
+fn zoo() -> Vec<(String, Graph)> {
+    let mut rng = Rng::new(999);
+    vec![
+        ("empty".into(), Graph::empty(13)),
+        ("single-edge".into(), Graph::from_edges(2, vec![(0, 1)])),
+        ("path-64".into(), generators::path(64)),
+        ("cycle-65".into(), generators::cycle(65)),
+        ("star-100".into(), generators::star(100)),
+        ("complete-20".into(), generators::complete(20)),
+        ("grid-9x11".into(), generators::grid(9, 11)),
+        ("tree-127".into(), generators::binary_tree(127)),
+        ("caterpillar".into(), generators::caterpillar(20, 3)),
+        ("two-cycles".into(), generators::one_or_two_cycles(50, true)),
+        ("one-cycle".into(), generators::one_or_two_cycles(50, false)),
+        (
+            "mixture".into(),
+            generators::path(30)
+                .disjoint_union(generators::complete(8))
+                .disjoint_union(Graph::empty(5))
+                .disjoint_union(generators::star(12)),
+        ),
+        ("gnp-sparse".into(), generators::gnp(300, 0.004, &mut rng)),
+        ("gnp-medium".into(), generators::gnp(300, 0.02, &mut rng)),
+        (
+            "gnp-log".into(),
+            generators::gnp_log_regime(400, 2.0, &mut rng),
+        ),
+        (
+            "chung-lu".into(),
+            generators::chung_lu(400, 6.0, 2.5, &mut rng),
+        ),
+        (
+            "rmat".into(),
+            generators::rmat(8, 800, (0.57, 0.19, 0.19, 0.05), &mut rng),
+        ),
+        (
+            "pref-attach".into(),
+            generators::preferential_attachment(300, 2, &mut rng),
+        ),
+    ]
+}
+
+#[test]
+fn all_algorithms_match_oracle_on_zoo() {
+    for (name, g) in zoo() {
+        let want = oracle::components(&g);
+        for algo in cc::ALL_ALGORITHMS {
+            let res = run(algo, &g, 1, &RunOptions::default());
+            assert!(res.completed, "{algo} incomplete on {name}");
+            assert_eq!(res.labels, want, "{algo} wrong on {name}");
+        }
+    }
+}
+
+#[test]
+fn seeds_do_not_change_answers() {
+    let g = generators::gnp(250, 0.015, &mut Rng::new(5));
+    let want = oracle::components(&g);
+    for algo in ["lc", "lc-mtl", "tc", "tc-dht", "cracker"] {
+        for seed in [0u64, 7, 123456789, u64::MAX] {
+            let res = run(algo, &g, seed, &RunOptions::default());
+            assert_eq!(res.labels, want, "{algo} seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn finisher_preserves_answers() {
+    let g = generators::gnp(400, 0.008, &mut Rng::new(6));
+    let want = oracle::components(&g);
+    for algo in ["lc", "tc-dht", "cracker"] {
+        for threshold in [1usize, 50, 10_000] {
+            let opts = RunOptions {
+                finisher_threshold: threshold,
+                ..Default::default()
+            };
+            let res = run(algo, &g, 2, &opts);
+            assert_eq!(res.labels, want, "{algo} finisher={threshold}");
+        }
+    }
+}
+
+#[test]
+fn pruning_toggle_preserves_answers() {
+    let g = generators::rmat(9, 1200, (0.57, 0.19, 0.19, 0.05), &mut Rng::new(7));
+    let want = oracle::components(&g);
+    for prune in [true, false] {
+        let opts = RunOptions {
+            prune_isolated: prune,
+            ..Default::default()
+        };
+        let res = run("lc", &g, 3, &opts);
+        assert_eq!(res.labels, want, "prune={prune}");
+    }
+}
+
+#[test]
+fn machine_count_is_immaterial() {
+    let g = generators::gnp(200, 0.02, &mut Rng::new(8));
+    let want = oracle::components(&g);
+    for machines in [1usize, 2, 64] {
+        let algorithm = cc::by_name("lc");
+        let mut sim = Simulator::new(MpcConfig {
+            machines,
+            space_per_machine: None,
+            threads: 1,
+        });
+        let mut rng = Rng::new(4);
+        let res = algorithm.run(&g, &mut sim, &mut rng, &RunOptions::default());
+        assert_eq!(res.labels, want, "machines={machines}");
+    }
+}
+
+#[test]
+fn phase_counts_match_paper_expectations_on_random_graph() {
+    // Table 2 shape: all contraction algorithms finish in <= ~6 phases on a
+    // well-connected random graph; Hash-To-Min needs more.
+    let g = generators::gnp_log_regime(3000, 3.0, &mut Rng::new(9));
+    let lc = run("lc", &g, 5, &RunOptions::default());
+    let tc = run("tc-dht", &g, 5, &RunOptions::default());
+    let cracker = run("cracker", &g, 5, &RunOptions::default());
+    let htm = run("htm", &g, 5, &RunOptions::default());
+    assert!(lc.phases <= 6, "lc {}", lc.phases);
+    assert!(tc.phases <= 8, "tc {}", tc.phases);
+    assert!(cracker.phases <= 6, "cracker {}", cracker.phases);
+    assert!(
+        htm.phases >= lc.phases,
+        "htm {} vs lc {}",
+        htm.phases,
+        lc.phases
+    );
+}
+
+#[test]
+fn figure1_shape_edges_shrink_fast_on_dense_graphs() {
+    // The paper's headline observation: on high-average-degree graphs each
+    // LocalContraction phase cuts edges by ~10x or more.
+    let g = generators::preferential_attachment(20_000, 16, &mut Rng::new(10));
+    let res = run("lc", &g, 6, &RunOptions::default());
+    for w in res.edges_per_phase.windows(2) {
+        if w[0] > 1000 && w[1] > 0 {
+            let decay = w[0] as f64 / w[1] as f64;
+            assert!(decay >= 4.0, "weak decay {decay} in {:?}", res.edges_per_phase);
+        }
+    }
+}
+
+#[test]
+fn definition_5_1_superset_class_stays_correct_and_fast() {
+    // 𝒢(n,p) (Definition 5.1): a G(n,p) sample plus an ADVERSARIAL fixed
+    // edge set.  Theorem 5.5's loglog behaviour must survive the overlay
+    // and correctness must be unaffected.
+    let n = 4096;
+    let mut rng = Rng::new(11);
+    // adversarial overlay: a long path + a star, stitched across the id space
+    let mut extra: Vec<(u32, u32)> = (1..n as u32 / 4).map(|v| (v - 1, v)).collect();
+    extra.extend((1..200u32).map(|v| (n as u32 - 1, n as u32 - 1 - v)));
+    let p = 2.0 * (n as f64).ln() / n as f64;
+    let g = generators::gnp_class(n, p, &extra, &mut rng);
+    let want = oracle::components(&g);
+    for algo in ["lc", "lc-mtl", "tc-dht"] {
+        let res = run(algo, &g, 5, &RunOptions::default());
+        assert_eq!(res.labels, want, "{algo}");
+        assert!(res.phases <= 6, "{algo} took {} phases", res.phases);
+    }
+}
+
+#[test]
+fn merge_to_large_alpha_extremes_are_safe() {
+    // degenerate schedules must not break correctness
+    use lcc::cc::local_contraction::LocalContraction;
+    use lcc::cc::merge_to_large::Schedule;
+    let g = generators::gnp(500, 0.01, &mut Rng::new(12));
+    let want = oracle::components(&g);
+    for (c, floor) in [(0.1, 2u64), (50.0, 2), (1.0, 1_000_000)] {
+        use lcc::cc::CcAlgorithm;
+        let algo = LocalContraction {
+            merge_to_large: Some(Schedule { c, floor }),
+        };
+        let mut sim = Simulator::new(MpcConfig {
+            machines: 4,
+            space_per_machine: None,
+            threads: 1,
+        });
+        let mut rng = Rng::new(13);
+        let res = algo.run(&g, &mut sim, &mut rng, &RunOptions::default());
+        assert_eq!(res.labels, want, "c={c} floor={floor}");
+    }
+}

