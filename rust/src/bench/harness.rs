@@ -32,6 +32,21 @@ impl Measurement {
         self.units_per_iter.map(|u| u / self.median_s())
     }
 
+    /// Machine-readable form (the row schema of `BENCH_PR1.json`).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        crate::util::json::Json::obj()
+            .set("name", self.name.as_str())
+            .set("median_s", self.median_s())
+            .set("p95_s", self.p95_s())
+            .set("mean_s", self.mean_s())
+            .set("samples", self.samples.len() as i64)
+            .set(
+                "throughput_units_per_s",
+                self.throughput().map(Json::Num).unwrap_or(Json::Null),
+            )
+    }
+
     pub fn report_line(&self) -> String {
         let tp = match self.throughput() {
             Some(t) if t >= 1e6 => format!("  {:8.2} Munit/s", t / 1e6),

@@ -71,6 +71,21 @@ pub fn bench_lc_end_to_end(b: &Bench, n: usize, avg_deg: f64) -> Measurement {
     )
 }
 
+/// Graph-layer primitive: `Graph::normalize` on a shuffled multigraph
+/// edge list (the parallel radix-sort hot path; §Perf).
+pub fn bench_normalize(b: &Bench, n: usize, avg_deg: f64) -> Measurement {
+    let mut rng = Rng::new(10);
+    let m_target = (n as f64 * avg_deg / 2.0) as usize;
+    let raw: Vec<(u32, u32)> = (0..m_target)
+        .map(|_| (rng.gen_range(n as u64) as u32, rng.gen_range(n as u64) as u32))
+        .collect();
+    let m = raw.len() as f64;
+    b.run(&format!("L2/normalize n={n} m={m_target}"), Some(m), || {
+        let g = crate::graph::Graph::from_edges(n, raw.clone());
+        std::hint::black_box(g.num_edges());
+    })
+}
+
 /// Streaming pipeline throughput (edges/s through shard-local contraction).
 pub fn bench_pipeline(b: &Bench, n: usize, avg_deg: f64, workers: usize) -> Measurement {
     let g = generators::gnp(n, avg_deg / n as f64, &mut Rng::new(5));
@@ -126,7 +141,9 @@ pub fn standard_suite(quick: bool) -> Vec<Measurement> {
     let mut out = vec![
         bench_min_hop(&b, 100_000, 8.0, 1),
         bench_min_hop(&b, 100_000, 8.0, 8),
+        bench_lc_phase(&b, 100_000, 8.0, 1),
         bench_lc_phase(&b, 100_000, 8.0, 8),
+        bench_normalize(&b, 100_000, 8.0),
         bench_lc_end_to_end(&b, 50_000, 8.0),
         bench_pipeline(&b, 200_000, 8.0, 1),
         bench_pipeline(&b, 200_000, 8.0, 4),
@@ -138,6 +155,24 @@ pub fn standard_suite(quick: bool) -> Vec<Measurement> {
         eprintln!("[perf] XLA artifacts not built; skipping L1/dense_xla");
     }
     out
+}
+
+/// The standard suite as one machine-readable document — the schema of
+/// `BENCH_PR1.json` at the repo root (`lcc perf --quick --out FILE`), so
+/// the perf trajectory is tracked as a checked-in artifact from PR 1 on.
+pub fn suite_json(measurements: &[Measurement], quick: bool) -> crate::util::json::Json {
+    use crate::util::json::Json;
+    Json::obj()
+        .set("suite", "lcc-perf-standard")
+        .set("quick", quick)
+        .set(
+            "threads_available",
+            crate::mpc::pool::default_threads(),
+        )
+        .set(
+            "benches",
+            Json::Arr(measurements.iter().map(|m| m.to_json()).collect()),
+        )
 }
 
 #[cfg(test)]
@@ -155,5 +190,25 @@ mod tests {
         assert!(m.median_s() > 0.0);
         let m = bench_dense_cpu(&b, 256, 8.0);
         assert!(m.throughput().unwrap() > 0.0);
+        let m = bench_normalize(&b, 2000, 4.0);
+        assert!(m.median_s() > 0.0);
+    }
+
+    #[test]
+    fn suite_json_is_well_formed() {
+        let b = Bench {
+            warmup_iters: 0,
+            sample_iters: 1,
+            slow_cutoff_s: 30.0,
+        };
+        let ms = vec![bench_min_hop(&b, 500, 4.0, 2)];
+        let doc = suite_json(&ms, true);
+        assert_eq!(doc.get("suite").and_then(|j| j.as_str()), Some("lcc-perf-standard"));
+        let benches = doc.get("benches").and_then(|j| j.as_arr()).unwrap();
+        assert_eq!(benches.len(), 1);
+        assert!(benches[0].get("median_s").and_then(|j| j.as_f64()).unwrap() > 0.0);
+        // round-trips through the parser
+        let text = doc.pretty();
+        assert!(crate::util::json::parse(&text).is_ok());
     }
 }

@@ -2,9 +2,10 @@
 //! neighborhood min/max hops as MPC rounds, and contraction as MPC rounds
 //! (Lemma 3.1).
 
-use crate::graph::{Graph, Vertex};
+use crate::graph::{Csr, Graph, Vertex};
+use crate::mpc::pool::{self, chunk_range};
 use crate::mpc::Simulator;
-use crate::util::rng::Rng;
+use crate::util::rng::{splitmix64, Rng};
 
 /// Per-phase random ordering `rho` plus its inverse.
 ///
@@ -20,10 +21,9 @@ pub struct Priorities {
 
 impl Priorities {
     pub fn sample(n: usize, rng: &mut Rng) -> Self {
-        let mut inv = rng.permutation(n); // inv[p] = vertex with priority p
-        // actually build rho first, then invert — permutation() returns a
-        // uniformly random bijection either way.
-        let rho = std::mem::take(&mut inv);
+        // permutation() returns a uniformly random bijection; read it as
+        // rho (vertex -> priority) and invert it.
+        let rho = rng.permutation(n);
         let mut inv = vec![0u32; n];
         for (v, &p) in rho.iter().enumerate() {
             inv[p as usize] = v as u32;
@@ -52,21 +52,38 @@ where
     let n = g.num_vertices();
     debug_assert_eq!(vals.len(), n);
     // Associative+commutative per-key fold -> the simulator's grouping-free
-    // fast path (identical semantics and accounting; §Perf).
+    // chunked fast path: the edge list (and the self-message range) is
+    // sliced into one lazy message chunk per configured thread, folded
+    // edge-parallel on the worker pool (identical semantics and
+    // accounting; §Perf).
     let mut out: Vec<V> = vals.to_vec();
-    let edge_msgs = g.edges().iter().flat_map(|&(u, v)| {
-        [
-            (u as u64, vals[v as usize]),
-            (v as u64, vals[u as usize]),
-        ]
-    });
-    let self_msgs = (0..if include_self { n } else { 0 }).map(|v| (v as u64, vals[v]));
-    // vertices with no messages keep their own value (out prefilled), and
-    // round_fold overwrites on first touch, so self-inclusion is exact.
-    // round_fold *replaces* on a key's first message, so with
-    // include_self=false a vertex's own value correctly drops out as soon
-    // as any neighbor message arrives, and is kept otherwise.
-    sim.round_fold(label, &mut out, edge_msgs.chain(self_msgs), op);
+    let edges = g.edges();
+    let t = sim.cfg.threads.max(1);
+    let chunks: Vec<_> = (0..t)
+        .map(|i| {
+            let (ea, eb) = chunk_range(edges.len(), t, i);
+            let (sa, sb) = if include_self {
+                chunk_range(n, t, i)
+            } else {
+                (0, 0)
+            };
+            // vertices with no messages keep their own value (out
+            // prefilled), and the fold *replaces* on a key's first
+            // message, so with include_self=false a vertex's own value
+            // correctly drops out as soon as any neighbor message
+            // arrives, and is kept otherwise.
+            edges[ea..eb]
+                .iter()
+                .flat_map(move |&(u, v)| {
+                    [
+                        (u as u64, vals[v as usize]),
+                        (v as u64, vals[u as usize]),
+                    ]
+                })
+                .chain((sa..sb).map(move |v| (v as u64, vals[v])))
+        })
+        .collect();
+    sim.round_fold_chunked(label, &mut out, chunks, op);
     out
 }
 
@@ -94,6 +111,102 @@ pub fn max_hop(
     neighborhood_fold(sim, label, g, vals, include_self, u32::max)
 }
 
+/// Two **fused** self-inclusive neighborhood hops (the `l_rho` two-hop of
+/// §3 and the MergeToLarge reach-2 step of §5): one CSR traversal per hop
+/// on the worker pool, while the model is charged exactly the two rounds
+/// the unfused [`neighborhood_fold`] pair would record.
+///
+/// The fusion is metric-exact because both hops ship the same message
+/// *shape*: each edge sends a fixed-size value both ways and every vertex
+/// sends itself its own value, so `messages`, `bytes`, and the per-machine
+/// key loads coincide for hop 1 and hop 2 — they are computed once and
+/// recorded under both labels.  `op` must be associative and commutative
+/// (min/max), which also makes the CSR evaluation order irrelevant.
+pub fn fused_two_hop<V>(
+    sim: &mut Simulator,
+    labels: (&str, &str),
+    g: &Graph,
+    csr: &Csr,
+    vals: &[V],
+    op: fn(V, V) -> V,
+) -> Vec<V>
+where
+    V: crate::mpc::WireSize + Copy + Send + Sync,
+{
+    let n = g.num_vertices();
+    debug_assert_eq!(vals.len(), n);
+    debug_assert_eq!(csr.num_vertices(), n);
+    let t = sim.cfg.threads.max(1);
+    let p = sim.cfg.machines.max(1);
+    let edges = g.edges();
+
+    // Per-machine load of one hop round: every edge charges both endpoint
+    // keys, every vertex charges its own key (self message).  All values
+    // of a Copy wire type have one size, so bytes = messages * msg_size.
+    let msg_size: u64 = vals.first().map(|v| 8 + v.wire_size()).unwrap_or(0);
+    let mb_parts = pool::global().run_jobs(
+        (0..t)
+            .map(|i| {
+                let (ea, eb) = chunk_range(edges.len(), t, i);
+                let (va, vb) = chunk_range(n, t, i);
+                let edges = &edges[ea..eb];
+                move || {
+                    let mut mb = vec![0u64; p];
+                    for &(u, v) in edges {
+                        mb[(splitmix64(u as u64) % p as u64) as usize] += msg_size;
+                        mb[(splitmix64(v as u64) % p as u64) as usize] += msg_size;
+                    }
+                    for v in va..vb {
+                        mb[(splitmix64(v as u64) % p as u64) as usize] += msg_size;
+                    }
+                    mb
+                }
+            })
+            .collect(),
+    );
+    let mut machine_bytes = vec![0u64; p];
+    for part in mb_parts {
+        for (a, b) in machine_bytes.iter_mut().zip(&part) {
+            *a += b;
+        }
+    }
+    let messages = 2 * edges.len() as u64 + n as u64;
+    let bytes = messages * msg_size;
+
+    // The hop itself: vertex-chunked CSR traversal on the pool.
+    let hop = |src: &[V]| -> Vec<V> {
+        let parts = pool::global().run_jobs(
+            (0..t)
+                .map(|i| {
+                    let (va, vb) = chunk_range(n, t, i);
+                    move || {
+                        (va..vb)
+                            .map(|v| {
+                                let mut best = src[v];
+                                for &u in csr.neighbors(v as Vertex) {
+                                    best = op(best, src[u as usize]);
+                                }
+                                best
+                            })
+                            .collect::<Vec<V>>()
+                    }
+                })
+                .collect(),
+        );
+        let mut out = Vec::with_capacity(n);
+        for part in parts {
+            out.extend(part);
+        }
+        out
+    };
+
+    let h1 = hop(vals);
+    sim.charge_round(labels.0, messages, bytes, &machine_bytes);
+    let h2 = hop(&h1);
+    sim.charge_round(labels.1, messages, bytes, &machine_bytes);
+    h2
+}
+
 /// Contraction step as MPC rounds (Lemma 3.1): relabel both endpoints of
 /// every edge through `labels`, dedup, and build the contracted graph.
 ///
@@ -102,49 +215,70 @@ pub fn max_hop(
 /// right endpoint ("these messages are grouped again by vertices and the
 /// label mapping is applied").  Returns the contracted graph plus the
 /// old-node -> new-node compaction map.
+///
+/// The two per-message transform rounds are **fused** into one chunked
+/// pass on the worker pool, so the half-rewritten edge vector is never
+/// materialized.  The accounting stays round-exact: round 1 sends
+/// `(u, v)` keyed by `u`, round 2 sends `(l(u),)` keyed by the original
+/// `v` — both 12-byte messages whose machine loads depend only on the
+/// keys, so one pass computes both loads and charges the two rounds
+/// separately.
 pub fn contract_mpc(
     sim: &mut Simulator,
     g: &Graph,
     labels: &[Vertex],
 ) -> (Graph, Vec<Vertex>) {
-    // Both rounds are per-message transforms (the machine owning the key
-    // applies the label map) -> the simulator's grouping-free map path.
-    // round 1: (u, v) -> (l(u), v), keyed by u
-    let half: Vec<(u32, u32)> = sim.round_map(
-        "contract/left",
-        g.edges().iter().map(|&(u, v)| (u as u64, v)),
-        |u, v| (labels[u as usize], v),
+    let p = sim.cfg.machines.max(1);
+    let t = sim.cfg.threads.max(1);
+    let edges = g.edges();
+    let m = edges.len();
+    let parts = pool::global().run_jobs(
+        (0..t)
+            .map(|i| {
+                let (a, b) = chunk_range(m, t, i);
+                let edges = &edges[a..b];
+                move || {
+                    let mut out = Vec::with_capacity(edges.len());
+                    let mut mb_left = vec![0u64; p];
+                    let mut mb_right = vec![0u64; p];
+                    for &(u, v) in edges {
+                        mb_left[(splitmix64(u as u64) % p as u64) as usize] += 12;
+                        mb_right[(splitmix64(v as u64) % p as u64) as usize] += 12;
+                        out.push((labels[u as usize], labels[v as usize]));
+                    }
+                    (out, mb_left, mb_right)
+                }
+            })
+            .collect(),
     );
-    // round 2: (l(u), v) -> (l(u), l(v)), keyed by v
-    let relabeled: Vec<(u32, u32)> = sim.round_map(
-        "contract/right",
-        half.into_iter().map(|(lu, v)| (v as u64, lu)),
-        |v, lu| (lu, labels[v as usize]),
-    );
+    let mut relabeled: Vec<(u32, u32)> = Vec::with_capacity(m);
+    let mut mb_left = vec![0u64; p];
+    let mut mb_right = vec![0u64; p];
+    for (out, left, right) in parts {
+        relabeled.extend(out);
+        for (a, b) in mb_left.iter_mut().zip(&left) {
+            *a += b;
+        }
+        for (a, b) in mb_right.iter_mut().zip(&right) {
+            *a += b;
+        }
+    }
+    let bytes = 12 * m as u64;
+    sim.charge_round("contract/left", m as u64, bytes, &mb_left);
+    sim.charge_round("contract/right", m as u64, bytes, &mb_right);
 
     // Build the contracted graph over the compacted label space (duplicate
     // removal is "standard", charged inside the same rounds).  Labels are
-    // vertex ids < n, so compaction is a rank table rather than per-edge
-    // binary search (§Perf).
+    // vertex ids < n, so compaction is the shared dense rank table
+    // (`graph::label_ranks`) rather than per-edge binary search (§Perf).
     let n = labels.len();
-    let mut present = vec![false; n];
-    for &l in labels {
-        present[l as usize] = true;
-    }
-    let mut rank_of = vec![0 as Vertex; n];
-    let mut next = 0 as Vertex;
-    for l in 0..n {
-        if present[l] {
-            rank_of[l] = next;
-            next += 1;
-        }
-    }
+    let (rank_of, count) = crate::graph::label_ranks(labels, n);
     let compact: Vec<Vertex> = labels.iter().map(|&l| rank_of[l as usize]).collect();
     let edges: Vec<(Vertex, Vertex)> = relabeled
         .into_iter()
         .map(|(lu, lv)| (rank_of[lu as usize], rank_of[lv as usize]))
         .collect();
-    (Graph::from_edges(next as usize, edges), compact)
+    (Graph::from_edges(count, edges), compact)
 }
 
 #[cfg(test)]
@@ -220,6 +354,90 @@ mod tests {
         assert_eq!(cm, cg);
         assert_eq!(compact_m, compact_g);
         assert_eq!(s.metrics.num_rounds(), 2, "contraction is O(1) rounds");
+    }
+
+    fn sim_threads(threads: usize) -> Simulator {
+        Simulator::new(MpcConfig {
+            machines: 4,
+            space_per_machine: None,
+            threads,
+        })
+    }
+
+    #[test]
+    fn fused_two_hop_matches_two_min_hops_on_random_graphs() {
+        // Property: for random graphs, the fused CSR two-hop equals two
+        // sequential min_hop rounds — same values AND same per-round model
+        // metrics (messages, bytes, max_machine_bytes, space_violation).
+        crate::util::quickcheck::Prop::new(24).check_sized(
+            "fused-two-hop",
+            300,
+            |rng, size| {
+                let n = size.max(2);
+                generators::gnp(n, 4.0 / n as f64, rng)
+            },
+            |g| {
+                let n = g.num_vertices();
+                let vals: Vec<u32> = (0..n as u32).map(|v| v.wrapping_mul(2654435761)).collect();
+                for threads in [1usize, 4] {
+                    let mut s_seq = sim_threads(threads);
+                    let h1 = min_hop(&mut s_seq, "hop1", g, &vals, true);
+                    let h2 = min_hop(&mut s_seq, "hop2", g, &h1, true);
+
+                    let mut s_fused = sim_threads(threads);
+                    let csr = crate::graph::Csr::build(g);
+                    let fused =
+                        fused_two_hop(&mut s_fused, ("hop1", "hop2"), g, &csr, &vals, u32::min);
+
+                    crate::prop_assert!(fused == h2, "values diverge (threads={threads})");
+                    crate::prop_assert!(
+                        s_fused.metrics.rounds == s_seq.metrics.rounds,
+                        "metrics diverge (threads={threads}): {:?} vs {:?}",
+                        s_fused.metrics.rounds,
+                        s_seq.metrics.rounds
+                    );
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn neighborhood_fold_is_engine_invariant() {
+        let mut rng = Rng::new(21);
+        let g = generators::gnp(800, 0.01, &mut rng);
+        let vals: Vec<u32> = (0..800u32).rev().collect();
+        let exec = |threads: usize, include_self: bool| {
+            let mut s = sim_threads(threads);
+            let out = neighborhood_fold(&mut s, "t", &g, &vals, include_self, u32::min);
+            (out, s.metrics.rounds)
+        };
+        for include_self in [true, false] {
+            let base = exec(1, include_self);
+            for threads in [4, 8] {
+                assert_eq!(
+                    exec(threads, include_self),
+                    base,
+                    "threads={threads} include_self={include_self}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn contract_mpc_is_engine_invariant() {
+        let mut rng = Rng::new(22);
+        let g = generators::gnp(600, 0.01, &mut rng);
+        let labels: Vec<Vertex> = (0..600u32).map(|v| v % 97).collect();
+        let exec = |threads: usize| {
+            let mut s = sim_threads(threads);
+            let (cg, compact) = contract_mpc(&mut s, &g, &labels);
+            (cg, compact, s.metrics.rounds)
+        };
+        let base = exec(1);
+        for threads in [4, 8] {
+            assert_eq!(exec(threads), base, "threads={threads}");
+        }
     }
 
     #[test]

@@ -15,6 +15,7 @@ use super::common::{contract_mpc, Priorities};
 use super::contraction_loop::{self, LoopOptions, PhaseOutcome};
 use super::{CcAlgorithm, CcResult, RunOptions};
 use crate::graph::{Graph, Vertex};
+use crate::mpc::pool::chunk_range;
 use crate::mpc::Simulator;
 use crate::util::rng::Rng;
 
@@ -47,18 +48,33 @@ pub fn min_neighbor(g: &Graph, rho: &Priorities, sim: &mut Simulator) -> Vec<Ver
 
 /// Hash-To-Min style rewiring: edges `{(m(v), u) : u ∈ N(v) ∪ {v}}`.
 /// One MPC round (each vertex's neighborhood is shipped to `m(v)`).
+///
+/// The heaviest Cracker round, so it goes through the engine's chunked
+/// map path: one lazy message chunk per configured thread (edge slice +
+/// self-message range, mirroring `neighborhood_fold`).  The emitted edge
+/// order varies with the chunk count, but `Graph::from_edges` normalizes
+/// it away — graph and metrics stay engine-invariant.
 pub fn rewire(g: &Graph, m: &[Vertex], sim: &mut Simulator) -> Graph {
     let n = g.num_vertices();
-    let edge_msgs = g.edges().iter().flat_map(|&(u, v)| {
-        [
-            (m[u as usize] as u64, (m[u as usize], v)),
-            (m[v as usize] as u64, (m[v as usize], u)),
-        ]
-    });
-    let self_msgs = (0..n as u32).map(|v| (m[v as usize] as u64, (m[v as usize], v)));
+    let edges = g.edges();
+    let t = sim.cfg.threads.max(1);
+    let chunks: Vec<_> = (0..t)
+        .map(|i| {
+            let (ea, eb) = chunk_range(edges.len(), t, i);
+            let (sa, sb) = chunk_range(n, t, i);
+            edges[ea..eb]
+                .iter()
+                .flat_map(move |&(u, v)| {
+                    [
+                        (m[u as usize] as u64, (m[u as usize], v)),
+                        (m[v as usize] as u64, (m[v as usize], u)),
+                    ]
+                })
+                .chain((sa..sb).map(move |v| (m[v] as u64, (m[v], v as u32))))
+        })
+        .collect();
     // pure message delivery: each new edge materializes at its hub machine
-    let edges: Vec<(u32, u32)> =
-        sim.round_map("cracker/rewire", edge_msgs.chain(self_msgs), |_, pair| pair);
+    let edges: Vec<(u32, u32)> = sim.round_map_chunked("cracker/rewire", chunks, |_, pair| pair);
     Graph::from_edges(n, edges)
 }
 

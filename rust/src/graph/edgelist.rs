@@ -7,6 +7,31 @@
 
 pub type Vertex = u32;
 
+/// Dense rank table over the image of `labels` within `0..universe`:
+/// returns `(rank_of, count)` where `rank_of[l]` is the index of label `l`
+/// in the ascending sequence of distinct labels (slots of absent labels
+/// are 0 and must not be read) and `count` is the number of distinct
+/// labels.  O(n + universe) — shared by [`Graph::contract`] and the MPC
+/// contraction (`cc::common::contract_mpc`) in place of the former
+/// per-edge `binary_search` (§Perf).
+///
+/// Every value in `labels` must be `< universe`.
+pub fn label_ranks(labels: &[Vertex], universe: usize) -> (Vec<Vertex>, usize) {
+    let mut present = vec![false; universe];
+    for &l in labels {
+        present[l as usize] = true;
+    }
+    let mut rank_of = vec![0 as Vertex; universe];
+    let mut next = 0u32;
+    for l in 0..universe {
+        if present[l] {
+            rank_of[l] = next;
+            next += 1;
+        }
+    }
+    (rank_of, next as usize)
+}
+
 /// An undirected graph as `n` vertex slots plus an edge list.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Graph {
@@ -55,6 +80,11 @@ impl Graph {
     }
 
     /// Canonicalize to `(min,max)`, drop self-loops, sort + dedup.
+    ///
+    /// The sort runs after every contraction phase, so it is a system hot
+    /// spot: large lists pack each edge into a `u64` (`u << 32 | v`, which
+    /// preserves lexicographic pair order) and go through the parallel
+    /// radix sort; small lists keep the comparison sort (§Perf).
     pub fn normalize(&mut self) {
         for e in &mut self.edges {
             assert!(
@@ -69,8 +99,21 @@ impl Graph {
             }
         }
         self.edges.retain(|e| e.0 != e.1);
-        self.edges.sort_unstable();
-        self.edges.dedup();
+        if self.edges.len() < (1 << 12) {
+            self.edges.sort_unstable();
+            self.edges.dedup();
+        } else {
+            let mut keys: Vec<u64> = self
+                .edges
+                .iter()
+                .map(|&(u, v)| ((u as u64) << 32) | v as u64)
+                .collect();
+            crate::util::radix::par_sort_u64(&mut keys);
+            keys.dedup();
+            self.edges.clear();
+            self.edges
+                .extend(keys.into_iter().map(|k| ((k >> 32) as Vertex, k as Vertex)));
+        }
     }
 
     /// Per-vertex degree (normalized-graph semantics: no loops, no multi-edges).
@@ -114,18 +157,36 @@ impl Graph {
     pub fn contract(&self, labels: &[Vertex]) -> (Graph, Vec<Vertex>) {
         assert_eq!(labels.len(), self.n, "labels len != n");
         // Compact label image -> dense ids, preserving label order so that
-        // canonical (minimum) labels stay comparable across phases.
-        let mut sorted: Vec<Vertex> = labels.to_vec();
-        sorted.sort_unstable();
-        sorted.dedup();
-        let rank = |l: Vertex| sorted.binary_search(&l).unwrap() as Vertex;
-        let compact: Vec<Vertex> = labels.iter().map(|&l| rank(l)).collect();
+        // canonical (minimum) labels stay comparable across phases.  The
+        // usual case (labels are vertex ids, so values ~< n) uses the O(n)
+        // dense rank table; wildly sparse label values fall back to the
+        // sort + binary-search path rather than allocating a huge table.
+        let universe = labels.iter().map(|&l| l as usize + 1).max().unwrap_or(0);
+        let (compact, count): (Vec<Vertex>, usize) =
+            if universe <= self.n.saturating_mul(4).max(1024) {
+                let (rank_of, count) = label_ranks(labels, universe);
+                (
+                    labels.iter().map(|&l| rank_of[l as usize]).collect(),
+                    count,
+                )
+            } else {
+                let mut sorted: Vec<Vertex> = labels.to_vec();
+                sorted.sort_unstable();
+                sorted.dedup();
+                (
+                    labels
+                        .iter()
+                        .map(|&l| sorted.binary_search(&l).unwrap() as Vertex)
+                        .collect(),
+                    sorted.len(),
+                )
+            };
         let edges: Vec<(Vertex, Vertex)> = self
             .edges
             .iter()
             .map(|&(u, v)| (compact[u as usize], compact[v as usize]))
             .collect();
-        (Graph::from_edges(sorted.len(), edges), compact)
+        (Graph::from_edges(count, edges), compact)
     }
 
     /// Drop isolated vertices, compacting ids.  Returns the pruned graph and
@@ -211,6 +272,48 @@ mod tests {
         assert_eq!(p.num_vertices(), 2);
         assert_eq!(p.edges(), &[(0, 1)]);
         assert_eq!(map, vec![None, Some(0), None, Some(1), None]);
+    }
+
+    #[test]
+    fn label_ranks_match_sorted_dedup() {
+        let labels = vec![9u32, 5, 5, 0, 9, 3];
+        let (rank_of, count) = label_ranks(&labels, 10);
+        assert_eq!(count, 4); // {0, 3, 5, 9}
+        assert_eq!(rank_of[0], 0);
+        assert_eq!(rank_of[3], 1);
+        assert_eq!(rank_of[5], 2);
+        assert_eq!(rank_of[9], 3);
+    }
+
+    #[test]
+    fn contract_sparse_labels_use_fallback() {
+        // max label far above 4n + 1024: exercises the binary-search path
+        let g = Graph::from_edges(3, vec![(0, 1), (1, 2)]);
+        let (c, compact) = g.contract(&[1_000_000, 5, 5]);
+        assert_eq!(c.num_vertices(), 2);
+        assert_eq!(compact, vec![1, 0, 0]);
+        assert_eq!(c.edges(), &[(0, 1)]);
+    }
+
+    #[test]
+    fn normalize_large_list_matches_comparison_sort() {
+        // Above the radix threshold: same canonical result as a small-list
+        // normalize of the same multiset.
+        let mut rng = crate::util::rng::Rng::new(11);
+        let n = 500u64;
+        let raw: Vec<(Vertex, Vertex)> = (0..10_000)
+            .map(|_| (rng.gen_range(n) as Vertex, rng.gen_range(n) as Vertex))
+            .collect();
+        let fast = Graph::from_edges(n as usize, raw.clone());
+
+        let mut slow: Vec<(Vertex, Vertex)> = raw
+            .into_iter()
+            .map(|(u, v)| if u > v { (v, u) } else { (u, v) })
+            .filter(|&(u, v)| u != v)
+            .collect();
+        slow.sort_unstable();
+        slow.dedup();
+        assert_eq!(fast.edges(), &slow[..]);
     }
 
     #[test]

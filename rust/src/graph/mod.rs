@@ -11,4 +11,4 @@ pub mod io;
 pub mod stats;
 
 pub use csr::Csr;
-pub use edgelist::{Graph, Vertex};
+pub use edgelist::{label_ranks, Graph, Vertex};

@@ -55,6 +55,7 @@ Common flags:
   --algo lc|lc-mtl|tc|tc-dht|cracker|two-phase|htm|hash-min
   --graph <preset|path|cycle|star|grid|gnp|gnp-log|file:PATH>   --n <vertices>
   --seed N  --machines N  --finisher N  --use-xla  --verify  --json
+  --out FILE (perf: write the machine-readable suite JSON, BENCH_PR1.json schema)
   --scale N (table/figure dataset size)  --runs N (median-of-N)
   --exp decay|depth|loglog|path|comm|cycles (theory)
   --exp finisher|pruning|mtl|machines|dense (ablation)";
@@ -239,21 +240,19 @@ fn cmd_perf(args: &Args) {
     for m in &measurements {
         println!("{}", m.report_line());
     }
-    if args.bool_or("json", false) {
-        let rows: Vec<Json> = measurements
-            .iter()
-            .map(|m| {
-                Json::obj()
-                    .set("name", m.name.as_str())
-                    .set("median_s", m.median_s())
-                    .set("p95_s", m.p95_s())
-                    .set(
-                        "throughput",
-                        m.throughput().map(Json::Num).unwrap_or(Json::Null),
-                    )
-            })
-            .collect();
-        println!("{}", Json::Arr(rows).pretty());
+    let want_json = args.bool_or("json", false);
+    let out_path = args.str_opt("out").map(String::from);
+    if want_json || out_path.is_some() {
+        let doc = perf::suite_json(&measurements, quick);
+        let text = doc.pretty();
+        if let Some(path) = &out_path {
+            std::fs::write(path, &text)
+                .unwrap_or_else(|e| panic!("cannot write --out {path}: {e}"));
+            eprintln!("[perf] wrote {path}");
+        }
+        if want_json {
+            println!("{text}");
+        }
     }
 }
 

@@ -8,8 +8,10 @@
 
 pub mod dht;
 pub mod metrics;
+pub mod pool;
 pub mod simulator;
 
 pub use dht::Dht;
 pub use metrics::{Metrics, RoundMetrics, WireSize};
+pub use pool::WorkerPool;
 pub use simulator::{MpcConfig, Simulator};

@@ -1,0 +1,292 @@
+//! Persistent worker pool for simulation-level parallelism.
+//!
+//! The simulator previously spawned fresh `thread::scope` threads in every
+//! round; at four rounds per phase and `O(log n)` phases, the spawn/join
+//! overhead and cold stacks dominated the cheap rounds (see EXPERIMENTS.md
+//! §Perf).  This pool spawns its workers once — lazily, on first use — and
+//! keeps them parked on a shared job queue; a round submits its chunk jobs
+//! and blocks until exactly those jobs drain.
+//!
+//! **Scoped borrows.**  Jobs may borrow from the caller's stack (message
+//! slices, value arrays, reducer closures).  [`WorkerPool::run_jobs`]
+//! erases those lifetimes to ship the jobs across the queue, and restores
+//! soundness by blocking on a completion latch before returning: no job
+//! can outlive the borrows it closes over.  This is the classic
+//! `scoped_threadpool` design on std primitives (the offline crate set has
+//! no `rayon`).
+//!
+//! **Determinism.**  `run_jobs` returns results in job order regardless of
+//! which worker ran what, so callers that merge partial results in job
+//! order are bit-deterministic across pool sizes — the property the
+//! simulator's "model metrics are engine-invariant" contract relies on.
+
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Counts outstanding jobs of one [`WorkerPool::run_jobs`] call; `wait`
+/// parks the caller until every job has completed.  Panicking jobs are
+/// counted too (so the latch cannot deadlock) and re-raised caller-side.
+struct Latch {
+    state: Mutex<(usize, bool)>, // (pending, panicked)
+    done: Condvar,
+}
+
+impl Latch {
+    fn new(pending: usize) -> Latch {
+        Latch {
+            state: Mutex::new((pending, false)),
+            done: Condvar::new(),
+        }
+    }
+
+    fn complete(&self, panicked: bool) {
+        let mut st = self.state.lock().unwrap();
+        st.0 -= 1;
+        st.1 |= panicked;
+        if st.0 == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    /// Block until all jobs completed; returns whether any panicked.
+    fn wait(&self) -> bool {
+        let mut st = self.state.lock().unwrap();
+        while st.0 > 0 {
+            st = self.done.wait(st).unwrap();
+        }
+        st.1
+    }
+}
+
+/// SAFETY: the borrows captured by `task` (result slots, the latch, and
+/// the caller's `'a` data) are kept alive by the caller blocking on the
+/// latch until the task has run; the erased lifetime is never exceeded.
+unsafe fn erase<'a>(task: Box<dyn FnOnce() + Send + 'a>) -> Job {
+    std::mem::transmute(task)
+}
+
+/// A fixed set of parked worker threads fed from one shared queue.
+///
+/// The sender sits behind a mutex so the pool is `Sync` on every
+/// supported toolchain (`mpsc::Sender` only became `Sync` in recent std);
+/// submissions are a few cheap sends per round, so the lock is not a
+/// bottleneck.
+pub struct WorkerPool {
+    tx: Option<Mutex<Sender<Job>>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `threads` workers.  `threads == 0` is allowed: every
+    /// `run_jobs` call then executes inline on the caller.
+    pub fn new(threads: usize) -> WorkerPool {
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..threads)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                std::thread::Builder::new()
+                    .name(format!("lcc-worker-{i}"))
+                    .spawn(move || loop {
+                        // Hold the lock only for the dequeue; blocking in
+                        // `recv` under the lock is fine because the lock is
+                        // released the moment a job (or disconnect) arrives.
+                        let job = match rx.lock().unwrap().recv() {
+                            Ok(job) => job,
+                            Err(_) => return, // pool dropped: queue closed
+                        };
+                        job();
+                    })
+                    .expect("spawn lcc pool worker")
+            })
+            .collect();
+        WorkerPool {
+            tx: Some(Mutex::new(tx)),
+            workers,
+        }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Run `jobs` on the pool and return their results **in job order**.
+    ///
+    /// Jobs may borrow from the caller: the call blocks until every job has
+    /// finished, so no borrow is outlived.  Panics (after all jobs drain)
+    /// if any job panicked.  Jobs must not recursively call `run_jobs` on
+    /// the same pool — with all workers busy that would deadlock.
+    pub fn run_jobs<'env, T, F>(&self, jobs: Vec<F>) -> Vec<T>
+    where
+        T: Send + 'env,
+        F: FnOnce() -> T + Send + 'env,
+    {
+        if self.workers.is_empty() || jobs.len() <= 1 {
+            return jobs.into_iter().map(|j| j()).collect();
+        }
+        let n = jobs.len();
+        let mut results: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        let latch = Latch::new(n);
+        let tx = self.tx.as_ref().expect("pool queue alive").lock().unwrap();
+        for (job, slot) in jobs.into_iter().zip(results.iter_mut()) {
+            let latch = &latch;
+            let task = Box::new(move || {
+                // Count completion even on panic so `wait` cannot hang;
+                // the panic flag re-raises below, on the caller's thread.
+                let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    *slot = Some(job());
+                }));
+                latch.complete(caught.is_err());
+            });
+            tx.send(unsafe { erase(task) }).expect("pool queue closed");
+        }
+        drop(tx); // release the submit lock before blocking on the latch
+        if latch.wait() {
+            panic!("worker pool job panicked");
+        }
+        results
+            .into_iter()
+            .map(|r| r.expect("completed job left no result"))
+            .collect()
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.tx.take(); // close the queue: workers see Err and exit
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Default simulation-level parallelism (mirrors `MpcConfig::default`).
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get().min(16))
+        .unwrap_or(4)
+}
+
+/// The process-wide pool.  All simulators (and the graph layer's parallel
+/// sorts) share it: a `Simulator` with `cfg.threads = t` submits `t` chunk
+/// jobs per round, and the pool executes them at whatever parallelism the
+/// hardware offers — chunking, and therefore every result and metric, is a
+/// function of `t` alone, never of the worker count.
+pub fn global() -> &'static WorkerPool {
+    static GLOBAL: OnceLock<WorkerPool> = OnceLock::new();
+    GLOBAL.get_or_init(|| WorkerPool::new(default_threads()))
+}
+
+/// Balanced contiguous split: the `i`-th of `chunks` ranges over `len`
+/// items.  The first `len % chunks` ranges get one extra item, ranges
+/// concatenate to `0..len` in order, and out-of-range `i` yields an empty
+/// range.
+pub fn chunk_range(len: usize, chunks: usize, i: usize) -> (usize, usize) {
+    let chunks = chunks.max(1);
+    let base = len / chunks;
+    let rem = len % chunks;
+    let start = i * base + i.min(rem);
+    let end = start + base + usize::from(i < rem);
+    (start.min(len), end.min(len))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_come_back_in_job_order() {
+        let pool = WorkerPool::new(4);
+        let jobs: Vec<_> = (0..32u64).map(|i| move || i * i).collect();
+        let out = pool.run_jobs(jobs);
+        assert_eq!(out, (0..32u64).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn jobs_can_borrow_caller_data() {
+        let pool = WorkerPool::new(4);
+        let data: Vec<u64> = (0..1000).collect();
+        let jobs: Vec<_> = (0..8)
+            .map(|i| {
+                let data = &data;
+                move || {
+                    let (a, b) = chunk_range(data.len(), 8, i);
+                    data[a..b].iter().sum::<u64>()
+                }
+            })
+            .collect();
+        let total: u64 = pool.run_jobs(jobs).into_iter().sum();
+        assert_eq!(total, 1000 * 999 / 2);
+    }
+
+    #[test]
+    fn pool_is_reusable_across_calls() {
+        let pool = WorkerPool::new(2);
+        for round in 0..10u64 {
+            let out = pool.run_jobs((0..4).map(|i| move || round + i).collect::<Vec<_>>());
+            assert_eq!(out, vec![round, round + 1, round + 2, round + 3]);
+        }
+    }
+
+    #[test]
+    fn zero_worker_pool_runs_inline() {
+        let pool = WorkerPool::new(0);
+        let out = pool.run_jobs(vec![(|| 1u32) as fn() -> u32, || 2u32]);
+        assert_eq!(out, vec![1, 2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "worker pool job panicked")]
+    fn job_panic_propagates_to_caller() {
+        let pool = WorkerPool::new(2);
+        let jobs: Vec<Box<dyn FnOnce() -> u32 + Send>> = vec![
+            Box::new(|| 1),
+            Box::new(|| panic!("boom")),
+            Box::new(|| 2),
+        ];
+        let _ = pool.run_jobs(jobs);
+    }
+
+    #[test]
+    fn pool_survives_a_panicked_job() {
+        let pool = WorkerPool::new(2);
+        let jobs: Vec<Box<dyn FnOnce() -> u32 + Send>> =
+            vec![Box::new(|| panic!("boom")), Box::new(|| 7)];
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run_jobs(jobs);
+        }));
+        assert!(caught.is_err());
+        // workers are still alive and serving
+        let out = pool.run_jobs((0..4u32).map(|i| move || i).collect::<Vec<_>>());
+        assert_eq!(out, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn chunk_ranges_partition_exactly() {
+        for len in [0usize, 1, 7, 64, 100, 1023] {
+            for chunks in [1usize, 2, 3, 8, 16] {
+                let mut expected = 0;
+                for i in 0..chunks {
+                    let (a, b) = chunk_range(len, chunks, i);
+                    assert_eq!(a, expected, "len={len} chunks={chunks} i={i}");
+                    assert!(b >= a);
+                    expected = b;
+                }
+                assert_eq!(expected, len);
+                // out-of-range chunk index is empty
+                let (a, b) = chunk_range(len, chunks, chunks + 3);
+                assert_eq!(a, b);
+            }
+        }
+    }
+
+    #[test]
+    fn global_pool_initializes_once() {
+        let a = global() as *const WorkerPool;
+        let b = global() as *const WorkerPool;
+        assert_eq!(a, b);
+        assert!(global().threads() >= 1);
+    }
+}

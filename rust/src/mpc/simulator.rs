@@ -5,11 +5,22 @@
 //! the caller's *map* output (a flat list of key-value messages) is
 //! partitioned over `machines` by key hash, each machine's bytes are
 //! charged against the space bound, messages are grouped by key, and the
-//! caller's *reduce* runs once per group.  Machines execute on a scoped
-//! thread pool so wall-clock measurements (Table 3) reflect parallel
-//! per-round cost, while the metrics reflect the model-level quantities.
+//! caller's *reduce* runs once per group.  Machines execute on the
+//! persistent worker pool ([`super::pool`]) so wall-clock measurements
+//! (Table 3) reflect parallel per-round cost, while the metrics reflect
+//! the model-level quantities.
+//!
+//! **Engine invariance.**  Model metrics (`messages`, `bytes`,
+//! `max_machine_bytes`, `space_violation`) are pure functions of the
+//! message multiset, so they are bit-identical across `threads` settings:
+//! every parallel path accumulates them as per-chunk `u64` sums merged in
+//! chunk order.  The chunked fast paths additionally require the fold `op`
+//! to be associative and commutative (the min/max hops are), which makes
+//! the *outputs* identical too.  `rust/tests/mpc_accounting.rs` and the
+//! tests below enforce both.
 
 use super::metrics::{Metrics, RoundMetrics, WireSize};
+use super::pool;
 use crate::util::rng::splitmix64;
 
 /// Simulator configuration.
@@ -116,28 +127,20 @@ impl Simulator {
         let outputs: Vec<Vec<R>> = if threads <= 1 {
             per_machine.into_iter().map(run_machine).collect()
         } else {
-            // Scoped threads over chunks of machines.
-            let mut slots: Vec<Option<Vec<(u64, V)>>> =
-                per_machine.into_iter().map(Some).collect();
-            let mut results: Vec<Option<Vec<R>>> = (0..p).map(|_| None).collect();
-            let chunk = p.div_ceil(threads);
-            std::thread::scope(|s| {
-                let mut handles = Vec::new();
-                for (slot_chunk, res_chunk) in
-                    slots.chunks_mut(chunk).zip(results.chunks_mut(chunk))
-                {
-                    let run = &run_machine;
-                    handles.push(s.spawn(move || {
-                        for (slot, res) in slot_chunk.iter_mut().zip(res_chunk.iter_mut()) {
-                            *res = Some(run(slot.take().unwrap()));
-                        }
-                    }));
-                }
-                for h in handles {
-                    h.join().expect("machine thread panicked");
-                }
-            });
-            results.into_iter().map(|r| r.unwrap()).collect()
+            // `threads` pool jobs over contiguous machine chunks — the
+            // knob stays a real wall-clock parallelism bound (Table 3
+            // thread sweeps), not just a serial/parallel switch.  Jobs
+            // return in chunk order, machines stay in machine order
+            // within a chunk, so output order matches the serial path.
+            let run = &run_machine;
+            let mut machines = per_machine.into_iter();
+            let mut jobs = Vec::with_capacity(threads);
+            for i in 0..threads {
+                let (a, b) = pool::chunk_range(p, threads, i);
+                let chunk: Vec<Vec<(u64, V)>> = machines.by_ref().take(b - a).collect();
+                jobs.push(move || chunk.into_iter().map(run).collect::<Vec<Vec<R>>>());
+            }
+            pool::global().run_jobs(jobs).into_iter().flatten().collect()
         };
 
         self.metrics.record(RoundMetrics {
@@ -208,6 +211,199 @@ impl Simulator {
         }
         self.finish_round(label, n_messages, bytes, &machine_bytes);
         out
+    }
+
+    /// Chunked, parallel form of [`round_fold`](Self::round_fold): the
+    /// message stream arrives as independent chunks (typically one per
+    /// configured thread, produced by slicing the edge list) that workers
+    /// fold into per-worker accumulator arrays guarded by `touched`
+    /// bitsets; partials are merged into `out` in chunk order by `op`.
+    ///
+    /// Because `op` must be associative and commutative, the result — and
+    /// all model metrics, which are plain sums — is bit-identical to
+    /// folding the concatenated chunks serially, for every `threads`
+    /// setting.  Keys must be `< out.len()`.
+    pub fn round_fold_chunked<V, C>(
+        &mut self,
+        label: &str,
+        out: &mut [V],
+        chunks: Vec<C>,
+        op: fn(V, V) -> V,
+    ) where
+        V: WireSize + Copy + Send,
+        C: IntoIterator<Item = (u64, V)> + Send,
+    {
+        let p = self.cfg.machines.max(1);
+        if self.cfg.threads.max(1) <= 1 || chunks.len() <= 1 {
+            // Serial: fold straight into `out`, exactly like `round_fold`
+            // over the concatenated chunks.
+            let mut machine_bytes = vec![0u64; p];
+            let mut bytes = 0u64;
+            let mut n_messages = 0u64;
+            let mut touched = vec![false; out.len()];
+            for chunk in chunks {
+                for (key, value) in chunk {
+                    let sz = 8 + value.wire_size();
+                    bytes += sz;
+                    machine_bytes[(splitmix64(key) % p as u64) as usize] += sz;
+                    n_messages += 1;
+                    let k = key as usize;
+                    out[k] = if touched[k] { op(out[k], value) } else { value };
+                    touched[k] = true;
+                }
+            }
+            self.finish_round(label, n_messages, bytes, &machine_bytes);
+            return;
+        }
+
+        let n = out.len();
+        let words = n.div_ceil(64);
+        // Accumulators need a fill value only so the Vec is materialized;
+        // untouched slots are never read (the bitset gates every access).
+        let fill = out.first().copied();
+        let parts = pool::global().run_jobs(
+            chunks
+                .into_iter()
+                .map(|chunk| {
+                    move || {
+                        let mut acc: Vec<V> = match fill {
+                            Some(f) => vec![f; n],
+                            None => Vec::new(),
+                        };
+                        let mut touched = vec![0u64; words];
+                        let mut machine_bytes = vec![0u64; p];
+                        let (mut bytes, mut msgs) = (0u64, 0u64);
+                        for (key, value) in chunk {
+                            let sz = 8 + value.wire_size();
+                            bytes += sz;
+                            machine_bytes[(splitmix64(key) % p as u64) as usize] += sz;
+                            msgs += 1;
+                            let k = key as usize;
+                            if (touched[k / 64] >> (k % 64)) & 1 == 1 {
+                                acc[k] = op(acc[k], value);
+                            } else {
+                                acc[k] = value;
+                                touched[k / 64] |= 1u64 << (k % 64);
+                            }
+                        }
+                        (acc, touched, machine_bytes, bytes, msgs)
+                    }
+                })
+                .collect(),
+        );
+
+        let mut machine_bytes = vec![0u64; p];
+        let (mut bytes, mut msgs) = (0u64, 0u64);
+        let mut touched = vec![0u64; words];
+        for (acc, part_touched, part_mb, part_bytes, part_msgs) in parts {
+            bytes += part_bytes;
+            msgs += part_msgs;
+            for (mb, pb) in machine_bytes.iter_mut().zip(&part_mb) {
+                *mb += pb;
+            }
+            for (w, &set_bits) in part_touched.iter().enumerate() {
+                let mut set = set_bits;
+                while set != 0 {
+                    let k = w * 64 + set.trailing_zeros() as usize;
+                    set &= set - 1;
+                    out[k] = if (touched[w] >> (k % 64)) & 1 == 1 {
+                        op(out[k], acc[k])
+                    } else {
+                        acc[k]
+                    };
+                    touched[w] |= 1u64 << (k % 64);
+                }
+            }
+        }
+        self.finish_round(label, msgs, bytes, &machine_bytes);
+    }
+
+    /// Chunked, parallel form of [`round_map`](Self::round_map): workers
+    /// transform their chunks independently with per-worker byte/message
+    /// accounting, reduced at the end.  Outputs concatenate in chunk order,
+    /// so both the output sequence and the model metrics are identical to
+    /// the serial path.
+    pub fn round_map_chunked<V, R, C, F>(
+        &mut self,
+        label: &str,
+        chunks: Vec<C>,
+        f: F,
+    ) -> Vec<R>
+    where
+        V: WireSize + Copy + Send,
+        R: Send,
+        C: IntoIterator<Item = (u64, V)> + Send,
+        F: Fn(u64, V) -> R + Sync,
+    {
+        let p = self.cfg.machines.max(1);
+        if self.cfg.threads.max(1) <= 1 || chunks.len() <= 1 {
+            let mut machine_bytes = vec![0u64; p];
+            let mut bytes = 0u64;
+            let mut n_messages = 0u64;
+            let mut out = Vec::new();
+            for chunk in chunks {
+                for (key, value) in chunk {
+                    let sz = 8 + value.wire_size();
+                    bytes += sz;
+                    machine_bytes[(splitmix64(key) % p as u64) as usize] += sz;
+                    n_messages += 1;
+                    out.push(f(key, value));
+                }
+            }
+            self.finish_round(label, n_messages, bytes, &machine_bytes);
+            return out;
+        }
+
+        let f = &f;
+        let parts = pool::global().run_jobs(
+            chunks
+                .into_iter()
+                .map(|chunk| {
+                    move || {
+                        let mut machine_bytes = vec![0u64; p];
+                        let (mut bytes, mut msgs) = (0u64, 0u64);
+                        let mut out = Vec::new();
+                        for (key, value) in chunk {
+                            let sz = 8 + value.wire_size();
+                            bytes += sz;
+                            machine_bytes[(splitmix64(key) % p as u64) as usize] += sz;
+                            msgs += 1;
+                            out.push(f(key, value));
+                        }
+                        (out, machine_bytes, bytes, msgs)
+                    }
+                })
+                .collect(),
+        );
+
+        let mut machine_bytes = vec![0u64; p];
+        let (mut bytes, mut msgs) = (0u64, 0u64);
+        let mut out = Vec::new();
+        for (part_out, part_mb, part_bytes, part_msgs) in parts {
+            bytes += part_bytes;
+            msgs += part_msgs;
+            for (mb, pb) in machine_bytes.iter_mut().zip(&part_mb) {
+                *mb += pb;
+            }
+            out.extend(part_out);
+        }
+        self.finish_round(label, msgs, bytes, &machine_bytes);
+        out
+    }
+
+    /// Record a round whose computation happened outside the engine but
+    /// whose accounting replicates exactly the round it replaces (the
+    /// fused contraction phases in `cc::common` charge the model this
+    /// way).  `machine_bytes` is per machine; `messages`/`bytes` are the
+    /// round totals.
+    pub fn charge_round(
+        &mut self,
+        label: &str,
+        messages: u64,
+        bytes: u64,
+        machine_bytes: &[u64],
+    ) {
+        self.finish_round(label, messages, bytes, machine_bytes);
     }
 
     fn finish_round(&mut self, label: &str, messages: u64, bytes: u64, machine_bytes: &[u64]) {
@@ -319,6 +515,131 @@ mod tests {
             (out, s.metrics.rounds[0].clone())
         };
         assert_eq!(exec(1), exec(4));
+    }
+
+    /// A deterministic message mix with repeated keys, a hot key, and an
+    /// untouched tail of the key space.
+    fn fold_messages(n_msgs: usize, key_space: u64) -> Vec<(u64, u32)> {
+        (0..n_msgs)
+            .map(|i| {
+                let key = if i % 7 == 0 {
+                    3 // hot key
+                } else {
+                    (i as u64 * 2654435761) % key_space
+                };
+                (key, (i as u32).wrapping_mul(2246822519))
+            })
+            .collect()
+    }
+
+    fn chunked<T: Copy>(msgs: &[T], chunks: usize) -> Vec<std::vec::IntoIter<T>> {
+        (0..chunks)
+            .map(|i| {
+                let (a, b) = crate::mpc::pool::chunk_range(msgs.len(), chunks, i);
+                msgs[a..b].to_vec().into_iter()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn fold_chunked_matches_serial_across_threads() {
+        let msgs = fold_messages(10_000, 512);
+        let exec = |threads: usize| {
+            let mut s = Simulator::new(MpcConfig {
+                machines: 16,
+                space_per_machine: Some(20_000),
+                threads,
+            });
+            let mut out: Vec<u32> = (0..600u32).collect();
+            s.round_fold_chunked(
+                "fold",
+                &mut out,
+                chunked(&msgs, threads.max(1)),
+                u32::min,
+            );
+            (out, s.metrics.rounds[0].clone())
+        };
+        let base = exec(1);
+        for threads in [4, 8] {
+            assert_eq!(exec(threads), base, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn fold_chunked_matches_single_iterator_fold() {
+        let msgs = fold_messages(5_000, 300);
+        let mut serial = Simulator::new(MpcConfig {
+            machines: 8,
+            space_per_machine: None,
+            threads: 1,
+        });
+        let mut out_serial: Vec<u32> = vec![u32::MAX; 400];
+        serial.round_fold("fold", &mut out_serial, msgs.iter().copied(), u32::min);
+
+        let mut par = Simulator::new(MpcConfig {
+            machines: 8,
+            space_per_machine: None,
+            threads: 8,
+        });
+        let mut out_par: Vec<u32> = vec![u32::MAX; 400];
+        par.round_fold_chunked("fold", &mut out_par, chunked(&msgs, 8), u32::min);
+
+        assert_eq!(out_serial, out_par);
+        assert_eq!(serial.metrics.rounds[0], par.metrics.rounds[0]);
+    }
+
+    #[test]
+    fn map_chunked_matches_serial_across_threads() {
+        let msgs = fold_messages(10_000, 1 << 20);
+        let exec = |threads: usize| {
+            let mut s = Simulator::new(MpcConfig {
+                machines: 16,
+                space_per_machine: Some(15_000),
+                threads,
+            });
+            let out: Vec<(u64, u32)> = s.round_map_chunked(
+                "map",
+                chunked(&msgs, threads.max(1)),
+                |k, v| (k ^ 0xABCD, v.rotate_left(5)),
+            );
+            (out, s.metrics.rounds[0].clone())
+        };
+        let base = exec(1);
+        for threads in [4, 8] {
+            assert_eq!(exec(threads), base, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn map_chunked_matches_single_iterator_map() {
+        let msgs = fold_messages(3_000, 1 << 16);
+        let mut serial = Simulator::new(MpcConfig {
+            machines: 4,
+            space_per_machine: None,
+            threads: 1,
+        });
+        let out_serial: Vec<u32> = serial.round_map("map", msgs.iter().copied(), |_, v| v + 1);
+
+        let mut par = Simulator::new(MpcConfig {
+            machines: 4,
+            space_per_machine: None,
+            threads: 4,
+        });
+        let out_par: Vec<u32> = par.round_map_chunked("map", chunked(&msgs, 4), |_, v| v + 1);
+
+        assert_eq!(out_serial, out_par);
+        assert_eq!(serial.metrics.rounds[0], par.metrics.rounds[0]);
+    }
+
+    #[test]
+    fn fold_chunked_empty_out_and_chunks() {
+        let mut s = sim(4);
+        let mut out: Vec<u32> = Vec::new();
+        let chunks: Vec<std::vec::IntoIter<(u64, u32)>> =
+            vec![Vec::new().into_iter(), Vec::new().into_iter()];
+        s.round_fold_chunked("empty", &mut out, chunks, u32::min);
+        let r = &s.metrics.rounds[0];
+        assert_eq!((r.messages, r.bytes, r.max_machine_bytes), (0, 0, 0));
     }
 
     #[test]

@@ -9,5 +9,6 @@ pub mod cli;
 pub mod dsu;
 pub mod json;
 pub mod quickcheck;
+pub mod radix;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,216 @@
+//! Parallel LSD radix sort for `u64` keys.
+//!
+//! §Perf: replaces the comparison sort in `Graph::normalize` — the edge
+//! list is re-sorted after *every* contraction phase, making the sort one
+//! of the hottest non-engine loops in the system.  Edges pack into `u64`
+//! (`u << 32 | v`, preserving lexicographic order), which radix-sorts in
+//! O(m) per 8-bit digit instead of O(m log m) comparisons.
+//!
+//! Each pass over one digit: per-chunk histograms (parallel) → exclusive
+//! per-chunk bucket offsets (serial over `256·t` counters) → stable
+//! parallel scatter into disjoint target ranges.  An initial scan computes
+//! all eight digit histograms at once so constant digits are skipped
+//! entirely; with dense vertex ids (`u, v < n`) the top bytes are constant
+//! and the sort does ~half the passes.
+
+use crate::mpc::pool::{self, chunk_range};
+
+const DIGITS: usize = 8;
+const BUCKETS: usize = 256;
+
+#[inline]
+fn digit(key: u64, d: usize) -> usize {
+    ((key >> (8 * d)) & 0xFF) as usize
+}
+
+/// Raw destination pointer shipped to scatter jobs.  Writes are disjoint
+/// by construction (each chunk owns exclusive cursor ranges per bucket).
+#[derive(Clone, Copy)]
+struct SendPtr(*mut u64);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+/// Sort `keys` ascending, stable within equal keys, using the global
+/// worker pool.  Falls back to the comparison sort for small inputs where
+/// the pass overhead would dominate.
+pub fn par_sort_u64(keys: &mut Vec<u64>) {
+    let len = keys.len();
+    if len < (1 << 12) {
+        keys.sort_unstable();
+        return;
+    }
+    let pool = pool::global();
+    // Don't over-chunk small arrays: each chunk should carry real work.
+    let t = pool.threads().clamp(1, len.div_ceil(1 << 12).max(1));
+    let chunks: Vec<(usize, usize)> = (0..t).map(|i| chunk_range(len, t, i)).collect();
+
+    // One parallel scan: all 8 digit histograms per chunk.
+    let keys_ro: &[u64] = keys;
+    let all_hists: Vec<Vec<[u64; BUCKETS]>> = pool.run_jobs(
+        chunks
+            .iter()
+            .map(|&(a, b)| {
+                let part = &keys_ro[a..b];
+                move || {
+                    let mut h = vec![[0u64; BUCKETS]; DIGITS];
+                    for &k in part {
+                        for (d, hd) in h.iter_mut().enumerate() {
+                            hd[digit(k, d)] += 1;
+                        }
+                    }
+                    h
+                }
+            })
+            .collect(),
+    );
+    let mut global_hist = vec![[0u64; BUCKETS]; DIGITS];
+    for h in &all_hists {
+        for d in 0..DIGITS {
+            for b in 0..BUCKETS {
+                global_hist[d][b] += h[d][b];
+            }
+        }
+    }
+    // A digit where every key falls in one bucket needs no pass.
+    let needed: Vec<usize> = (0..DIGITS)
+        .filter(|&d| !global_hist[d].iter().any(|&c| c == len as u64))
+        .collect();
+    if needed.is_empty() {
+        return; // all keys identical
+    }
+
+    let mut src: Vec<u64> = std::mem::take(keys);
+    let mut dst: Vec<u64> = vec![0u64; len];
+    for (pass_idx, &d) in needed.iter().enumerate() {
+        // Per-chunk histograms of this digit over the *current* order.
+        // The first pass reuses the initial scan (order untouched so far).
+        let src_ro: &[u64] = &src;
+        let hists: Vec<Vec<u64>> = if pass_idx == 0 {
+            all_hists.iter().map(|h| h[d].to_vec()).collect()
+        } else {
+            pool.run_jobs(
+                chunks
+                    .iter()
+                    .map(|&(a, b)| {
+                        let part = &src_ro[a..b];
+                        move || {
+                            let mut h = vec![0u64; BUCKETS];
+                            for &k in part {
+                                h[digit(k, d)] += 1;
+                            }
+                            h
+                        }
+                    })
+                    .collect(),
+            )
+        };
+
+        // Exclusive global bucket starts, then per-chunk cursors: chunk
+        // c's bucket b begins at start[b] + Σ_{c'<c} hists[c'][b].
+        // Chunks scatter in original order, so the sort stays stable.
+        let mut start = [0u64; BUCKETS];
+        let mut sum = 0u64;
+        for b in 0..BUCKETS {
+            start[b] = sum;
+            sum += global_hist[d][b];
+        }
+        let mut cursors: Vec<Vec<u64>> = Vec::with_capacity(t);
+        let mut running = start;
+        for h in &hists {
+            cursors.push(running.to_vec());
+            for b in 0..BUCKETS {
+                running[b] += h[b];
+            }
+        }
+
+        let dst_ptr = SendPtr(dst.as_mut_ptr());
+        let _: Vec<()> = pool.run_jobs(
+            chunks
+                .iter()
+                .zip(cursors)
+                .map(|(&(a, b), mut cur)| {
+                    let part = &src_ro[a..b];
+                    move || {
+                        for &k in part {
+                            let bkt = digit(k, d);
+                            // SAFETY: cursor ranges of distinct (chunk,
+                            // bucket) pairs are disjoint and within bounds
+                            // (they partition 0..len by construction).
+                            unsafe { *dst_ptr.0.add(cur[bkt] as usize) = k };
+                            cur[bkt] += 1;
+                        }
+                    }
+                })
+                .collect(),
+        );
+        std::mem::swap(&mut src, &mut dst);
+    }
+    *keys = src;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn check(mut keys: Vec<u64>) {
+        let mut expect = keys.clone();
+        expect.sort_unstable();
+        par_sort_u64(&mut keys);
+        assert_eq!(keys, expect);
+    }
+
+    #[test]
+    fn sorts_small_inputs_via_fallback() {
+        check(Vec::new());
+        check(vec![5]);
+        check(vec![3, 1, 2]);
+        check((0..1000u64).rev().collect());
+    }
+
+    #[test]
+    fn sorts_large_random_inputs() {
+        let mut rng = Rng::new(7);
+        check((0..100_000).map(|_| rng.next_u64()).collect());
+    }
+
+    #[test]
+    fn sorts_packed_edge_shaped_keys() {
+        // dense ids < n: top bytes constant -> exercises digit skipping
+        let mut rng = Rng::new(8);
+        let n = 50_000u64;
+        check(
+            (0..120_000)
+                .map(|_| (rng.gen_range(n) << 32) | rng.gen_range(n))
+                .collect(),
+        );
+    }
+
+    #[test]
+    fn sorts_with_heavy_duplicates() {
+        let mut rng = Rng::new(9);
+        check((0..60_000).map(|_| rng.gen_range(17)).collect());
+    }
+
+    #[test]
+    fn all_equal_keys_short_circuit() {
+        check(vec![42u64; 20_000]);
+    }
+
+    #[test]
+    fn already_sorted_and_reverse_sorted() {
+        check((0..50_000u64).collect());
+        check((0..50_000u64).rev().collect());
+        check((0..50_000u64).map(|i| i ^ (i >> 3)).collect());
+    }
+
+    #[test]
+    fn high_bits_exercised() {
+        let mut rng = Rng::new(10);
+        check(
+            (0..30_000)
+                .map(|i| rng.next_u64() | ((i as u64 % 3) << 62))
+                .collect(),
+        );
+    }
+}

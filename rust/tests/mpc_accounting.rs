@@ -132,6 +132,39 @@ fn htm_communication_dwarfs_lc_on_deep_graphs() {
 }
 
 #[test]
+fn model_metrics_are_engine_invariant_across_threads() {
+    // The parallel round engine must not perturb the model: for every
+    // algorithm and every round, messages / bytes / max_machine_bytes /
+    // space_violation (and the output labels) are identical whether the
+    // simulator runs on 1 thread or 8.
+    let g = generators::gnp(1200, 0.008, &mut Rng::new(9));
+    for algo in ["lc", "lc-mtl", "hash-min", "cracker", "tc", "htm", "two-phase"] {
+        let exec = |threads: usize| {
+            let a = cc::by_name(algo);
+            let mut sim = Simulator::new(MpcConfig {
+                machines: 8,
+                space_per_machine: Some(40_000),
+                threads,
+            });
+            let mut rng = Rng::new(17);
+            let res = a.run(&g, &mut sim, &mut rng, &RunOptions::default());
+            (res.labels, res.metrics.rounds)
+        };
+        let (labels1, rounds1) = exec(1);
+        let (labels8, rounds8) = exec(8);
+        assert_eq!(labels1, labels8, "{algo}: labels diverge");
+        assert_eq!(
+            rounds1.len(),
+            rounds8.len(),
+            "{algo}: round count diverges"
+        );
+        for (a_round, b_round) in rounds1.iter().zip(&rounds8) {
+            assert_eq!(a_round, b_round, "{algo}: round metrics diverge");
+        }
+    }
+}
+
+#[test]
 fn round_labels_are_informative() {
     let g = generators::gnp(500, 0.01, &mut Rng::new(7));
     let res = run("lc", &g, 4);

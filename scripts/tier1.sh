@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# Tier-1 gate (ROADMAP.md): release build + full test suite + quick perf
+# smoke.  The perf smoke writes the machine-readable suite results over
+# BENCH_PR1.json at the repo root so the perf trajectory is tracked in
+# version control from PR 1 onward (EXPERIMENTS.md §Perf explains how to
+# read it).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+(cd rust && cargo build --release)
+(cd rust && cargo test -q)
+
+# Perf smoke: quick protocol (1 warmup + 3 samples), JSON to the tracked
+# artifact.  Runs from the repo root so relative artifact paths resolve.
+./rust/target/release/lcc perf --quick --out BENCH_PR1.json
+echo "tier1 OK"
