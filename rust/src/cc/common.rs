@@ -4,8 +4,9 @@
 
 use crate::graph::{Csr, Graph, Vertex};
 use crate::mpc::pool::{self, chunk_range};
+use crate::mpc::simulator::machine_of;
 use crate::mpc::Simulator;
-use crate::util::rng::{splitmix64, Rng};
+use crate::util::rng::Rng;
 
 /// Per-phase random ordering `rho` plus its inverse.
 ///
@@ -141,9 +142,15 @@ where
     let edges = g.edges();
 
     // Per-machine load of one hop round: every edge charges both endpoint
-    // keys, every vertex charges its own key (self message).  All values
-    // of a Copy wire type have one size, so bytes = messages * msg_size.
+    // keys, every vertex charges its own key (self message).  The charge
+    // assumes every value of V reports one wire size (true of the Copy
+    // scalar impls), so bytes = messages * msg_size; a variable-size V
+    // would need the unfused per-message accounting instead.
     let msg_size: u64 = vals.first().map(|v| 8 + v.wire_size()).unwrap_or(0);
+    debug_assert!(
+        vals.iter().all(|v| 8 + v.wire_size() == msg_size),
+        "fused_two_hop requires a uniform wire size across values"
+    );
     let mb_parts = pool::global().run_jobs(
         (0..t)
             .map(|i| {
@@ -153,11 +160,11 @@ where
                 move || {
                     let mut mb = vec![0u64; p];
                     for &(u, v) in edges {
-                        mb[(splitmix64(u as u64) % p as u64) as usize] += msg_size;
-                        mb[(splitmix64(v as u64) % p as u64) as usize] += msg_size;
+                        mb[machine_of(u as u64, p)] += msg_size;
+                        mb[machine_of(v as u64, p)] += msg_size;
                     }
                     for v in va..vb {
-                        mb[(splitmix64(v as u64) % p as u64) as usize] += msg_size;
+                        mb[machine_of(v as u64, p)] += msg_size;
                     }
                     mb
                 }
@@ -242,8 +249,8 @@ pub fn contract_mpc(
                     let mut mb_left = vec![0u64; p];
                     let mut mb_right = vec![0u64; p];
                     for &(u, v) in edges {
-                        mb_left[(splitmix64(u as u64) % p as u64) as usize] += 12;
-                        mb_right[(splitmix64(v as u64) % p as u64) as usize] += 12;
+                        mb_left[machine_of(u as u64, p)] += 12;
+                        mb_right[machine_of(v as u64, p)] += 12;
                         out.push((labels[u as usize], labels[v as usize]));
                     }
                     (out, mb_left, mb_right)

@@ -10,20 +10,31 @@
 //! **Scoped borrows.**  Jobs may borrow from the caller's stack (message
 //! slices, value arrays, reducer closures).  [`WorkerPool::run_jobs`]
 //! erases those lifetimes to ship the jobs across the queue, and restores
-//! soundness by blocking on a completion latch before returning: no job
-//! can outlive the borrows it closes over.  This is the classic
-//! `scoped_threadpool` design on std primitives (the offline crate set has
-//! no `rayon`).
+//! soundness by blocking on a completion latch before returning — on the
+//! happy path explicitly, and on every unwind path via a drop guard
+//! ([`SubmitGuard`]): no job can outlive the borrows it closes over.
+//! This is the classic `scoped_threadpool` design on std primitives (the
+//! offline crate set has no `rayon`).
 //!
 //! **Determinism.**  `run_jobs` returns results in job order regardless of
 //! which worker ran what, so callers that merge partial results in job
 //! order are bit-deterministic across pool sizes — the property the
 //! simulator's "model metrics are engine-invariant" contract relies on.
 
+use std::cell::Cell;
 use std::sync::mpsc::{channel, Sender};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
+
+thread_local! {
+    /// Set for the lifetime of every pool worker thread.  `run_jobs`
+    /// checks it to run nested submissions inline: with all workers busy,
+    /// a job that submitted and blocked on the pool it is running on
+    /// (e.g. `Graph::normalize` → `par_sort_u64` from inside a round
+    /// closure) would deadlock.
+    static IN_POOL_WORKER: Cell<bool> = Cell::new(false);
+}
 
 /// Counts outstanding jobs of one [`WorkerPool::run_jobs`] call; `wait`
 /// parks the caller until every job has completed.  Panicking jobs are
@@ -67,6 +78,29 @@ unsafe fn erase<'a>(task: Box<dyn FnOnce() + Send + 'a>) -> Job {
     std::mem::transmute(task)
 }
 
+/// Unwind guard for the submit-then-wait span of [`WorkerPool::run_jobs`].
+///
+/// Once the first lifetime-erased job is on the queue, the caller **must**
+/// block on the latch before its stack frame (holding `results` and the
+/// latch itself) unwinds — otherwise workers race a use-after-free.  The
+/// happy path waits explicitly; this guard makes the panic paths (a failed
+/// `send`, a poisoned submit lock) do the same: its `Drop` retires the
+/// jobs that never reached the queue (they can no longer complete
+/// themselves) and then blocks until every submitted job has drained.
+struct SubmitGuard<'a> {
+    latch: &'a Latch,
+    unsent: usize,
+}
+
+impl Drop for SubmitGuard<'_> {
+    fn drop(&mut self) {
+        for _ in 0..self.unsent {
+            self.latch.complete(false);
+        }
+        self.latch.wait();
+    }
+}
+
 /// A fixed set of parked worker threads fed from one shared queue.
 ///
 /// The sender sits behind a mutex so the pool is `Sync` on every
@@ -89,15 +123,19 @@ impl WorkerPool {
                 let rx = Arc::clone(&rx);
                 std::thread::Builder::new()
                     .name(format!("lcc-worker-{i}"))
-                    .spawn(move || loop {
-                        // Hold the lock only for the dequeue; blocking in
-                        // `recv` under the lock is fine because the lock is
-                        // released the moment a job (or disconnect) arrives.
-                        let job = match rx.lock().unwrap().recv() {
-                            Ok(job) => job,
-                            Err(_) => return, // pool dropped: queue closed
-                        };
-                        job();
+                    .spawn(move || {
+                        IN_POOL_WORKER.with(|f| f.set(true));
+                        loop {
+                            // Hold the lock only for the dequeue; blocking
+                            // in `recv` under the lock is fine because the
+                            // lock is released the moment a job (or
+                            // disconnect) arrives.
+                            let job = match rx.lock().unwrap().recv() {
+                                Ok(job) => job,
+                                Err(_) => return, // pool dropped: queue closed
+                            };
+                            job();
+                        }
                     })
                     .expect("spawn lcc pool worker")
             })
@@ -115,35 +153,43 @@ impl WorkerPool {
     /// Run `jobs` on the pool and return their results **in job order**.
     ///
     /// Jobs may borrow from the caller: the call blocks until every job has
-    /// finished, so no borrow is outlived.  Panics (after all jobs drain)
-    /// if any job panicked.  Jobs must not recursively call `run_jobs` on
-    /// the same pool — with all workers busy that would deadlock.
+    /// finished — even if submission unwinds partway (see [`SubmitGuard`])
+    /// — so no borrow is outlived.  Panics (after all jobs drain) if any
+    /// job panicked.  Calls from inside a pool worker (nested submission,
+    /// e.g. a round closure reaching `Graph::normalize`'s parallel sort)
+    /// execute inline on the worker instead of enqueueing: with every
+    /// worker busy, submit-and-block would deadlock the pool.
     pub fn run_jobs<'env, T, F>(&self, jobs: Vec<F>) -> Vec<T>
     where
         T: Send + 'env,
         F: FnOnce() -> T + Send + 'env,
     {
-        if self.workers.is_empty() || jobs.len() <= 1 {
+        if self.workers.is_empty() || jobs.len() <= 1 || IN_POOL_WORKER.with(|f| f.get()) {
             return jobs.into_iter().map(|j| j()).collect();
         }
         let n = jobs.len();
         let mut results: Vec<Option<T>> = (0..n).map(|_| None).collect();
         let latch = Latch::new(n);
-        let tx = self.tx.as_ref().expect("pool queue alive").lock().unwrap();
-        for (job, slot) in jobs.into_iter().zip(results.iter_mut()) {
-            let latch = &latch;
-            let task = Box::new(move || {
-                // Count completion even on panic so `wait` cannot hang;
-                // the panic flag re-raises below, on the caller's thread.
-                let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                    *slot = Some(job());
-                }));
-                latch.complete(caught.is_err());
-            });
-            tx.send(unsafe { erase(task) }).expect("pool queue closed");
-        }
-        drop(tx); // release the submit lock before blocking on the latch
-        if latch.wait() {
+        let mut guard = SubmitGuard { latch: &latch, unsent: n };
+        {
+            let tx = self.tx.as_ref().expect("pool queue alive").lock().unwrap();
+            for (job, slot) in jobs.into_iter().zip(results.iter_mut()) {
+                let latch = &latch;
+                let task = Box::new(move || {
+                    // Count completion even on panic so `wait` cannot hang;
+                    // the panic flag re-raises below, on the caller's thread.
+                    let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        *slot = Some(job());
+                    }));
+                    latch.complete(caught.is_err());
+                });
+                tx.send(unsafe { erase(task) }).expect("pool queue closed");
+                guard.unsent -= 1;
+            }
+        } // release the submit lock before blocking on the latch
+        let panicked = latch.wait();
+        drop(guard); // latch already drained: the guard's wait is a no-op
+        if panicked {
             panic!("worker pool job panicked");
         }
         results
@@ -261,6 +307,28 @@ mod tests {
         // workers are still alive and serving
         let out = pool.run_jobs((0..4u32).map(|i| move || i).collect::<Vec<_>>());
         assert_eq!(out, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn nested_submission_runs_inline_instead_of_deadlocking() {
+        // More outer jobs than workers, and every outer job submits to the
+        // same pool it runs on.  Without the in-worker inline fallback both
+        // workers block in the inner `run_jobs` with nobody left to serve
+        // the queue — a deadlock; with it, the inner calls execute inline.
+        let pool = WorkerPool::new(2);
+        let pool_ref = &pool;
+        let out = pool.run_jobs(
+            (0..4u64)
+                .map(|i| {
+                    move || {
+                        let inner = pool_ref
+                            .run_jobs((0..4u64).map(|j| move || i * 10 + j).collect::<Vec<_>>());
+                        inner.into_iter().sum::<u64>()
+                    }
+                })
+                .collect::<Vec<_>>(),
+        );
+        assert_eq!(out, vec![6, 46, 86, 126]);
     }
 
     #[test]

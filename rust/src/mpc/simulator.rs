@@ -49,6 +49,16 @@ impl Default for MpcConfig {
     }
 }
 
+/// Machine owning `key` under the stable hash partition.  The single
+/// definition of the partition function: the simulator rounds, the
+/// chunked fast paths, and the fused rounds in `cc::common` (which charge
+/// the model directly via [`Simulator::charge_round`]) must all agree on
+/// it, or charged per-machine loads silently diverge from real rounds.
+#[inline]
+pub fn machine_of(key: u64, machines: usize) -> usize {
+    (splitmix64(key) % machines as u64) as usize
+}
+
 /// The MPC execution engine: owns config + accumulated metrics.
 #[derive(Debug)]
 pub struct Simulator {
@@ -67,7 +77,7 @@ impl Simulator {
     /// Partition a key over machines (stable across rounds).
     #[inline]
     pub fn machine_of(&self, key: u64) -> usize {
-        (splitmix64(key) % self.cfg.machines as u64) as usize
+        machine_of(key, self.cfg.machines)
     }
 
     /// Execute one MapReduce round.
@@ -178,7 +188,7 @@ impl Simulator {
         for (key, value) in messages {
             let sz = 8 + value.wire_size();
             bytes += sz;
-            machine_bytes[(splitmix64(key) % p as u64) as usize] += sz;
+            machine_bytes[machine_of(key, p)] += sz;
             n_messages += 1;
             let k = key as usize;
             out[k] = if touched[k] { op(out[k], value) } else { value };
@@ -205,7 +215,7 @@ impl Simulator {
         for (key, value) in messages {
             let sz = 8 + value.wire_size();
             bytes += sz;
-            machine_bytes[(splitmix64(key) % p as u64) as usize] += sz;
+            machine_bytes[machine_of(key, p)] += sz;
             n_messages += 1;
             out.push(f(key, value));
         }
@@ -235,25 +245,8 @@ impl Simulator {
     {
         let p = self.cfg.machines.max(1);
         if self.cfg.threads.max(1) <= 1 || chunks.len() <= 1 {
-            // Serial: fold straight into `out`, exactly like `round_fold`
-            // over the concatenated chunks.
-            let mut machine_bytes = vec![0u64; p];
-            let mut bytes = 0u64;
-            let mut n_messages = 0u64;
-            let mut touched = vec![false; out.len()];
-            for chunk in chunks {
-                for (key, value) in chunk {
-                    let sz = 8 + value.wire_size();
-                    bytes += sz;
-                    machine_bytes[(splitmix64(key) % p as u64) as usize] += sz;
-                    n_messages += 1;
-                    let k = key as usize;
-                    out[k] = if touched[k] { op(out[k], value) } else { value };
-                    touched[k] = true;
-                }
-            }
-            self.finish_round(label, n_messages, bytes, &machine_bytes);
-            return;
+            // Serial: exactly `round_fold` over the concatenated chunks.
+            return self.round_fold(label, out, chunks.into_iter().flatten(), op);
         }
 
         let n = out.len();
@@ -276,7 +269,7 @@ impl Simulator {
                         for (key, value) in chunk {
                             let sz = 8 + value.wire_size();
                             bytes += sz;
-                            machine_bytes[(splitmix64(key) % p as u64) as usize] += sz;
+                            machine_bytes[machine_of(key, p)] += sz;
                             msgs += 1;
                             let k = key as usize;
                             if (touched[k / 64] >> (k % 64)) & 1 == 1 {
@@ -337,21 +330,8 @@ impl Simulator {
     {
         let p = self.cfg.machines.max(1);
         if self.cfg.threads.max(1) <= 1 || chunks.len() <= 1 {
-            let mut machine_bytes = vec![0u64; p];
-            let mut bytes = 0u64;
-            let mut n_messages = 0u64;
-            let mut out = Vec::new();
-            for chunk in chunks {
-                for (key, value) in chunk {
-                    let sz = 8 + value.wire_size();
-                    bytes += sz;
-                    machine_bytes[(splitmix64(key) % p as u64) as usize] += sz;
-                    n_messages += 1;
-                    out.push(f(key, value));
-                }
-            }
-            self.finish_round(label, n_messages, bytes, &machine_bytes);
-            return out;
+            // Serial: exactly `round_map` over the concatenated chunks.
+            return self.round_map(label, chunks.into_iter().flatten(), f);
         }
 
         let f = &f;
@@ -366,7 +346,7 @@ impl Simulator {
                         for (key, value) in chunk {
                             let sz = 8 + value.wire_size();
                             bytes += sz;
-                            machine_bytes[(splitmix64(key) % p as u64) as usize] += sz;
+                            machine_bytes[machine_of(key, p)] += sz;
                             msgs += 1;
                             out.push(f(key, value));
                         }

@@ -7,6 +7,12 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "tier1: cargo not found. This gate needs a Rust toolchain; run it" >&2
+    echo "tier1: on a toolchain-equipped machine/CI (see EXPERIMENTS.md)." >&2
+    exit 1
+fi
+
 (cd rust && cargo build --release)
 (cd rust && cargo test -q)
 
