@@ -3,13 +3,17 @@
 //! phase (Thm 7.1), TreeContraction survives w.h.p. for log_26 n rounds
 //! (Thm 7.2), and Hash-Min pays the full Θ(n) diameter.
 //!
-//!     cargo run --release --example path_worst_case
+//!     cargo run --release --example path_worst_case [machines]
 
 use lcc::coordinator::{Driver, RunConfig};
 use lcc::graph::generators;
 use lcc::util::stats::AsciiTable;
 
 fn main() {
+    let machines: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(16);
     let algos = ["lc", "tc-dht", "cracker", "htm", "hash-min"];
     let mut t = AsciiTable::new(&["n", "log5 n", "lc", "tc-dht", "cracker", "htm", "hash-min"]);
     for exp in [8u32, 10, 12, 14] {
@@ -29,6 +33,7 @@ fn main() {
             }
             let driver = Driver::new(RunConfig {
                 algorithm: algo.to_string(),
+                machines,
                 finisher_threshold: 0,
                 max_phases: 20_000,
                 verify: true,

@@ -1,23 +1,36 @@
 //! Quickstart: find connected components of a random graph with
 //! LocalContraction and check the answer against the sequential oracle.
 //!
-//!     cargo run --release --example quickstart
+//!     cargo run --release --example quickstart [machines]
+//!
+//! `machines` is the simulated machine count = the shard count of the
+//! resident edge store (default 16).
 
-use lcc::cc::oracle;
+use lcc::cc::{oracle, CcAlgorithm};
 use lcc::coordinator::{Driver, RunConfig};
 use lcc::graph::generators;
 use lcc::util::rng::Rng;
 
 fn main() {
+    let machines: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(16);
+
     // A sparse random graph: 100k vertices, average degree ~6.
     let n = 100_000;
     let g = generators::gnp(n, 6.0 / n as f64, &mut Rng::new(42));
-    println!("graph: n={} m={}", g.num_vertices(), g.num_edges());
+    println!(
+        "graph: n={} m={} (sharded over {machines} machines)",
+        g.num_vertices(),
+        g.num_edges()
+    );
 
     // LocalContraction (§3 of the paper) on the MPC simulator with the §6
     // optimizations: isolated-node pruning + the small-graph finisher.
     let driver = Driver::new(RunConfig {
         algorithm: "lc".into(),
+        machines,
         finisher_threshold: 10_000,
         verify: false, // we verify explicitly below
         ..Default::default()
@@ -34,7 +47,10 @@ fn main() {
 
     // Cross-check against streaming union-find.
     let algo = lcc::cc::by_name("lc");
-    let mut sim = lcc::mpc::Simulator::new(lcc::mpc::MpcConfig::default());
+    let mut sim = lcc::mpc::Simulator::new(lcc::mpc::MpcConfig {
+        machines,
+        ..Default::default()
+    });
     let mut rng = Rng::new(42);
     let res = algo.run(&g, &mut sim, &mut rng, &lcc::cc::RunOptions::default());
     oracle::verify(&g, &res.labels).expect("labels disagree with the oracle");

@@ -3,7 +3,7 @@
 //! phase count stays essentially flat while `n` grows by two orders of
 //! magnitude, even though the graph's diameter is `Θ(log n / log log n)`.
 //!
-//!     cargo run --release --example random_graph_loglog
+//!     cargo run --release --example random_graph_loglog [machines]
 
 use lcc::coordinator::{Driver, RunConfig};
 use lcc::graph::{generators, stats};
@@ -11,6 +11,10 @@ use lcc::util::rng::Rng;
 use lcc::util::stats::AsciiTable;
 
 fn main() {
+    let machines: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(16);
     let mut t = AsciiTable::new(&[
         "n",
         "diameter~",
@@ -25,6 +29,7 @@ fn main() {
         let phases = |algo: &str| {
             let driver = Driver::new(RunConfig {
                 algorithm: algo.into(),
+                machines,
                 finisher_threshold: 0, // measure the raw phase count
                 verify: true,
                 ..Default::default()

@@ -2,7 +2,7 @@
 //! Friendster analogues — all five paper algorithms, phases and relative
 //! running times.
 //!
-//!     cargo run --release --example social_components [n]
+//!     cargo run --release --example social_components [n] [machines]
 
 use lcc::cc::PAPER_ALGORITHMS;
 use lcc::coordinator::{Driver, RunConfig};
@@ -14,6 +14,10 @@ fn main() {
         .nth(1)
         .and_then(|s| s.parse().ok())
         .unwrap_or(30_000);
+    let machines: usize = std::env::args()
+        .nth(2)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(16);
 
     for dataset in ["orkut", "friendster"] {
         let g = presets::generate(dataset, Some(n), 42);
@@ -27,6 +31,7 @@ fn main() {
         for algo in PAPER_ALGORITHMS {
             let driver = Driver::new(RunConfig {
                 algorithm: algo.to_string(),
+                machines,
                 finisher_threshold: g.num_edges() / 100,
                 state_cap: 20 * g.num_edges() as u64,
                 verify: true,

@@ -13,7 +13,10 @@
 //!
 //! Run with `make artifacts` done first to exercise the XLA path:
 //!
-//!     cargo run --release --example webscale_pipeline [n] [avg_deg]
+//!     cargo run --release --example webscale_pipeline [n] [avg_deg] [machines]
+//!
+//! `machines` sweeps the simulator shard count the summary graph is
+//! re-partitioned onto for the global merge (default 16).
 
 use lcc::coordinator::{pipeline, Driver, PipelineConfig, RunConfig};
 use lcc::graph::generators::presets;
@@ -28,6 +31,10 @@ fn main() {
         .nth(2)
         .and_then(|s| s.parse().ok())
         .unwrap_or(7.6); // webpages row of Table 1
+    let machines: usize = std::env::args()
+        .nth(3)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(16);
 
     // The "webpages" shape of Table 1: heavily fragmented similarity graph
     // (largest CC ~0.8% of n).  Generated streaming-style below.
@@ -56,14 +63,17 @@ fn main() {
     );
 
     // ---- stage 3: LocalContraction (+XLA dense finisher) on the summary --
+    // The workers' shards flow straight into the finisher: re-partitioned
+    // shard-to-shard onto the simulator's machines, never concatenated.
     let driver = Driver::new(RunConfig {
         algorithm: "lc".into(),
+        machines,
         use_xla: true, // compiled artifact path; falls back with a warning
         finisher_threshold: 0,
         verify: false,
         ..Default::default()
     });
-    let merge = driver.run_named(&res.summary, "summary");
+    let merge = driver.run_named_sharded(&res.summary, "summary");
     println!("global merge: {}", merge.summary());
     println!("  edges per phase: {:?}", merge.edges_per_phase);
     if merge.xla_calls > 0 {

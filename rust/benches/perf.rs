@@ -1,11 +1,16 @@
 //! `cargo bench --bench perf` — §Perf micro-benchmarks across all layers
 //! (see EXPERIMENTS.md §Perf for the iteration log and targets).
-//! LCC_BENCH_QUICK=1 for a fast pass.
+//! LCC_BENCH_QUICK=1 for a fast pass; LCC_BENCH_MACHINES=N to sweep the
+//! shard count (default 16).
 
 fn main() {
     let quick = std::env::var("LCC_BENCH_QUICK").is_ok();
-    println!("=== §Perf micro-benchmarks (quick={quick}) ===");
-    for m in lcc::bench::perf::standard_suite(quick) {
+    let machines = std::env::var("LCC_BENCH_MACHINES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(16);
+    println!("=== §Perf micro-benchmarks (quick={quick}, machines={machines}) ===");
+    for m in lcc::bench::perf::standard_suite(quick, machines) {
         println!("{}", m.report_line());
     }
 }

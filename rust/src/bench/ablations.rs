@@ -4,7 +4,7 @@
 //! compiled dense backend.  `lcc ablation --exp <name>` / `cargo bench
 //! --bench ablations`.
 
-use crate::cc::{self, oracle, RunOptions};
+use crate::cc::{self, oracle, CcAlgorithm, RunOptions};
 use crate::coordinator::{Driver, RunConfig};
 use crate::graph::generators;
 use crate::mpc::{MpcConfig, Simulator};

@@ -5,22 +5,32 @@
 use super::harness::{Bench, Measurement};
 use crate::cc::backend::{CpuBackend, DenseBackend};
 use crate::cc::common::{min_hop, Priorities};
-use crate::graph::generators;
+use crate::graph::{generators, ShardedGraph};
 use crate::mpc::{MpcConfig, Simulator};
 use crate::util::rng::Rng;
 
-/// L3 primitive: one min-hop MPC round over a G(n,p) graph.
-pub fn bench_min_hop(b: &Bench, n: usize, avg_deg: f64, threads: usize) -> Measurement {
-    let g = generators::gnp(n, avg_deg / n as f64, &mut Rng::new(1));
+/// L3 primitive: one min-hop MPC round over a sharded G(n,p) graph.
+pub fn bench_min_hop(
+    b: &Bench,
+    n: usize,
+    avg_deg: f64,
+    threads: usize,
+    machines: usize,
+) -> Measurement {
+    let flat = generators::gnp(n, avg_deg / n as f64, &mut Rng::new(1));
+    let g = ShardedGraph::from_graph(&flat, machines);
     let vals: Vec<u32> = (0..n as u32).collect();
     let m = g.num_edges() as f64;
     let mut sim = Simulator::new(MpcConfig {
-        machines: 16,
+        machines,
         space_per_machine: None,
         threads,
     });
     b.run(
-        &format!("L3/min_hop n={n} m={} threads={threads}", g.num_edges()),
+        &format!(
+            "L3/min_hop n={n} m={} threads={threads} machines={machines}",
+            g.num_edges()
+        ),
         Some(m),
         || {
             let out = min_hop(&mut sim, "bench", &g, &vals, true);
@@ -31,17 +41,27 @@ pub fn bench_min_hop(b: &Bench, n: usize, avg_deg: f64, threads: usize) -> Measu
 }
 
 /// L3 primitive: a full LocalContraction phase (2 hops + contraction).
-pub fn bench_lc_phase(b: &Bench, n: usize, avg_deg: f64, threads: usize) -> Measurement {
-    let g = generators::gnp(n, avg_deg / n as f64, &mut Rng::new(2));
+pub fn bench_lc_phase(
+    b: &Bench,
+    n: usize,
+    avg_deg: f64,
+    threads: usize,
+    machines: usize,
+) -> Measurement {
+    let flat = generators::gnp(n, avg_deg / n as f64, &mut Rng::new(2));
+    let g = ShardedGraph::from_graph(&flat, machines);
     let m = g.num_edges() as f64;
     let mut rng = Rng::new(3);
     let mut sim = Simulator::new(MpcConfig {
-        machines: 16,
+        machines,
         space_per_machine: None,
         threads,
     });
     b.run(
-        &format!("L3/lc_phase n={n} m={} threads={threads}", g.num_edges()),
+        &format!(
+            "L3/lc_phase n={n} m={} threads={threads} machines={machines}",
+            g.num_edges()
+        ),
         Some(m),
         || {
             let rho = Priorities::sample(g.num_vertices(), &mut rng);
@@ -53,16 +73,36 @@ pub fn bench_lc_phase(b: &Bench, n: usize, avg_deg: f64, threads: usize) -> Meas
     )
 }
 
+/// Graph-layer primitive: shard a raw edge list (bucket + shard-local
+/// normalize) — the sharded counterpart of `bench_normalize`.
+pub fn bench_shard_ingest(b: &Bench, n: usize, avg_deg: f64, machines: usize) -> Measurement {
+    let mut rng = Rng::new(12);
+    let m_target = (n as f64 * avg_deg / 2.0) as usize;
+    let raw: Vec<(u32, u32)> = (0..m_target)
+        .map(|_| (rng.gen_range(n as u64) as u32, rng.gen_range(n as u64) as u32))
+        .collect();
+    let m = raw.len() as f64;
+    b.run(
+        &format!("L2/shard_ingest n={n} m={m_target} machines={machines}"),
+        Some(m),
+        || {
+            let g = ShardedGraph::from_edges(n, machines, raw.clone());
+            std::hint::black_box(g.num_edges());
+        },
+    )
+}
+
 /// End-to-end: full LocalContraction run.
-pub fn bench_lc_end_to_end(b: &Bench, n: usize, avg_deg: f64) -> Measurement {
+pub fn bench_lc_end_to_end(b: &Bench, n: usize, avg_deg: f64, machines: usize) -> Measurement {
     let g = generators::gnp(n, avg_deg / n as f64, &mut Rng::new(4));
     let m = g.num_edges() as f64;
     let driver = crate::coordinator::Driver::new(crate::coordinator::RunConfig {
         algorithm: "lc".into(),
+        machines,
         ..Default::default()
     });
     b.run(
-        &format!("L3/lc_full n={n} m={}", g.num_edges()),
+        &format!("L3/lc_full n={n} m={} machines={machines}", g.num_edges()),
         Some(m),
         || {
             let r = driver.run(&g);
@@ -135,16 +175,21 @@ pub fn bench_dense_xla(b: &Bench, avg_deg: f64) -> Option<Measurement> {
     ))
 }
 
-/// The whole standard suite (used by `lcc perf` and `cargo bench`).
-pub fn standard_suite(quick: bool) -> Vec<Measurement> {
+/// The whole standard suite (used by `lcc perf [--machines N]` and
+/// `cargo bench`).  `machines` is the shard count every sharded bench
+/// runs under — sweepable from the command line.
+pub fn standard_suite(quick: bool, machines: usize) -> Vec<Measurement> {
     let b = if quick { Bench::quick() } else { Bench::default() };
+    let machines = machines.max(1);
     let mut out = vec![
-        bench_min_hop(&b, 100_000, 8.0, 1),
-        bench_min_hop(&b, 100_000, 8.0, 8),
-        bench_lc_phase(&b, 100_000, 8.0, 1),
-        bench_lc_phase(&b, 100_000, 8.0, 8),
+        bench_min_hop(&b, 100_000, 8.0, 1, machines),
+        bench_min_hop(&b, 100_000, 8.0, 8, machines),
+        bench_lc_phase(&b, 100_000, 8.0, 1, machines),
+        bench_lc_phase(&b, 100_000, 8.0, 8, machines),
         bench_normalize(&b, 100_000, 8.0),
-        bench_lc_end_to_end(&b, 50_000, 8.0),
+        bench_shard_ingest(&b, 100_000, 8.0, machines),
+        bench_lc_end_to_end(&b, 50_000, 8.0, machines),
+        // pipeline rows have no simulator: `workers` IS their shard count
         bench_pipeline(&b, 200_000, 8.0, 1),
         bench_pipeline(&b, 200_000, 8.0, 4),
         bench_dense_cpu(&b, 1024, 16.0),
@@ -158,13 +203,18 @@ pub fn standard_suite(quick: bool) -> Vec<Measurement> {
 }
 
 /// The standard suite as one machine-readable document — the schema of
-/// `BENCH_PR1.json` at the repo root (`lcc perf --quick --out FILE`), so
+/// `BENCH_PR2.json` at the repo root (`lcc perf --quick --out FILE`), so
 /// the perf trajectory is tracked as a checked-in artifact from PR 1 on.
-pub fn suite_json(measurements: &[Measurement], quick: bool) -> crate::util::json::Json {
+pub fn suite_json(
+    measurements: &[Measurement],
+    quick: bool,
+    machines: usize,
+) -> crate::util::json::Json {
     use crate::util::json::Json;
     Json::obj()
         .set("suite", "lcc-perf-standard")
         .set("quick", quick)
+        .set("machines", machines)
         .set(
             "threads_available",
             crate::mpc::pool::default_threads(),
@@ -186,11 +236,13 @@ mod tests {
             sample_iters: 1,
             slow_cutoff_s: 30.0,
         };
-        let m = bench_min_hop(&b, 2000, 4.0, 1);
+        let m = bench_min_hop(&b, 2000, 4.0, 1, 16);
         assert!(m.median_s() > 0.0);
         let m = bench_dense_cpu(&b, 256, 8.0);
         assert!(m.throughput().unwrap() > 0.0);
         let m = bench_normalize(&b, 2000, 4.0);
+        assert!(m.median_s() > 0.0);
+        let m = bench_shard_ingest(&b, 2000, 4.0, 8);
         assert!(m.median_s() > 0.0);
     }
 
@@ -201,9 +253,10 @@ mod tests {
             sample_iters: 1,
             slow_cutoff_s: 30.0,
         };
-        let ms = vec![bench_min_hop(&b, 500, 4.0, 2)];
-        let doc = suite_json(&ms, true);
+        let ms = vec![bench_min_hop(&b, 500, 4.0, 2, 4)];
+        let doc = suite_json(&ms, true, 4);
         assert_eq!(doc.get("suite").and_then(|j| j.as_str()), Some("lcc-perf-standard"));
+        assert_eq!(doc.get("machines").and_then(|j| j.as_i64()), Some(4));
         let benches = doc.get("benches").and_then(|j| j.as_arr()).unwrap();
         assert_eq!(benches.len(), 1);
         assert!(benches[0].get("median_s").and_then(|j| j.as_f64()).unwrap() > 0.0);

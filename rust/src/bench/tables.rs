@@ -244,6 +244,7 @@ pub fn figure1(cfg: &SweepConfig, datasets: &[&str]) -> (String, Json) {
 }
 
 fn find<'a>(reports: &'a [Report], dataset: &str, algo: &str) -> &'a Report {
+    use crate::cc::CcAlgorithm;
     let want = crate::cc::by_name(algo).name();
     reports
         .iter()

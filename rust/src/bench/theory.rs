@@ -77,7 +77,10 @@ pub fn depth(seed: u64) -> (String, Json) {
     let mut rows = Vec::new();
     for exp in [10u32, 12, 14, 16] {
         let n = 1usize << exp;
-        let g = generators::gnp_log_regime(n, 2.0, &mut Rng::new(seed + exp as u64));
+        let g = crate::graph::ShardedGraph::from_graph(
+            &generators::gnp_log_regime(n, 2.0, &mut Rng::new(seed + exp as u64)),
+            MpcConfig::default().machines,
+        );
         let mut rng = Rng::new(seed);
         let rho = Priorities::sample(n, &mut rng);
         let mut sim = Simulator::new(MpcConfig::default());

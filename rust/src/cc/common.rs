@@ -1,10 +1,16 @@
 //! Shared building blocks for the MPC algorithms: per-phase priorities,
 //! neighborhood min/max hops as MPC rounds, and contraction as MPC rounds
-//! (Lemma 3.1).
+//! (Lemma 3.1) — all consuming the resident [`ShardedGraph`] natively.
+//!
+//! Message chunking is **by shard**, never by a `chunk_range` slice of one
+//! flat edge vector: every helper walks the shards the machine partition
+//! already owns, and the per-machine byte accounting comes pre-computed
+//! from shard statistics ([`ShardedGraph::hop_charge`],
+//! [`ShardedGraph::contract_charges`]) rather than a `machine_of` call per
+//! message.
 
-use crate::graph::{Csr, Graph, Vertex};
+use crate::graph::{Csr, ShardedGraph, Vertex};
 use crate::mpc::pool::{self, chunk_range};
-use crate::mpc::simulator::machine_of;
 use crate::mpc::Simulator;
 use crate::util::rng::Rng;
 
@@ -33,16 +39,36 @@ impl Priorities {
     }
 }
 
+/// Guard for the shard-count contract: `MpcConfig.machines` is the single
+/// source of the shard count.  A hard assert (O(1), once per round): on a
+/// mismatch the shard-derived charges would silently corrupt the
+/// per-machine metrics, so failing loudly beats a wrong `max_machine_bytes`.
+#[inline]
+fn check_shards(g: &ShardedGraph, sim: &Simulator) {
+    assert_eq!(
+        g.num_shards(),
+        sim.cfg.machines.max(1),
+        "shard count diverged from MpcConfig.machines — reshard the graph \
+         (ShardedGraph::reshard) or fix the simulator config"
+    );
+}
+
 /// One MPC round computing, for every vertex, `op` over the values of its
 /// neighbors (and itself if `include_self`).
 ///
 /// Mapper: each edge `(u,v)` emits `(u, vals[v])` and `(v, vals[u])`;
 /// each vertex emits its own value when `include_self`.  Reducer folds
 /// with `op`.  This is exactly the label-computation round of Lemma 3.1.
+///
+/// The message stream is one lazy chunk per **shard** (edges the shard
+/// owns, plus a `1/p` range of the self messages — an arbitrary but fixed
+/// assignment, legal because `op` is associative and commutative), so both
+/// the values and the metrics are functions of `machines` alone, never of
+/// `threads`.
 pub fn neighborhood_fold<V>(
     sim: &mut Simulator,
     label: &str,
-    g: &Graph,
+    g: &ShardedGraph,
     vals: &[V],
     include_self: bool,
     op: fn(V, V) -> V,
@@ -52,19 +78,22 @@ where
 {
     let n = g.num_vertices();
     debug_assert_eq!(vals.len(), n);
-    // Associative+commutative per-key fold -> the simulator's grouping-free
-    // chunked fast path: the edge list (and the self-message range) is
-    // sliced into one lazy message chunk per configured thread, folded
-    // edge-parallel on the worker pool (identical semantics and
-    // accounting; §Perf).
+    check_shards(g, sim);
+    let p = g.num_shards();
+    let msg_size = vals.first().map(|v| 8 + v.wire_size()).unwrap_or(0);
+    debug_assert!(
+        vals.iter().all(|v| 8 + v.wire_size() == msg_size),
+        "sharded hop accounting requires a uniform wire size across values"
+    );
+    let charge = g.hop_charge(msg_size, include_self);
     let mut out: Vec<V> = vals.to_vec();
-    let edges = g.edges();
-    let t = sim.cfg.threads.max(1);
-    let chunks: Vec<_> = (0..t)
-        .map(|i| {
-            let (ea, eb) = chunk_range(edges.len(), t, i);
+    let chunks: Vec<_> = g
+        .shards()
+        .iter()
+        .enumerate()
+        .map(|(s, shard)| {
             let (sa, sb) = if include_self {
-                chunk_range(n, t, i)
+                chunk_range(n, p, s)
             } else {
                 (0, 0)
             };
@@ -73,7 +102,8 @@ where
             // message, so with include_self=false a vertex's own value
             // correctly drops out as soon as any neighbor message
             // arrives, and is kept otherwise.
-            edges[ea..eb]
+            shard
+                .edges()
                 .iter()
                 .flat_map(move |&(u, v)| {
                     [
@@ -84,7 +114,7 @@ where
                 .chain((sa..sb).map(move |v| (v as u64, vals[v])))
         })
         .collect();
-    sim.round_fold_chunked(label, &mut out, chunks, op);
+    sim.round_fold_sharded(label, &mut out, chunks, charge, op);
     out
 }
 
@@ -93,7 +123,7 @@ where
 pub fn min_hop(
     sim: &mut Simulator,
     label: &str,
-    g: &Graph,
+    g: &ShardedGraph,
     vals: &[u32],
     include_self: bool,
 ) -> Vec<u32> {
@@ -105,7 +135,7 @@ pub fn min_hop(
 pub fn max_hop(
     sim: &mut Simulator,
     label: &str,
-    g: &Graph,
+    g: &ShardedGraph,
     vals: &[u32],
     include_self: bool,
 ) -> Vec<u32> {
@@ -120,13 +150,15 @@ pub fn max_hop(
 /// The fusion is metric-exact because both hops ship the same message
 /// *shape*: each edge sends a fixed-size value both ways and every vertex
 /// sends itself its own value, so `messages`, `bytes`, and the per-machine
-/// key loads coincide for hop 1 and hop 2 — they are computed once and
-/// recorded under both labels.  `op` must be associative and commutative
-/// (min/max), which also makes the CSR evaluation order irrelevant.
+/// key loads coincide for hop 1 and hop 2 — and, with the sharded store,
+/// they fall directly out of [`ShardedGraph::hop_charge`]: the extra
+/// load-computation pass over the edge list the unsharded engine needed is
+/// gone.  `op` must be associative and commutative (min/max), which also
+/// makes the CSR evaluation order irrelevant.
 pub fn fused_two_hop<V>(
     sim: &mut Simulator,
     labels: (&str, &str),
-    g: &Graph,
+    g: &ShardedGraph,
     csr: &Csr,
     vals: &[V],
     op: fn(V, V) -> V,
@@ -137,48 +169,19 @@ where
     let n = g.num_vertices();
     debug_assert_eq!(vals.len(), n);
     debug_assert_eq!(csr.num_vertices(), n);
+    check_shards(g, sim);
     let t = sim.cfg.threads.max(1);
-    let p = sim.cfg.machines.max(1);
-    let edges = g.edges();
 
-    // Per-machine load of one hop round: every edge charges both endpoint
-    // keys, every vertex charges its own key (self message).  The charge
-    // assumes every value of V reports one wire size (true of the Copy
-    // scalar impls), so bytes = messages * msg_size; a variable-size V
-    // would need the unfused per-message accounting instead.
+    // Per-machine load of one hop round, straight from shard membership.
+    // The charge assumes every value of V reports one wire size (true of
+    // the Copy scalar impls); a variable-size V would need the unfused
+    // per-message accounting instead.
     let msg_size: u64 = vals.first().map(|v| 8 + v.wire_size()).unwrap_or(0);
     debug_assert!(
         vals.iter().all(|v| 8 + v.wire_size() == msg_size),
         "fused_two_hop requires a uniform wire size across values"
     );
-    let mb_parts = pool::global().run_jobs(
-        (0..t)
-            .map(|i| {
-                let (ea, eb) = chunk_range(edges.len(), t, i);
-                let (va, vb) = chunk_range(n, t, i);
-                let edges = &edges[ea..eb];
-                move || {
-                    let mut mb = vec![0u64; p];
-                    for &(u, v) in edges {
-                        mb[machine_of(u as u64, p)] += msg_size;
-                        mb[machine_of(v as u64, p)] += msg_size;
-                    }
-                    for v in va..vb {
-                        mb[machine_of(v as u64, p)] += msg_size;
-                    }
-                    mb
-                }
-            })
-            .collect(),
-    );
-    let mut machine_bytes = vec![0u64; p];
-    for part in mb_parts {
-        for (a, b) in machine_bytes.iter_mut().zip(&part) {
-            *a += b;
-        }
-    }
-    let messages = 2 * edges.len() as u64 + n as u64;
-    let bytes = messages * msg_size;
+    let charge = g.hop_charge(msg_size, true);
 
     // The hop itself: vertex-chunked CSR traversal on the pool.
     let hop = |src: &[V]| -> Vec<V> {
@@ -208,9 +211,9 @@ where
     };
 
     let h1 = hop(vals);
-    sim.charge_round(labels.0, messages, bytes, &machine_bytes);
+    sim.charge_round(labels.0, charge.messages, charge.bytes, &charge.machine_bytes);
     let h2 = hop(&h1);
-    sim.charge_round(labels.1, messages, bytes, &machine_bytes);
+    sim.charge_round(labels.1, charge.messages, charge.bytes, &charge.machine_bytes);
     h2
 }
 
@@ -223,75 +226,35 @@ where
 /// label mapping is applied").  Returns the contracted graph plus the
 /// old-node -> new-node compaction map.
 ///
-/// The two per-message transform rounds are **fused** into one chunked
-/// pass on the worker pool, so the half-rewritten edge vector is never
-/// materialized.  The accounting stays round-exact: round 1 sends
-/// `(u, v)` keyed by `u`, round 2 sends `(l(u),)` keyed by the original
-/// `v` — both 12-byte messages whose machine loads depend only on the
-/// keys, so one pass computes both loads and charges the two rounds
-/// separately.
+/// With the sharded store both halves collapse into the graph layer:
+/// round 1's key is the owner shard itself and round 2's key lands on the
+/// cached peer histogram, so the two charges are pure shard statistics
+/// ([`ShardedGraph::contract_charges`]), and the relabel + re-bucket into
+/// the new owner shards happens in one shard-parallel pass
+/// ([`ShardedGraph::contract`]) — the half-rewritten edge vector is never
+/// materialized, and neither is any flat concatenation.
 pub fn contract_mpc(
     sim: &mut Simulator,
-    g: &Graph,
+    g: &ShardedGraph,
     labels: &[Vertex],
-) -> (Graph, Vec<Vertex>) {
-    let p = sim.cfg.machines.max(1);
-    let t = sim.cfg.threads.max(1);
-    let edges = g.edges();
-    let m = edges.len();
-    let parts = pool::global().run_jobs(
-        (0..t)
-            .map(|i| {
-                let (a, b) = chunk_range(m, t, i);
-                let edges = &edges[a..b];
-                move || {
-                    let mut out = Vec::with_capacity(edges.len());
-                    let mut mb_left = vec![0u64; p];
-                    let mut mb_right = vec![0u64; p];
-                    for &(u, v) in edges {
-                        mb_left[machine_of(u as u64, p)] += 12;
-                        mb_right[machine_of(v as u64, p)] += 12;
-                        out.push((labels[u as usize], labels[v as usize]));
-                    }
-                    (out, mb_left, mb_right)
-                }
-            })
-            .collect(),
+) -> (ShardedGraph, Vec<Vertex>) {
+    check_shards(g, sim);
+    let (left, right) = g.contract_charges();
+    let (contracted, compact) = g.contract(labels);
+    sim.charge_round("contract/left", left.messages, left.bytes, &left.machine_bytes);
+    sim.charge_round(
+        "contract/right",
+        right.messages,
+        right.bytes,
+        &right.machine_bytes,
     );
-    let mut relabeled: Vec<(u32, u32)> = Vec::with_capacity(m);
-    let mut mb_left = vec![0u64; p];
-    let mut mb_right = vec![0u64; p];
-    for (out, left, right) in parts {
-        relabeled.extend(out);
-        for (a, b) in mb_left.iter_mut().zip(&left) {
-            *a += b;
-        }
-        for (a, b) in mb_right.iter_mut().zip(&right) {
-            *a += b;
-        }
-    }
-    let bytes = 12 * m as u64;
-    sim.charge_round("contract/left", m as u64, bytes, &mb_left);
-    sim.charge_round("contract/right", m as u64, bytes, &mb_right);
-
-    // Build the contracted graph over the compacted label space (duplicate
-    // removal is "standard", charged inside the same rounds).  Labels are
-    // vertex ids < n, so compaction is the shared dense rank table
-    // (`graph::label_ranks`) rather than per-edge binary search (§Perf).
-    let n = labels.len();
-    let (rank_of, count) = crate::graph::label_ranks(labels, n);
-    let compact: Vec<Vertex> = labels.iter().map(|&l| rank_of[l as usize]).collect();
-    let edges: Vec<(Vertex, Vertex)> = relabeled
-        .into_iter()
-        .map(|(lu, lv)| (rank_of[lu as usize], rank_of[lv as usize]))
-        .collect();
-    (Graph::from_edges(count, edges), compact)
+    (contracted, compact)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::graph::generators;
+    use crate::graph::{generators, Graph};
     use crate::mpc::MpcConfig;
 
     fn sim() -> Simulator {
@@ -300,6 +263,10 @@ mod tests {
             space_per_machine: None,
             threads: 1,
         })
+    }
+
+    fn shard(g: &Graph, p: usize) -> ShardedGraph {
+        ShardedGraph::from_graph(g, p)
     }
 
     #[test]
@@ -313,7 +280,7 @@ mod tests {
 
     #[test]
     fn min_hop_on_path() {
-        let g = generators::path(5);
+        let g = shard(&generators::path(5), 4);
         let vals = vec![4, 3, 0, 1, 2];
         let mut s = sim();
         let out = min_hop(&mut s, "t", &g, &vals, true);
@@ -325,7 +292,7 @@ mod tests {
 
     #[test]
     fn min_hop_excluding_self() {
-        let g = generators::path(3);
+        let g = shard(&generators::path(3), 4);
         let vals = vec![0, 5, 9];
         let mut s = sim();
         let out = min_hop(&mut s, "t", &g, &vals, false);
@@ -335,7 +302,7 @@ mod tests {
 
     #[test]
     fn isolated_vertex_keeps_value() {
-        let g = Graph::from_edges(3, vec![(0, 1)]);
+        let g = ShardedGraph::from_edges(3, 4, vec![(0, 1)]);
         let vals = vec![2, 1, 7];
         let mut s = sim();
         let out = min_hop(&mut s, "t", &g, &vals, false);
@@ -344,7 +311,7 @@ mod tests {
 
     #[test]
     fn max_hop_on_star() {
-        let g = generators::star(4);
+        let g = shard(&generators::star(4), 4);
         let vals = vec![0, 5, 9, 2];
         let mut s = sim();
         let out = max_hop(&mut s, "t", &g, &vals, true);
@@ -352,15 +319,73 @@ mod tests {
     }
 
     #[test]
+    fn hop_metrics_match_per_message_reference() {
+        // The shard-derived charge must equal round_fold's per-message
+        // accounting on the same multiset — same label so the whole
+        // RoundMetrics compares equal.
+        let flat = generators::gnp(300, 0.02, &mut Rng::new(5));
+        let g = shard(&flat, 4);
+        let vals: Vec<u32> = (0..300u32).rev().collect();
+        for include_self in [true, false] {
+            let mut s_ref = sim();
+            let mut out_ref = vals.clone();
+            let edge_msgs = flat.edges().iter().flat_map(|&(u, v)| {
+                [
+                    (u as u64, vals[v as usize]),
+                    (v as u64, vals[u as usize]),
+                ]
+            });
+            let self_msgs = (0..if include_self { 300u64 } else { 0 })
+                .map(|v| (v, vals[v as usize]));
+            s_ref.round_fold("t", &mut out_ref, edge_msgs.chain(self_msgs), u32::min);
+
+            let mut s = sim();
+            let out = min_hop(&mut s, "t", &g, &vals, include_self);
+            assert_eq!(out, out_ref, "include_self={include_self}");
+            assert_eq!(
+                s.metrics.rounds[0], s_ref.metrics.rounds[0],
+                "include_self={include_self}"
+            );
+        }
+    }
+
+    #[test]
     fn contract_mpc_matches_graph_contract() {
-        let g = generators::cycle(6);
+        let flat = generators::cycle(6);
+        let g = shard(&flat, 4);
         let labels: Vec<Vertex> = vec![0, 0, 2, 2, 4, 4];
         let mut s = sim();
         let (cm, compact_m) = contract_mpc(&mut s, &g, &labels);
-        let (cg, compact_g) = g.contract(&labels);
-        assert_eq!(cm, cg);
+        let (cg, compact_g) = flat.contract(&labels);
+        assert_eq!(cm.to_graph(), cg);
         assert_eq!(compact_m, compact_g);
         assert_eq!(s.metrics.num_rounds(), 2, "contraction is O(1) rounds");
+    }
+
+    #[test]
+    fn contract_mpc_metrics_match_per_message_reference() {
+        use crate::mpc::simulator::machine_of;
+        let flat = generators::gnp(250, 0.02, &mut Rng::new(6));
+        let g = shard(&flat, 4);
+        let labels: Vec<Vertex> = (0..250u32).map(|v| v % 41).collect();
+        let mut s = sim();
+        let _ = contract_mpc(&mut s, &g, &labels);
+        let m = flat.num_edges() as u64;
+        let mut mb_left = vec![0u64; 4];
+        let mut mb_right = vec![0u64; 4];
+        for &(u, v) in flat.edges() {
+            mb_left[machine_of(u as u64, 4)] += 12;
+            mb_right[machine_of(v as u64, 4)] += 12;
+        }
+        let left = &s.metrics.rounds[0];
+        let right = &s.metrics.rounds[1];
+        assert_eq!((left.messages, left.bytes), (m, 12 * m));
+        assert_eq!(left.max_machine_bytes, mb_left.iter().copied().max().unwrap());
+        assert_eq!((right.messages, right.bytes), (m, 12 * m));
+        assert_eq!(
+            right.max_machine_bytes,
+            mb_right.iter().copied().max().unwrap()
+        );
     }
 
     fn sim_threads(threads: usize) -> Simulator {
@@ -383,18 +408,19 @@ mod tests {
                 let n = size.max(2);
                 generators::gnp(n, 4.0 / n as f64, rng)
             },
-            |g| {
-                let n = g.num_vertices();
+            |flat| {
+                let n = flat.num_vertices();
+                let g = ShardedGraph::from_graph(flat, 4);
                 let vals: Vec<u32> = (0..n as u32).map(|v| v.wrapping_mul(2654435761)).collect();
                 for threads in [1usize, 4] {
                     let mut s_seq = sim_threads(threads);
-                    let h1 = min_hop(&mut s_seq, "hop1", g, &vals, true);
-                    let h2 = min_hop(&mut s_seq, "hop2", g, &h1, true);
+                    let h1 = min_hop(&mut s_seq, "hop1", &g, &vals, true);
+                    let h2 = min_hop(&mut s_seq, "hop2", &g, &h1, true);
 
                     let mut s_fused = sim_threads(threads);
-                    let csr = crate::graph::Csr::build(g);
+                    let csr = Csr::build_sharded(&g);
                     let fused =
-                        fused_two_hop(&mut s_fused, ("hop1", "hop2"), g, &csr, &vals, u32::min);
+                        fused_two_hop(&mut s_fused, ("hop1", "hop2"), &g, &csr, &vals, u32::min);
 
                     crate::prop_assert!(fused == h2, "values diverge (threads={threads})");
                     crate::prop_assert!(
@@ -412,7 +438,7 @@ mod tests {
     #[test]
     fn neighborhood_fold_is_engine_invariant() {
         let mut rng = Rng::new(21);
-        let g = generators::gnp(800, 0.01, &mut rng);
+        let g = shard(&generators::gnp(800, 0.01, &mut rng), 4);
         let vals: Vec<u32> = (0..800u32).rev().collect();
         let exec = |threads: usize, include_self: bool| {
             let mut s = sim_threads(threads);
@@ -434,7 +460,7 @@ mod tests {
     #[test]
     fn contract_mpc_is_engine_invariant() {
         let mut rng = Rng::new(22);
-        let g = generators::gnp(600, 0.01, &mut rng);
+        let g = shard(&generators::gnp(600, 0.01, &mut rng), 4);
         let labels: Vec<Vertex> = (0..600u32).map(|v| v % 97).collect();
         let exec = |threads: usize| {
             let mut s = sim_threads(threads);
@@ -450,7 +476,7 @@ mod tests {
     #[test]
     fn contract_mpc_charges_o_m_bytes() {
         let mut rng = Rng::new(2);
-        let g = generators::gnp(300, 0.02, &mut rng);
+        let g = shard(&generators::gnp(300, 0.02, &mut rng), 4);
         let labels: Vec<Vertex> = (0..300u32).map(|v| v / 2).collect();
         let mut s = sim();
         let _ = contract_mpc(&mut s, &g, &labels);

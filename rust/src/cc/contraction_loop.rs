@@ -6,17 +6,23 @@
 //! to the single-machine finisher), and (c) stop when no edges remain.
 //! This module owns that loop plus the bookkeeping that maps contracted
 //! node ids back to canonical original-vertex labels.
+//!
+//! The loop's working graph is the resident [`ShardedGraph`]: pruning
+//! re-buckets shard-locally, the finisher ships straight off the shards,
+//! and the phase callback receives shards it can hand to the round helpers
+//! without any flattening.
 
 use super::oracle;
 use super::CcResult;
-use crate::graph::{Graph, Vertex};
-use crate::mpc::Simulator;
+use crate::graph::{ShardedGraph, Vertex};
+use crate::mpc::simulator::machine_of;
+use crate::mpc::{ShardRound, Simulator};
 use crate::util::rng::Rng;
 
 /// Outcome of one contraction phase: the contracted graph plus the map from
 /// the phase-input node ids to the contracted node ids.
 pub struct PhaseOutcome {
-    pub contracted: Graph,
+    pub contracted: ShardedGraph,
     pub node_map: Vec<Vertex>,
 }
 
@@ -33,14 +39,14 @@ pub struct LoopOptions {
 /// same connected component (the soundness invariant every algorithm's
 /// label step guarantees).
 pub fn run<F>(
-    g: &Graph,
+    g: &ShardedGraph,
     sim: &mut Simulator,
     rng: &mut Rng,
     opts: LoopOptions,
     mut phase: F,
 ) -> CcResult
 where
-    F: FnMut(&Graph, &mut Simulator, &mut Rng, u32) -> PhaseOutcome,
+    F: FnMut(&ShardedGraph, &mut Simulator, &mut Rng, u32) -> PhaseOutcome,
 {
     let n_orig = g.num_vertices();
     // node_of[v]: current node id of original vertex v (when unresolved)
@@ -84,15 +90,26 @@ where
         }
 
         // §6 finisher: small graph -> one machine, streaming union-find.
-        // Charged as one round shipping every remaining edge.
+        // Charged as one round shipping every remaining edge to key 0 —
+        // the load lands entirely on machine_of(0), straight from the
+        // shard sizes.
         if opts.finisher_threshold > 0 && cur.num_edges() <= opts.finisher_threshold {
-            let msgs: Vec<(u64, (u32, u32))> = cur
-                .edges()
+            let p = sim.cfg.machines.max(1);
+            let m_edges = cur.num_edges() as u64;
+            let mut machine_bytes = vec![0u64; p];
+            machine_bytes[machine_of(0, p)] = 16 * m_edges; // 8 key + (u32,u32)
+            let charge = ShardRound {
+                messages: m_edges,
+                bytes: 16 * m_edges,
+                machine_bytes,
+            };
+            let chunks: Vec<_> = cur
+                .shards()
                 .iter()
-                .map(|&(u, v)| (0u64, (u, v))) // key 0: everything to one machine
+                .map(|s| s.edges().iter().map(|&(u, v)| (0u64, (u, v))))
                 .collect();
-            let _: Vec<()> = sim.round("finisher/ship", msgs, |_, _| vec![]);
-            let node_labels = oracle::components(&cur); // min node id per comp
+            let _: Vec<()> = sim.round_map_sharded("finisher/ship", chunks, charge, |_, _| ());
+            let node_labels = oracle::components_sharded(&cur); // min node id per comp
             let m = min_orig(cur.num_vertices(), &node_of, &resolved);
             // canonical original label per component = min over member nodes
             let mut comp_min = vec![Vertex::MAX; cur.num_vertices()];
@@ -115,7 +132,7 @@ where
             // Resource guard tripped: resolve via the oracle so the result
             // is still usable, but mark the run incomplete.
             completed = false;
-            let node_labels = oracle::components(&cur);
+            let node_labels = oracle::components_sharded(&cur);
             let m = min_orig(cur.num_vertices(), &node_of, &resolved);
             let mut comp_min = vec![Vertex::MAX; cur.num_vertices()];
             for node in 0..cur.num_vertices() {
@@ -143,7 +160,8 @@ where
         }
         cur = outcome.contracted;
 
-        // §6: prune isolated nodes — their component is complete.
+        // §6: prune isolated nodes — their component is complete.  The
+        // prune re-buckets surviving edges shard-locally.
         if opts.prune_isolated {
             let m = min_orig(cur.num_vertices(), &node_of, &resolved);
             let (pruned, map) = cur.prune_isolated();
@@ -177,7 +195,7 @@ where
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::graph::generators;
+    use crate::graph::{generators, Csr, Graph};
     use crate::mpc::MpcConfig;
 
     fn sim() -> Simulator {
@@ -188,10 +206,14 @@ mod tests {
         })
     }
 
+    fn shard(g: &Graph) -> ShardedGraph {
+        ShardedGraph::from_graph(g, 4)
+    }
+
     /// A toy phase: merge every node with its minimum neighbor (Hash-Min
     /// style single hop) — converges, merges only within components.
-    fn toy_phase(g: &Graph, _s: &mut Simulator, _r: &mut Rng, _p: u32) -> PhaseOutcome {
-        let csr = crate::graph::Csr::build(g);
+    fn toy_phase(g: &ShardedGraph, _s: &mut Simulator, _r: &mut Rng, _p: u32) -> PhaseOutcome {
+        let csr = Csr::build_sharded(g);
         let labels: Vec<Vertex> = (0..g.num_vertices() as u32)
             .map(|v| {
                 csr.neighbors(v)
@@ -211,7 +233,8 @@ mod tests {
 
     #[test]
     fn loop_terminates_and_labels_are_canonical() {
-        let g = generators::path(17).disjoint_union(generators::complete(5));
+        let flat = generators::path(17).disjoint_union(generators::complete(5));
+        let g = shard(&flat);
         let mut s = sim();
         let mut rng = Rng::new(1);
         let opts = LoopOptions {
@@ -221,14 +244,15 @@ mod tests {
         };
         let res = run(&g, &mut s, &mut rng, opts, toy_phase);
         assert!(res.completed);
-        assert!(oracle::verify(&g, &res.labels).is_ok());
+        assert!(oracle::verify(&flat, &res.labels).is_ok());
         assert!(res.phases >= 2);
-        assert_eq!(res.edges_per_phase[0], g.num_edges() as u64);
+        assert_eq!(res.edges_per_phase[0], flat.num_edges() as u64);
     }
 
     #[test]
     fn finisher_short_circuits() {
-        let g = generators::path(64);
+        let flat = generators::path(64);
+        let g = shard(&flat);
         let mut s = sim();
         let mut rng = Rng::new(2);
         let with_fin = run(
@@ -243,12 +267,28 @@ mod tests {
             toy_phase,
         );
         assert_eq!(with_fin.phases, 1, "finisher takes over immediately");
-        assert!(oracle::verify(&g, &with_fin.labels).is_ok());
+        assert!(oracle::verify(&flat, &with_fin.labels).is_ok());
+        // the ship round's load sits entirely on machine_of(0)
+        let ship = s_metrics_round(&with_fin, "finisher/ship");
+        assert_eq!(ship.bytes, 16 * flat.num_edges() as u64);
+        assert_eq!(ship.max_machine_bytes, ship.bytes);
+    }
+
+    fn s_metrics_round<'a>(
+        res: &'a CcResult,
+        label: &str,
+    ) -> &'a crate::mpc::RoundMetrics {
+        res.metrics
+            .rounds
+            .iter()
+            .find(|r| r.label == label)
+            .expect("round not recorded")
     }
 
     #[test]
     fn max_phases_guard_marks_incomplete() {
-        let g = generators::path(1 << 10);
+        let flat = generators::path(1 << 10);
+        let g = shard(&flat);
         let mut s = sim();
         let mut rng = Rng::new(3);
         let res = run(
@@ -264,12 +304,12 @@ mod tests {
         );
         assert!(!res.completed);
         // labels still correct thanks to the guard resolution
-        assert!(oracle::verify(&g, &res.labels).is_ok());
+        assert!(oracle::verify(&flat, &res.labels).is_ok());
     }
 
     #[test]
     fn isolated_vertices_resolve_immediately() {
-        let g = Graph::empty(5);
+        let g = ShardedGraph::empty(5, 4);
         let mut s = sim();
         let mut rng = Rng::new(4);
         let res = run(
@@ -290,7 +330,8 @@ mod tests {
     #[test]
     fn edges_per_phase_is_monotone_for_contractive_phase() {
         let mut rng = Rng::new(5);
-        let g = generators::gnp(300, 0.02, &mut Rng::new(50));
+        let flat = generators::gnp(300, 0.02, &mut Rng::new(50));
+        let g = shard(&flat);
         let mut s = sim();
         let res = run(
             &g,

@@ -11,10 +11,10 @@
 //! + label (1 round) + contraction (2 rounds); phases iterate under the
 //! shared [`contraction_loop`].
 
-use super::common::{contract_mpc, Priorities};
+use super::common::{contract_mpc, neighborhood_fold, Priorities};
 use super::contraction_loop::{self, LoopOptions, PhaseOutcome};
 use super::{CcAlgorithm, CcResult, RunOptions};
-use crate::graph::{Graph, Vertex};
+use crate::graph::{ShardedGraph, Vertex};
 use crate::mpc::pool::chunk_range;
 use crate::mpc::Simulator;
 use crate::util::rng::Rng;
@@ -23,46 +23,38 @@ use crate::util::rng::Rng;
 pub struct Cracker;
 
 /// Compute `m(v)` = the vertex of minimum priority in `N(v) ∪ {v}`
-/// (one MPC round carrying `(priority, id)` pairs).
-pub fn min_neighbor(g: &Graph, rho: &Priorities, sim: &mut Simulator) -> Vec<Vertex> {
+/// (one MPC round carrying `(priority, id)` pairs): a self-inclusive
+/// [`neighborhood_fold`] over `(rho[v], v)` values.
+pub fn min_neighbor(g: &ShardedGraph, rho: &Priorities, sim: &mut Simulator) -> Vec<Vertex> {
     let n = g.num_vertices();
-    // per-key (priority, id) min fold, self-inclusive
-    let mut out: Vec<(u32, u32)> = (0..n as u32)
+    let vals: Vec<(u32, u32)> = (0..n as u32)
         .map(|v| (rho.rho[v as usize], v))
         .collect();
-    let edge_msgs = g.edges().iter().flat_map(|&(u, v)| {
-        [
-            (u as u64, (rho.rho[v as usize], v)),
-            (v as u64, (rho.rho[u as usize], u)),
-        ]
-    });
-    let self_msgs = (0..n as u32).map(|v| (v as u64, (rho.rho[v as usize], v)));
-    sim.round_fold(
-        "cracker/min-nbr",
-        &mut out,
-        edge_msgs.chain(self_msgs),
-        |a, b| a.min(b),
-    );
+    let out = neighborhood_fold(sim, "cracker/min-nbr", g, &vals, true, |a, b| a.min(b));
     out.into_iter().map(|(_, v)| v).collect()
 }
 
 /// Hash-To-Min style rewiring: edges `{(m(v), u) : u ∈ N(v) ∪ {v}}`.
 /// One MPC round (each vertex's neighborhood is shipped to `m(v)`).
 ///
-/// The heaviest Cracker round, so it goes through the engine's chunked
-/// map path: one lazy message chunk per configured thread (edge slice +
-/// self-message range, mirroring `neighborhood_fold`).  The emitted edge
-/// order varies with the chunk count, but `Graph::from_edges` normalizes
-/// it away — graph and metrics stay engine-invariant.
-pub fn rewire(g: &Graph, m: &[Vertex], sim: &mut Simulator) -> Graph {
+/// The messages are keyed by the *hub* `m(v)`, not by the shard's own
+/// keys, so — unlike the hops — the per-machine loads are a genuine
+/// function of `m` and stay on the per-message-accounted chunked map
+/// path; the chunks are the shards themselves (plus a `1/p` range of the
+/// self messages each).  The rewired edges materialize at their hubs and
+/// are re-bucketed into their owner shards by `ShardedGraph::from_edges`
+/// — that shuffle *is* the semantics of the round.
+pub fn rewire(g: &ShardedGraph, m: &[Vertex], sim: &mut Simulator) -> ShardedGraph {
     let n = g.num_vertices();
-    let edges = g.edges();
-    let t = sim.cfg.threads.max(1);
-    let chunks: Vec<_> = (0..t)
-        .map(|i| {
-            let (ea, eb) = chunk_range(edges.len(), t, i);
-            let (sa, sb) = chunk_range(n, t, i);
-            edges[ea..eb]
+    let p = g.num_shards();
+    let chunks: Vec<_> = g
+        .shards()
+        .iter()
+        .enumerate()
+        .map(|(s, shard)| {
+            let (sa, sb) = chunk_range(n, p, s);
+            shard
+                .edges()
                 .iter()
                 .flat_map(move |&(u, v)| {
                     [
@@ -73,9 +65,10 @@ pub fn rewire(g: &Graph, m: &[Vertex], sim: &mut Simulator) -> Graph {
                 .chain((sa..sb).map(move |v| (m[v] as u64, (m[v], v as u32))))
         })
         .collect();
-    // pure message delivery: each new edge materializes at its hub machine
+    // pure message delivery: each new edge materializes at its hub machine;
+    // same vertex universe + shard count, so the ownership cache carries over
     let edges: Vec<(u32, u32)> = sim.round_map_chunked("cracker/rewire", chunks, |_, pair| pair);
-    Graph::from_edges(n, edges)
+    g.from_edges_like(edges)
 }
 
 impl CcAlgorithm for Cracker {
@@ -83,9 +76,9 @@ impl CcAlgorithm for Cracker {
         "cracker"
     }
 
-    fn run(
+    fn run_sharded(
         &self,
-        g: &Graph,
+        g: &ShardedGraph,
         sim: &mut Simulator,
         rng: &mut Rng,
         opts: &RunOptions,
@@ -114,7 +107,7 @@ impl CcAlgorithm for Cracker {
 mod tests {
     use super::*;
     use crate::cc::oracle;
-    use crate::graph::generators;
+    use crate::graph::{generators, Graph};
     use crate::mpc::MpcConfig;
 
     fn sim() -> Simulator {
@@ -127,7 +120,7 @@ mod tests {
 
     #[test]
     fn min_neighbor_identity_priorities() {
-        let g = generators::path(4);
+        let g = ShardedGraph::from_graph(&generators::path(4), 4);
         let rho = Priorities {
             rho: vec![0, 1, 2, 3],
             inv: vec![0, 1, 2, 3],
@@ -139,10 +132,10 @@ mod tests {
 
     #[test]
     fn rewire_connects_neighborhood_to_min() {
-        let g = generators::path(4);
+        let g = ShardedGraph::from_graph(&generators::path(4), 4);
         let m = vec![0, 0, 1, 2];
         let mut s = sim();
-        let r = rewire(&g, &m, &mut s);
+        let r = rewire(&g, &m, &mut s).to_graph();
         // v=1's neighborhood {0,1,2} hangs off m(1)=0; v=2's {1,2,3} off 1...
         assert!(r.edges().contains(&(0, 1)));
         assert!(r.edges().contains(&(0, 2)));

@@ -5,7 +5,7 @@
 
 use super::common::min_hop;
 use super::{CcAlgorithm, CcResult, RunOptions};
-use crate::graph::{Graph, Vertex};
+use crate::graph::{ShardedGraph, Vertex};
 use crate::mpc::Simulator;
 use crate::util::rng::Rng;
 
@@ -17,9 +17,9 @@ impl CcAlgorithm for HashMin {
         "hash-min"
     }
 
-    fn run(
+    fn run_sharded(
         &self,
-        g: &Graph,
+        g: &ShardedGraph,
         sim: &mut Simulator,
         _rng: &mut Rng,
         opts: &RunOptions,
@@ -47,7 +47,7 @@ impl CcAlgorithm for HashMin {
         let labels: Vec<Vertex> = if completed {
             labels
         } else {
-            super::oracle::components(g) // guard: salvage a correct answer
+            super::oracle::components_sharded(g) // guard: salvage a correct answer
         };
         CcResult {
             labels,

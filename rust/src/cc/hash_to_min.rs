@@ -8,7 +8,7 @@
 //! datasets), so the run is guarded by `RunOptions::state_cap`.
 
 use super::{CcAlgorithm, CcResult, RunOptions};
-use crate::graph::{Csr, Graph, Vertex};
+use crate::graph::{Csr, ShardedGraph, Vertex};
 use crate::mpc::Simulator;
 use crate::util::rng::Rng;
 
@@ -20,15 +20,15 @@ impl CcAlgorithm for HashToMin {
         "hash-to-min"
     }
 
-    fn run(
+    fn run_sharded(
         &self,
-        g: &Graph,
+        g: &ShardedGraph,
         sim: &mut Simulator,
         _rng: &mut Rng,
         opts: &RunOptions,
     ) -> CcResult {
         let n = g.num_vertices();
-        let csr = Csr::build(g);
+        let csr = Csr::build_sharded(g);
         let mut clusters: Vec<Vec<u32>> = (0..n as u32)
             .map(|v| {
                 let mut c: Vec<u32> = csr.neighbors(v).to_vec();
@@ -95,7 +95,7 @@ impl CcAlgorithm for HashToMin {
         let labels: Vec<Vertex> = if completed {
             clusters.iter().map(|c| c[0]).collect()
         } else {
-            super::oracle::components(g)
+            super::oracle::components_sharded(g)
         };
         CcResult {
             labels,
@@ -112,7 +112,7 @@ impl CcAlgorithm for HashToMin {
 mod tests {
     use super::*;
     use crate::cc::oracle;
-    use crate::graph::generators;
+    use crate::graph::{generators, Graph};
     use crate::mpc::MpcConfig;
 
     fn sim() -> Simulator {

@@ -13,7 +13,7 @@ use super::common::{contract_mpc, fused_two_hop, Priorities};
 use super::contraction_loop::{self, LoopOptions, PhaseOutcome};
 use super::merge_to_large::{self, Schedule};
 use super::{CcAlgorithm, CcResult, RunOptions};
-use crate::graph::{Graph, Vertex};
+use crate::graph::{Csr, ShardedGraph, Vertex};
 use crate::mpc::Simulator;
 use crate::util::rng::Rng;
 
@@ -27,7 +27,7 @@ pub struct LocalContraction {
 /// minimum priority over `N(N(v))` — two min-hops over `rho`, then the
 /// inverse permutation recovers the representative vertex.
 pub fn phase_labels(
-    g: &Graph,
+    g: &ShardedGraph,
     sim: &mut Simulator,
     rho: &Priorities,
     dense: Option<&dyn DenseBackend>,
@@ -37,11 +37,15 @@ pub fn phase_labels(
     // Dense path: the compiled XLA artifact evaluates both hops in one
     // executable when the graph fits a shard. The shuffle the artifact
     // replaces is still charged to the model (same messages either way);
-    // only the *compute* moves onto the compiled kernel.
+    // only the *compute* moves onto the compiled kernel.  The artifact's
+    // input format is the flat edge list — a graph that fits one dense
+    // shard is small, so the conversion is the backend boundary, not a
+    // resident-representation round trip.
     if let Some(backend) = dense {
         if n <= backend.max_vertices() {
+            let flat = g.to_graph();
             let prio: Vec<i32> = rho.rho.iter().map(|&p| p as i32).collect();
-            if let Ok(labels) = backend.local_labels(g, &prio) {
+            if let Ok(labels) = backend.local_labels(&flat, &prio) {
                 charge_label_rounds(sim, g, n);
                 return labels
                     .into_iter()
@@ -59,21 +63,19 @@ pub fn phase_labels(
         }
     }
 
-    // Fused MPC path: build the CSR once per phase and evaluate both
-    // min-hops in one traversal; the model is still charged the two
-    // label rounds with accounting identical to two `min_hop` calls
-    // (enforced by `fused_two_hop_matches_two_min_hops_on_random_graphs`).
-    // The contraction that follows consumes the raw edge list, which *is*
-    // its natural access pattern — no second adjacency build anywhere in
-    // the phase.
-    let csr = crate::graph::Csr::build(g);
+    // Fused MPC path: build the CSR once per phase (straight off the
+    // shards) and evaluate both min-hops in one traversal; the model is
+    // still charged the two label rounds with accounting identical to two
+    // `min_hop` calls (enforced by
+    // `fused_two_hop_matches_two_min_hops_on_random_graphs`).
+    let csr = Csr::build_sharded(g);
     let h2 = fused_two_hop(sim, ("lc/hop1", "lc/hop2"), g, &csr, &rho.rho, u32::min);
     h2.into_iter().map(|p| rho.inv[p as usize]).collect()
 }
 
 /// Charge the two label rounds to the metrics when the dense backend
 /// computed the values (communication is identical; see Lemma 3.1).
-fn charge_label_rounds(sim: &mut Simulator, g: &Graph, n: usize) {
+fn charge_label_rounds(sim: &mut Simulator, g: &ShardedGraph, n: usize) {
     for label in ["lc/hop1(dense)", "lc/hop2(dense)"] {
         let msgs = 2 * g.num_edges() as u64 + n as u64;
         sim.metrics.record(crate::mpc::RoundMetrics {
@@ -95,9 +97,9 @@ impl CcAlgorithm for LocalContraction {
         }
     }
 
-    fn run(
+    fn run_sharded(
         &self,
-        g: &Graph,
+        g: &ShardedGraph,
         sim: &mut Simulator,
         rng: &mut Rng,
         opts: &RunOptions,
@@ -146,7 +148,7 @@ impl CcAlgorithm for LocalContraction {
 mod tests {
     use super::*;
     use crate::cc::oracle;
-    use crate::graph::generators;
+    use crate::graph::{generators, Graph};
     use crate::mpc::MpcConfig;
 
     fn sim() -> Simulator {
@@ -191,13 +193,14 @@ mod tests {
 
     #[test]
     fn phase_labels_match_min_of_two_hop() {
-        let g = generators::path(6);
+        let flat = generators::path(6);
+        let g = ShardedGraph::from_graph(&flat, 8);
         let mut s = sim();
         let mut rng = Rng::new(9);
         let rho = Priorities::sample(6, &mut rng);
         let labels = phase_labels(&g, &mut s, &rho, None);
         // each label's priority must equal min rho over N(N(v))
-        let csr = crate::graph::Csr::build(&g);
+        let csr = crate::graph::Csr::build(&flat);
         for v in 0..6u32 {
             let mut best = rho.rho[v as usize];
             let mut two_hop = vec![v];

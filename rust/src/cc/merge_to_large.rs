@@ -9,7 +9,7 @@
 //! priority.  All of it is O(1) extra MPC rounds.
 
 use super::common::{contract_mpc, neighborhood_fold, Priorities};
-use crate::graph::{Graph, Vertex};
+use crate::graph::{ShardedGraph, Vertex};
 use crate::mpc::Simulator;
 
 /// The `(α_i)` parameter schedule.
@@ -51,12 +51,12 @@ impl Schedule {
 ///
 /// Returns the re-contracted graph and the map H-node -> new node.
 pub fn step(
-    contracted: &Graph,
+    contracted: &ShardedGraph,
     node_map: &[Vertex],
     rho: &Priorities,
     alpha: u64,
     sim: &mut Simulator,
-) -> (Graph, Vec<Vertex>) {
+) -> (ShardedGraph, Vec<Vertex>) {
     let h_n = contracted.num_vertices();
 
     // Cluster membership: rho values of the phase-input vertices that were
@@ -129,7 +129,7 @@ mod tests {
     fn step_merges_small_into_large() {
         // H: star with center 0; node 0 is a large cluster (5 members),
         // leaves are singletons -> everything should merge into node 0.
-        let h = crate::graph::generators::star(4);
+        let h = ShardedGraph::from_graph(&crate::graph::generators::star(4), 4);
         // phase-input: 8 vertices; 0..5 merged into node 0, rest singletons
         let node_map: Vec<Vertex> = vec![0, 0, 0, 0, 0, 1, 2, 3];
         let mut rng = Rng::new(1);
@@ -143,7 +143,7 @@ mod tests {
 
     #[test]
     fn step_without_large_nodes_is_identity_shape() {
-        let h = crate::graph::generators::path(4);
+        let h = ShardedGraph::from_graph(&crate::graph::generators::path(4), 4);
         let node_map: Vec<Vertex> = (0..4).collect(); // all singletons
         let mut rng = Rng::new(2);
         let rho = Priorities::sample(4, &mut rng);
@@ -156,7 +156,7 @@ mod tests {
     #[test]
     fn two_hop_reach() {
         // path of nodes: L - a - b ; L large, b at distance 2 must merge.
-        let h = crate::graph::generators::path(3);
+        let h = ShardedGraph::from_graph(&crate::graph::generators::path(3), 4);
         let node_map: Vec<Vertex> = vec![0, 0, 0, 1, 2]; // node 0 has 3 members
         let mut rng = Rng::new(3);
         let rho = Priorities::sample(5, &mut rng);
@@ -170,7 +170,7 @@ mod tests {
         // Two large nodes L1-x-L2 with different priorities; x must pick the
         // one whose alpha-th member hash is larger (deterministic check via
         // engineered rho).
-        let h = crate::graph::generators::path(3); // nodes 0,1,2
+        let h = ShardedGraph::from_graph(&crate::graph::generators::path(3), 4); // nodes 0,1,2
         // members: node0 = {0,1}, node1 = {2}, node2 = {3,4}
         let node_map: Vec<Vertex> = vec![0, 0, 1, 2, 2];
         // engineered priorities: rho = identity permutation
@@ -189,7 +189,7 @@ mod tests {
 
     #[test]
     fn step_is_constant_rounds() {
-        let h = crate::graph::generators::cycle(10);
+        let h = ShardedGraph::from_graph(&crate::graph::generators::cycle(10), 4);
         let node_map: Vec<Vertex> = (0..10).collect();
         let mut rng = Rng::new(4);
         let rho = Priorities::sample(10, &mut rng);

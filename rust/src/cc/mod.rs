@@ -23,7 +23,7 @@ pub mod oracle;
 pub mod tree_contraction;
 pub mod two_phase;
 
-use crate::graph::{Graph, Vertex};
+use crate::graph::{Graph, ShardedGraph, Vertex};
 use crate::mpc::{Metrics, Simulator};
 use crate::util::rng::Rng;
 
@@ -85,11 +85,38 @@ impl Default for RunOptions<'_> {
     }
 }
 
-/// Common interface: run on `g` under `sim`, seeded deterministically.
+/// Common interface: run under `sim`, seeded deterministically.
+///
+/// The primary entry is [`run_sharded`](CcAlgorithm::run_sharded) — the
+/// algorithms compute on the resident [`ShardedGraph`], whose shard count
+/// must equal `sim.cfg.machines` (the single source of the shard count).
+/// [`run`](CcAlgorithm::run) is the flat-ingest adapter: it shards `g`
+/// once and delegates.
 pub trait CcAlgorithm {
     fn name(&self) -> &'static str;
-    fn run(&self, g: &Graph, sim: &mut Simulator, rng: &mut Rng, opts: &RunOptions)
-        -> CcResult;
+
+    /// Run on the sharded resident representation.  Callers must shard
+    /// with `sim.cfg.machines` shards (debug-asserted by the round
+    /// helpers in [`common`]).
+    fn run_sharded(
+        &self,
+        g: &ShardedGraph,
+        sim: &mut Simulator,
+        rng: &mut Rng,
+        opts: &RunOptions,
+    ) -> CcResult;
+
+    /// Flat-ingest convenience: shard `g` by `sim.cfg.machines` and run.
+    fn run(
+        &self,
+        g: &Graph,
+        sim: &mut Simulator,
+        rng: &mut Rng,
+        opts: &RunOptions,
+    ) -> CcResult {
+        let sharded = ShardedGraph::from_graph(g, sim.cfg.machines.max(1));
+        self.run_sharded(&sharded, sim, rng, opts)
+    }
 }
 
 /// Instantiate an algorithm by CLI name.

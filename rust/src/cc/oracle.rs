@@ -31,6 +31,13 @@ pub fn components_streaming(
     dsu.canonical_labels()
 }
 
+/// Sharded variant: walks the resident shards directly (no flattening).
+/// Canonical labels are a pure function of the edge set, so this equals
+/// [`components`] of the flattened graph.
+pub fn components_sharded(g: &crate::graph::ShardedGraph) -> Vec<Vertex> {
+    components_streaming(g.num_vertices(), g.iter_edges())
+}
+
 /// Check a candidate labeling against the oracle.  Returns `Ok(())` or a
 /// description of the first disagreement.
 pub fn verify(g: &Graph, labels: &[Vertex]) -> Result<(), String> {
@@ -85,6 +92,14 @@ mod tests {
         let a = components(&g);
         let b = components_streaming(500, g.edges().iter().copied());
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn sharded_matches_batch() {
+        let mut rng = Rng::new(2);
+        let g = generators::gnp(400, 0.008, &mut rng);
+        let sharded = crate::graph::ShardedGraph::from_graph(&g, 8);
+        assert_eq!(components_sharded(&sharded), components(&g));
     }
 
     #[test]

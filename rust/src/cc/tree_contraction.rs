@@ -12,10 +12,10 @@
 //!  * **distributed hash table** — publish `f` (O(n) writes), then every
 //!    vertex walks its chain in a single round (`O(d(v))` reads).
 
-use super::common::{contract_mpc, Priorities};
+use super::common::{contract_mpc, neighborhood_fold, Priorities};
 use super::contraction_loop::{self, LoopOptions, PhaseOutcome};
 use super::{CcAlgorithm, CcResult, RunOptions};
-use crate::graph::{Graph, Vertex};
+use crate::graph::{ShardedGraph, Vertex};
 use crate::mpc::{Dht, Simulator};
 use crate::util::rng::Rng;
 
@@ -26,20 +26,17 @@ pub struct TreeContraction {
 }
 
 /// Build `f_rho`: lowest-priority neighbor, or self for isolated vertices.
-/// One MPC round (each edge sends both endpoint priorities).
-pub fn build_pointers(g: &Graph, rho: &Priorities, sim: &mut Simulator) -> Vec<Vertex> {
-    // messages: (v, (rho[u], u)) for each edge both ways; per-key min fold
-    // (self excluded: f_rho(v) picks from N(v) \ {v}); isolated vertices
-    // keep the (MAX, self) sentinel and thus point at themselves.
+/// One MPC round (each edge sends both endpoint priorities): a
+/// self-**exclusive** [`neighborhood_fold`] over `(rho[v], v)` values —
+/// the fold replaces a vertex's own value on its first neighbor message
+/// (so `f_rho(v)` picks from `N(v) \ {v}`), while isolated vertices keep
+/// `(rho[v], v)` and thus point at themselves.
+pub fn build_pointers(g: &ShardedGraph, rho: &Priorities, sim: &mut Simulator) -> Vec<Vertex> {
     let n = g.num_vertices();
-    let mut out: Vec<(u32, u32)> = (0..n as u32).map(|v| (u32::MAX, v)).collect();
-    let msgs = g.edges().iter().flat_map(|&(u, v)| {
-        [
-            (u as u64, (rho.rho[v as usize], v)),
-            (v as u64, (rho.rho[u as usize], u)),
-        ]
-    });
-    sim.round_fold("tc/pointers", &mut out, msgs, |a, b| a.min(b));
+    let vals: Vec<(u32, u32)> = (0..n as u32)
+        .map(|v| (rho.rho[v as usize], v))
+        .collect();
+    let out = neighborhood_fold(sim, "tc/pointers", g, &vals, false, |a, b| a.min(b));
     out.into_iter().map(|(_, target)| target).collect()
 }
 
@@ -157,9 +154,9 @@ impl CcAlgorithm for TreeContraction {
         }
     }
 
-    fn run(
+    fn run_sharded(
         &self,
-        g: &Graph,
+        g: &ShardedGraph,
         sim: &mut Simulator,
         rng: &mut Rng,
         opts: &RunOptions,
@@ -202,7 +199,7 @@ pub fn roots_reference(f: &[Vertex]) -> Vec<Vertex> {
 mod tests {
     use super::*;
     use crate::cc::oracle;
-    use crate::graph::generators;
+    use crate::graph::{generators, Graph};
     use crate::mpc::MpcConfig;
 
     fn sim() -> Simulator {
@@ -215,7 +212,7 @@ mod tests {
 
     #[test]
     fn pointers_choose_min_priority_neighbor() {
-        let g = generators::path(4);
+        let g = ShardedGraph::from_graph(&generators::path(4), 8);
         let rho = Priorities {
             rho: vec![2, 0, 3, 1],
             inv: vec![1, 3, 0, 2],
@@ -231,7 +228,10 @@ mod tests {
     fn jumping_matches_reference_partition() {
         let mut rng = Rng::new(1);
         for seed in 0..5u64 {
-            let g = generators::gnp(200, 0.015, &mut Rng::new(seed + 10));
+            let g = ShardedGraph::from_graph(
+                &generators::gnp(200, 0.015, &mut Rng::new(seed + 10)),
+                8,
+            );
             let rho = Priorities::sample(200, &mut rng);
             let mut s = sim();
             let f = build_pointers(&g, &rho, &mut s);
@@ -253,7 +253,7 @@ mod tests {
     #[test]
     fn dht_matches_jumping() {
         let mut rng = Rng::new(2);
-        let g = generators::gnp(150, 0.03, &mut Rng::new(99));
+        let g = ShardedGraph::from_graph(&generators::gnp(150, 0.03, &mut Rng::new(99)), 8);
         let rho = Priorities::sample(150, &mut rng);
         let mut s = sim();
         let f = build_pointers(&g, &rho, &mut s);

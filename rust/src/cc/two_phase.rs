@@ -18,7 +18,7 @@
 //! notes.
 
 use super::{CcAlgorithm, CcResult, RunOptions};
-use crate::graph::{Graph, Vertex};
+use crate::graph::{Csr, ShardedGraph, Vertex};
 use crate::mpc::Simulator;
 use crate::util::rng::Rng;
 
@@ -27,13 +27,12 @@ pub struct TwoPhase;
 
 /// One star operation as an MPC round.  `large == true` emits edges for
 /// strictly larger neighbors only; otherwise for not-larger neighbors plus
-/// the center itself.
-pub fn star_round(g: &Graph, large: bool, sim: &mut Simulator) -> Graph {
-    let n = g.num_vertices();
+/// the center itself.  The map input walks the shards directly; the
+/// rewritten star edges re-bucket into their owner shards on the way out.
+pub fn star_round(g: &ShardedGraph, large: bool, sim: &mut Simulator) -> ShardedGraph {
     let msgs: Vec<(u64, u32)> = g
-        .edges()
-        .iter()
-        .flat_map(|&(u, v)| [(u as u64, v), (v as u64, u)])
+        .iter_edges()
+        .flat_map(|(u, v)| [(u as u64, v), (v as u64, u)])
         .collect();
     let label = if large { "two-phase/large-star" } else { "two-phase/small-star" };
     let edges: Vec<(u32, u32)> = sim.round(label, msgs, |key, nbrs| {
@@ -56,7 +55,8 @@ pub fn star_round(g: &Graph, large: bool, sim: &mut Simulator) -> Graph {
         }
         out
     });
-    Graph::from_edges(n, edges)
+    // same vertex universe + shard count: reuse the ownership cache
+    g.from_edges_like(edges)
 }
 
 impl CcAlgorithm for TwoPhase {
@@ -64,9 +64,9 @@ impl CcAlgorithm for TwoPhase {
         "two-phase"
     }
 
-    fn run(
+    fn run_sharded(
         &self,
-        g: &Graph,
+        g: &ShardedGraph,
         sim: &mut Simulator,
         _rng: &mut Rng,
         opts: &RunOptions,
@@ -113,7 +113,7 @@ impl CcAlgorithm for TwoPhase {
         // minima (or empty for already-finished components): every vertex's
         // minimum closed neighbor is its component minimum.
         let labels: Vec<Vertex> = if completed {
-            let csr = crate::graph::Csr::build(&cur);
+            let csr = Csr::build_sharded(&cur);
             (0..n as u32)
                 .map(|v| {
                     csr.neighbors(v)
@@ -125,7 +125,7 @@ impl CcAlgorithm for TwoPhase {
                 })
                 .collect()
         } else {
-            super::oracle::components(g)
+            super::oracle::components_sharded(g)
         };
 
         CcResult {
@@ -143,7 +143,7 @@ impl CcAlgorithm for TwoPhase {
 mod tests {
     use super::*;
     use crate::cc::oracle;
-    use crate::graph::generators;
+    use crate::graph::{generators, Graph};
     use crate::mpc::MpcConfig;
 
     fn sim() -> Simulator {
@@ -157,9 +157,9 @@ mod tests {
     #[test]
     fn large_star_hangs_bigger_neighbors_on_min() {
         // star with center 2 over {0,1,2,3}: edges (2,0),(2,1),(2,3)
-        let g = Graph::from_edges(4, vec![(2, 0), (2, 1), (2, 3)]);
+        let g = ShardedGraph::from_edges(4, 4, vec![(2, 0), (2, 1), (2, 3)]);
         let mut s = sim();
-        let r = star_round(&g, true, &mut s);
+        let r = star_round(&g, true, &mut s).to_graph();
         // center 2: m = 0; larger neighbor 3 -> (3,0); neighbors 0,1 emit
         // for their own stars: 0 has nbr {2}: 2>0 -> (2,0); 1: (2,1)->m=1
         assert!(r.edges().contains(&(0, 3)));

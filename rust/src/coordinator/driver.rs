@@ -1,8 +1,8 @@
 //! The run driver: configuration -> simulator -> algorithm -> report.
 
 use super::report::Report;
-use crate::cc::{self, RunOptions};
-use crate::graph::Graph;
+use crate::cc::{self, CcAlgorithm, RunOptions};
+use crate::graph::{Graph, ShardedGraph};
 use crate::mpc::{MpcConfig, Simulator};
 use crate::runtime::ShardExecutor;
 use crate::util::rng::Rng;
@@ -95,12 +95,27 @@ impl Driver {
         self.run_named(g, "graph")
     }
 
-    /// Run with a dataset name recorded in the report.
+    /// Run with a dataset name recorded in the report.  Shards `g` once by
+    /// `cfg.machines` (the ingest step) and runs on the resident store.
     pub fn run_named(&self, g: &Graph, dataset: &str) -> Report {
-        self.run_with_seed(g, dataset, self.cfg.seed)
+        let sharded = ShardedGraph::from_graph(g, self.cfg.machines.max(1));
+        self.run_sharded_seeded(&sharded, dataset, self.cfg.seed)
     }
 
-    fn run_with_seed(&self, g: &Graph, dataset: &str, seed: u64) -> Report {
+    /// Run on an already-sharded graph (e.g. the pipeline's summary)
+    /// without flattening.  A shard count differing from `cfg.machines`
+    /// is re-partitioned shard-to-shard (`ShardedGraph::reshard`) — the
+    /// edge list never round-trips through one flat vector.
+    pub fn run_named_sharded(&self, g: &ShardedGraph, dataset: &str) -> Report {
+        let machines = self.cfg.machines.max(1);
+        if g.num_shards() == machines {
+            self.run_sharded_seeded(g, dataset, self.cfg.seed)
+        } else {
+            self.run_sharded_seeded(&g.reshard(machines), dataset, self.cfg.seed)
+        }
+    }
+
+    fn run_sharded_seeded(&self, g: &ShardedGraph, dataset: &str, seed: u64) -> Report {
         let algo = cc::by_name(&self.cfg.algorithm);
         let mut sim = Simulator::new(MpcConfig {
             machines: self.cfg.machines,
@@ -120,7 +135,7 @@ impl Driver {
                 .map(|e| e as &dyn cc::backend::DenseBackend),
         };
         let t0 = std::time::Instant::now();
-        let res = algo.run(g, &mut sim, &mut rng, &opts);
+        let res = algo.run_sharded(g, &mut sim, &mut rng, &opts);
         let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
 
         let mut report = Report::from_result(
@@ -134,18 +149,24 @@ impl Driver {
         report.xla_calls =
             self.executor.as_ref().map(|e| e.calls.get()).unwrap_or(0) - xla_before;
         if self.cfg.verify {
-            report.verified = Some(cc::oracle::verify(g, &res.labels).is_ok());
+            report.verified = Some(res.labels == cc::oracle::components_sharded(g));
         }
         report
     }
 
     /// Median-of-`k`-seeds wall time protocol (§6: "we have taken a median
-    /// from three runs").  Returns the median-wall-time report.
+    /// from three runs").  Shards once, runs `k` times, returns the
+    /// median-wall-time report.
     pub fn run_median(&self, g: &Graph, dataset: &str, k: usize) -> Report {
         assert!(k >= 1);
+        let sharded = ShardedGraph::from_graph(g, self.cfg.machines.max(1));
         let mut reports: Vec<Report> = (0..k)
             .map(|i| {
-                self.run_with_seed(g, dataset, self.cfg.seed.wrapping_add(i as u64 * 1000))
+                self.run_sharded_seeded(
+                    &sharded,
+                    dataset,
+                    self.cfg.seed.wrapping_add(i as u64 * 1000),
+                )
             })
             .collect();
         reports.sort_by(|a, b| a.wall_ms.partial_cmp(&b.wall_ms).unwrap());

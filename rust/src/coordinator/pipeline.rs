@@ -1,19 +1,28 @@
 //! Streaming shard pipeline: the scale-out ingestion path.
 //!
 //! Mirrors the paper's deployment shape at laptop scale: the edge stream is
-//! partitioned over shard workers (hash sharding), each worker performs a
+//! partitioned over shard workers by the **same** `machine_of(min endpoint)`
+//! hash the resident [`ShardedGraph`] is keyed by, each worker performs a
 //! *local contraction* of its partition (streaming union-find — the same
 //! primitive as the §6 finisher), and the much smaller **summary graph**
 //! (one spanning edge per worker-local merge) is handed to a global
 //! finisher — by default the paper's LocalContraction running on the MPC
 //! simulator, with the compiled XLA dense backend when it fits a shard.
 //!
+//! Because routing is the ownership hash, worker `w`'s spanning edges *are*
+//! shard `w` of the summary: the workers' outputs become the summary
+//! [`ShardedGraph`] directly ([`ShardedGraph::from_shard_buckets`]), with
+//! no concatenate-then-reshard round trip, and the finisher
+//! ([`merge_summary`], or [`super::Driver::run_named_sharded`] for a paper
+//! algorithm) consumes the shards natively.
+//!
 //! Backpressure is real: workers consume from bounded channels; a slow
 //! worker stalls the generator (counted in [`PipelineStats`]).
 
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 
-use crate::graph::{Graph, Vertex};
+use crate::graph::{ShardedGraph, Vertex};
+use crate::mpc::simulator::machine_of;
 use crate::util::dsu::DisjointSet;
 
 /// Pipeline configuration.
@@ -56,13 +65,15 @@ pub struct PipelineStats {
 pub struct PipelineResult {
     pub labels: Vec<Vertex>,
     pub stats: PipelineStats,
-    /// The summary graph, exposed so callers can run a paper algorithm on
-    /// it (the end-to-end example feeds it to LocalContraction + XLA).
-    pub summary: Graph,
+    /// The summary graph, resident in sharded form (one shard per worker),
+    /// exposed so callers can run a paper algorithm on it (the end-to-end
+    /// example feeds it to LocalContraction + XLA via
+    /// `Driver::run_named_sharded`).
+    pub summary: ShardedGraph,
 }
 
 /// Run the pipeline: stream `edges` over `n` vertices through shard-local
-/// contraction, returning the summary graph and per-worker stats.
+/// contraction, returning the sharded summary graph and per-worker stats.
 ///
 /// The final global merge is left to the caller (see
 /// [`merge_summary`] for the plain union-find finisher).
@@ -85,7 +96,9 @@ where
         senders.push(tx);
         handles.push(std::thread::spawn(move || {
             // Shard-local contraction: streaming union-find over the shard's
-            // edges; emits one spanning edge per successful union.
+            // edges; emits one spanning edge per successful union.  Every
+            // spanning edge is an input edge of this shard, so the output
+            // satisfies the shard-ownership invariant by construction.
             let mut dsu = DisjointSet::new(n);
             let mut summary: Vec<(Vertex, Vertex)> = Vec::new();
             let mut edges_seen = 0u64;
@@ -101,7 +114,7 @@ where
         }));
     }
 
-    // generator: route chunks by min-endpoint hash, with backpressure
+    // generator: route chunks by the shard-ownership hash, with backpressure
     let t0 = std::time::Instant::now();
     let mut buffers: Vec<Vec<(Vertex, Vertex)>> = vec![Vec::new(); w];
     let send_chunk = |wid: usize,
@@ -124,8 +137,7 @@ where
         }
     };
     for (u, v) in edges {
-        let wid =
-            (crate::util::rng::splitmix64(u.min(v) as u64) % w as u64) as usize;
+        let wid = machine_of(u.min(v) as u64, w);
         stats.edges_streamed += 1;
         stats.per_worker_edges[wid] += 1;
         buffers[wid].push((u, v));
@@ -144,15 +156,16 @@ where
     drop(senders); // close channels
     stats.generate_ms = t0.elapsed().as_secs_f64() * 1e3;
 
-    // collect summaries
+    // collect: worker w's spanning edges are summary shard w — normalize
+    // them shard-locally, never through one flat list
     let t1 = std::time::Instant::now();
-    let mut summary_edges: Vec<(Vertex, Vertex)> = Vec::new();
+    let mut buckets: Vec<Vec<(Vertex, Vertex)>> = Vec::with_capacity(w);
     for h in handles {
         let (summary, _edges_seen) = h.join().expect("worker panicked");
-        summary_edges.extend(summary);
+        buckets.push(summary);
     }
-    stats.summary_edges = summary_edges.len() as u64;
-    let summary = Graph::from_edges(n, summary_edges);
+    let summary = ShardedGraph::from_shard_buckets(n, buckets);
+    stats.summary_edges = summary.num_edges() as u64;
     stats.merge_ms = t1.elapsed().as_secs_f64() * 1e3;
 
     PipelineResult {
@@ -162,9 +175,9 @@ where
     }
 }
 
-/// Plain global finisher: union-find over the summary graph.
-pub fn merge_summary(summary: &Graph) -> Vec<Vertex> {
-    crate::cc::oracle::components(summary)
+/// Plain global finisher: union-find straight over the summary shards.
+pub fn merge_summary(summary: &ShardedGraph) -> Vec<Vertex> {
+    crate::cc::oracle::components_sharded(summary)
 }
 
 #[cfg(test)]
@@ -188,6 +201,18 @@ mod tests {
         let labels = merge_summary(&res.summary);
         assert_eq!(labels, crate::cc::oracle::components(&g));
         assert_eq!(res.stats.edges_streamed, g.num_edges() as u64);
+    }
+
+    #[test]
+    fn summary_shards_are_worker_aligned() {
+        let g = generators::gnp(500, 0.01, &mut Rng::new(8));
+        let res = run(500, g.edges().iter().copied(), &cfg(3));
+        assert_eq!(res.summary.num_shards(), 3);
+        for (s, shard) in res.summary.shards().iter().enumerate() {
+            for &(u, v) in shard.edges() {
+                assert_eq!(machine_of(u.min(v) as u64, 3), s);
+            }
+        }
     }
 
     #[test]

@@ -5,6 +5,7 @@
 //! reference implementations of the per-phase label computations.
 
 use super::edgelist::{Graph, Vertex};
+use super::sharded::ShardedGraph;
 
 /// Symmetric CSR adjacency (each undirected edge appears in both rows).
 #[derive(Debug, Clone)]
@@ -14,10 +15,16 @@ pub struct Csr {
 }
 
 impl Csr {
-    pub fn build(g: &Graph) -> Csr {
-        let n = g.num_vertices();
+    /// Build from any two-pass edge source.  Rows are sorted, so the
+    /// result depends only on the edge *set* — flat and sharded sources
+    /// yield identical adjacencies.
+    fn build_from<I, F>(n: usize, edges: F) -> Csr
+    where
+        I: Iterator<Item = (Vertex, Vertex)>,
+        F: Fn() -> I,
+    {
         let mut deg = vec![0usize; n + 1];
-        for &(u, v) in g.edges() {
+        for (u, v) in edges() {
             deg[u as usize + 1] += 1;
             deg[v as usize + 1] += 1;
         }
@@ -27,7 +34,7 @@ impl Csr {
         let offsets = deg.clone();
         let mut cursor = deg;
         let mut nbrs = vec![0 as Vertex; offsets[n]];
-        for &(u, v) in g.edges() {
+        for (u, v) in edges() {
             nbrs[cursor[u as usize]] = v;
             cursor[u as usize] += 1;
             nbrs[cursor[v as usize]] = u;
@@ -40,6 +47,15 @@ impl Csr {
             csr.nbrs[s..e].sort_unstable();
         }
         csr
+    }
+
+    pub fn build(g: &Graph) -> Csr {
+        Self::build_from(g.num_vertices(), || g.edges().iter().copied())
+    }
+
+    /// Build straight from the sharded store — no flattening.
+    pub fn build_sharded(g: &ShardedGraph) -> Csr {
+        Self::build_from(g.num_vertices(), || g.iter_edges())
     }
 
     pub fn num_vertices(&self) -> usize {
@@ -126,5 +142,20 @@ mod tests {
         let csr = Csr::build(&Graph::empty(3));
         assert_eq!(csr.num_vertices(), 3);
         assert_eq!(csr.neighbors(0), &[] as &[Vertex]);
+    }
+
+    #[test]
+    fn sharded_build_matches_flat_build() {
+        let mut rng = crate::util::rng::Rng::new(5);
+        let raw: Vec<(Vertex, Vertex)> = (0..500)
+            .map(|_| (rng.gen_range(60) as Vertex, rng.gen_range(60) as Vertex))
+            .collect();
+        let flat = Graph::from_edges(60, raw.clone());
+        let sharded = ShardedGraph::from_edges(60, 4, raw);
+        let a = Csr::build(&flat);
+        let b = Csr::build_sharded(&sharded);
+        for v in 0..60u32 {
+            assert_eq!(a.neighbors(v), b.neighbors(v), "row {v}");
+        }
     }
 }

@@ -32,6 +32,36 @@ pub fn label_ranks(labels: &[Vertex], universe: usize) -> (Vec<Vertex>, usize) {
     (rank_of, next as usize)
 }
 
+/// Compact a label vector to dense ids `0..count`, preserving label order
+/// (so canonical minimum labels stay comparable across phases).  The usual
+/// case (labels are vertex ids, so values ~< n) uses the O(n) dense rank
+/// table; wildly sparse label values fall back to sort + binary-search
+/// rather than allocating a huge table.
+///
+/// Shared by [`Graph::contract`] and [`super::sharded::ShardedGraph::contract`]
+/// so both representations produce **bit-identical** compaction maps.
+pub fn compact_labels(labels: &[Vertex], n: usize) -> (Vec<Vertex>, usize) {
+    let universe = labels.iter().map(|&l| l as usize + 1).max().unwrap_or(0);
+    if universe <= n.saturating_mul(4).max(1024) {
+        let (rank_of, count) = label_ranks(labels, universe);
+        (
+            labels.iter().map(|&l| rank_of[l as usize]).collect(),
+            count,
+        )
+    } else {
+        let mut sorted: Vec<Vertex> = labels.to_vec();
+        sorted.sort_unstable();
+        sorted.dedup();
+        (
+            labels
+                .iter()
+                .map(|&l| sorted.binary_search(&l).unwrap() as Vertex)
+                .collect(),
+            sorted.len(),
+        )
+    }
+}
+
 /// An undirected graph as `n` vertex slots plus an edge list.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Graph {
@@ -99,21 +129,7 @@ impl Graph {
             }
         }
         self.edges.retain(|e| e.0 != e.1);
-        if self.edges.len() < (1 << 12) {
-            self.edges.sort_unstable();
-            self.edges.dedup();
-        } else {
-            let mut keys: Vec<u64> = self
-                .edges
-                .iter()
-                .map(|&(u, v)| ((u as u64) << 32) | v as u64)
-                .collect();
-            crate::util::radix::par_sort_u64(&mut keys);
-            keys.dedup();
-            self.edges.clear();
-            self.edges
-                .extend(keys.into_iter().map(|k| ((k >> 32) as Vertex, k as Vertex)));
-        }
+        crate::util::radix::par_sort_edge_pairs(&mut self.edges, true);
     }
 
     /// Per-vertex degree (normalized-graph semantics: no loops, no multi-edges).
@@ -156,31 +172,7 @@ impl Graph {
     /// to its node id in the new graph.
     pub fn contract(&self, labels: &[Vertex]) -> (Graph, Vec<Vertex>) {
         assert_eq!(labels.len(), self.n, "labels len != n");
-        // Compact label image -> dense ids, preserving label order so that
-        // canonical (minimum) labels stay comparable across phases.  The
-        // usual case (labels are vertex ids, so values ~< n) uses the O(n)
-        // dense rank table; wildly sparse label values fall back to the
-        // sort + binary-search path rather than allocating a huge table.
-        let universe = labels.iter().map(|&l| l as usize + 1).max().unwrap_or(0);
-        let (compact, count): (Vec<Vertex>, usize) =
-            if universe <= self.n.saturating_mul(4).max(1024) {
-                let (rank_of, count) = label_ranks(labels, universe);
-                (
-                    labels.iter().map(|&l| rank_of[l as usize]).collect(),
-                    count,
-                )
-            } else {
-                let mut sorted: Vec<Vertex> = labels.to_vec();
-                sorted.sort_unstable();
-                sorted.dedup();
-                (
-                    labels
-                        .iter()
-                        .map(|&l| sorted.binary_search(&l).unwrap() as Vertex)
-                        .collect(),
-                    sorted.len(),
-                )
-            };
+        let (compact, count) = compact_labels(labels, self.n);
         let edges: Vec<(Vertex, Vertex)> = self
             .edges
             .iter()

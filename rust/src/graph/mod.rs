@@ -1,14 +1,35 @@
 //! Graph substrate: storage, generators, IO, statistics.
 //!
-//! Everything above this layer (MPC simulator, algorithms, coordinator)
-//! speaks [`edgelist::Graph`] — dense `u32` vertex ids plus a canonical
-//! undirected edge list.
+//! Two representations live here:
+//!
+//! * [`edgelist::Graph`] — the flat **ingest/oracle format**: dense `u32`
+//!   vertex ids plus one canonical undirected edge list.  Generators, IO,
+//!   statistics, the sequential oracle, and the dense XLA backend speak
+//!   this.
+//! * [`sharded::ShardedGraph`] — the **resident representation** everything
+//!   above the ingest boundary computes on.  Edges are partitioned into
+//!   one [`sharded::EdgeShard`] per simulated machine under the invariant
+//!   *the canonical edge `(u, v)`, `u < v`, lives on machine
+//!   `machine_of(u, machines)`* — the same stable hash the MPC shuffle
+//!   rounds key by, with `MpcConfig::machines` the single source of the
+//!   shard count.  Normalize, contract, and prune run shard-parallel and
+//!   re-bucket rewritten edges into their new owner shards in the same
+//!   pass; cached per-shard ownership histograms make every round's
+//!   per-machine byte load a **pure function of shard membership** (see
+//!   [`sharded`] module docs and `crate::mpc`).
+//!
+//! Conversions ([`sharded::ShardedGraph::from_graph`] /
+//! [`sharded::ShardedGraph::to_graph`]) are bit-exact round trips; the
+//! cross-representation tests in `rust/tests/sharded_representation.rs`
+//! enforce that every sharded operation matches its monolithic counterpart.
 
 pub mod csr;
 pub mod edgelist;
 pub mod generators;
 pub mod io;
+pub mod sharded;
 pub mod stats;
 
 pub use csr::Csr;
-pub use edgelist::{label_ranks, Graph, Vertex};
+pub use edgelist::{compact_labels, label_ranks, Graph, Vertex};
+pub use sharded::{EdgeShard, ShardedGraph};

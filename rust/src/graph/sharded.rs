@@ -1,0 +1,710 @@
+//! The sharded edge store: the machine partition as the system's
+//! **resident** graph representation.
+//!
+//! The paper's contractions scale to trillions of edges because no machine
+//! ever holds the full edge list.  This module makes that layout native:
+//! a [`ShardedGraph`] owns its edges as one [`EdgeShard`] per simulated
+//! machine, where the canonical edge `(u, v)` (`u < v`) lives on machine
+//! `machine_of(u)` — the same stable hash the MPC shuffle rounds use.
+//!
+//! **Shard-ownership invariant.**  For every shard `s` and every edge
+//! `(u, v)` stored there: `u < v` and `machine_of(u, p) == s`, the shard's
+//! edge list is sorted and duplicate-free, and two cached histograms are
+//! maintained alongside the edges:
+//!
+//! * `peer_counts[j]` — edges of the shard whose *right* endpoint is owned
+//!   by machine `j` (the destination of the second message of every hop
+//!   and of the second contraction round);
+//! * `vertex_counts[j]` — vertices `v ∈ 0..n` with `machine_of(v) == j`
+//!   (the destinations of the per-vertex self messages).
+//!
+//! Because the partition function is the message-key hash, the exact
+//! per-machine byte loads of every hop and contraction round are **pure
+//! functions of these shard statistics** ([`ShardedGraph::hop_charge`],
+//! [`ShardedGraph::contract_charges`]) — the round engine never recomputes
+//! `machine_of` per message.  Mutating operations (`contract`,
+//! `prune_isolated`, [`ShardedGraph::from_edges`]) re-bucket rewritten
+//! edges into their new owner shards in the same pass that rewrites them,
+//! running shard-parallel on the worker pool.
+//!
+//! [`Graph`] remains the flat ingest/oracle format; [`ShardedGraph::to_graph`]
+//! is the thin conversion back (bit-identical to a monolithic
+//! `Graph::normalize` of the same edge multiset — enforced by
+//! `rust/tests/sharded_representation.rs`).
+
+use super::edgelist::{compact_labels, Graph, Vertex};
+use crate::mpc::pool::{self, chunk_range};
+use crate::mpc::simulator::{machine_of, ShardRound};
+
+/// One machine's slice of the edge list plus its cached load histogram.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EdgeShard {
+    /// Canonical `(min, max)` edges owned by this shard: sorted, deduped,
+    /// no self-loops, `machine_of(min) == shard index`.
+    edges: Vec<(Vertex, Vertex)>,
+    /// `peer_counts[j]` = edges here whose max endpoint machine is `j`.
+    peer_counts: Vec<u64>,
+}
+
+impl EdgeShard {
+    pub fn edges(&self) -> &[(Vertex, Vertex)] {
+        &self.edges
+    }
+
+    pub fn len(&self) -> usize {
+        self.edges.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.edges.is_empty()
+    }
+
+    /// Per-machine ownership histogram of this shard's right endpoints.
+    pub fn peer_counts(&self) -> &[u64] {
+        &self.peer_counts
+    }
+}
+
+/// An undirected graph resident as `machines` edge shards (see module docs
+/// for the ownership invariant).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardedGraph {
+    n: usize,
+    shards: Vec<EdgeShard>,
+    /// `vertex_counts[j]` = vertices of `0..n` owned by machine `j`.
+    vertex_counts: Vec<u64>,
+}
+
+/// `machine_of` histogram of the vertex ids `0..n` (self-message loads),
+/// computed in parallel chunks merged in fixed order.
+fn vertex_counts(n: usize, p: usize) -> Vec<u64> {
+    let t = pool::global()
+        .threads()
+        .clamp(1, n.div_ceil(1 << 14).max(1));
+    if t <= 1 {
+        let mut h = vec![0u64; p];
+        for v in 0..n {
+            h[machine_of(v as u64, p)] += 1;
+        }
+        return h;
+    }
+    let parts = pool::global().run_jobs(
+        (0..t)
+            .map(|i| {
+                let (a, b) = chunk_range(n, t, i);
+                move || {
+                    let mut h = vec![0u64; p];
+                    for v in a..b {
+                        h[machine_of(v as u64, p)] += 1;
+                    }
+                    h
+                }
+            })
+            .collect(),
+    );
+    let mut h = vec![0u64; p];
+    for part in parts {
+        for (a, b) in h.iter_mut().zip(&part) {
+            *a += b;
+        }
+    }
+    h
+}
+
+/// Finalize per-shard buckets into a canonical [`ShardedGraph`]:
+/// canonicalize each edge to `(min, max)`, drop self-loops, sort + dedup
+/// within the shard (equal edges always share a shard, so per-shard dedup
+/// *is* global dedup), and compute the cached peer histogram — one pass,
+/// shard-parallel on the worker pool.  Bucket `s` must only contain edges
+/// it owns (`machine_of(min endpoint) == s`; enforced in debug builds).
+/// `cached_vertex_counts` may carry the histogram of a previous graph
+/// over the **same** `(n, p)` — it is a pure function of those two, so
+/// per-round rebuilds skip the O(n) re-hash.
+fn finish_shards(
+    n: usize,
+    buckets: Vec<Vec<(Vertex, Vertex)>>,
+    cached_vertex_counts: Option<Vec<u64>>,
+) -> ShardedGraph {
+    let p = buckets.len();
+    let t = pool::global().threads().clamp(1, p);
+    let mut it = buckets.into_iter().enumerate();
+    let mut jobs = Vec::with_capacity(t);
+    for i in 0..t {
+        let (a, b) = chunk_range(p, t, i);
+        let group: Vec<(usize, Vec<(Vertex, Vertex)>)> = it.by_ref().take(b - a).collect();
+        jobs.push(move || {
+            group
+                .into_iter()
+                .map(|(s, mut edges)| {
+                    for e in edges.iter_mut() {
+                        if e.0 > e.1 {
+                            *e = (e.1, e.0);
+                        }
+                    }
+                    edges.retain(|e| e.0 != e.1);
+                    edges.sort_unstable();
+                    edges.dedup();
+                    let mut peer_counts = vec![0u64; p];
+                    for &(u, v) in &edges {
+                        debug_assert_eq!(
+                            machine_of(u as u64, p),
+                            s,
+                            "edge ({u},{v}) stored on the wrong shard"
+                        );
+                        peer_counts[machine_of(v as u64, p)] += 1;
+                    }
+                    let _ = s;
+                    EdgeShard { edges, peer_counts }
+                })
+                .collect::<Vec<EdgeShard>>()
+        });
+    }
+    let shards: Vec<EdgeShard> = pool::global()
+        .run_jobs(jobs)
+        .into_iter()
+        .flatten()
+        .collect();
+    let vertex_counts = match cached_vertex_counts {
+        Some(counts) => {
+            debug_assert_eq!(counts.len(), p);
+            debug_assert_eq!(counts.iter().sum::<u64>(), n as u64);
+            counts
+        }
+        None => vertex_counts(n, p),
+    };
+    ShardedGraph {
+        n,
+        shards,
+        vertex_counts,
+    }
+}
+
+impl ShardedGraph {
+    /// Empty graph on `n` vertices over `p` shards (`p` is clamped to 1).
+    pub fn empty(n: usize, p: usize) -> Self {
+        assert!(n <= u32::MAX as usize, "vertex ids are u32");
+        let p = p.max(1);
+        ShardedGraph {
+            n,
+            shards: (0..p)
+                .map(|_| EdgeShard {
+                    edges: Vec::new(),
+                    peer_counts: vec![0; p],
+                })
+                .collect(),
+            vertex_counts: vertex_counts(n, p),
+        }
+    }
+
+    /// Build from raw edges: bucket each edge to its owner shard
+    /// (`machine_of(min endpoint)`) in parallel chunks, then normalize
+    /// shard-locally (canonical order, per-shard sort + dedup, no loops) —
+    /// no global sort anywhere.
+    pub fn from_edges(n: usize, p: usize, edges: Vec<(Vertex, Vertex)>) -> Self {
+        Self::from_edges_cached(n, p, edges, None)
+    }
+
+    /// [`from_edges`](Self::from_edges) over the **same vertex universe
+    /// and shard count** as `self`, reusing its cached vertex ownership
+    /// histogram — the per-round rebuild path (Cracker's rewire,
+    /// Two-Phase's star rounds) skips n `machine_of` hashes each round.
+    pub fn from_edges_like(&self, edges: Vec<(Vertex, Vertex)>) -> Self {
+        Self::from_edges_cached(
+            self.n,
+            self.shards.len(),
+            edges,
+            Some(self.vertex_counts.clone()),
+        )
+    }
+
+    fn from_edges_cached(
+        n: usize,
+        p: usize,
+        edges: Vec<(Vertex, Vertex)>,
+        cached_vertex_counts: Option<Vec<u64>>,
+    ) -> Self {
+        assert!(n <= u32::MAX as usize, "vertex ids are u32");
+        let p = p.max(1);
+        let len = edges.len();
+        let t = pool::global()
+            .threads()
+            .clamp(1, len.div_ceil(1 << 14).max(1));
+        let edges_ro: &[(Vertex, Vertex)] = &edges;
+        let parts: Vec<Vec<Vec<(Vertex, Vertex)>>> = pool::global().run_jobs(
+            (0..t)
+                .map(|i| {
+                    let (a, b) = chunk_range(len, t, i);
+                    let part = &edges_ro[a..b];
+                    move || {
+                        let mut buckets: Vec<Vec<(Vertex, Vertex)>> =
+                            (0..p).map(|_| Vec::new()).collect();
+                        for &(u, v) in part {
+                            assert!(
+                                (u as usize) < n && (v as usize) < n,
+                                "edge ({u},{v}) out of range n={n}"
+                            );
+                            buckets[machine_of(u.min(v) as u64, p)].push((u, v));
+                        }
+                        buckets
+                    }
+                })
+                .collect(),
+        );
+        let mut buckets: Vec<Vec<(Vertex, Vertex)>> = (0..p).map(|_| Vec::new()).collect();
+        for part in parts {
+            for (dst, src) in buckets.iter_mut().zip(part) {
+                dst.extend(src);
+            }
+        }
+        finish_shards(n, buckets, cached_vertex_counts)
+    }
+
+    /// Shard a flat (already normalized) [`Graph`] — the ingest step.
+    pub fn from_graph(g: &Graph, p: usize) -> Self {
+        Self::from_edges(g.num_vertices(), p, g.edges().to_vec())
+    }
+
+    /// Assemble from per-shard buckets produced by shard-aligned workers
+    /// (the coordinator pipeline: worker `s` only ever receives edges with
+    /// `machine_of(min endpoint) == s`).  Each bucket is normalized in
+    /// place into its shard — no flat concatenation, no resharding.
+    pub fn from_shard_buckets(n: usize, buckets: Vec<Vec<(Vertex, Vertex)>>) -> Self {
+        assert!(!buckets.is_empty(), "need at least one shard");
+        assert!(n <= u32::MAX as usize, "vertex ids are u32");
+        finish_shards(n, buckets, None)
+    }
+
+    pub fn num_vertices(&self) -> usize {
+        self.n
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.shards.iter().map(|s| s.edges.len()).sum()
+    }
+
+    pub fn shards(&self) -> &[EdgeShard] {
+        &self.shards
+    }
+
+    /// All edges, shard-major (shard order, sorted within each shard).
+    pub fn iter_edges(&self) -> impl Iterator<Item = (Vertex, Vertex)> + '_ {
+        self.shards.iter().flat_map(|s| s.edges.iter().copied())
+    }
+
+    /// Per-machine ownership histogram of the vertex id space.
+    pub fn vertex_counts(&self) -> &[u64] {
+        &self.vertex_counts
+    }
+
+    /// Flatten to the canonical [`Graph`] view (for the oracle, the dense
+    /// backend boundary, and tests).  Bit-identical to `Graph::normalize`
+    /// of the same edge multiset: shards are canonical and globally
+    /// duplicate-free, so a global sort is all that remains.
+    pub fn to_graph(&self) -> Graph {
+        let mut edges: Vec<(Vertex, Vertex)> = Vec::with_capacity(self.num_edges());
+        for s in &self.shards {
+            edges.extend_from_slice(&s.edges);
+        }
+        // no dedup needed: equal edges share a shard, and shards are deduped
+        crate::util::radix::par_sort_edge_pairs(&mut edges, false);
+        Graph::from_edges_unchecked(self.n, edges)
+    }
+
+    /// Per-vertex degree via per-worker partial counts merged in fixed
+    /// order (normalized-graph semantics, identical to `Graph::degrees`).
+    pub fn degrees(&self) -> Vec<u32> {
+        let n = self.n;
+        let p = self.shards.len();
+        let t = pool::global().threads().clamp(1, p);
+        if t <= 1 {
+            let mut deg = vec![0u32; n];
+            for (u, v) in self.iter_edges() {
+                deg[u as usize] += 1;
+                deg[v as usize] += 1;
+            }
+            return deg;
+        }
+        let parts = pool::global().run_jobs(
+            (0..t)
+                .map(|i| {
+                    let (a, b) = chunk_range(p, t, i);
+                    let shards = &self.shards[a..b];
+                    move || {
+                        let mut deg = vec![0u32; n];
+                        for s in shards {
+                            for &(u, v) in &s.edges {
+                                deg[u as usize] += 1;
+                                deg[v as usize] += 1;
+                            }
+                        }
+                        deg
+                    }
+                })
+                .collect(),
+        );
+        let mut deg = vec![0u32; n];
+        for part in parts {
+            for (d, c) in deg.iter_mut().zip(&part) {
+                *d += c;
+            }
+        }
+        deg
+    }
+
+    /// Rewrite every edge through `f` and re-bucket the results into their
+    /// new owner shards **in the same pass** (the graph-layer half of the
+    /// contraction rounds).  `f` returns rewritten endpoints or `None` to
+    /// drop the edge; canonicalization, per-shard sort + dedup, and the
+    /// cached histograms are rebuilt by [`finish_shards`].
+    fn rewrite_into<F>(&self, new_n: usize, new_p: usize, f: F) -> ShardedGraph
+    where
+        F: Fn(Vertex, Vertex) -> Option<(Vertex, Vertex)> + Sync,
+    {
+        let p = self.shards.len();
+        let t = pool::global().threads().clamp(1, p);
+        let f = &f;
+        let parts: Vec<Vec<Vec<(Vertex, Vertex)>>> = pool::global().run_jobs(
+            (0..t)
+                .map(|i| {
+                    let (a, b) = chunk_range(p, t, i);
+                    let shards = &self.shards[a..b];
+                    move || {
+                        let mut buckets: Vec<Vec<(Vertex, Vertex)>> =
+                            (0..new_p).map(|_| Vec::new()).collect();
+                        for s in shards {
+                            for &(u, v) in &s.edges {
+                                if let Some((x, y)) = f(u, v) {
+                                    let (x, y) = if x <= y { (x, y) } else { (y, x) };
+                                    if x != y {
+                                        buckets[machine_of(x as u64, new_p)].push((x, y));
+                                    }
+                                }
+                            }
+                        }
+                        buckets
+                    }
+                })
+                .collect(),
+        );
+        let mut buckets: Vec<Vec<(Vertex, Vertex)>> = (0..new_p).map(|_| Vec::new()).collect();
+        for part in parts {
+            for (dst, src) in buckets.iter_mut().zip(part) {
+                dst.extend(src);
+            }
+        }
+        // vertex_counts is a pure function of (n, p): reuse the cache when
+        // the rewrite keeps the vertex universe and shard count.
+        let cached = if new_n == self.n && new_p == self.shards.len() {
+            Some(self.vertex_counts.clone())
+        } else {
+            None
+        };
+        finish_shards(new_n, buckets, cached)
+    }
+
+    /// Contraction G/r of §2: vertices with equal labels merge; self-loops
+    /// and duplicates vanish in the shard-local normalize.  Returns the
+    /// contracted graph plus the old-vertex -> new-node compaction map
+    /// (bit-identical to [`Graph::contract`] via the shared
+    /// [`compact_labels`]).
+    pub fn contract(&self, labels: &[Vertex]) -> (ShardedGraph, Vec<Vertex>) {
+        assert_eq!(labels.len(), self.n, "labels len != n");
+        let (compact, count) = compact_labels(labels, self.n);
+        let compact_ref = &compact;
+        let contracted = self.rewrite_into(count, self.shards.len(), |u, v| {
+            Some((compact_ref[u as usize], compact_ref[v as usize]))
+        });
+        (contracted, compact)
+    }
+
+    /// Drop isolated vertices, compacting ids (§6).  Returns the pruned
+    /// graph and the old-id -> Some(new-id) map (None for dropped
+    /// vertices), matching `Graph::prune_isolated`.
+    pub fn prune_isolated(&self) -> (ShardedGraph, Vec<Option<Vertex>>) {
+        let deg = self.degrees();
+        let mut map = vec![None; self.n];
+        let mut next = 0u32;
+        for v in 0..self.n {
+            if deg[v] > 0 {
+                map[v] = Some(next);
+                next += 1;
+            }
+        }
+        let map_ref = &map;
+        let pruned = self.rewrite_into(next as usize, self.shards.len(), |u, v| {
+            Some((map_ref[u as usize].unwrap(), map_ref[v as usize].unwrap()))
+        });
+        (pruned, map)
+    }
+
+    /// Re-partition to a different shard count (e.g. pipeline workers ->
+    /// simulator machines).  Shard-to-shard: every input shard buckets its
+    /// edges by the new ownership directly — the edge list is never
+    /// flattened into one vector.
+    pub fn reshard(&self, p: usize) -> ShardedGraph {
+        let p = p.max(1);
+        if p == self.shards.len() {
+            return self.clone();
+        }
+        self.rewrite_into(self.n, p, |u, v| Some((u, v)))
+    }
+
+    /// Exact accounting of one neighborhood-hop round: every edge sends a
+    /// fixed-size message to both endpoint keys (the left one lands on the
+    /// owner shard by the invariant; the right one on the cached peer
+    /// histogram), plus one self message per vertex when `include_self`.
+    /// `msg_size` is the full wire size of one message (8-byte key +
+    /// value).  A pure function of shard statistics — no `machine_of`
+    /// per message.
+    pub fn hop_charge(&self, msg_size: u64, include_self: bool) -> ShardRound {
+        let p = self.shards.len();
+        let m = self.num_edges() as u64;
+        let mut machine_bytes = vec![0u64; p];
+        for (s, shard) in self.shards.iter().enumerate() {
+            machine_bytes[s] += msg_size * shard.edges.len() as u64;
+            for (mb, &c) in machine_bytes.iter_mut().zip(&shard.peer_counts) {
+                *mb += msg_size * c;
+            }
+        }
+        let mut messages = 2 * m;
+        if include_self {
+            messages += self.n as u64;
+            for (mb, &c) in machine_bytes.iter_mut().zip(&self.vertex_counts) {
+                *mb += msg_size * c;
+            }
+        }
+        ShardRound {
+            messages,
+            bytes: messages * msg_size,
+            machine_bytes,
+        }
+    }
+
+    /// Exact accounting of the two contraction rounds of Lemma 3.1
+    /// (12-byte messages: 8-byte key + one endpoint).  Round 1 keys every
+    /// edge by its left endpoint — the owner shard itself; round 2 by its
+    /// right endpoint — the cached peer histogram.
+    pub fn contract_charges(&self) -> (ShardRound, ShardRound) {
+        let p = self.shards.len();
+        let m = self.num_edges() as u64;
+        let mut left = vec![0u64; p];
+        let mut right = vec![0u64; p];
+        for (s, shard) in self.shards.iter().enumerate() {
+            left[s] = 12 * shard.edges.len() as u64;
+            for (r, &c) in right.iter_mut().zip(&shard.peer_counts) {
+                *r += 12 * c;
+            }
+        }
+        (
+            ShardRound {
+                messages: m,
+                bytes: 12 * m,
+                machine_bytes: left,
+            },
+            ShardRound {
+                messages: m,
+                bytes: 12 * m,
+                machine_bytes: right,
+            },
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_raw(n: u64, m: usize, seed: u64) -> Vec<(Vertex, Vertex)> {
+        let mut rng = Rng::new(seed);
+        (0..m)
+            .map(|_| (rng.gen_range(n) as Vertex, rng.gen_range(n) as Vertex))
+            .collect()
+    }
+
+    #[test]
+    fn from_edges_matches_monolithic_normalize() {
+        for p in [1usize, 4, 16] {
+            for (n, m, seed) in [(50u64, 300usize, 1u64), (500, 8000, 2), (40, 0, 3)] {
+                let raw = random_raw(n, m, seed);
+                let flat = Graph::from_edges(n as usize, raw.clone());
+                let sharded = ShardedGraph::from_edges(n as usize, p, raw);
+                assert_eq!(sharded.to_graph(), flat, "p={p} n={n} m={m}");
+                assert_eq!(sharded.num_edges(), flat.num_edges());
+                assert_eq!(sharded.num_shards(), p);
+            }
+        }
+    }
+
+    #[test]
+    fn shard_ownership_invariant_holds() {
+        let raw = random_raw(200, 3000, 7);
+        let g = ShardedGraph::from_edges(200, 8, raw);
+        for (s, shard) in g.shards().iter().enumerate() {
+            let mut prev: Option<(Vertex, Vertex)> = None;
+            let mut peers = vec![0u64; 8];
+            for &(u, v) in shard.edges() {
+                assert!(u < v, "non-canonical ({u},{v})");
+                assert_eq!(machine_of(u as u64, 8), s, "wrong owner for ({u},{v})");
+                peers[machine_of(v as u64, 8)] += 1;
+                if let Some(pv) = prev {
+                    assert!(pv < (u, v), "not sorted/deduped");
+                }
+                prev = Some((u, v));
+            }
+            assert_eq!(peers, shard.peer_counts(), "peer histogram stale");
+        }
+        let total: u64 = g.vertex_counts().iter().sum();
+        assert_eq!(total, 200);
+    }
+
+    #[test]
+    fn contract_matches_graph_contract() {
+        for p in [1usize, 4, 16] {
+            let raw = random_raw(120, 900, 11);
+            let flat = Graph::from_edges(120, raw.clone());
+            let sharded = ShardedGraph::from_edges(120, p, raw);
+            let labels: Vec<Vertex> = (0..120u32).map(|v| v % 37).collect();
+            let (cf, mf) = flat.contract(&labels);
+            let (cs, ms) = sharded.contract(&labels);
+            assert_eq!(ms, mf, "p={p}: compaction maps differ");
+            assert_eq!(cs.to_graph(), cf, "p={p}: contracted graphs differ");
+        }
+    }
+
+    #[test]
+    fn contract_sparse_labels_match_fallback() {
+        let raw = vec![(0u32, 1u32), (1, 2)];
+        let flat = Graph::from_edges(3, raw.clone());
+        let sharded = ShardedGraph::from_edges(3, 4, raw);
+        let labels = vec![1_000_000u32, 5, 5];
+        let (cf, mf) = flat.contract(&labels);
+        let (cs, ms) = sharded.contract(&labels);
+        assert_eq!(ms, mf);
+        assert_eq!(cs.to_graph(), cf);
+    }
+
+    #[test]
+    fn degrees_and_prune_match_monolithic() {
+        for p in [1usize, 4, 16] {
+            let raw = random_raw(80, 120, 21);
+            let flat = Graph::from_edges(80, raw.clone());
+            let sharded = ShardedGraph::from_edges(80, p, raw);
+            assert_eq!(sharded.degrees(), flat.degrees(), "p={p}");
+            let (pf, mapf) = flat.prune_isolated();
+            let (ps, maps) = sharded.prune_isolated();
+            assert_eq!(maps, mapf, "p={p}");
+            assert_eq!(ps.to_graph(), pf, "p={p}");
+        }
+    }
+
+    #[test]
+    fn hop_charge_matches_per_message_accounting() {
+        for p in [1usize, 4, 16] {
+            let raw = random_raw(150, 2000, 31);
+            let g = ShardedGraph::from_edges(150, p, raw);
+            for (msg_size, include_self) in [(12u64, true), (12, false), (16, true)] {
+                let charge = g.hop_charge(msg_size, include_self);
+                // brute force over the actual message multiset
+                let mut mb = vec![0u64; p];
+                let mut msgs = 0u64;
+                for (u, v) in g.iter_edges() {
+                    mb[machine_of(u as u64, p)] += msg_size;
+                    mb[machine_of(v as u64, p)] += msg_size;
+                    msgs += 2;
+                }
+                if include_self {
+                    for v in 0..g.num_vertices() {
+                        mb[machine_of(v as u64, p)] += msg_size;
+                    }
+                    msgs += g.num_vertices() as u64;
+                }
+                assert_eq!(charge.messages, msgs, "p={p}");
+                assert_eq!(charge.bytes, msgs * msg_size, "p={p}");
+                assert_eq!(charge.machine_bytes, mb, "p={p} self={include_self}");
+            }
+        }
+    }
+
+    #[test]
+    fn contract_charges_match_per_message_accounting() {
+        for p in [1usize, 4, 16] {
+            let raw = random_raw(100, 1500, 41);
+            let g = ShardedGraph::from_edges(100, p, raw);
+            let (left, right) = g.contract_charges();
+            let mut mb_left = vec![0u64; p];
+            let mut mb_right = vec![0u64; p];
+            for (u, v) in g.iter_edges() {
+                mb_left[machine_of(u as u64, p)] += 12;
+                mb_right[machine_of(v as u64, p)] += 12;
+            }
+            let m = g.num_edges() as u64;
+            assert_eq!((left.messages, left.bytes), (m, 12 * m));
+            assert_eq!((right.messages, right.bytes), (m, 12 * m));
+            assert_eq!(left.machine_bytes, mb_left, "p={p}");
+            assert_eq!(right.machine_bytes, mb_right, "p={p}");
+        }
+    }
+
+    #[test]
+    fn from_edges_like_matches_direct_build() {
+        let a = ShardedGraph::from_edges(70, 4, random_raw(70, 300, 71));
+        let b = a.from_edges_like(random_raw(70, 200, 72));
+        let direct = ShardedGraph::from_edges(70, 4, random_raw(70, 200, 72));
+        assert_eq!(b, direct);
+        assert_eq!(b.vertex_counts(), a.vertex_counts());
+    }
+
+    #[test]
+    fn reshard_preserves_the_graph() {
+        let raw = random_raw(90, 700, 51);
+        let g4 = ShardedGraph::from_edges(90, 4, raw.clone());
+        let g16 = g4.reshard(16);
+        let g1 = g16.reshard(1);
+        assert_eq!(g16.num_shards(), 16);
+        assert_eq!(g16.to_graph(), g4.to_graph());
+        assert_eq!(g1.to_graph(), g4.to_graph());
+        assert_eq!(g4.reshard(4), g4); // same count: clone
+    }
+
+    #[test]
+    fn from_shard_buckets_accepts_worker_output() {
+        // pipeline shape: raw (possibly reversed) edges, bucketed by the
+        // min-endpoint hash at the generator
+        let raw = random_raw(60, 400, 61);
+        let p = 3;
+        let mut buckets: Vec<Vec<(Vertex, Vertex)>> = vec![Vec::new(); p];
+        for &(u, v) in &raw {
+            if u != v {
+                buckets[machine_of(u.min(v) as u64, p)].push((u, v));
+            }
+        }
+        let g = ShardedGraph::from_shard_buckets(60, buckets);
+        let flat = Graph::from_edges(60, raw);
+        assert_eq!(g.to_graph(), flat);
+    }
+
+    #[test]
+    fn empty_and_single_shard() {
+        let g = ShardedGraph::empty(5, 4);
+        assert_eq!(g.num_edges(), 0);
+        assert_eq!(g.num_vertices(), 5);
+        assert_eq!(g.degrees(), vec![0; 5]);
+        let charge = g.hop_charge(12, true);
+        assert_eq!(charge.messages, 5);
+        let g1 = ShardedGraph::from_edges(3, 1, vec![(0, 1), (1, 0), (2, 2)]);
+        assert_eq!(g1.num_shards(), 1);
+        assert_eq!(g1.to_graph().edges(), &[(0, 1)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn from_edges_rejects_out_of_range() {
+        // single worker job: panic message survives (inline execution)
+        let _ = ShardedGraph::from_edges(2, 1, vec![(0, 5)]);
+    }
+}

@@ -54,8 +54,9 @@ USAGE: lcc <run|pipeline|table1|table2|table3|figure1|theory|ablation|perf|gener
 Common flags:
   --algo lc|lc-mtl|tc|tc-dht|cracker|two-phase|htm|hash-min
   --graph <preset|path|cycle|star|grid|gnp|gnp-log|file:PATH>   --n <vertices>
-  --seed N  --machines N  --finisher N  --use-xla  --verify  --json
-  --out FILE (perf: write the machine-readable suite JSON, BENCH_PR1.json schema)
+  --seed N  --machines N (simulated machines = shard count; run/pipeline/perf)
+  --finisher N  --use-xla  --verify  --json
+  --out FILE (perf: write the machine-readable suite JSON, BENCH_PR2.json schema)
   --scale N (table/figure dataset size)  --runs N (median-of-N)
   --exp decay|depth|loglog|path|comm|cycles (theory)
   --exp finisher|pruning|mtl|machines|dense (ablation)";
@@ -134,15 +135,18 @@ fn cmd_pipeline(args: &Args) {
     let t0 = std::time::Instant::now();
     let res = pipeline::run(g.num_vertices(), g.edges().iter().copied(), &cfg);
 
-    // Global merge: the paper's LocalContraction on the summary graph,
-    // with the XLA dense backend when requested.
+    // Global merge: the paper's LocalContraction on the summary graph —
+    // consumed in sharded form straight from the workers (re-partitioned
+    // shard-to-shard onto `--machines` simulator shards), with the XLA
+    // dense backend when requested.
     let driver = Driver::new(RunConfig {
         algorithm: args.str_or("algo", "lc"),
+        machines: args.usize_or("machines", 16),
         use_xla: args.bool_or("use-xla", true),
         verify: false,
         ..Default::default()
     });
-    let merge_report = driver.run_named(&res.summary, "summary");
+    let merge_report = driver.run_named_sharded(&res.summary, "summary");
     let wall = t0.elapsed().as_secs_f64() * 1e3;
 
     let labels = pipeline::merge_summary(&res.summary);
@@ -236,14 +240,15 @@ fn cmd_ablation(args: &Args) {
 
 fn cmd_perf(args: &Args) {
     let quick = args.bool_or("quick", false);
-    let measurements = perf::standard_suite(quick);
+    let machines = args.usize_or("machines", 16);
+    let measurements = perf::standard_suite(quick, machines);
     for m in &measurements {
         println!("{}", m.report_line());
     }
     let want_json = args.bool_or("json", false);
     let out_path = args.str_opt("out").map(String::from);
     if want_json || out_path.is_some() {
-        let doc = perf::suite_json(&measurements, quick);
+        let doc = perf::suite_json(&measurements, quick, machines);
         let text = doc.pretty();
         if let Some(path) = &out_path {
             std::fs::write(path, &text)

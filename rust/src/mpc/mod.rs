@@ -5,6 +5,19 @@
 //! optional distributed hash table — while measuring the model-level
 //! quantities every claim is stated in: rounds, shuffled bytes, per-machine
 //! load.
+//!
+//! **Shard-ownership invariant.**  [`MpcConfig::machines`] is the single
+//! source of the shard count: the resident [`crate::graph::ShardedGraph`]
+//! partitions its edges by `machine_of(min_endpoint, machines)` (the same
+//! [`simulator::machine_of`] hash the shuffle rounds use), so per-machine
+//! load metrics are **pure functions of shard membership**.  The sharded
+//! round entry points ([`Simulator::round_fold_sharded`],
+//! [`Simulator::round_map_sharded`]) consume one message chunk per shard
+//! and a pre-computed [`ShardRound`] charge derived from cached shard
+//! statistics — no `machine_of` recomputation per message.  The legacy
+//! per-message-accounted rounds (`round`, `round_fold`, `round_map` and
+//! their chunked forms) remain the reference semantics the sharded paths
+//! are tested against.
 
 pub mod dht;
 pub mod metrics;
@@ -14,4 +27,4 @@ pub mod simulator;
 pub use dht::Dht;
 pub use metrics::{Metrics, RoundMetrics, WireSize};
 pub use pool::WorkerPool;
-pub use simulator::{MpcConfig, Simulator};
+pub use simulator::{MpcConfig, ShardRound, Simulator};

@@ -51,12 +51,33 @@ impl Default for MpcConfig {
 
 /// Machine owning `key` under the stable hash partition.  The single
 /// definition of the partition function: the simulator rounds, the
-/// chunked fast paths, and the fused rounds in `cc::common` (which charge
-/// the model directly via [`Simulator::charge_round`]) must all agree on
-/// it, or charged per-machine loads silently diverge from real rounds.
+/// chunked fast paths, the fused rounds in `cc::common` (which charge
+/// the model directly via [`Simulator::charge_round`]), and the resident
+/// [`crate::graph::ShardedGraph`] partition must all agree on it, or
+/// charged per-machine loads silently diverge from real rounds.
 #[inline]
 pub fn machine_of(key: u64, machines: usize) -> usize {
     (splitmix64(key) % machines as u64) as usize
+}
+
+/// Exact, pre-computed accounting for one **sharded** round.
+///
+/// When the resident representation is partitioned by [`machine_of`] (the
+/// [`crate::graph::ShardedGraph`] invariant), per-machine loads are pure
+/// functions of shard membership: the graph layer derives them from cached
+/// shard statistics (`ShardedGraph::hop_charge`, `contract_charges`) and
+/// the round engine no longer recomputes `machine_of` per message.  The
+/// sharded entry points ([`Simulator::round_fold_sharded`],
+/// [`Simulator::round_map_sharded`]) verify in debug builds that the
+/// charge's message count matches the stream they actually folded.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardRound {
+    /// Messages shuffled this round.
+    pub messages: u64,
+    /// Total bytes shuffled this round.
+    pub bytes: u64,
+    /// Bytes received per machine; `len` must equal `MpcConfig::machines`.
+    pub machine_bytes: Vec<u64>,
 }
 
 /// The MPC execution engine: owns config + accumulated metrics.
@@ -98,7 +119,12 @@ impl Simulator {
         let p = self.cfg.machines.max(1);
 
         // ---- shuffle: partition by key hash --------------------------------
-        let mut per_machine: Vec<Vec<(u64, V)>> = (0..p).map(|_| Vec::new()).collect();
+        // Pre-size for the uniform-hash expectation so the buckets do not
+        // realloc through millions of pushes (skewed keys still grow
+        // amortized; §Perf).
+        let bucket_cap = messages.len() / p + 1;
+        let mut per_machine: Vec<Vec<(u64, V)>> =
+            (0..p).map(|_| Vec::with_capacity(bucket_cap)).collect();
         let mut bytes = 0u64;
         let mut machine_bytes = vec![0u64; p];
         let n_messages = messages.len() as u64;
@@ -211,7 +237,8 @@ impl Simulator {
         let mut machine_bytes = vec![0u64; p];
         let mut bytes = 0u64;
         let mut n_messages = 0u64;
-        let mut out = Vec::new();
+        let messages = messages.into_iter();
+        let mut out = Vec::with_capacity(messages.size_hint().0);
         for (key, value) in messages {
             let sz = 8 + value.wire_size();
             bytes += sz;
@@ -342,7 +369,8 @@ impl Simulator {
                     move || {
                         let mut machine_bytes = vec![0u64; p];
                         let (mut bytes, mut msgs) = (0u64, 0u64);
-                        let mut out = Vec::new();
+                        let chunk = chunk.into_iter();
+                        let mut out = Vec::with_capacity(chunk.size_hint().0);
                         for (key, value) in chunk {
                             let sz = 8 + value.wire_size();
                             bytes += sz;
@@ -368,6 +396,180 @@ impl Simulator {
             out.extend(part_out);
         }
         self.finish_round(label, msgs, bytes, &machine_bytes);
+        out
+    }
+
+    /// Sharded form of [`round_fold`](Self::round_fold): the message
+    /// stream arrives as one chunk **per shard** of the resident
+    /// [`crate::graph::ShardedGraph`] (so the chunking is a function of
+    /// `machines` — the single source of the shard count — never of
+    /// `threads`), and the accounting arrives pre-computed as a
+    /// [`ShardRound`] derived from shard membership.  No `machine_of` is
+    /// evaluated per message; debug builds verify the charge's message
+    /// count against the stream actually folded.
+    ///
+    /// Shard chunks are folded into per-worker accumulators guarded by
+    /// `touched` bitsets and merged into `out` in shard order, so — `op`
+    /// being associative and commutative — both the result and the model
+    /// metrics are bit-identical for every `threads` setting.  Keys must
+    /// be `< out.len()`.
+    ///
+    /// Known trade-off: a shard is the unit of work, so wall-clock
+    /// parallelism is capped at `min(threads, machines)` — with fewer
+    /// machines than threads the round under-uses the pool (the default
+    /// 16 machines saturates it; sub-shard splitting is a possible later
+    /// extension since the merge order, not the split, carries the
+    /// determinism).
+    pub fn round_fold_sharded<V, C>(
+        &mut self,
+        label: &str,
+        out: &mut [V],
+        shards: Vec<C>,
+        charge: ShardRound,
+        op: fn(V, V) -> V,
+    ) where
+        V: Copy + Send,
+        C: IntoIterator<Item = (u64, V)> + Send,
+    {
+        assert_eq!(
+            charge.machine_bytes.len(),
+            self.cfg.machines.max(1),
+            "shard charge width != machines"
+        );
+        let t = self.cfg.threads.max(1).min(shards.len().max(1));
+        let mut msgs_seen = 0u64;
+        if t <= 1 || shards.len() <= 1 {
+            // Serial: exactly `round_fold` over the concatenated shards,
+            // minus the per-message accounting the charge already carries.
+            let mut touched = vec![false; out.len()];
+            for (key, value) in shards.into_iter().flatten() {
+                msgs_seen += 1;
+                let k = key as usize;
+                out[k] = if touched[k] { op(out[k], value) } else { value };
+                touched[k] = true;
+            }
+        } else {
+            let n = out.len();
+            let words = n.div_ceil(64);
+            // Accumulators need a fill value only so the Vec is
+            // materialized; untouched slots are never read.
+            let fill = out.first().copied();
+            let num_shards = shards.len();
+            let mut it = shards.into_iter();
+            let mut jobs = Vec::with_capacity(t);
+            for i in 0..t {
+                let (a, b) = pool::chunk_range(num_shards, t, i);
+                let group: Vec<C> = it.by_ref().take(b - a).collect();
+                jobs.push(move || {
+                    let mut acc: Vec<V> = match fill {
+                        Some(f) => vec![f; n],
+                        None => Vec::new(),
+                    };
+                    let mut touched = vec![0u64; words];
+                    let mut msgs = 0u64;
+                    for (key, value) in group.into_iter().flatten() {
+                        msgs += 1;
+                        let k = key as usize;
+                        if (touched[k / 64] >> (k % 64)) & 1 == 1 {
+                            acc[k] = op(acc[k], value);
+                        } else {
+                            acc[k] = value;
+                            touched[k / 64] |= 1u64 << (k % 64);
+                        }
+                    }
+                    (acc, touched, msgs)
+                });
+            }
+            let parts = pool::global().run_jobs(jobs);
+            let mut touched = vec![0u64; words];
+            for (acc, part_touched, m) in parts {
+                msgs_seen += m;
+                for (w, &set_bits) in part_touched.iter().enumerate() {
+                    let mut set = set_bits;
+                    while set != 0 {
+                        let k = w * 64 + set.trailing_zeros() as usize;
+                        set &= set - 1;
+                        out[k] = if (touched[w] >> (k % 64)) & 1 == 1 {
+                            op(out[k], acc[k])
+                        } else {
+                            acc[k]
+                        };
+                        touched[w] |= 1u64 << (k % 64);
+                    }
+                }
+            }
+        }
+        debug_assert_eq!(
+            msgs_seen, charge.messages,
+            "shard charge disagrees with the message stream ({label})"
+        );
+        let _ = msgs_seen;
+        self.finish_round(label, charge.messages, charge.bytes, &charge.machine_bytes);
+    }
+
+    /// Sharded form of [`round_map`](Self::round_map): one chunk per shard,
+    /// accounting pre-computed from shard membership ([`ShardRound`]).
+    /// Outputs concatenate in shard order, so the output sequence and the
+    /// model metrics are identical for every `threads` setting.
+    pub fn round_map_sharded<V, R, C, F>(
+        &mut self,
+        label: &str,
+        shards: Vec<C>,
+        charge: ShardRound,
+        f: F,
+    ) -> Vec<R>
+    where
+        V: Copy + Send,
+        R: Send,
+        C: IntoIterator<Item = (u64, V)> + Send,
+        F: Fn(u64, V) -> R + Sync,
+    {
+        assert_eq!(
+            charge.machine_bytes.len(),
+            self.cfg.machines.max(1),
+            "shard charge width != machines"
+        );
+        let t = self.cfg.threads.max(1).min(shards.len().max(1));
+        let mut msgs_seen = 0u64;
+        let out: Vec<R> = if t <= 1 || shards.len() <= 1 {
+            let mut out = Vec::with_capacity(charge.messages as usize);
+            for (key, value) in shards.into_iter().flatten() {
+                msgs_seen += 1;
+                out.push(f(key, value));
+            }
+            out
+        } else {
+            let f = &f;
+            let num_shards = shards.len();
+            let mut it = shards.into_iter();
+            let mut jobs = Vec::with_capacity(t);
+            for i in 0..t {
+                let (a, b) = pool::chunk_range(num_shards, t, i);
+                let group: Vec<C> = it.by_ref().take(b - a).collect();
+                jobs.push(move || {
+                    let mut out = Vec::new();
+                    let mut msgs = 0u64;
+                    for (key, value) in group.into_iter().flatten() {
+                        msgs += 1;
+                        out.push(f(key, value));
+                    }
+                    (out, msgs)
+                });
+            }
+            let parts = pool::global().run_jobs(jobs);
+            let mut out = Vec::with_capacity(parts.iter().map(|(o, _)| o.len()).sum());
+            for (part, m) in parts {
+                msgs_seen += m;
+                out.extend(part);
+            }
+            out
+        };
+        debug_assert_eq!(
+            msgs_seen, charge.messages,
+            "shard charge disagrees with the message stream ({label})"
+        );
+        let _ = msgs_seen;
+        self.finish_round(label, charge.messages, charge.bytes, &charge.machine_bytes);
         out
     }
 
@@ -618,6 +820,100 @@ mod tests {
         let chunks: Vec<std::vec::IntoIter<(u64, u32)>> =
             vec![Vec::new().into_iter(), Vec::new().into_iter()];
         s.round_fold_chunked("empty", &mut out, chunks, u32::min);
+        let r = &s.metrics.rounds[0];
+        assert_eq!((r.messages, r.bytes, r.max_machine_bytes), (0, 0, 0));
+    }
+
+    /// Brute-force a `ShardRound` from a message list (the per-message
+    /// accounting the sharded paths are allowed to skip).
+    fn brute_charge(msgs: &[(u64, u32)], p: usize) -> ShardRound {
+        let mut machine_bytes = vec![0u64; p];
+        let mut bytes = 0;
+        for &(key, value) in msgs {
+            let sz = 8 + crate::mpc::WireSize::wire_size(&value);
+            bytes += sz;
+            machine_bytes[machine_of(key, p)] += sz;
+        }
+        ShardRound {
+            messages: msgs.len() as u64,
+            bytes,
+            machine_bytes,
+        }
+    }
+
+    #[test]
+    fn fold_sharded_matches_round_fold_reference() {
+        let msgs = fold_messages(8_000, 512);
+        let p = 8;
+        let mut reference = Simulator::new(MpcConfig {
+            machines: p,
+            space_per_machine: Some(25_000),
+            threads: 1,
+        });
+        let mut out_ref: Vec<u32> = (0..600u32).collect();
+        reference.round_fold("fold", &mut out_ref, msgs.iter().copied(), u32::min);
+
+        for threads in [1usize, 4, 8] {
+            let mut s = Simulator::new(MpcConfig {
+                machines: p,
+                space_per_machine: Some(25_000),
+                threads,
+            });
+            let mut out: Vec<u32> = (0..600u32).collect();
+            s.round_fold_sharded(
+                "fold",
+                &mut out,
+                chunked(&msgs, p),
+                brute_charge(&msgs, p),
+                u32::min,
+            );
+            assert_eq!(out, out_ref, "threads={threads}");
+            assert_eq!(s.metrics.rounds[0], reference.metrics.rounds[0], "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn map_sharded_matches_round_map_reference() {
+        let msgs = fold_messages(6_000, 1 << 18);
+        let p = 4;
+        let mut reference = Simulator::new(MpcConfig {
+            machines: p,
+            space_per_machine: None,
+            threads: 1,
+        });
+        let out_ref: Vec<u64> =
+            reference.round_map("map", msgs.iter().copied(), |k, v| k ^ v as u64);
+
+        for threads in [1usize, 4, 8] {
+            let mut s = Simulator::new(MpcConfig {
+                machines: p,
+                space_per_machine: None,
+                threads,
+            });
+            let out: Vec<u64> = s.round_map_sharded(
+                "map",
+                chunked(&msgs, p),
+                brute_charge(&msgs, p),
+                |k, v| k ^ v as u64,
+            );
+            assert_eq!(out, out_ref, "threads={threads}");
+            assert_eq!(s.metrics.rounds[0], reference.metrics.rounds[0], "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn sharded_rounds_handle_empty_streams() {
+        let mut s = sim(4);
+        let mut out: Vec<u32> = vec![7; 10];
+        let charge = ShardRound {
+            messages: 0,
+            bytes: 0,
+            machine_bytes: vec![0; 4],
+        };
+        let chunks: Vec<std::vec::IntoIter<(u64, u32)>> =
+            (0..4).map(|_| Vec::new().into_iter()).collect();
+        s.round_fold_sharded("empty", &mut out, chunks, charge, u32::min);
+        assert_eq!(out, vec![7; 10]);
         let r = &s.metrics.rounds[0];
         assert_eq!((r.messages, r.bytes, r.max_machine_bytes), (0, 0, 0));
     }

@@ -148,6 +148,32 @@ pub fn par_sort_u64(keys: &mut Vec<u64>) {
     *keys = src;
 }
 
+/// Sort canonical edge pairs ascending (optionally deduping): packs each
+/// pair into a `u64` (`u << 32 | v`, which preserves lexicographic pair
+/// order) and runs [`par_sort_u64`]; small lists keep the comparison
+/// sort.  The one edge-sort idiom shared by `Graph::normalize` and
+/// `ShardedGraph::to_graph` — keeping their results bit-identical by
+/// construction.
+pub fn par_sort_edge_pairs(edges: &mut Vec<(u32, u32)>, dedup: bool) {
+    if edges.len() < (1 << 12) {
+        edges.sort_unstable();
+        if dedup {
+            edges.dedup();
+        }
+        return;
+    }
+    let mut keys: Vec<u64> = edges
+        .iter()
+        .map(|&(u, v)| ((u as u64) << 32) | v as u64)
+        .collect();
+    par_sort_u64(&mut keys);
+    if dedup {
+        keys.dedup();
+    }
+    edges.clear();
+    edges.extend(keys.into_iter().map(|k| ((k >> 32) as u32, k as u32)));
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -202,6 +228,26 @@ mod tests {
         check((0..50_000u64).collect());
         check((0..50_000u64).rev().collect());
         check((0..50_000u64).map(|i| i ^ (i >> 3)).collect());
+    }
+
+    #[test]
+    fn edge_pairs_sort_and_dedup_both_size_regimes() {
+        let mut rng = Rng::new(11);
+        for m in [100usize, 20_000] {
+            let raw: Vec<(u32, u32)> = (0..m)
+                .map(|_| (rng.gen_range(300) as u32, rng.gen_range(300) as u32))
+                .collect();
+            for dedup in [false, true] {
+                let mut got = raw.clone();
+                par_sort_edge_pairs(&mut got, dedup);
+                let mut want = raw.clone();
+                want.sort_unstable();
+                if dedup {
+                    want.dedup();
+                }
+                assert_eq!(got, want, "m={m} dedup={dedup}");
+            }
+        }
     }
 
     #[test]

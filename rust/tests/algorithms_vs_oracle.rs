@@ -2,7 +2,7 @@
 //! on a zoo of structured and random graphs, across seeds and with the §6
 //! optimizations toggled.
 
-use lcc::cc::{self, oracle, RunOptions};
+use lcc::cc::{self, oracle, CcAlgorithm, RunOptions};
 use lcc::graph::{generators, Graph};
 use lcc::mpc::{MpcConfig, Simulator};
 use lcc::util::rng::Rng;

@@ -71,7 +71,7 @@ fn pipeline_then_lc_merge_equals_direct_lc() {
         verify: false,
         ..Default::default()
     })
-    .run_named(&res.summary, "summary");
+    .run_named_sharded(&res.summary, "summary");
     // the summary graph has exactly the same component structure
     assert_eq!(merge.num_components, direct.num_components);
     let labels = pipeline::merge_summary(&res.summary);

@@ -1,7 +1,7 @@
 //! MPC model accounting: the communication/round claims of the paper,
 //! measured on the simulator (the quantities of §1.1, §2.1, Lemma 3.1).
 
-use lcc::cc::{self, RunOptions};
+use lcc::cc::{self, CcAlgorithm, RunOptions};
 use lcc::graph::generators;
 use lcc::mpc::{MpcConfig, Simulator};
 use lcc::util::rng::Rng;

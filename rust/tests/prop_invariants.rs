@@ -4,7 +4,7 @@
 //! Each property runs over dozens of generated graphs with a reportable
 //! seed (`LCC_PROP_SEED`) and size-shrinking on failure.
 
-use lcc::cc::{self, oracle, RunOptions};
+use lcc::cc::{self, oracle, CcAlgorithm, RunOptions};
 use lcc::graph::{generators, Graph};
 use lcc::mpc::{MpcConfig, Simulator};
 use lcc::util::quickcheck::Prop;
@@ -91,16 +91,19 @@ fn prop_contraction_preserves_component_count() {
         |rng, size| (random_graph(rng, size), rng.next_u64()),
         |(g, seed)| {
             use lcc::cc::common::{contract_mpc, Priorities};
+            use lcc::graph::ShardedGraph;
             let mut sim = Simulator::new(MpcConfig {
                 machines: 4,
                 space_per_machine: None,
                 threads: 1,
             });
+            let sharded = ShardedGraph::from_graph(g, 4);
             let mut rng = Rng::new(*seed);
             let rho = Priorities::sample(g.num_vertices(), &mut rng);
             let labels =
-                cc::local_contraction::phase_labels(g, &mut sim, &rho, None);
-            let (contracted, node_map) = contract_mpc(&mut sim, g, &labels);
+                cc::local_contraction::phase_labels(&sharded, &mut sim, &rho, None);
+            let (contracted, node_map) = contract_mpc(&mut sim, &sharded, &labels);
+            let contracted = contracted.to_graph();
             // same-component check: label classes stay within components
             let want = oracle::components(g);
             for &(u, v) in g.edges() {
@@ -275,6 +278,7 @@ fn prop_dense_cpu_backend_matches_phase_labels() {
         |rng, size| (random_graph(rng, size), rng.next_u64()),
         |(g, seed)| {
             use lcc::cc::common::Priorities;
+            use lcc::graph::ShardedGraph;
             let mut rng = Rng::new(*seed);
             let rho = Priorities::sample(g.num_vertices(), &mut rng);
             let prio: Vec<i32> = rho.rho.iter().map(|&p| p as i32).collect();
@@ -284,7 +288,8 @@ fn prop_dense_cpu_backend_matches_phase_labels() {
                 space_per_machine: None,
                 threads: 1,
             });
-            let mpc = cc::local_contraction::phase_labels(g, &mut sim, &rho, None);
+            let sharded = ShardedGraph::from_graph(g, 2);
+            let mpc = cc::local_contraction::phase_labels(&sharded, &mut sim, &rho, None);
             // dense returns min *priorities*; mpc returns representative
             // vertices — they must agree through the inverse permutation
             for v in 0..g.num_vertices() {

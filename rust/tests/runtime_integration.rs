@@ -138,7 +138,7 @@ fn phase_shrink_stats_counts_distinct_labels() {
 #[test]
 fn full_lc_run_with_xla_matches_pure_mpc() {
     let Some(exec) = executor() else { return };
-    use lcc::cc::{self, RunOptions};
+    use lcc::cc::{self, CcAlgorithm, RunOptions};
     use lcc::mpc::{MpcConfig, Simulator};
     for seed in 0..4u64 {
         let g = generators::gnp(400, 0.01, &mut Rng::new(seed + 60));

@@ -1,0 +1,243 @@
+//! Cross-representation invariants: the sharded resident store must be
+//! **bit-identical** to the monolithic `Graph` path, and every algorithm
+//! must stay oracle-correct with engine-invariant model metrics across
+//! `machines ∈ {1, 4, 16}` and `threads ∈ {1, 4, 8}`.
+
+use lcc::cc::{self, oracle, CcAlgorithm, RunOptions};
+use lcc::graph::{generators, Graph, ShardedGraph, Vertex};
+use lcc::mpc::simulator::machine_of;
+use lcc::mpc::{MpcConfig, Simulator};
+use lcc::util::quickcheck::Prop;
+use lcc::util::rng::Rng;
+
+const MACHINES: [usize; 3] = [1, 4, 16];
+const THREADS: [usize; 3] = [1, 4, 8];
+
+fn raw_edges(rng: &mut Rng, size: usize) -> (usize, Vec<(Vertex, Vertex)>) {
+    let n = size.max(2);
+    let m = rng.gen_range(4 * n as u64) as usize;
+    let edges = (0..m)
+        .map(|_| {
+            (
+                rng.gen_range(n as u64) as Vertex,
+                rng.gen_range(n as u64) as Vertex,
+            )
+        })
+        .collect();
+    (n, edges)
+}
+
+#[test]
+fn prop_normalize_contract_degrees_bit_identical() {
+    // For random raw edge lists and random labels, every graph-layer
+    // operation of ShardedGraph must match the monolithic Graph exactly —
+    // at every shard count.
+    Prop::new(24).check_sized(
+        "sharded-vs-flat",
+        400,
+        |rng, size| {
+            let (n, edges) = raw_edges(rng, size);
+            let labels: Vec<Vertex> = (0..n as u32)
+                .map(|_| rng.gen_range(n as u64) as Vertex)
+                .collect();
+            (n, edges, labels)
+        },
+        |(n, edges, labels)| {
+            let flat = Graph::from_edges(*n, edges.clone());
+            for p in MACHINES {
+                let sharded = ShardedGraph::from_edges(*n, p, edges.clone());
+                if sharded.to_graph() != flat {
+                    return Err(format!("normalize differs at p={p}"));
+                }
+                if sharded.degrees() != flat.degrees() {
+                    return Err(format!("degrees differ at p={p}"));
+                }
+                let (cf, mf) = flat.contract(labels);
+                let (cs, ms) = sharded.contract(labels);
+                if ms != mf || cs.to_graph() != cf {
+                    return Err(format!("contract differs at p={p}"));
+                }
+                let (pf, mapf) = flat.prune_isolated();
+                let (ps, maps) = sharded.prune_isolated();
+                if maps != mapf || ps.to_graph() != pf {
+                    return Err(format!("prune differs at p={p}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_shard_ownership_and_cached_stats() {
+    // The resident invariant (edge lives on machine_of(min endpoint)) and
+    // the cached histograms the round charges are derived from.
+    Prop::new(16).check_sized(
+        "shard-invariant",
+        300,
+        |rng, size| raw_edges(rng, size),
+        |(n, edges)| {
+            for p in [3usize, 8] {
+                let g = ShardedGraph::from_edges(*n, p, edges.clone());
+                for (s, shard) in g.shards().iter().enumerate() {
+                    let mut peers = vec![0u64; p];
+                    for &(u, v) in shard.edges() {
+                        if u >= v {
+                            return Err(format!("non-canonical edge ({u},{v})"));
+                        }
+                        if machine_of(u as u64, p) != s {
+                            return Err(format!("edge ({u},{v}) on wrong shard {s}"));
+                        }
+                        peers[machine_of(v as u64, p)] += 1;
+                    }
+                    if peers != shard.peer_counts() {
+                        return Err(format!("stale peer_counts on shard {s}"));
+                    }
+                }
+                if g.vertex_counts().iter().sum::<u64>() != *n as u64 {
+                    return Err("vertex_counts do not partition 0..n".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+fn run_algo(
+    algo: &str,
+    g: &Graph,
+    machines: usize,
+    threads: usize,
+    seed: u64,
+) -> (Vec<Vertex>, Vec<lcc::mpc::RoundMetrics>) {
+    let a = cc::by_name(algo);
+    let mut sim = Simulator::new(MpcConfig {
+        machines,
+        space_per_machine: Some(1 << 20),
+        threads,
+    });
+    let mut rng = Rng::new(seed);
+    let res = a.run(g, &mut sim, &mut rng, &RunOptions::default());
+    assert!(res.completed, "{algo} incomplete");
+    (res.labels, res.metrics.rounds)
+}
+
+#[test]
+fn all_algorithms_oracle_correct_and_invariant_across_machines_and_threads() {
+    // Acceptance matrix: machines ∈ {1,4,16} × threads ∈ {1,4,8} for every
+    // algorithm.  Labels must equal the oracle everywhere; for a fixed
+    // machine count the per-round model metrics (messages / bytes /
+    // max_machine_bytes / space_violation) must be identical at every
+    // threads setting.
+    let graphs = [
+        ("gnp", generators::gnp(250, 0.015, &mut Rng::new(5))),
+        ("path", generators::path(120)),
+        (
+            "mixture",
+            generators::star(40).disjoint_union(generators::cycle(17)),
+        ),
+    ];
+    for (gname, g) in &graphs {
+        let want = oracle::components(g);
+        for algo in cc::ALL_ALGORITHMS {
+            for machines in MACHINES {
+                let (base_labels, base_rounds) = run_algo(algo, g, machines, 1, 7);
+                assert_eq!(
+                    base_labels, want,
+                    "{algo} wrong on {gname} (machines={machines})"
+                );
+                for threads in THREADS {
+                    let (labels, rounds) = run_algo(algo, g, machines, threads, 7);
+                    assert_eq!(
+                        labels, base_labels,
+                        "{algo}/{gname}: labels diverge (machines={machines}, threads={threads})"
+                    );
+                    assert_eq!(
+                        rounds, base_rounds,
+                        "{algo}/{gname}: metrics diverge (machines={machines}, threads={threads})"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn sharded_and_flat_entries_agree() {
+    // The trait's flat adapter and an explicit from_graph + run_sharded
+    // must be the same computation.
+    let g = generators::gnp(300, 0.012, &mut Rng::new(9));
+    for algo in ["lc", "cracker", "tc-dht"] {
+        let a = cc::by_name(algo);
+        let exec_flat = || {
+            let mut sim = Simulator::new(MpcConfig {
+                machines: 4,
+                space_per_machine: None,
+                threads: 2,
+            });
+            let mut rng = Rng::new(3);
+            a.run(&g, &mut sim, &mut rng, &RunOptions::default())
+        };
+        let exec_sharded = || {
+            let mut sim = Simulator::new(MpcConfig {
+                machines: 4,
+                space_per_machine: None,
+                threads: 2,
+            });
+            let sharded = ShardedGraph::from_graph(&g, 4);
+            let mut rng = Rng::new(3);
+            a.run_sharded(&sharded, &mut sim, &mut rng, &RunOptions::default())
+        };
+        let fr = exec_flat();
+        let sr = exec_sharded();
+        assert_eq!(fr.labels, sr.labels, "{algo}");
+        assert_eq!(fr.metrics.rounds, sr.metrics.rounds, "{algo}");
+    }
+}
+
+#[test]
+fn finisher_and_pruning_stay_correct_on_sharded_loop() {
+    let g = generators::gnp(400, 0.008, &mut Rng::new(11));
+    let want = oracle::components(&g);
+    for algo in ["lc", "lc-mtl", "tc", "cracker"] {
+        for (finisher, prune) in [(0usize, true), (200, true), (200, false), (0, false)] {
+            let a = cc::by_name(algo);
+            let mut sim = Simulator::new(MpcConfig {
+                machines: 4,
+                space_per_machine: None,
+                threads: 4,
+            });
+            let mut rng = Rng::new(13);
+            let opts = RunOptions {
+                finisher_threshold: finisher,
+                prune_isolated: prune,
+                ..Default::default()
+            };
+            let res = a.run(&g, &mut sim, &mut rng, &opts);
+            assert_eq!(
+                res.labels, want,
+                "{algo} wrong (finisher={finisher}, prune={prune})"
+            );
+        }
+    }
+}
+
+#[test]
+fn pipeline_summary_reshards_into_any_machine_count() {
+    let g = generators::gnp(1500, 0.004, &mut Rng::new(17));
+    let cfg = lcc::coordinator::PipelineConfig {
+        num_workers: 5,
+        chunk_size: 128,
+        channel_capacity: 2,
+    };
+    let res = lcc::coordinator::pipeline::run(1500, g.edges().iter().copied(), &cfg);
+    assert_eq!(res.summary.num_shards(), 5);
+    let want = oracle::components(&g);
+    assert_eq!(lcc::coordinator::pipeline::merge_summary(&res.summary), want);
+    for machines in MACHINES {
+        let resharded = res.summary.reshard(machines);
+        assert_eq!(resharded.num_shards(), machines);
+        assert_eq!(oracle::components_sharded(&resharded), want);
+        assert_eq!(resharded.to_graph(), res.summary.to_graph());
+    }
+}

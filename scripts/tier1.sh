@@ -1,15 +1,18 @@
 #!/usr/bin/env bash
 # Tier-1 gate (ROADMAP.md): release build + full test suite + quick perf
-# smoke.  The perf smoke writes the machine-readable suite results over
-# BENCH_PR1.json at the repo root so the perf trajectory is tracked in
-# version control from PR 1 onward (EXPERIMENTS.md §Perf explains how to
-# read it).
+# smoke.  The perf smoke writes the machine-readable suite results to
+# $BENCH_OUT (default: BENCH_PR2.json, the current PR's tracked artifact)
+# at the repo root so the perf trajectory is tracked in version control
+# (EXPERIMENTS.md §Perf explains how to read it).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
+BENCH_OUT="${BENCH_OUT:-BENCH_PR2.json}"
+
 if ! command -v cargo >/dev/null 2>&1; then
     echo "tier1: cargo not found. This gate needs a Rust toolchain; run it" >&2
-    echo "tier1: on a toolchain-equipped machine/CI (see EXPERIMENTS.md)." >&2
+    echo "tier1: on a toolchain-equipped machine/CI (see EXPERIMENTS.md or" >&2
+    echo "tier1: .github/workflows/tier1.yml)." >&2
     exit 1
 fi
 
@@ -18,5 +21,6 @@ fi
 
 # Perf smoke: quick protocol (1 warmup + 3 samples), JSON to the tracked
 # artifact.  Runs from the repo root so relative artifact paths resolve.
-./rust/target/release/lcc perf --quick --out BENCH_PR1.json
+# --machines sweeps the shard count; 16 is the tracked default.
+./rust/target/release/lcc perf --quick --machines 16 --out "$BENCH_OUT"
 echo "tier1 OK"
