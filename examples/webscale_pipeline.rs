@@ -13,10 +13,13 @@
 //!
 //! Run with `make artifacts` done first to exercise the XLA path:
 //!
-//!     cargo run --release --example webscale_pipeline [n] [avg_deg] [machines]
+//!     cargo run --release --example webscale_pipeline [n] [avg_deg] [machines] [spill_budget]
 //!
 //! `machines` sweeps the simulator shard count the summary graph is
-//! re-partitioned onto for the global merge (default 16).
+//! re-partitioned onto for the global merge (default 16).  `spill_budget`
+//! (bytes) caps resident edge memory: the workers' summary shards and
+//! every contracted generation of the merge spill to disk once they
+//! exceed it — the same run, out-of-core (default: unbounded).
 
 use lcc::coordinator::{pipeline, Driver, PipelineConfig, RunConfig};
 use lcc::graph::generators::presets;
@@ -35,6 +38,7 @@ fn main() {
         .nth(3)
         .and_then(|s| s.parse().ok())
         .unwrap_or(16);
+    let spill_budget: Option<u64> = std::env::args().nth(4).and_then(|s| s.parse().ok());
 
     // The "webpages" shape of Table 1: heavily fragmented similarity graph
     // (largest CC ~0.8% of n).  Generated streaming-style below.
@@ -48,6 +52,7 @@ fn main() {
         num_workers: 6,
         chunk_size: 64 * 1024,
         channel_capacity: 4,
+        spill_budget,
     };
     let t0 = std::time::Instant::now();
     let res = pipeline::run(g.num_vertices(), g.edges().iter().copied(), &cfg);
@@ -61,6 +66,13 @@ fn main() {
         res.stats.edges_streamed as f64 / res.stats.summary_edges.max(1) as f64,
         res.stats.generate_ms + res.stats.merge_ms,
     );
+    if res.summary.is_spilled() {
+        println!(
+            "summary is disk-backed under the {}-byte budget ({})",
+            spill_budget.unwrap_or(0),
+            res.summary.spill_dir().unwrap().display(),
+        );
+    }
 
     // ---- stage 3: LocalContraction (+XLA dense finisher) on the summary --
     // The workers' shards flow straight into the finisher: re-partitioned
@@ -70,6 +82,7 @@ fn main() {
         machines,
         use_xla: true, // compiled artifact path; falls back with a warning
         finisher_threshold: 0,
+        spill_budget,
         verify: false,
         ..Default::default()
     });

@@ -1,7 +1,8 @@
 //! `cargo bench --bench perf` — §Perf micro-benchmarks across all layers
 //! (see EXPERIMENTS.md §Perf for the iteration log and targets).
 //! LCC_BENCH_QUICK=1 for a fast pass; LCC_BENCH_MACHINES=N to sweep the
-//! shard count (default 16).
+//! shard count (default 16); LCC_BENCH_SPILL_BUDGET=BYTES to run the
+//! sharded benches out-of-core.
 
 fn main() {
     let quick = std::env::var("LCC_BENCH_QUICK").is_ok();
@@ -9,8 +10,14 @@ fn main() {
         .ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or(16);
-    println!("=== §Perf micro-benchmarks (quick={quick}, machines={machines}) ===");
-    for m in lcc::bench::perf::standard_suite(quick, machines) {
+    let spill_budget = std::env::var("LCC_BENCH_SPILL_BUDGET")
+        .ok()
+        .and_then(|s| s.parse().ok());
+    println!(
+        "=== §Perf micro-benchmarks (quick={quick}, machines={machines}, \
+         spill_budget={spill_budget:?}) ==="
+    );
+    for m in lcc::bench::perf::standard_suite(quick, machines, spill_budget) {
         println!("{}", m.report_line());
     }
 }

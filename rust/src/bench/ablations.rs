@@ -134,6 +134,7 @@ pub fn machines(seed: u64) -> (String, Json) {
         let mut sim = Simulator::new(MpcConfig {
             machines: p,
             space_per_machine: None,
+            spill_budget: None,
             threads: 4,
         });
         let mut rng = Rng::new(seed);

@@ -5,31 +5,35 @@
 use super::harness::{Bench, Measurement};
 use crate::cc::backend::{CpuBackend, DenseBackend};
 use crate::cc::common::{min_hop, Priorities};
-use crate::graph::{generators, ShardedGraph};
+use crate::graph::{generators, ShardedGraph, SpillPolicy};
 use crate::mpc::{MpcConfig, Simulator};
 use crate::util::rng::Rng;
 
-/// L3 primitive: one min-hop MPC round over a sharded G(n,p) graph.
+/// L3 primitive: one min-hop MPC round over a sharded G(n,p) graph,
+/// optionally under a residency budget (the out-of-core round path).
 pub fn bench_min_hop(
     b: &Bench,
     n: usize,
     avg_deg: f64,
     threads: usize,
     machines: usize,
+    spill_budget: Option<u64>,
 ) -> Measurement {
     let flat = generators::gnp(n, avg_deg / n as f64, &mut Rng::new(1));
-    let g = ShardedGraph::from_graph(&flat, machines);
+    let g = ShardedGraph::from_graph_with(&flat, machines, SpillPolicy::with_budget(spill_budget));
     let vals: Vec<u32> = (0..n as u32).collect();
     let m = g.num_edges() as f64;
     let mut sim = Simulator::new(MpcConfig {
         machines,
         space_per_machine: None,
+        spill_budget: None,
         threads,
     });
     b.run(
         &format!(
-            "L3/min_hop n={n} m={} threads={threads} machines={machines}",
-            g.num_edges()
+            "L3/min_hop n={n} m={} threads={threads} machines={machines}{}",
+            g.num_edges(),
+            if g.is_spilled() { " spilled" } else { "" },
         ),
         Some(m),
         || {
@@ -47,20 +51,23 @@ pub fn bench_lc_phase(
     avg_deg: f64,
     threads: usize,
     machines: usize,
+    spill_budget: Option<u64>,
 ) -> Measurement {
     let flat = generators::gnp(n, avg_deg / n as f64, &mut Rng::new(2));
-    let g = ShardedGraph::from_graph(&flat, machines);
+    let g = ShardedGraph::from_graph_with(&flat, machines, SpillPolicy::with_budget(spill_budget));
     let m = g.num_edges() as f64;
     let mut rng = Rng::new(3);
     let mut sim = Simulator::new(MpcConfig {
         machines,
         space_per_machine: None,
+        spill_budget: None,
         threads,
     });
     b.run(
         &format!(
-            "L3/lc_phase n={n} m={} threads={threads} machines={machines}",
-            g.num_edges()
+            "L3/lc_phase n={n} m={} threads={threads} machines={machines}{}",
+            g.num_edges(),
+            if g.is_spilled() { " spilled" } else { "" },
         ),
         Some(m),
         || {
@@ -92,21 +99,63 @@ pub fn bench_shard_ingest(b: &Bench, n: usize, avg_deg: f64, machines: usize) ->
     )
 }
 
-/// End-to-end: full LocalContraction run.
-pub fn bench_lc_end_to_end(b: &Bench, n: usize, avg_deg: f64, machines: usize) -> Measurement {
+/// End-to-end: full LocalContraction run, optionally under a residency
+/// budget (the `--spill-budget` acceptance path: an edge set exceeding
+/// the budget completes through disk-backed shards).
+pub fn bench_lc_end_to_end(
+    b: &Bench,
+    n: usize,
+    avg_deg: f64,
+    machines: usize,
+    spill_budget: Option<u64>,
+) -> Measurement {
     let g = generators::gnp(n, avg_deg / n as f64, &mut Rng::new(4));
     let m = g.num_edges() as f64;
+    let spilled = SpillPolicy::with_budget(spill_budget)
+        .should_spill(g.num_edges() as u64 * crate::graph::spill::EDGE_BYTES);
     let driver = crate::coordinator::Driver::new(crate::coordinator::RunConfig {
         algorithm: "lc".into(),
         machines,
+        spill_budget,
         ..Default::default()
     });
     b.run(
-        &format!("L3/lc_full n={n} m={} machines={machines}", g.num_edges()),
+        &format!(
+            "L3/lc_full n={n} m={} machines={machines}{}",
+            g.num_edges(),
+            if spilled { " spilled" } else { "" },
+        ),
         Some(m),
         || {
             let r = driver.run(&g);
             std::hint::black_box(r);
+        },
+    )
+}
+
+/// Graph-layer primitive: the out-of-core rewrite loop — contract a
+/// spilled graph (load → rewrite → spill per shard).  Only run when a
+/// budget is configured.
+pub fn bench_spill_contract(
+    b: &Bench,
+    n: usize,
+    avg_deg: f64,
+    machines: usize,
+    budget: u64,
+) -> Measurement {
+    let flat = generators::gnp(n, avg_deg / n as f64, &mut Rng::new(13));
+    let g = ShardedGraph::from_graph_with(&flat, machines, SpillPolicy::budget(budget));
+    let labels: Vec<u32> = (0..n as u32).map(|v| v / 2).collect();
+    let m = g.num_edges() as f64;
+    b.run(
+        &format!(
+            "L2/spill_contract n={n} m={} machines={machines} budget={budget}",
+            g.num_edges()
+        ),
+        Some(m),
+        || {
+            let (c, _) = g.contract(&labels);
+            std::hint::black_box(c.num_edges());
         },
     )
 }
@@ -175,25 +224,34 @@ pub fn bench_dense_xla(b: &Bench, avg_deg: f64) -> Option<Measurement> {
     ))
 }
 
-/// The whole standard suite (used by `lcc perf [--machines N]` and
-/// `cargo bench`).  `machines` is the shard count every sharded bench
-/// runs under — sweepable from the command line.
-pub fn standard_suite(quick: bool, machines: usize) -> Vec<Measurement> {
+/// The whole standard suite (used by `lcc perf [--machines N]
+/// [--spill-budget BYTES]` and `cargo bench`).  `machines` is the shard
+/// count every sharded bench runs under; `spill_budget` re-runs the
+/// sharded benches out-of-core (its rows are tagged `spilled` when the
+/// input exceeds the budget) and adds the spilled-contract primitive.
+pub fn standard_suite(
+    quick: bool,
+    machines: usize,
+    spill_budget: Option<u64>,
+) -> Vec<Measurement> {
     let b = if quick { Bench::quick() } else { Bench::default() };
     let machines = machines.max(1);
     let mut out = vec![
-        bench_min_hop(&b, 100_000, 8.0, 1, machines),
-        bench_min_hop(&b, 100_000, 8.0, 8, machines),
-        bench_lc_phase(&b, 100_000, 8.0, 1, machines),
-        bench_lc_phase(&b, 100_000, 8.0, 8, machines),
+        bench_min_hop(&b, 100_000, 8.0, 1, machines, spill_budget),
+        bench_min_hop(&b, 100_000, 8.0, 8, machines, spill_budget),
+        bench_lc_phase(&b, 100_000, 8.0, 1, machines, spill_budget),
+        bench_lc_phase(&b, 100_000, 8.0, 8, machines, spill_budget),
         bench_normalize(&b, 100_000, 8.0),
         bench_shard_ingest(&b, 100_000, 8.0, machines),
-        bench_lc_end_to_end(&b, 50_000, 8.0, machines),
+        bench_lc_end_to_end(&b, 50_000, 8.0, machines, spill_budget),
         // pipeline rows have no simulator: `workers` IS their shard count
         bench_pipeline(&b, 200_000, 8.0, 1),
         bench_pipeline(&b, 200_000, 8.0, 4),
         bench_dense_cpu(&b, 1024, 16.0),
     ];
+    if let Some(budget) = spill_budget {
+        out.push(bench_spill_contract(&b, 100_000, 8.0, machines, budget));
+    }
     if let Some(m) = bench_dense_xla(&b, 16.0) {
         out.push(m);
     } else {
@@ -205,16 +263,23 @@ pub fn standard_suite(quick: bool, machines: usize) -> Vec<Measurement> {
 /// The standard suite as one machine-readable document — the schema of
 /// `BENCH_PR2.json` at the repo root (`lcc perf --quick --out FILE`), so
 /// the perf trajectory is tracked as a checked-in artifact from PR 1 on.
+/// `spill_budget` is recorded when set (the out-of-core protocol rows).
 pub fn suite_json(
     measurements: &[Measurement],
     quick: bool,
     machines: usize,
+    spill_budget: Option<u64>,
 ) -> crate::util::json::Json {
     use crate::util::json::Json;
-    Json::obj()
+    let doc = Json::obj()
         .set("suite", "lcc-perf-standard")
         .set("quick", quick)
-        .set("machines", machines)
+        .set("machines", machines);
+    let doc = match spill_budget {
+        Some(b) => doc.set("spill_budget", b),
+        None => doc,
+    };
+    doc
         .set(
             "threads_available",
             crate::mpc::pool::default_threads(),
@@ -236,7 +301,11 @@ mod tests {
             sample_iters: 1,
             slow_cutoff_s: 30.0,
         };
-        let m = bench_min_hop(&b, 2000, 4.0, 1, 16);
+        let m = bench_min_hop(&b, 2000, 4.0, 1, 16, None);
+        assert!(m.median_s() > 0.0);
+        let m = bench_min_hop(&b, 2000, 4.0, 2, 16, Some(0));
+        assert!(m.median_s() > 0.0);
+        let m = bench_spill_contract(&b, 2000, 4.0, 8, 64);
         assert!(m.median_s() > 0.0);
         let m = bench_dense_cpu(&b, 256, 8.0);
         assert!(m.throughput().unwrap() > 0.0);
@@ -253,8 +322,12 @@ mod tests {
             sample_iters: 1,
             slow_cutoff_s: 30.0,
         };
-        let ms = vec![bench_min_hop(&b, 500, 4.0, 2, 4)];
-        let doc = suite_json(&ms, true, 4);
+        let ms = vec![bench_min_hop(&b, 500, 4.0, 2, 4, None)];
+        let doc = suite_json(&ms, true, 4, Some(1 << 20));
+        assert_eq!(
+            doc.get("spill_budget").and_then(|j| j.as_i64()),
+            Some(1 << 20)
+        );
         assert_eq!(doc.get("suite").and_then(|j| j.as_str()), Some("lcc-perf-standard"));
         assert_eq!(doc.get("machines").and_then(|j| j.as_i64()), Some(4));
         let benches = doc.get("benches").and_then(|j| j.as_arr()).unwrap();

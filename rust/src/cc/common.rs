@@ -64,7 +64,9 @@ fn check_shards(g: &ShardedGraph, sim: &Simulator) {
 /// owns, plus a `1/p` range of the self messages — an arbitrary but fixed
 /// assignment, legal because `op` is associative and commutative), so both
 /// the values and the metrics are functions of `machines` alone, never of
-/// `threads`.
+/// `threads`.  The chunks load spilled shards on the workers that fold
+/// them ([`ShardedGraph::msg_chunks`]), so an out-of-core graph streams
+/// through the round with at most one shard per thread in RAM.
 pub fn neighborhood_fold<V>(
     sim: &mut Simulator,
     label: &str,
@@ -87,33 +89,25 @@ where
     );
     let charge = g.hop_charge(msg_size, include_self);
     let mut out: Vec<V> = vals.to_vec();
-    let chunks: Vec<_> = g
-        .shards()
-        .iter()
-        .enumerate()
-        .map(|(s, shard)| {
-            let (sa, sb) = if include_self {
-                chunk_range(n, p, s)
-            } else {
-                (0, 0)
-            };
-            // vertices with no messages keep their own value (out
-            // prefilled), and the fold *replaces* on a key's first
-            // message, so with include_self=false a vertex's own value
-            // correctly drops out as soon as any neighbor message
-            // arrives, and is kept otherwise.
-            shard
-                .edges()
-                .iter()
-                .flat_map(move |&(u, v)| {
-                    [
-                        (u as u64, vals[v as usize]),
-                        (v as u64, vals[u as usize]),
-                    ]
-                })
-                .chain((sa..sb).map(move |v| (v as u64, vals[v])))
-        })
-        .collect();
+    // vertices with no messages keep their own value (out prefilled), and
+    // the fold *replaces* on a key's first message, so with
+    // include_self=false a vertex's own value correctly drops out as soon
+    // as any neighbor message arrives, and is kept otherwise.
+    let chunks = g.msg_chunks(move |s, edges| {
+        let (sa, sb) = if include_self {
+            chunk_range(n, p, s)
+        } else {
+            (0, 0)
+        };
+        edges
+            .flat_map(move |(u, v)| {
+                [
+                    (u as u64, vals[v as usize]),
+                    (v as u64, vals[u as usize]),
+                ]
+            })
+            .chain((sa..sb).map(move |v| (v as u64, vals[v])))
+    });
     sim.round_fold_sharded(label, &mut out, chunks, charge, op);
     out
 }
@@ -261,6 +255,7 @@ mod tests {
         Simulator::new(MpcConfig {
             machines: 4,
             space_per_machine: None,
+            spill_budget: None,
             threads: 1,
         })
     }
@@ -392,6 +387,7 @@ mod tests {
         Simulator::new(MpcConfig {
             machines: 4,
             space_per_machine: None,
+            spill_budget: None,
             threads,
         })
     }

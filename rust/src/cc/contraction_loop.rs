@@ -103,11 +103,7 @@ where
                 bytes: 16 * m_edges,
                 machine_bytes,
             };
-            let chunks: Vec<_> = cur
-                .shards()
-                .iter()
-                .map(|s| s.edges().iter().map(|&(u, v)| (0u64, (u, v))))
-                .collect();
+            let chunks = cur.msg_chunks(|_s, edges| edges.map(|(u, v)| (0u64, (u, v))));
             let _: Vec<()> = sim.round_map_sharded("finisher/ship", chunks, charge, |_, _| ());
             let node_labels = oracle::components_sharded(&cur); // min node id per comp
             let m = min_orig(cur.num_vertices(), &node_of, &resolved);
@@ -202,6 +198,7 @@ mod tests {
         Simulator::new(MpcConfig {
             machines: 4,
             space_per_machine: None,
+            spill_budget: None,
             threads: 1,
         })
     }

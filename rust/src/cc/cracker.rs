@@ -47,24 +47,17 @@ pub fn min_neighbor(g: &ShardedGraph, rho: &Priorities, sim: &mut Simulator) -> 
 pub fn rewire(g: &ShardedGraph, m: &[Vertex], sim: &mut Simulator) -> ShardedGraph {
     let n = g.num_vertices();
     let p = g.num_shards();
-    let chunks: Vec<_> = g
-        .shards()
-        .iter()
-        .enumerate()
-        .map(|(s, shard)| {
-            let (sa, sb) = chunk_range(n, p, s);
-            shard
-                .edges()
-                .iter()
-                .flat_map(move |&(u, v)| {
-                    [
-                        (m[u as usize] as u64, (m[u as usize], v)),
-                        (m[v as usize] as u64, (m[v as usize], u)),
-                    ]
-                })
-                .chain((sa..sb).map(move |v| (m[v] as u64, (m[v], v as u32))))
-        })
-        .collect();
+    let chunks = g.msg_chunks(move |s, edges| {
+        let (sa, sb) = chunk_range(n, p, s);
+        edges
+            .flat_map(move |(u, v)| {
+                [
+                    (m[u as usize] as u64, (m[u as usize], v)),
+                    (m[v as usize] as u64, (m[v as usize], u)),
+                ]
+            })
+            .chain((sa..sb).map(move |v| (m[v] as u64, (m[v], v as u32))))
+    });
     // pure message delivery: each new edge materializes at its hub machine;
     // same vertex universe + shard count, so the ownership cache carries over
     let edges: Vec<(u32, u32)> = sim.round_map_chunked("cracker/rewire", chunks, |_, pair| pair);
@@ -114,6 +107,7 @@ mod tests {
         Simulator::new(MpcConfig {
             machines: 4,
             space_per_machine: None,
+            spill_budget: None,
             threads: 1,
         })
     }

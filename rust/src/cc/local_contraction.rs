@@ -63,6 +63,19 @@ pub fn phase_labels(
         }
     }
 
+    // Out-of-core path: a spilled graph must not materialize an O(m)
+    // adjacency, so the two min-hops run as streaming sharded fold rounds
+    // (one loaded shard per worker).  Values and per-round metrics are
+    // bit-identical to the fused path below — the fusion is charged as
+    // exactly these two rounds (enforced by
+    // `fused_two_hop_matches_two_min_hops_on_random_graphs` and
+    // `rust/tests/spill_equivalence.rs`).
+    if g.is_spilled() {
+        let h1 = super::common::min_hop(sim, "lc/hop1", g, &rho.rho, true);
+        let h2 = super::common::min_hop(sim, "lc/hop2", g, &h1, true);
+        return h2.into_iter().map(|p| rho.inv[p as usize]).collect();
+    }
+
     // Fused MPC path: build the CSR once per phase (straight off the
     // shards) and evaluate both min-hops in one traversal; the model is
     // still charged the two label rounds with accounting identical to two
@@ -155,6 +168,7 @@ mod tests {
         Simulator::new(MpcConfig {
             machines: 8,
             space_per_machine: None,
+            spill_budget: None,
             threads: 1,
         })
     }
@@ -283,6 +297,7 @@ mod tests {
             let mut s = Simulator::new(MpcConfig {
                 machines: 8,
                 space_per_machine: Some(50_000),
+                spill_budget: None,
                 threads,
             });
             let mut rng = Rng::new(32);

@@ -108,6 +108,7 @@ mod tests {
         Simulator::new(MpcConfig {
             machines: 4,
             space_per_machine: None,
+            spill_budget: None,
             threads: 1,
         })
     }

@@ -107,6 +107,9 @@ pub trait CcAlgorithm {
     ) -> CcResult;
 
     /// Flat-ingest convenience: shard `g` by `sim.cfg.machines` and run.
+    /// The simulator's `spill_budget` becomes the graph's residency
+    /// policy, so an over-budget edge set runs disk-backed from ingest
+    /// through every contracted generation.
     fn run(
         &self,
         g: &Graph,
@@ -114,7 +117,11 @@ pub trait CcAlgorithm {
         rng: &mut Rng,
         opts: &RunOptions,
     ) -> CcResult {
-        let sharded = ShardedGraph::from_graph(g, sim.cfg.machines.max(1));
+        let sharded = ShardedGraph::from_graph_with(
+            g,
+            sim.cfg.machines.max(1),
+            crate::graph::SpillPolicy::with_budget(sim.cfg.spill_budget),
+        );
         self.run_sharded(&sharded, sim, rng, opts)
     }
 }

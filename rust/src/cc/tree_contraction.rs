@@ -206,6 +206,7 @@ mod tests {
         Simulator::new(MpcConfig {
             machines: 8,
             space_per_machine: None,
+            spill_budget: None,
             threads: 1,
         })
     }

@@ -150,6 +150,7 @@ mod tests {
         Simulator::new(MpcConfig {
             machines: 4,
             space_per_machine: None,
+            spill_budget: None,
             threads: 1,
         })
     }

@@ -25,6 +25,11 @@ pub struct RunConfig {
     pub state_cap: u64,
     /// Use the compiled XLA dense backend when the graph fits a shard.
     pub use_xla: bool,
+    /// Resident-memory budget for the sharded edge store, in bytes
+    /// (`--spill-budget`): graphs whose edge set exceeds it run with
+    /// disk-backed shards through the same contraction loop.  `None` =
+    /// unbounded.
+    pub spill_budget: Option<u64>,
     /// Cross-check the labels against the sequential oracle.
     pub verify: bool,
 }
@@ -43,6 +48,7 @@ impl Default for RunConfig {
             max_phases: 200,
             state_cap: 0,
             use_xla: false,
+            spill_budget: None,
             verify: false,
         }
     }
@@ -96,10 +102,20 @@ impl Driver {
     }
 
     /// Run with a dataset name recorded in the report.  Shards `g` once by
-    /// `cfg.machines` (the ingest step) and runs on the resident store.
+    /// `cfg.machines` (the ingest step) under the configured residency
+    /// budget and runs on the resident (or disk-backed) store.
     pub fn run_named(&self, g: &Graph, dataset: &str) -> Report {
-        let sharded = ShardedGraph::from_graph(g, self.cfg.machines.max(1));
+        let sharded = ShardedGraph::from_graph_with(
+            g,
+            self.cfg.machines.max(1),
+            self.spill_policy(),
+        );
         self.run_sharded_seeded(&sharded, dataset, self.cfg.seed)
+    }
+
+    /// The residency policy every run of this driver shards under.
+    fn spill_policy(&self) -> crate::graph::SpillPolicy {
+        crate::graph::SpillPolicy::with_budget(self.cfg.spill_budget)
     }
 
     /// Run on an already-sharded graph (e.g. the pipeline's summary)
@@ -108,10 +124,25 @@ impl Driver {
     /// edge list never round-trips through one flat vector.
     pub fn run_named_sharded(&self, g: &ShardedGraph, dataset: &str) -> Report {
         let machines = self.cfg.machines.max(1);
-        if g.num_shards() == machines {
-            self.run_sharded_seeded(g, dataset, self.cfg.seed)
+        let budgeted = self.cfg.spill_budget.is_some();
+        if g.num_shards() != machines {
+            // reshard first, then adopt the driver's budget on the
+            // already-resharded generation — never spill a graph only to
+            // stream it all back through a reshard
+            let mut r = g.reshard(machines);
+            if budgeted {
+                r = r.with_policy(self.spill_policy());
+            }
+            self.run_sharded_seeded(&r, dataset, self.cfg.seed)
+        } else if budgeted {
+            // the run's generations must inherit the budget (and the
+            // backend must match it), which lives on the graph: this is
+            // the one path that needs an owned copy
+            let g = g.clone().with_policy(self.spill_policy());
+            self.run_sharded_seeded(&g, dataset, self.cfg.seed)
         } else {
-            self.run_sharded_seeded(&g.reshard(machines), dataset, self.cfg.seed)
+            // default path: zero-copy
+            self.run_sharded_seeded(g, dataset, self.cfg.seed)
         }
     }
 
@@ -120,6 +151,7 @@ impl Driver {
         let mut sim = Simulator::new(MpcConfig {
             machines: self.cfg.machines,
             space_per_machine: None,
+            spill_budget: self.cfg.spill_budget,
             threads: self.cfg.threads,
         });
         let mut rng = Rng::new(seed);
@@ -159,7 +191,11 @@ impl Driver {
     /// median-wall-time report.
     pub fn run_median(&self, g: &Graph, dataset: &str, k: usize) -> Report {
         assert!(k >= 1);
-        let sharded = ShardedGraph::from_graph(g, self.cfg.machines.max(1));
+        let sharded = ShardedGraph::from_graph_with(
+            g,
+            self.cfg.machines.max(1),
+            self.spill_policy(),
+        );
         let mut reports: Vec<Report> = (0..k)
             .map(|i| {
                 self.run_sharded_seeded(

@@ -33,6 +33,13 @@ pub struct PipelineConfig {
     pub chunk_size: usize,
     /// Bounded channel capacity, in chunks (the backpressure knob).
     pub channel_capacity: usize,
+    /// Residency budget for the summary graph, in bytes: over budget, the
+    /// assembled summary is written out one shard file per worker and
+    /// dropped from RAM, and every downstream generation inherits the
+    /// budget.  (Assembly itself materializes the summary once — it is
+    /// the workers' *spanning* edges, ~n per worker, not the input
+    /// stream.)  `None` = resident.
+    pub spill_budget: Option<u64>,
 }
 
 impl Default for PipelineConfig {
@@ -43,6 +50,7 @@ impl Default for PipelineConfig {
                 .unwrap_or(4),
             chunk_size: 64 * 1024,
             channel_capacity: 4,
+            spill_budget: None,
         }
     }
 }
@@ -164,7 +172,11 @@ where
         let (summary, _edges_seen) = h.join().expect("worker panicked");
         buckets.push(summary);
     }
-    let summary = ShardedGraph::from_shard_buckets(n, buckets);
+    let summary = ShardedGraph::from_shard_buckets_with(
+        n,
+        buckets,
+        crate::graph::SpillPolicy::with_budget(cfg.spill_budget),
+    );
     stats.summary_edges = summary.num_edges() as u64;
     stats.merge_ms = t1.elapsed().as_secs_f64() * 1e3;
 
@@ -191,6 +203,7 @@ mod tests {
             num_workers: workers,
             chunk_size: 128,
             channel_capacity: 2,
+            spill_budget: None,
         }
     }
 
@@ -208,11 +221,31 @@ mod tests {
         let g = generators::gnp(500, 0.01, &mut Rng::new(8));
         let res = run(500, g.edges().iter().copied(), &cfg(3));
         assert_eq!(res.summary.num_shards(), 3);
-        for (s, shard) in res.summary.shards().iter().enumerate() {
-            for &(u, v) in shard.edges() {
+        for s in 0..3 {
+            for &(u, v) in res.summary.read_shard(s).unwrap().iter() {
                 assert_eq!(machine_of(u.min(v) as u64, 3), s);
             }
         }
+    }
+
+    #[test]
+    fn spilled_summary_matches_resident() {
+        let g = generators::gnp(800, 0.006, &mut Rng::new(12));
+        let resident = run(800, g.edges().iter().copied(), &cfg(4));
+        let spilled = run(
+            800,
+            g.edges().iter().copied(),
+            &PipelineConfig {
+                spill_budget: Some(0),
+                ..cfg(4)
+            },
+        );
+        assert!(spilled.summary.is_spilled());
+        assert_eq!(spilled.summary, resident.summary);
+        assert_eq!(
+            merge_summary(&spilled.summary),
+            crate::cc::oracle::components(&g)
+        );
     }
 
     #[test]

@@ -4,6 +4,11 @@
 //! from: one `u<TAB-or-space>v` pair per line, `#` comments.  The binary
 //! format is a little-endian `(magic, n, m, pairs...)` layout for fast
 //! re-loading of generated benchmark inputs.
+//!
+//! The low-level pair framing ([`PAIR_BYTES`], [`write_pairs`],
+//! [`read_pairs`]) is shared with the out-of-core shard files of
+//! [`super::spill`]; both formats validate on-disk counts against the
+//! actual file length **before** pre-allocating.
 
 use std::fs::File;
 use std::io::{BufRead, BufReader, BufWriter, Read, Write};
@@ -14,6 +19,35 @@ use anyhow::{bail, Context, Result};
 use super::edgelist::{Graph, Vertex};
 
 const MAGIC: &[u8; 8] = b"LCCGRAPH";
+
+/// Encoded size of one `(u32, u32)` edge pair.
+pub const PAIR_BYTES: u64 = 8;
+
+/// Write edge pairs little-endian (the payload encoding shared by the
+/// graph container format and the spill shard framing).
+pub fn write_pairs<W: Write>(w: &mut W, edges: &[(Vertex, Vertex)]) -> std::io::Result<()> {
+    for &(u, v) in edges {
+        w.write_all(&u.to_le_bytes())?;
+        w.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// Read exactly `m` edge pairs.  `m` pre-allocates, so callers must have
+/// validated it against the file length first (see [`read_binary`] and the
+/// spill framing in [`super::spill`]).
+pub fn read_pairs<R: Read>(r: &mut R, m: usize) -> std::io::Result<Vec<(Vertex, Vertex)>> {
+    let mut edges = Vec::with_capacity(m);
+    let mut pair = [0u8; 8];
+    for _ in 0..m {
+        r.read_exact(&mut pair)?;
+        edges.push((
+            u32::from_le_bytes(pair[0..4].try_into().unwrap()),
+            u32::from_le_bytes(pair[4..8].try_into().unwrap()),
+        ));
+    }
+    Ok(edges)
+}
 
 /// Read a SNAP-style text edge list.  Vertex ids may be sparse; they are
 /// remapped to dense `0..n` in first-seen order.
@@ -75,17 +109,23 @@ pub fn write_binary<P: AsRef<Path>>(g: &Graph, path: P) -> Result<()> {
     w.write_all(MAGIC)?;
     w.write_all(&(g.num_vertices() as u64).to_le_bytes())?;
     w.write_all(&(g.num_edges() as u64).to_le_bytes())?;
-    for &(u, v) in g.edges() {
-        w.write_all(&u.to_le_bytes())?;
-        w.write_all(&v.to_le_bytes())?;
-    }
+    write_pairs(&mut w, g.edges())?;
     Ok(())
 }
 
 /// Read the compact binary format.
+///
+/// The on-disk edge count is **not trusted**: it is validated against the
+/// actual file length before any allocation, so a truncated, padded, or
+/// corrupt header fails with a clear error instead of a bad pre-allocation
+/// or a short read deep in the payload.
 pub fn read_binary<P: AsRef<Path>>(path: P) -> Result<Graph> {
-    let f = File::open(&path)
-        .with_context(|| format!("open {}", path.as_ref().display()))?;
+    let path = path.as_ref();
+    let f = File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let file_len = f
+        .metadata()
+        .with_context(|| format!("stat {}", path.display()))?
+        .len();
     let mut r = BufReader::new(f);
     let mut magic = [0u8; 8];
     r.read_exact(&mut magic).context("read magic")?;
@@ -96,15 +136,20 @@ pub fn read_binary<P: AsRef<Path>>(path: P) -> Result<Graph> {
     r.read_exact(&mut u64buf)?;
     let n = u64::from_le_bytes(u64buf) as usize;
     r.read_exact(&mut u64buf)?;
-    let m = u64::from_le_bytes(u64buf) as usize;
-    let mut edges = Vec::with_capacity(m);
-    let mut pair = [0u8; 8];
-    for _ in 0..m {
-        r.read_exact(&mut pair)?;
-        let u = u32::from_le_bytes(pair[0..4].try_into().unwrap());
-        let v = u32::from_le_bytes(pair[4..8].try_into().unwrap());
-        edges.push((u, v));
+    let m = u64::from_le_bytes(u64buf);
+    let expected = m
+        .checked_mul(PAIR_BYTES)
+        .and_then(|payload| payload.checked_add(24)); // magic + n + m
+    match expected {
+        Some(expected) if expected == file_len => {}
+        _ => bail!(
+            "{}: header claims {m} edges (file would be {} bytes) but the \
+             file is {file_len} bytes — truncated or corrupt",
+            path.display(),
+            expected.map_or_else(|| "overflowing".to_string(), |e| e.to_string()),
+        ),
     }
+    let edges = read_pairs(&mut r, m as usize)?;
     Ok(Graph::from_edges_unchecked(n, edges))
 }
 
@@ -152,6 +197,35 @@ mod tests {
         write_binary(&g, &p).unwrap();
         let h = read_binary(&p).unwrap();
         assert_eq!(g, h);
+    }
+
+    #[test]
+    fn binary_rejects_length_mismatch() {
+        let mut rng = Rng::new(3);
+        let g = generators::gnp(100, 0.05, &mut rng);
+        let dir = std::env::temp_dir().join("lcc_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+
+        // truncated payload: drop the last 5 bytes
+        let p = dir.join("trunc.bin");
+        write_binary(&g, &p).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..bytes.len() - 5]).unwrap();
+        let err = read_binary(&p).unwrap_err().to_string();
+        assert!(err.contains("truncated or corrupt"), "{err}");
+
+        // inflated header count over an intact payload
+        let p2 = dir.join("badcount.bin");
+        let mut bytes = std::fs::read({
+            write_binary(&g, &p2).unwrap();
+            &p2
+        })
+        .unwrap();
+        let lie = (g.num_edges() as u64 + 1).to_le_bytes();
+        bytes[16..24].copy_from_slice(&lie);
+        std::fs::write(&p2, &bytes).unwrap();
+        let err = read_binary(&p2).unwrap_err().to_string();
+        assert!(err.contains("truncated or corrupt"), "{err}");
     }
 
     #[test]

@@ -8,7 +8,7 @@
 //!   this.
 //! * [`sharded::ShardedGraph`] — the **resident representation** everything
 //!   above the ingest boundary computes on.  Edges are partitioned into
-//!   one [`sharded::EdgeShard`] per simulated machine under the invariant
+//!   one [`spill::EdgeShard`] per simulated machine under the invariant
 //!   *the canonical edge `(u, v)`, `u < v`, lives on machine
 //!   `machine_of(u, machines)`* — the same stable hash the MPC shuffle
 //!   rounds key by, with `MpcConfig::machines` the single source of the
@@ -17,19 +17,29 @@
 //!   pass; cached per-shard ownership histograms make every round's
 //!   per-machine byte load a **pure function of shard membership** (see
 //!   [`sharded`] module docs and `crate::mpc`).
+//! * [`spill`] — **out-of-core residency** for the shards: a
+//!   [`spill::ShardStore`] backend per graph, either fully in RAM
+//!   ([`spill::Resident`]) or one checksummed file per shard
+//!   ([`spill::Spilled`]) once the edge set exceeds the graph's
+//!   [`spill::SpillPolicy`] budget.  Only the cached histograms stay
+//!   resident; mutations run load → rewrite → spill shard by shard, so
+//!   graphs larger than RAM flow through the same contraction loop.
 //!
 //! Conversions ([`sharded::ShardedGraph::from_graph`] /
 //! [`sharded::ShardedGraph::to_graph`]) are bit-exact round trips; the
 //! cross-representation tests in `rust/tests/sharded_representation.rs`
-//! enforce that every sharded operation matches its monolithic counterpart.
+//! and `rust/tests/spill_equivalence.rs` enforce that every sharded
+//! operation matches its monolithic counterpart on **both** backends.
 
 pub mod csr;
 pub mod edgelist;
 pub mod generators;
 pub mod io;
 pub mod sharded;
+pub mod spill;
 pub mod stats;
 
 pub use csr::Csr;
 pub use edgelist::{compact_labels, label_ranks, Graph, Vertex};
-pub use sharded::{EdgeShard, ShardedGraph};
+pub use sharded::ShardedGraph;
+pub use spill::{EdgeShard, ShardStore, SpillError, SpillPolicy};

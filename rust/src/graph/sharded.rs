@@ -1,5 +1,5 @@
 //! The sharded edge store: the machine partition as the system's
-//! **resident** graph representation.
+//! **resident** graph representation — with optional disk residency.
 //!
 //! The paper's contractions scale to trillions of edges because no machine
 //! ever holds the full edge list.  This module makes that layout native:
@@ -22,57 +22,96 @@
 //! per-machine byte loads of every hop and contraction round are **pure
 //! functions of these shard statistics** ([`ShardedGraph::hop_charge`],
 //! [`ShardedGraph::contract_charges`]) — the round engine never recomputes
-//! `machine_of` per message.  Mutating operations (`contract`,
-//! `prune_isolated`, [`ShardedGraph::from_edges`]) re-bucket rewritten
-//! edges into their new owner shards in the same pass that rewrites them,
-//! running shard-parallel on the worker pool.
+//! `machine_of` per message.
+//!
+//! **Residency.**  Shards live behind a [`super::spill::ShardStore`]
+//! backend chosen by the graph's [`SpillPolicy`]: fully in RAM
+//! ([`super::spill::Resident`]) while the edge set fits the memory budget,
+//! or one checksummed file per shard ([`super::spill::Spilled`]) once it
+//! does not — with only the cached histograms resident.  Mutating
+//! operations (`contract`, `prune_isolated`, `reshard`,
+//! [`ShardedGraph::from_edges`]) re-bucket rewritten edges into their new
+//! owner shards; on a spilled source this runs **load → rewrite → spill**
+//! one shard per worker through per-destination staging files
+//! (`rewrite_streamed`), so the full edge set never materializes in RAM.
+//! Both paths produce bit-identical graphs — enforced by
+//! `rust/tests/spill_equivalence.rs`.
 //!
 //! [`Graph`] remains the flat ingest/oracle format; [`ShardedGraph::to_graph`]
 //! is the thin conversion back (bit-identical to a monolithic
 //! `Graph::normalize` of the same edge multiset — enforced by
 //! `rust/tests/sharded_representation.rs`).
 
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
 use super::edgelist::{compact_labels, Graph, Vertex};
+use super::spill::{
+    self, EdgeShard, Resident, ShardData, ShardDataIter, ShardStats, ShardStore, SpillDir,
+    SpillError, SpillPolicy, Spilled, SpilledShard,
+};
 use crate::mpc::pool::{self, chunk_range};
 use crate::mpc::simulator::{machine_of, ShardRound};
 
-/// One machine's slice of the edge list plus its cached load histogram.
-#[derive(Debug, Clone, PartialEq)]
-pub struct EdgeShard {
-    /// Canonical `(min, max)` edges owned by this shard: sorted, deduped,
-    /// no self-loops, `machine_of(min) == shard index`.
-    edges: Vec<(Vertex, Vertex)>,
-    /// `peer_counts[j]` = edges here whose max endpoint machine is `j`.
-    peer_counts: Vec<u64>,
+/// The two [`ShardStore`] backends, dispatched statically.
+#[derive(Debug, Clone)]
+enum Store {
+    Resident(Resident),
+    Spilled(Spilled),
 }
 
-impl EdgeShard {
-    pub fn edges(&self) -> &[(Vertex, Vertex)] {
-        &self.edges
-    }
-
-    pub fn len(&self) -> usize {
-        self.edges.len()
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.edges.is_empty()
-    }
-
-    /// Per-machine ownership histogram of this shard's right endpoints.
-    pub fn peer_counts(&self) -> &[u64] {
-        &self.peer_counts
+impl Store {
+    fn as_store(&self) -> &dyn ShardStore {
+        match self {
+            Store::Resident(r) => r,
+            Store::Spilled(s) => s,
+        }
     }
 }
 
 /// An undirected graph resident as `machines` edge shards (see module docs
-/// for the ownership invariant).
-#[derive(Debug, Clone, PartialEq)]
+/// for the ownership and residency invariants).
+#[derive(Debug, Clone)]
 pub struct ShardedGraph {
     n: usize,
-    shards: Vec<EdgeShard>,
+    store: Store,
     /// `vertex_counts[j]` = vertices of `0..n` owned by machine `j`.
     vertex_counts: Vec<u64>,
+    /// Residency policy inherited by every derived generation.
+    policy: SpillPolicy,
+}
+
+/// Content equality across backends: same vertex universe, shard count,
+/// per-shard statistics, and per-shard edges.  The policy and backend are
+/// *not* part of the identity.  For spilled shards, inequality is decided
+/// from the RAM-cached payload checksums without touching disk (a
+/// checksum over the canonical payload differs ⇒ the edges differ);
+/// payloads are loaded and compared only when the checksums agree, so a
+/// convergence check like Two-Phase's `next == cur` pays disk I/O only on
+/// the round that actually converged.
+impl PartialEq for ShardedGraph {
+    fn eq(&self, other: &ShardedGraph) -> bool {
+        if self.n != other.n
+            || self.num_shards() != other.num_shards()
+            || self.vertex_counts != other.vertex_counts
+        {
+            return false;
+        }
+        for s in 0..self.num_shards() {
+            if self.store.as_store().stats(s) != other.store.as_store().stats(s) {
+                return false;
+            }
+            if let (Some(a), Some(b)) = (self.shard_checksum(s), other.shard_checksum(s)) {
+                if a != b {
+                    return false; // sound negative: no disk read needed
+                }
+            }
+            if *self.shard_data(s) != *other.shard_data(s) {
+                return false;
+            }
+        }
+        true
+    }
 }
 
 /// `machine_of` histogram of the vertex ids `0..n` (self-message loads),
@@ -111,6 +150,64 @@ fn vertex_counts(n: usize, p: usize) -> Vec<u64> {
     h
 }
 
+/// Load every shard of a spilled store back into RAM, pool-parallel,
+/// reusing the RAM-cached stats (a pure read: no re-hash).  The inverse
+/// of [`spill_finished`], shared by the un-spill paths.
+fn unspill_all(sp: &Spilled) -> Result<Vec<EdgeShard>, SpillError> {
+    let p = sp.num_shards();
+    let t = pool::global().threads().clamp(1, p);
+    let jobs: Vec<_> = (0..t)
+        .map(|i| {
+            let (a, b) = chunk_range(p, t, i);
+            move || -> Result<Vec<EdgeShard>, SpillError> {
+                (a..b)
+                    .map(|s| {
+                        Ok(EdgeShard::with_stats(
+                            sp.read(s)?.into_vec(),
+                            sp.shard_metas()[s].stats.clone(),
+                            p,
+                            s,
+                        ))
+                    })
+                    .collect()
+            }
+        })
+        .collect();
+    let mut shards = Vec::with_capacity(p);
+    for part in pool::global().run_jobs(jobs) {
+        shards.extend(part?);
+    }
+    Ok(shards)
+}
+
+/// Spill finalized shards to a fresh generation directory, shard-parallel.
+fn spill_finished(
+    shards: Vec<EdgeShard>,
+    policy: &SpillPolicy,
+) -> Result<Store, SpillError> {
+    let p = shards.len();
+    let dir = Arc::new(SpillDir::create_temp(policy.root.as_deref())?);
+    let t = pool::global().threads().clamp(1, p);
+    let mut it = shards.into_iter().enumerate();
+    let mut jobs = Vec::with_capacity(t);
+    for i in 0..t {
+        let (a, b) = chunk_range(p, t, i);
+        let group: Vec<(usize, EdgeShard)> = it.by_ref().take(b - a).collect();
+        let dir = Arc::clone(&dir);
+        jobs.push(move || -> Result<Vec<SpilledShard>, SpillError> {
+            group
+                .into_iter()
+                .map(|(s, shard)| spill::spill_shard(&dir, s, p, &shard))
+                .collect()
+        });
+    }
+    let mut metas = Vec::with_capacity(p);
+    for part in pool::global().run_jobs(jobs) {
+        metas.extend(part?);
+    }
+    Ok(Store::Spilled(Spilled::from_parts(dir, metas)))
+}
+
 /// Finalize per-shard buckets into a canonical [`ShardedGraph`]:
 /// canonicalize each edge to `(min, max)`, drop self-loops, sort + dedup
 /// within the shard (equal edges always share a shard, so per-shard dedup
@@ -119,12 +216,14 @@ fn vertex_counts(n: usize, p: usize) -> Vec<u64> {
 /// it owns (`machine_of(min endpoint) == s`; enforced in debug builds).
 /// `cached_vertex_counts` may carry the histogram of a previous graph
 /// over the **same** `(n, p)` — it is a pure function of those two, so
-/// per-round rebuilds skip the O(n) re-hash.
+/// per-round rebuilds skip the O(n) re-hash.  When the finalized edge set
+/// exceeds the policy budget, the shards are written out and dropped.
 fn finish_shards(
     n: usize,
     buckets: Vec<Vec<(Vertex, Vertex)>>,
     cached_vertex_counts: Option<Vec<u64>>,
-) -> ShardedGraph {
+    policy: &SpillPolicy,
+) -> Result<ShardedGraph, SpillError> {
     let p = buckets.len();
     let t = pool::global().threads().clamp(1, p);
     let mut it = buckets.into_iter().enumerate();
@@ -144,17 +243,7 @@ fn finish_shards(
                     edges.retain(|e| e.0 != e.1);
                     edges.sort_unstable();
                     edges.dedup();
-                    let mut peer_counts = vec![0u64; p];
-                    for &(u, v) in &edges {
-                        debug_assert_eq!(
-                            machine_of(u as u64, p),
-                            s,
-                            "edge ({u},{v}) stored on the wrong shard"
-                        );
-                        peer_counts[machine_of(v as u64, p)] += 1;
-                    }
-                    let _ = s;
-                    EdgeShard { edges, peer_counts }
+                    EdgeShard::new_canonical(edges, p, s)
                 })
                 .collect::<Vec<EdgeShard>>()
         });
@@ -164,6 +253,12 @@ fn finish_shards(
         .into_iter()
         .flatten()
         .collect();
+    let total_bytes: u64 = shards.iter().map(|s| s.len() as u64 * spill::EDGE_BYTES).sum();
+    let store = if policy.should_spill(total_bytes) {
+        spill_finished(shards, policy)?
+    } else {
+        Store::Resident(Resident::new(shards))
+    };
     let vertex_counts = match cached_vertex_counts {
         Some(counts) => {
             debug_assert_eq!(counts.len(), p);
@@ -172,10 +267,33 @@ fn finish_shards(
         }
         None => vertex_counts(n, p),
     };
-    ShardedGraph {
+    Ok(ShardedGraph {
         n,
-        shards,
+        store,
         vertex_counts,
+        policy: policy.clone(),
+    })
+}
+
+/// A lazily-loaded per-shard message chunk (see
+/// [`ShardedGraph::msg_chunks`]): the shard is read — for spilled
+/// backends, loaded from disk — on the worker that *iterates* the chunk,
+/// so a round holds at most one shard per pool thread in RAM.
+pub struct ShardMsgChunk<'g, M> {
+    g: &'g ShardedGraph,
+    s: usize,
+    make: M,
+}
+
+impl<'g, M, I> IntoIterator for ShardMsgChunk<'g, M>
+where
+    M: FnOnce(usize, ShardDataIter<'g>) -> I,
+    I: Iterator,
+{
+    type Item = I::Item;
+    type IntoIter = I;
+    fn into_iter(self) -> I {
+        (self.make)(self.s, self.g.shard_data(self.s).into_iter())
     }
 }
 
@@ -186,35 +304,52 @@ impl ShardedGraph {
         let p = p.max(1);
         ShardedGraph {
             n,
-            shards: (0..p)
-                .map(|_| EdgeShard {
-                    edges: Vec::new(),
-                    peer_counts: vec![0; p],
-                })
-                .collect(),
+            store: Store::Resident(Resident::new(
+                (0..p)
+                    .map(|s| EdgeShard::new_canonical(Vec::new(), p, s))
+                    .collect(),
+            )),
             vertex_counts: vertex_counts(n, p),
+            policy: SpillPolicy::unbounded(),
         }
     }
 
     /// Build from raw edges: bucket each edge to its owner shard
     /// (`machine_of(min endpoint)`) in parallel chunks, then normalize
     /// shard-locally (canonical order, per-shard sort + dedup, no loops) —
-    /// no global sort anywhere.
+    /// no global sort anywhere.  Unbounded residency; see
+    /// [`from_edges_with`](Self::from_edges_with) for a budgeted build.
     pub fn from_edges(n: usize, p: usize, edges: Vec<(Vertex, Vertex)>) -> Self {
-        Self::from_edges_cached(n, p, edges, None)
+        Self::from_edges_with(n, p, edges, SpillPolicy::unbounded())
+    }
+
+    /// [`from_edges`](Self::from_edges) under a residency policy: the
+    /// built graph (and every generation derived from it) spills to disk
+    /// whenever its edge set exceeds the policy budget.
+    pub fn from_edges_with(
+        n: usize,
+        p: usize,
+        edges: Vec<(Vertex, Vertex)>,
+        policy: SpillPolicy,
+    ) -> Self {
+        Self::from_edges_cached(n, p, edges, None, policy)
+            .unwrap_or_else(|e| panic!("shard spill failed during ingest: {e}"))
     }
 
     /// [`from_edges`](Self::from_edges) over the **same vertex universe
     /// and shard count** as `self`, reusing its cached vertex ownership
-    /// histogram — the per-round rebuild path (Cracker's rewire,
-    /// Two-Phase's star rounds) skips n `machine_of` hashes each round.
+    /// histogram and residency policy — the per-round rebuild path
+    /// (Cracker's rewire, Two-Phase's star rounds) skips n `machine_of`
+    /// hashes each round.
     pub fn from_edges_like(&self, edges: Vec<(Vertex, Vertex)>) -> Self {
         Self::from_edges_cached(
             self.n,
-            self.shards.len(),
+            self.num_shards(),
             edges,
             Some(self.vertex_counts.clone()),
+            self.policy.clone(),
         )
+        .unwrap_or_else(|e| panic!("shard spill failed during rebuild: {e}"))
     }
 
     fn from_edges_cached(
@@ -222,7 +357,8 @@ impl ShardedGraph {
         p: usize,
         edges: Vec<(Vertex, Vertex)>,
         cached_vertex_counts: Option<Vec<u64>>,
-    ) -> Self {
+        policy: SpillPolicy,
+    ) -> Result<Self, SpillError> {
         assert!(n <= u32::MAX as usize, "vertex ids are u32");
         let p = p.max(1);
         let len = edges.len();
@@ -256,12 +392,17 @@ impl ShardedGraph {
                 dst.extend(src);
             }
         }
-        finish_shards(n, buckets, cached_vertex_counts)
+        finish_shards(n, buckets, cached_vertex_counts, &policy)
     }
 
     /// Shard a flat (already normalized) [`Graph`] — the ingest step.
     pub fn from_graph(g: &Graph, p: usize) -> Self {
-        Self::from_edges(g.num_vertices(), p, g.edges().to_vec())
+        Self::from_graph_with(g, p, SpillPolicy::unbounded())
+    }
+
+    /// [`from_graph`](Self::from_graph) under a residency policy.
+    pub fn from_graph_with(g: &Graph, p: usize, policy: SpillPolicy) -> Self {
+        Self::from_edges_with(g.num_vertices(), p, g.edges().to_vec(), policy)
     }
 
     /// Assemble from per-shard buckets produced by shard-aligned workers
@@ -269,9 +410,22 @@ impl ShardedGraph {
     /// `machine_of(min endpoint) == s`).  Each bucket is normalized in
     /// place into its shard — no flat concatenation, no resharding.
     pub fn from_shard_buckets(n: usize, buckets: Vec<Vec<(Vertex, Vertex)>>) -> Self {
+        Self::from_shard_buckets_with(n, buckets, SpillPolicy::unbounded())
+    }
+
+    /// [`from_shard_buckets`](Self::from_shard_buckets) under a residency
+    /// policy: over budget, each finalized bucket is written to its own
+    /// shard file and dropped (the buckets themselves arrive in RAM from
+    /// the workers; it is derived generations that stream).
+    pub fn from_shard_buckets_with(
+        n: usize,
+        buckets: Vec<Vec<(Vertex, Vertex)>>,
+        policy: SpillPolicy,
+    ) -> Self {
         assert!(!buckets.is_empty(), "need at least one shard");
         assert!(n <= u32::MAX as usize, "vertex ids are u32");
-        finish_shards(n, buckets, None)
+        finish_shards(n, buckets, None, &policy)
+            .unwrap_or_else(|e| panic!("shard spill failed during bucket assembly: {e}"))
     }
 
     pub fn num_vertices(&self) -> usize {
@@ -279,20 +433,92 @@ impl ShardedGraph {
     }
 
     pub fn num_shards(&self) -> usize {
-        self.shards.len()
+        self.store.as_store().num_shards()
     }
 
     pub fn num_edges(&self) -> usize {
-        self.shards.iter().map(|s| s.edges.len()).sum()
+        (0..self.num_shards())
+            .map(|s| self.store.as_store().stats(s).len as usize)
+            .sum()
     }
 
-    pub fn shards(&self) -> &[EdgeShard] {
-        &self.shards
+    /// Resident bytes the edge set would cost ([`spill::EDGE_BYTES`] per
+    /// edge) — the quantity the policy budget bounds.
+    pub fn edge_bytes(&self) -> u64 {
+        self.num_edges() as u64 * spill::EDGE_BYTES
+    }
+
+    /// Is the edge data currently on disk?
+    pub fn is_spilled(&self) -> bool {
+        self.store.as_store().is_spilled()
+    }
+
+    /// The spill directory of a spilled graph (`None` when resident).
+    pub fn spill_dir(&self) -> Option<&Path> {
+        match &self.store {
+            Store::Resident(_) => None,
+            Store::Spilled(s) => Some(s.dir()),
+        }
+    }
+
+    /// RAM-cached payload checksum of shard `s` (`None` when resident —
+    /// resident comparisons are already in-memory).
+    fn shard_checksum(&self, s: usize) -> Option<u64> {
+        match &self.store {
+            Store::Resident(_) => None,
+            Store::Spilled(sp) => Some(sp.shard_metas()[s].checksum),
+        }
+    }
+
+    /// The graph's residency policy.
+    pub fn policy(&self) -> &SpillPolicy {
+        &self.policy
+    }
+
+    /// Cached statistics of shard `s` (never touches disk).
+    pub fn shard_stats(&self, s: usize) -> &ShardStats {
+        self.store.as_store().stats(s)
+    }
+
+    /// The edges of shard `s`: borrowed when resident, loaded + validated
+    /// from the shard file when spilled.  On-disk faults (truncation,
+    /// corruption, a spill directory deleted mid-run) surface as typed
+    /// [`SpillError`]s.
+    pub fn read_shard(&self, s: usize) -> Result<ShardData<'_>, SpillError> {
+        self.store.as_store().read(s)
+    }
+
+    /// Infallible [`read_shard`](Self::read_shard) for the hot paths that
+    /// cannot propagate errors (round message chunks, degree
+    /// accumulation).  Fault-tolerant callers use `read_shard` /
+    /// [`try_to_graph`](Self::try_to_graph) instead.
+    pub fn shard_data(&self, s: usize) -> ShardData<'_> {
+        self.read_shard(s)
+            .unwrap_or_else(|e| panic!("shard {s} unreadable: {e}"))
     }
 
     /// All edges, shard-major (shard order, sorted within each shard).
+    /// Spilled shards load lazily, one at a time.
     pub fn iter_edges(&self) -> impl Iterator<Item = (Vertex, Vertex)> + '_ {
-        self.shards.iter().flat_map(|s| s.edges.iter().copied())
+        (0..self.num_shards()).flat_map(move |s| self.shard_data(s))
+    }
+
+    /// One lazily-loaded message chunk per shard for the sharded round
+    /// entry points: `make(s, edges)` runs on the worker that consumes
+    /// shard `s` and builds its message iterator, so at most
+    /// `min(threads, machines)` shards are resident during a round.
+    pub fn msg_chunks<'g, M, I>(&'g self, make: M) -> Vec<ShardMsgChunk<'g, M>>
+    where
+        M: Fn(usize, ShardDataIter<'g>) -> I + Clone,
+        I: Iterator,
+    {
+        (0..self.num_shards())
+            .map(|s| ShardMsgChunk {
+                g: self,
+                s,
+                make: make.clone(),
+            })
+            .collect()
     }
 
     /// Per-machine ownership histogram of the vertex id space.
@@ -303,22 +529,163 @@ impl ShardedGraph {
     /// Flatten to the canonical [`Graph`] view (for the oracle, the dense
     /// backend boundary, and tests).  Bit-identical to `Graph::normalize`
     /// of the same edge multiset: shards are canonical and globally
-    /// duplicate-free, so a global sort is all that remains.
-    pub fn to_graph(&self) -> Graph {
+    /// duplicate-free, so a global sort is all that remains.  This is the
+    /// one operation that intentionally materializes the full edge set.
+    pub fn try_to_graph(&self) -> Result<Graph, SpillError> {
         let mut edges: Vec<(Vertex, Vertex)> = Vec::with_capacity(self.num_edges());
-        for s in &self.shards {
-            edges.extend_from_slice(&s.edges);
+        for s in 0..self.num_shards() {
+            edges.extend_from_slice(&self.read_shard(s)?);
         }
         // no dedup needed: equal edges share a shard, and shards are deduped
         crate::util::radix::par_sort_edge_pairs(&mut edges, false);
-        Graph::from_edges_unchecked(self.n, edges)
+        Ok(Graph::from_edges_unchecked(self.n, edges))
+    }
+
+    /// Infallible [`try_to_graph`](Self::try_to_graph).
+    pub fn to_graph(&self) -> Graph {
+        self.try_to_graph()
+            .unwrap_or_else(|e| panic!("cannot flatten sharded graph: {e}"))
+    }
+
+    /// Re-decide residency under a new policy: spills a resident graph
+    /// that exceeds the new budget, loads a spilled one back when it fits.
+    pub fn try_with_policy(mut self, policy: SpillPolicy) -> Result<ShardedGraph, SpillError> {
+        let want_spill = policy.should_spill(self.edge_bytes());
+        let is_spilled = self.is_spilled();
+        self.policy = policy;
+        if !is_spilled && want_spill {
+            let old = std::mem::replace(&mut self.store, Store::Resident(Resident::default()));
+            let Store::Resident(r) = old else { unreachable!() };
+            self.store = spill_finished(r.into_shards(), &self.policy)?;
+        } else if is_spilled && !want_spill {
+            let shards = {
+                let Store::Spilled(sp) = &self.store else { unreachable!() };
+                unspill_all(sp)?
+            };
+            self.store = Store::Resident(Resident::new(shards));
+        }
+        Ok(self)
+    }
+
+    /// Infallible [`try_with_policy`](Self::try_with_policy).
+    pub fn with_policy(self, policy: SpillPolicy) -> ShardedGraph {
+        self.try_with_policy(policy)
+            .unwrap_or_else(|e| panic!("cannot re-back sharded graph: {e}"))
+    }
+
+    /// Persist the shards plus a checksummed manifest into `dir` (created
+    /// if missing) so the graph survives the process: reload with
+    /// [`open_spilled`](Self::open_spilled).  Shard files are written
+    /// pool-parallel (one read-validate-write cycle per shard, chunked
+    /// like every other multi-shard pass); the manifest goes last so a
+    /// crash mid-persist leaves no valid manifest over partial files.
+    pub fn persist_spilled<P: AsRef<Path>>(&self, dir: P) -> Result<(), SpillError> {
+        let dir = dir.as_ref();
+        std::fs::create_dir_all(dir).map_err(|e| SpillError::io(dir, "create dir", e))?;
+        let p = self.num_shards();
+        let t = pool::global().threads().clamp(1, p);
+        let jobs: Vec<_> = (0..t)
+            .map(|i| {
+                let (a, b) = chunk_range(p, t, i);
+                move || -> Result<Vec<spill::ManifestShard>, SpillError> {
+                    (a..b)
+                        .map(|s| {
+                            let data = self.read_shard(s)?;
+                            let path = dir.join(spill::shard_file_name(s));
+                            let checksum =
+                                spill::write_shard_file(&path, s as u32, p as u32, &data)?;
+                            Ok(spill::ManifestShard {
+                                len: data.len() as u64,
+                                checksum,
+                                peer_counts: self.shard_stats(s).peer_counts.clone(),
+                            })
+                        })
+                        .collect()
+                }
+            })
+            .collect();
+        let mut shards = Vec::with_capacity(p);
+        for part in pool::global().run_jobs(jobs) {
+            shards.extend(part?);
+        }
+        spill::write_manifest(
+            &dir.join(spill::MANIFEST_NAME),
+            &spill::Manifest {
+                n: self.n as u64,
+                p: p as u32,
+                shards,
+            },
+        )
+    }
+
+    /// Reload a graph persisted by [`persist_spilled`](Self::persist_spilled)
+    /// as a spilled-backend graph over the user-owned directory (not
+    /// removed on drop).  The manifest and every shard file length are
+    /// validated eagerly; payload checksums verify on each shard read.
+    pub fn open_spilled<P: AsRef<Path>>(
+        dir: P,
+        policy: SpillPolicy,
+    ) -> Result<ShardedGraph, SpillError> {
+        let dir = dir.as_ref();
+        let manifest_path = dir.join(spill::MANIFEST_NAME);
+        let man = spill::read_manifest(&manifest_path)?;
+        let p = man.p as usize;
+        // manifest-supplied dimensions are untrusted: a p of 0 would make
+        // machine_of divide by zero and an oversized n violates the u32
+        // vertex-id bound every constructor asserts — both must be typed
+        // errors, not panics
+        if p == 0 {
+            return Err(SpillError::Corrupt {
+                path: manifest_path,
+                detail: "manifest declares zero shards".into(),
+            });
+        }
+        if man.n > u32::MAX as u64 {
+            return Err(SpillError::Corrupt {
+                path: manifest_path,
+                detail: format!("manifest declares n={} (> u32::MAX vertex ids)", man.n),
+            });
+        }
+        let n = man.n as usize;
+        let mut metas = Vec::with_capacity(p);
+        for (s, ms) in man.shards.iter().enumerate() {
+            let path = dir.join(spill::shard_file_name(s));
+            spill::validate_shard_file_len(&path, ms.len)?;
+            if ms.peer_counts.len() != p {
+                return Err(SpillError::Corrupt {
+                    path,
+                    detail: format!(
+                        "manifest shard {s} has {} peer counts, expected {p}",
+                        ms.peer_counts.len()
+                    ),
+                });
+            }
+            metas.push(SpilledShard {
+                path,
+                stats: ShardStats {
+                    len: ms.len,
+                    peer_counts: ms.peer_counts.clone(),
+                },
+                checksum: ms.checksum,
+            });
+        }
+        Ok(ShardedGraph {
+            n,
+            store: Store::Spilled(Spilled::from_parts(
+                Arc::new(SpillDir::adopt(dir.to_path_buf())),
+                metas,
+            )),
+            vertex_counts: vertex_counts(n, p),
+            policy,
+        })
     }
 
     /// Per-vertex degree via per-worker partial counts merged in fixed
     /// order (normalized-graph semantics, identical to `Graph::degrees`).
+    /// Spilled shards load one per worker at a time.
     pub fn degrees(&self) -> Vec<u32> {
         let n = self.n;
-        let p = self.shards.len();
+        let p = self.num_shards();
         let t = pool::global().threads().clamp(1, p);
         if t <= 1 {
             let mut deg = vec![0u32; n];
@@ -332,11 +699,11 @@ impl ShardedGraph {
             (0..t)
                 .map(|i| {
                     let (a, b) = chunk_range(p, t, i);
-                    let shards = &self.shards[a..b];
                     move || {
                         let mut deg = vec![0u32; n];
-                        for s in shards {
-                            for &(u, v) in &s.edges {
+                        for s in a..b {
+                            let data = self.shard_data(s);
+                            for &(u, v) in data.iter() {
                                 deg[u as usize] += 1;
                                 deg[v as usize] += 1;
                             }
@@ -356,27 +723,54 @@ impl ShardedGraph {
     }
 
     /// Rewrite every edge through `f` and re-bucket the results into their
-    /// new owner shards **in the same pass** (the graph-layer half of the
-    /// contraction rounds).  `f` returns rewritten endpoints or `None` to
-    /// drop the edge; canonicalization, per-shard sort + dedup, and the
-    /// cached histograms are rebuilt by [`finish_shards`].
+    /// new owner shards (the graph-layer half of the contraction rounds).
+    /// `f` returns rewritten endpoints or `None` to drop the edge.
+    ///
+    /// Resident source: one in-RAM pass (rewrite + re-bucket fused), then
+    /// [`finish_shards`] — which spills the *output* if it exceeds the
+    /// budget.  Spilled source: [`rewrite_streamed`](Self::rewrite_streamed)
+    /// — load → rewrite → spill per shard, never materializing the full
+    /// edge set.
     fn rewrite_into<F>(&self, new_n: usize, new_p: usize, f: F) -> ShardedGraph
     where
         F: Fn(Vertex, Vertex) -> Option<(Vertex, Vertex)> + Sync,
     {
-        let p = self.shards.len();
+        self.try_rewrite_into(new_n, new_p, f)
+            .unwrap_or_else(|e| panic!("shard spill failed during rewrite: {e}"))
+    }
+
+    fn try_rewrite_into<F>(
+        &self,
+        new_n: usize,
+        new_p: usize,
+        f: F,
+    ) -> Result<ShardedGraph, SpillError>
+    where
+        F: Fn(Vertex, Vertex) -> Option<(Vertex, Vertex)> + Sync,
+    {
+        // vertex_counts is a pure function of (n, p): reuse the cache when
+        // the rewrite keeps the vertex universe and shard count.
+        let cached = if new_n == self.n && new_p == self.num_shards() {
+            Some(self.vertex_counts.clone())
+        } else {
+            None
+        };
+        if self.is_spilled() {
+            return self.rewrite_streamed(new_n, new_p, f, cached);
+        }
+        let p = self.num_shards();
         let t = pool::global().threads().clamp(1, p);
         let f = &f;
         let parts: Vec<Vec<Vec<(Vertex, Vertex)>>> = pool::global().run_jobs(
             (0..t)
                 .map(|i| {
                     let (a, b) = chunk_range(p, t, i);
-                    let shards = &self.shards[a..b];
                     move || {
                         let mut buckets: Vec<Vec<(Vertex, Vertex)>> =
                             (0..new_p).map(|_| Vec::new()).collect();
-                        for s in shards {
-                            for &(u, v) in &s.edges {
+                        for s in a..b {
+                            let data = self.shard_data(s);
+                            for &(u, v) in data.iter() {
                                 if let Some((x, y)) = f(u, v) {
                                     let (x, y) = if x <= y { (x, y) } else { (y, x) };
                                     if x != y {
@@ -396,14 +790,191 @@ impl ShardedGraph {
                 dst.extend(src);
             }
         }
-        // vertex_counts is a pure function of (n, p): reuse the cache when
-        // the rewrite keeps the vertex universe and shard count.
-        let cached = if new_n == self.n && new_p == self.shards.len() {
-            Some(self.vertex_counts.clone())
-        } else {
-            None
+        finish_shards(new_n, buckets, cached, &self.policy)
+    }
+
+    /// The out-of-core rewrite: workers process source shards one at a
+    /// time (load → rewrite → append), streaming rewritten edges into one
+    /// unframed staging file per destination shard; a second shard-parallel
+    /// pass finalizes each destination (sort + dedup + stats) and writes
+    /// its checksummed shard file — or keeps the result resident if the
+    /// rewritten set now fits the budget.
+    ///
+    /// Each per-destination buffer is sorted + deduped **before** staging,
+    /// so a source shard contributes at most its distinct rewritten edges
+    /// to each destination and a staged bucket is bounded by
+    /// `sources × distinct(dest)` — a heavily-merging contraction (many
+    /// inputs collapsing onto few supernode edges) cannot balloon one
+    /// staging file to O(m) duplicates.  Peak RAM per worker is therefore
+    /// O(largest input shard + largest staged destination), never O(m).
+    /// The output is bit-identical to the resident path because the final
+    /// per-shard sort + dedup canonicalizes away both the staging append
+    /// order and the early dedup.
+    fn rewrite_streamed<F>(
+        &self,
+        new_n: usize,
+        new_p: usize,
+        f: F,
+        cached_vertex_counts: Option<Vec<u64>>,
+    ) -> Result<ShardedGraph, SpillError>
+    where
+        F: Fn(Vertex, Vertex) -> Option<(Vertex, Vertex)> + Sync,
+    {
+        use std::io::BufWriter;
+
+        let p = self.num_shards();
+        let root = self.policy.root.as_deref();
+        let staging = SpillDir::create_temp(root)?;
+        let stage_path = |d: usize| staging.path().join(format!("stage-{d:05}.raw"));
+        let appenders: Vec<Mutex<BufWriter<std::fs::File>>> = (0..new_p)
+            .map(|d| {
+                let path = stage_path(d);
+                std::fs::File::create(&path)
+                    .map(|f| Mutex::new(BufWriter::new(f)))
+                    .map_err(|e| SpillError::io(&path, "create", e))
+            })
+            .collect::<Result<_, _>>()?;
+
+        // phase A: load → rewrite → append, one source shard per worker
+        let t = pool::global().threads().clamp(1, p);
+        let f = &f;
+        let appenders_ref = &appenders;
+        let stage_path = &stage_path;
+        let results: Vec<Result<(), SpillError>> = pool::global().run_jobs(
+            (0..t)
+                .map(|i| {
+                    let (a, b) = chunk_range(p, t, i);
+                    move || -> Result<(), SpillError> {
+                        for s in a..b {
+                            let data = self.read_shard(s)?;
+                            let mut bufs: Vec<Vec<(Vertex, Vertex)>> =
+                                (0..new_p).map(|_| Vec::new()).collect();
+                            for &(u, v) in data.iter() {
+                                if let Some((x, y)) = f(u, v) {
+                                    let (x, y) = if x <= y { (x, y) } else { (y, x) };
+                                    if x != y {
+                                        bufs[machine_of(x as u64, new_p)].push((x, y));
+                                    }
+                                }
+                            }
+                            drop(data);
+                            for (d, mut buf) in bufs.into_iter().enumerate() {
+                                if buf.is_empty() {
+                                    continue;
+                                }
+                                // early dedup: bounds staged duplicates under
+                                // heavy merges (see method docs); harmless to
+                                // the result — phase B sorts + dedups again
+                                buf.sort_unstable();
+                                buf.dedup();
+                                let mut w = appenders_ref[d]
+                                    .lock()
+                                    .expect("staging writer poisoned");
+                                crate::graph::io::write_pairs(&mut *w, &buf)
+                                    .map_err(|e| SpillError::io(&stage_path(d), "append", e))?;
+                            }
+                        }
+                        Ok(())
+                    }
+                })
+                .collect(),
+        );
+        for r in results {
+            r?;
+        }
+
+        // flush the staged buckets (phase B streams them back per shard)
+        let mut staged: Vec<(std::path::PathBuf, u64)> = Vec::with_capacity(new_p);
+        let mut staged_bytes = 0u64;
+        for (d, m) in appenders.into_iter().enumerate() {
+            let path = stage_path(d);
+            let w = m.into_inner().expect("staging writer poisoned");
+            let file = w
+                .into_inner() // flushes
+                .map_err(|e| SpillError::io(&path, "flush", e.into_error()))?;
+            let len = file
+                .metadata()
+                .map_err(|e| SpillError::io(&path, "stat", e))?
+                .len();
+            staged_bytes += len;
+            staged.push((path, len));
+        }
+
+        // phase B: finalize each destination (sort + dedup + stats).  The
+        // residency decision is on *finalized* (post-dedup) bytes — the
+        // same quantity the resident path's finish_shards uses, so both
+        // paths always pick the same backend.  Staged bytes are an upper
+        // bound on finalized bytes, so a staged total already under the
+        // budget proves the result is resident and skips the shard files
+        // entirely (the common shrinking-contraction case); only an
+        // over-budget staging goes through files, with a cheap reload in
+        // the rare between case.
+        let staged_ref = &staged;
+        let finalize = |d: usize| -> Result<EdgeShard, SpillError> {
+            let (path, len) = &staged_ref[d];
+            let mut edges = spill::read_raw_pairs(path, *len)?;
+            edges.sort_unstable();
+            edges.dedup();
+            Ok(EdgeShard::new_canonical(edges, new_p, d))
         };
-        finish_shards(new_n, buckets, cached)
+        let finalize = &finalize;
+        let t2 = pool::global().threads().clamp(1, new_p);
+        let store = if !self.policy.should_spill(staged_bytes) {
+            let jobs: Vec<_> = (0..t2)
+                .map(|i| {
+                    let (a, b) = chunk_range(new_p, t2, i);
+                    move || -> Result<Vec<EdgeShard>, SpillError> {
+                        (a..b).map(finalize).collect()
+                    }
+                })
+                .collect();
+            let mut shards = Vec::with_capacity(new_p);
+            for part in pool::global().run_jobs(jobs) {
+                shards.extend(part?);
+            }
+            Store::Resident(Resident::new(shards))
+        } else {
+            let dir = Arc::new(SpillDir::create_temp(root)?);
+            let jobs: Vec<_> = (0..t2)
+                .map(|i| {
+                    let (a, b) = chunk_range(new_p, t2, i);
+                    let dir = Arc::clone(&dir);
+                    move || -> Result<Vec<SpilledShard>, SpillError> {
+                        (a..b)
+                            .map(|d| spill::spill_shard(&dir, d, new_p, &finalize(d)?))
+                            .collect()
+                    }
+                })
+                .collect();
+            let mut metas = Vec::with_capacity(new_p);
+            for part in pool::global().run_jobs(jobs) {
+                metas.extend(part?);
+            }
+            let final_bytes: u64 = metas
+                .iter()
+                .map(|m| m.stats.len * spill::EDGE_BYTES)
+                .sum();
+            if self.policy.should_spill(final_bytes) {
+                Store::Spilled(Spilled::from_parts(dir, metas))
+            } else {
+                // dedup shrank it under the budget after all: reload with
+                // the stats we just computed (no re-hash)
+                let spilled = Spilled::from_parts(dir, metas);
+                let shards = unspill_all(&spilled)?;
+                Store::Resident(Resident::new(shards))
+                // `spilled` (the last Arc) drops here and removes its files
+            }
+        };
+        drop(staging); // removes the stage files
+
+        let vertex_counts =
+            cached_vertex_counts.unwrap_or_else(|| vertex_counts(new_n, new_p));
+        Ok(ShardedGraph {
+            n: new_n,
+            store,
+            vertex_counts,
+            policy: self.policy.clone(),
+        })
     }
 
     /// Contraction G/r of §2: vertices with equal labels merge; self-loops
@@ -415,7 +986,7 @@ impl ShardedGraph {
         assert_eq!(labels.len(), self.n, "labels len != n");
         let (compact, count) = compact_labels(labels, self.n);
         let compact_ref = &compact;
-        let contracted = self.rewrite_into(count, self.shards.len(), |u, v| {
+        let contracted = self.rewrite_into(count, self.num_shards(), |u, v| {
             Some((compact_ref[u as usize], compact_ref[v as usize]))
         });
         (contracted, compact)
@@ -435,7 +1006,7 @@ impl ShardedGraph {
             }
         }
         let map_ref = &map;
-        let pruned = self.rewrite_into(next as usize, self.shards.len(), |u, v| {
+        let pruned = self.rewrite_into(next as usize, self.num_shards(), |u, v| {
             Some((map_ref[u as usize].unwrap(), map_ref[v as usize].unwrap()))
         });
         (pruned, map)
@@ -447,7 +1018,7 @@ impl ShardedGraph {
     /// flattened into one vector.
     pub fn reshard(&self, p: usize) -> ShardedGraph {
         let p = p.max(1);
-        if p == self.shards.len() {
+        if p == self.num_shards() {
             return self.clone();
         }
         self.rewrite_into(self.n, p, |u, v| Some((u, v)))
@@ -459,14 +1030,15 @@ impl ShardedGraph {
     /// histogram), plus one self message per vertex when `include_self`.
     /// `msg_size` is the full wire size of one message (8-byte key +
     /// value).  A pure function of shard statistics — no `machine_of`
-    /// per message.
+    /// per message, and **no disk access** even when spilled.
     pub fn hop_charge(&self, msg_size: u64, include_self: bool) -> ShardRound {
-        let p = self.shards.len();
+        let p = self.num_shards();
         let m = self.num_edges() as u64;
         let mut machine_bytes = vec![0u64; p];
-        for (s, shard) in self.shards.iter().enumerate() {
-            machine_bytes[s] += msg_size * shard.edges.len() as u64;
-            for (mb, &c) in machine_bytes.iter_mut().zip(&shard.peer_counts) {
+        for s in 0..p {
+            let stats = self.store.as_store().stats(s);
+            machine_bytes[s] += msg_size * stats.len;
+            for (mb, &c) in machine_bytes.iter_mut().zip(&stats.peer_counts) {
                 *mb += msg_size * c;
             }
         }
@@ -487,15 +1059,16 @@ impl ShardedGraph {
     /// Exact accounting of the two contraction rounds of Lemma 3.1
     /// (12-byte messages: 8-byte key + one endpoint).  Round 1 keys every
     /// edge by its left endpoint — the owner shard itself; round 2 by its
-    /// right endpoint — the cached peer histogram.
+    /// right endpoint — the cached peer histogram.  No disk access.
     pub fn contract_charges(&self) -> (ShardRound, ShardRound) {
-        let p = self.shards.len();
+        let p = self.num_shards();
         let m = self.num_edges() as u64;
         let mut left = vec![0u64; p];
         let mut right = vec![0u64; p];
-        for (s, shard) in self.shards.iter().enumerate() {
-            left[s] = 12 * shard.edges.len() as u64;
-            for (r, &c) in right.iter_mut().zip(&shard.peer_counts) {
+        for s in 0..p {
+            let stats = self.store.as_store().stats(s);
+            left[s] = 12 * stats.len;
+            for (r, &c) in right.iter_mut().zip(&stats.peer_counts) {
                 *r += 12 * c;
             }
         }
@@ -526,16 +1099,26 @@ mod tests {
             .collect()
     }
 
+    /// Both backends for the same input: resident, and spilled under a
+    /// zero-byte budget (everything with edges goes to disk).
+    fn both_backends(n: usize, p: usize, raw: Vec<(Vertex, Vertex)>) -> [ShardedGraph; 2] {
+        [
+            ShardedGraph::from_edges(n, p, raw.clone()),
+            ShardedGraph::from_edges_with(n, p, raw, SpillPolicy::budget(0)),
+        ]
+    }
+
     #[test]
     fn from_edges_matches_monolithic_normalize() {
         for p in [1usize, 4, 16] {
             for (n, m, seed) in [(50u64, 300usize, 1u64), (500, 8000, 2), (40, 0, 3)] {
                 let raw = random_raw(n, m, seed);
                 let flat = Graph::from_edges(n as usize, raw.clone());
-                let sharded = ShardedGraph::from_edges(n as usize, p, raw);
-                assert_eq!(sharded.to_graph(), flat, "p={p} n={n} m={m}");
-                assert_eq!(sharded.num_edges(), flat.num_edges());
-                assert_eq!(sharded.num_shards(), p);
+                for g in both_backends(n as usize, p, raw) {
+                    assert_eq!(g.to_graph(), flat, "p={p} n={n} m={m}");
+                    assert_eq!(g.num_edges(), flat.num_edges());
+                    assert_eq!(g.num_shards(), p);
+                }
             }
         }
     }
@@ -543,23 +1126,25 @@ mod tests {
     #[test]
     fn shard_ownership_invariant_holds() {
         let raw = random_raw(200, 3000, 7);
-        let g = ShardedGraph::from_edges(200, 8, raw);
-        for (s, shard) in g.shards().iter().enumerate() {
-            let mut prev: Option<(Vertex, Vertex)> = None;
-            let mut peers = vec![0u64; 8];
-            for &(u, v) in shard.edges() {
-                assert!(u < v, "non-canonical ({u},{v})");
-                assert_eq!(machine_of(u as u64, 8), s, "wrong owner for ({u},{v})");
-                peers[machine_of(v as u64, 8)] += 1;
-                if let Some(pv) = prev {
-                    assert!(pv < (u, v), "not sorted/deduped");
+        for g in both_backends(200, 8, raw) {
+            for s in 0..g.num_shards() {
+                let data = g.read_shard(s).unwrap();
+                let mut prev: Option<(Vertex, Vertex)> = None;
+                let mut peers = vec![0u64; 8];
+                for &(u, v) in data.iter() {
+                    assert!(u < v, "non-canonical ({u},{v})");
+                    assert_eq!(machine_of(u as u64, 8), s, "wrong owner for ({u},{v})");
+                    peers[machine_of(v as u64, 8)] += 1;
+                    if let Some(pv) = prev {
+                        assert!(pv < (u, v), "not sorted/deduped");
+                    }
+                    prev = Some((u, v));
                 }
-                prev = Some((u, v));
+                assert_eq!(peers, g.shard_stats(s).peer_counts, "peer histogram stale");
             }
-            assert_eq!(peers, shard.peer_counts(), "peer histogram stale");
+            let total: u64 = g.vertex_counts().iter().sum();
+            assert_eq!(total, 200);
         }
-        let total: u64 = g.vertex_counts().iter().sum();
-        assert_eq!(total, 200);
     }
 
     #[test]
@@ -567,12 +1152,13 @@ mod tests {
         for p in [1usize, 4, 16] {
             let raw = random_raw(120, 900, 11);
             let flat = Graph::from_edges(120, raw.clone());
-            let sharded = ShardedGraph::from_edges(120, p, raw);
             let labels: Vec<Vertex> = (0..120u32).map(|v| v % 37).collect();
             let (cf, mf) = flat.contract(&labels);
-            let (cs, ms) = sharded.contract(&labels);
-            assert_eq!(ms, mf, "p={p}: compaction maps differ");
-            assert_eq!(cs.to_graph(), cf, "p={p}: contracted graphs differ");
+            for sharded in both_backends(120, p, raw.clone()) {
+                let (cs, ms) = sharded.contract(&labels);
+                assert_eq!(ms, mf, "p={p}: compaction maps differ");
+                assert_eq!(cs.to_graph(), cf, "p={p}: contracted graphs differ");
+            }
         }
     }
 
@@ -593,12 +1179,13 @@ mod tests {
         for p in [1usize, 4, 16] {
             let raw = random_raw(80, 120, 21);
             let flat = Graph::from_edges(80, raw.clone());
-            let sharded = ShardedGraph::from_edges(80, p, raw);
-            assert_eq!(sharded.degrees(), flat.degrees(), "p={p}");
             let (pf, mapf) = flat.prune_isolated();
-            let (ps, maps) = sharded.prune_isolated();
-            assert_eq!(maps, mapf, "p={p}");
-            assert_eq!(ps.to_graph(), pf, "p={p}");
+            for sharded in both_backends(80, p, raw.clone()) {
+                assert_eq!(sharded.degrees(), flat.degrees(), "p={p}");
+                let (ps, maps) = sharded.prune_isolated();
+                assert_eq!(maps, mapf, "p={p}");
+                assert_eq!(ps.to_graph(), pf, "p={p}");
+            }
         }
     }
 
@@ -606,26 +1193,27 @@ mod tests {
     fn hop_charge_matches_per_message_accounting() {
         for p in [1usize, 4, 16] {
             let raw = random_raw(150, 2000, 31);
-            let g = ShardedGraph::from_edges(150, p, raw);
-            for (msg_size, include_self) in [(12u64, true), (12, false), (16, true)] {
-                let charge = g.hop_charge(msg_size, include_self);
-                // brute force over the actual message multiset
-                let mut mb = vec![0u64; p];
-                let mut msgs = 0u64;
-                for (u, v) in g.iter_edges() {
-                    mb[machine_of(u as u64, p)] += msg_size;
-                    mb[machine_of(v as u64, p)] += msg_size;
-                    msgs += 2;
-                }
-                if include_self {
-                    for v in 0..g.num_vertices() {
+            for g in both_backends(150, p, raw.clone()) {
+                for (msg_size, include_self) in [(12u64, true), (12, false), (16, true)] {
+                    let charge = g.hop_charge(msg_size, include_self);
+                    // brute force over the actual message multiset
+                    let mut mb = vec![0u64; p];
+                    let mut msgs = 0u64;
+                    for (u, v) in g.iter_edges() {
+                        mb[machine_of(u as u64, p)] += msg_size;
                         mb[machine_of(v as u64, p)] += msg_size;
+                        msgs += 2;
                     }
-                    msgs += g.num_vertices() as u64;
+                    if include_self {
+                        for v in 0..g.num_vertices() {
+                            mb[machine_of(v as u64, p)] += msg_size;
+                        }
+                        msgs += g.num_vertices() as u64;
+                    }
+                    assert_eq!(charge.messages, msgs, "p={p}");
+                    assert_eq!(charge.bytes, msgs * msg_size, "p={p}");
+                    assert_eq!(charge.machine_bytes, mb, "p={p} self={include_self}");
                 }
-                assert_eq!(charge.messages, msgs, "p={p}");
-                assert_eq!(charge.bytes, msgs * msg_size, "p={p}");
-                assert_eq!(charge.machine_bytes, mb, "p={p} self={include_self}");
             }
         }
     }
@@ -634,19 +1222,20 @@ mod tests {
     fn contract_charges_match_per_message_accounting() {
         for p in [1usize, 4, 16] {
             let raw = random_raw(100, 1500, 41);
-            let g = ShardedGraph::from_edges(100, p, raw);
-            let (left, right) = g.contract_charges();
-            let mut mb_left = vec![0u64; p];
-            let mut mb_right = vec![0u64; p];
-            for (u, v) in g.iter_edges() {
-                mb_left[machine_of(u as u64, p)] += 12;
-                mb_right[machine_of(v as u64, p)] += 12;
+            for g in both_backends(100, p, raw.clone()) {
+                let (left, right) = g.contract_charges();
+                let mut mb_left = vec![0u64; p];
+                let mut mb_right = vec![0u64; p];
+                for (u, v) in g.iter_edges() {
+                    mb_left[machine_of(u as u64, p)] += 12;
+                    mb_right[machine_of(v as u64, p)] += 12;
+                }
+                let m = g.num_edges() as u64;
+                assert_eq!((left.messages, left.bytes), (m, 12 * m));
+                assert_eq!((right.messages, right.bytes), (m, 12 * m));
+                assert_eq!(left.machine_bytes, mb_left, "p={p}");
+                assert_eq!(right.machine_bytes, mb_right, "p={p}");
             }
-            let m = g.num_edges() as u64;
-            assert_eq!((left.messages, left.bytes), (m, 12 * m));
-            assert_eq!((right.messages, right.bytes), (m, 12 * m));
-            assert_eq!(left.machine_bytes, mb_left, "p={p}");
-            assert_eq!(right.machine_bytes, mb_right, "p={p}");
         }
     }
 
@@ -662,13 +1251,14 @@ mod tests {
     #[test]
     fn reshard_preserves_the_graph() {
         let raw = random_raw(90, 700, 51);
-        let g4 = ShardedGraph::from_edges(90, 4, raw.clone());
-        let g16 = g4.reshard(16);
-        let g1 = g16.reshard(1);
-        assert_eq!(g16.num_shards(), 16);
-        assert_eq!(g16.to_graph(), g4.to_graph());
-        assert_eq!(g1.to_graph(), g4.to_graph());
-        assert_eq!(g4.reshard(4), g4); // same count: clone
+        for g4 in both_backends(90, 4, raw.clone()) {
+            let g16 = g4.reshard(16);
+            let g1 = g16.reshard(1);
+            assert_eq!(g16.num_shards(), 16);
+            assert_eq!(g16.to_graph(), g4.to_graph());
+            assert_eq!(g1.to_graph(), g4.to_graph());
+            assert_eq!(g4.reshard(4), g4); // same count: clone
+        }
     }
 
     #[test]
@@ -683,9 +1273,13 @@ mod tests {
                 buckets[machine_of(u.min(v) as u64, p)].push((u, v));
             }
         }
-        let g = ShardedGraph::from_shard_buckets(60, buckets);
         let flat = Graph::from_edges(60, raw);
+        let g = ShardedGraph::from_shard_buckets(60, buckets.clone());
         assert_eq!(g.to_graph(), flat);
+        let spilled =
+            ShardedGraph::from_shard_buckets_with(60, buckets, SpillPolicy::budget(0));
+        assert!(spilled.is_spilled());
+        assert_eq!(spilled.to_graph(), flat);
     }
 
     #[test]
@@ -699,6 +1293,78 @@ mod tests {
         let g1 = ShardedGraph::from_edges(3, 1, vec![(0, 1), (1, 0), (2, 2)]);
         assert_eq!(g1.num_shards(), 1);
         assert_eq!(g1.to_graph().edges(), &[(0, 1)]);
+    }
+
+    #[test]
+    fn spilled_backend_is_chosen_by_budget() {
+        let raw = random_raw(100, 800, 81);
+        let resident = ShardedGraph::from_edges_with(
+            100,
+            4,
+            raw.clone(),
+            SpillPolicy::budget(u64::MAX),
+        );
+        assert!(!resident.is_spilled());
+        let spilled = ShardedGraph::from_edges_with(100, 4, raw, SpillPolicy::budget(16));
+        assert!(spilled.is_spilled());
+        assert!(spilled.spill_dir().unwrap().exists());
+        assert_eq!(resident, spilled, "content equality across backends");
+    }
+
+    #[test]
+    fn spilled_contraction_unspills_when_it_fits() {
+        // budget below the input but above the contracted output: the
+        // rewrite's load → rewrite → spill loop lands back in RAM
+        let raw = random_raw(200, 3000, 91);
+        let g = ShardedGraph::from_edges_with(200, 4, raw, SpillPolicy::budget(64));
+        assert!(g.is_spilled());
+        let labels: Vec<Vertex> = vec![0; 200]; // everything merges
+        let (c, _) = g.contract(&labels);
+        assert_eq!(c.num_edges(), 0);
+        assert!(!c.is_spilled(), "empty contraction should fit any budget");
+    }
+
+    #[test]
+    fn with_policy_roundtrips_backends() {
+        let raw = random_raw(90, 600, 101);
+        let g = ShardedGraph::from_edges(90, 4, raw);
+        let flat = g.to_graph();
+        let spilled = g.clone().with_policy(SpillPolicy::budget(8));
+        assert!(spilled.is_spilled());
+        assert_eq!(spilled.to_graph(), flat);
+        let back = spilled.with_policy(SpillPolicy::unbounded());
+        assert!(!back.is_spilled());
+        assert_eq!(back, g);
+    }
+
+    #[test]
+    fn spill_files_are_cleaned_up_on_drop() {
+        let raw = random_raw(80, 500, 111);
+        let g = ShardedGraph::from_edges_with(80, 4, raw, SpillPolicy::budget(0));
+        let dir = g.spill_dir().unwrap().to_path_buf();
+        assert!(dir.exists());
+        let clone = g.clone();
+        drop(g);
+        assert!(dir.exists(), "clone still shares the generation dir");
+        drop(clone);
+        assert!(!dir.exists(), "last drop removes the spill generation");
+    }
+
+    #[test]
+    fn persist_and_reload_roundtrip() {
+        let raw = random_raw(120, 900, 121);
+        let g = ShardedGraph::from_edges_with(120, 4, raw, SpillPolicy::budget(0));
+        let dir = std::env::temp_dir().join(format!(
+            "lcc-sharded-persist-{}",
+            std::process::id()
+        ));
+        g.persist_spilled(&dir).unwrap();
+        let h = ShardedGraph::open_spilled(&dir, SpillPolicy::budget(0)).unwrap();
+        assert_eq!(h, g);
+        assert_eq!(h.to_graph(), g.to_graph());
+        drop(h);
+        assert!(dir.exists(), "user-owned dir survives the graph");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

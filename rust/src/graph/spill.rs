@@ -1,0 +1,1008 @@
+//! Out-of-core shard residency: disk-backed [`EdgeShard`] storage behind
+//! the [`ShardStore`] abstraction.
+//!
+//! The paper's claim is scale: contractions over graphs whose edge sets
+//! exceed one machine's RAM.  PR 2 made [`EdgeShard`] the unit of
+//! residency; this module makes residency optional.  A
+//! [`crate::graph::ShardedGraph`] stores its shards through one of two
+//! [`ShardStore`] backends:
+//!
+//! * [`Resident`] — all shards in RAM (the PR 2 behavior, still the fast
+//!   path when the graph fits the budget);
+//! * [`Spilled`] — each shard streamed from its own checksummed binary
+//!   file; only the cached [`ShardStats`] (edge count + `peer_counts`
+//!   ownership histogram) stay in RAM.
+//!
+//! **Residency invariant.**  For a spilled graph, RAM holds only
+//! per-shard statistics (`O(machines²)` words), the vertex-space arrays
+//! (`O(n)`), and — during an operation — per worker thread, at most one
+//! loaded shard (reads) or one staged destination bucket (rewrites;
+//! bounded by `sources × distinct(dest)` via early dedup — see
+//! `ShardedGraph::rewrite_streamed`).  The full edge set is never
+//! materialized: mutating operations run load → rewrite → spill shard by
+//! shard, and the round accounting needs no edges at all because the
+//! per-machine charges are pure functions of the cached stats
+//! ([`crate::graph::ShardedGraph::hop_charge`]).
+//!
+//! The budget governs the *graph representation*.  The contraction-loop
+//! algorithms (`lc`, `lc-mtl`, `tc`, `tc-dht`, `hash-min`) stream their
+//! rounds and stay within it; the cluster-growing baselines (`cracker`'s
+//! rewire output, `two-phase`'s star messages, `htm`'s cluster state)
+//! additionally materialize O(m) round state by their own semantics —
+//! they run correctly over spilled shards but are not bounded by the
+//! budget.
+//!
+//! **File framing** (shared little-endian pair payload with
+//! [`super::io`]): `LCCSHRD1 | shard u32 | num_shards u32 | m u64 |
+//! fnv1a64(payload) u64 | m × (u32, u32)`.  Readers validate the header's
+//! edge count against the actual file length *before* allocating, then
+//! verify the payload checksum — truncation, corruption, and vanished
+//! files surface as typed [`SpillError`]s, never as silently-wrong edges.
+
+use std::fmt;
+use std::fs::{self, File};
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::edgelist::Vertex;
+use super::io::{read_pairs, write_pairs, PAIR_BYTES};
+use crate::mpc::simulator::machine_of;
+
+/// Magic of one spilled shard file.
+pub const SHARD_MAGIC: &[u8; 8] = b"LCCSHRD1";
+/// Magic of a persisted spill manifest.
+pub const MANIFEST_MAGIC: &[u8; 8] = b"LCCSPILL";
+/// File name of the manifest inside a persisted spill directory.
+pub const MANIFEST_NAME: &str = "manifest.lcm";
+/// Bytes of RAM one resident edge costs (the budget unit).
+pub const EDGE_BYTES: u64 = PAIR_BYTES;
+
+/// magic + shard + num_shards + m + checksum.
+const SHARD_HEADER_BYTES: u64 = 8 + 4 + 4 + 8 + 8;
+
+/// File name of shard `s` inside a spill directory.
+pub fn shard_file_name(s: usize) -> String {
+    format!("shard-{s:05}.lcs")
+}
+
+// ---------------------------------------------------------------------------
+// errors
+
+/// Typed failures of the spill layer.  Every on-disk fault mode the store
+/// can hit has its own variant so callers (and the fault-injection tests)
+/// can distinguish them; none of them panic.
+#[derive(Debug)]
+pub enum SpillError {
+    /// Underlying filesystem failure (including a spill directory deleted
+    /// mid-run).
+    Io {
+        path: PathBuf,
+        op: &'static str,
+        source: std::io::Error,
+    },
+    /// The file does not start with the expected magic.
+    BadMagic { path: PathBuf },
+    /// The header's edge count disagrees with the actual file length.
+    Truncated {
+        path: PathBuf,
+        expected_bytes: u64,
+        actual_bytes: u64,
+    },
+    /// The payload does not hash to the header checksum.
+    ChecksumMismatch {
+        path: PathBuf,
+        expected: u64,
+        actual: u64,
+    },
+    /// Structurally valid file whose metadata disagrees with the store
+    /// (wrong shard index, wrong shard count, stale manifest, ...).
+    Corrupt { path: PathBuf, detail: String },
+}
+
+impl SpillError {
+    pub(crate) fn io(path: &Path, op: &'static str, source: std::io::Error) -> SpillError {
+        SpillError::Io {
+            path: path.to_path_buf(),
+            op,
+            source,
+        }
+    }
+
+    /// The file the error is about.
+    pub fn path(&self) -> &Path {
+        match self {
+            SpillError::Io { path, .. }
+            | SpillError::BadMagic { path }
+            | SpillError::Truncated { path, .. }
+            | SpillError::ChecksumMismatch { path, .. }
+            | SpillError::Corrupt { path, .. } => path,
+        }
+    }
+}
+
+impl fmt::Display for SpillError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SpillError::Io { path, op, source } => {
+                write!(f, "spill I/O: {op} {}: {source}", path.display())
+            }
+            SpillError::BadMagic { path } => {
+                write!(f, "{}: not a spill file (bad magic)", path.display())
+            }
+            SpillError::Truncated {
+                path,
+                expected_bytes,
+                actual_bytes,
+            } => write!(
+                f,
+                "{}: header claims {expected_bytes} bytes but the file is \
+                 {actual_bytes} — truncated or corrupt",
+                path.display()
+            ),
+            SpillError::ChecksumMismatch {
+                path,
+                expected,
+                actual,
+            } => write!(
+                f,
+                "{}: payload checksum {actual:#018x} != header {expected:#018x}",
+                path.display()
+            ),
+            SpillError::Corrupt { path, detail } => {
+                write!(f, "{}: {detail}", path.display())
+            }
+        }
+    }
+}
+
+impl std::error::Error for SpillError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            SpillError::Io { source, .. } => Some(source),
+            _ => None,
+        }
+    }
+}
+
+/// Streaming FNV-1a 64 — the one hash behind every checksum in this
+/// module (shard payloads and manifest bodies share constants and
+/// therefore on-disk compatibility).
+#[derive(Debug, Clone, Copy)]
+pub struct Fnv1a(u64);
+
+impl Fnv1a {
+    pub fn new() -> Fnv1a {
+        Fnv1a(0xcbf2_9ce4_8422_2325)
+    }
+
+    pub fn update(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+
+    pub fn finish(self) -> u64 {
+        self.0
+    }
+}
+
+impl Default for Fnv1a {
+    fn default() -> Fnv1a {
+        Fnv1a::new()
+    }
+}
+
+/// [`Fnv1a`] over the little-endian pair encoding of `edges` — the
+/// payload checksum of the shard framing.
+pub fn checksum_edges(edges: &[(Vertex, Vertex)]) -> u64 {
+    let mut h = Fnv1a::new();
+    for &(u, v) in edges {
+        h.update(&u.to_le_bytes());
+        h.update(&v.to_le_bytes());
+    }
+    h.finish()
+}
+
+// ---------------------------------------------------------------------------
+// shard content + cached statistics
+
+/// The RAM-cached statistics of one shard: everything the round accounting
+/// needs, kept resident even when the edges are on disk.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardStats {
+    /// Number of edges in the shard.
+    pub len: u64,
+    /// `peer_counts[j]` = edges of the shard whose max endpoint is owned
+    /// by machine `j`.
+    pub peer_counts: Vec<u64>,
+}
+
+impl ShardStats {
+    /// Compute from canonical shard edges.  Debug builds verify the
+    /// shard-ownership invariant (`machine_of(min endpoint) == s`).
+    pub fn from_edges(edges: &[(Vertex, Vertex)], p: usize, s: usize) -> ShardStats {
+        let mut peer_counts = vec![0u64; p];
+        for &(u, v) in edges {
+            debug_assert!(u < v, "non-canonical edge ({u},{v})");
+            debug_assert_eq!(
+                machine_of(u as u64, p),
+                s,
+                "edge ({u},{v}) stored on the wrong shard"
+            );
+            peer_counts[machine_of(v as u64, p)] += 1;
+        }
+        let _ = s;
+        ShardStats {
+            len: edges.len() as u64,
+            peer_counts,
+        }
+    }
+}
+
+/// One machine's slice of the edge list plus its cached statistics — the
+/// unit of residency.  In a [`Resident`] store the whole struct lives in
+/// RAM; in a [`Spilled`] store only the stats do, and the edges stream
+/// from the shard's file.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EdgeShard {
+    /// Canonical `(min, max)` edges owned by this shard: sorted, deduped,
+    /// no self-loops, `machine_of(min) == shard index`.
+    edges: Vec<(Vertex, Vertex)>,
+    stats: ShardStats,
+}
+
+impl EdgeShard {
+    /// Build from canonical edges (sorted, deduped, loop-free, owned by
+    /// shard `s` of `p`).
+    pub fn new_canonical(edges: Vec<(Vertex, Vertex)>, p: usize, s: usize) -> EdgeShard {
+        let stats = ShardStats::from_edges(&edges, p, s);
+        EdgeShard { edges, stats }
+    }
+
+    /// Rebuild from canonical edges whose statistics are already known —
+    /// the un-spill path, where stats live in RAM while the edges come
+    /// off a validated shard file.  Debug builds re-derive and compare.
+    pub fn with_stats(
+        edges: Vec<(Vertex, Vertex)>,
+        stats: ShardStats,
+        p: usize,
+        s: usize,
+    ) -> EdgeShard {
+        debug_assert_eq!(stats, ShardStats::from_edges(&edges, p, s));
+        let _ = (p, s);
+        EdgeShard { edges, stats }
+    }
+
+    pub fn edges(&self) -> &[(Vertex, Vertex)] {
+        &self.edges
+    }
+
+    pub fn len(&self) -> usize {
+        self.edges.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.edges.is_empty()
+    }
+
+    /// Per-machine ownership histogram of this shard's right endpoints.
+    pub fn peer_counts(&self) -> &[u64] {
+        &self.stats.peer_counts
+    }
+
+    pub fn stats(&self) -> &ShardStats {
+        &self.stats
+    }
+
+    pub fn into_edges(self) -> Vec<(Vertex, Vertex)> {
+        self.edges
+    }
+}
+
+/// A borrow-or-load view of one shard's edges: `Borrowed` from a resident
+/// store (zero-copy), `Loaded` from a spill file (owned, freed when the
+/// view drops — the "at most one shard per worker" half of the residency
+/// invariant).
+#[derive(Debug)]
+pub enum ShardData<'a> {
+    Borrowed(&'a [(Vertex, Vertex)]),
+    Loaded(Vec<(Vertex, Vertex)>),
+}
+
+impl std::ops::Deref for ShardData<'_> {
+    type Target = [(Vertex, Vertex)];
+    fn deref(&self) -> &[(Vertex, Vertex)] {
+        match self {
+            ShardData::Borrowed(e) => e,
+            ShardData::Loaded(e) => e,
+        }
+    }
+}
+
+impl ShardData<'_> {
+    pub fn into_vec(self) -> Vec<(Vertex, Vertex)> {
+        match self {
+            ShardData::Borrowed(e) => e.to_vec(),
+            ShardData::Loaded(e) => e,
+        }
+    }
+}
+
+/// Owning edge iterator over a [`ShardData`] view.
+pub enum ShardDataIter<'a> {
+    Borrowed(std::iter::Copied<std::slice::Iter<'a, (Vertex, Vertex)>>),
+    Loaded(std::vec::IntoIter<(Vertex, Vertex)>),
+}
+
+impl Iterator for ShardDataIter<'_> {
+    type Item = (Vertex, Vertex);
+    #[inline]
+    fn next(&mut self) -> Option<(Vertex, Vertex)> {
+        match self {
+            ShardDataIter::Borrowed(it) => it.next(),
+            ShardDataIter::Loaded(it) => it.next(),
+        }
+    }
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        match self {
+            ShardDataIter::Borrowed(it) => it.size_hint(),
+            ShardDataIter::Loaded(it) => it.size_hint(),
+        }
+    }
+}
+
+impl<'a> IntoIterator for ShardData<'a> {
+    type Item = (Vertex, Vertex);
+    type IntoIter = ShardDataIter<'a>;
+    fn into_iter(self) -> ShardDataIter<'a> {
+        match self {
+            ShardData::Borrowed(e) => ShardDataIter::Borrowed(e.iter().copied()),
+            ShardData::Loaded(e) => ShardDataIter::Loaded(e.into_iter()),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// residency policy
+
+/// When to trade RAM for disk.
+#[derive(Debug, Clone, Default)]
+pub struct SpillPolicy {
+    /// Maximum bytes of resident edge data per graph; edge sets larger
+    /// than this live on disk.  `None` = unbounded (always resident).
+    pub budget_bytes: Option<u64>,
+    /// Root directory for spill files (default: the OS temp dir).  Each
+    /// graph generation gets its own subdirectory, removed when the last
+    /// clone of the graph drops.
+    pub root: Option<PathBuf>,
+}
+
+impl SpillPolicy {
+    /// Unbounded: never spill (the default, and the PR 2 behavior).
+    pub fn unbounded() -> SpillPolicy {
+        SpillPolicy::default()
+    }
+
+    /// Spill whenever resident edge bytes would exceed `bytes`.
+    pub fn budget(bytes: u64) -> SpillPolicy {
+        SpillPolicy {
+            budget_bytes: Some(bytes),
+            root: None,
+        }
+    }
+
+    /// From an optional budget (the `MpcConfig::spill_budget` /
+    /// `--spill-budget` plumbing shape).
+    pub fn with_budget(budget: Option<u64>) -> SpillPolicy {
+        SpillPolicy {
+            budget_bytes: budget,
+            root: None,
+        }
+    }
+
+    /// Should a graph of `edge_bytes` resident bytes spill?
+    pub fn should_spill(&self, edge_bytes: u64) -> bool {
+        self.budget_bytes.map_or(false, |b| edge_bytes > b)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// spill directories
+
+/// A spill directory owned by one graph generation.  Created uniquely
+/// under the policy root; removed (with its files) on drop — except for
+/// adopted directories (persisted spills opened via
+/// `ShardedGraph::open_spilled`), which belong to the user.
+#[derive(Debug)]
+pub struct SpillDir {
+    path: PathBuf,
+    owned: bool,
+}
+
+static DIR_COUNTER: AtomicU64 = AtomicU64::new(0);
+
+impl SpillDir {
+    /// Create a fresh uniquely-named directory under `root` (OS temp dir
+    /// when `None`).
+    pub fn create_temp(root: Option<&Path>) -> Result<SpillDir, SpillError> {
+        let base = root
+            .map(Path::to_path_buf)
+            .unwrap_or_else(std::env::temp_dir);
+        let path = base.join(format!(
+            "lcc-spill-{}-{}",
+            std::process::id(),
+            DIR_COUNTER.fetch_add(1, Ordering::Relaxed)
+        ));
+        fs::create_dir_all(&path).map_err(|e| SpillError::io(&path, "create dir", e))?;
+        Ok(SpillDir { path, owned: true })
+    }
+
+    /// Wrap an existing user-owned directory (not removed on drop).
+    pub fn adopt(path: PathBuf) -> SpillDir {
+        SpillDir { path, owned: false }
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+impl Drop for SpillDir {
+    fn drop(&mut self) {
+        if self.owned {
+            let _ = fs::remove_dir_all(&self.path);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// shard file framing
+
+/// Write one shard's canonical edges as a checksummed shard file.
+/// Returns the payload checksum (recorded in manifests).
+pub fn write_shard_file(
+    path: &Path,
+    shard: u32,
+    num_shards: u32,
+    edges: &[(Vertex, Vertex)],
+) -> Result<u64, SpillError> {
+    let f = File::create(path).map_err(|e| SpillError::io(path, "create", e))?;
+    let mut w = BufWriter::new(f);
+    let checksum = checksum_edges(edges);
+    let write = |w: &mut BufWriter<File>| -> std::io::Result<()> {
+        w.write_all(SHARD_MAGIC)?;
+        w.write_all(&shard.to_le_bytes())?;
+        w.write_all(&num_shards.to_le_bytes())?;
+        w.write_all(&(edges.len() as u64).to_le_bytes())?;
+        w.write_all(&checksum.to_le_bytes())?;
+        write_pairs(w, edges)?;
+        w.flush()
+    };
+    write(&mut w).map_err(|e| SpillError::io(path, "write", e))?;
+    Ok(checksum)
+}
+
+/// Check a shard file's header-claimed size against the actual file
+/// length without reading the payload (the cheap validation
+/// `ShardedGraph::open_spilled` runs eagerly per shard).
+pub fn validate_shard_file_len(path: &Path, expected_edges: u64) -> Result<(), SpillError> {
+    let actual = fs::metadata(path)
+        .map_err(|e| SpillError::io(path, "stat", e))?
+        .len();
+    let expected = expected_edges
+        .checked_mul(PAIR_BYTES)
+        .and_then(|p| p.checked_add(SHARD_HEADER_BYTES))
+        .ok_or_else(|| SpillError::Corrupt {
+            path: path.to_path_buf(),
+            detail: format!("edge count {expected_edges} overflows the file length"),
+        })?;
+    if actual != expected {
+        return Err(SpillError::Truncated {
+            path: path.to_path_buf(),
+            expected_bytes: expected,
+            actual_bytes: actual,
+        });
+    }
+    Ok(())
+}
+
+/// Read and fully validate one shard file: magic, shard identity, header
+/// count vs file length (before allocating), payload checksum.  Returns
+/// the edges plus the verified payload checksum so stores can pin the
+/// file to their cached generation without re-hashing.
+pub fn read_shard_file(
+    path: &Path,
+    shard: u32,
+    num_shards: u32,
+) -> Result<(Vec<(Vertex, Vertex)>, u64), SpillError> {
+    let f = File::open(path).map_err(|e| SpillError::io(path, "open", e))?;
+    let file_len = f
+        .metadata()
+        .map_err(|e| SpillError::io(path, "stat", e))?
+        .len();
+    if file_len < SHARD_HEADER_BYTES {
+        return Err(SpillError::Truncated {
+            path: path.to_path_buf(),
+            expected_bytes: SHARD_HEADER_BYTES,
+            actual_bytes: file_len,
+        });
+    }
+    let mut r = BufReader::new(f);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)
+        .map_err(|e| SpillError::io(path, "read header", e))?;
+    if &magic != SHARD_MAGIC {
+        return Err(SpillError::BadMagic {
+            path: path.to_path_buf(),
+        });
+    }
+    let mut u32buf = [0u8; 4];
+    let mut u64buf = [0u8; 8];
+    r.read_exact(&mut u32buf)
+        .map_err(|e| SpillError::io(path, "read header", e))?;
+    let got_shard = u32::from_le_bytes(u32buf);
+    r.read_exact(&mut u32buf)
+        .map_err(|e| SpillError::io(path, "read header", e))?;
+    let got_p = u32::from_le_bytes(u32buf);
+    if (got_shard, got_p) != (shard, num_shards) {
+        return Err(SpillError::Corrupt {
+            path: path.to_path_buf(),
+            detail: format!(
+                "file is shard {got_shard}/{got_p}, store expected {shard}/{num_shards}"
+            ),
+        });
+    }
+    r.read_exact(&mut u64buf)
+        .map_err(|e| SpillError::io(path, "read header", e))?;
+    let m = u64::from_le_bytes(u64buf);
+    r.read_exact(&mut u64buf)
+        .map_err(|e| SpillError::io(path, "read header", e))?;
+    let expected_checksum = u64::from_le_bytes(u64buf);
+    // validate the claimed count against the file length BEFORE allocating
+    let expected_len = m
+        .checked_mul(PAIR_BYTES)
+        .and_then(|p| p.checked_add(SHARD_HEADER_BYTES));
+    match expected_len {
+        Some(expected) if expected == file_len => {}
+        _ => {
+            return Err(SpillError::Truncated {
+                path: path.to_path_buf(),
+                expected_bytes: expected_len.unwrap_or(u64::MAX),
+                actual_bytes: file_len,
+            })
+        }
+    }
+    let edges =
+        read_pairs(&mut r, m as usize).map_err(|e| SpillError::io(path, "read payload", e))?;
+    let actual_checksum = checksum_edges(&edges);
+    if actual_checksum != expected_checksum {
+        return Err(SpillError::ChecksumMismatch {
+            path: path.to_path_buf(),
+            expected: expected_checksum,
+            actual: actual_checksum,
+        });
+    }
+    Ok((edges, actual_checksum))
+}
+
+/// Read an unframed staging file of raw pairs (`len` from a prior stat —
+/// transient rewrite intermediates, no checksum).
+pub fn read_raw_pairs(path: &Path, len: u64) -> Result<Vec<(Vertex, Vertex)>, SpillError> {
+    if len % PAIR_BYTES != 0 {
+        return Err(SpillError::Corrupt {
+            path: path.to_path_buf(),
+            detail: format!("staging length {len} is not a multiple of {PAIR_BYTES}"),
+        });
+    }
+    let f = File::open(path).map_err(|e| SpillError::io(path, "open", e))?;
+    let mut r = BufReader::new(f);
+    read_pairs(&mut r, (len / PAIR_BYTES) as usize)
+        .map_err(|e| SpillError::io(path, "read staging", e))
+}
+
+// ---------------------------------------------------------------------------
+// the store abstraction
+
+/// Shard storage backend: uniform access to shard statistics (always in
+/// RAM) and shard edges (in RAM or streamed from disk).
+pub trait ShardStore {
+    fn num_shards(&self) -> usize;
+
+    /// Cached statistics of shard `s` — never touches disk.
+    fn stats(&self, s: usize) -> &ShardStats;
+
+    /// The edges of shard `s`: borrowed from a resident store, loaded and
+    /// validated from a spilled one.
+    fn read(&self, s: usize) -> Result<ShardData<'_>, SpillError>;
+
+    fn is_spilled(&self) -> bool;
+}
+
+/// All shards in RAM (the fast path).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Resident {
+    shards: Vec<EdgeShard>,
+}
+
+impl Resident {
+    pub fn new(shards: Vec<EdgeShard>) -> Resident {
+        Resident { shards }
+    }
+
+    pub fn shards(&self) -> &[EdgeShard] {
+        &self.shards
+    }
+
+    pub fn into_shards(self) -> Vec<EdgeShard> {
+        self.shards
+    }
+}
+
+impl ShardStore for Resident {
+    fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    fn stats(&self, s: usize) -> &ShardStats {
+        self.shards[s].stats()
+    }
+
+    fn read(&self, s: usize) -> Result<ShardData<'_>, SpillError> {
+        Ok(ShardData::Borrowed(self.shards[s].edges()))
+    }
+
+    fn is_spilled(&self) -> bool {
+        false
+    }
+}
+
+/// Metadata of one spilled shard (the RAM footprint of the shard).
+#[derive(Debug, Clone)]
+pub struct SpilledShard {
+    pub path: PathBuf,
+    pub stats: ShardStats,
+    pub checksum: u64,
+}
+
+/// All shards on disk; clones share the directory via `Arc` (shard files
+/// are immutable once written — every mutation builds a new generation).
+#[derive(Debug, Clone)]
+pub struct Spilled {
+    dir: std::sync::Arc<SpillDir>,
+    shards: Vec<SpilledShard>,
+}
+
+impl Spilled {
+    pub fn from_parts(dir: std::sync::Arc<SpillDir>, shards: Vec<SpilledShard>) -> Spilled {
+        Spilled { dir, shards }
+    }
+
+    pub fn dir(&self) -> &Path {
+        self.dir.path()
+    }
+
+    /// RAM-cached per-shard metadata (stats + payload checksums).
+    pub fn shard_metas(&self) -> &[SpilledShard] {
+        &self.shards
+    }
+}
+
+impl ShardStore for Spilled {
+    fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    fn stats(&self, s: usize) -> &ShardStats {
+        &self.shards[s].stats
+    }
+
+    fn read(&self, s: usize) -> Result<ShardData<'_>, SpillError> {
+        let meta = &self.shards[s];
+        let (edges, checksum) =
+            read_shard_file(&meta.path, s as u32, self.shards.len() as u32)?;
+        if edges.len() as u64 != meta.stats.len {
+            return Err(SpillError::Corrupt {
+                path: meta.path.clone(),
+                detail: format!(
+                    "file holds {} edges, store expected {}",
+                    edges.len(),
+                    meta.stats.len
+                ),
+            });
+        }
+        // the file's header checksum only proves self-consistency; the
+        // store's cached checksum pins the *generation* — a stale but
+        // intact file (e.g. an interrupted re-persist) must not be read
+        // as if it matched the RAM-cached stats
+        if checksum != meta.checksum {
+            return Err(SpillError::ChecksumMismatch {
+                path: meta.path.clone(),
+                expected: meta.checksum,
+                actual: checksum,
+            });
+        }
+        Ok(ShardData::Loaded(edges))
+    }
+
+    fn is_spilled(&self) -> bool {
+        true
+    }
+}
+
+/// Write one finalized shard into `dir`, returning its spilled metadata.
+pub fn spill_shard(
+    dir: &SpillDir,
+    s: usize,
+    num_shards: usize,
+    shard: &EdgeShard,
+) -> Result<SpilledShard, SpillError> {
+    let path = dir.path().join(shard_file_name(s));
+    let checksum = write_shard_file(&path, s as u32, num_shards as u32, shard.edges())?;
+    Ok(SpilledShard {
+        path,
+        stats: shard.stats().clone(),
+        checksum,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// persisted-spill manifest (crash-then-reload)
+
+/// Per-shard manifest entry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ManifestShard {
+    pub len: u64,
+    pub checksum: u64,
+    pub peer_counts: Vec<u64>,
+}
+
+/// Manifest of a persisted spilled graph: enough to rebuild the store's
+/// RAM-cached state without reading any shard payload.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Manifest {
+    pub n: u64,
+    pub p: u32,
+    pub shards: Vec<ManifestShard>,
+}
+
+/// Serialize + write a manifest (body FNV-checksummed like the shards).
+pub fn write_manifest(path: &Path, m: &Manifest) -> Result<(), SpillError> {
+    let mut body: Vec<u8> = Vec::new();
+    body.extend_from_slice(&m.n.to_le_bytes());
+    body.extend_from_slice(&m.p.to_le_bytes());
+    for sh in &m.shards {
+        body.extend_from_slice(&sh.len.to_le_bytes());
+        body.extend_from_slice(&sh.checksum.to_le_bytes());
+        for &c in &sh.peer_counts {
+            body.extend_from_slice(&c.to_le_bytes());
+        }
+    }
+    let mut h = Fnv1a::new();
+    h.update(&body);
+    let h = h.finish();
+    let f = File::create(path).map_err(|e| SpillError::io(path, "create", e))?;
+    let mut w = BufWriter::new(f);
+    let write = |w: &mut BufWriter<File>| -> std::io::Result<()> {
+        w.write_all(MANIFEST_MAGIC)?;
+        w.write_all(&body)?;
+        w.write_all(&h.to_le_bytes())?;
+        w.flush()
+    };
+    write(&mut w).map_err(|e| SpillError::io(path, "write", e))
+}
+
+/// Read + validate a manifest (magic, exact length, body checksum).
+pub fn read_manifest(path: &Path) -> Result<Manifest, SpillError> {
+    let bytes = fs::read(path).map_err(|e| SpillError::io(path, "read", e))?;
+    let corrupt = |detail: String| SpillError::Corrupt {
+        path: path.to_path_buf(),
+        detail,
+    };
+    if bytes.len() < 8 + 8 + 4 + 8 {
+        return Err(SpillError::Truncated {
+            path: path.to_path_buf(),
+            expected_bytes: (8 + 8 + 4 + 8) as u64,
+            actual_bytes: bytes.len() as u64,
+        });
+    }
+    if &bytes[..8] != MANIFEST_MAGIC {
+        return Err(SpillError::BadMagic {
+            path: path.to_path_buf(),
+        });
+    }
+    let body = &bytes[8..bytes.len() - 8];
+    let mut fnv = Fnv1a::new();
+    fnv.update(body);
+    let h = fnv.finish();
+    let stored = u64::from_le_bytes(bytes[bytes.len() - 8..].try_into().unwrap());
+    if h != stored {
+        return Err(SpillError::ChecksumMismatch {
+            path: path.to_path_buf(),
+            expected: stored,
+            actual: h,
+        });
+    }
+    let u64_at = |off: usize| -> u64 { u64::from_le_bytes(body[off..off + 8].try_into().unwrap()) };
+    let n = u64_at(0);
+    let p = u32::from_le_bytes(body[8..12].try_into().unwrap()) as usize;
+    // file-supplied p: checked arithmetic so a garbage count is a typed
+    // Corrupt, not a debug-build overflow panic
+    let per_shard = 8 + 8 + 8 * p; // p <= u32::MAX, so this term cannot overflow u64-sized usize
+    per_shard
+        .checked_mul(p)
+        .and_then(|b| b.checked_add(12))
+        .filter(|&b| b == body.len())
+        .ok_or_else(|| {
+            corrupt(format!(
+                "manifest body is {} bytes, inconsistent with p={p}",
+                body.len()
+            ))
+        })?;
+    let mut shards = Vec::with_capacity(p);
+    for s in 0..p {
+        let off = 12 + s * per_shard;
+        let len = u64_at(off);
+        let checksum = u64_at(off + 8);
+        let peer_counts: Vec<u64> = (0..p).map(|j| u64_at(off + 16 + 8 * j)).collect();
+        if peer_counts.iter().sum::<u64>() != len {
+            return Err(corrupt(format!(
+                "shard {s}: peer_counts sum to {} but len is {len}",
+                peer_counts.iter().sum::<u64>()
+            )));
+        }
+        shards.push(ManifestShard {
+            len,
+            checksum,
+            peer_counts,
+        });
+    }
+    Ok(Manifest {
+        n,
+        p: p as u32,
+        shards,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp() -> SpillDir {
+        SpillDir::create_temp(None).unwrap()
+    }
+
+    fn canonical_edges(p: usize, s: usize) -> Vec<(Vertex, Vertex)> {
+        // edges whose min endpoint is owned by shard s
+        let mut edges: Vec<(Vertex, Vertex)> = (0u32..2000)
+            .filter(|&u| machine_of(u as u64, p) == s)
+            .map(|u| (u, u + 1 + (u % 7)))
+            .collect();
+        edges.sort_unstable();
+        edges.dedup();
+        edges
+    }
+
+    #[test]
+    fn shard_file_roundtrip() {
+        let dir = tmp();
+        let edges = canonical_edges(4, 1);
+        let path = dir.path().join(shard_file_name(1));
+        let ck = write_shard_file(&path, 1, 4, &edges).unwrap();
+        assert_eq!(ck, checksum_edges(&edges));
+        validate_shard_file_len(&path, edges.len() as u64).unwrap();
+        assert_eq!(read_shard_file(&path, 1, 4).unwrap(), (edges, ck));
+    }
+
+    #[test]
+    fn truncated_file_is_typed_error() {
+        let dir = tmp();
+        let edges = canonical_edges(4, 0);
+        let path = dir.path().join(shard_file_name(0));
+        write_shard_file(&path, 0, 4, &edges).unwrap();
+        let bytes = fs::read(&path).unwrap();
+        fs::write(&path, &bytes[..bytes.len() - 3]).unwrap();
+        match read_shard_file(&path, 0, 4) {
+            Err(SpillError::Truncated { .. }) => {}
+            other => panic!("expected Truncated, got {other:?}"),
+        }
+        // header shorter than minimal
+        fs::write(&path, &bytes[..10]).unwrap();
+        assert!(matches!(
+            read_shard_file(&path, 0, 4),
+            Err(SpillError::Truncated { .. })
+        ));
+    }
+
+    #[test]
+    fn corrupt_payload_is_checksum_mismatch() {
+        let dir = tmp();
+        let edges = canonical_edges(4, 2);
+        let path = dir.path().join(shard_file_name(2));
+        write_shard_file(&path, 2, 4, &edges).unwrap();
+        let mut bytes = fs::read(&path).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x40;
+        fs::write(&path, &bytes).unwrap();
+        assert!(matches!(
+            read_shard_file(&path, 2, 4),
+            Err(SpillError::ChecksumMismatch { .. })
+        ));
+    }
+
+    #[test]
+    fn wrong_identity_and_magic_are_typed() {
+        let dir = tmp();
+        let edges = canonical_edges(4, 3);
+        let path = dir.path().join(shard_file_name(3));
+        write_shard_file(&path, 3, 4, &edges).unwrap();
+        assert!(matches!(
+            read_shard_file(&path, 1, 4),
+            Err(SpillError::Corrupt { .. })
+        ));
+        let mut bytes = fs::read(&path).unwrap();
+        bytes[0] = b'X';
+        fs::write(&path, &bytes).unwrap();
+        assert!(matches!(
+            read_shard_file(&path, 3, 4),
+            Err(SpillError::BadMagic { .. })
+        ));
+    }
+
+    #[test]
+    fn missing_file_is_io_error() {
+        let dir = tmp();
+        let path = dir.path().join(shard_file_name(0));
+        match read_shard_file(&path, 0, 1) {
+            Err(SpillError::Io { op, .. }) => assert_eq!(op, "open"),
+            other => panic!("expected Io, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn manifest_roundtrip_and_corruption() {
+        let dir = tmp();
+        let m = Manifest {
+            n: 100,
+            p: 2,
+            shards: vec![
+                ManifestShard {
+                    len: 3,
+                    checksum: 7,
+                    peer_counts: vec![1, 2],
+                },
+                ManifestShard {
+                    len: 0,
+                    checksum: 9,
+                    peer_counts: vec![0, 0],
+                },
+            ],
+        };
+        let path = dir.path().join(MANIFEST_NAME);
+        write_manifest(&path, &m).unwrap();
+        assert_eq!(read_manifest(&path).unwrap(), m);
+        let mut bytes = fs::read(&path).unwrap();
+        bytes[10] ^= 1;
+        fs::write(&path, &bytes).unwrap();
+        assert!(matches!(
+            read_manifest(&path),
+            Err(SpillError::ChecksumMismatch { .. })
+        ));
+    }
+
+    #[test]
+    fn spill_dir_removed_on_drop_but_adopted_kept() {
+        let dir = tmp();
+        let path = dir.path().to_path_buf();
+        fs::write(path.join("x"), b"y").unwrap();
+        drop(dir);
+        assert!(!path.exists());
+
+        let keep = std::env::temp_dir().join(format!("lcc-spill-keep-{}", std::process::id()));
+        fs::create_dir_all(&keep).unwrap();
+        drop(SpillDir::adopt(keep.clone()));
+        assert!(keep.exists());
+        let _ = fs::remove_dir_all(&keep);
+    }
+}

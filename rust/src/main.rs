@@ -55,6 +55,8 @@ Common flags:
   --algo lc|lc-mtl|tc|tc-dht|cracker|two-phase|htm|hash-min
   --graph <preset|path|cycle|star|grid|gnp|gnp-log|file:PATH>   --n <vertices>
   --seed N  --machines N (simulated machines = shard count; run/pipeline/perf)
+  --spill-budget BYTES (resident edge-memory budget; larger graphs run
+                        with disk-backed shards; run/pipeline/perf)
   --finisher N  --use-xla  --verify  --json
   --out FILE (perf: write the machine-readable suite JSON, BENCH_PR2.json schema)
   --scale N (table/figure dataset size)  --runs N (median-of-N)
@@ -98,6 +100,12 @@ fn load_graph(args: &Args) -> (lcc::graph::Graph, String) {
     (g, spec)
 }
 
+/// `--spill-budget BYTES` (None = unbounded residency).
+fn spill_budget(args: &Args) -> Option<u64> {
+    args.str_opt("spill-budget")
+        .map(|v| v.parse().unwrap_or_else(|e| panic!("--spill-budget: cannot parse {v:?}: {e}")))
+}
+
 fn cmd_run(args: &Args) {
     let (g, name) = load_graph(args);
     let cfg = RunConfig {
@@ -109,6 +117,7 @@ fn cmd_run(args: &Args) {
         max_phases: args.u64_or("max-phases", 200) as u32,
         state_cap: args.u64_or("state-cap", 0),
         use_xla: args.bool_or("use-xla", false),
+        spill_budget: spill_budget(args),
         verify: args.bool_or("verify", true),
         ..Default::default()
     };
@@ -131,6 +140,7 @@ fn cmd_pipeline(args: &Args) {
         num_workers: args.usize_or("workers", 4),
         chunk_size: args.usize_or("chunk", 64 * 1024),
         channel_capacity: args.usize_or("capacity", 4),
+        spill_budget: spill_budget(args),
     };
     let t0 = std::time::Instant::now();
     let res = pipeline::run(g.num_vertices(), g.edges().iter().copied(), &cfg);
@@ -143,6 +153,7 @@ fn cmd_pipeline(args: &Args) {
         algorithm: args.str_or("algo", "lc"),
         machines: args.usize_or("machines", 16),
         use_xla: args.bool_or("use-xla", true),
+        spill_budget: spill_budget(args),
         verify: false,
         ..Default::default()
     });
@@ -241,14 +252,15 @@ fn cmd_ablation(args: &Args) {
 fn cmd_perf(args: &Args) {
     let quick = args.bool_or("quick", false);
     let machines = args.usize_or("machines", 16);
-    let measurements = perf::standard_suite(quick, machines);
+    let budget = spill_budget(args);
+    let measurements = perf::standard_suite(quick, machines, budget);
     for m in &measurements {
         println!("{}", m.report_line());
     }
     let want_json = args.bool_or("json", false);
     let out_path = args.str_opt("out").map(String::from);
     if want_json || out_path.is_some() {
-        let doc = perf::suite_json(&measurements, quick, machines);
+        let doc = perf::suite_json(&measurements, quick, machines, budget);
         let text = doc.pretty();
         if let Some(path) = &out_path {
             std::fs::write(path, &text)

@@ -18,6 +18,16 @@
 //! per-message-accounted rounds (`round`, `round_fold`, `round_map` and
 //! their chunked forms) remain the reference semantics the sharded paths
 //! are tested against.
+//!
+//! **Out-of-core.**  [`MpcConfig::spill_budget`] bounds *resident* edge
+//! bytes: graphs over the budget keep their shards on disk
+//! (`crate::graph::spill`) and the sharded rounds consume lazily-loaded
+//! per-shard chunks — the charges above need only the cached statistics,
+//! so model metrics are bit-identical either way
+//! (`rust/tests/spill_equivalence.rs`).  The budget bounds the graph
+//! representation and the streaming contraction-loop algorithms; the
+//! cluster-growing baselines still materialize O(m) round state of their
+//! own (see `crate::graph::spill` module docs).
 
 pub mod dht;
 pub mod metrics;

@@ -32,6 +32,14 @@ pub struct MpcConfig {
     /// Exceeding it marks `space_violation` on the round rather than
     /// aborting, so experiments can report violations.
     pub space_per_machine: Option<u64>,
+    /// Resident-memory budget for the sharded edge store, in bytes: graphs
+    /// whose edge set exceeds it run with disk-backed shards
+    /// (`crate::graph::spill`) through the same rounds — the out-of-core
+    /// counterpart of `space_per_machine`'s *model* bound.  `None` =
+    /// unbounded (always resident).  Threaded into every graph the flat
+    /// `CcAlgorithm::run` adapter shards, and inherited by all contracted
+    /// generations.
+    pub spill_budget: Option<u64>,
     /// OS threads used to execute machines (simulation-level parallelism;
     /// does not affect the model metrics).
     pub threads: usize,
@@ -42,6 +50,7 @@ impl Default for MpcConfig {
         MpcConfig {
             machines: 16,
             space_per_machine: None,
+            spill_budget: None,
             threads: std::thread::available_parallelism()
                 .map(|n| n.get().min(16))
                 .unwrap_or(4),
@@ -630,6 +639,7 @@ mod tests {
         Simulator::new(MpcConfig {
             machines,
             space_per_machine: None,
+            spill_budget: None,
             threads: 2,
         })
     }
@@ -666,6 +676,7 @@ mod tests {
         let mut s = Simulator::new(MpcConfig {
             machines: 1,
             space_per_machine: Some(10),
+            spill_budget: None,
             threads: 1,
         });
         let _: Vec<()> = s.round("big", vec![(0u64, 1u32), (1, 2)], |_, _| vec![]);
@@ -689,6 +700,7 @@ mod tests {
             let mut s = Simulator::new(MpcConfig {
                 machines: 8,
                 space_per_machine: None,
+                spill_budget: None,
                 threads,
             });
             let msgs: Vec<(u64, u32)> = (0..1000).map(|i| (i % 37, i as u32)).collect();
@@ -730,6 +742,7 @@ mod tests {
             let mut s = Simulator::new(MpcConfig {
                 machines: 16,
                 space_per_machine: Some(20_000),
+                spill_budget: None,
                 threads,
             });
             let mut out: Vec<u32> = (0..600u32).collect();
@@ -753,6 +766,7 @@ mod tests {
         let mut serial = Simulator::new(MpcConfig {
             machines: 8,
             space_per_machine: None,
+            spill_budget: None,
             threads: 1,
         });
         let mut out_serial: Vec<u32> = vec![u32::MAX; 400];
@@ -761,6 +775,7 @@ mod tests {
         let mut par = Simulator::new(MpcConfig {
             machines: 8,
             space_per_machine: None,
+            spill_budget: None,
             threads: 8,
         });
         let mut out_par: Vec<u32> = vec![u32::MAX; 400];
@@ -777,6 +792,7 @@ mod tests {
             let mut s = Simulator::new(MpcConfig {
                 machines: 16,
                 space_per_machine: Some(15_000),
+                spill_budget: None,
                 threads,
             });
             let out: Vec<(u64, u32)> = s.round_map_chunked(
@@ -798,6 +814,7 @@ mod tests {
         let mut serial = Simulator::new(MpcConfig {
             machines: 4,
             space_per_machine: None,
+            spill_budget: None,
             threads: 1,
         });
         let out_serial: Vec<u32> = serial.round_map("map", msgs.iter().copied(), |_, v| v + 1);
@@ -805,6 +822,7 @@ mod tests {
         let mut par = Simulator::new(MpcConfig {
             machines: 4,
             space_per_machine: None,
+            spill_budget: None,
             threads: 4,
         });
         let out_par: Vec<u32> = par.round_map_chunked("map", chunked(&msgs, 4), |_, v| v + 1);
@@ -848,6 +866,7 @@ mod tests {
         let mut reference = Simulator::new(MpcConfig {
             machines: p,
             space_per_machine: Some(25_000),
+            spill_budget: None,
             threads: 1,
         });
         let mut out_ref: Vec<u32> = (0..600u32).collect();
@@ -857,6 +876,7 @@ mod tests {
             let mut s = Simulator::new(MpcConfig {
                 machines: p,
                 space_per_machine: Some(25_000),
+                spill_budget: None,
                 threads,
             });
             let mut out: Vec<u32> = (0..600u32).collect();
@@ -879,6 +899,7 @@ mod tests {
         let mut reference = Simulator::new(MpcConfig {
             machines: p,
             space_per_machine: None,
+            spill_budget: None,
             threads: 1,
         });
         let out_ref: Vec<u64> =
@@ -888,6 +909,7 @@ mod tests {
             let mut s = Simulator::new(MpcConfig {
                 machines: p,
                 space_per_machine: None,
+                spill_budget: None,
                 threads,
             });
             let out: Vec<u64> = s.round_map_sharded(

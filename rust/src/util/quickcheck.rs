@@ -4,7 +4,10 @@
 //! property over many generated inputs with a deterministic, reportable seed
 //! and a size-based shrink: when a sized case fails, the runner retries
 //! smaller sizes with the same per-case stream to report the smallest
-//! failing size.  Override the base seed with `LCC_PROP_SEED=<u64>`.
+//! failing size.  Override the base seed with `LCC_PROP_SEED=<u64>` and
+//! scale every suite's case count with `LCC_PROP_CASES=<u64>` (a
+//! multiplier numerator over 100: `LCC_PROP_CASES=300` triples the cases —
+//! how the CI spill job deepens the property sweeps without code changes).
 
 use super::rng::Rng;
 
@@ -25,10 +28,19 @@ impl Default for Prop {
     }
 }
 
+/// Percentage multiplier applied to every suite's case count
+/// (`LCC_PROP_CASES`, default 100 = as written).
+fn case_scale() -> u64 {
+    std::env::var("LCC_PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(100)
+}
+
 impl Prop {
     pub fn new(cases: u64) -> Self {
         Prop {
-            cases,
+            cases: (cases * case_scale() / 100).max(1),
             ..Prop::default()
         }
     }
@@ -101,6 +113,24 @@ macro_rules! prop_assert {
     };
 }
 
+/// Equality assertion for property bodies: on mismatch, fails the case
+/// with both values rendered (the `assert_eq!` of the `Result<_, String>`
+/// world, so the shrinker still gets to run).
+#[macro_export]
+macro_rules! prop_assert_eq {
+    ($left:expr, $right:expr, $($fmt:tt)+) => {{
+        let (l, r) = (&$left, &$right);
+        if l != r {
+            return Err(format!(
+                "{}: left = {:?}, right = {:?}",
+                format!($($fmt)+),
+                l,
+                r
+            ));
+        }
+    }};
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -151,6 +181,17 @@ mod tests {
     fn shrink_reports_minimal_size() {
         // Fails for every size, so the shrinker must land on 1.
         Prop::new(4).check_sized("shrinks", 64, |_rng, size| size, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn prop_assert_eq_reports_both_sides() {
+        fn body(a: u32, b: u32) -> Result<(), String> {
+            crate::prop_assert_eq!(a, b, "values differ");
+            Ok(())
+        }
+        assert!(body(3, 3).is_ok());
+        let msg = body(3, 4).unwrap_err();
+        assert!(msg.contains("left = 3") && msg.contains("right = 4"), "{msg}");
     }
 
     #[test]

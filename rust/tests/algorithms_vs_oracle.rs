@@ -12,6 +12,7 @@ fn run(algo: &str, g: &Graph, seed: u64, opts: &RunOptions) -> cc::CcResult {
     let mut sim = Simulator::new(MpcConfig {
         machines: 8,
         space_per_machine: None,
+        spill_budget: None,
         threads: 2,
     });
     let mut rng = Rng::new(seed);
@@ -123,6 +124,7 @@ fn machine_count_is_immaterial() {
         let mut sim = Simulator::new(MpcConfig {
             machines,
             space_per_machine: None,
+            spill_budget: None,
             threads: 1,
         });
         let mut rng = Rng::new(4);
@@ -200,6 +202,7 @@ fn merge_to_large_alpha_extremes_are_safe() {
         let mut sim = Simulator::new(MpcConfig {
             machines: 4,
             space_per_machine: None,
+            spill_budget: None,
             threads: 1,
         });
         let mut rng = Rng::new(13);

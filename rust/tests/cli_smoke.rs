@@ -40,6 +40,18 @@ fn run_lc_on_small_gnp_verifies() {
 }
 
 #[test]
+fn run_with_tight_spill_budget_verifies() {
+    // the whole CLI path out-of-core: a 64-byte budget forces disk-backed
+    // shards for a ~3000-edge graph, and the labels still verify
+    let (ok, text) = lcc(&[
+        "run", "--algo", "lc", "--graph", "gnp", "--n", "1500", "--avg-deg", "4",
+        "--spill-budget", "64", "--verify", "true",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("[verified]"), "{text}");
+}
+
+#[test]
 fn run_json_output_parses() {
     let (ok, text) = lcc(&[
         "run", "--algo", "tc-dht", "--graph", "star", "--n", "500", "--json",

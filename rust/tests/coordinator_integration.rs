@@ -64,6 +64,7 @@ fn pipeline_then_lc_merge_equals_direct_lc() {
         num_workers: 3,
         chunk_size: 256,
         channel_capacity: 2,
+        spill_budget: None,
     };
     let res = pipeline::run(g.num_vertices(), g.edges().iter().copied(), &cfg);
     let merge = Driver::new(RunConfig {
@@ -111,6 +112,7 @@ fn backpressure_engages_with_tiny_queues() {
         num_workers: 2,
         chunk_size: 16,
         channel_capacity: 1,
+        spill_budget: None,
     };
     let res = pipeline::run(g.num_vertices(), g.edges().iter().copied(), &cfg);
     // not guaranteed on every machine, but with 80k edges in 16-edge chunks

@@ -11,6 +11,7 @@ fn run(algo: &str, g: &lcc::graph::Graph, machines: usize) -> cc::CcResult {
     let mut sim = Simulator::new(MpcConfig {
         machines,
         space_per_machine: None,
+        spill_budget: None,
         threads: 2,
     });
     let mut rng = Rng::new(3);
@@ -109,6 +110,7 @@ fn space_bound_flagging_works_end_to_end() {
     let mut sim = Simulator::new(MpcConfig {
         machines: 2,
         space_per_machine: Some(100), // absurdly small
+        spill_budget: None,
         threads: 1,
     });
     let mut rng = Rng::new(6);
@@ -144,6 +146,7 @@ fn model_metrics_are_engine_invariant_across_threads() {
             let mut sim = Simulator::new(MpcConfig {
                 machines: 8,
                 space_per_machine: Some(40_000),
+                spill_budget: None,
                 threads,
             });
             let mut rng = Rng::new(17);

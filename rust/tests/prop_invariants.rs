@@ -30,6 +30,7 @@ fn run_algo(algo: &str, g: &Graph, seed: u64) -> cc::CcResult {
     let mut sim = Simulator::new(MpcConfig {
         machines: 4,
         space_per_machine: None,
+        spill_budget: None,
         threads: 1,
     });
     let mut rng = Rng::new(seed);
@@ -95,6 +96,7 @@ fn prop_contraction_preserves_component_count() {
             let mut sim = Simulator::new(MpcConfig {
                 machines: 4,
                 space_per_machine: None,
+                spill_budget: None,
                 threads: 1,
             });
             let sharded = ShardedGraph::from_graph(g, 4);
@@ -194,6 +196,7 @@ fn prop_pipeline_matches_oracle() {
                 num_workers: *workers,
                 chunk_size: 64,
                 channel_capacity: 2,
+                spill_budget: None,
             };
             let res = lcc::coordinator::pipeline::run(
                 g.num_vertices(),
@@ -286,6 +289,7 @@ fn prop_dense_cpu_backend_matches_phase_labels() {
             let mut sim = Simulator::new(MpcConfig {
                 machines: 2,
                 space_per_machine: None,
+                spill_budget: None,
                 threads: 1,
             });
             let sharded = ShardedGraph::from_graph(g, 2);
@@ -298,6 +302,139 @@ fn prop_dense_cpu_backend_matches_phase_labels() {
                     return Err(format!("vertex {v}: dense {via_dense} mpc {}", mpc[v]));
                 }
             }
+            Ok(())
+        },
+    );
+}
+
+/// Recompute a shard's ownership histogram from its actual edges.
+fn brute_peer_counts(
+    edges: &[(lcc::graph::Vertex, lcc::graph::Vertex)],
+    p: usize,
+) -> Vec<u64> {
+    use lcc::mpc::simulator::machine_of;
+    let mut peers = vec![0u64; p];
+    for &(_, v) in edges {
+        peers[machine_of(v as u64, p)] += 1;
+    }
+    peers
+}
+
+/// The canonical edge multiset of a sharded graph (flattened + sorted);
+/// with canonical shards a sorted list IS the multiset.
+fn edge_multiset(g: &lcc::graph::ShardedGraph) -> Vec<(lcc::graph::Vertex, lcc::graph::Vertex)> {
+    let mut edges: Vec<_> = g.iter_edges().collect();
+    edges.sort_unstable();
+    edges
+}
+
+/// Check the full store invariant on one graph: every cached histogram
+/// matches a brute-force recount of the (possibly just-loaded) edges.
+fn check_histogram_caches(
+    g: &lcc::graph::ShardedGraph,
+    tag: &str,
+) -> Result<(), String> {
+    let p = g.num_shards();
+    for s in 0..p {
+        let data = g.read_shard(s).map_err(|e| format!("{tag}: {e}"))?;
+        let stats = g.shard_stats(s);
+        lcc::prop_assert_eq!(
+            stats.len,
+            data.len() as u64,
+            "{tag}: stale len cache on shard {s}"
+        );
+        lcc::prop_assert_eq!(
+            stats.peer_counts,
+            brute_peer_counts(&data, p),
+            "{tag}: stale peer_counts cache on shard {s}"
+        );
+    }
+    let total: u64 = g.vertex_counts().iter().sum();
+    lcc::prop_assert_eq!(
+        total,
+        g.num_vertices() as u64,
+        "{tag}: vertex_counts do not partition 0..n"
+    );
+    Ok(())
+}
+
+#[test]
+fn prop_rewrites_preserve_multisets_and_caches_on_both_backends() {
+    // reshard / contract / prune_isolated must preserve the expected edge
+    // multiset and keep every cached histogram coherent — identically on
+    // the resident and the spilled (budget 0: always disk-backed) store.
+    use lcc::graph::{ShardedGraph, SpillPolicy, Vertex};
+    Prop::new(12).check_sized(
+        "rewrites-preserve-multisets",
+        250,
+        |rng, size| {
+            let g = random_graph(rng, size);
+            let n = g.num_vertices();
+            let labels: Vec<Vertex> =
+                (0..n as u32).map(|_| rng.gen_range(n as u64) as Vertex).collect();
+            (g, labels)
+        },
+        |(flat, labels)| {
+            let n = flat.num_vertices();
+            let resident = ShardedGraph::from_graph(flat, 4);
+            let spilled = ShardedGraph::from_graph_with(flat, 4, SpillPolicy::budget(0));
+            if n > 0 && flat.num_edges() > 0 && !spilled.is_spilled() {
+                return Err("budget-0 graph with edges stayed resident".into());
+            }
+            for (tag, g) in [("resident", &resident), ("spilled", &spilled)] {
+                check_histogram_caches(g, tag)?;
+
+                // reshard: multiset is exactly preserved
+                let resharded = g.reshard(7);
+                check_histogram_caches(&resharded, &format!("{tag}/reshard"))?;
+                lcc::prop_assert_eq!(
+                    edge_multiset(&resharded),
+                    edge_multiset(g),
+                    "{tag}: reshard changed the edge multiset"
+                );
+
+                // contract: multiset = relabeled, canonicalized, deduped input
+                let (contracted, map) = g.contract(labels);
+                check_histogram_caches(&contracted, &format!("{tag}/contract"))?;
+                let mut want: Vec<(Vertex, Vertex)> = g
+                    .iter_edges()
+                    .filter_map(|(u, v)| {
+                        let (x, y) = (map[u as usize], map[v as usize]);
+                        (x != y).then(|| (x.min(y), x.max(y)))
+                    })
+                    .collect();
+                want.sort_unstable();
+                want.dedup();
+                lcc::prop_assert_eq!(
+                    edge_multiset(&contracted),
+                    want,
+                    "{tag}: contract multiset wrong"
+                );
+
+                // prune: multiset = input renamed through the compaction map
+                let (pruned, pmap) = g.prune_isolated();
+                check_histogram_caches(&pruned, &format!("{tag}/prune"))?;
+                let mut want: Vec<(Vertex, Vertex)> = g
+                    .iter_edges()
+                    .map(|(u, v)| {
+                        let (x, y) = (pmap[u as usize].unwrap(), pmap[v as usize].unwrap());
+                        (x.min(y), x.max(y))
+                    })
+                    .collect();
+                want.sort_unstable();
+                want.dedup();
+                lcc::prop_assert_eq!(
+                    edge_multiset(&pruned),
+                    want,
+                    "{tag}: prune multiset wrong"
+                );
+            }
+            // and the two backends agree bit-for-bit
+            lcc::prop_assert_eq!(
+                resident.to_graph(),
+                spilled.to_graph(),
+                "backends diverge"
+            );
             Ok(())
         },
     );

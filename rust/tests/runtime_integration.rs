@@ -147,6 +147,7 @@ fn full_lc_run_with_xla_matches_pure_mpc() {
             let mut sim = Simulator::new(MpcConfig {
                 machines: 4,
                 space_per_machine: None,
+                spill_budget: None,
                 threads: 1,
             });
             let mut rng = Rng::new(seed);

@@ -79,9 +79,10 @@ fn prop_shard_ownership_and_cached_stats() {
         |(n, edges)| {
             for p in [3usize, 8] {
                 let g = ShardedGraph::from_edges(*n, p, edges.clone());
-                for (s, shard) in g.shards().iter().enumerate() {
+                for s in 0..g.num_shards() {
+                    let data = g.read_shard(s).map_err(|e| e.to_string())?;
                     let mut peers = vec![0u64; p];
-                    for &(u, v) in shard.edges() {
+                    for &(u, v) in data.iter() {
                         if u >= v {
                             return Err(format!("non-canonical edge ({u},{v})"));
                         }
@@ -90,7 +91,7 @@ fn prop_shard_ownership_and_cached_stats() {
                         }
                         peers[machine_of(v as u64, p)] += 1;
                     }
-                    if peers != shard.peer_counts() {
+                    if peers != g.shard_stats(s).peer_counts {
                         return Err(format!("stale peer_counts on shard {s}"));
                     }
                 }
@@ -114,6 +115,7 @@ fn run_algo(
     let mut sim = Simulator::new(MpcConfig {
         machines,
         space_per_machine: Some(1 << 20),
+        spill_budget: None,
         threads,
     });
     let mut rng = Rng::new(seed);
@@ -173,6 +175,7 @@ fn sharded_and_flat_entries_agree() {
             let mut sim = Simulator::new(MpcConfig {
                 machines: 4,
                 space_per_machine: None,
+                spill_budget: None,
                 threads: 2,
             });
             let mut rng = Rng::new(3);
@@ -182,6 +185,7 @@ fn sharded_and_flat_entries_agree() {
             let mut sim = Simulator::new(MpcConfig {
                 machines: 4,
                 space_per_machine: None,
+                spill_budget: None,
                 threads: 2,
             });
             let sharded = ShardedGraph::from_graph(&g, 4);
@@ -205,6 +209,7 @@ fn finisher_and_pruning_stay_correct_on_sharded_loop() {
             let mut sim = Simulator::new(MpcConfig {
                 machines: 4,
                 space_per_machine: None,
+                spill_budget: None,
                 threads: 4,
             });
             let mut rng = Rng::new(13);
@@ -229,6 +234,7 @@ fn pipeline_summary_reshards_into_any_machine_count() {
         num_workers: 5,
         chunk_size: 128,
         channel_capacity: 2,
+        spill_budget: None,
     };
     let res = lcc::coordinator::pipeline::run(1500, g.edges().iter().copied(), &cfg);
     assert_eq!(res.summary.num_shards(), 5);

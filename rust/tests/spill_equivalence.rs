@@ -1,0 +1,266 @@
+//! Out-of-core equivalence: the disk-backed shard store must be
+//! **bit-identical** to the resident store — labels, per-round model
+//! metrics, and final graphs — across the full acceptance matrix
+//! machines ∈ {1, 4, 16} × threads ∈ {1, 4, 8} × budget ∈ {unbounded,
+//! tight}, for every algorithm.  Mirrors
+//! `rust/tests/sharded_representation.rs`, which proves the same about
+//! sharded-vs-monolithic; together they pin the whole chain
+//! monolithic = resident-sharded = spilled-sharded.
+//!
+//! "Tight" means a budget the input already exceeds, so every round of
+//! the contraction loop runs load → rewrite → spill (the CI `spill` job
+//! runs this suite on every push).
+
+use lcc::cc::{self, oracle, CcAlgorithm, RunOptions};
+use lcc::graph::{generators, Graph, ShardedGraph, SpillPolicy, Vertex};
+use lcc::mpc::{MpcConfig, Simulator};
+use lcc::util::quickcheck::Prop;
+use lcc::util::rng::Rng;
+
+const MACHINES: [usize; 3] = [1, 4, 16];
+const THREADS: [usize; 3] = [1, 4, 8];
+/// Tight: a handful of edges' worth of bytes — exceeded by every test
+/// graph, so the spilled store is exercised from ingest to the last
+/// contraction.
+const TIGHT: u64 = 64;
+
+fn run_algo(
+    algo: &str,
+    g: &Graph,
+    machines: usize,
+    threads: usize,
+    spill_budget: Option<u64>,
+    seed: u64,
+) -> (Vec<Vertex>, Vec<lcc::mpc::RoundMetrics>) {
+    let a = cc::by_name(algo);
+    let mut sim = Simulator::new(MpcConfig {
+        machines,
+        space_per_machine: Some(1 << 20),
+        spill_budget,
+        threads,
+    });
+    let mut rng = Rng::new(seed);
+    let res = a.run(g, &mut sim, &mut rng, &RunOptions::default());
+    assert!(res.completed, "{algo} incomplete");
+    (res.labels, res.metrics.rounds)
+}
+
+#[test]
+fn all_algorithms_bit_identical_across_budget_matrix() {
+    // The acceptance matrix: for every algorithm × graph × machines ×
+    // threads, a tight-budget (spilled) run must produce exactly the
+    // labels and per-round metrics of the unbounded (resident) run — and
+    // both must equal the oracle.
+    let graphs = [
+        ("gnp", generators::gnp(220, 0.018, &mut Rng::new(5))),
+        ("path", generators::path(100)),
+        (
+            "mixture",
+            generators::star(40).disjoint_union(generators::cycle(17)),
+        ),
+    ];
+    for (gname, g) in &graphs {
+        let want = oracle::components(g);
+        for algo in cc::ALL_ALGORITHMS {
+            for machines in MACHINES {
+                let (base_labels, base_rounds) = run_algo(algo, g, machines, 1, None, 7);
+                assert_eq!(
+                    base_labels, want,
+                    "{algo} wrong on {gname} (machines={machines})"
+                );
+                for threads in THREADS {
+                    for budget in [None, Some(TIGHT)] {
+                        let (labels, rounds) =
+                            run_algo(algo, g, machines, threads, budget, 7);
+                        assert_eq!(
+                            labels, base_labels,
+                            "{algo}/{gname}: labels diverge (machines={machines}, \
+                             threads={threads}, budget={budget:?})"
+                        );
+                        assert_eq!(
+                            rounds, base_rounds,
+                            "{algo}/{gname}: metrics diverge (machines={machines}, \
+                             threads={threads}, budget={budget:?})"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_graph_ops_bit_identical_across_backends() {
+    // Graph-layer equivalence over random raw edge lists: every operation
+    // of the spilled store matches the resident store exactly, at every
+    // shard count of the matrix.
+    Prop::new(16).check_sized(
+        "spilled-vs-resident-ops",
+        350,
+        |rng, size| {
+            let n = size.max(2);
+            let m = rng.gen_range(4 * n as u64) as usize;
+            let edges: Vec<(Vertex, Vertex)> = (0..m)
+                .map(|_| {
+                    (
+                        rng.gen_range(n as u64) as Vertex,
+                        rng.gen_range(n as u64) as Vertex,
+                    )
+                })
+                .collect();
+            let labels: Vec<Vertex> = (0..n as u32)
+                .map(|_| rng.gen_range(n as u64) as Vertex)
+                .collect();
+            (n, edges, labels)
+        },
+        |(n, edges, labels)| {
+            for p in MACHINES {
+                let resident = ShardedGraph::from_edges(*n, p, edges.clone());
+                let spilled = ShardedGraph::from_edges_with(
+                    *n,
+                    p,
+                    edges.clone(),
+                    SpillPolicy::budget(0),
+                );
+                if resident.num_edges() > 0 && !spilled.is_spilled() {
+                    return Err(format!("p={p}: budget-0 graph stayed resident"));
+                }
+                if spilled.to_graph() != resident.to_graph() {
+                    return Err(format!("p={p}: to_graph differs"));
+                }
+                if spilled.degrees() != resident.degrees() {
+                    return Err(format!("p={p}: degrees differ"));
+                }
+                let (cr, mr) = resident.contract(labels);
+                let (cs, ms) = spilled.contract(labels);
+                if ms != mr || cs.to_graph() != cr.to_graph() {
+                    return Err(format!("p={p}: contract differs"));
+                }
+                let (pr, mapr) = resident.prune_isolated();
+                let (ps, maps) = spilled.prune_isolated();
+                if maps != mapr || ps.to_graph() != pr.to_graph() {
+                    return Err(format!("p={p}: prune differs"));
+                }
+                let rr = resident.reshard(3);
+                let rs = spilled.reshard(3);
+                if rs.to_graph() != rr.to_graph() {
+                    return Err(format!("p={p}: reshard differs"));
+                }
+                // round charges are pure functions of the cached stats —
+                // identical with the edges on disk
+                for include_self in [true, false] {
+                    if spilled.hop_charge(12, include_self)
+                        != resident.hop_charge(12, include_self)
+                    {
+                        return Err(format!("p={p}: hop_charge differs"));
+                    }
+                }
+                if spilled.contract_charges() != resident.contract_charges() {
+                    return Err(format!("p={p}: contract_charges differ"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn tight_budget_actually_spills_and_unbounded_does_not() {
+    // Guard against the suite silently testing resident-vs-resident: the
+    // tight budget must put the ingest generation on disk.
+    let g = generators::gnp(220, 0.018, &mut Rng::new(5));
+    let spilled = ShardedGraph::from_graph_with(&g, 4, SpillPolicy::budget(TIGHT));
+    assert!(spilled.is_spilled(), "tight budget did not spill");
+    assert!(spilled.edge_bytes() > TIGHT);
+    let resident = ShardedGraph::from_graph_with(&g, 4, SpillPolicy::with_budget(None));
+    assert!(!resident.is_spilled());
+}
+
+#[test]
+fn contraction_loop_inherits_the_budget_every_round() {
+    // A spilled run's intermediate generations stay governed by the same
+    // policy: contract a spilled graph repeatedly and observe each
+    // generation either spills (over budget) or is resident (under),
+    // never "sticky" one way.
+    let g = generators::gnp(300, 0.02, &mut Rng::new(9));
+    let mut cur = ShardedGraph::from_graph_with(&g, 4, SpillPolicy::budget(TIGHT));
+    assert!(cur.is_spilled());
+    for round in 0..8 {
+        if cur.num_edges() == 0 {
+            break;
+        }
+        // merge pairs of vertices: halves the id space each round
+        let labels: Vec<Vertex> = (0..cur.num_vertices() as u32).map(|v| v / 2).collect();
+        let (next, _) = cur.contract(&labels);
+        assert_eq!(
+            next.is_spilled(),
+            next.edge_bytes() > TIGHT,
+            "round {round}: residency does not track the budget \
+             (edges={}, bytes={})",
+            next.num_edges(),
+            next.edge_bytes()
+        );
+        cur = next;
+    }
+}
+
+#[test]
+fn driver_reports_identical_under_budget() {
+    // The coordinator path (`lcc run --spill-budget`): phases, rounds,
+    // bytes, and labels of a budgeted run equal the unbounded run.
+    let g = generators::gnp(400, 0.008, &mut Rng::new(11));
+    let run = |budget: Option<u64>| {
+        let d = lcc::coordinator::Driver::new(lcc::coordinator::RunConfig {
+            algorithm: "lc".into(),
+            machines: 4,
+            threads: 2,
+            spill_budget: budget,
+            verify: true,
+            ..Default::default()
+        });
+        d.run_named(&g, "gnp400")
+    };
+    let base = run(None);
+    let spilled = run(Some(TIGHT));
+    assert_eq!(spilled.verified, Some(true));
+    assert_eq!(base.verified, Some(true));
+    assert_eq!(spilled.phases, base.phases);
+    assert_eq!(spilled.rounds, base.rounds);
+    assert_eq!(spilled.total_shuffle_bytes, base.total_shuffle_bytes);
+    assert_eq!(spilled.max_round_bytes, base.max_round_bytes);
+    assert_eq!(spilled.num_components, base.num_components);
+}
+
+#[test]
+fn pipeline_summary_spills_and_merges_identically() {
+    // Workers' summary shards spill straight to disk under the budget and
+    // the downstream merge is unchanged.
+    let g = generators::gnp(1200, 0.004, &mut Rng::new(17));
+    let run = |budget: Option<u64>| {
+        let cfg = lcc::coordinator::PipelineConfig {
+            num_workers: 5,
+            chunk_size: 128,
+            channel_capacity: 2,
+            spill_budget: budget,
+        };
+        lcc::coordinator::pipeline::run(1200, g.edges().iter().copied(), &cfg)
+    };
+    let resident = run(None);
+    let spilled = run(Some(0));
+    assert!(spilled.summary.is_spilled());
+    assert!(!resident.summary.is_spilled());
+    assert_eq!(spilled.summary, resident.summary);
+    let want = oracle::components(&g);
+    assert_eq!(
+        lcc::coordinator::pipeline::merge_summary(&spilled.summary),
+        want
+    );
+    for machines in MACHINES {
+        let resharded = spilled.summary.reshard(machines);
+        assert_eq!(oracle::components_sharded(&resharded), want);
+        assert_eq!(
+            resharded.to_graph(),
+            resident.summary.reshard(machines).to_graph()
+        );
+    }
+}

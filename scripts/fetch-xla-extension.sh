@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# Fetch the prebuilt xla_extension the `xla` crate's build script links
+# against (CPU build) and export its location into $GITHUB_ENV.  Shared
+# by every CI job that builds the crate — bump the pinned release here,
+# in one place.  If the URL rots, update it from
+# https://github.com/elixir-nx/xla/releases (x86_64-linux-gnu-cpu).
+set -euo pipefail
+
+XLA_EXT_VERSION="${XLA_EXT_VERSION:-v0.4.4}"
+URL="https://github.com/elixir-nx/xla/releases/download/${XLA_EXT_VERSION}/xla_extension-x86_64-linux-gnu-cpu.tar.gz"
+
+mkdir -p "$HOME/xla_extension"
+curl -fsSL -o /tmp/xla_extension.tar.gz "$URL"
+tar -xzf /tmp/xla_extension.tar.gz -C "$HOME"
+echo "XLA_EXTENSION_DIR=$HOME/xla_extension" >> "$GITHUB_ENV"
+echo "LD_LIBRARY_PATH=$HOME/xla_extension/lib:${LD_LIBRARY_PATH:-}" >> "$GITHUB_ENV"
