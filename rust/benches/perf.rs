@@ -17,7 +17,14 @@ fn main() {
         "=== §Perf micro-benchmarks (quick={quick}, machines={machines}, \
          spill_budget={spill_budget:?}) ==="
     );
-    for m in lcc::bench::perf::standard_suite(quick, machines, spill_budget) {
+    // always in-process here: the bench binary cannot serve `lcc worker`,
+    // so the proc-transport row is exclusive to `lcc perf --transport proc`
+    for m in lcc::bench::perf::standard_suite(
+        quick,
+        machines,
+        spill_budget,
+        lcc::mpc::TransportMode::InProc,
+    ) {
         println!("{}", m.report_line());
     }
 }

@@ -6,8 +6,56 @@ use super::harness::{Bench, Measurement};
 use crate::cc::backend::{CpuBackend, DenseBackend};
 use crate::cc::common::{min_hop, Priorities};
 use crate::graph::{generators, ShardedGraph, SpillPolicy};
-use crate::mpc::{MpcConfig, Simulator};
+use crate::mpc::net::ProcTransport;
+use crate::mpc::{MpcConfig, Simulator, TransportMode};
 use crate::util::rng::Rng;
+
+/// L3 primitive on the multi-process transport: one min-hop round whose
+/// messages genuinely cross process boundaries (spawned workers fold
+/// them).  Only runs under `lcc perf --transport proc` — the worker
+/// binary is this executable.  Measures the per-round wire overhead
+/// against the in-process `L3/min_hop` rows.
+pub fn bench_proc_min_hop(
+    b: &Bench,
+    n: usize,
+    avg_deg: f64,
+    machines: usize,
+) -> Option<Measurement> {
+    let flat = generators::gnp(n, avg_deg / n as f64, &mut Rng::new(1));
+    let g = ShardedGraph::from_graph(&flat, machines);
+    let vals: Vec<u32> = (0..n as u32).collect();
+    let m = g.num_edges() as f64;
+    let bin = std::env::current_exe().ok()?;
+    let mut transport = match ProcTransport::spawn(machines, &bin) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("[perf] proc transport unavailable: {e}");
+            return None;
+        }
+    };
+    if let Err(e) = transport.load_graph(&g) {
+        eprintln!("[perf] proc shard distribution failed: {e}");
+        return None;
+    }
+    let mut sim = Simulator::with_transport(
+        MpcConfig {
+            machines,
+            space_per_machine: None,
+            spill_budget: None,
+            threads: 1,
+        },
+        Box::new(transport),
+    );
+    Some(b.run(
+        &format!("L3/proc_min_hop n={n} m={} machines={machines}", g.num_edges()),
+        Some(m),
+        || {
+            let out = min_hop(&mut sim, "bench", &g, &vals, true);
+            std::hint::black_box(out);
+            sim.metrics.rounds.clear();
+        },
+    ))
+}
 
 /// L3 primitive: one min-hop MPC round over a sharded G(n,p) graph,
 /// optionally under a residency budget (the out-of-core round path).
@@ -225,14 +273,18 @@ pub fn bench_dense_xla(b: &Bench, avg_deg: f64) -> Option<Measurement> {
 }
 
 /// The whole standard suite (used by `lcc perf [--machines N]
-/// [--spill-budget BYTES]` and `cargo bench`).  `machines` is the shard
-/// count every sharded bench runs under; `spill_budget` re-runs the
-/// sharded benches out-of-core (its rows are tagged `spilled` when the
-/// input exceeds the budget) and adds the spilled-contract primitive.
+/// [--spill-budget BYTES] [--transport proc]` and `cargo bench`).
+/// `machines` is the shard count every sharded bench runs under;
+/// `spill_budget` re-runs the sharded benches out-of-core (its rows are
+/// tagged `spilled` when the input exceeds the budget) and adds the
+/// spilled-contract primitive; `transport == Proc` adds the
+/// multi-process round primitive (the in-process rows still run — the
+/// point is the side-by-side).
 pub fn standard_suite(
     quick: bool,
     machines: usize,
     spill_budget: Option<u64>,
+    transport: TransportMode,
 ) -> Vec<Measurement> {
     let b = if quick { Bench::quick() } else { Bench::default() };
     let machines = machines.max(1);
@@ -252,6 +304,13 @@ pub fn standard_suite(
     if let Some(budget) = spill_budget {
         out.push(bench_spill_contract(&b, 100_000, 8.0, machines, budget));
     }
+    if transport == TransportMode::Proc {
+        // real processes: only meaningful from the lcc binary itself
+        // (current_exe must speak `worker`), so `cargo bench` never asks
+        if let Some(m) = bench_proc_min_hop(&b, 50_000, 8.0, machines) {
+            out.push(m);
+        }
+    }
     if let Some(m) = bench_dense_xla(&b, 16.0) {
         out.push(m);
     } else {
@@ -263,18 +322,22 @@ pub fn standard_suite(
 /// The standard suite as one machine-readable document — the schema of
 /// `BENCH_PR2.json` at the repo root (`lcc perf --quick --out FILE`), so
 /// the perf trajectory is tracked as a checked-in artifact from PR 1 on.
-/// `spill_budget` is recorded when set (the out-of-core protocol rows).
+/// `spill_budget` is recorded when set (the out-of-core protocol rows);
+/// the transport mode is always recorded so proc-transport artifacts are
+/// distinguishable in CI.
 pub fn suite_json(
     measurements: &[Measurement],
     quick: bool,
     machines: usize,
     spill_budget: Option<u64>,
+    transport: TransportMode,
 ) -> crate::util::json::Json {
     use crate::util::json::Json;
     let doc = Json::obj()
         .set("suite", "lcc-perf-standard")
         .set("quick", quick)
-        .set("machines", machines);
+        .set("machines", machines)
+        .set("transport", transport.name());
     let doc = match spill_budget {
         Some(b) => doc.set("spill_budget", b),
         None => doc,
@@ -323,13 +386,14 @@ mod tests {
             slow_cutoff_s: 30.0,
         };
         let ms = vec![bench_min_hop(&b, 500, 4.0, 2, 4, None)];
-        let doc = suite_json(&ms, true, 4, Some(1 << 20));
+        let doc = suite_json(&ms, true, 4, Some(1 << 20), TransportMode::InProc);
         assert_eq!(
             doc.get("spill_budget").and_then(|j| j.as_i64()),
             Some(1 << 20)
         );
         assert_eq!(doc.get("suite").and_then(|j| j.as_str()), Some("lcc-perf-standard"));
         assert_eq!(doc.get("machines").and_then(|j| j.as_i64()), Some(4));
+        assert_eq!(doc.get("transport").and_then(|j| j.as_str()), Some("inproc"));
         let benches = doc.get("benches").and_then(|j| j.as_arr()).unwrap();
         assert_eq!(benches.len(), 1);
         assert!(benches[0].get("median_s").and_then(|j| j.as_f64()).unwrap() > 0.0);

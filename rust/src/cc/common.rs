@@ -11,7 +11,7 @@
 
 use crate::graph::{Csr, ShardedGraph, Vertex};
 use crate::mpc::pool::{self, chunk_range};
-use crate::mpc::Simulator;
+use crate::mpc::{Simulator, WireFold};
 use crate::util::rng::Rng;
 
 /// Per-phase random ordering `rho` plus its inverse.
@@ -62,18 +62,22 @@ fn check_shards(g: &ShardedGraph, sim: &Simulator) {
 ///
 /// The message stream is one lazy chunk per **shard** (edges the shard
 /// owns, plus a `1/p` range of the self messages — an arbitrary but fixed
-/// assignment, legal because `op` is associative and commutative), so both
-/// the values and the metrics are functions of `machines` alone, never of
-/// `threads`.  The chunks load spilled shards on the workers that fold
-/// them ([`ShardedGraph::msg_chunks`]), so an out-of-core graph streams
-/// through the round with at most one shard per thread in RAM.
+/// assignment, legal because the fold is associative and commutative), so
+/// both the values and the metrics are functions of `machines` alone,
+/// never of `threads`.  The chunks load spilled shards on the workers
+/// that fold them ([`ShardedGraph::msg_chunks`]), so an out-of-core graph
+/// streams through the round with at most one shard per thread in RAM.
+///
+/// `fold` carries the op's wire identity ([`WireFold`]): on the
+/// multi-process transport a tagged fold is reduced by the worker
+/// processes owning the keys — same values, same metrics, real shuffle.
 pub fn neighborhood_fold<V>(
     sim: &mut Simulator,
     label: &str,
     g: &ShardedGraph,
     vals: &[V],
     include_self: bool,
-    op: fn(V, V) -> V,
+    fold: WireFold<V>,
 ) -> Vec<V>
 where
     V: crate::mpc::WireSize + Copy + Send + Sync,
@@ -108,7 +112,7 @@ where
             })
             .chain((sa..sb).map(move |v| (v as u64, vals[v])))
     });
-    sim.round_fold_sharded(label, &mut out, chunks, charge, op);
+    sim.round_fold_sharded_tagged(label, &mut out, chunks, charge, fold);
     out
 }
 
@@ -121,7 +125,7 @@ pub fn min_hop(
     vals: &[u32],
     include_self: bool,
 ) -> Vec<u32> {
-    neighborhood_fold(sim, label, g, vals, include_self, u32::min)
+    neighborhood_fold(sim, label, g, vals, include_self, WireFold::min_u32())
 }
 
 /// `max` over `N(v) (∪ {v})` — used by the MergeToLarge step to pick the
@@ -133,7 +137,7 @@ pub fn max_hop(
     vals: &[u32],
     include_self: bool,
 ) -> Vec<u32> {
-    neighborhood_fold(sim, label, g, vals, include_self, u32::max)
+    neighborhood_fold(sim, label, g, vals, include_self, WireFold::max_u32())
 }
 
 /// Two **fused** self-inclusive neighborhood hops (the `l_rho` two-hop of
@@ -147,15 +151,22 @@ pub fn max_hop(
 /// key loads coincide for hop 1 and hop 2 — and, with the sharded store,
 /// they fall directly out of [`ShardedGraph::hop_charge`]: the extra
 /// load-computation pass over the edge list the unsharded engine needed is
-/// gone.  `op` must be associative and commutative (min/max), which also
-/// makes the CSR evaluation order irrelevant.
+/// gone.  The fold must be associative and commutative (min/max), which
+/// also makes the CSR evaluation order irrelevant.
+///
+/// The fusion is a **shared-memory** optimization: both hops read the CSR
+/// in place, which no transport that actually moves bytes can replicate.
+/// On a wire transport the helper therefore runs the two real hop rounds
+/// instead — same values and same per-round metrics (that equivalence is
+/// exactly what `fused_two_hop_matches_two_min_hops_on_random_graphs`
+/// enforces), with the messages genuinely shuffled.
 pub fn fused_two_hop<V>(
     sim: &mut Simulator,
     labels: (&str, &str),
     g: &ShardedGraph,
     csr: &Csr,
     vals: &[V],
-    op: fn(V, V) -> V,
+    fold: WireFold<V>,
 ) -> Vec<V>
 where
     V: crate::mpc::WireSize + Copy + Send + Sync,
@@ -164,6 +175,11 @@ where
     debug_assert_eq!(vals.len(), n);
     debug_assert_eq!(csr.num_vertices(), n);
     check_shards(g, sim);
+    if sim.wire_mode() {
+        let h1 = neighborhood_fold(sim, labels.0, g, vals, true, fold);
+        return neighborhood_fold(sim, labels.1, g, &h1, true, fold);
+    }
+    let op = fold.f;
     let t = sim.cfg.threads.max(1);
 
     // Per-machine load of one hop round, straight from shard membership.
@@ -416,7 +432,14 @@ mod tests {
                     let mut s_fused = sim_threads(threads);
                     let csr = Csr::build_sharded(&g);
                     let fused =
-                        fused_two_hop(&mut s_fused, ("hop1", "hop2"), &g, &csr, &vals, u32::min);
+                        fused_two_hop(
+                            &mut s_fused,
+                            ("hop1", "hop2"),
+                            &g,
+                            &csr,
+                            &vals,
+                            WireFold::min_u32(),
+                        );
 
                     crate::prop_assert!(fused == h2, "values diverge (threads={threads})");
                     crate::prop_assert!(
@@ -438,7 +461,8 @@ mod tests {
         let vals: Vec<u32> = (0..800u32).rev().collect();
         let exec = |threads: usize, include_self: bool| {
             let mut s = sim_threads(threads);
-            let out = neighborhood_fold(&mut s, "t", &g, &vals, include_self, u32::min);
+            let out =
+                neighborhood_fold(&mut s, "t", &g, &vals, include_self, WireFold::min_u32());
             (out, s.metrics.rounds)
         };
         for include_self in [true, false] {

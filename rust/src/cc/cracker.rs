@@ -30,7 +30,14 @@ pub fn min_neighbor(g: &ShardedGraph, rho: &Priorities, sim: &mut Simulator) -> 
     let vals: Vec<(u32, u32)> = (0..n as u32)
         .map(|v| (rho.rho[v as usize], v))
         .collect();
-    let out = neighborhood_fold(sim, "cracker/min-nbr", g, &vals, true, |a, b| a.min(b));
+    let out = neighborhood_fold(
+        sim,
+        "cracker/min-nbr",
+        g,
+        &vals,
+        true,
+        crate::mpc::WireFold::min_pair_u32(),
+    );
     out.into_iter().map(|(_, v)| v).collect()
 }
 

@@ -82,7 +82,14 @@ pub fn phase_labels(
     // `min_hop` calls (enforced by
     // `fused_two_hop_matches_two_min_hops_on_random_graphs`).
     let csr = Csr::build_sharded(g);
-    let h2 = fused_two_hop(sim, ("lc/hop1", "lc/hop2"), g, &csr, &rho.rho, u32::min);
+    let h2 = fused_two_hop(
+        sim,
+        ("lc/hop1", "lc/hop2"),
+        g,
+        &csr,
+        &rho.rho,
+        crate::mpc::WireFold::min_u32(),
+    );
     h2.into_iter().map(|p| rho.inv[p as usize]).collect()
 }
 

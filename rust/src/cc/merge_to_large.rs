@@ -79,8 +79,22 @@ pub fn step(
     }
 
     // Two max-hops: best large node within distance <= 2 (self-inclusive).
-    let h1 = neighborhood_fold(sim, "mtl/hop1", contracted, &vals, true, u64::max);
-    let h2 = neighborhood_fold(sim, "mtl/hop2", contracted, &h1, true, u64::max);
+    let h1 = neighborhood_fold(
+        sim,
+        "mtl/hop1",
+        contracted,
+        &vals,
+        true,
+        crate::mpc::WireFold::max_u64(),
+    );
+    let h2 = neighborhood_fold(
+        sim,
+        "mtl/hop2",
+        contracted,
+        &h1,
+        true,
+        crate::mpc::WireFold::max_u64(),
+    );
 
     // Merge labels: the winning large node, or self if none reachable.
     let labels: Vec<Vertex> = h2

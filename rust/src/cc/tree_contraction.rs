@@ -36,7 +36,14 @@ pub fn build_pointers(g: &ShardedGraph, rho: &Priorities, sim: &mut Simulator) -
     let vals: Vec<(u32, u32)> = (0..n as u32)
         .map(|v| (rho.rho[v as usize], v))
         .collect();
-    let out = neighborhood_fold(sim, "tc/pointers", g, &vals, false, |a, b| a.min(b));
+    let out = neighborhood_fold(
+        sim,
+        "tc/pointers",
+        g,
+        &vals,
+        false,
+        crate::mpc::WireFold::min_pair_u32(),
+    );
     out.into_iter().map(|(_, target)| target).collect()
 }
 

@@ -1,9 +1,23 @@
-//! The run driver: configuration -> simulator -> algorithm -> report.
+//! The run driver: configuration -> transport -> engine -> algorithm ->
+//! report.
+//!
+//! The driver is where the round transport is selected
+//! ([`RunConfig::transport`]): `inproc` builds the classic single-process
+//! engine; `proc` spawns one `lcc worker` process per machine
+//! ([`crate::mpc::net::ProcTransport`]), ships each its shard, and runs
+//! the *same* algorithm code against the multi-process backend.
+//! Transport faults (worker crash, truncated frame, corrupted payload,
+//! accounting divergence) surface as typed
+//! [`TransportError`]s from the `try_*` entry points — the panicking
+//! entry points keep their historical signatures for in-process use.
+
+use std::panic::AssertUnwindSafe;
 
 use super::report::Report;
 use crate::cc::{self, CcAlgorithm, RunOptions};
 use crate::graph::{Graph, ShardedGraph};
-use crate::mpc::{MpcConfig, Simulator};
+use crate::mpc::net::ProcTransport;
+use crate::mpc::{MpcConfig, Simulator, TransportError, TransportMode};
 use crate::runtime::ShardExecutor;
 use crate::util::rng::Rng;
 
@@ -30,6 +44,13 @@ pub struct RunConfig {
     /// disk-backed shards through the same contraction loop.  `None` =
     /// unbounded.
     pub spill_budget: Option<u64>,
+    /// Round transport (`--transport`): `InProc` (default) or `Proc`
+    /// (spawn one worker process per machine on localhost).
+    pub transport: TransportMode,
+    /// Worker binary the proc transport spawns; `None` = this executable
+    /// (the `lcc` binary spawns itself as `lcc worker`).  Tests point it
+    /// at `env!("CARGO_BIN_EXE_lcc")`.
+    pub worker_bin: Option<std::path::PathBuf>,
     /// Cross-check the labels against the sequential oracle.
     pub verify: bool,
 }
@@ -49,6 +70,8 @@ impl Default for RunConfig {
             state_cap: 0,
             use_xla: false,
             spill_budget: None,
+            transport: TransportMode::InProc,
+            worker_bin: None,
             verify: false,
         }
     }
@@ -105,12 +128,20 @@ impl Driver {
     /// `cfg.machines` (the ingest step) under the configured residency
     /// budget and runs on the resident (or disk-backed) store.
     pub fn run_named(&self, g: &Graph, dataset: &str) -> Report {
+        self.try_run_named(g, dataset)
+            .unwrap_or_else(|e| panic!("transport failed: {e}"))
+    }
+
+    /// [`run_named`](Self::run_named) surfacing transport faults as typed
+    /// errors (the multi-process path; in-process runs cannot fail this
+    /// way).
+    pub fn try_run_named(&self, g: &Graph, dataset: &str) -> Result<Report, TransportError> {
         let sharded = ShardedGraph::from_graph_with(
             g,
             self.cfg.machines.max(1),
             self.spill_policy(),
         );
-        self.run_sharded_seeded(&sharded, dataset, self.cfg.seed)
+        self.try_run_sharded_seeded(&sharded, dataset, self.cfg.seed)
     }
 
     /// The residency policy every run of this driver shards under.
@@ -123,6 +154,17 @@ impl Driver {
     /// is re-partitioned shard-to-shard (`ShardedGraph::reshard`) — the
     /// edge list never round-trips through one flat vector.
     pub fn run_named_sharded(&self, g: &ShardedGraph, dataset: &str) -> Report {
+        self.try_run_named_sharded(g, dataset)
+            .unwrap_or_else(|e| panic!("transport failed: {e}"))
+    }
+
+    /// [`run_named_sharded`](Self::run_named_sharded) surfacing transport
+    /// faults as typed errors (the pipeline's proc-transport merge path).
+    pub fn try_run_named_sharded(
+        &self,
+        g: &ShardedGraph,
+        dataset: &str,
+    ) -> Result<Report, TransportError> {
         let machines = self.cfg.machines.max(1);
         let budgeted = self.cfg.spill_budget.is_some();
         if g.num_shards() != machines {
@@ -133,27 +175,60 @@ impl Driver {
             if budgeted {
                 r = r.with_policy(self.spill_policy());
             }
-            self.run_sharded_seeded(&r, dataset, self.cfg.seed)
+            self.try_run_sharded_seeded(&r, dataset, self.cfg.seed)
         } else if budgeted {
             // the run's generations must inherit the budget (and the
             // backend must match it), which lives on the graph: this is
             // the one path that needs an owned copy
             let g = g.clone().with_policy(self.spill_policy());
-            self.run_sharded_seeded(&g, dataset, self.cfg.seed)
+            self.try_run_sharded_seeded(&g, dataset, self.cfg.seed)
         } else {
             // default path: zero-copy
-            self.run_sharded_seeded(g, dataset, self.cfg.seed)
+            self.try_run_sharded_seeded(g, dataset, self.cfg.seed)
         }
     }
 
     fn run_sharded_seeded(&self, g: &ShardedGraph, dataset: &str, seed: u64) -> Report {
-        let algo = cc::by_name(&self.cfg.algorithm);
-        let mut sim = Simulator::new(MpcConfig {
+        self.try_run_sharded_seeded(g, dataset, seed)
+            .unwrap_or_else(|e| panic!("transport failed: {e}"))
+    }
+
+    /// Build the configured transport's engine for `g`.  The proc path
+    /// spawns the workers and distributes the shards before the first
+    /// round.
+    fn build_simulator(&self, g: &ShardedGraph) -> Result<Simulator, TransportError> {
+        let mpc = MpcConfig {
             machines: self.cfg.machines,
             space_per_machine: None,
             spill_budget: self.cfg.spill_budget,
             threads: self.cfg.threads,
-        });
+        };
+        match self.cfg.transport {
+            TransportMode::InProc => Ok(Simulator::new(mpc)),
+            TransportMode::Proc => {
+                let bin = match &self.cfg.worker_bin {
+                    Some(p) => p.clone(),
+                    None => std::env::current_exe().map_err(|e| TransportError::Io {
+                        worker: None,
+                        op: "locate worker binary",
+                        source: e,
+                    })?,
+                };
+                let mut transport = ProcTransport::spawn(self.cfg.machines.max(1), &bin)?;
+                transport.load_graph(g)?;
+                Ok(Simulator::with_transport(mpc, Box::new(transport)))
+            }
+        }
+    }
+
+    fn try_run_sharded_seeded(
+        &self,
+        g: &ShardedGraph,
+        dataset: &str,
+        seed: u64,
+    ) -> Result<Report, TransportError> {
+        let algo = cc::by_name(&self.cfg.algorithm);
+        let mut sim = self.build_simulator(g)?;
         let mut rng = Rng::new(seed);
         let xla_before = self.executor.as_ref().map(|e| e.calls.get()).unwrap_or(0);
         let opts = RunOptions {
@@ -167,7 +242,18 @@ impl Driver {
                 .map(|e| e as &dyn cc::backend::DenseBackend),
         };
         let t0 = std::time::Instant::now();
-        let res = algo.run_sharded(g, &mut sim, &mut rng, &opts);
+        // A transport failure aborts the algorithm by unwinding with the
+        // typed error as payload (see mpc::transport docs): catch it here
+        // and hand it back as a Result; any other panic is re-raised.
+        let res = match std::panic::catch_unwind(AssertUnwindSafe(|| {
+            algo.run_sharded(g, &mut sim, &mut rng, &opts)
+        })) {
+            Ok(res) => res,
+            Err(payload) => match payload.downcast::<TransportError>() {
+                Ok(e) => return Err(*e),
+                Err(other) => std::panic::resume_unwind(other),
+            },
+        };
         let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
 
         let mut report = Report::from_result(
@@ -178,12 +264,13 @@ impl Driver {
             &res,
             wall_ms,
         );
+        report.transport = self.cfg.transport.name().to_string();
         report.xla_calls =
             self.executor.as_ref().map(|e| e.calls.get()).unwrap_or(0) - xla_before;
         if self.cfg.verify {
             report.verified = Some(res.labels == cc::oracle::components_sharded(g));
         }
-        report
+        Ok(report)
     }
 
     /// Median-of-`k`-seeds wall time protocol (§6: "we have taken a median

@@ -8,6 +8,7 @@
 pub mod driver;
 pub mod pipeline;
 pub mod report;
+pub mod worker;
 
 pub use driver::{Driver, RunConfig};
 pub use pipeline::{PipelineConfig, PipelineResult, PipelineStats};

@@ -25,6 +25,8 @@ pub struct Report {
     pub verified: Option<bool>,
     /// Dense-backend executions (XLA artifact calls), if used.
     pub xla_calls: u64,
+    /// Round transport the run shuffled on (`"inproc"` / `"proc"`).
+    pub transport: String,
 }
 
 impl Report {
@@ -68,6 +70,7 @@ impl Report {
             wall_ms,
             verified: None,
             xla_calls: 0,
+            transport: "inproc".to_string(),
         }
     }
 
@@ -96,6 +99,7 @@ impl Report {
                 },
             )
             .set("xla_calls", self.xla_calls)
+            .set("transport", self.transport.as_str())
     }
 
     /// One-line human summary.

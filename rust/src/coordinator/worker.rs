@@ -1,0 +1,396 @@
+//! The worker process main loop (`lcc worker --connect HOST:PORT`).
+//!
+//! One worker process is one MPC machine of the multi-process transport
+//! ([`crate::mpc::net`]): it connects back to the coordinator, handshakes
+//! (`Hello`/`Assign` — the coordinator assigns the machine index), takes
+//! **custody of its edge shard** (validating the spill framing and
+//! independently re-deriving the shard statistics the coordinator's round
+//! charges are computed from — custody divergence is caught before any
+//! round runs), and then serves rounds until shutdown:
+//!
+//! * every round it counts the bytes it actually received (the
+//!   receiver-side load accounting the coordinator validates against the
+//!   model charge — for charge-only rounds the declared load is
+//!   acknowledged instead, the barrier half of a round whose bytes never
+//!   materialize);
+//! * fold rounds ([`crate::mpc::transport::WireOp`]-tagged hops) are
+//!   **reduced here**: the
+//!   worker folds its received `(key, value)` messages with the tagged
+//!   op and returns one folded pair per key it owns.
+//!
+//! Protocol violations the worker detects are answered with a
+//! `WorkerErr` frame (the coordinator surfaces them as typed
+//! [`TransportError::Protocol`]); I/O failures end the process.  EOF at a
+//! frame boundary means the coordinator is gone: exit cleanly.
+
+use std::io::{BufReader, BufWriter};
+use std::net::TcpStream;
+use std::path::Path;
+
+use crate::graph::spill::{self, ShardStats, SpillError};
+use crate::graph::Vertex;
+use crate::mpc::net::{
+    self, BodyReader, Frame, FrameKind, PROTO_VERSION,
+};
+use crate::mpc::simulator::machine_of;
+use crate::mpc::transport::TransportError;
+
+/// One worker's custody state.
+struct WorkerState {
+    worker_id: u32,
+    machines: u32,
+    /// The shard this machine owns (edges + independently derived stats),
+    /// once the coordinator shipped it.  Custody is load-bearing at load
+    /// time (framing + ownership validation, stats cross-check); the
+    /// edges themselves are held for the worker-side message-generation
+    /// step on the roadmap (today the coordinator still routes).
+    #[allow(dead_code)]
+    shard: Option<(Vec<(Vertex, Vertex)>, ShardStats)>,
+}
+
+/// Connect to the coordinator and serve until shutdown (the `lcc worker`
+/// subcommand).
+pub fn run_worker(connect: &str) -> Result<(), TransportError> {
+    let stream = TcpStream::connect(connect).map_err(|e| TransportError::Io {
+        worker: None,
+        op: "connect to coordinator",
+        source: e,
+    })?;
+    serve(stream)
+}
+
+/// Serve the worker protocol over an established stream (exposed so
+/// tests can run a worker against an in-test coordinator).
+pub fn serve(stream: TcpStream) -> Result<(), TransportError> {
+    stream.set_nodelay(true).map_err(|e| TransportError::Io {
+        worker: None,
+        op: "set nodelay",
+        source: e,
+    })?;
+    // a coordinator that stops draining must not block an ack write
+    // forever; reads stay untimed — idling between rounds is normal
+    stream
+        .set_write_timeout(Some(net::IO_TIMEOUT))
+        .map_err(|e| TransportError::Io {
+            worker: None,
+            op: "set write timeout",
+            source: e,
+        })?;
+    let mut reader = BufReader::new(stream.try_clone().map_err(|e| TransportError::Io {
+        worker: None,
+        op: "clone stream",
+        source: e,
+    })?);
+    let mut writer = BufWriter::new(stream);
+
+    // handshake: version + our pid (the coordinator aligns its spawned
+    // children to worker ids by it)
+    let mut hello = Vec::with_capacity(8);
+    hello.extend_from_slice(&PROTO_VERSION.to_le_bytes());
+    hello.extend_from_slice(&std::process::id().to_le_bytes());
+    net::write_frame(&mut writer, FrameKind::Hello, 0, &hello)?;
+    let assign = net::read_frame(&mut reader)?;
+    if assign.kind != FrameKind::Assign {
+        return Err(TransportError::Protocol {
+            worker: None,
+            detail: format!("expected Assign, got {:?}", assign.kind),
+        });
+    }
+    let mut r = BodyReader::new(&assign.body);
+    let version = r.u32("assign version")?;
+    if version != PROTO_VERSION {
+        return Err(TransportError::Protocol {
+            worker: None,
+            detail: format!("coordinator speaks protocol {version}, worker {PROTO_VERSION}"),
+        });
+    }
+    let worker_id = r.u32("worker id")?;
+    let machines = r.u32("machine count")?;
+    let mut state = WorkerState {
+        worker_id,
+        machines,
+        shard: None,
+    };
+
+    loop {
+        let frame = match net::read_frame(&mut reader) {
+            Ok(f) => f,
+            // EOF at a frame boundary: the coordinator dropped the
+            // connection (its transport was dropped) — clean exit.
+            Err(TransportError::ShortRead { got: 0, .. }) => return Ok(()),
+            Err(e) => return Err(e),
+        };
+        match frame.kind {
+            FrameKind::LoadShard => handle_load(&mut state, &frame, &mut writer)?,
+            FrameKind::Round => handle_round(&state, &frame, &mut writer)?,
+            FrameKind::Shutdown => {
+                net::write_frame(&mut writer, FrameKind::Bye, frame.seq, &[])?;
+                return Ok(());
+            }
+            other => {
+                worker_err(
+                    &mut writer,
+                    frame.seq,
+                    &format!("unexpected frame kind {other:?}"),
+                )?;
+            }
+        }
+    }
+}
+
+fn worker_err<W: std::io::Write>(
+    writer: &mut W,
+    seq: u64,
+    detail: &str,
+) -> Result<(), TransportError> {
+    net::write_frame(writer, FrameKind::WorkerErr, seq, detail.as_bytes())
+}
+
+/// Take custody of this machine's shard: validate the spill framing
+/// (magic, identity, length, payload checksum), enforce the
+/// shard-ownership invariant edge by edge, and re-derive the statistics
+/// the coordinator will cross-check.
+fn handle_load<W: std::io::Write>(
+    state: &mut WorkerState,
+    frame: &Frame,
+    writer: &mut W,
+) -> Result<(), TransportError> {
+    let mut r = BodyReader::new(&frame.body);
+    let parsed = (|| -> Result<(u32, Vec<(Vertex, Vertex)>, u64), SpillError> {
+        let shard = r
+            .u32("load shard index")
+            .map_err(|e| SpillError::Corrupt {
+                path: "<frame>".into(),
+                detail: e.to_string(),
+            })?;
+        let image_len = r.u64("load image length").map_err(|e| SpillError::Corrupt {
+            path: "<frame>".into(),
+            detail: e.to_string(),
+        })? as usize;
+        let image = r
+            .bytes(image_len, "load image")
+            .map_err(|e| SpillError::Corrupt {
+                path: "<frame>".into(),
+                detail: e.to_string(),
+            })?;
+        let (edges, checksum) =
+            spill::read_shard_bytes(image, shard, state.machines, Path::new("<frame>"))?;
+        Ok((shard, edges, checksum))
+    })();
+    let (shard, edges, checksum) = match parsed {
+        Ok(v) => v,
+        Err(e) => return worker_err(writer, frame.seq, &format!("shard image rejected: {e}")),
+    };
+    if shard != state.worker_id {
+        return worker_err(
+            writer,
+            frame.seq,
+            &format!("received shard {shard}, this machine is {}", state.worker_id),
+        );
+    }
+    // shard-ownership invariant, validated on the machine taking custody
+    let p = state.machines as usize;
+    for &(u, v) in &edges {
+        if u >= v || machine_of(u as u64, p) != state.worker_id as usize {
+            return worker_err(
+                writer,
+                frame.seq,
+                &format!("edge ({u},{v}) violates the shard-ownership invariant"),
+            );
+        }
+    }
+    let stats = ShardStats::from_edges(&edges, p, state.worker_id as usize);
+    let mut body = Vec::with_capacity(4 + 8 + 8 + 4 + 8 * p);
+    body.extend_from_slice(&shard.to_le_bytes());
+    body.extend_from_slice(&stats.len.to_le_bytes());
+    body.extend_from_slice(&checksum.to_le_bytes());
+    body.extend_from_slice(&(p as u32).to_le_bytes());
+    for &c in &stats.peer_counts {
+        body.extend_from_slice(&c.to_le_bytes());
+    }
+    net::write_frame(writer, FrameKind::LoadAck, frame.seq, &body)?;
+    state.shard = Some((edges, stats));
+    Ok(())
+}
+
+/// Serve one round: account the received bytes (or acknowledge the
+/// declared load of a charge-only round), fold when asked, ack.
+fn handle_round<W: std::io::Write>(
+    _state: &WorkerState,
+    frame: &Frame,
+    writer: &mut W,
+) -> Result<(), TransportError> {
+    let msg = match net::decode_round_body(&frame.body) {
+        Ok(m) => m,
+        Err(e) => return worker_err(writer, frame.seq, &format!("bad round body: {e}")),
+    };
+    let accounted = if msg.virtual_round {
+        msg.declared_bytes
+    } else {
+        msg.payload.len() as u64
+    };
+    let folded = match msg.fold {
+        None => Vec::new(),
+        Some(op) => match net::fold_wire_payload(op, msg.payload) {
+            Ok(f) => f,
+            Err(detail) => {
+                return worker_err(
+                    writer,
+                    frame.seq,
+                    &format!("round {:?}: {detail}", msg.label),
+                )
+            }
+        },
+    };
+    let mut body = Vec::with_capacity(8 + 8 + folded.len());
+    body.extend_from_slice(&accounted.to_le_bytes());
+    body.extend_from_slice(&(folded.len() as u64).to_le_bytes());
+    body.extend_from_slice(&folded);
+    net::write_frame(writer, FrameKind::RoundAck, frame.seq, &body)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    /// Drive a full worker session from an in-test coordinator thread:
+    /// handshake, shard custody, a data round, a fold round, a virtual
+    /// round, shutdown.
+    #[test]
+    fn worker_serves_the_protocol_end_to_end() {
+        let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let addr = listener.local_addr().unwrap();
+        let worker = std::thread::spawn(move || {
+            let stream = TcpStream::connect(addr).unwrap();
+            serve(stream)
+        });
+        let (coord, _) = listener.accept().unwrap();
+        let mut reader = BufReader::new(coord.try_clone().unwrap());
+        let mut writer = BufWriter::new(coord);
+
+        // handshake
+        let hello = net::read_frame(&mut reader).unwrap();
+        assert_eq!(hello.kind, FrameKind::Hello);
+        let p = 2u32;
+        let mut body = Vec::new();
+        body.extend_from_slice(&PROTO_VERSION.to_le_bytes());
+        body.extend_from_slice(&1u32.to_le_bytes()); // worker_id = 1
+        body.extend_from_slice(&p.to_le_bytes());
+        net::write_frame(&mut writer, FrameKind::Assign, 0, &body).unwrap();
+
+        // shard custody: edges owned by machine 1 of 2
+        let edges: Vec<(u32, u32)> = (0u32..50)
+            .filter(|&u| machine_of(u as u64, 2) == 1)
+            .map(|u| (u, u + 3))
+            .collect();
+        let (image, checksum) = spill::encode_shard_bytes(1, 2, &edges);
+        let mut body = Vec::new();
+        body.extend_from_slice(&1u32.to_le_bytes());
+        body.extend_from_slice(&(image.len() as u64).to_le_bytes());
+        body.extend_from_slice(&image);
+        net::write_frame(&mut writer, FrameKind::LoadShard, 1, &body).unwrap();
+        let ack = net::read_frame(&mut reader).unwrap();
+        assert_eq!(ack.kind, FrameKind::LoadAck);
+        let mut r = BodyReader::new(&ack.body);
+        assert_eq!(r.u32("shard").unwrap(), 1);
+        assert_eq!(r.u64("len").unwrap(), edges.len() as u64);
+        assert_eq!(r.u64("checksum").unwrap(), checksum);
+        let ack_p = r.u32("p").unwrap();
+        assert_eq!(ack_p, 2);
+        let want = ShardStats::from_edges(&edges, 2, 1);
+        for j in 0..2 {
+            assert_eq!(r.u64("peer").unwrap(), want.peer_counts[j]);
+        }
+
+        // a data round: 2 records of (key u64, u32), no fold
+        let mut payload = Vec::new();
+        for (k, v) in [(4u64, 9u32), (6, 2)] {
+            payload.extend_from_slice(&k.to_le_bytes());
+            payload.extend_from_slice(&v.to_le_bytes());
+        }
+        let body = net::encode_round_body(false, None, payload.len() as u64, "t", &payload);
+        net::write_frame(&mut writer, FrameKind::Round, 2, &body).unwrap();
+        let ack = net::read_frame(&mut reader).unwrap();
+        assert_eq!(ack.kind, FrameKind::RoundAck);
+        let mut r = BodyReader::new(&ack.body);
+        assert_eq!(r.u64("accounted").unwrap(), payload.len() as u64);
+        assert_eq!(r.u64("fold len").unwrap(), 0);
+
+        // a fold round: min over two values of one key
+        let mut payload = Vec::new();
+        for (k, v) in [(4u64, 9u32), (4, 2)] {
+            payload.extend_from_slice(&k.to_le_bytes());
+            payload.extend_from_slice(&v.to_le_bytes());
+        }
+        let body = net::encode_round_body(
+            false,
+            Some(crate::mpc::transport::WireOp::MinU32),
+            payload.len() as u64,
+            "hop",
+            &payload,
+        );
+        net::write_frame(&mut writer, FrameKind::Round, 3, &body).unwrap();
+        let ack = net::read_frame(&mut reader).unwrap();
+        let mut r = BodyReader::new(&ack.body);
+        assert_eq!(r.u64("accounted").unwrap(), payload.len() as u64);
+        let fl = r.u64("fold len").unwrap();
+        assert_eq!(fl, 12); // one (key u64, u32) pair
+        let pairs = r.bytes(fl as usize, "fold").unwrap();
+        assert_eq!(u64::from_le_bytes(pairs[..8].try_into().unwrap()), 4);
+        assert_eq!(u32::from_le_bytes(pairs[8..12].try_into().unwrap()), 2);
+
+        // a virtual (charge-only) round acks the declared load
+        let body = net::encode_round_body(true, None, 4242, "contract/left", &[]);
+        net::write_frame(&mut writer, FrameKind::Round, 4, &body).unwrap();
+        let ack = net::read_frame(&mut reader).unwrap();
+        let mut r = BodyReader::new(&ack.body);
+        assert_eq!(r.u64("accounted").unwrap(), 4242);
+
+        // shutdown
+        net::write_frame(&mut writer, FrameKind::Shutdown, 5, &[]).unwrap();
+        let bye = net::read_frame(&mut reader).unwrap();
+        assert_eq!(bye.kind, FrameKind::Bye);
+        worker.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn worker_rejects_a_foreign_shard_with_worker_err() {
+        let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let addr = listener.local_addr().unwrap();
+        let worker = std::thread::spawn(move || {
+            let stream = TcpStream::connect(addr).unwrap();
+            serve(stream)
+        });
+        let (coord, _) = listener.accept().unwrap();
+        let mut reader = BufReader::new(coord.try_clone().unwrap());
+        let mut writer = BufWriter::new(coord);
+        let _hello = net::read_frame(&mut reader).unwrap();
+        let mut body = Vec::new();
+        body.extend_from_slice(&PROTO_VERSION.to_le_bytes());
+        body.extend_from_slice(&0u32.to_le_bytes());
+        body.extend_from_slice(&2u32.to_le_bytes());
+        net::write_frame(&mut writer, FrameKind::Assign, 0, &body).unwrap();
+
+        // ship shard 1's image to worker 0: custody violation
+        let edges: Vec<(u32, u32)> = (0u32..50)
+            .filter(|&u| machine_of(u as u64, 2) == 1)
+            .map(|u| (u, u + 3))
+            .collect();
+        let (image, _) = spill::encode_shard_bytes(1, 2, &edges);
+        let mut body = Vec::new();
+        body.extend_from_slice(&1u32.to_le_bytes());
+        body.extend_from_slice(&(image.len() as u64).to_le_bytes());
+        body.extend_from_slice(&image);
+        net::write_frame(&mut writer, FrameKind::LoadShard, 1, &body).unwrap();
+        let ack = net::read_frame(&mut reader).unwrap();
+        assert_eq!(ack.kind, FrameKind::WorkerErr);
+        let detail = String::from_utf8_lossy(&ack.body).into_owned();
+        assert!(detail.contains("shard 1"), "{detail}");
+
+        net::write_frame(&mut writer, FrameKind::Shutdown, 2, &[]).unwrap();
+        let bye = net::read_frame(&mut reader).unwrap();
+        assert_eq!(bye.kind, FrameKind::Bye);
+        worker.join().unwrap().unwrap();
+    }
+}

@@ -49,6 +49,23 @@ pub fn read_pairs<R: Read>(r: &mut R, m: usize) -> std::io::Result<Vec<(Vertex, 
     Ok(edges)
 }
 
+/// Decode an in-memory little-endian pair payload (the inverse of
+/// [`write_pairs`]).  `bytes.len()` must be a multiple of [`PAIR_BYTES`]
+/// — callers validate lengths before decoding (the spill framing and the
+/// transport frames both do).
+pub fn decode_pairs(bytes: &[u8]) -> Vec<(Vertex, Vertex)> {
+    debug_assert_eq!(bytes.len() % PAIR_BYTES as usize, 0);
+    bytes
+        .chunks_exact(PAIR_BYTES as usize)
+        .map(|c| {
+            (
+                u32::from_le_bytes(c[0..4].try_into().unwrap()),
+                u32::from_le_bytes(c[4..8].try_into().unwrap()),
+            )
+        })
+        .collect()
+}
+
 /// Read a SNAP-style text edge list.  Vertex ids may be sparse; they are
 /// remapped to dense `0..n` in first-seen order.
 pub fn read_snap_text<P: AsRef<Path>>(path: P) -> Result<Graph> {

@@ -462,8 +462,10 @@ impl ShardedGraph {
     }
 
     /// RAM-cached payload checksum of shard `s` (`None` when resident —
-    /// resident comparisons are already in-memory).
-    fn shard_checksum(&self, s: usize) -> Option<u64> {
+    /// resident comparisons are already in-memory).  `pub(crate)` so the
+    /// multi-process transport can pin shipped shard files to the cached
+    /// generation without re-reading them.
+    pub(crate) fn shard_checksum(&self, s: usize) -> Option<u64> {
         match &self.store {
             Store::Resident(_) => None,
             Store::Spilled(sp) => Some(sp.shard_metas()[s].checksum),

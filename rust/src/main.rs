@@ -2,6 +2,7 @@
 //!
 //! Subcommands:
 //!   run       run one algorithm on a generated or loaded graph
+//!   worker    serve as one machine of the multi-process transport
 //!   pipeline  stream a graph through the sharded local-contraction pipeline
 //!   table1    regenerate Table 1 (dataset inventory)
 //!   table2    regenerate Table 2 (phases per algorithm)
@@ -13,8 +14,9 @@
 //!   runtime-check  smoke-test the compiled XLA artifacts
 
 use lcc::bench::{ablations, perf, tables, theory};
-use lcc::coordinator::{pipeline, Driver, PipelineConfig, RunConfig};
+use lcc::coordinator::{pipeline, worker, Driver, PipelineConfig, RunConfig};
 use lcc::graph::{generators, io};
+use lcc::mpc::TransportMode;
 use lcc::util::cli::Args;
 use lcc::util::json::Json;
 
@@ -27,6 +29,7 @@ fn main() {
         .unwrap_or("help");
     match cmd {
         "run" => cmd_run(&args),
+        "worker" => cmd_worker(&args),
         "pipeline" => cmd_pipeline(&args),
         "table1" => cmd_table(&args, 1),
         "table2" | "table3" => cmd_table(&args, if cmd == "table2" { 2 } else { 3 }),
@@ -49,19 +52,25 @@ fn main() {
 
 const HELP: &str = "lcc — Connected Components at Scale via Local Contractions
 
-USAGE: lcc <run|pipeline|table1|table2|table3|figure1|theory|ablation|perf|generate|runtime-check> [flags]
+USAGE: lcc <run|worker|pipeline|table1|table2|table3|figure1|theory|ablation|perf|generate|runtime-check> [flags]
 
 Common flags:
   --algo lc|lc-mtl|tc|tc-dht|cracker|two-phase|htm|hash-min
   --graph <preset|path|cycle|star|grid|gnp|gnp-log|file:PATH>   --n <vertices>
   --seed N  --machines N (simulated machines = shard count; run/pipeline/perf)
-  --spill-budget BYTES (resident edge-memory budget; larger graphs run
-                        with disk-backed shards; run/pipeline/perf)
+  --threads N (simulation threads; run)
+  --transport inproc|proc (round transport; proc spawns one worker process
+                           per machine on localhost; run/pipeline/perf)
+  --spill-budget BYTES[K|M|G] (resident edge-memory budget; larger graphs
+                        run with disk-backed shards; run/pipeline/perf)
   --finisher N  --use-xla  --verify  --json
   --out FILE (perf: write the machine-readable suite JSON, BENCH_PR2.json schema)
   --scale N (table/figure dataset size)  --runs N (median-of-N)
   --exp decay|depth|loglog|path|comm|cycles (theory)
-  --exp finisher|pruning|mtl|machines|dense (ablation)";
+  --exp finisher|pruning|mtl|machines|dense (ablation)
+
+Worker mode (spawned by the proc transport; not for direct use):
+  lcc worker --connect HOST:PORT";
 
 /// Build the graph a command operates on.
 fn load_graph(args: &Args) -> (lcc::graph::Graph, String) {
@@ -100,10 +109,15 @@ fn load_graph(args: &Args) -> (lcc::graph::Graph, String) {
     (g, spec)
 }
 
-/// `--spill-budget BYTES` (None = unbounded residency).
+/// `--spill-budget BYTES[K|M|G]` (None = unbounded residency), validated
+/// at the flag with a clear error.
 fn spill_budget(args: &Args) -> Option<u64> {
-    args.str_opt("spill-budget")
-        .map(|v| v.parse().unwrap_or_else(|e| panic!("--spill-budget: cannot parse {v:?}: {e}")))
+    args.byte_size_opt("spill-budget")
+}
+
+/// `--transport inproc|proc`.
+fn transport(args: &Args) -> TransportMode {
+    TransportMode::parse(&args.str_or("transport", "inproc"))
 }
 
 fn cmd_run(args: &Args) {
@@ -111,18 +125,26 @@ fn cmd_run(args: &Args) {
     let cfg = RunConfig {
         algorithm: args.str_or("algo", "lc"),
         seed: args.u64_or("seed", 42),
-        machines: args.usize_or("machines", 16),
+        machines: args.nonzero_usize_or("machines", 16),
+        threads: args.nonzero_usize_or("threads", lcc::mpc::pool::default_threads().max(1)),
         finisher_threshold: args.usize_or("finisher", 0),
         prune_isolated: args.bool_or("prune-isolated", true),
         max_phases: args.u64_or("max-phases", 200) as u32,
         state_cap: args.u64_or("state-cap", 0),
         use_xla: args.bool_or("use-xla", false),
         spill_budget: spill_budget(args),
+        transport: transport(args),
         verify: args.bool_or("verify", true),
         ..Default::default()
     };
     let driver = Driver::new(cfg);
-    let report = driver.run_named(&g, &name);
+    let report = match driver.try_run_named(&g, &name) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("transport error: {e}");
+            std::process::exit(3);
+        }
+    };
     if args.bool_or("json", false) {
         println!("{}", report.to_json().pretty());
     } else {
@@ -134,12 +156,23 @@ fn cmd_run(args: &Args) {
     }
 }
 
+fn cmd_worker(args: &Args) {
+    let connect = args
+        .str_opt("connect")
+        .unwrap_or_else(|| panic!("worker: --connect HOST:PORT is required"))
+        .to_string();
+    if let Err(e) = worker::run_worker(&connect) {
+        eprintln!("worker: {e}");
+        std::process::exit(1);
+    }
+}
+
 fn cmd_pipeline(args: &Args) {
     let (g, name) = load_graph(args);
     let cfg = PipelineConfig {
-        num_workers: args.usize_or("workers", 4),
-        chunk_size: args.usize_or("chunk", 64 * 1024),
-        channel_capacity: args.usize_or("capacity", 4),
+        num_workers: args.nonzero_usize_or("workers", 4),
+        chunk_size: args.nonzero_usize_or("chunk", 64 * 1024),
+        channel_capacity: args.nonzero_usize_or("capacity", 4),
         spill_budget: spill_budget(args),
     };
     let t0 = std::time::Instant::now();
@@ -151,13 +184,20 @@ fn cmd_pipeline(args: &Args) {
     // dense backend when requested.
     let driver = Driver::new(RunConfig {
         algorithm: args.str_or("algo", "lc"),
-        machines: args.usize_or("machines", 16),
+        machines: args.nonzero_usize_or("machines", 16),
         use_xla: args.bool_or("use-xla", true),
         spill_budget: spill_budget(args),
+        transport: transport(args),
         verify: false,
         ..Default::default()
     });
-    let merge_report = driver.run_named_sharded(&res.summary, "summary");
+    let merge_report = match driver.try_run_named_sharded(&res.summary, "summary") {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("transport error: {e}");
+            std::process::exit(3);
+        }
+    };
     let wall = t0.elapsed().as_secs_f64() * 1e3;
 
     let labels = pipeline::merge_summary(&res.summary);
@@ -192,7 +232,7 @@ fn sweep_config(args: &Args) -> tables::SweepConfig {
         finisher_frac: args.f64_or("finisher-frac", 0.01),
         htm_state_factor: args.u64_or("htm-state-factor", 20),
         use_xla: args.bool_or("use-xla", false),
-        machines: args.usize_or("machines", 16),
+        machines: args.nonzero_usize_or("machines", 16),
     }
 }
 
@@ -251,16 +291,17 @@ fn cmd_ablation(args: &Args) {
 
 fn cmd_perf(args: &Args) {
     let quick = args.bool_or("quick", false);
-    let machines = args.usize_or("machines", 16);
+    let machines = args.nonzero_usize_or("machines", 16);
     let budget = spill_budget(args);
-    let measurements = perf::standard_suite(quick, machines, budget);
+    let mode = transport(args);
+    let measurements = perf::standard_suite(quick, machines, budget, mode);
     for m in &measurements {
         println!("{}", m.report_line());
     }
     let want_json = args.bool_or("json", false);
     let out_path = args.str_opt("out").map(String::from);
     if want_json || out_path.is_some() {
-        let doc = perf::suite_json(&measurements, quick, machines, budget);
+        let doc = perf::suite_json(&measurements, quick, machines, budget, mode);
         let text = doc.pretty();
         if let Some(path) = &out_path {
             std::fs::write(path, &text)

@@ -69,52 +69,154 @@ impl Metrics {
     }
 }
 
-/// Wire-size model for shuffled values.
+/// Wire model for shuffled values: size, encoding, decoding.
 ///
 /// The simulator charges `8 (key) + value.wire_size()` bytes per message —
-/// the natural encoding a MapReduce shuffle would use.
+/// the natural encoding a MapReduce shuffle would use.  `encode_wire` IS
+/// that encoding (little-endian), so on a wire transport the bytes that
+/// physically cross the process boundary are exactly the bytes the model
+/// charges: `encode_wire` must append precisely `wire_size()` bytes, and
+/// `decode_wire` must invert it.  The round-trip is enforced by the tests
+/// below and, at run time, by the receiver-side accounting every proc
+/// round validates against the charge.
 pub trait WireSize {
     fn wire_size(&self) -> u64;
+
+    /// Append exactly [`wire_size`](WireSize::wire_size) bytes to `out`.
+    fn encode_wire(&self, out: &mut Vec<u8>);
+
+    /// Decode one value from the front of `bytes`, returning it and the
+    /// bytes consumed; `None` on short or malformed input.
+    fn decode_wire(bytes: &[u8]) -> Option<(Self, usize)>
+    where
+        Self: Sized;
 }
 
 impl WireSize for u32 {
     fn wire_size(&self) -> u64 {
         4
     }
+    fn encode_wire(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+    fn decode_wire(bytes: &[u8]) -> Option<(u32, usize)> {
+        let b = bytes.get(..4)?;
+        Some((u32::from_le_bytes(b.try_into().unwrap()), 4))
+    }
 }
 impl WireSize for u64 {
     fn wire_size(&self) -> u64 {
         8
+    }
+    fn encode_wire(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+    fn decode_wire(bytes: &[u8]) -> Option<(u64, usize)> {
+        let b = bytes.get(..8)?;
+        Some((u64::from_le_bytes(b.try_into().unwrap()), 8))
     }
 }
 impl WireSize for i64 {
     fn wire_size(&self) -> u64 {
         8
     }
+    fn encode_wire(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+    fn decode_wire(bytes: &[u8]) -> Option<(i64, usize)> {
+        let b = bytes.get(..8)?;
+        Some((i64::from_le_bytes(b.try_into().unwrap()), 8))
+    }
 }
 impl WireSize for () {
     fn wire_size(&self) -> u64 {
         0
+    }
+    fn encode_wire(&self, _out: &mut Vec<u8>) {}
+    fn decode_wire(_bytes: &[u8]) -> Option<((), usize)> {
+        Some(((), 0))
     }
 }
 impl<A: WireSize, B: WireSize> WireSize for (A, B) {
     fn wire_size(&self) -> u64 {
         self.0.wire_size() + self.1.wire_size()
     }
+    fn encode_wire(&self, out: &mut Vec<u8>) {
+        self.0.encode_wire(out);
+        self.1.encode_wire(out);
+    }
+    fn decode_wire(bytes: &[u8]) -> Option<((A, B), usize)> {
+        let (a, na) = A::decode_wire(bytes)?;
+        let (b, nb) = B::decode_wire(&bytes[na..])?;
+        Some(((a, b), na + nb))
+    }
 }
 impl<A: WireSize, B: WireSize, C: WireSize> WireSize for (A, B, C) {
     fn wire_size(&self) -> u64 {
         self.0.wire_size() + self.1.wire_size() + self.2.wire_size()
+    }
+    fn encode_wire(&self, out: &mut Vec<u8>) {
+        self.0.encode_wire(out);
+        self.1.encode_wire(out);
+        self.2.encode_wire(out);
+    }
+    fn decode_wire(bytes: &[u8]) -> Option<((A, B, C), usize)> {
+        let (a, na) = A::decode_wire(bytes)?;
+        let (b, nb) = B::decode_wire(&bytes[na..])?;
+        let (c, nc) = C::decode_wire(&bytes[na + nb..])?;
+        Some(((a, b, c), na + nb + nc))
     }
 }
 impl<T: WireSize> WireSize for Vec<T> {
     fn wire_size(&self) -> u64 {
         8 + self.iter().map(|x| x.wire_size()).sum::<u64>()
     }
+    fn encode_wire(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&(self.len() as u64).to_le_bytes());
+        for x in self {
+            x.encode_wire(out);
+        }
+    }
+    fn decode_wire(bytes: &[u8]) -> Option<(Vec<T>, usize)> {
+        let (len, mut off) = u64::decode_wire(bytes)?;
+        // grow as decoded: a garbage length must not pre-allocate — and
+        // must not spin either, so every element has to consume bytes
+        // (zero-size elements are unrepresentable on the wire: their
+        // count would be bounded by nothing but the declared length)
+        let mut v = Vec::new();
+        for _ in 0..len {
+            let (x, n) = T::decode_wire(&bytes[off..])?;
+            if n == 0 {
+                return None;
+            }
+            off += n;
+            v.push(x);
+        }
+        Some((v, off))
+    }
 }
 impl<T: WireSize> WireSize for Option<T> {
     fn wire_size(&self) -> u64 {
         1 + self.as_ref().map(|x| x.wire_size()).unwrap_or(0)
+    }
+    fn encode_wire(&self, out: &mut Vec<u8>) {
+        match self {
+            None => out.push(0),
+            Some(x) => {
+                out.push(1);
+                x.encode_wire(out);
+            }
+        }
+    }
+    fn decode_wire(bytes: &[u8]) -> Option<(Option<T>, usize)> {
+        match *bytes.first()? {
+            0 => Some((None, 1)),
+            1 => {
+                let (x, n) = T::decode_wire(&bytes[1..])?;
+                Some((Some(x), 1 + n))
+            }
+            _ => None,
+        }
     }
 }
 
@@ -155,6 +257,49 @@ mod tests {
         assert_eq!(vec![1u32, 2u32].wire_size(), 16);
         assert_eq!(Some(1u32).wire_size(), 5);
         assert_eq!(None::<u32>.wire_size(), 1);
+    }
+
+    fn roundtrip<T: WireSize + PartialEq + std::fmt::Debug>(v: T) {
+        let mut buf = Vec::new();
+        v.encode_wire(&mut buf);
+        assert_eq!(buf.len() as u64, v.wire_size(), "{v:?}");
+        // a trailing byte must not confuse the consumed count
+        buf.push(0xEE);
+        let (back, used) = T::decode_wire(&buf).expect("decode");
+        assert_eq!(back, v);
+        assert_eq!(used as u64, v.wire_size());
+    }
+
+    #[test]
+    fn wire_encoding_mirrors_wire_size() {
+        roundtrip(7u32);
+        roundtrip(u64::MAX - 3);
+        roundtrip(-9i64);
+        roundtrip(());
+        roundtrip((1u32, 2u32));
+        roundtrip((1u64, 2u32, 3u32));
+        roundtrip(vec![5u32, 6, 7]);
+        roundtrip(Vec::<u32>::new());
+        roundtrip(Some((4u32, 2u32)));
+        roundtrip(None::<u32>);
+    }
+
+    #[test]
+    fn decode_rejects_short_and_garbage_input() {
+        assert!(u32::decode_wire(&[1, 2, 3]).is_none());
+        assert!(<(u32, u32)>::decode_wire(&[0; 7]).is_none());
+        // Vec with a declared length far beyond the buffer: no
+        // pre-allocation, clean None
+        let mut buf = Vec::new();
+        (u64::MAX).encode_wire(&mut buf);
+        assert!(Vec::<u32>::decode_wire(&buf).is_none());
+        // zero-size elements would make the declared length the only
+        // bound — the decoder must refuse rather than spin
+        assert!(Vec::<()>::decode_wire(&buf).is_none());
+        let mut one = Vec::new();
+        1u64.encode_wire(&mut one);
+        assert!(Vec::<()>::decode_wire(&one).is_none());
+        assert!(Option::<u32>::decode_wire(&[9]).is_none());
     }
 
     #[test]

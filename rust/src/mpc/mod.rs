@@ -1,10 +1,32 @@
 //! MPC(ε = 0) execution substrate (§2.1 of the paper).
 //!
-//! The simulator gives the algorithms the exact interface the paper's model
-//! defines — rounds of local computation + key-shuffled communication, an
-//! optional distributed hash table — while measuring the model-level
-//! quantities every claim is stated in: rounds, shuffled bytes, per-machine
-//! load.
+//! The round engine gives the algorithms the exact interface the paper's
+//! model defines — rounds of local computation + key-shuffled
+//! communication, an optional distributed hash table — while measuring
+//! the model-level quantities every claim is stated in: rounds, shuffled
+//! bytes, per-machine load.
+//!
+//! **The transport boundary.**  *How a round shuffles* is a trait, not a
+//! hard-coded simulator: every round completes through
+//! [`transport::Exchange`], which owns message routing, per-machine load
+//! accounting, and barrier semantics.  [`Simulator`] is the engine over
+//! that boundary; two backends implement it:
+//!
+//! * [`transport::InProcess`] (default) — machines share the address
+//!   space; messages never serialize; the exchange is a pure accounting
+//!   barrier.  All the parallel fast paths below run on this backend.
+//! * [`net::ProcTransport`] — one worker **process** per machine
+//!   (`lcc worker`), each owning its [`crate::graph::EdgeShard`] (shipped
+//!   in the spill file framing — a spilled shard goes on the wire as its
+//!   raw file bytes), exchanging length-prefixed checksummed frames per
+//!   round.  The hop folds are reduced *by the workers* ([`WireOp`]
+//!   tags); every other round ships its exact charged byte image for
+//!   receiver-side accounting.  Worker crash, frame truncation, and
+//!   payload corruption are typed [`TransportError`]s.
+//!
+//! The eight algorithms and the contraction loop never see the backend:
+//! labels, per-round [`Metrics`], and derived graphs are bit-identical
+//! across transports (`rust/tests/transport_equivalence.rs`).
 //!
 //! **Shard-ownership invariant.**  [`MpcConfig::machines`] is the single
 //! source of the shard count: the resident [`crate::graph::ShardedGraph`]
@@ -14,7 +36,9 @@
 //! round entry points ([`Simulator::round_fold_sharded`],
 //! [`Simulator::round_map_sharded`]) consume one message chunk per shard
 //! and a pre-computed [`ShardRound`] charge derived from cached shard
-//! statistics — no `machine_of` recomputation per message.  The legacy
+//! statistics — no `machine_of` recomputation per message in-process (the
+//! wire backend does route per message: it genuinely moves the bytes, and
+//! the receiver counts *validate* the shard-derived charges).  The legacy
 //! per-message-accounted rounds (`round`, `round_fold`, `round_map` and
 //! their chunked forms) remain the reference semantics the sharded paths
 //! are tested against.
@@ -31,10 +55,16 @@
 
 pub mod dht;
 pub mod metrics;
+pub mod net;
 pub mod pool;
 pub mod simulator;
+pub mod transport;
 
 pub use dht::Dht;
 pub use metrics::{Metrics, RoundMetrics, WireSize};
 pub use pool::WorkerPool;
 pub use simulator::{MpcConfig, ShardRound, Simulator};
+pub use transport::{
+    Exchange, ExchangeAck, InProcess, RoundCharge, TransportError, TransportMode, WireFold,
+    WireOp,
+};

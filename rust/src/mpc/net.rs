@@ -1,0 +1,1114 @@
+//! The multi-process round transport: length-prefixed, checksummed frames
+//! over localhost sockets, one worker **process** per simulated machine.
+//!
+//! This is the wire half of the [`super::transport::Exchange`] boundary.
+//! The coordinator (the `lcc` binary running a driver) spawns `machines`
+//! copies of `lcc worker`, hands each its [`crate::graph::EdgeShard`]
+//! serialized in the spill file framing
+//! ([`crate::graph::spill::encode_shard_bytes`] — a shard that is already
+//! spilled ships as its raw file bytes, no rehydration), and then drives
+//! one [`FrameKind::Round`] exchange per model round:
+//!
+//! * each machine receives its exact charged byte image (8-byte key +
+//!   [`crate::mpc::WireSize`] value encoding — the same bytes the model
+//!   counts), counts and checksums it on the **receiving side**, and for
+//!   fold rounds tagged with a [`WireOp`] reduces the messages itself and
+//!   returns the folded pairs;
+//! * the coordinator collects every acknowledgement before the round
+//!   completes — the barrier — and the simulator validates the
+//!   receiver-observed loads against the model charge.
+//!
+//! **Frame format** (all integers little-endian):
+//!
+//! ```text
+//! LCCFRME1 | kind u8 | seq u64 | body_len u64 | fnv1a64(body) u64 | body
+//! ```
+//!
+//! Every fault mode is a typed [`TransportError`]: a killed worker
+//! surfaces as [`TransportError::WorkerCrashed`] (or a short read, if the
+//! connection dies mid-frame), a truncated frame as
+//! [`TransportError::ShortRead`], a corrupted body as
+//! [`TransportError::ChecksumMismatch`] — never a hang (reads carry
+//! generous timeouts) and never a silently-wrong answer (accounting and
+//! shard statistics are cross-checked between the processes).
+//!
+//! The worker-side loop lives in [`crate::coordinator::worker`].
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::Path;
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use super::transport::{Exchange, ExchangeAck, RoundCharge, TransportError, WireOp};
+use crate::graph::spill::{self, Fnv1a};
+use crate::graph::ShardedGraph;
+
+/// Magic prefix of every transport frame.
+pub const FRAME_MAGIC: &[u8; 8] = b"LCCFRME1";
+/// Protocol version exchanged in the handshake.
+pub const PROTO_VERSION: u32 = 1;
+/// Sanity cap on a peer-declared frame body, 4 GiB (a garbage length
+/// must not drive a huge allocation).
+pub const MAX_FRAME_BODY: u64 = 1 << 32;
+/// magic + kind + seq + len + checksum.
+const FRAME_HEADER_BYTES: u64 = 8 + 1 + 8 + 8 + 8;
+
+/// Per-read/per-write socket timeout: a wedged peer (one that neither
+/// answers nor drains) becomes a typed I/O error, not a hang.
+pub const IO_TIMEOUT: Duration = Duration::from_secs(120);
+/// How long the coordinator waits for all workers to connect.
+const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(20);
+
+/// Frame discriminators.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrameKind {
+    /// worker → coordinator, first frame after connect: `version u32 |
+    /// pid u32` (the pid lets the coordinator align spawned children
+    /// with the accept-order worker ids).
+    Hello,
+    /// coordinator → worker: `version u32 | worker_id u32 | machines u32`.
+    Assign,
+    /// coordinator → worker: `shard u32 | image_len u64 | image` (the
+    /// spill shard-file framing, shipped verbatim).
+    LoadShard,
+    /// worker → coordinator: `shard u32 | len u64 | checksum u64 |
+    /// p u32 | peer_counts p × u64` — the worker's independently
+    /// recomputed shard statistics.
+    LoadAck,
+    /// coordinator → worker: `virtual u8 | wire_op u8 | declared u64 |
+    /// label_len u16 | label | payload_len u64 | payload`.
+    Round,
+    /// worker → coordinator: `accounted u64 | fold_len u64 | fold pairs`.
+    RoundAck,
+    /// coordinator → worker: empty body; the worker replies [`FrameKind::Bye`]
+    /// and exits.
+    Shutdown,
+    Bye,
+    /// worker → coordinator: utf-8 detail of a protocol violation the
+    /// worker detected (surfaced as [`TransportError::Protocol`]).
+    WorkerErr,
+}
+
+impl FrameKind {
+    pub fn code(self) -> u8 {
+        match self {
+            FrameKind::Hello => 1,
+            FrameKind::Assign => 2,
+            FrameKind::LoadShard => 3,
+            FrameKind::LoadAck => 4,
+            FrameKind::Round => 5,
+            FrameKind::RoundAck => 6,
+            FrameKind::Shutdown => 7,
+            FrameKind::Bye => 8,
+            FrameKind::WorkerErr => 9,
+        }
+    }
+
+    pub fn from_code(code: u8) -> Option<FrameKind> {
+        Some(match code {
+            1 => FrameKind::Hello,
+            2 => FrameKind::Assign,
+            3 => FrameKind::LoadShard,
+            4 => FrameKind::LoadAck,
+            5 => FrameKind::Round,
+            6 => FrameKind::RoundAck,
+            7 => FrameKind::Shutdown,
+            8 => FrameKind::Bye,
+            9 => FrameKind::WorkerErr,
+            _ => return None,
+        })
+    }
+}
+
+/// One decoded frame.
+#[derive(Debug)]
+pub struct Frame {
+    pub kind: FrameKind,
+    pub seq: u64,
+    pub body: Vec<u8>,
+}
+
+fn io_err(op: &'static str, e: std::io::Error) -> TransportError {
+    TransportError::Io {
+        worker: None,
+        op,
+        source: e,
+    }
+}
+
+/// `read_exact` that reports how many bytes actually arrived, so a peer
+/// dying mid-frame is a [`TransportError::ShortRead`] with real numbers.
+fn read_exact_counted<R: Read>(
+    r: &mut R,
+    buf: &mut [u8],
+    op: &'static str,
+) -> Result<(), TransportError> {
+    let mut filled = 0;
+    while filled < buf.len() {
+        match r.read(&mut buf[filled..]) {
+            Ok(0) => {
+                return Err(TransportError::ShortRead {
+                    worker: None,
+                    wanted: buf.len() as u64,
+                    got: filled as u64,
+                })
+            }
+            Ok(k) => filled += k,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(io_err(op, e)),
+        }
+    }
+    Ok(())
+}
+
+/// Write one frame (header + checksummed body) and flush.
+pub fn write_frame<W: Write>(
+    w: &mut W,
+    kind: FrameKind,
+    seq: u64,
+    body: &[u8],
+) -> Result<(), TransportError> {
+    write_frame_parts(w, kind, seq, body, &[])
+}
+
+/// [`write_frame`] with the body supplied as two parts (the checksum and
+/// declared length cover their concatenation): lets the round path send
+/// its fixed header fields plus the payload buffer **without copying the
+/// payload into a fresh body vector** — every shuffled byte would
+/// otherwise be memcpy'd once more per round.
+pub fn write_frame_parts<W: Write>(
+    w: &mut W,
+    kind: FrameKind,
+    seq: u64,
+    head: &[u8],
+    tail: &[u8],
+) -> Result<(), TransportError> {
+    let mut h = Fnv1a::new();
+    h.update(head);
+    h.update(tail);
+    let checksum = h.finish();
+    let body_len = head.len() as u64 + tail.len() as u64;
+    let mut header = Vec::with_capacity(FRAME_HEADER_BYTES as usize);
+    header.extend_from_slice(FRAME_MAGIC);
+    header.push(kind.code());
+    header.extend_from_slice(&seq.to_le_bytes());
+    header.extend_from_slice(&body_len.to_le_bytes());
+    header.extend_from_slice(&checksum.to_le_bytes());
+    w.write_all(&header).map_err(|e| io_err("write frame header", e))?;
+    w.write_all(head).map_err(|e| io_err("write frame body", e))?;
+    if !tail.is_empty() {
+        w.write_all(tail).map_err(|e| io_err("write frame body", e))?;
+    }
+    w.flush().map_err(|e| io_err("flush frame", e))
+}
+
+/// Read and validate one frame: magic, kind, declared length (sanity
+/// capped), body checksum.  Truncation → [`TransportError::ShortRead`],
+/// corruption → [`TransportError::ChecksumMismatch`].
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Frame, TransportError> {
+    let mut header = [0u8; FRAME_HEADER_BYTES as usize];
+    read_exact_counted(r, &mut header, "read frame header")?;
+    if &header[..8] != FRAME_MAGIC {
+        return Err(TransportError::BadMagic { worker: None });
+    }
+    let kind = FrameKind::from_code(header[8]).ok_or_else(|| TransportError::Protocol {
+        worker: None,
+        detail: format!("unknown frame kind {}", header[8]),
+    })?;
+    let seq = u64::from_le_bytes(header[9..17].try_into().unwrap());
+    let body_len = u64::from_le_bytes(header[17..25].try_into().unwrap());
+    let expected = u64::from_le_bytes(header[25..33].try_into().unwrap());
+    if body_len > MAX_FRAME_BODY {
+        return Err(TransportError::Protocol {
+            worker: None,
+            detail: format!("frame declares {body_len}-byte body (cap {MAX_FRAME_BODY})"),
+        });
+    }
+    let mut body = vec![0u8; body_len as usize];
+    read_exact_counted(r, &mut body, "read frame body")?;
+    let mut h = Fnv1a::new();
+    h.update(&body);
+    let actual = h.finish();
+    if actual != expected {
+        return Err(TransportError::ChecksumMismatch {
+            worker: None,
+            expected,
+            actual,
+        });
+    }
+    Ok(Frame { kind, seq, body })
+}
+
+// ---------------------------------------------------------------------------
+// body codecs
+
+/// Cursor over a frame body; shortage is a typed protocol error.
+pub struct BodyReader<'a> {
+    bytes: &'a [u8],
+    off: usize,
+}
+
+impl<'a> BodyReader<'a> {
+    pub fn new(bytes: &'a [u8]) -> BodyReader<'a> {
+        BodyReader { bytes, off: 0 }
+    }
+
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8], TransportError> {
+        let end = self.off.checked_add(n).filter(|&e| e <= self.bytes.len());
+        match end {
+            Some(end) => {
+                let s = &self.bytes[self.off..end];
+                self.off = end;
+                Ok(s)
+            }
+            None => Err(TransportError::Protocol {
+                worker: None,
+                detail: format!("frame body too short reading {what}"),
+            }),
+        }
+    }
+
+    pub fn u8(&mut self, what: &str) -> Result<u8, TransportError> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    pub fn u16(&mut self, what: &str) -> Result<u16, TransportError> {
+        Ok(u16::from_le_bytes(self.take(2, what)?.try_into().unwrap()))
+    }
+
+    pub fn u32(&mut self, what: &str) -> Result<u32, TransportError> {
+        Ok(u32::from_le_bytes(self.take(4, what)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self, what: &str) -> Result<u64, TransportError> {
+        Ok(u64::from_le_bytes(self.take(8, what)?.try_into().unwrap()))
+    }
+
+    pub fn bytes(&mut self, n: usize, what: &str) -> Result<&'a [u8], TransportError> {
+        self.take(n, what)
+    }
+
+    pub fn expect_end(&self, what: &str) -> Result<(), TransportError> {
+        if self.off == self.bytes.len() {
+            Ok(())
+        } else {
+            Err(TransportError::Protocol {
+                worker: None,
+                detail: format!(
+                    "{what}: {} trailing bytes in frame body",
+                    self.bytes.len() - self.off
+                ),
+            })
+        }
+    }
+}
+
+/// The fixed fields of a [`FrameKind::Round`] body — everything except
+/// the payload bytes themselves, which the coordinator appends zero-copy
+/// via [`write_frame_parts`].
+pub fn encode_round_head(
+    virtual_round: bool,
+    fold: Option<WireOp>,
+    declared_bytes: u64,
+    label: &str,
+    payload_len: usize,
+) -> Vec<u8> {
+    let label = label.as_bytes();
+    let label_len = label.len().min(u16::MAX as usize);
+    let mut head = Vec::with_capacity(1 + 1 + 8 + 2 + label_len + 8);
+    head.push(u8::from(virtual_round));
+    head.push(fold.map(WireOp::code).unwrap_or(0));
+    head.extend_from_slice(&declared_bytes.to_le_bytes());
+    head.extend_from_slice(&(label_len as u16).to_le_bytes());
+    head.extend_from_slice(&label[..label_len]);
+    head.extend_from_slice(&(payload_len as u64).to_le_bytes());
+    head
+}
+
+/// Build a complete [`FrameKind::Round`] body (head + payload) — the
+/// convenience form for tests and fakes; the transport's round loop uses
+/// [`encode_round_head`] + [`write_frame_parts`] to avoid copying the
+/// payload.
+pub fn encode_round_body(
+    virtual_round: bool,
+    fold: Option<WireOp>,
+    declared_bytes: u64,
+    label: &str,
+    payload: &[u8],
+) -> Vec<u8> {
+    let mut body = encode_round_head(virtual_round, fold, declared_bytes, label, payload.len());
+    body.extend_from_slice(payload);
+    body
+}
+
+/// Parsed [`FrameKind::Round`] body.
+pub struct RoundMsg<'a> {
+    pub virtual_round: bool,
+    pub fold: Option<WireOp>,
+    pub declared_bytes: u64,
+    pub label: String,
+    pub payload: &'a [u8],
+}
+
+/// Decode a [`FrameKind::Round`] body.
+pub fn decode_round_body(body: &[u8]) -> Result<RoundMsg<'_>, TransportError> {
+    let mut r = BodyReader::new(body);
+    let virtual_round = r.u8("virtual flag")? != 0;
+    let fold_code = r.u8("wire op")?;
+    let fold = if fold_code == 0 {
+        None
+    } else {
+        Some(WireOp::from_code(fold_code).ok_or_else(|| TransportError::Protocol {
+            worker: None,
+            detail: format!("unknown wire op {fold_code}"),
+        })?)
+    };
+    let declared_bytes = r.u64("declared bytes")?;
+    let label_len = r.u16("label length")? as usize;
+    let label = String::from_utf8_lossy(r.bytes(label_len, "label")?).into_owned();
+    let payload_len = r.u64("payload length")? as usize;
+    let payload = r.bytes(payload_len, "payload")?;
+    r.expect_end("round body")?;
+    Ok(RoundMsg {
+        virtual_round,
+        fold,
+        declared_bytes,
+        label,
+        payload,
+    })
+}
+
+/// Fold `(key u64, value)` records into one value per key with min/max
+/// over `Ord`, emitting `key | value` pairs in ascending key order
+/// (`BTreeMap` iteration — deterministic).
+fn fold_records<V: Ord + Copy>(
+    payload: &[u8],
+    rec: usize,
+    take_min: bool,
+    decode: impl Fn(&[u8]) -> V,
+    encode: impl Fn(V, &mut Vec<u8>),
+) -> Vec<u8> {
+    let mut acc: std::collections::BTreeMap<u64, V> = std::collections::BTreeMap::new();
+    for c in payload.chunks_exact(rec) {
+        let k = u64::from_le_bytes(c[..8].try_into().unwrap());
+        let v = decode(&c[8..]);
+        acc.entry(k)
+            .and_modify(|cur| *cur = if take_min { (*cur).min(v) } else { (*cur).max(v) })
+            .or_insert(v);
+    }
+    let mut out = Vec::with_capacity(acc.len() * rec);
+    for (k, v) in acc {
+        out.extend_from_slice(&k.to_le_bytes());
+        encode(v, &mut out);
+    }
+    out
+}
+
+/// Fold a round payload (`(key u64, value)` records, value width implied
+/// by `op`) the way the owning machine would: one folded value per
+/// distinct key, emitted in ascending key order (deterministic).  Shared
+/// by the worker process and the in-process loopback tests.
+pub fn fold_wire_payload(op: WireOp, payload: &[u8]) -> Result<Vec<u8>, String> {
+    let rec = 8 + op.value_bytes();
+    if payload.len() % rec != 0 {
+        return Err(format!(
+            "fold payload is {} bytes, not a multiple of the {rec}-byte record",
+            payload.len()
+        ));
+    }
+    let take_min = matches!(op, WireOp::MinU32 | WireOp::MinU64 | WireOp::MinPairU32);
+    Ok(match op {
+        WireOp::MinU32 | WireOp::MaxU32 => fold_records(
+            payload,
+            rec,
+            take_min,
+            |b| u32::from_le_bytes(b[..4].try_into().unwrap()),
+            |v, out| out.extend_from_slice(&v.to_le_bytes()),
+        ),
+        WireOp::MinU64 | WireOp::MaxU64 => fold_records(
+            payload,
+            rec,
+            take_min,
+            |b| u64::from_le_bytes(b[..8].try_into().unwrap()),
+            |v, out| out.extend_from_slice(&v.to_le_bytes()),
+        ),
+        WireOp::MinPairU32 | WireOp::MaxPairU32 => fold_records(
+            payload,
+            rec,
+            take_min,
+            |b| {
+                (
+                    u32::from_le_bytes(b[..4].try_into().unwrap()),
+                    u32::from_le_bytes(b[4..8].try_into().unwrap()),
+                )
+            },
+            |(a, b), out| {
+                out.extend_from_slice(&a.to_le_bytes());
+                out.extend_from_slice(&b.to_le_bytes());
+            },
+        ),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// the coordinator-side transport
+
+struct Conn {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+}
+
+impl std::fmt::Debug for Conn {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("Conn")
+    }
+}
+
+/// The multi-process [`Exchange`] backend (coordinator side): owns the
+/// worker connections (and, when it spawned them, the child processes).
+#[derive(Debug)]
+pub struct ProcTransport {
+    conns: Vec<Conn>,
+    /// Aligned to worker ids by [`ProcTransport::spawn`] via the Hello
+    /// pid: `children[j]` is worker `j`'s process (empty for
+    /// [`ProcTransport::from_connected`]).
+    children: Vec<Child>,
+    /// Worker-reported pid per machine, in worker-id order.
+    worker_pids: Vec<u32>,
+    machines: usize,
+    seq: u64,
+    finished: bool,
+}
+
+impl ProcTransport {
+    /// Spawn `machines` worker processes (`worker_bin worker --connect
+    /// ADDR`) on localhost and complete the handshake with each.  The
+    /// driver passes its own executable; tests pass
+    /// `env!("CARGO_BIN_EXE_lcc")`.
+    pub fn spawn(machines: usize, worker_bin: &Path) -> Result<ProcTransport, TransportError> {
+        let machines = machines.max(1);
+        let listener = TcpListener::bind(("127.0.0.1", 0))
+            .map_err(|e| io_err("bind coordinator listener", e))?;
+        let addr = listener
+            .local_addr()
+            .map_err(|e| io_err("coordinator listener addr", e))?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| io_err("listener nonblocking", e))?;
+
+        let mut children: Vec<Child> = Vec::with_capacity(machines);
+        for j in 0..machines {
+            let spawned = Command::new(worker_bin)
+                .arg("worker")
+                .arg("--connect")
+                .arg(addr.to_string())
+                .stdin(Stdio::null())
+                .stdout(Stdio::null())
+                .stderr(Stdio::inherit())
+                .spawn();
+            match spawned {
+                Ok(c) => children.push(c),
+                Err(e) => {
+                    kill_children(&mut children);
+                    return Err(TransportError::Io {
+                        worker: Some(j),
+                        op: "spawn worker",
+                        source: e,
+                    });
+                }
+            }
+        }
+
+        // accept all workers, surfacing an early-exiting child as a crash
+        // instead of waiting out the deadline
+        let deadline = Instant::now() + HANDSHAKE_TIMEOUT;
+        let mut streams: Vec<TcpStream> = Vec::with_capacity(machines);
+        while streams.len() < machines {
+            match listener.accept() {
+                Ok((s, _peer)) => streams.push(s),
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    for (j, c) in children.iter_mut().enumerate() {
+                        if let Ok(Some(status)) = c.try_wait() {
+                            kill_children(&mut children);
+                            return Err(TransportError::WorkerCrashed {
+                                worker: j,
+                                detail: format!("exited during handshake: {status}"),
+                            });
+                        }
+                    }
+                    if Instant::now() >= deadline {
+                        kill_children(&mut children);
+                        return Err(TransportError::Protocol {
+                            worker: None,
+                            detail: format!(
+                                "{}/{} workers connected before the handshake deadline",
+                                streams.len(),
+                                machines
+                            ),
+                        });
+                    }
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) => {
+                    kill_children(&mut children);
+                    return Err(io_err("accept worker", e));
+                }
+            }
+        }
+
+        let mut t = match Self::handshake(streams) {
+            Ok(t) => t,
+            Err(e) => {
+                kill_children(&mut children);
+                return Err(e);
+            }
+        };
+        // Worker ids follow accept order, children spawn order — align
+        // them by the pid each worker reported in its Hello so
+        // `children[j]` really is worker `j`'s process (kill_worker and
+        // crash attribution depend on it).  A pid with no matching child
+        // is left at the end, untargeted but still reaped.
+        let mut aligned: Vec<Child> = Vec::with_capacity(children.len());
+        for &pid in &t.worker_pids {
+            if let Some(pos) = children.iter().position(|c| c.id() == pid) {
+                aligned.push(children.remove(pos));
+            }
+        }
+        aligned.extend(children);
+        t.children = aligned;
+        Ok(t)
+    }
+
+    /// Build a transport over already-connected streams, running the
+    /// `Hello`/`Assign` handshake on each (the fault-injection tests play
+    /// the worker side themselves; no processes are owned).
+    pub fn from_connected(streams: Vec<TcpStream>) -> Result<ProcTransport, TransportError> {
+        Self::handshake(streams)
+    }
+
+    fn handshake(streams: Vec<TcpStream>) -> Result<ProcTransport, TransportError> {
+        if streams.is_empty() {
+            return Err(TransportError::Protocol {
+                worker: None,
+                detail: "a proc transport needs at least one worker".into(),
+            });
+        }
+        let machines = streams.len();
+        let mut conns = Vec::with_capacity(streams.len());
+        let mut worker_pids = Vec::with_capacity(streams.len());
+        for (j, s) in streams.into_iter().enumerate() {
+            let prep = || -> Result<Conn, TransportError> {
+                s.set_nonblocking(false)
+                    .map_err(|e| io_err("stream blocking mode", e))?;
+                s.set_nodelay(true).map_err(|e| io_err("set nodelay", e))?;
+                s.set_read_timeout(Some(IO_TIMEOUT))
+                    .map_err(|e| io_err("set read timeout", e))?;
+                // writes too: a worker that stops draining must not block
+                // a large LoadShard/Round write forever
+                s.set_write_timeout(Some(IO_TIMEOUT))
+                    .map_err(|e| io_err("set write timeout", e))?;
+                let reader =
+                    BufReader::new(s.try_clone().map_err(|e| io_err("clone stream", e))?);
+                Ok(Conn {
+                    reader,
+                    writer: BufWriter::new(s),
+                })
+            };
+            let mut conn = prep().map_err(|e| e.for_worker(j))?;
+            let hello = read_frame(&mut conn.reader).map_err(|e| e.for_worker(j))?;
+            if hello.kind != FrameKind::Hello {
+                return Err(TransportError::Protocol {
+                    worker: Some(j),
+                    detail: format!("expected Hello, got {:?}", hello.kind),
+                });
+            }
+            let mut r = BodyReader::new(&hello.body);
+            let version = r.u32("hello version").map_err(|e| e.for_worker(j))?;
+            if version != PROTO_VERSION {
+                return Err(TransportError::Protocol {
+                    worker: Some(j),
+                    detail: format!(
+                        "worker speaks protocol {version}, coordinator {PROTO_VERSION}"
+                    ),
+                });
+            }
+            let pid = r.u32("hello pid").map_err(|e| e.for_worker(j))?;
+            worker_pids.push(pid);
+            let mut body = Vec::with_capacity(12);
+            body.extend_from_slice(&PROTO_VERSION.to_le_bytes());
+            body.extend_from_slice(&(j as u32).to_le_bytes());
+            body.extend_from_slice(&(machines as u32).to_le_bytes());
+            write_frame(&mut conn.writer, FrameKind::Assign, 0, &body)
+                .map_err(|e| e.for_worker(j))?;
+            conns.push(conn);
+        }
+        Ok(ProcTransport {
+            conns,
+            children: Vec::new(),
+            worker_pids,
+            machines,
+            seq: 0,
+            finished: false,
+        })
+    }
+
+    pub fn num_machines(&self) -> usize {
+        self.machines
+    }
+
+    /// Distribute the graph: shard `s` (in the spill shard-file framing —
+    /// a spilled graph ships its raw file bytes, no rehydration) goes to
+    /// worker `s`, which validates the framing, re-derives the shard
+    /// statistics from the edges, and acks them; the coordinator
+    /// cross-checks the ack against its cached stats so custody
+    /// divergence is a typed error before any round runs.
+    pub fn load_graph(&mut self, g: &ShardedGraph) -> Result<(), TransportError> {
+        if g.num_shards() != self.machines {
+            return Err(TransportError::Protocol {
+                worker: None,
+                detail: format!(
+                    "graph has {} shards, transport has {} machines",
+                    g.num_shards(),
+                    self.machines
+                ),
+            });
+        }
+        let p = self.machines;
+        self.seq += 1;
+        let seq = self.seq;
+        let mut want_checksums = Vec::with_capacity(p);
+        for s in 0..p {
+            let (image, checksum) = match g.spill_dir() {
+                Some(dir) => {
+                    let path = dir.join(spill::shard_file_name(s));
+                    let bytes = std::fs::read(&path).map_err(|e| TransportError::Io {
+                        worker: Some(s),
+                        op: "read spilled shard for shipping",
+                        source: e,
+                    })?;
+                    let ck = g
+                        .shard_checksum(s)
+                        .expect("spilled graph caches shard checksums");
+                    (bytes, ck)
+                }
+                None => {
+                    let data = g.shard_data(s);
+                    spill::encode_shard_bytes(s as u32, p as u32, &data)
+                }
+            };
+            want_checksums.push(checksum);
+            let mut head = Vec::with_capacity(4 + 8);
+            head.extend_from_slice(&(s as u32).to_le_bytes());
+            head.extend_from_slice(&(image.len() as u64).to_le_bytes());
+            write_frame_parts(&mut self.conns[s].writer, FrameKind::LoadShard, seq, &head, &image)
+                .map_err(|e| self.crash_context(s, e))?;
+        }
+        for s in 0..p {
+            let frame =
+                read_frame(&mut self.conns[s].reader).map_err(|e| self.crash_context(s, e))?;
+            match frame.kind {
+                FrameKind::LoadAck => {}
+                FrameKind::WorkerErr => {
+                    return Err(TransportError::Protocol {
+                        worker: Some(s),
+                        detail: String::from_utf8_lossy(&frame.body).into_owned(),
+                    })
+                }
+                other => {
+                    return Err(TransportError::Protocol {
+                        worker: Some(s),
+                        detail: format!("expected LoadAck, got {other:?}"),
+                    })
+                }
+            }
+            if frame.seq != seq {
+                return Err(TransportError::Protocol {
+                    worker: Some(s),
+                    detail: format!("LoadAck seq {} != {seq}", frame.seq),
+                });
+            }
+            let mut r = BodyReader::new(&frame.body);
+            let ack = (|| -> Result<(u32, u64, u64, Vec<u64>), TransportError> {
+                let shard = r.u32("ack shard")?;
+                let len = r.u64("ack len")?;
+                let checksum = r.u64("ack checksum")?;
+                let ack_p = r.u32("ack shard count")? as usize;
+                let mut peers = Vec::with_capacity(ack_p.min(1 << 16));
+                for _ in 0..ack_p {
+                    peers.push(r.u64("ack peer count")?);
+                }
+                r.expect_end("load ack")?;
+                Ok((shard, len, checksum, peers))
+            })()
+            .map_err(|e| e.for_worker(s))?;
+            let (shard, len, checksum, peers) = ack;
+            let stats = g.shard_stats(s);
+            if shard != s as u32
+                || len != stats.len
+                || checksum != want_checksums[s]
+                || peers != stats.peer_counts
+            {
+                return Err(TransportError::Protocol {
+                    worker: Some(s),
+                    detail: format!(
+                        "worker shard statistics diverge from the coordinator cache \
+                         (shard {shard}, {len} edges, checksum {checksum:#018x})"
+                    ),
+                });
+            }
+        }
+        Ok(())
+    }
+
+    /// Kill worker `j`'s process outright (fault injection for tests; the
+    /// next exchange must surface a typed error, not hang).
+    pub fn kill_worker(&mut self, j: usize) {
+        if let Some(c) = self.children.get_mut(j) {
+            let _ = c.kill();
+            let _ = c.wait();
+        }
+    }
+
+    /// Map a low-level error on worker `j`'s connection: if a child is
+    /// observably dead, report the crash; otherwise keep the precise
+    /// fault (a short read from a live worker is a truncated frame, not a
+    /// crash).
+    fn crash_context(&mut self, j: usize, e: TransportError) -> TransportError {
+        let disconnect = match &e {
+            TransportError::ShortRead { .. } => true,
+            TransportError::Io { source, .. } => matches!(
+                source.kind(),
+                std::io::ErrorKind::BrokenPipe
+                    | std::io::ErrorKind::ConnectionReset
+                    | std::io::ErrorKind::ConnectionAborted
+                    | std::io::ErrorKind::UnexpectedEof
+                    | std::io::ErrorKind::WriteZero
+            ),
+            _ => false,
+        };
+        if disconnect {
+            // children are pid-aligned to worker ids: probe this worker's
+            // own process first, then report any other casualty under its
+            // real machine index
+            if let Some(c) = self.children.get_mut(j) {
+                if let Ok(Some(status)) = c.try_wait() {
+                    return TransportError::WorkerCrashed {
+                        worker: j,
+                        detail: format!("worker process exited ({status}) mid-round"),
+                    };
+                }
+            }
+            for (k, c) in self.children.iter_mut().enumerate() {
+                if let Ok(Some(status)) = c.try_wait() {
+                    return TransportError::WorkerCrashed {
+                        worker: k,
+                        detail: format!("worker process exited ({status}) mid-round"),
+                    };
+                }
+            }
+        }
+        e.for_worker(j)
+    }
+
+    /// Graceful shutdown: every worker acks with `Bye` and exits; child
+    /// processes are reaped.  [`Drop`] does the same best-effort.
+    pub fn shutdown(mut self) -> Result<(), TransportError> {
+        self.seq += 1;
+        let seq = self.seq;
+        for j in 0..self.conns.len() {
+            write_frame(&mut self.conns[j].writer, FrameKind::Shutdown, seq, &[])
+                .map_err(|e| self.crash_context(j, e))?;
+        }
+        for j in 0..self.conns.len() {
+            let frame =
+                read_frame(&mut self.conns[j].reader).map_err(|e| self.crash_context(j, e))?;
+            if frame.kind != FrameKind::Bye {
+                return Err(TransportError::Protocol {
+                    worker: Some(j),
+                    detail: format!("expected Bye, got {:?}", frame.kind),
+                });
+            }
+        }
+        self.finished = true;
+        let mut children = std::mem::take(&mut self.children);
+        reap_children(&mut children);
+        Ok(())
+    }
+}
+
+fn kill_children(children: &mut Vec<Child>) {
+    for c in children.iter_mut() {
+        let _ = c.kill();
+        let _ = c.wait();
+    }
+    children.clear();
+}
+
+/// Wait briefly for children to exit on their own, then kill stragglers.
+fn reap_children(children: &mut Vec<Child>) {
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while Instant::now() < deadline {
+        if children
+            .iter_mut()
+            .all(|c| matches!(c.try_wait(), Ok(Some(_))))
+        {
+            children.clear();
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    kill_children(children);
+}
+
+impl Drop for ProcTransport {
+    fn drop(&mut self) {
+        if self.finished {
+            return;
+        }
+        self.seq += 1;
+        for conn in &mut self.conns {
+            let _ = write_frame(&mut conn.writer, FrameKind::Shutdown, self.seq, &[]);
+        }
+        self.conns.clear(); // drop the sockets: a wedged worker sees EOF
+        let mut children = std::mem::take(&mut self.children);
+        reap_children(&mut children);
+    }
+}
+
+impl Exchange for ProcTransport {
+    fn name(&self) -> &'static str {
+        "proc"
+    }
+
+    fn wants_wire(&self) -> bool {
+        true
+    }
+
+    fn machines(&self) -> Option<usize> {
+        Some(self.machines)
+    }
+
+    fn exchange(
+        &mut self,
+        label: &str,
+        charge: RoundCharge<'_>,
+        payloads: Vec<Vec<u8>>,
+        fold: Option<WireOp>,
+    ) -> Result<ExchangeAck, TransportError> {
+        let p = self.machines;
+        if charge.machine_bytes.len() != p {
+            return Err(TransportError::Protocol {
+                worker: None,
+                detail: format!(
+                    "round charge is {} machines wide, transport has {p}",
+                    charge.machine_bytes.len()
+                ),
+            });
+        }
+        let virtual_round = payloads.is_empty();
+        if !virtual_round && payloads.len() != p {
+            return Err(TransportError::Protocol {
+                worker: None,
+                detail: format!("{} payloads for {p} machines", payloads.len()),
+            });
+        }
+        self.seq += 1;
+        let seq = self.seq;
+
+        for j in 0..p {
+            let payload: &[u8] = if virtual_round { &[] } else { &payloads[j] };
+            let head = encode_round_head(
+                virtual_round,
+                fold,
+                charge.machine_bytes[j],
+                label,
+                payload.len(),
+            );
+            write_frame_parts(&mut self.conns[j].writer, FrameKind::Round, seq, &head, payload)
+                .map_err(|e| self.crash_context(j, e))?;
+        }
+
+        let mut machine_bytes = Vec::with_capacity(p);
+        let mut folded = fold.map(|_| Vec::with_capacity(p));
+        for j in 0..p {
+            let frame =
+                read_frame(&mut self.conns[j].reader).map_err(|e| self.crash_context(j, e))?;
+            match frame.kind {
+                FrameKind::RoundAck => {}
+                FrameKind::WorkerErr => {
+                    return Err(TransportError::Protocol {
+                        worker: Some(j),
+                        detail: String::from_utf8_lossy(&frame.body).into_owned(),
+                    })
+                }
+                other => {
+                    return Err(TransportError::Protocol {
+                        worker: Some(j),
+                        detail: format!("expected RoundAck, got {other:?}"),
+                    })
+                }
+            }
+            if frame.seq != seq {
+                return Err(TransportError::Protocol {
+                    worker: Some(j),
+                    detail: format!("RoundAck seq {} != round seq {seq}", frame.seq),
+                });
+            }
+            let mut r = BodyReader::new(&frame.body);
+            let accounted = r.u64("accounted bytes").map_err(|e| e.for_worker(j))?;
+            let fold_len = r.u64("fold length").map_err(|e| e.for_worker(j))? as usize;
+            let fold_bytes = r
+                .bytes(fold_len, "fold pairs")
+                .map_err(|e| e.for_worker(j))?;
+            r.expect_end("round ack").map_err(|e| e.for_worker(j))?;
+            machine_bytes.push(accounted);
+            if let Some(fs) = folded.as_mut() {
+                fs.push(fold_bytes.to_vec());
+            }
+        }
+        Ok(ExchangeAck {
+            machine_bytes,
+            folded,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_roundtrip() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, FrameKind::Round, 7, b"hello body").unwrap();
+        let frame = read_frame(&mut &buf[..]).unwrap();
+        assert_eq!(frame.kind, FrameKind::Round);
+        assert_eq!(frame.seq, 7);
+        assert_eq!(frame.body, b"hello body");
+    }
+
+    #[test]
+    fn truncated_frame_is_short_read() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, FrameKind::RoundAck, 1, &[1, 2, 3, 4, 5]).unwrap();
+        // cut inside the body
+        match read_frame(&mut &buf[..buf.len() - 2]) {
+            Err(TransportError::ShortRead { wanted, got, .. }) => {
+                assert_eq!(wanted, 5);
+                assert_eq!(got, 3);
+            }
+            other => panic!("expected ShortRead, got {other:?}"),
+        }
+        // cut inside the header
+        assert!(matches!(
+            read_frame(&mut &buf[..10]),
+            Err(TransportError::ShortRead { .. })
+        ));
+    }
+
+    #[test]
+    fn corrupt_body_is_checksum_mismatch() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, FrameKind::Round, 2, b"payload!").unwrap();
+        let last = buf.len() - 1;
+        buf[last] ^= 0x10;
+        assert!(matches!(
+            read_frame(&mut &buf[..]),
+            Err(TransportError::ChecksumMismatch { .. })
+        ));
+    }
+
+    #[test]
+    fn wrong_magic_is_typed() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, FrameKind::Hello, 0, &[]).unwrap();
+        buf[0] = b'X';
+        assert!(matches!(
+            read_frame(&mut &buf[..]),
+            Err(TransportError::BadMagic { .. })
+        ));
+    }
+
+    #[test]
+    fn oversized_declared_body_is_protocol_error() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, FrameKind::Round, 0, &[]).unwrap();
+        // body_len sits at offset 17..25
+        buf[17..25].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(matches!(
+            read_frame(&mut &buf[..]),
+            Err(TransportError::Protocol { .. })
+        ));
+    }
+
+    #[test]
+    fn round_body_roundtrip() {
+        let payload = [9u8; 24];
+        let body = encode_round_body(false, Some(WireOp::MinU32), 24, "lc/hop1", &payload);
+        let msg = decode_round_body(&body).unwrap();
+        assert!(!msg.virtual_round);
+        assert_eq!(msg.fold, Some(WireOp::MinU32));
+        assert_eq!(msg.declared_bytes, 24);
+        assert_eq!(msg.label, "lc/hop1");
+        assert_eq!(msg.payload, &payload);
+
+        let body = encode_round_body(true, None, 4096, "contract/left", &[]);
+        let msg = decode_round_body(&body).unwrap();
+        assert!(msg.virtual_round);
+        assert_eq!(msg.fold, None);
+        assert_eq!(msg.declared_bytes, 4096);
+        assert!(msg.payload.is_empty());
+    }
+
+    fn rec_u32(key: u64, v: u32) -> Vec<u8> {
+        let mut r = key.to_le_bytes().to_vec();
+        r.extend_from_slice(&v.to_le_bytes());
+        r
+    }
+
+    #[test]
+    fn fold_payload_folds_per_key_in_key_order() {
+        let mut payload = Vec::new();
+        payload.extend(rec_u32(5, 30));
+        payload.extend(rec_u32(2, 9));
+        payload.extend(rec_u32(5, 11));
+        payload.extend(rec_u32(2, 40));
+        let out = fold_wire_payload(WireOp::MinU32, &payload).unwrap();
+        let mut expect = Vec::new();
+        expect.extend(rec_u32(2, 9));
+        expect.extend(rec_u32(5, 11));
+        assert_eq!(out, expect);
+        let out = fold_wire_payload(WireOp::MaxU32, &payload).unwrap();
+        let mut expect = Vec::new();
+        expect.extend(rec_u32(2, 40));
+        expect.extend(rec_u32(5, 30));
+        assert_eq!(out, expect);
+    }
+
+    #[test]
+    fn fold_payload_pairs_are_lexicographic() {
+        let mut payload = Vec::new();
+        for (k, a, b) in [(1u64, 7u32, 3u32), (1, 7, 1), (1, 2, 9)] {
+            payload.extend_from_slice(&k.to_le_bytes());
+            payload.extend_from_slice(&a.to_le_bytes());
+            payload.extend_from_slice(&b.to_le_bytes());
+        }
+        let out = fold_wire_payload(WireOp::MinPairU32, &payload).unwrap();
+        assert_eq!(
+            out,
+            {
+                let mut e = 1u64.to_le_bytes().to_vec();
+                e.extend_from_slice(&2u32.to_le_bytes());
+                e.extend_from_slice(&9u32.to_le_bytes());
+                e
+            }
+        );
+    }
+
+    #[test]
+    fn fold_payload_rejects_ragged_input() {
+        assert!(fold_wire_payload(WireOp::MinU32, &[0u8; 13]).is_err());
+        assert!(fold_wire_payload(WireOp::MaxU64, &[0u8; 20]).is_err());
+    }
+}

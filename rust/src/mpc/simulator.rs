@@ -1,5 +1,6 @@
-//! The MPC(0) round simulator: hash shuffle, key grouping, per-machine
-//! reduction, exact communication accounting.
+//! The MPC(0) round engine: hash shuffle, key grouping, per-machine
+//! reduction, exact communication accounting — behind a pluggable
+//! [`Exchange`] round transport.
 //!
 //! One [`Simulator::round`] = one computation-communication round of §2.1:
 //! the caller's *map* output (a flat list of key-value messages) is
@@ -18,9 +19,26 @@
 //! to be associative and commutative (the min/max hops are), which makes
 //! the *outputs* identical too.  `rust/tests/mpc_accounting.rs` and the
 //! tests below enforce both.
+//!
+//! **Transport invariance.**  Every round completes through the private
+//! `complete_round` → [`Exchange::exchange`].  On the
+//! in-process backend that call is a pure accounting barrier and the
+//! engine runs exactly as above.  On a wire backend
+//! ([`Exchange::wants_wire`]) the round takes a serial single pass that
+//! additionally serializes each message into its destination machine's
+//! byte image (8-byte key + [`WireSize`] value — precisely the bytes the
+//! model charges), ships the images, and validates the receiver-counted
+//! loads against the charge; fold rounds carrying a [`WireOp`] tag are
+//! reduced *by the remote machines* and merged back.  Because the fold
+//! ops are associative and commutative and outputs concatenate in a
+//! fixed order, both the outputs and the metrics are bit-identical across
+//! transports — `rust/tests/transport_equivalence.rs` enforces this for
+//! all eight algorithms.  A transport failure unwinds with the typed
+//! [`TransportError`] as payload (see [`super::transport`] module docs).
 
 use super::metrics::{Metrics, RoundMetrics, WireSize};
 use super::pool;
+use super::transport::{Exchange, InProcess, RoundCharge, TransportError, WireFold, WireOp};
 use crate::util::rng::splitmix64;
 
 /// Simulator configuration.
@@ -89,19 +107,60 @@ pub struct ShardRound {
     pub machine_bytes: Vec<u64>,
 }
 
-/// The MPC execution engine: owns config + accumulated metrics.
-#[derive(Debug)]
+/// The MPC execution engine: owns config, accumulated metrics, and the
+/// round transport every exchange goes through.
 pub struct Simulator {
     pub cfg: MpcConfig,
     pub metrics: Metrics,
+    transport: Box<dyn Exchange>,
+}
+
+impl std::fmt::Debug for Simulator {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Simulator")
+            .field("cfg", &self.cfg)
+            .field("metrics", &self.metrics)
+            .field("transport", &self.transport.name())
+            .finish()
+    }
 }
 
 impl Simulator {
+    /// Engine on the in-process transport (the default and the reference
+    /// semantics).
     pub fn new(cfg: MpcConfig) -> Self {
+        Self::with_transport(cfg, Box::new(InProcess))
+    }
+
+    /// Engine on an explicit transport.  A transport bound to a machine
+    /// count (the multi-process backend) must match `cfg.machines`.
+    pub fn with_transport(cfg: MpcConfig, transport: Box<dyn Exchange>) -> Self {
+        if let Some(m) = transport.machines() {
+            assert_eq!(
+                m,
+                cfg.machines.max(1),
+                "transport is bound to {m} machines, config says {}",
+                cfg.machines
+            );
+        }
         Simulator {
             cfg,
             metrics: Metrics::new(),
+            transport,
         }
+    }
+
+    /// Name of the transport this engine shuffles on.
+    pub fn transport_name(&self) -> &'static str {
+        self.transport.name()
+    }
+
+    /// Does the transport physically move bytes?  The round helpers in
+    /// `cc::common` use this to pick shippable round shapes (e.g. two
+    /// real hop rounds instead of the shared-memory fused traversal).
+    #[inline]
+    pub fn wire_mode(&self) -> bool {
+        self.transport.wants_wire()
     }
 
     /// Partition a key over machines (stable across rounds).
@@ -144,12 +203,16 @@ impl Simulator {
             machine_bytes[m] += sz;
             per_machine[m].push((key, value));
         }
-        let max_machine_bytes = machine_bytes.iter().copied().max().unwrap_or(0);
-        let space_violation = self
-            .cfg
-            .space_per_machine
-            .map(|cap| max_machine_bytes > cap)
-            .unwrap_or(false);
+
+        // ---- exchange: the transport moves (or barriers) the round ----------
+        // On a wire transport each machine's exact byte image ships before
+        // any reduce runs; in-process this is the accounting barrier.
+        let payloads = if self.wire_mode() {
+            encode_buckets(&per_machine)
+        } else {
+            Vec::new()
+        };
+        self.complete_round(label, n_messages, bytes, &machine_bytes, payloads, None);
 
         // ---- per-machine: group by key, reduce ------------------------------
         let threads = self.cfg.threads.max(1).min(p);
@@ -188,15 +251,6 @@ impl Simulator {
             pool::global().run_jobs(jobs).into_iter().flatten().collect()
         };
 
-        self.metrics.record(RoundMetrics {
-            label: label.to_string(),
-            messages: n_messages,
-            bytes,
-            max_machine_bytes,
-            space_violation,
-            ..Default::default()
-        });
-
         outputs.into_iter().flatten().collect()
     }
 
@@ -215,7 +269,35 @@ impl Simulator {
         V: WireSize + Copy,
         I: IntoIterator<Item = (u64, V)>,
     {
+        self.round_fold_tagged(label, out, messages, WireFold::untagged(op));
+    }
+
+    /// [`round_fold`](Self::round_fold) with the fold's optional wire
+    /// identity: on a wire transport a [`WireOp`]-tagged fold is reduced
+    /// **by the remote machines** (each folds the messages for the keys
+    /// it owns and returns one pair per key, merged back here); untagged
+    /// folds reduce locally while the byte image still ships for
+    /// receiver-side accounting.  Either way the single pass below both
+    /// accounts and (when needed) serializes, so the charged and shipped
+    /// bytes agree by construction.
+    pub fn round_fold_tagged<V, I>(
+        &mut self,
+        label: &str,
+        out: &mut [V],
+        messages: I,
+        fold: WireFold<V>,
+    ) where
+        V: WireSize + Copy,
+        I: IntoIterator<Item = (u64, V)>,
+    {
         let p = self.cfg.machines.max(1);
+        let wire = self.wire_mode();
+        let remote = wire && fold.wire.is_some();
+        let mut bufs: Vec<Vec<u8>> = if wire {
+            (0..p).map(|_| Vec::new()).collect()
+        } else {
+            Vec::new()
+        };
         let mut machine_bytes = vec![0u64; p];
         let mut bytes = 0u64;
         let mut n_messages = 0u64;
@@ -223,13 +305,34 @@ impl Simulator {
         for (key, value) in messages {
             let sz = 8 + value.wire_size();
             bytes += sz;
-            machine_bytes[machine_of(key, p)] += sz;
+            let m = machine_of(key, p);
+            machine_bytes[m] += sz;
             n_messages += 1;
-            let k = key as usize;
-            out[k] = if touched[k] { op(out[k], value) } else { value };
-            touched[k] = true;
+            if wire {
+                bufs[m].extend_from_slice(&key.to_le_bytes());
+                value.encode_wire(&mut bufs[m]);
+            }
+            if !remote {
+                let k = key as usize;
+                out[k] = if touched[k] {
+                    (fold.f)(out[k], value)
+                } else {
+                    value
+                };
+                touched[k] = true;
+            }
         }
-        self.finish_round(label, n_messages, bytes, &machine_bytes);
+        let folded = self.complete_round(
+            label,
+            n_messages,
+            bytes,
+            &machine_bytes,
+            bufs,
+            if remote { fold.wire } else { None },
+        );
+        if remote {
+            apply_folded(out, folded.expect("wire transport returned no fold results"));
+        }
     }
 
     /// Fast path for **per-message transforms** (endpoint relabeling in the
@@ -243,6 +346,12 @@ impl Simulator {
         F: Fn(u64, V) -> R,
     {
         let p = self.cfg.machines.max(1);
+        let wire = self.wire_mode();
+        let mut bufs: Vec<Vec<u8>> = if wire {
+            (0..p).map(|_| Vec::new()).collect()
+        } else {
+            Vec::new()
+        };
         let mut machine_bytes = vec![0u64; p];
         let mut bytes = 0u64;
         let mut n_messages = 0u64;
@@ -251,11 +360,16 @@ impl Simulator {
         for (key, value) in messages {
             let sz = 8 + value.wire_size();
             bytes += sz;
-            machine_bytes[machine_of(key, p)] += sz;
+            let m = machine_of(key, p);
+            machine_bytes[m] += sz;
             n_messages += 1;
+            if wire {
+                bufs[m].extend_from_slice(&key.to_le_bytes());
+                value.encode_wire(&mut bufs[m]);
+            }
             out.push(f(key, value));
         }
-        self.finish_round(label, n_messages, bytes, &machine_bytes);
+        self.complete_round(label, n_messages, bytes, &machine_bytes, bufs, None);
         out
     }
 
@@ -280,8 +394,11 @@ impl Simulator {
         C: IntoIterator<Item = (u64, V)> + Send,
     {
         let p = self.cfg.machines.max(1);
-        if self.cfg.threads.max(1) <= 1 || chunks.len() <= 1 {
+        if self.wire_mode() || self.cfg.threads.max(1) <= 1 || chunks.len() <= 1 {
             // Serial: exactly `round_fold` over the concatenated chunks.
+            // Wire transports always take it: the pass that folds also
+            // serializes each machine's byte image, and chunk-order
+            // concatenation keeps the image deterministic.
             return self.round_fold(label, out, chunks.into_iter().flatten(), op);
         }
 
@@ -344,7 +461,7 @@ impl Simulator {
                 }
             }
         }
-        self.finish_round(label, msgs, bytes, &machine_bytes);
+        self.complete_round(label, msgs, bytes, &machine_bytes, Vec::new(), None);
     }
 
     /// Chunked, parallel form of [`round_map`](Self::round_map): workers
@@ -365,8 +482,10 @@ impl Simulator {
         F: Fn(u64, V) -> R + Sync,
     {
         let p = self.cfg.machines.max(1);
-        if self.cfg.threads.max(1) <= 1 || chunks.len() <= 1 {
-            // Serial: exactly `round_map` over the concatenated chunks.
+        if self.wire_mode() || self.cfg.threads.max(1) <= 1 || chunks.len() <= 1 {
+            // Serial: exactly `round_map` over the concatenated chunks
+            // (wire transports always take it — the serial pass builds
+            // each machine's byte image in deterministic chunk order).
             return self.round_map(label, chunks.into_iter().flatten(), f);
         }
 
@@ -404,7 +523,7 @@ impl Simulator {
             }
             out.extend(part_out);
         }
-        self.finish_round(label, msgs, bytes, &machine_bytes);
+        self.complete_round(label, msgs, bytes, &machine_bytes, Vec::new(), None);
         out
     }
 
@@ -437,7 +556,25 @@ impl Simulator {
         charge: ShardRound,
         op: fn(V, V) -> V,
     ) where
-        V: Copy + Send,
+        V: WireSize + Copy + Send,
+        C: IntoIterator<Item = (u64, V)> + Send,
+    {
+        self.round_fold_sharded_tagged(label, out, shards, charge, WireFold::untagged(op));
+    }
+
+    /// [`round_fold_sharded`](Self::round_fold_sharded) with the fold's
+    /// wire identity (see [`round_fold_tagged`](Self::round_fold_tagged)):
+    /// the hop helpers in `cc::common` pass tagged min/max folds so a
+    /// wire transport reduces them on the remote machines.
+    pub fn round_fold_sharded_tagged<V, C>(
+        &mut self,
+        label: &str,
+        out: &mut [V],
+        shards: Vec<C>,
+        charge: ShardRound,
+        fold: WireFold<V>,
+    ) where
+        V: WireSize + Copy + Send,
         C: IntoIterator<Item = (u64, V)> + Send,
     {
         assert_eq!(
@@ -445,6 +582,10 @@ impl Simulator {
             self.cfg.machines.max(1),
             "shard charge width != machines"
         );
+        if self.wire_mode() {
+            return self.fold_sharded_wire(label, out, shards, charge, fold);
+        }
+        let op = fold.f;
         let t = self.cfg.threads.max(1).min(shards.len().max(1));
         let mut msgs_seen = 0u64;
         if t <= 1 || shards.len() <= 1 {
@@ -513,7 +654,68 @@ impl Simulator {
             "shard charge disagrees with the message stream ({label})"
         );
         let _ = msgs_seen;
-        self.finish_round(label, charge.messages, charge.bytes, &charge.machine_bytes);
+        self.complete_round(
+            label,
+            charge.messages,
+            charge.bytes,
+            &charge.machine_bytes,
+            Vec::new(),
+            None,
+        );
+    }
+
+    /// The wire form of the sharded fold: one serial pass routes every
+    /// message (`machine_of` per message — the price of genuinely moving
+    /// bytes; the shard-derived charge is kept and *validated* against
+    /// the receiver counts) and serializes it into its machine's image.
+    /// Tagged folds come back reduced by the remote machines.
+    fn fold_sharded_wire<V, C>(
+        &mut self,
+        label: &str,
+        out: &mut [V],
+        shards: Vec<C>,
+        charge: ShardRound,
+        fold: WireFold<V>,
+    ) where
+        V: WireSize + Copy,
+        C: IntoIterator<Item = (u64, V)>,
+    {
+        let p = self.cfg.machines.max(1);
+        let remote = fold.wire.is_some();
+        let mut bufs: Vec<Vec<u8>> = (0..p).map(|_| Vec::new()).collect();
+        let mut msgs_seen = 0u64;
+        let mut touched = vec![false; if remote { 0 } else { out.len() }];
+        for (key, value) in shards.into_iter().flatten() {
+            msgs_seen += 1;
+            let m = machine_of(key, p);
+            bufs[m].extend_from_slice(&key.to_le_bytes());
+            value.encode_wire(&mut bufs[m]);
+            if !remote {
+                let k = key as usize;
+                out[k] = if touched[k] {
+                    (fold.f)(out[k], value)
+                } else {
+                    value
+                };
+                touched[k] = true;
+            }
+        }
+        debug_assert_eq!(
+            msgs_seen, charge.messages,
+            "shard charge disagrees with the message stream ({label})"
+        );
+        let _ = msgs_seen;
+        let folded = self.complete_round(
+            label,
+            charge.messages,
+            charge.bytes,
+            &charge.machine_bytes,
+            bufs,
+            fold.wire,
+        );
+        if remote {
+            apply_folded(out, folded.expect("wire transport returned no fold results"));
+        }
     }
 
     /// Sharded form of [`round_map`](Self::round_map): one chunk per shard,
@@ -528,7 +730,7 @@ impl Simulator {
         f: F,
     ) -> Vec<R>
     where
-        V: Copy + Send,
+        V: WireSize + Copy + Send,
         R: Send,
         C: IntoIterator<Item = (u64, V)> + Send,
         F: Fn(u64, V) -> R + Sync,
@@ -538,6 +740,36 @@ impl Simulator {
             self.cfg.machines.max(1),
             "shard charge width != machines"
         );
+        let p = self.cfg.machines.max(1);
+        if self.wire_mode() {
+            // one serial pass: route + serialize each machine's byte
+            // image, transform in stream order (identical to the serial
+            // path's output sequence)
+            let mut bufs: Vec<Vec<u8>> = (0..p).map(|_| Vec::new()).collect();
+            let mut out = Vec::with_capacity(charge.messages as usize);
+            let mut msgs_seen = 0u64;
+            for (key, value) in shards.into_iter().flatten() {
+                msgs_seen += 1;
+                let m = machine_of(key, p);
+                bufs[m].extend_from_slice(&key.to_le_bytes());
+                value.encode_wire(&mut bufs[m]);
+                out.push(f(key, value));
+            }
+            debug_assert_eq!(
+                msgs_seen, charge.messages,
+                "shard charge disagrees with the message stream ({label})"
+            );
+            let _ = msgs_seen;
+            self.complete_round(
+                label,
+                charge.messages,
+                charge.bytes,
+                &charge.machine_bytes,
+                bufs,
+                None,
+            );
+            return out;
+        }
         let t = self.cfg.threads.max(1).min(shards.len().max(1));
         let mut msgs_seen = 0u64;
         let out: Vec<R> = if t <= 1 || shards.len() <= 1 {
@@ -578,15 +810,24 @@ impl Simulator {
             "shard charge disagrees with the message stream ({label})"
         );
         let _ = msgs_seen;
-        self.finish_round(label, charge.messages, charge.bytes, &charge.machine_bytes);
+        self.complete_round(
+            label,
+            charge.messages,
+            charge.bytes,
+            &charge.machine_bytes,
+            Vec::new(),
+            None,
+        );
         out
     }
 
     /// Record a round whose computation happened outside the engine but
     /// whose accounting replicates exactly the round it replaces (the
-    /// fused contraction phases in `cc::common` charge the model this
-    /// way).  `machine_bytes` is per machine; `messages`/`bytes` are the
-    /// round totals.
+    /// fused contraction phases and the graph-layer contraction rewrites
+    /// in `cc::common` charge the model this way).  `machine_bytes` is
+    /// per machine; `messages`/`bytes` are the round totals.  On a wire
+    /// transport this is still a real barrier: every machine acknowledges
+    /// the declared load before the next round starts.
     pub fn charge_round(
         &mut self,
         label: &str,
@@ -594,7 +835,62 @@ impl Simulator {
         bytes: u64,
         machine_bytes: &[u64],
     ) {
+        self.complete_round(label, messages, bytes, machine_bytes, Vec::new(), None);
+    }
+
+    /// Every round ends here: run the exchange on the transport (payload
+    /// bytes move and the barrier blocks on a wire backend; pure
+    /// accounting in-process), validate the receiver-observed loads
+    /// against the model charge, record the metrics.  Transport failures
+    /// abort the run by unwinding with the typed [`TransportError`] as
+    /// payload — the algorithms' round signatures stay `Result`-free, and
+    /// `Driver::try_*` catches and surfaces the error.
+    fn complete_round(
+        &mut self,
+        label: &str,
+        messages: u64,
+        bytes: u64,
+        machine_bytes: &[u64],
+        payloads: Vec<Vec<u8>>,
+        fold: Option<WireOp>,
+    ) -> Option<Vec<Vec<u8>>> {
+        let ack = match self.transport.exchange(
+            label,
+            RoundCharge {
+                messages,
+                bytes,
+                machine_bytes,
+            },
+            payloads,
+            fold,
+        ) {
+            Ok(ack) => ack,
+            Err(e) => std::panic::panic_any(e),
+        };
+        if ack.machine_bytes.len() != machine_bytes.len() {
+            std::panic::panic_any(TransportError::Protocol {
+                worker: None,
+                detail: format!(
+                    "round {label:?}: transport acked {} machines, charge has {}",
+                    ack.machine_bytes.len(),
+                    machine_bytes.len()
+                ),
+            });
+        }
+        for (machine, (&expected, &actual)) in
+            machine_bytes.iter().zip(&ack.machine_bytes).enumerate()
+        {
+            if expected != actual {
+                std::panic::panic_any(TransportError::AccountingMismatch {
+                    label: label.to_string(),
+                    machine,
+                    expected,
+                    actual,
+                });
+            }
+        }
         self.finish_round(label, messages, bytes, machine_bytes);
+        ack.folded
     }
 
     fn finish_round(&mut self, label: &str, messages: u64, bytes: u64, machine_bytes: &[u64]) {
@@ -627,6 +923,57 @@ impl Simulator {
                 dht_writes: writes,
                 ..Default::default()
             });
+        }
+    }
+}
+
+/// Serialize already-partitioned per-machine buckets into their wire
+/// images: 8-byte key + [`WireSize`] value per message, concatenated in
+/// bucket order (deterministic).
+fn encode_buckets<V: WireSize>(per_machine: &[Vec<(u64, V)>]) -> Vec<Vec<u8>> {
+    per_machine
+        .iter()
+        .map(|msgs| {
+            let mut buf = Vec::new();
+            for (key, value) in msgs {
+                buf.extend_from_slice(&key.to_le_bytes());
+                value.encode_wire(&mut buf);
+            }
+            buf
+        })
+        .collect()
+}
+
+/// Merge remotely-folded `(key, value)` pairs into `out`.  Each key is
+/// owned by exactly one machine and appears at most once per blob, so
+/// plain replacement is the fold's result; keys the remote side never saw
+/// keep their prior value.  Malformed blobs are a typed protocol error
+/// (unwound like every transport failure).
+fn apply_folded<V: WireSize + Copy>(out: &mut [V], blobs: Vec<Vec<u8>>) {
+    let malformed = |detail: String| -> ! {
+        std::panic::panic_any(TransportError::Protocol {
+            worker: None,
+            detail,
+        })
+    };
+    for blob in blobs {
+        let mut off = 0usize;
+        while off < blob.len() {
+            let Some(key_bytes) = blob.get(off..off + 8) else {
+                malformed("fold result truncated inside a key".into());
+            };
+            let key = u64::from_le_bytes(key_bytes.try_into().unwrap());
+            let Some((value, used)) = V::decode_wire(&blob[off + 8..]) else {
+                malformed(format!("fold result truncated inside value of key {key}"));
+            };
+            off += 8 + used;
+            match out.get_mut(key as usize) {
+                Some(slot) => *slot = value,
+                None => malformed(format!(
+                    "fold result key {key} outside the output range {}",
+                    out.len()
+                )),
+            }
         }
     }
 }
@@ -956,5 +1303,200 @@ mod tests {
         s.charge_dht(5, 3);
         assert_eq!(s.metrics.rounds[0].dht_reads, 5);
         assert_eq!(s.metrics.rounds[0].dht_writes, 3);
+    }
+
+    /// A wire transport without processes: counts the payload bytes it
+    /// "received" and folds tagged rounds with the shared worker fold —
+    /// the simulator's wire paths exercised without sockets.
+    #[derive(Debug, Default)]
+    struct LoopbackWire;
+
+    impl crate::mpc::transport::Exchange for LoopbackWire {
+        fn name(&self) -> &'static str {
+            "loopback"
+        }
+        fn wants_wire(&self) -> bool {
+            true
+        }
+        fn exchange(
+            &mut self,
+            _label: &str,
+            charge: crate::mpc::transport::RoundCharge<'_>,
+            payloads: Vec<Vec<u8>>,
+            fold: Option<crate::mpc::transport::WireOp>,
+        ) -> Result<crate::mpc::transport::ExchangeAck, crate::mpc::transport::TransportError>
+        {
+            let machine_bytes: Vec<u64> = if payloads.is_empty() {
+                charge.machine_bytes.to_vec() // charge-only barrier
+            } else {
+                payloads.iter().map(|p| p.len() as u64).collect()
+            };
+            let folded = match fold {
+                None => None,
+                Some(op) => Some(
+                    payloads
+                        .iter()
+                        .map(|p| crate::mpc::net::fold_wire_payload(op, p).unwrap())
+                        .collect(),
+                ),
+            };
+            Ok(crate::mpc::transport::ExchangeAck {
+                machine_bytes,
+                folded,
+            })
+        }
+    }
+
+    fn wire_sim(machines: usize) -> Simulator {
+        Simulator::with_transport(
+            MpcConfig {
+                machines,
+                space_per_machine: None,
+                spill_budget: None,
+                threads: 2,
+            },
+            Box::new(LoopbackWire),
+        )
+    }
+
+    #[test]
+    fn wire_fold_remote_matches_inproc() {
+        let msgs = fold_messages(4_000, 300);
+        let mut local = sim(8);
+        let mut out_local: Vec<u32> = (0..400u32).collect();
+        local.round_fold("fold", &mut out_local, msgs.iter().copied(), u32::min);
+
+        let mut wire = wire_sim(8);
+        let mut out_wire: Vec<u32> = (0..400u32).collect();
+        wire.round_fold_tagged(
+            "fold",
+            &mut out_wire,
+            msgs.iter().copied(),
+            WireFold::min_u32(),
+        );
+        assert_eq!(out_wire, out_local, "remote fold diverges");
+        assert_eq!(wire.metrics.rounds[0], local.metrics.rounds[0]);
+
+        // untagged on the wire: local fold + shipped accounting
+        let mut wire2 = wire_sim(8);
+        let mut out_wire2: Vec<u32> = (0..400u32).collect();
+        wire2.round_fold("fold", &mut out_wire2, msgs.iter().copied(), u32::min);
+        assert_eq!(out_wire2, out_local);
+        assert_eq!(wire2.metrics.rounds[0], local.metrics.rounds[0]);
+    }
+
+    #[test]
+    fn wire_grouped_round_matches_inproc() {
+        let msgs: Vec<(u64, u32)> = (0..500).map(|i| (i % 37, i as u32)).collect();
+        let reduce = |k: u64, vals: &mut Vec<u32>| vec![(k, vals.iter().sum::<u32>())];
+        let mut local = sim(8);
+        let out_local = local.round("g", msgs.clone(), reduce);
+        let mut wire = wire_sim(8);
+        let out_wire = wire.round("g", msgs, reduce);
+        assert_eq!(out_wire, out_local);
+        assert_eq!(wire.metrics.rounds[0], local.metrics.rounds[0]);
+    }
+
+    #[test]
+    fn wire_sharded_paths_match_reference() {
+        let msgs = fold_messages(6_000, 512);
+        let p = 4;
+        let charge = brute_charge(&msgs, p);
+
+        let mut local = sim(p);
+        let mut out_local: Vec<u32> = (0..600u32).collect();
+        local.round_fold_sharded(
+            "fold",
+            &mut out_local,
+            chunked(&msgs, p),
+            charge.clone(),
+            u32::min,
+        );
+
+        let mut wire = wire_sim(p);
+        let mut out_wire: Vec<u32> = (0..600u32).collect();
+        wire.round_fold_sharded_tagged(
+            "fold",
+            &mut out_wire,
+            chunked(&msgs, p),
+            charge.clone(),
+            WireFold::min_u32(),
+        );
+        assert_eq!(out_wire, out_local);
+        assert_eq!(wire.metrics.rounds[0], local.metrics.rounds[0]);
+
+        let mut local2 = sim(p);
+        let map_local: Vec<u64> =
+            local2.round_map_sharded("map", chunked(&msgs, p), charge.clone(), |k, v| {
+                k ^ v as u64
+            });
+        let mut wire2 = wire_sim(p);
+        let map_wire: Vec<u64> =
+            wire2.round_map_sharded("map", chunked(&msgs, p), charge, |k, v| k ^ v as u64);
+        assert_eq!(map_wire, map_local);
+        assert_eq!(wire2.metrics.rounds[0], local2.metrics.rounds[0]);
+    }
+
+    #[test]
+    fn wire_charge_only_round_barriers() {
+        let mut wire = wire_sim(4);
+        wire.charge_round("virtual", 10, 120, &[30, 30, 30, 30]);
+        let r = &wire.metrics.rounds[0];
+        assert_eq!((r.messages, r.bytes, r.max_machine_bytes), (10, 120, 30));
+    }
+
+    /// A transport whose receiver counts disagree with the charge: the
+    /// engine must abort with the typed accounting error.
+    #[derive(Debug)]
+    struct LyingWire;
+
+    impl crate::mpc::transport::Exchange for LyingWire {
+        fn name(&self) -> &'static str {
+            "lying"
+        }
+        fn wants_wire(&self) -> bool {
+            true
+        }
+        fn exchange(
+            &mut self,
+            _label: &str,
+            charge: crate::mpc::transport::RoundCharge<'_>,
+            _payloads: Vec<Vec<u8>>,
+            _fold: Option<crate::mpc::transport::WireOp>,
+        ) -> Result<crate::mpc::transport::ExchangeAck, crate::mpc::transport::TransportError>
+        {
+            let mut mb = charge.machine_bytes.to_vec();
+            if let Some(first) = mb.first_mut() {
+                *first += 1;
+            }
+            Ok(crate::mpc::transport::ExchangeAck {
+                machine_bytes: mb,
+                folded: None,
+            })
+        }
+    }
+
+    #[test]
+    fn accounting_divergence_is_a_typed_abort() {
+        let mut s = Simulator::with_transport(
+            MpcConfig {
+                machines: 2,
+                space_per_machine: None,
+                spill_budget: None,
+                threads: 1,
+            },
+            Box::new(LyingWire),
+        );
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _: Vec<()> = s.round("r", vec![(0u64, 1u32), (1, 2)], |_, _| vec![]);
+        }))
+        .expect_err("must abort");
+        let e = caught
+            .downcast::<crate::mpc::transport::TransportError>()
+            .expect("typed payload");
+        assert!(matches!(
+            *e,
+            crate::mpc::transport::TransportError::AccountingMismatch { .. }
+        ));
     }
 }

@@ -1,0 +1,542 @@
+//! The round-transport boundary: **how a round shuffles** as a trait.
+//!
+//! The MPC model separates local computation from key-shuffled
+//! communication; this module makes that separation a compile-time
+//! boundary.  [`Exchange`] owns the three things a round needs from its
+//! communication substrate:
+//!
+//! * **message routing** — delivering each machine's wire payload to the
+//!   machine owning its keys (the `machine_of` partition stays the single
+//!   routing hash; payloads arrive pre-partitioned by it);
+//! * **per-machine load accounting** — reporting the bytes each machine
+//!   *actually received*, which the [`super::Simulator`] validates against
+//!   the model charge (a divergence is a typed
+//!   [`TransportError::AccountingMismatch`], never a silently-wrong
+//!   metric);
+//! * **barrier semantics** — `exchange` does not return until every
+//!   machine has received (and acknowledged) its full load, so round
+//!   `r + 1` cannot begin before round `r` is globally complete.
+//!
+//! Two implementations exist:
+//!
+//! * [`InProcess`] — the simulator's classic backend: all machines share
+//!   the address space, messages never serialize
+//!   ([`Exchange::wants_wire`] is `false`), routing and reduction run on
+//!   the worker pool, and `exchange` is a pure accounting barrier.  This
+//!   is the fast path and the reference semantics.
+//! * [`crate::mpc::net::ProcTransport`] — the multi-process backend: one
+//!   OS process per machine, each owning its [`crate::graph::EdgeShard`],
+//!   exchanging length-prefixed checksummed frames per round over
+//!   localhost sockets.  Fold rounds tagged with a [`WireOp`] are reduced
+//!   *by the worker processes* and merged back; everything else ships its
+//!   exact charged byte image for receiver-side accounting.
+//!
+//! The eight algorithms and the contraction loop are written against
+//! [`super::Simulator`]'s round API only — they compile and run unchanged
+//! on either backend, and `rust/tests/transport_equivalence.rs` enforces
+//! that labels, per-round metrics, and derived graphs are bit-identical
+//! across them.
+//!
+//! **Error path.**  Round signatures cannot carry `Result` (the
+//! algorithms are transport-agnostic), so a failed exchange aborts the
+//! run by unwinding with the typed [`TransportError`] as the panic
+//! payload; [`crate::coordinator::Driver`]'s `try_*` entry points catch
+//! the unwind and surface the typed error.
+
+use std::fmt;
+
+/// Which transport a run shuffles on (the `--transport` CLI selector).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TransportMode {
+    /// Single-process simulator (the default).
+    #[default]
+    InProc,
+    /// Multi-process workers on localhost ([`crate::mpc::net`]).
+    Proc,
+}
+
+impl TransportMode {
+    /// Parse the CLI spelling; panics with a clear message otherwise.
+    pub fn parse(s: &str) -> TransportMode {
+        match s {
+            "inproc" | "in-process" | "local" => TransportMode::InProc,
+            "proc" | "process" | "multi-process" => TransportMode::Proc,
+            other => panic!("unknown transport {other:?} (try: inproc, proc)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TransportMode::InProc => "inproc",
+            TransportMode::Proc => "proc",
+        }
+    }
+}
+
+/// Fold operators a remote machine can apply to its received messages
+/// without shipping code: the associative, commutative reductions the
+/// algorithms' hop rounds use.  The tag travels in the round header; the
+/// wire value width is implied by the op.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WireOp {
+    MinU32,
+    MaxU32,
+    MinU64,
+    MaxU64,
+    /// Lexicographic min over `(u32, u32)` pairs (the priority/id pairs of
+    /// Cracker's and TreeContraction's pointer rounds).
+    MinPairU32,
+    MaxPairU32,
+}
+
+impl WireOp {
+    pub fn code(self) -> u8 {
+        match self {
+            WireOp::MinU32 => 1,
+            WireOp::MaxU32 => 2,
+            WireOp::MinU64 => 3,
+            WireOp::MaxU64 => 4,
+            WireOp::MinPairU32 => 5,
+            WireOp::MaxPairU32 => 6,
+        }
+    }
+
+    pub fn from_code(code: u8) -> Option<WireOp> {
+        Some(match code {
+            1 => WireOp::MinU32,
+            2 => WireOp::MaxU32,
+            3 => WireOp::MinU64,
+            4 => WireOp::MaxU64,
+            5 => WireOp::MinPairU32,
+            6 => WireOp::MaxPairU32,
+            _ => return None,
+        })
+    }
+
+    /// Encoded bytes of one value under this op.
+    pub fn value_bytes(self) -> usize {
+        match self {
+            WireOp::MinU32 | WireOp::MaxU32 => 4,
+            WireOp::MinU64 | WireOp::MaxU64 | WireOp::MinPairU32 | WireOp::MaxPairU32 => 8,
+        }
+    }
+}
+
+/// A fold operator plus its optional wire identity: `f` is what the local
+/// engine evaluates; `wire` (when the op is one a remote machine can
+/// apply) lets a wire transport run the reduce on the receiving worker
+/// process instead.  Untagged folds still run correctly on every
+/// transport — the coordinator folds locally and ships the byte image for
+/// accounting only.
+pub struct WireFold<V> {
+    pub f: fn(V, V) -> V,
+    pub wire: Option<WireOp>,
+}
+
+// Manual Clone/Copy: the derive would demand `V: Clone`, but the struct
+// only holds a fn pointer and a tag.
+impl<V> Clone for WireFold<V> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<V> Copy for WireFold<V> {}
+
+impl<V> fmt::Debug for WireFold<V> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "WireFold({:?})", self.wire)
+    }
+}
+
+impl<V> WireFold<V> {
+    /// A fold with no wire identity: always reduced by the coordinator.
+    pub fn untagged(f: fn(V, V) -> V) -> WireFold<V> {
+        WireFold { f, wire: None }
+    }
+}
+
+fn pair_min(a: (u32, u32), b: (u32, u32)) -> (u32, u32) {
+    a.min(b)
+}
+fn pair_max(a: (u32, u32), b: (u32, u32)) -> (u32, u32) {
+    a.max(b)
+}
+
+impl WireFold<u32> {
+    pub fn min_u32() -> WireFold<u32> {
+        WireFold {
+            f: u32::min,
+            wire: Some(WireOp::MinU32),
+        }
+    }
+    pub fn max_u32() -> WireFold<u32> {
+        WireFold {
+            f: u32::max,
+            wire: Some(WireOp::MaxU32),
+        }
+    }
+}
+
+impl WireFold<u64> {
+    // (a min_u64 constructor joins this set when a min-u64 hop exists;
+    // WireOp::MinU64 is already on the wire protocol)
+    pub fn max_u64() -> WireFold<u64> {
+        WireFold {
+            f: u64::max,
+            wire: Some(WireOp::MaxU64),
+        }
+    }
+}
+
+impl WireFold<(u32, u32)> {
+    pub fn min_pair_u32() -> WireFold<(u32, u32)> {
+        WireFold {
+            f: pair_min,
+            wire: Some(WireOp::MinPairU32),
+        }
+    }
+    pub fn max_pair_u32() -> WireFold<(u32, u32)> {
+        WireFold {
+            f: pair_max,
+            wire: Some(WireOp::MaxPairU32),
+        }
+    }
+}
+
+/// The model-side accounting of one round, borrowed from the engine: the
+/// quantities the transport must make true on the receiving side.
+#[derive(Debug, Clone, Copy)]
+pub struct RoundCharge<'a> {
+    pub messages: u64,
+    pub bytes: u64,
+    /// Bytes destined to each machine; `len` = machine count.
+    pub machine_bytes: &'a [u64],
+}
+
+/// What came back from one exchange.
+#[derive(Debug)]
+pub struct ExchangeAck {
+    /// Bytes received per machine, as counted by the **receiving side**.
+    /// The simulator validates these against the model charge.
+    pub machine_bytes: Vec<u64>,
+    /// For fold rounds ([`WireOp`] tagged): per machine, the folded
+    /// `(key u64, value)` pairs it computed over its received messages,
+    /// in the round's wire encoding.  `None` for untagged rounds and for
+    /// transports that do not move bytes.
+    pub folded: Option<Vec<Vec<u8>>>,
+}
+
+/// Typed failures of a round transport.  Every fault mode the
+/// multi-process backend can hit — a crashed worker, a frame cut short, a
+/// corrupted payload, protocol desync, accounting divergence — has its own
+/// variant; none of them may surface as hangs or wrong answers.
+#[derive(Debug)]
+pub enum TransportError {
+    /// Underlying socket/pipe/spawn failure (timeouts included).
+    Io {
+        worker: Option<usize>,
+        op: &'static str,
+        source: std::io::Error,
+    },
+    /// A worker process exited or its connection closed mid-protocol.
+    WorkerCrashed { worker: usize, detail: String },
+    /// A frame ended before its declared length.
+    ShortRead {
+        worker: Option<usize>,
+        wanted: u64,
+        got: u64,
+    },
+    /// A frame did not start with the protocol magic.
+    BadMagic { worker: Option<usize> },
+    /// Frame body bytes do not hash to the header checksum.
+    ChecksumMismatch {
+        worker: Option<usize>,
+        expected: u64,
+        actual: u64,
+    },
+    /// Structurally valid traffic that violates the protocol (unexpected
+    /// kind, wrong sequence number, malformed body, shard statistics that
+    /// disagree with the coordinator's cache, ...).
+    Protocol {
+        worker: Option<usize>,
+        detail: String,
+    },
+    /// Receiver-observed load differs from the model charge — the
+    /// transport delivered different bytes than the round accounted.
+    AccountingMismatch {
+        label: String,
+        machine: usize,
+        expected: u64,
+        actual: u64,
+    },
+    /// Shard shipping hit a spill-layer fault (the shard wire format is
+    /// the spill file framing).
+    Spill(crate::graph::spill::SpillError),
+}
+
+impl TransportError {
+    /// Attach a worker index to an error raised below the per-worker
+    /// layer (frame codecs report `worker: None`).
+    pub fn for_worker(self, worker: usize) -> TransportError {
+        match self {
+            TransportError::Io {
+                worker: None,
+                op,
+                source,
+            } => TransportError::Io {
+                worker: Some(worker),
+                op,
+                source,
+            },
+            TransportError::ShortRead {
+                worker: None,
+                wanted,
+                got,
+            } => TransportError::ShortRead {
+                worker: Some(worker),
+                wanted,
+                got,
+            },
+            TransportError::BadMagic { worker: None } => TransportError::BadMagic {
+                worker: Some(worker),
+            },
+            TransportError::ChecksumMismatch {
+                worker: None,
+                expected,
+                actual,
+            } => TransportError::ChecksumMismatch {
+                worker: Some(worker),
+                expected,
+                actual,
+            },
+            TransportError::Protocol {
+                worker: None,
+                detail,
+            } => TransportError::Protocol {
+                worker: Some(worker),
+                detail,
+            },
+            other => other,
+        }
+    }
+}
+
+impl From<crate::graph::spill::SpillError> for TransportError {
+    fn from(e: crate::graph::spill::SpillError) -> TransportError {
+        TransportError::Spill(e)
+    }
+}
+
+fn wtag(worker: &Option<usize>) -> String {
+    match worker {
+        Some(w) => format!("worker {w}: "),
+        None => String::new(),
+    }
+}
+
+impl fmt::Display for TransportError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TransportError::Io { worker, op, source } => {
+                write!(f, "{}transport I/O: {op}: {source}", wtag(worker))
+            }
+            TransportError::WorkerCrashed { worker, detail } => {
+                write!(f, "worker {worker} crashed: {detail}")
+            }
+            TransportError::ShortRead {
+                worker,
+                wanted,
+                got,
+            } => write!(
+                f,
+                "{}short read: frame needed {wanted} bytes, got {got}",
+                wtag(worker)
+            ),
+            TransportError::BadMagic { worker } => {
+                write!(f, "{}not a transport frame (bad magic)", wtag(worker))
+            }
+            TransportError::ChecksumMismatch {
+                worker,
+                expected,
+                actual,
+            } => write!(
+                f,
+                "{}frame checksum {actual:#018x} != header {expected:#018x}",
+                wtag(worker)
+            ),
+            TransportError::Protocol { worker, detail } => {
+                write!(f, "{}protocol violation: {detail}", wtag(worker))
+            }
+            TransportError::AccountingMismatch {
+                label,
+                machine,
+                expected,
+                actual,
+            } => write!(
+                f,
+                "round {label:?}: machine {machine} received {actual} bytes, \
+                 model charged {expected}"
+            ),
+            TransportError::Spill(e) => write!(f, "shard shipping: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for TransportError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            TransportError::Io { source, .. } => Some(source),
+            TransportError::Spill(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+/// The round-transport abstraction (see module docs).  One value lives
+/// inside each [`super::Simulator`]; every model round goes through
+/// [`exchange`](Exchange::exchange).
+pub trait Exchange: fmt::Debug {
+    /// Short backend name (`"inproc"` / `"proc"`), recorded in reports.
+    fn name(&self) -> &'static str;
+
+    /// Does this transport physically move bytes?  When `false`, rounds
+    /// stay in-process (no serialization) and `exchange` receives empty
+    /// payloads — it is a pure accounting barrier.
+    fn wants_wire(&self) -> bool;
+
+    /// Machine count the transport is bound to (`None` = any; the
+    /// in-process backend adapts to the simulator config).
+    fn machines(&self) -> Option<usize> {
+        None
+    }
+
+    /// Execute one round's communication: deliver `payloads[j]` to
+    /// machine `j` (an **empty** `payloads` vector marks a charge-only
+    /// round whose bytes never materialize — fused phases, graph-layer
+    /// contractions — which the transport must still barrier and account
+    /// at the declared loads), block until every machine has acknowledged
+    /// (the barrier), and return the receiver-observed loads.  `fold`
+    /// asks the receiving machines to reduce their `(key, value)`
+    /// messages with the tagged op and return the folded pairs.
+    fn exchange(
+        &mut self,
+        label: &str,
+        charge: RoundCharge<'_>,
+        payloads: Vec<Vec<u8>>,
+        fold: Option<WireOp>,
+    ) -> Result<ExchangeAck, TransportError>;
+}
+
+/// The in-process backend: machines share the address space, so routing
+/// and reduction already happened on the worker pool by the time the
+/// round completes — `exchange` is the accounting barrier only, and the
+/// receiver-observed loads are the charge itself.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct InProcess;
+
+impl Exchange for InProcess {
+    fn name(&self) -> &'static str {
+        "inproc"
+    }
+
+    fn wants_wire(&self) -> bool {
+        false
+    }
+
+    fn exchange(
+        &mut self,
+        _label: &str,
+        charge: RoundCharge<'_>,
+        _payloads: Vec<Vec<u8>>,
+        _fold: Option<WireOp>,
+    ) -> Result<ExchangeAck, TransportError> {
+        Ok(ExchangeAck {
+            machine_bytes: charge.machine_bytes.to_vec(),
+            folded: None,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transport_mode_parses() {
+        assert_eq!(TransportMode::parse("inproc"), TransportMode::InProc);
+        assert_eq!(TransportMode::parse("proc"), TransportMode::Proc);
+        assert_eq!(TransportMode::InProc.name(), "inproc");
+        assert_eq!(TransportMode::Proc.name(), "proc");
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown transport")]
+    fn transport_mode_rejects_garbage() {
+        let _ = TransportMode::parse("carrier-pigeon");
+    }
+
+    #[test]
+    fn wire_op_codes_roundtrip() {
+        for op in [
+            WireOp::MinU32,
+            WireOp::MaxU32,
+            WireOp::MinU64,
+            WireOp::MaxU64,
+            WireOp::MinPairU32,
+            WireOp::MaxPairU32,
+        ] {
+            assert_eq!(WireOp::from_code(op.code()), Some(op));
+        }
+        assert_eq!(WireOp::from_code(0), None);
+        assert_eq!(WireOp::from_code(200), None);
+    }
+
+    #[test]
+    fn tagged_folds_apply_their_op() {
+        assert_eq!((WireFold::min_u32().f)(3, 5), 3);
+        assert_eq!((WireFold::max_u32().f)(3, 5), 5);
+        assert_eq!((WireFold::max_u64().f)(3, 5), 5);
+        assert_eq!((WireFold::min_pair_u32().f)((1, 9), (1, 2)), (1, 2));
+        assert_eq!((WireFold::max_pair_u32().f)((1, 9), (1, 2)), (1, 9));
+        assert_eq!(WireFold::untagged(u32::min).wire, None);
+    }
+
+    #[test]
+    fn inproc_echoes_the_charge() {
+        let mut t = InProcess;
+        assert!(!t.wants_wire());
+        let mb = [10u64, 0, 7];
+        let ack = t
+            .exchange(
+                "r",
+                RoundCharge {
+                    messages: 3,
+                    bytes: 17,
+                    machine_bytes: &mb,
+                },
+                Vec::new(),
+                None,
+            )
+            .unwrap();
+        assert_eq!(ack.machine_bytes, vec![10, 0, 7]);
+        assert!(ack.folded.is_none());
+    }
+
+    #[test]
+    fn errors_format_with_worker_context() {
+        let e = TransportError::ShortRead {
+            worker: None,
+            wanted: 8,
+            got: 3,
+        }
+        .for_worker(2);
+        assert!(e.to_string().contains("worker 2"), "{e}");
+        let e = TransportError::AccountingMismatch {
+            label: "hop".into(),
+            machine: 1,
+            expected: 12,
+            actual: 8,
+        };
+        assert!(e.to_string().contains("charged 12"), "{e}");
+    }
+}

@@ -91,6 +91,28 @@ impl Args {
         }
     }
 
+    /// Count flag where 0 is invalid (machine/thread/worker counts): a
+    /// zero would otherwise surface far downstream as a division, an
+    /// empty pool, or a hung transport — fail at the flag instead.
+    pub fn nonzero_usize_or(&self, key: &str, default: usize) -> usize {
+        let v = self.usize_or(key, default);
+        if v == 0 {
+            panic!("--{key}: must be >= 1 (got 0)");
+        }
+        v
+    }
+
+    /// Byte-size flag: plain bytes or a binary `K`/`M`/`G` suffix
+    /// (`--spill-budget 64M`).  Unparseable values fail with a clear
+    /// error naming the flag instead of a panic deep in a run.
+    pub fn byte_size_opt(&self, key: &str) -> Option<u64> {
+        self.str_opt(key).map(|v| {
+            parse_byte_size(v).unwrap_or_else(|| {
+                panic!("--{key}: cannot parse {v:?} as a byte size (use N, NK, NM, or NG)")
+            })
+        })
+    }
+
     /// Comma-separated list getter, e.g. `--sizes 10,20,30`.
     pub fn u64_list_or(&self, key: &str, default: &[u64]) -> Vec<u64> {
         match self.str_opt(key) {
@@ -116,6 +138,24 @@ impl Args {
             .cloned()
             .collect()
     }
+}
+
+/// Parse `N`, `NK`, `NM`, or `NG` (binary multiples) into bytes.
+fn parse_byte_size(s: &str) -> Option<u64> {
+    let t = s.trim();
+    for (suffix, mult) in [
+        ("k", 1u64 << 10),
+        ("K", 1 << 10),
+        ("m", 1 << 20),
+        ("M", 1 << 20),
+        ("g", 1 << 30),
+        ("G", 1 << 30),
+    ] {
+        if let Some(num) = t.strip_suffix(suffix) {
+            return num.trim().parse::<u64>().ok()?.checked_mul(mult);
+        }
+    }
+    t.parse().ok()
 }
 
 #[cfg(test)]
@@ -168,5 +208,49 @@ mod tests {
     fn bad_parse_panics() {
         let a = parse(&["--n", "xyz"]);
         let _ = a.u64_or("n", 0);
+    }
+
+    #[test]
+    fn nonzero_counts_pass_through() {
+        let a = parse(&["--machines", "4"]);
+        assert_eq!(a.nonzero_usize_or("machines", 16), 4);
+        assert_eq!(a.nonzero_usize_or("threads", 8), 8); // default
+    }
+
+    #[test]
+    #[should_panic(expected = "--machines: must be >= 1")]
+    fn zero_machines_is_rejected() {
+        let a = parse(&["--machines", "0"]);
+        let _ = a.nonzero_usize_or("machines", 16);
+    }
+
+    #[test]
+    #[should_panic(expected = "--threads: must be >= 1")]
+    fn zero_threads_is_rejected() {
+        let a = parse(&["--threads", "0"]);
+        let _ = a.nonzero_usize_or("threads", 8);
+    }
+
+    #[test]
+    fn byte_sizes_parse_with_suffixes() {
+        let a = parse(&["--spill-budget", "64M"]);
+        assert_eq!(a.byte_size_opt("spill-budget"), Some(64 << 20));
+        assert_eq!(a.byte_size_opt("absent"), None);
+        assert_eq!(parse_byte_size("123"), Some(123));
+        assert_eq!(parse_byte_size(" 2k "), Some(2048));
+        assert_eq!(parse_byte_size("1G"), Some(1 << 30));
+        assert_eq!(parse_byte_size("4 M"), Some(4 << 20));
+        assert_eq!(parse_byte_size("-3"), None);
+        assert_eq!(parse_byte_size("64MB"), None);
+        assert_eq!(parse_byte_size("lots"), None);
+        // overflow is a parse failure, not a wrapped number
+        assert_eq!(parse_byte_size("99999999999999999999G"), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "--spill-budget: cannot parse")]
+    fn bad_spill_budget_is_rejected_at_the_flag() {
+        let a = parse(&["--spill-budget", "lots"]);
+        let _ = a.byte_size_opt("spill-budget");
     }
 }

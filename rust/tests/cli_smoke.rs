@@ -104,3 +104,55 @@ fn run_rejects_wrong_labels_never_silently() {
     assert!(ok, "{text}");
     assert!(text.contains("[verified]"), "{text}");
 }
+
+#[test]
+fn zero_machines_fails_at_the_flag() {
+    let (ok, text) = lcc(&["run", "--graph", "path", "--n", "50", "--machines", "0"]);
+    assert!(!ok);
+    assert!(text.contains("--machines"), "{text}");
+    assert!(text.contains(">= 1"), "{text}");
+}
+
+#[test]
+fn zero_threads_fails_at_the_flag() {
+    let (ok, text) = lcc(&["run", "--graph", "path", "--n", "50", "--threads", "0"]);
+    assert!(!ok);
+    assert!(text.contains("--threads"), "{text}");
+}
+
+#[test]
+fn unparseable_spill_budget_fails_at_the_flag() {
+    let (ok, text) = lcc(&[
+        "run", "--graph", "path", "--n", "50", "--spill-budget", "lots",
+    ]);
+    assert!(!ok);
+    assert!(text.contains("--spill-budget"), "{text}");
+    assert!(text.contains("byte size"), "{text}");
+}
+
+#[test]
+fn spill_budget_accepts_binary_suffixes() {
+    let (ok, text) = lcc(&[
+        "run", "--algo", "lc", "--graph", "path", "--n", "200", "--spill-budget", "1K",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("[verified]"), "{text}");
+}
+
+#[test]
+fn run_on_the_proc_transport_verifies() {
+    // the whole CLI path distributed: the binary spawns itself as workers
+    let (ok, text) = lcc(&[
+        "run", "--algo", "lc", "--graph", "gnp", "--n", "800", "--avg-deg", "4",
+        "--machines", "4", "--transport", "proc", "--verify", "true",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("[verified]"), "{text}");
+}
+
+#[test]
+fn worker_without_connect_fails_fast() {
+    let (ok, text) = lcc(&["worker"]);
+    assert!(!ok);
+    assert!(text.contains("--connect"), "{text}");
+}

@@ -307,6 +307,63 @@ fn prop_dense_cpu_backend_matches_phase_labels() {
     );
 }
 
+#[test]
+fn prop_machine_of_partition_and_reshard_roundtrip() {
+    // The machine_of partition + reshard must round-trip the edge
+    // multiset and every cached histogram for arbitrary machine counts —
+    // including machines = 1 and machines > n (empty shards).
+    Prop::new(14).check_sized(
+        "machine-of-reshard-roundtrip",
+        160,
+        |rng, size| {
+            let g = random_graph(rng, size);
+            let p_small = 1 + rng.gen_range(7) as usize; // 1..=7
+            let p_huge = g.num_vertices() * 2 + 3; // machines > n
+            (g, p_small, p_huge)
+        },
+        |(flat, p_small, p_huge)| {
+            use lcc::graph::ShardedGraph;
+            use lcc::mpc::simulator::machine_of;
+            let counts = [1usize, *p_small, *p_huge];
+            for &p in &counts {
+                let g = ShardedGraph::from_graph(flat, p);
+                check_histogram_caches(&g, &format!("p={p}"))?;
+                // shard-ownership invariant on every stored edge
+                for s in 0..g.num_shards() {
+                    let data = g.read_shard(s).map_err(|e| format!("p={p}: {e}"))?;
+                    for &(u, v) in data.iter() {
+                        lcc::prop_assert!(
+                            u < v && machine_of(u as u64, p) == s,
+                            "p={p}: edge ({u},{v}) misplaced on shard {s}"
+                        );
+                    }
+                }
+                lcc::prop_assert_eq!(
+                    edge_multiset(&g),
+                    flat.edges().to_vec(),
+                    "p={p}: partitioning changed the edge multiset"
+                );
+                for &q in &counts {
+                    let there = g.reshard(q);
+                    check_histogram_caches(&there, &format!("p={p}->q={q}"))?;
+                    lcc::prop_assert_eq!(
+                        edge_multiset(&there),
+                        flat.edges().to_vec(),
+                        "p={p}->q={q}: reshard changed the edge multiset"
+                    );
+                    let back = there.reshard(p);
+                    check_histogram_caches(&back, &format!("p={p}->q={q}->p"))?;
+                    lcc::prop_assert!(
+                        back == g,
+                        "p={p}->q={q}->p: round trip is not bit-identical"
+                    );
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
 /// Recompute a shard's ownership histogram from its actual edges.
 fn brute_peer_counts(
     edges: &[(lcc::graph::Vertex, lcc::graph::Vertex)],

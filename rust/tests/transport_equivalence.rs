@@ -1,0 +1,154 @@
+//! Transport equivalence: the multi-process backend must be
+//! observationally identical to the in-process engine.
+//!
+//! For every algorithm and machine count, labels, per-round metrics
+//! (message counts, shuffled bytes, per-machine loads), phase series, and
+//! transport-driven graph rewrites must compare **bit-identical** between
+//! `inproc` and `proc` — the workers are real OS processes spawned from
+//! the `lcc` binary, the payloads really cross sockets, and the hop folds
+//! are reduced remotely, so this suite is the end-to-end proof that the
+//! `Exchange` boundary carries the full semantics.
+
+use std::path::Path;
+
+use lcc::cc::common::{contract_mpc, min_hop};
+use lcc::cc::{self, CcAlgorithm, CcResult, RunOptions};
+use lcc::graph::{generators, Graph, ShardedGraph, SpillPolicy};
+use lcc::mpc::net::ProcTransport;
+use lcc::mpc::{MpcConfig, Simulator};
+use lcc::util::rng::Rng;
+
+fn worker_bin() -> &'static Path {
+    Path::new(env!("CARGO_BIN_EXE_lcc"))
+}
+
+fn cfg(machines: usize) -> MpcConfig {
+    MpcConfig {
+        machines,
+        space_per_machine: None,
+        spill_budget: None,
+        threads: 2,
+    }
+}
+
+fn proc_sim(g: &ShardedGraph, machines: usize) -> Simulator {
+    let mut t = ProcTransport::spawn(machines, worker_bin()).expect("spawn workers");
+    t.load_graph(g).expect("distribute shards");
+    Simulator::with_transport(cfg(machines), Box::new(t))
+}
+
+/// A small graph with structure: a sparse random part, a path (deep
+/// component), and isolated vertices from the gnp tail.
+fn test_graph() -> Graph {
+    let mut rng = Rng::new(9);
+    generators::gnp(100, 0.03, &mut rng).disjoint_union(generators::path(30))
+}
+
+fn run_algo(algo: &str, g: &ShardedGraph, mut sim: Simulator, seed: u64) -> CcResult {
+    let a = cc::by_name(algo);
+    let mut rng = Rng::new(seed);
+    let opts = RunOptions {
+        finisher_threshold: 16,
+        ..RunOptions::default()
+    };
+    a.run_sharded(g, &mut sim, &mut rng, &opts)
+}
+
+#[test]
+fn all_algorithms_bit_identical_across_transports() {
+    let flat = test_graph();
+    let want = cc::oracle::components(&flat);
+    for machines in [1usize, 4, 16] {
+        let g = ShardedGraph::from_graph(&flat, machines);
+        for algo in cc::ALL_ALGORITHMS {
+            let local = run_algo(algo, &g, Simulator::new(cfg(machines)), 7);
+            let remote = run_algo(algo, &g, proc_sim(&g, machines), 7);
+            assert_eq!(
+                local.labels, remote.labels,
+                "{algo} machines={machines}: labels diverge"
+            );
+            assert_eq!(local.labels, want, "{algo} machines={machines}: wrong labels");
+            assert_eq!(
+                local.phases, remote.phases,
+                "{algo} machines={machines}: phases diverge"
+            );
+            assert_eq!(
+                local.edges_per_phase, remote.edges_per_phase,
+                "{algo} machines={machines}: phase series diverge"
+            );
+            assert_eq!(
+                local.metrics.rounds, remote.metrics.rounds,
+                "{algo} machines={machines}: per-round metrics diverge"
+            );
+        }
+    }
+}
+
+#[test]
+fn transport_driven_rewrites_produce_identical_graphs() {
+    // hop + contract under both transports: the *final graphs* must be
+    // bit-identical, not just the labels
+    let flat = test_graph();
+    let machines = 4;
+    let g = ShardedGraph::from_graph(&flat, machines);
+
+    let run = |mut sim: Simulator| {
+        let labels: Vec<u32> = (0..g.num_vertices() as u32).collect();
+        let hopped = min_hop(&mut sim, "hop", &g, &labels, true);
+        let (contracted, node_map) = contract_mpc(&mut sim, &g, &hopped);
+        (hopped, contracted, node_map, sim.metrics.rounds)
+    };
+    let (h_l, c_l, m_l, r_l) = run(Simulator::new(cfg(machines)));
+    let (h_p, c_p, m_p, r_p) = run(proc_sim(&g, machines));
+    assert_eq!(h_l, h_p, "hop values diverge");
+    assert_eq!(m_l, m_p, "compaction maps diverge");
+    assert_eq!(c_l, c_p, "contracted sharded graphs diverge");
+    assert_eq!(c_l.to_graph(), c_p.to_graph(), "flattened graphs diverge");
+    assert_eq!(r_l, r_p, "rewrite round metrics diverge");
+}
+
+#[test]
+fn spilled_shards_ship_without_rehydration_and_match() {
+    // a disk-backed graph: the proc transport reads the shard files
+    // verbatim off the spill dir; results must still be bit-identical
+    let flat = test_graph();
+    let machines = 4;
+    let g = ShardedGraph::from_graph_with(&flat, machines, SpillPolicy::budget(0));
+    assert!(g.is_spilled(), "budget 0 must spill");
+    let local = run_algo("lc", &g, Simulator::new(cfg(machines)), 3);
+    let remote = run_algo("lc", &g, proc_sim(&g, machines), 3);
+    assert_eq!(local.labels, remote.labels);
+    assert_eq!(local.metrics.rounds, remote.metrics.rounds);
+    assert_eq!(local.labels, cc::oracle::components(&flat));
+}
+
+#[test]
+fn driver_runs_the_proc_transport_end_to_end() {
+    use lcc::coordinator::{Driver, RunConfig};
+    use lcc::mpc::TransportMode;
+    let flat = test_graph();
+    let driver = Driver::new(RunConfig {
+        algorithm: "cracker".into(),
+        machines: 4,
+        transport: TransportMode::Proc,
+        worker_bin: Some(worker_bin().to_path_buf()),
+        verify: true,
+        ..Default::default()
+    });
+    let report = driver.try_run_named(&flat, "equiv").expect("proc run");
+    assert_eq!(report.verified, Some(true));
+    assert_eq!(report.transport, "proc");
+    assert!(report.completed);
+
+    let inproc = Driver::new(RunConfig {
+        algorithm: "cracker".into(),
+        machines: 4,
+        verify: true,
+        ..Default::default()
+    })
+    .run_named(&flat, "equiv");
+    assert_eq!(inproc.transport, "inproc");
+    assert_eq!(report.rounds, inproc.rounds);
+    assert_eq!(report.total_shuffle_bytes, inproc.total_shuffle_bytes);
+    assert_eq!(report.max_round_bytes, inproc.max_round_bytes);
+}

@@ -1,0 +1,401 @@
+//! Fault injection for the multi-process transport: every failure mode
+//! must surface as a **typed** `TransportError` — never a hang, never a
+//! silently-wrong answer.
+//!
+//! Real-process faults (kill a worker mid-run) use workers spawned from
+//! the actual `lcc` binary; protocol-level faults (truncated frames,
+//! corrupted payloads, lying accounting, stale shard statistics) use an
+//! in-test fake worker speaking the frame protocol over a localhost
+//! socket, so each fault is injected at an exact byte.
+
+use std::io::Write;
+use std::net::{TcpListener, TcpStream};
+use std::path::Path;
+
+use lcc::graph::{generators, ShardedGraph};
+use lcc::mpc::net::{self, FrameKind, ProcTransport, PROTO_VERSION};
+use lcc::mpc::{
+    Exchange, MpcConfig, RoundCharge, Simulator, TransportError, WireOp,
+};
+use lcc::util::rng::Rng;
+
+fn worker_bin() -> &'static Path {
+    Path::new(env!("CARGO_BIN_EXE_lcc"))
+}
+
+fn small_graph(machines: usize) -> ShardedGraph {
+    let flat = generators::gnp(60, 0.05, &mut Rng::new(2));
+    ShardedGraph::from_graph(&flat, machines)
+}
+
+// ---------------------------------------------------------------------------
+// real worker processes
+
+#[test]
+fn killed_worker_is_a_typed_error_not_a_hang() {
+    let g = small_graph(2);
+    let mut t = ProcTransport::spawn(2, worker_bin()).expect("spawn");
+    t.load_graph(&g).expect("load");
+    t.kill_worker(0);
+    t.kill_worker(1);
+    let err = t
+        .exchange(
+            "after-kill",
+            RoundCharge {
+                messages: 0,
+                bytes: 0,
+                machine_bytes: &[0, 0],
+            },
+            vec![Vec::new(), Vec::new()],
+            None,
+        )
+        .expect_err("dead workers must fail the exchange");
+    match err {
+        TransportError::WorkerCrashed { .. }
+        | TransportError::ShortRead { .. }
+        | TransportError::Io { .. } => {}
+        other => panic!("expected a crash-shaped error, got {other}"),
+    }
+}
+
+#[test]
+fn missing_worker_binary_is_a_typed_spawn_error() {
+    use lcc::coordinator::{Driver, RunConfig};
+    use lcc::mpc::TransportMode;
+    let flat = generators::path(40);
+    let driver = Driver::new(RunConfig {
+        algorithm: "lc".into(),
+        machines: 2,
+        transport: TransportMode::Proc,
+        worker_bin: Some("/nonexistent/lcc-worker-binary".into()),
+        ..Default::default()
+    });
+    match driver.try_run_named(&flat, "faults") {
+        Err(TransportError::Io { op, .. }) => assert_eq!(op, "spawn worker"),
+        other => panic!("expected spawn Io error, got {other:?}"),
+    }
+}
+
+#[test]
+fn driver_surfaces_a_mid_run_crash_as_a_typed_error() {
+    // /proc/self/exe of the test binary is NOT an lcc worker: it exits
+    // without ever connecting, which the handshake reports as a typed
+    // crash/deadline error — the driver path must hand it back, not hang.
+    use lcc::coordinator::{Driver, RunConfig};
+    use lcc::mpc::TransportMode;
+    if !Path::new("/bin/false").exists() {
+        eprintln!("no /bin/false on this system; skipping");
+        return;
+    }
+    let flat = generators::path(40);
+    let driver = Driver::new(RunConfig {
+        algorithm: "lc".into(),
+        machines: 2,
+        transport: TransportMode::Proc,
+        worker_bin: Some("/bin/false".into()),
+        ..Default::default()
+    });
+    match driver.try_run_named(&flat, "faults") {
+        Err(TransportError::WorkerCrashed { .. }) | Err(TransportError::Protocol { .. }) => {}
+        other => panic!("expected WorkerCrashed/Protocol, got {other:?}"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// an in-test fake worker: precise byte-level fault injection
+
+struct FakePeer {
+    stream: TcpStream,
+}
+
+impl FakePeer {
+    /// Connect a coordinator-side transport to one fake worker; the fake
+    /// completes the handshake and hands the test raw frame control.
+    fn pair() -> (ProcTransport, FakePeer) {
+        let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let addr = listener.local_addr().unwrap();
+        let fake = std::thread::spawn(move || {
+            let stream = TcpStream::connect(addr).unwrap();
+            // worker side of the handshake: version + pid
+            let mut hello = PROTO_VERSION.to_le_bytes().to_vec();
+            hello.extend_from_slice(&std::process::id().to_le_bytes());
+            let mut w = stream.try_clone().unwrap();
+            net::write_frame(&mut w, FrameKind::Hello, 0, &hello).unwrap();
+            let mut r = stream.try_clone().unwrap();
+            let assign = net::read_frame(&mut r).unwrap();
+            assert_eq!(assign.kind, FrameKind::Assign);
+            FakePeer { stream }
+        });
+        let (coord_side, _) = listener.accept().unwrap();
+        let transport = ProcTransport::from_connected(vec![coord_side]).unwrap();
+        (transport, fake.join().unwrap())
+    }
+
+    fn read(&mut self) -> net::Frame {
+        let mut r = self.stream.try_clone().unwrap();
+        net::read_frame(&mut r).unwrap()
+    }
+
+    fn send(&mut self, kind: FrameKind, seq: u64, body: &[u8]) {
+        let mut w = self.stream.try_clone().unwrap();
+        net::write_frame(&mut w, kind, seq, body).unwrap();
+    }
+
+    fn send_raw(&mut self, bytes: &[u8]) {
+        self.stream.write_all(bytes).unwrap();
+        self.stream.flush().unwrap();
+    }
+
+    /// Serve the transport's teardown tolerantly: the coordinator's Drop
+    /// may close the socket without reading our Bye — that race is fine.
+    fn serve_shutdown(mut self) {
+        loop {
+            match net::read_frame(&mut self.stream.try_clone().unwrap()) {
+                Ok(f) if f.kind == FrameKind::Shutdown => {
+                    let mut w = self.stream.try_clone().unwrap();
+                    let _ = net::write_frame(&mut w, FrameKind::Bye, f.seq, &[]);
+                    break;
+                }
+                Ok(_) => continue,
+                Err(_) => break,
+            }
+        }
+    }
+}
+
+fn charge1(bytes: u64) -> [u64; 1] {
+    [bytes]
+}
+
+#[test]
+fn truncated_ack_frame_is_a_short_read() {
+    let (mut t, mut peer) = FakePeer::pair();
+    let handle = std::thread::spawn(move || {
+        let _round = peer.read();
+        // a RoundAck cut off mid-body: encode fully, send a prefix, close
+        let mut buf = Vec::new();
+        net::write_frame(&mut buf, FrameKind::RoundAck, 1, &[0u8; 16]).unwrap();
+        peer.send_raw(&buf[..buf.len() - 7]);
+        drop(peer);
+    });
+    let err = t
+        .exchange(
+            "r",
+            RoundCharge {
+                messages: 0,
+                bytes: 0,
+                machine_bytes: &charge1(0),
+            },
+            vec![Vec::new()],
+            None,
+        )
+        .expect_err("truncated ack must fail");
+    handle.join().unwrap();
+    assert!(
+        matches!(err, TransportError::ShortRead { .. }),
+        "expected ShortRead, got {err}"
+    );
+}
+
+#[test]
+fn corrupted_ack_frame_is_a_checksum_mismatch() {
+    let (mut t, mut peer) = FakePeer::pair();
+    let handle = std::thread::spawn(move || {
+        let _round = peer.read();
+        let mut buf = Vec::new();
+        net::write_frame(&mut buf, FrameKind::RoundAck, 1, &[7u8; 16]).unwrap();
+        let last = buf.len() - 1;
+        buf[last] ^= 0x01; // flip one payload bit
+        peer.send_raw(&buf);
+        drop(peer);
+    });
+    let err = t
+        .exchange(
+            "r",
+            RoundCharge {
+                messages: 0,
+                bytes: 0,
+                machine_bytes: &charge1(0),
+            },
+            vec![Vec::new()],
+            None,
+        )
+        .expect_err("corrupt ack must fail");
+    handle.join().unwrap();
+    assert!(
+        matches!(err, TransportError::ChecksumMismatch { .. }),
+        "expected ChecksumMismatch, got {err}"
+    );
+}
+
+#[test]
+fn lying_receiver_accounting_aborts_with_the_typed_error() {
+    // the fake worker acknowledges more bytes than it was sent: the
+    // engine must refuse the round (wrong answers are impossible, the
+    // run dies with AccountingMismatch instead)
+    let (t, mut peer) = FakePeer::pair();
+    let handle = std::thread::spawn(move || {
+        let round = peer.read();
+        let mut body = Vec::new();
+        body.extend_from_slice(&999u64.to_le_bytes()); // lie
+        body.extend_from_slice(&0u64.to_le_bytes()); // no fold results
+        peer.send(FrameKind::RoundAck, round.seq, &body);
+        peer.serve_shutdown();
+    });
+    let mut sim = Simulator::with_transport(
+        MpcConfig {
+            machines: 1,
+            space_per_machine: None,
+            spill_budget: None,
+            threads: 1,
+        },
+        Box::new(t),
+    );
+    let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        let mut out = vec![0u32; 4];
+        sim.round_fold("r", &mut out, vec![(1u64, 5u32)], u32::min);
+    }))
+    .expect_err("accounting lie must abort the round");
+    let err = caught
+        .downcast::<TransportError>()
+        .expect("typed panic payload");
+    assert!(
+        matches!(*err, TransportError::AccountingMismatch { .. }),
+        "expected AccountingMismatch, got {err}"
+    );
+    drop(sim); // transport Drop sends Shutdown; the fake answers Bye
+    handle.join().unwrap();
+}
+
+#[test]
+fn diverging_shard_statistics_are_a_protocol_error() {
+    let (mut t, mut peer) = FakePeer::pair();
+    let g = small_graph(1);
+    let stats_len = g.shard_stats(0).len;
+    let handle = std::thread::spawn(move || {
+        let load = peer.read();
+        assert_eq!(load.kind, FrameKind::LoadShard);
+        // ack with a wrong edge count: custody divergence
+        let mut body = Vec::new();
+        body.extend_from_slice(&0u32.to_le_bytes());
+        body.extend_from_slice(&(stats_len + 1).to_le_bytes());
+        body.extend_from_slice(&0u64.to_le_bytes());
+        body.extend_from_slice(&1u32.to_le_bytes());
+        body.extend_from_slice(&(stats_len + 1).to_le_bytes());
+        peer.send(FrameKind::LoadAck, load.seq, &body);
+        drop(peer);
+    });
+    let err = t.load_graph(&g).expect_err("diverging stats must fail");
+    handle.join().unwrap();
+    assert!(
+        matches!(err, TransportError::Protocol { .. }),
+        "expected Protocol, got {err}"
+    );
+}
+
+#[test]
+fn fold_round_with_garbage_fold_results_is_typed() {
+    // fake worker returns a fold blob with a key outside the output
+    // range: the merge must abort with a typed protocol error
+    let (t, mut peer) = FakePeer::pair();
+    let handle = std::thread::spawn(move || {
+        let round = peer.read();
+        let mut fold = Vec::new();
+        fold.extend_from_slice(&u64::MAX.to_le_bytes()); // absurd key
+        fold.extend_from_slice(&1u32.to_le_bytes());
+        let mut body = Vec::new();
+        body.extend_from_slice(&12u64.to_le_bytes()); // matches the charge
+        body.extend_from_slice(&(fold.len() as u64).to_le_bytes());
+        body.extend_from_slice(&fold);
+        peer.send(FrameKind::RoundAck, round.seq, &body);
+        peer.serve_shutdown();
+    });
+    let mut sim = Simulator::with_transport(
+        MpcConfig {
+            machines: 1,
+            space_per_machine: None,
+            spill_budget: None,
+            threads: 1,
+        },
+        Box::new(t),
+    );
+    let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        let mut out = vec![9u32; 4];
+        sim.round_fold_tagged(
+            "hop",
+            &mut out,
+            vec![(1u64, 5u32)],
+            lcc::mpc::WireFold::min_u32(),
+        );
+    }))
+    .expect_err("garbage fold keys must abort");
+    let err = caught
+        .downcast::<TransportError>()
+        .expect("typed panic payload");
+    assert!(
+        matches!(*err, TransportError::Protocol { .. }),
+        "expected Protocol, got {err}"
+    );
+    drop(sim);
+    handle.join().unwrap();
+}
+
+#[test]
+fn frame_codec_faults_are_typed_at_the_byte_level() {
+    // belt-and-braces at the lowest layer (the same codec both sides use)
+    let mut buf = Vec::new();
+    net::write_frame(&mut buf, FrameKind::Round, 3, b"abcdef").unwrap();
+
+    let mut cut = buf.clone();
+    cut.truncate(buf.len() - 3);
+    assert!(matches!(
+        net::read_frame(&mut &cut[..]),
+        Err(TransportError::ShortRead { .. })
+    ));
+
+    let mut bad_magic = buf.clone();
+    bad_magic[0] = b'Z';
+    assert!(matches!(
+        net::read_frame(&mut &bad_magic[..]),
+        Err(TransportError::BadMagic { .. })
+    ));
+
+    let mut corrupt = buf;
+    let last = corrupt.len() - 1;
+    corrupt[last] ^= 0x80;
+    assert!(matches!(
+        net::read_frame(&mut &corrupt[..]),
+        Err(TransportError::ChecksumMismatch { .. })
+    ));
+}
+
+/// `exchange` used directly (same entry the simulator uses) must also
+/// enforce wire-op folding round trips with a real worker process.
+#[test]
+fn real_worker_folds_min_u32_remotely() {
+    let g = small_graph(1);
+    let mut t = ProcTransport::spawn(1, worker_bin()).expect("spawn");
+    t.load_graph(&g).expect("load");
+    let mut payload = Vec::new();
+    for (k, v) in [(3u64, 50u32), (3, 20), (5, 7)] {
+        payload.extend_from_slice(&k.to_le_bytes());
+        payload.extend_from_slice(&v.to_le_bytes());
+    }
+    let ack = t
+        .exchange(
+            "hop",
+            RoundCharge {
+                messages: 3,
+                bytes: payload.len() as u64,
+                machine_bytes: &charge1(payload.len() as u64),
+            },
+            vec![payload.clone()],
+            Some(WireOp::MinU32),
+        )
+        .expect("fold round");
+    assert_eq!(ack.machine_bytes, vec![payload.len() as u64]);
+    let folded = &ack.folded.expect("fold results")[0];
+    let expect = net::fold_wire_payload(WireOp::MinU32, &payload).unwrap();
+    assert_eq!(folded, &expect);
+    t.shutdown().expect("graceful shutdown");
+}
