@@ -6,7 +6,7 @@ use super::harness::{Bench, Measurement};
 use crate::cc::backend::{CpuBackend, DenseBackend};
 use crate::cc::common::{min_hop, Priorities};
 use crate::graph::{generators, ShardedGraph, SpillPolicy};
-use crate::mpc::net::ProcTransport;
+use crate::mpc::net::{ProcTransport, ShuffleTransport};
 use crate::mpc::{MpcConfig, Simulator, TransportMode};
 use crate::util::rng::Rng;
 
@@ -55,6 +55,117 @@ pub fn bench_proc_min_hop(
             sim.metrics.rounds.clear();
         },
     ))
+}
+
+/// L3 primitive on the shuffle transport: one min-hop round generated on
+/// the workers and shuffled worker↔worker — the coordinator issues the
+/// descriptor and validates O(machines) summaries.  Only runs under
+/// `lcc perf --transport shuffle` (the worker binary is this
+/// executable).  Side-by-side with `L3/proc_min_hop` it measures what
+/// moving the data plane off the coordinator buys per round.
+pub fn bench_shuffle_min_hop(
+    b: &Bench,
+    n: usize,
+    avg_deg: f64,
+    machines: usize,
+) -> Option<Measurement> {
+    let flat = generators::gnp(n, avg_deg / n as f64, &mut Rng::new(1));
+    let g = ShardedGraph::from_graph(&flat, machines);
+    let vals: Vec<u32> = (0..n as u32).collect();
+    let m = g.num_edges() as f64;
+    let bin = std::env::current_exe().ok()?;
+    let mut transport = match ShuffleTransport::spawn(machines, &bin) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("[perf] shuffle transport unavailable: {e}");
+            return None;
+        }
+    };
+    if let Err(e) = transport.load_graph(&g) {
+        eprintln!("[perf] shuffle shard distribution failed: {e}");
+        return None;
+    }
+    let mut sim = Simulator::with_transport(
+        MpcConfig {
+            machines,
+            space_per_machine: None,
+            spill_budget: None,
+            threads: 1,
+        },
+        Box::new(transport),
+    );
+    Some(b.run(
+        &format!(
+            "L3/shuffle_min_hop n={n} m={} machines={machines}",
+            g.num_edges()
+        ),
+        Some(m),
+        || {
+            let out = min_hop(&mut sim, "bench", &g, &vals, true);
+            std::hint::black_box(out);
+            sim.metrics.rounds.clear();
+            sim.metrics.timings.clear();
+        },
+    ))
+}
+
+/// One end-to-end LocalContraction run whose per-round
+/// generate/shuffle/fold wall-clock breakdown (plus peak RSS) goes into
+/// the perf artifact — the coordinator-vs-worker cost split the shuffle
+/// transport exists to move.  Wire transports spawn real workers from
+/// this executable; `None` when that fails (e.g. `cargo bench` harness).
+pub fn round_breakdown(machines: usize, transport: TransportMode) -> Option<crate::util::json::Json> {
+    use crate::util::json::Json;
+    let flat = generators::gnp(20_000, 8.0 / 20_000.0, &mut Rng::new(11));
+    let g = ShardedGraph::from_graph(&flat, machines);
+    let mpc = MpcConfig {
+        machines,
+        space_per_machine: None,
+        spill_budget: None,
+        threads: 1,
+    };
+    let mut sim = match transport {
+        TransportMode::InProc => Simulator::new(mpc),
+        TransportMode::Proc => {
+            let bin = std::env::current_exe().ok()?;
+            let mut t = ProcTransport::spawn(machines, &bin).ok()?;
+            t.load_graph(&g).ok()?;
+            Simulator::with_transport(mpc, Box::new(t))
+        }
+        TransportMode::Shuffle => {
+            let bin = std::env::current_exe().ok()?;
+            let mut t = ShuffleTransport::spawn(machines, &bin).ok()?;
+            t.load_graph(&g).ok()?;
+            Simulator::with_transport(mpc, Box::new(t))
+        }
+    };
+    let algo = crate::cc::by_name("lc");
+    let mut rng = Rng::new(12);
+    let res = algo.run_sharded(&g, &mut sim, &mut rng, &crate::cc::RunOptions::default());
+    let rounds = Json::Arr(
+        res.metrics
+            .timings
+            .iter()
+            .map(|t| {
+                Json::obj()
+                    .set("label", t.label.as_str())
+                    .set("gen_ms", t.gen_ms)
+                    .set("shuffle_ms", t.shuffle_ms)
+                    .set("fold_ms", t.fold_ms)
+            })
+            .collect(),
+    );
+    let doc = Json::obj()
+        .set("algo", "lc")
+        .set("n", 20_000usize)
+        .set("m", g.num_edges())
+        .set("machines", machines)
+        .set("transport", transport.name())
+        .set("rounds", rounds);
+    Some(match crate::util::stats::peak_rss_bytes() {
+        Some(rss) => doc.set("peak_rss_bytes", rss),
+        None => doc,
+    })
 }
 
 /// L3 primitive: one min-hop MPC round over a sharded G(n,p) graph,
@@ -311,6 +422,15 @@ pub fn standard_suite(
             out.push(m);
         }
     }
+    if transport == TransportMode::Shuffle {
+        // the worker-native round next to its coordinator-routed twin
+        if let Some(m) = bench_proc_min_hop(&b, 50_000, 8.0, machines) {
+            out.push(m);
+        }
+        if let Some(m) = bench_shuffle_min_hop(&b, 50_000, 8.0, machines) {
+            out.push(m);
+        }
+    }
     if let Some(m) = bench_dense_xla(&b, 16.0) {
         out.push(m);
     } else {
@@ -331,6 +451,7 @@ pub fn suite_json(
     machines: usize,
     spill_budget: Option<u64>,
     transport: TransportMode,
+    round_breakdown: Option<crate::util::json::Json>,
 ) -> crate::util::json::Json {
     use crate::util::json::Json;
     let doc = Json::obj()
@@ -340,6 +461,14 @@ pub fn suite_json(
         .set("transport", transport.name());
     let doc = match spill_budget {
         Some(b) => doc.set("spill_budget", b),
+        None => doc,
+    };
+    let doc = match crate::util::stats::peak_rss_bytes() {
+        Some(rss) => doc.set("peak_rss_bytes", rss),
+        None => doc,
+    };
+    let doc = match round_breakdown {
+        Some(b) => doc.set("round_breakdown", b),
         None => doc,
     };
     doc
@@ -386,7 +515,9 @@ mod tests {
             slow_cutoff_s: 30.0,
         };
         let ms = vec![bench_min_hop(&b, 500, 4.0, 2, 4, None)];
-        let doc = suite_json(&ms, true, 4, Some(1 << 20), TransportMode::InProc);
+        let breakdown = round_breakdown(4, TransportMode::InProc);
+        assert!(breakdown.is_some(), "inproc breakdown never needs workers");
+        let doc = suite_json(&ms, true, 4, Some(1 << 20), TransportMode::InProc, breakdown);
         assert_eq!(
             doc.get("spill_budget").and_then(|j| j.as_i64()),
             Some(1 << 20)
@@ -397,6 +528,14 @@ mod tests {
         let benches = doc.get("benches").and_then(|j| j.as_arr()).unwrap();
         assert_eq!(benches.len(), 1);
         assert!(benches[0].get("median_s").and_then(|j| j.as_f64()).unwrap() > 0.0);
+        // the per-round time breakdown rides in the artifact
+        let bd = doc.get("round_breakdown").expect("breakdown present");
+        assert_eq!(bd.get("transport").and_then(|j| j.as_str()), Some("inproc"));
+        let rounds = bd.get("rounds").and_then(|j| j.as_arr()).unwrap();
+        assert!(!rounds.is_empty());
+        assert!(rounds[0].get("gen_ms").and_then(|j| j.as_f64()).is_some());
+        assert!(rounds[0].get("shuffle_ms").and_then(|j| j.as_f64()).is_some());
+        assert!(rounds[0].get("fold_ms").and_then(|j| j.as_f64()).is_some());
         // round-trips through the parser
         let text = doc.pretty();
         assert!(crate::util::json::parse(&text).is_ok());

@@ -92,6 +92,14 @@ where
         "sharded hop accounting requires a uniform wire size across values"
     );
     let charge = g.hop_charge(msg_size, include_self);
+    // Worker-native path (shuffle transport): the workers generate this
+    // exact round from their owned shards and shuffle it peer to peer;
+    // the engine computes the same fold locally and validates the
+    // workers' load counts + fold checksums against it.  `None` means
+    // the transport has no worker data plane — fall through.
+    if let Some(out) = sim.try_shuffle_hop(label, g, vals, include_self, fold, &charge) {
+        return out;
+    }
     let mut out: Vec<V> = vals.to_vec();
     // vertices with no messages keep their own value (out prefilled), and
     // the fold *replaces* on a key's first message, so with
@@ -258,6 +266,11 @@ pub fn contract_mpc(
         right.bytes,
         &right.machine_bytes,
     );
+    // Shuffle transport: shard custody survives the contraction — the
+    // workers rewrite their own edges through the compaction map and ship
+    // them peer to peer to the next generation's owners (validated
+    // against `contracted`); a no-op on every other transport.
+    sim.shuffle_rewire(g, &compact, &contracted);
     (contracted, compact)
 }
 

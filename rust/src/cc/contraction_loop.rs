@@ -162,6 +162,15 @@ where
             let m = min_orig(cur.num_vertices(), &node_of, &resolved);
             let (pruned, map) = cur.prune_isolated();
             if pruned.num_vertices() < cur.num_vertices() {
+                // shuffle transport: custody follows the prune peer to
+                // peer (dropped vertices have no edges, so the MAX
+                // sentinel never lands on a live endpoint); the O(n) map
+                // materializes only when workers actually hold custody
+                if sim.has_shuffle_custody(&cur) {
+                    let wire_map: Vec<Vertex> =
+                        map.iter().map(|m| m.unwrap_or(Vertex::MAX)).collect();
+                    sim.shuffle_rewire(&cur, &wire_map, &pruned);
+                }
                 for v in 0..n_orig {
                     if !resolved[v] {
                         match map[node_of[v] as usize] {

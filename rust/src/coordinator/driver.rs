@@ -5,7 +5,11 @@
 //! ([`RunConfig::transport`]): `inproc` builds the classic single-process
 //! engine; `proc` spawns one `lcc worker` process per machine
 //! ([`crate::mpc::net::ProcTransport`]), ships each its shard, and runs
-//! the *same* algorithm code against the multi-process backend.
+//! the *same* algorithm code against the multi-process backend; `shuffle`
+//! additionally brings up the worker↔worker mesh
+//! ([`crate::mpc::net::ShuffleTransport`]) so the hop and rewire rounds
+//! are generated on the workers and shuffled peer to peer — the
+//! coordinator link carries descriptors and O(machines) summaries.
 //! Transport faults (worker crash, truncated frame, corrupted payload,
 //! accounting divergence) surface as typed
 //! [`TransportError`]s from the `try_*` entry points — the panicking
@@ -16,7 +20,7 @@ use std::panic::AssertUnwindSafe;
 use super::report::Report;
 use crate::cc::{self, CcAlgorithm, RunOptions};
 use crate::graph::{Graph, ShardedGraph};
-use crate::mpc::net::ProcTransport;
+use crate::mpc::net::{ProcTransport, ShuffleTransport};
 use crate::mpc::{MpcConfig, Simulator, TransportError, TransportMode};
 use crate::runtime::ShardExecutor;
 use crate::util::rng::Rng;
@@ -44,8 +48,9 @@ pub struct RunConfig {
     /// disk-backed shards through the same contraction loop.  `None` =
     /// unbounded.
     pub spill_budget: Option<u64>,
-    /// Round transport (`--transport`): `InProc` (default) or `Proc`
-    /// (spawn one worker process per machine on localhost).
+    /// Round transport (`--transport`): `InProc` (default), `Proc` (one
+    /// worker process per machine, coordinator-routed rounds), or
+    /// `Shuffle` (worker processes plus a worker↔worker data plane).
     pub transport: TransportMode,
     /// Worker binary the proc transport spawns; `None` = this executable
     /// (the `lcc` binary spawns itself as `lcc worker`).  Tests point it
@@ -203,18 +208,26 @@ impl Driver {
             spill_budget: self.cfg.spill_budget,
             threads: self.cfg.threads,
         };
+        let worker_bin = || -> Result<std::path::PathBuf, TransportError> {
+            match &self.cfg.worker_bin {
+                Some(p) => Ok(p.clone()),
+                None => std::env::current_exe().map_err(|e| TransportError::Io {
+                    worker: None,
+                    op: "locate worker binary",
+                    source: e,
+                }),
+            }
+        };
         match self.cfg.transport {
             TransportMode::InProc => Ok(Simulator::new(mpc)),
             TransportMode::Proc => {
-                let bin = match &self.cfg.worker_bin {
-                    Some(p) => p.clone(),
-                    None => std::env::current_exe().map_err(|e| TransportError::Io {
-                        worker: None,
-                        op: "locate worker binary",
-                        source: e,
-                    })?,
-                };
-                let mut transport = ProcTransport::spawn(self.cfg.machines.max(1), &bin)?;
+                let mut transport = ProcTransport::spawn(self.cfg.machines.max(1), &worker_bin()?)?;
+                transport.load_graph(g)?;
+                Ok(Simulator::with_transport(mpc, Box::new(transport)))
+            }
+            TransportMode::Shuffle => {
+                let mut transport =
+                    ShuffleTransport::spawn(self.cfg.machines.max(1), &worker_bin()?)?;
                 transport.load_graph(g)?;
                 Ok(Simulator::with_transport(mpc, Box::new(transport)))
             }

@@ -1,51 +1,131 @@
-//! The worker process main loop (`lcc worker --connect HOST:PORT`).
+//! The worker process main loop (`lcc worker --connect HOST:PORT`) — one
+//! MPC machine, and on the shuffle transport one node of the
+//! worker↔worker **data plane**.
 //!
-//! One worker process is one MPC machine of the multi-process transport
-//! ([`crate::mpc::net`]): it connects back to the coordinator, handshakes
-//! (`Hello`/`Assign` — the coordinator assigns the machine index), takes
-//! **custody of its edge shard** (validating the spill framing and
-//! independently re-deriving the shard statistics the coordinator's round
-//! charges are computed from — custody divergence is caught before any
-//! round runs), and then serves rounds until shutdown:
+//! The process splits cleanly along the control-plane/data-plane
+//! boundary of [`crate::mpc::net`]:
 //!
-//! * every round it counts the bytes it actually received (the
-//!   receiver-side load accounting the coordinator validates against the
-//!   model charge — for charge-only rounds the declared load is
-//!   acknowledged instead, the barrier half of a round whose bytes never
-//!   materialize);
-//! * fold rounds ([`crate::mpc::transport::WireOp`]-tagged hops) are
-//!   **reduced here**: the
-//!   worker folds its received `(key, value)` messages with the tagged
-//!   op and returns one folded pair per key it owns.
+//! * **Control plane** (the coordinator link): handshake
+//!   (`Hello`/`Assign` — the coordinator assigns the machine index; the
+//!   Hello carries this worker's mesh listener port), shard custody
+//!   (`LoadShard`, validated and re-derived independently), the mesh
+//!   roster (`Peers`), value-mirror broadcasts (`StateSync`), round
+//!   descriptors (`HopRound`, `Rewire`), and O(1) acks — load counts,
+//!   fold/shard checksums.  Nothing O(m) crosses this link after custody
+//!   is established.
+//! * **Data plane** (the peer mesh, shuffle transport only): this worker
+//!   **generates** each described hop round's messages from its owned
+//!   shard and its value mirror, ships each bucket straight to the peer
+//!   worker owning the keys (`PeerMsgs`), folds what it receives, and
+//!   all-gathers the fold images (`PeerFold`) so every mirror stays
+//!   current; after a `Rewire` it relabels its own edges through the map
+//!   mirror and ships them to their next-generation owners (`PeerEdges`)
+//!   — custody survives contraction without touching the coordinator.
+//!
+//! Proc-transport rounds (`Round` frames with coordinator-routed byte
+//! images) are served as before: count the received bytes, fold when
+//! tagged, ack — the receiver-side accounting the coordinator validates
+//! against the model charge.
 //!
 //! Protocol violations the worker detects are answered with a
-//! `WorkerErr` frame (the coordinator surfaces them as typed
-//! [`TransportError::Protocol`]); I/O failures end the process.  EOF at a
-//! frame boundary means the coordinator is gone: exit cleanly.
+//! `WorkerErr` frame (surfaced as typed [`TransportError::Protocol`]);
+//! I/O failures end the process.  A dead peer is an immediate typed
+//! error, not a hang: every mesh socket has a dedicated reader thread
+//! (EOF/corruption surfaces the moment it happens), writes carry the
+//! shared [`net::IO_TIMEOUT`], and mesh waits are bounded by the same
+//! timeout.  EOF at a coordinator frame boundary means the coordinator
+//! is gone: exit cleanly.
 
 use std::io::{BufReader, BufWriter};
-use std::net::TcpStream;
+use std::net::{TcpListener, TcpStream};
 use std::path::Path;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
 
-use crate::graph::spill::{self, ShardStats, SpillError};
+use crate::graph::spill::{self, Fnv1a, ShardStats, SpillError};
 use crate::graph::Vertex;
 use crate::mpc::net::{
     self, BodyReader, Frame, FrameKind, PROTO_VERSION,
 };
+use crate::mpc::pool::chunk_range;
 use crate::mpc::simulator::machine_of;
-use crate::mpc::transport::TransportError;
+use crate::mpc::transport::{TransportError, WireOp};
+
+/// How long a worker keeps retrying a peer connect before reporting the
+/// refusal (covers the race where a peer has not yet processed `Peers`;
+/// its listener is bound since startup, so real refusals persist).
+/// Overridable via `LCC_PEER_CONNECT_DEADLINE_MS` (fault tests shorten
+/// it so a refused connect surfaces in milliseconds).
+const PEER_CONNECT_DEADLINE: Duration = Duration::from_secs(5);
+
+fn peer_connect_deadline() -> Duration {
+    std::env::var("LCC_PEER_CONNECT_DEADLINE_MS")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok())
+        .map(Duration::from_millis)
+        .unwrap_or(PEER_CONNECT_DEADLINE)
+}
+/// How long a worker waits for all inbound peer connections.
+const MESH_ACCEPT_DEADLINE: Duration = Duration::from_secs(20);
+
+/// One frame (or terminal error) read off a peer connection by its
+/// dedicated reader thread.
+struct PeerEvent {
+    from: usize,
+    frame: Result<Frame, TransportError>,
+}
+
+/// The established worker↔worker mesh: one full-duplex connection per
+/// peer — writes go through `links`, reads arrive on `rx` from the
+/// per-peer reader threads (which also make a dead peer an immediate
+/// event instead of a blocked read).
+struct Mesh {
+    /// Writer half per peer; `None` at this worker's own index.
+    links: Vec<Option<BufWriter<TcpStream>>>,
+    rx: mpsc::Receiver<PeerEvent>,
+}
+
+impl Mesh {
+    /// Wait for the next peer event, bounding the wait by the shared I/O
+    /// timeout so a wedged mesh is a typed error, not a hang.
+    fn recv(&self) -> Result<PeerEvent, TransportError> {
+        match self.rx.recv_timeout(net::IO_TIMEOUT) {
+            Ok(ev) => Ok(ev),
+            Err(mpsc::RecvTimeoutError::Timeout) => Err(TransportError::Io {
+                worker: None,
+                op: "await peer frame",
+                source: std::io::Error::new(
+                    std::io::ErrorKind::TimedOut,
+                    "no peer frame within the I/O timeout",
+                ),
+            }),
+            Err(mpsc::RecvTimeoutError::Disconnected) => Err(TransportError::Protocol {
+                worker: None,
+                detail: "all peer connections closed mid-round".into(),
+            }),
+        }
+    }
+}
 
 /// One worker's custody state.
 struct WorkerState {
     worker_id: u32,
     machines: u32,
     /// The shard this machine owns (edges + independently derived stats),
-    /// once the coordinator shipped it.  Custody is load-bearing at load
-    /// time (framing + ownership validation, stats cross-check); the
-    /// edges themselves are held for the worker-side message-generation
-    /// step on the roadmap (today the coordinator still routes).
-    #[allow(dead_code)]
+    /// once the coordinator shipped it.  On the shuffle transport the
+    /// edges are the generation source of every described round; after a
+    /// `Rewire` the slot advances to the next generation peer-to-peer.
     shard: Option<(Vec<(Vertex, Vertex)>, ShardStats)>,
+    /// Mesh listener, bound at startup (its port travels in the Hello),
+    /// consumed when the `Peers` roster arrives.
+    mesh_listener: Option<TcpListener>,
+    /// The peer mesh, once `Peers` established it.
+    mesh: Option<Mesh>,
+    /// Wire-encoded per-vertex values (the hop inputs / rewire map),
+    /// maintained by `StateSync` broadcasts and hop fold all-gathers.
+    mirror: Vec<u8>,
+    /// Wire width of one mirror value (0 = no mirror yet).
+    mirror_vb: usize,
 }
 
 /// Connect to the coordinator and serve until shutdown (the `lcc worker`
@@ -83,11 +163,28 @@ pub fn serve(stream: TcpStream) -> Result<(), TransportError> {
     })?);
     let mut writer = BufWriter::new(stream);
 
+    // the mesh listener exists from the start (shuffle coordinators need
+    // its port in the Hello; proc coordinators simply never use it)
+    let mesh_listener = TcpListener::bind(("127.0.0.1", 0)).map_err(|e| TransportError::Io {
+        worker: None,
+        op: "bind mesh listener",
+        source: e,
+    })?;
+    let mesh_port = mesh_listener
+        .local_addr()
+        .map_err(|e| TransportError::Io {
+            worker: None,
+            op: "mesh listener addr",
+            source: e,
+        })?
+        .port();
+
     // handshake: version + our pid (the coordinator aligns its spawned
-    // children to worker ids by it)
-    let mut hello = Vec::with_capacity(8);
+    // children to worker ids by it) + our mesh port
+    let mut hello = Vec::with_capacity(10);
     hello.extend_from_slice(&PROTO_VERSION.to_le_bytes());
     hello.extend_from_slice(&std::process::id().to_le_bytes());
+    hello.extend_from_slice(&mesh_port.to_le_bytes());
     net::write_frame(&mut writer, FrameKind::Hello, 0, &hello)?;
     let assign = net::read_frame(&mut reader)?;
     if assign.kind != FrameKind::Assign {
@@ -110,6 +207,10 @@ pub fn serve(stream: TcpStream) -> Result<(), TransportError> {
         worker_id,
         machines,
         shard: None,
+        mesh_listener: Some(mesh_listener),
+        mesh: None,
+        mirror: Vec::new(),
+        mirror_vb: 0,
     };
 
     loop {
@@ -123,6 +224,10 @@ pub fn serve(stream: TcpStream) -> Result<(), TransportError> {
         match frame.kind {
             FrameKind::LoadShard => handle_load(&mut state, &frame, &mut writer)?,
             FrameKind::Round => handle_round(&state, &frame, &mut writer)?,
+            FrameKind::Peers => handle_peers(&mut state, &frame, &mut writer)?,
+            FrameKind::StateSync => handle_state_sync(&mut state, &frame, &mut writer)?,
+            FrameKind::HopRound => handle_hop(&mut state, &frame, &mut writer)?,
+            FrameKind::Rewire => handle_rewire(&mut state, &frame, &mut writer)?,
             FrameKind::Shutdown => {
                 net::write_frame(&mut writer, FrameKind::Bye, frame.seq, &[])?;
                 return Ok(());
@@ -213,8 +318,9 @@ fn handle_load<W: std::io::Write>(
     Ok(())
 }
 
-/// Serve one round: account the received bytes (or acknowledge the
-/// declared load of a charge-only round), fold when asked, ack.
+/// Serve one coordinator-routed round: account the received bytes (or
+/// acknowledge the declared load of a charge-only round), fold when
+/// asked, ack.
 fn handle_round<W: std::io::Write>(
     _state: &WorkerState,
     frame: &Frame,
@@ -249,6 +355,641 @@ fn handle_round<W: std::io::Write>(
     net::write_frame(writer, FrameKind::RoundAck, frame.seq, &body)
 }
 
+// ---------------------------------------------------------------------------
+// the shuffle data plane
+
+/// Register one established peer connection: tune the socket, spawn its
+/// reader thread, store the writer half.
+fn register_peer(
+    links: &mut [Option<BufWriter<TcpStream>>],
+    tx: &mpsc::Sender<PeerEvent>,
+    from: usize,
+    sock: TcpStream,
+) -> Result<(), TransportError> {
+    let io = |op: &'static str| {
+        move |e: std::io::Error| TransportError::Io {
+            worker: None,
+            op,
+            source: e,
+        }
+    };
+    sock.set_nodelay(true).map_err(io("peer nodelay"))?;
+    // peer writes carry the same timeout as coordinator links: a peer
+    // that stops draining is a typed error, not a hang
+    sock.set_write_timeout(Some(net::IO_TIMEOUT))
+        .map_err(io("peer write timeout"))?;
+    // reads have no socket timeout: the dedicated reader thread blocks
+    // legitimately between rounds; round waits are bounded by Mesh::recv
+    sock.set_read_timeout(None).map_err(io("peer read timeout"))?;
+    let mut reader = BufReader::new(sock.try_clone().map_err(io("clone peer stream"))?);
+    let tx = tx.clone();
+    std::thread::spawn(move || loop {
+        match net::read_frame(&mut reader) {
+            Ok(frame) => {
+                if tx.send(PeerEvent { from, frame: Ok(frame) }).is_err() {
+                    return;
+                }
+            }
+            Err(e) => {
+                // EOF or corruption: surface once and stop (a clean
+                // shutdown races here harmlessly — nobody is listening)
+                let _ = tx.send(PeerEvent { from, frame: Err(e) });
+                return;
+            }
+        }
+    });
+    links[from] = Some(BufWriter::new(sock));
+    Ok(())
+}
+
+/// Bring up the full mesh from the roster: connect to every lower id,
+/// accept from every higher id, `PeerHello` identifying each link.
+fn setup_mesh(
+    my: usize,
+    p: usize,
+    ports: &[u16],
+    listener: TcpListener,
+) -> Result<Mesh, TransportError> {
+    let (tx, rx) = mpsc::channel();
+    let mut links: Vec<Option<BufWriter<TcpStream>>> = (0..p).map(|_| None).collect();
+
+    // outbound: worker `my` initiates to every j < my
+    for (j, &port) in ports.iter().enumerate().take(my) {
+        let deadline = Instant::now() + peer_connect_deadline();
+        let sock = loop {
+            match TcpStream::connect(("127.0.0.1", port)) {
+                Ok(s) => break s,
+                Err(e) if Instant::now() < deadline => {
+                    let _ = e;
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                Err(e) => {
+                    return Err(TransportError::Io {
+                        worker: Some(j),
+                        op: "connect to peer",
+                        source: e,
+                    })
+                }
+            }
+        };
+        sock.set_write_timeout(Some(net::IO_TIMEOUT))
+            .map_err(|e| TransportError::Io {
+                worker: Some(j),
+                op: "peer write timeout",
+                source: e,
+            })?;
+        {
+            let mut w = sock.try_clone().map_err(|e| TransportError::Io {
+                worker: Some(j),
+                op: "clone peer stream",
+                source: e,
+            })?;
+            net::write_frame(&mut w, FrameKind::PeerHello, 0, &(my as u32).to_le_bytes())?;
+        }
+        register_peer(&mut links, &tx, j, sock)?;
+    }
+
+    // inbound: every j > my connects to us
+    listener
+        .set_nonblocking(true)
+        .map_err(|e| TransportError::Io {
+            worker: None,
+            op: "mesh listener nonblocking",
+            source: e,
+        })?;
+    let deadline = Instant::now() + MESH_ACCEPT_DEADLINE;
+    let mut pending = p - 1 - my;
+    while pending > 0 {
+        match listener.accept() {
+            Ok((sock, _peer)) => {
+                sock.set_nonblocking(false).map_err(|e| TransportError::Io {
+                    worker: None,
+                    op: "peer blocking mode",
+                    source: e,
+                })?;
+                // bound the hello read; cleared again by register_peer
+                sock.set_read_timeout(Some(net::IO_TIMEOUT))
+                    .map_err(|e| TransportError::Io {
+                        worker: None,
+                        op: "peer hello timeout",
+                        source: e,
+                    })?;
+                let hello = {
+                    let mut r = sock.try_clone().map_err(|e| TransportError::Io {
+                        worker: None,
+                        op: "clone peer stream",
+                        source: e,
+                    })?;
+                    net::read_frame(&mut r)?
+                };
+                if hello.kind != FrameKind::PeerHello {
+                    return Err(TransportError::Protocol {
+                        worker: None,
+                        detail: format!("expected PeerHello, got {:?}", hello.kind),
+                    });
+                }
+                let mut r = BodyReader::new(&hello.body);
+                let from = r.u32("peer hello id")? as usize;
+                r.expect_end("peer hello")?;
+                if from <= my || from >= p || links[from].is_some() {
+                    return Err(TransportError::Protocol {
+                        worker: Some(from),
+                        detail: format!("peer {from} must not initiate to worker {my}"),
+                    });
+                }
+                register_peer(&mut links, &tx, from, sock)?;
+                pending -= 1;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if Instant::now() >= deadline {
+                    return Err(TransportError::Protocol {
+                        worker: None,
+                        detail: format!(
+                            "{pending} peers never connected before the mesh deadline"
+                        ),
+                    });
+                }
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => {
+                return Err(TransportError::Io {
+                    worker: None,
+                    op: "accept peer",
+                    source: e,
+                })
+            }
+        }
+    }
+    Ok(Mesh { links, rx })
+}
+
+/// `Peers`: establish the worker↔worker mesh from the roster.
+fn handle_peers<W: std::io::Write>(
+    state: &mut WorkerState,
+    frame: &Frame,
+    writer: &mut W,
+) -> Result<(), TransportError> {
+    let p = state.machines as usize;
+    let my = state.worker_id as usize;
+    let parsed = (|| -> Result<Vec<u16>, TransportError> {
+        let mut r = BodyReader::new(&frame.body);
+        let count = r.u32("peer count")? as usize;
+        if count != p {
+            return Err(TransportError::Protocol {
+                worker: None,
+                detail: format!("roster lists {count} workers, machine count is {p}"),
+            });
+        }
+        let mut ports = vec![0u16; p];
+        for _ in 0..count {
+            let id = r.u32("roster worker id")? as usize;
+            let port = r.u16("roster port")?;
+            if id >= p {
+                return Err(TransportError::Protocol {
+                    worker: None,
+                    detail: format!("roster id {id} out of range {p}"),
+                });
+            }
+            ports[id] = port;
+        }
+        r.expect_end("peers roster")?;
+        Ok(ports)
+    })();
+    let ports = match parsed {
+        Ok(v) => v,
+        Err(e) => return worker_err(writer, frame.seq, &format!("bad roster: {e}")),
+    };
+    let Some(listener) = state.mesh_listener.take() else {
+        return worker_err(writer, frame.seq, "mesh already established");
+    };
+    match setup_mesh(my, p, &ports, listener) {
+        Ok(mesh) => {
+            state.mesh = Some(mesh);
+            net::write_frame(writer, FrameKind::PeersAck, frame.seq, &[])
+        }
+        Err(e) => worker_err(writer, frame.seq, &format!("mesh setup failed: {e}")),
+    }
+}
+
+/// Parse a `StateSync` body into (value width, mirror data).
+fn parse_state_sync(body: &[u8]) -> Result<(u8, &[u8]), TransportError> {
+    let mut r = BodyReader::new(body);
+    let vb = r.u8("mirror value width")?;
+    let len = r.u64("mirror length")? as usize;
+    let data = r.bytes(len, "mirror data")?;
+    r.expect_end("state sync")?;
+    if vb == 0 || len % vb as usize != 0 {
+        return Err(TransportError::Protocol {
+            worker: None,
+            detail: format!("mirror of {len} bytes is not a multiple of width {vb}"),
+        });
+    }
+    Ok((vb, data))
+}
+
+/// `StateSync`: replace the value mirror, ack its content hash.
+fn handle_state_sync<W: std::io::Write>(
+    state: &mut WorkerState,
+    frame: &Frame,
+    writer: &mut W,
+) -> Result<(), TransportError> {
+    let (vb, data) = match parse_state_sync(&frame.body) {
+        Ok(v) => v,
+        Err(e) => return worker_err(writer, frame.seq, &format!("bad mirror: {e}")),
+    };
+    let hash = net::mirror_hash_of(vb, data);
+    state.mirror.clear();
+    state.mirror.extend_from_slice(data);
+    state.mirror_vb = vb as usize;
+    net::write_frame(writer, FrameKind::StateAck, frame.seq, &hash.to_le_bytes())
+}
+
+/// Collect `PeerMsgs` then `PeerFold` frames of the round `seq` from
+/// every peer, tolerating arrival interleaving (a fast peer's fold can
+/// land before a slow peer's messages).
+struct RoundInbox {
+    msgs: Vec<Option<Vec<u8>>>,
+    folds: Vec<Option<Vec<u8>>>,
+    want_msgs: usize,
+    want_folds: usize,
+}
+
+impl RoundInbox {
+    fn new(p: usize, my: usize) -> RoundInbox {
+        let mut msgs = Vec::with_capacity(p);
+        let mut folds = Vec::with_capacity(p);
+        for j in 0..p {
+            // own slots are pre-filled locally, never via the mesh
+            msgs.push(if j == my { Some(Vec::new()) } else { None });
+            folds.push(if j == my { Some(Vec::new()) } else { None });
+        }
+        RoundInbox {
+            msgs,
+            folds,
+            want_msgs: p - 1,
+            want_folds: p - 1,
+        }
+    }
+
+    /// File one event; errors on duplicates, stale seqs, wrong kinds.
+    fn file(&mut self, seq: u64, ev: PeerEvent) -> Result<(), TransportError> {
+        let frame = ev.frame.map_err(|e| e.for_worker(ev.from))?;
+        if frame.seq != seq {
+            return Err(TransportError::Protocol {
+                worker: Some(ev.from),
+                detail: format!("peer frame seq {} != round seq {seq}", frame.seq),
+            });
+        }
+        let (slot, pending) = match frame.kind {
+            FrameKind::PeerMsgs => (&mut self.msgs[ev.from], &mut self.want_msgs),
+            FrameKind::PeerFold => (&mut self.folds[ev.from], &mut self.want_folds),
+            other => {
+                return Err(TransportError::Protocol {
+                    worker: Some(ev.from),
+                    detail: format!("unexpected mesh frame {other:?}"),
+                })
+            }
+        };
+        if slot.is_some() {
+            return Err(TransportError::Protocol {
+                worker: Some(ev.from),
+                detail: format!("duplicate {:?} in one round", frame.kind),
+            });
+        }
+        *slot = Some(frame.body);
+        *pending -= 1;
+        Ok(())
+    }
+}
+
+/// Which mesh frames of the current round this worker already shipped,
+/// per phase and **per link** — a failure mid-send-loop must poison only
+/// the links that never got the real frame (a duplicate would make
+/// healthy peers fail too and steal the error attribution).
+#[derive(Default)]
+struct HopProgress {
+    /// `msgs[j]` = the real `PeerMsgs` went out to link `j`.
+    msgs: Vec<bool>,
+    /// `fold[j]` = the real `PeerFold` went out to link `j`.
+    fold: Vec<bool>,
+}
+
+/// Best-effort empty `kind` frames to every link the round never
+/// reached (`sent[j] == false`): peers waiting on this worker then
+/// complete immediately (their accounting/checksum validation flags the
+/// damage) instead of stalling out the I/O timeout, and the coordinator
+/// attributes the failure to this worker's `WorkerErr`, not a symptom
+/// on a peer.
+fn poison_peers(state: &mut WorkerState, seq: u64, kind: FrameKind, sent: &[bool]) {
+    let Some(mesh) = state.mesh.as_mut() else {
+        return;
+    };
+    for (j, link) in mesh.links.iter_mut().enumerate() {
+        if let Some(link) = link {
+            if !sent.get(j).copied().unwrap_or(false) {
+                let _ = net::write_frame(link, kind, seq, &[]);
+            }
+        }
+    }
+}
+
+/// `HopRound`: generate this round's messages from the owned shard and
+/// the value mirror, shuffle them peer-to-peer, fold the received keys,
+/// all-gather the fold images, ack the load + fold checksum.  Every
+/// failure — descriptor, mesh I/O, corrupted peer frame, malformed fold
+/// — is answered as a `WorkerErr` (a typed protocol error at the
+/// coordinator), never a silent worker death, with the unreached mesh
+/// sends poisoned so no peer stalls on this worker.
+fn handle_hop<W: std::io::Write>(
+    state: &mut WorkerState,
+    frame: &Frame,
+    writer: &mut W,
+) -> Result<(), TransportError> {
+    let mut sent = HopProgress::default();
+    match hop_inner(state, frame, &mut sent) {
+        Ok(body) => net::write_frame(writer, FrameKind::HopAck, frame.seq, &body),
+        Err(e) => {
+            poison_peers(state, frame.seq, FrameKind::PeerMsgs, &sent.msgs);
+            poison_peers(state, frame.seq, FrameKind::PeerFold, &sent.fold);
+            worker_err(writer, frame.seq, &format!("hop failed: {e}"))
+        }
+    }
+}
+
+fn proto(detail: String) -> TransportError {
+    TransportError::Protocol {
+        worker: None,
+        detail,
+    }
+}
+
+fn hop_inner(
+    state: &mut WorkerState,
+    frame: &Frame,
+    sent: &mut HopProgress,
+) -> Result<Vec<u8>, TransportError> {
+    let seq = frame.seq;
+    let (op, include_self) = {
+        let mut r = BodyReader::new(&frame.body);
+        let op = WireOp::from_code(r.u8("hop op")?)
+            .ok_or_else(|| proto("unknown hop wire op".into()))?;
+        let include_self = r.u8("hop include_self")? != 0;
+        let label_len = r.u16("hop label length")? as usize;
+        let _label = r.bytes(label_len, "hop label")?;
+        r.expect_end("hop round")?;
+        (op, include_self)
+    };
+    let p = state.machines as usize;
+    let my = state.worker_id as usize;
+    let vb = op.value_bytes();
+    if state.mirror_vb != vb {
+        return Err(proto(format!(
+            "hop needs a {vb}-byte mirror, holding {} bytes/value",
+            state.mirror_vb
+        )));
+    }
+    let n = state.mirror.len() / vb;
+    let Some((edges, _stats)) = state.shard.as_ref() else {
+        return Err(proto("hop before shard custody".into()));
+    };
+    if state.mesh.is_none() && p > 1 {
+        return Err(proto("hop before the peer mesh is up".into()));
+    }
+
+    // ---- generate: the owned shard × the mirror ------------------------
+    let mirror = &state.mirror;
+    let val = |v: Vertex| &mirror[v as usize * vb..(v as usize + 1) * vb];
+    let mut buckets: Vec<Vec<u8>> = (0..p).map(|_| Vec::new()).collect();
+    let mut push = |buckets: &mut Vec<Vec<u8>>, key: Vertex, value_of: Vertex| {
+        let b = &mut buckets[machine_of(key as u64, p)];
+        b.extend_from_slice(&(key as u64).to_le_bytes());
+        b.extend_from_slice(val(value_of));
+    };
+    for &(u, v) in edges {
+        if (u as usize) >= n || (v as usize) >= n {
+            return Err(proto(format!(
+                "edge ({u},{v}) outside the {n}-vertex mirror"
+            )));
+        }
+        push(&mut buckets, u, v);
+        push(&mut buckets, v, u);
+    }
+    if include_self {
+        let (sa, sb) = chunk_range(n, p, my);
+        for v in sa..sb {
+            push(&mut buckets, v as Vertex, v as Vertex);
+        }
+    }
+
+    // ---- shuffle: every bucket straight to its owner -------------------
+    let mut inbox = RoundInbox::new(p, my);
+    inbox.msgs[my] = Some(std::mem::take(&mut buckets[my]));
+    sent.msgs.resize(p, false);
+    sent.fold.resize(p, false);
+    if let Some(mesh) = state.mesh.as_mut() {
+        for (j, bucket) in buckets.iter().enumerate() {
+            if j == my {
+                continue;
+            }
+            if let Some(link) = mesh.links[j].as_mut() {
+                net::write_frame(link, FrameKind::PeerMsgs, seq, bucket)
+                    .map_err(|e| e.for_worker(j))?;
+                sent.msgs[j] = true;
+            }
+        }
+        while inbox.want_msgs > 0 {
+            let ev = mesh.recv()?;
+            inbox.file(seq, ev)?;
+        }
+    }
+
+    // ---- fold the keys this machine owns -------------------------------
+    let received: u64 = inbox
+        .msgs
+        .iter()
+        .map(|m| m.as_ref().map(|b| b.len() as u64).unwrap_or(0))
+        .sum();
+    let mut all = Vec::with_capacity(received as usize);
+    for m in inbox.msgs.iter_mut() {
+        all.extend_from_slice(m.as_ref().expect("msgs complete"));
+        *m = None; // free as we go
+    }
+    let folded = net::fold_wire_payload(op, &all)
+        .map_err(|detail| proto(format!("hop fold: {detail}")))?;
+    drop(all);
+    let mut h = Fnv1a::new();
+    h.update(&folded);
+    let checksum = h.finish();
+
+    // ---- all-gather the fold images: every mirror stays current --------
+    if let Some(mesh) = state.mesh.as_mut() {
+        for j in 0..p {
+            if j == my {
+                continue;
+            }
+            if let Some(link) = mesh.links[j].as_mut() {
+                net::write_frame(link, FrameKind::PeerFold, seq, &folded)
+                    .map_err(|e| e.for_worker(j))?;
+                sent.fold[j] = true;
+            }
+        }
+        while inbox.want_folds > 0 {
+            let ev = mesh.recv()?;
+            inbox.file(seq, ev)?;
+        }
+    }
+    inbox.folds[my] = Some(folded);
+    let rec = 8 + vb;
+    for blob in inbox.folds.iter().flatten() {
+        if blob.len() % rec != 0 {
+            return Err(proto("ragged peer fold image".into()));
+        }
+        for pair in blob.chunks_exact(rec) {
+            let key = u64::from_le_bytes(pair[..8].try_into().unwrap()) as usize;
+            if key >= n {
+                return Err(proto(format!("fold key {key} outside mirror {n}")));
+            }
+            state.mirror[key * vb..(key + 1) * vb].copy_from_slice(&pair[8..]);
+        }
+    }
+
+    let mut body = Vec::with_capacity(16);
+    body.extend_from_slice(&received.to_le_bytes());
+    body.extend_from_slice(&checksum.to_le_bytes());
+    Ok(body)
+}
+
+/// `Rewire`: relabel the owned edges through the map mirror, ship each
+/// to its next-generation owner, adopt the merged result as the new
+/// custody, ack its statistics + checksum.  Failures answer as
+/// `WorkerErr` like the hop rounds.
+fn handle_rewire<W: std::io::Write>(
+    state: &mut WorkerState,
+    frame: &Frame,
+    writer: &mut W,
+) -> Result<(), TransportError> {
+    let mut edges_sent = Vec::new();
+    match rewire_inner(state, frame, &mut edges_sent) {
+        Ok((body, next)) => {
+            net::write_frame(writer, FrameKind::RewireAck, frame.seq, &body)?;
+            state.shard = Some(next);
+            Ok(())
+        }
+        Err(e) => {
+            poison_peers(state, frame.seq, FrameKind::PeerEdges, &edges_sent);
+            worker_err(writer, frame.seq, &format!("rewire failed: {e}"))
+        }
+    }
+}
+
+type NextShard = (Vec<(Vertex, Vertex)>, ShardStats);
+
+fn rewire_inner(
+    state: &mut WorkerState,
+    frame: &Frame,
+    edges_sent: &mut Vec<bool>,
+) -> Result<(Vec<u8>, NextShard), TransportError> {
+    let seq = frame.seq;
+    let new_n = {
+        let mut r = BodyReader::new(&frame.body);
+        let new_n = r.u64("rewire new n")?;
+        r.expect_end("rewire")?;
+        new_n
+    };
+    let p = state.machines as usize;
+    let my = state.worker_id as usize;
+    if state.mirror_vb != 4 {
+        return Err(proto("rewire needs a u32 map mirror".into()));
+    }
+    let map_len = state.mirror.len() / 4;
+    let mirror = &state.mirror;
+    let map_at = |v: usize| -> u32 {
+        u32::from_le_bytes(mirror[v * 4..v * 4 + 4].try_into().unwrap())
+    };
+    let Some((edges, _stats)) = state.shard.as_ref() else {
+        return Err(proto("rewire before shard custody".into()));
+    };
+    if state.mesh.is_none() && p > 1 {
+        return Err(proto("rewire before the peer mesh is up".into()));
+    }
+
+    // ---- relabel + re-bucket by the next generation's ownership --------
+    let mut buckets: Vec<Vec<u8>> = (0..p).map(|_| Vec::new()).collect();
+    for &(u, v) in edges {
+        if (u as usize) >= map_len || (v as usize) >= map_len {
+            return Err(proto(format!("edge ({u},{v}) outside the map")));
+        }
+        let (nu, nv) = (map_at(u as usize), map_at(v as usize));
+        if nu == u32::MAX || nv == u32::MAX {
+            return Err(proto(format!("map drops endpoint of live edge ({u},{v})")));
+        }
+        if nu == nv {
+            continue; // self-loop vanishes
+        }
+        let (a, b) = if nu < nv { (nu, nv) } else { (nv, nu) };
+        let bucket = &mut buckets[machine_of(a as u64, p)];
+        bucket.extend_from_slice(&a.to_le_bytes());
+        bucket.extend_from_slice(&b.to_le_bytes());
+    }
+
+    // ---- ship: custody moves peer-to-peer, never via the coordinator ---
+    let mut own = std::mem::take(&mut buckets[my]);
+    edges_sent.resize(p, false);
+    if let Some(mesh) = state.mesh.as_mut() {
+        for (j, bucket) in buckets.iter().enumerate() {
+            if j == my {
+                continue;
+            }
+            if let Some(link) = mesh.links[j].as_mut() {
+                net::write_frame(link, FrameKind::PeerEdges, seq, bucket)
+                    .map_err(|e| e.for_worker(j))?;
+                edges_sent[j] = true;
+            }
+        }
+        let mut pending = p - 1;
+        while pending > 0 {
+            let ev = mesh.recv()?;
+            let peer_frame = ev.frame.map_err(|e| e.for_worker(ev.from))?;
+            if peer_frame.kind != FrameKind::PeerEdges || peer_frame.seq != seq {
+                return Err(proto(format!(
+                    "expected PeerEdges seq {seq}, got {:?} seq {}",
+                    peer_frame.kind, peer_frame.seq
+                )));
+            }
+            own.extend_from_slice(&peer_frame.body);
+            pending -= 1;
+        }
+    }
+
+    // ---- adopt the next generation (canonical order = global dedup) ----
+    if own.len() % 8 != 0 {
+        return Err(proto("ragged rewired-edge payload".into()));
+    }
+    let mut new_edges: Vec<(Vertex, Vertex)> = Vec::with_capacity(own.len() / 8);
+    for pair in own.chunks_exact(8) {
+        let a = u32::from_le_bytes(pair[..4].try_into().unwrap());
+        let b = u32::from_le_bytes(pair[4..].try_into().unwrap());
+        if a >= b || (b as u64) >= new_n || machine_of(a as u64, p) != my {
+            return Err(proto(format!(
+                "rewired edge ({a},{b}) violates the next-generation invariant"
+            )));
+        }
+        new_edges.push((a, b));
+    }
+    new_edges.sort_unstable();
+    new_edges.dedup();
+    let stats = ShardStats::from_edges(&new_edges, p, my);
+    let checksum = spill::checksum_edges(&new_edges);
+    let mut body = Vec::with_capacity(8 + 8 + 4 + 8 * p);
+    body.extend_from_slice(&stats.len.to_le_bytes());
+    body.extend_from_slice(&checksum.to_le_bytes());
+    body.extend_from_slice(&(p as u32).to_le_bytes());
+    for &c in &stats.peer_counts {
+        body.extend_from_slice(&c.to_le_bytes());
+    }
+    Ok((body, (new_edges, stats)))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -272,6 +1013,13 @@ mod tests {
         // handshake
         let hello = net::read_frame(&mut reader).unwrap();
         assert_eq!(hello.kind, FrameKind::Hello);
+        {
+            let mut r = BodyReader::new(&hello.body);
+            assert_eq!(r.u32("version").unwrap(), PROTO_VERSION);
+            let _pid = r.u32("pid").unwrap();
+            let port = r.u16("mesh port").unwrap();
+            assert!(port != 0, "worker must advertise a mesh port");
+        }
         let p = 2u32;
         let mut body = Vec::new();
         body.extend_from_slice(&PROTO_VERSION.to_le_bytes());
@@ -391,6 +1139,110 @@ mod tests {
         net::write_frame(&mut writer, FrameKind::Shutdown, 2, &[]).unwrap();
         let bye = net::read_frame(&mut reader).unwrap();
         assert_eq!(bye.kind, FrameKind::Bye);
+        worker.join().unwrap().unwrap();
+    }
+
+    /// A single-machine shuffle session end to end: roster (empty mesh),
+    /// mirror sync, a descriptor hop (generated from the shard, folded
+    /// locally, mirror updated), and a rewire that contracts the shard —
+    /// all without one payload byte crossing the coordinator link.
+    #[test]
+    fn worker_serves_descriptor_rounds_on_one_machine() {
+        let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let addr = listener.local_addr().unwrap();
+        let worker = std::thread::spawn(move || {
+            let stream = TcpStream::connect(addr).unwrap();
+            serve(stream)
+        });
+        let (coord, _) = listener.accept().unwrap();
+        let mut reader = BufReader::new(coord.try_clone().unwrap());
+        let mut writer = BufWriter::new(coord);
+        let _hello = net::read_frame(&mut reader).unwrap();
+        let mut body = Vec::new();
+        body.extend_from_slice(&PROTO_VERSION.to_le_bytes());
+        body.extend_from_slice(&0u32.to_le_bytes()); // worker 0 of 1
+        body.extend_from_slice(&1u32.to_le_bytes());
+        net::write_frame(&mut writer, FrameKind::Assign, 0, &body).unwrap();
+
+        // custody: a 4-vertex path, machines = 1 owns everything
+        let edges: Vec<(u32, u32)> = vec![(0, 1), (1, 2), (2, 3)];
+        let (image, _) = spill::encode_shard_bytes(0, 1, &edges);
+        let mut body = Vec::new();
+        body.extend_from_slice(&0u32.to_le_bytes());
+        body.extend_from_slice(&(image.len() as u64).to_le_bytes());
+        body.extend_from_slice(&image);
+        net::write_frame(&mut writer, FrameKind::LoadShard, 1, &body).unwrap();
+        assert_eq!(net::read_frame(&mut reader).unwrap().kind, FrameKind::LoadAck);
+
+        // roster: one worker, no peers
+        let mut roster = Vec::new();
+        roster.extend_from_slice(&1u32.to_le_bytes());
+        roster.extend_from_slice(&0u32.to_le_bytes());
+        roster.extend_from_slice(&0u16.to_le_bytes());
+        net::write_frame(&mut writer, FrameKind::Peers, 2, &roster).unwrap();
+        assert_eq!(net::read_frame(&mut reader).unwrap().kind, FrameKind::PeersAck);
+
+        // mirror: vals = [3, 0, 2, 1] (u32)
+        let vals: [u32; 4] = [3, 0, 2, 1];
+        let mut data = Vec::new();
+        for v in vals {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        let hash = net::mirror_hash_of(4, &data);
+        let mut body = vec![4u8];
+        body.extend_from_slice(&(data.len() as u64).to_le_bytes());
+        body.extend_from_slice(&data);
+        net::write_frame(&mut writer, FrameKind::StateSync, 3, &body).unwrap();
+        let ack = net::read_frame(&mut reader).unwrap();
+        assert_eq!(ack.kind, FrameKind::StateAck);
+        assert_eq!(
+            u64::from_le_bytes(ack.body[..8].try_into().unwrap()),
+            hash
+        );
+
+        // hop: min over closed neighborhoods of the path
+        let mut body = vec![WireOp::MinU32.code(), 1u8];
+        body.extend_from_slice(&3u16.to_le_bytes());
+        body.extend_from_slice(b"hop");
+        net::write_frame(&mut writer, FrameKind::HopRound, 4, &body).unwrap();
+        let ack = net::read_frame(&mut reader).unwrap();
+        assert_eq!(ack.kind, FrameKind::HopAck, "{:?}", ack.body);
+        let mut r = BodyReader::new(&ack.body);
+        // 2 msgs/edge × 3 edges + 4 self = 10 messages × 12 bytes
+        assert_eq!(r.u64("received").unwrap(), 120);
+        // expected fold: min over N(v) ∪ {v} of [3,0,2,1] = [0,0,0,1]
+        let mut expect = Vec::new();
+        for (k, m) in [(0u64, 0u32), (1, 0), (2, 0), (3, 1)] {
+            expect.extend_from_slice(&k.to_le_bytes());
+            expect.extend_from_slice(&m.to_le_bytes());
+        }
+        let mut h = Fnv1a::new();
+        h.update(&expect);
+        assert_eq!(r.u64("fold checksum").unwrap(), h.finish());
+
+        // rewire through map [0,0,1,1]: path contracts to one edge (0,1)
+        let map: [u32; 4] = [0, 0, 1, 1];
+        let mut data = Vec::new();
+        for m in map {
+            data.extend_from_slice(&m.to_le_bytes());
+        }
+        let mut body = vec![4u8];
+        body.extend_from_slice(&(data.len() as u64).to_le_bytes());
+        body.extend_from_slice(&data);
+        net::write_frame(&mut writer, FrameKind::StateSync, 5, &body).unwrap();
+        assert_eq!(net::read_frame(&mut reader).unwrap().kind, FrameKind::StateAck);
+        net::write_frame(&mut writer, FrameKind::Rewire, 6, &2u64.to_le_bytes()).unwrap();
+        let ack = net::read_frame(&mut reader).unwrap();
+        assert_eq!(ack.kind, FrameKind::RewireAck, "{:?}", ack.body);
+        let mut r = BodyReader::new(&ack.body);
+        assert_eq!(r.u64("len").unwrap(), 1);
+        assert_eq!(
+            r.u64("checksum").unwrap(),
+            spill::checksum_edges(&[(0u32, 1u32)])
+        );
+
+        net::write_frame(&mut writer, FrameKind::Shutdown, 7, &[]).unwrap();
+        assert_eq!(net::read_frame(&mut reader).unwrap().kind, FrameKind::Bye);
         worker.join().unwrap().unwrap();
     }
 }

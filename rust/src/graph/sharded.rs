@@ -79,6 +79,19 @@ pub struct ShardedGraph {
     vertex_counts: Vec<u64>,
     /// Residency policy inherited by every derived generation.
     policy: SpillPolicy,
+    /// Process-unique generation id: every rewrite (contract, prune,
+    /// reshard, fresh ingest) mints a new one; clones share it (same
+    /// content).  The shuffle transport keys worker shard custody on it —
+    /// an O(1) "is this the graph the workers hold?" check, never a
+    /// content hash.  Not part of equality.
+    gen: u64,
+}
+
+/// Mint a generation id (see [`ShardedGraph::generation`]).
+fn next_gen() -> u64 {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    NEXT.fetch_add(1, Ordering::Relaxed)
 }
 
 /// Content equality across backends: same vertex universe, shard count,
@@ -272,6 +285,7 @@ fn finish_shards(
         store,
         vertex_counts,
         policy: policy.clone(),
+        gen: next_gen(),
     })
 }
 
@@ -311,6 +325,7 @@ impl ShardedGraph {
             )),
             vertex_counts: vertex_counts(n, p),
             policy: SpillPolicy::unbounded(),
+            gen: next_gen(),
         }
     }
 
@@ -528,6 +543,13 @@ impl ShardedGraph {
         &self.vertex_counts
     }
 
+    /// Process-unique generation id of this edge set (clones share it;
+    /// every rewrite mints a new one).  The shuffle transport tracks
+    /// which generation the worker processes have custody of by this id.
+    pub fn generation(&self) -> u64 {
+        self.gen
+    }
+
     /// Flatten to the canonical [`Graph`] view (for the oracle, the dense
     /// backend boundary, and tests).  Bit-identical to `Graph::normalize`
     /// of the same edge multiset: shards are canonical and globally
@@ -679,6 +701,7 @@ impl ShardedGraph {
             )),
             vertex_counts: vertex_counts(n, p),
             policy,
+            gen: next_gen(),
         })
     }
 
@@ -976,6 +999,7 @@ impl ShardedGraph {
             store,
             vertex_counts,
             policy: self.policy.clone(),
+            gen: next_gen(),
         })
     }
 

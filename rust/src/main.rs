@@ -59,8 +59,11 @@ Common flags:
   --graph <preset|path|cycle|star|grid|gnp|gnp-log|file:PATH>   --n <vertices>
   --seed N  --machines N (simulated machines = shard count; run/pipeline/perf)
   --threads N (simulation threads; run)
-  --transport inproc|proc (round transport; proc spawns one worker process
-                           per machine on localhost; run/pipeline/perf)
+  --transport inproc|proc|shuffle (round transport; proc spawns one worker
+                           process per machine on localhost; shuffle adds the
+                           worker-to-worker data plane — workers generate and
+                           shuffle the hop/rewire rounds peer to peer while the
+                           coordinator issues descriptors; run/pipeline/perf)
   --spill-budget BYTES[K|M|G] (resident edge-memory budget; larger graphs
                         run with disk-backed shards; run/pipeline/perf)
   --finisher N  --use-xla  --verify  --json
@@ -115,7 +118,7 @@ fn spill_budget(args: &Args) -> Option<u64> {
     args.byte_size_opt("spill-budget")
 }
 
-/// `--transport inproc|proc`.
+/// `--transport inproc|proc|shuffle`.
 fn transport(args: &Args) -> TransportMode {
     TransportMode::parse(&args.str_or("transport", "inproc"))
 }
@@ -301,7 +304,8 @@ fn cmd_perf(args: &Args) {
     let want_json = args.bool_or("json", false);
     let out_path = args.str_opt("out").map(String::from);
     if want_json || out_path.is_some() {
-        let doc = perf::suite_json(&measurements, quick, machines, budget, mode);
+        let breakdown = perf::round_breakdown(machines, mode);
+        let doc = perf::suite_json(&measurements, quick, machines, budget, mode, breakdown);
         let text = doc.pretty();
         if let Some(path) = &out_path {
             std::fs::write(path, &text)

@@ -24,10 +24,30 @@ pub struct RoundMetrics {
     pub space_violation: bool,
 }
 
+/// Wall-clock breakdown of one round, split along the data-plane stages:
+/// **generate** (building/serializing the message stream), **shuffle**
+/// (the transport exchange — socket time on wire backends, a pure barrier
+/// in-process), and **fold** (per-key reduction / reduce execution /
+/// merging remote fold results).  Pure measurement: *never* part of the
+/// model metrics or any equivalence comparison — [`RoundMetrics`] stays
+/// bit-identical across transports and thread counts, timings do not.
+#[derive(Debug, Clone, Default)]
+pub struct RoundTiming {
+    pub label: String,
+    pub gen_ms: f64,
+    pub shuffle_ms: f64,
+    pub fold_ms: f64,
+}
+
 /// Accumulated metrics for a run.
 #[derive(Debug, Clone, Default)]
 pub struct Metrics {
     pub rounds: Vec<RoundMetrics>,
+    /// Per-round wall-clock breakdown, parallel to `rounds` for rounds
+    /// recorded through the engine (rounds recorded directly via
+    /// [`Metrics::record`] carry no timing row).  Reported by `lcc perf`;
+    /// excluded from every bit-identity comparison.
+    pub timings: Vec<RoundTiming>,
 }
 
 impl Metrics {
@@ -66,6 +86,7 @@ impl Metrics {
     /// Merge metrics from a sub-computation (e.g. a per-phase job).
     pub fn extend(&mut self, other: Metrics) {
         self.rounds.extend(other.rounds);
+        self.timings.extend(other.timings);
     }
 }
 

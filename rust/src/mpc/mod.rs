@@ -23,6 +23,15 @@
 //!   tags); every other round ships its exact charged byte image for
 //!   receiver-side accounting.  Worker crash, frame truncation, and
 //!   payload corruption are typed [`TransportError`]s.
+//! * [`net::ShuffleTransport`] — the same worker processes promoted to
+//!   the **data plane**: each generates the hop and rewire rounds from
+//!   its owned shard and a synchronized value mirror, shuffles the
+//!   messages worker↔worker over a localhost TCP mesh, folds what it
+//!   receives, and reports only O(machines) load/checksum summaries;
+//!   the coordinator shrinks to a control plane issuing round
+//!   descriptors ([`transport::ShuffleOps`]) and validating the
+//!   summaries against its locally-computed fold.  Rounds with no
+//!   descriptor shape fall back to coordinator routing, proc-style.
 //!
 //! The eight algorithms and the contraction loop never see the backend:
 //! labels, per-round [`Metrics`], and derived graphs are bit-identical
@@ -61,10 +70,10 @@ pub mod simulator;
 pub mod transport;
 
 pub use dht::Dht;
-pub use metrics::{Metrics, RoundMetrics, WireSize};
+pub use metrics::{Metrics, RoundMetrics, RoundTiming, WireSize};
 pub use pool::WorkerPool;
 pub use simulator::{MpcConfig, ShardRound, Simulator};
 pub use transport::{
-    Exchange, ExchangeAck, InProcess, RoundCharge, TransportError, TransportMode, WireFold,
-    WireOp,
+    Exchange, ExchangeAck, HopSpec, InProcess, RoundCharge, ShuffleOps, TransportError,
+    TransportMode, WireFold, WireOp,
 };

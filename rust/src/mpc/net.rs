@@ -1,36 +1,60 @@
-//! The multi-process round transport: length-prefixed, checksummed frames
-//! over localhost sockets, one worker **process** per simulated machine.
+//! The multi-process round transports: length-prefixed, checksummed
+//! frames over localhost sockets, one worker **process** per simulated
+//! machine — split along a **control-plane / data-plane** boundary.
 //!
-//! This is the wire half of the [`super::transport::Exchange`] boundary.
-//! The coordinator (the `lcc` binary running a driver) spawns `machines`
-//! copies of `lcc worker`, hands each its [`crate::graph::EdgeShard`]
-//! serialized in the spill file framing
-//! ([`crate::graph::spill::encode_shard_bytes`] — a shard that is already
-//! spilled ships as its raw file bytes, no rehydration), and then drives
-//! one [`FrameKind::Round`] exchange per model round:
-//!
-//! * each machine receives its exact charged byte image (8-byte key +
-//!   [`crate::mpc::WireSize`] value encoding — the same bytes the model
-//!   counts), counts and checksums it on the **receiving side**, and for
-//!   fold rounds tagged with a [`WireOp`] reduces the messages itself and
-//!   returns the folded pairs;
-//! * the coordinator collects every acknowledgement before the round
-//!   completes — the barrier — and the simulator validates the
-//!   receiver-observed loads against the model charge.
-//!
-//! **Frame format** (all integers little-endian):
+//! **Frame format** (all integers little-endian, every link and both
+//! planes):
 //!
 //! ```text
 //! LCCFRME1 | kind u8 | seq u64 | body_len u64 | fnv1a64(body) u64 | body
 //! ```
 //!
+//! Two wire backends implement [`super::transport::Exchange`]:
+//!
+//! * [`ProcTransport`] — the coordinator **is** the data plane: it spawns
+//!   `machines` copies of `lcc worker`, hands each its
+//!   [`crate::graph::EdgeShard`] in the spill file framing
+//!   ([`crate::graph::spill::encode_shard_bytes`] — a spilled shard ships
+//!   as its raw file bytes, no rehydration), and drives one
+//!   [`FrameKind::Round`] exchange per model round, serializing and
+//!   routing every machine's exact charged byte image itself.  Each
+//!   machine counts its bytes on the receiving side and, for
+//!   [`WireOp`]-tagged folds, reduces them remotely; all acks collected =
+//!   the barrier.  Simple, but the coordinator serializes O(m) bytes per
+//!   round — a serial throughput cap no machine count can lift.
+//!
+//! * [`ShuffleTransport`] — the workers are the data plane and the
+//!   coordinator shrinks to a **control plane**.  On top of the proc
+//!   handshake it distributes the mesh roster ([`FrameKind::Peers`], from
+//!   the listener ports each worker advertises in its Hello) and then
+//!   drives the dominant rounds as O(1) **descriptors**:
+//!   [`FrameKind::HopRound`] makes every worker generate the hop's
+//!   messages *from its owned shard* and a synchronized value mirror
+//!   ([`FrameKind::StateSync`], skipped when chained hops keep the
+//!   mirrors current), shuffle each bucket straight to the peer owning
+//!   the keys ([`FrameKind::PeerMsgs`]), fold what it receives, and
+//!   all-gather the fold images ([`FrameKind::PeerFold`]); the ack is
+//!   **O(1)**: received-byte count + fold checksum, which the engine
+//!   validates against the shard-derived charge and its locally-computed
+//!   fold.  [`FrameKind::Rewire`] hands shard custody across a
+//!   contraction the same way: workers relabel their own edges through
+//!   the map mirror and ship them peer to peer
+//!   ([`FrameKind::PeerEdges`]) to the next generation's owners,
+//!   validated shard-by-shard against the coordinator's generation.
+//!   Rounds with no descriptor shape (grouped reduces, arbitrary maps)
+//!   fall back to coordinator routing, proc-style — bit-identity always,
+//!   worker-native speed where it matters.
+//!
 //! Every fault mode is a typed [`TransportError`]: a killed worker
 //! surfaces as [`TransportError::WorkerCrashed`] (or a short read, if the
 //! connection dies mid-frame), a truncated frame as
-//! [`TransportError::ShortRead`], a corrupted body as
-//! [`TransportError::ChecksumMismatch`] — never a hang (reads carry
-//! generous timeouts) and never a silently-wrong answer (accounting and
-//! shard statistics are cross-checked between the processes).
+//! [`TransportError::ShortRead`], a corrupted body — coordinator link or
+//! peer mesh — as [`TransportError::ChecksumMismatch`], a lying load
+//! report as [`TransportError::AccountingMismatch`], a diverging fold or
+//! shard as [`TransportError::Protocol`] — never a hang (reads, writes,
+//! and mesh waits all carry [`IO_TIMEOUT`]; dead peers surface
+//! immediately via their reader threads) and never a silently-wrong
+//! answer.
 //!
 //! The worker-side loop lives in [`crate::coordinator::worker`].
 
@@ -46,8 +70,10 @@ use crate::graph::ShardedGraph;
 
 /// Magic prefix of every transport frame.
 pub const FRAME_MAGIC: &[u8; 8] = b"LCCFRME1";
-/// Protocol version exchanged in the handshake.
-pub const PROTO_VERSION: u32 = 1;
+/// Protocol version exchanged in the handshake.  v2: `Hello` carries the
+/// worker's mesh listener port and the worker↔worker shuffle frames
+/// exist.
+pub const PROTO_VERSION: u32 = 2;
 /// Sanity cap on a peer-declared frame body, 4 GiB (a garbage length
 /// must not drive a huge allocation).
 pub const MAX_FRAME_BODY: u64 = 1 << 32;
@@ -64,8 +90,10 @@ const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(20);
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum FrameKind {
     /// worker → coordinator, first frame after connect: `version u32 |
-    /// pid u32` (the pid lets the coordinator align spawned children
-    /// with the accept-order worker ids).
+    /// pid u32 | mesh_port u16` (the pid lets the coordinator align
+    /// spawned children with the accept-order worker ids; the mesh port
+    /// is where this worker accepts peer connections — used only by the
+    /// shuffle transport).
     Hello,
     /// coordinator → worker: `version u32 | worker_id u32 | machines u32`.
     Assign,
@@ -88,6 +116,50 @@ pub enum FrameKind {
     /// worker → coordinator: utf-8 detail of a protocol violation the
     /// worker detected (surfaced as [`TransportError::Protocol`]).
     WorkerErr,
+
+    // ---- shuffle control plane (coordinator link; O(machines)/O(n)) ----
+    /// coordinator → worker: `count u32 | (worker_id u32, port u16) ×
+    /// count` — the mesh roster.  Worker `i` connects to every `j < i`
+    /// and accepts from every `j > i`, then acks [`FrameKind::PeersAck`].
+    Peers,
+    /// worker → coordinator: empty body — the full mesh is up.
+    PeersAck,
+    /// coordinator → worker: `value_bytes u8 | len u64 | data` — replace
+    /// the worker's value mirror (wire-encoded vertex values).
+    StateSync,
+    /// worker → coordinator: `hash u64` — receipt of the applied mirror
+    /// ([`mirror_hash_of`]).
+    StateAck,
+    /// coordinator → worker: `op u8 | include_self u8 | label_len u16 |
+    /// label` — one worker-native hop round descriptor
+    /// ([`crate::mpc::transport::HopSpec`]), identical for every worker
+    /// (loads are validated coordinator-side against the acks).
+    HopRound,
+    /// worker → coordinator: `received u64 | fold_checksum u64` — the
+    /// receiver-observed load and the FNV-1a of the worker's canonical
+    /// fold image (ascending key order).  O(1) bytes: the fold results
+    /// themselves stay on the workers.
+    HopAck,
+    /// coordinator → worker: `new_n u64` — rewrite custody through the
+    /// previously-synced map mirror and re-ship edges peer to peer.
+    Rewire,
+    /// worker → coordinator: `len u64 | checksum u64 | p u32 |
+    /// peer_counts p × u64` — the adopted next-generation shard's
+    /// statistics and payload checksum.
+    RewireAck,
+
+    // ---- worker↔worker mesh (the data plane; never the coordinator) ----
+    /// peer → peer, once per connection: `from u32`.
+    PeerHello,
+    /// peer → peer: one hop round's bucket for the receiving machine
+    /// (raw `key u64 | value` records).
+    PeerMsgs,
+    /// peer → peer: the sender's canonical fold image (its owned keys,
+    /// ascending) — the mirror-maintenance all-gather.
+    PeerFold,
+    /// peer → peer: rewritten edges owned by the receiver after a
+    /// [`FrameKind::Rewire`] (raw `(u32, u32)` pairs).
+    PeerEdges,
 }
 
 impl FrameKind {
@@ -102,6 +174,18 @@ impl FrameKind {
             FrameKind::Shutdown => 7,
             FrameKind::Bye => 8,
             FrameKind::WorkerErr => 9,
+            FrameKind::Peers => 10,
+            FrameKind::PeersAck => 11,
+            FrameKind::StateSync => 12,
+            FrameKind::StateAck => 13,
+            FrameKind::HopRound => 14,
+            FrameKind::HopAck => 15,
+            FrameKind::Rewire => 16,
+            FrameKind::RewireAck => 17,
+            FrameKind::PeerHello => 18,
+            FrameKind::PeerMsgs => 19,
+            FrameKind::PeerFold => 20,
+            FrameKind::PeerEdges => 21,
         }
     }
 
@@ -116,6 +200,18 @@ impl FrameKind {
             7 => FrameKind::Shutdown,
             8 => FrameKind::Bye,
             9 => FrameKind::WorkerErr,
+            10 => FrameKind::Peers,
+            11 => FrameKind::PeersAck,
+            12 => FrameKind::StateSync,
+            13 => FrameKind::StateAck,
+            14 => FrameKind::HopRound,
+            15 => FrameKind::HopAck,
+            16 => FrameKind::Rewire,
+            17 => FrameKind::RewireAck,
+            18 => FrameKind::PeerHello,
+            19 => FrameKind::PeerMsgs,
+            20 => FrameKind::PeerFold,
+            21 => FrameKind::PeerEdges,
             _ => return None,
         })
     }
@@ -454,9 +550,40 @@ pub fn fold_wire_payload(op: WireOp, payload: &[u8]) -> Result<Vec<u8>, String> 
 // ---------------------------------------------------------------------------
 // the coordinator-side transport
 
+/// A socket that counts every byte it moves (both directions share one
+/// counter).  Wrapped around each coordinator↔worker link so tests can
+/// assert the control-plane property directly: in shuffle mode a round's
+/// coordinator-link traffic is O(machines) summary bytes while the O(m)
+/// message stream stays on the worker mesh.
+struct Meter {
+    sock: TcpStream,
+    counter: std::sync::Arc<std::sync::atomic::AtomicU64>,
+}
+
+impl Read for Meter {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        let k = self.sock.read(buf)?;
+        self.counter
+            .fetch_add(k as u64, std::sync::atomic::Ordering::Relaxed);
+        Ok(k)
+    }
+}
+
+impl Write for Meter {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        let k = self.sock.write(buf)?;
+        self.counter
+            .fetch_add(k as u64, std::sync::atomic::Ordering::Relaxed);
+        Ok(k)
+    }
+    fn flush(&mut self) -> std::io::Result<()> {
+        self.sock.flush()
+    }
+}
+
 struct Conn {
-    reader: BufReader<TcpStream>,
-    writer: BufWriter<TcpStream>,
+    reader: BufReader<Meter>,
+    writer: BufWriter<Meter>,
 }
 
 impl std::fmt::Debug for Conn {
@@ -476,6 +603,12 @@ pub struct ProcTransport {
     children: Vec<Child>,
     /// Worker-reported pid per machine, in worker-id order.
     worker_pids: Vec<u32>,
+    /// Worker mesh-listener port per machine (from the v2 Hello), used
+    /// only by the shuffle transport's `Peers` roster.
+    mesh_ports: Vec<u16>,
+    /// Total bytes moved over the coordinator links, both directions
+    /// (shared by every [`Meter`]).
+    link_bytes: std::sync::Arc<std::sync::atomic::AtomicU64>,
     machines: usize,
     seq: u64,
     finished: bool,
@@ -595,9 +728,12 @@ impl ProcTransport {
             });
         }
         let machines = streams.len();
+        let link_bytes = std::sync::Arc::new(std::sync::atomic::AtomicU64::new(0));
         let mut conns = Vec::with_capacity(streams.len());
         let mut worker_pids = Vec::with_capacity(streams.len());
+        let mut mesh_ports = Vec::with_capacity(streams.len());
         for (j, s) in streams.into_iter().enumerate() {
+            let counter = std::sync::Arc::clone(&link_bytes);
             let prep = || -> Result<Conn, TransportError> {
                 s.set_nonblocking(false)
                     .map_err(|e| io_err("stream blocking mode", e))?;
@@ -608,11 +744,14 @@ impl ProcTransport {
                 // a large LoadShard/Round write forever
                 s.set_write_timeout(Some(IO_TIMEOUT))
                     .map_err(|e| io_err("set write timeout", e))?;
-                let reader =
-                    BufReader::new(s.try_clone().map_err(|e| io_err("clone stream", e))?);
+                let dup = s.try_clone().map_err(|e| io_err("clone stream", e))?;
+                let reader = BufReader::new(Meter {
+                    sock: dup,
+                    counter: std::sync::Arc::clone(&counter),
+                });
                 Ok(Conn {
                     reader,
-                    writer: BufWriter::new(s),
+                    writer: BufWriter::new(Meter { sock: s, counter }),
                 })
             };
             let mut conn = prep().map_err(|e| e.for_worker(j))?;
@@ -634,7 +773,9 @@ impl ProcTransport {
                 });
             }
             let pid = r.u32("hello pid").map_err(|e| e.for_worker(j))?;
+            let port = r.u16("hello mesh port").map_err(|e| e.for_worker(j))?;
             worker_pids.push(pid);
+            mesh_ports.push(port);
             let mut body = Vec::with_capacity(12);
             body.extend_from_slice(&PROTO_VERSION.to_le_bytes());
             body.extend_from_slice(&(j as u32).to_le_bytes());
@@ -647,6 +788,8 @@ impl ProcTransport {
             conns,
             children: Vec::new(),
             worker_pids,
+            mesh_ports,
+            link_bytes,
             machines,
             seq: 0,
             finished: false,
@@ -655,6 +798,13 @@ impl ProcTransport {
 
     pub fn num_machines(&self) -> usize {
         self.machines
+    }
+
+    /// Shared counter of every byte moved over the coordinator links,
+    /// both directions.  Clone the handle before boxing the transport to
+    /// observe a run's control-plane traffic from the outside.
+    pub fn link_bytes_counter(&self) -> std::sync::Arc<std::sync::atomic::AtomicU64> {
+        std::sync::Arc::clone(&self.link_bytes)
     }
 
     /// Distribute the graph: shard `s` (in the spill shard-file framing —
@@ -971,6 +1121,435 @@ impl Exchange for ProcTransport {
             machine_bytes,
             folded,
         })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the shuffle transport: worker-native data plane, coordinator control plane
+
+/// Domain-separated content hash of a worker value mirror: the value
+/// width and length are hashed ahead of the wire-encoded data, so mirrors
+/// of different shapes can never collide.  Both sides compute it — the
+/// coordinator to decide whether a `StateSync` is needed, the worker as
+/// its application receipt.
+pub fn mirror_hash_of(value_bytes: u8, data: &[u8]) -> u64 {
+    let mut h = Fnv1a::new();
+    h.update(&[value_bytes]);
+    h.update(&(data.len() as u64).to_le_bytes());
+    h.update(data);
+    h.finish()
+}
+
+/// Observability counters of a [`ShuffleTransport`] (shared handle:
+/// clone via [`ShuffleTransport::stats`] before boxing).  Tests assert
+/// the custody story through these — e.g. that a contraction really
+/// re-shipped peer-to-peer (`rewires`) instead of falling back to a
+/// coordinator re-load (`custody_loads`).
+#[derive(Debug, Default)]
+pub struct ShuffleStats {
+    /// Peer-to-peer custody handoffs ([`FrameKind::Rewire`]).
+    pub rewires: std::sync::atomic::AtomicU64,
+    /// Coordinator-link custody (re-)loads ([`FrameKind::LoadShard`]),
+    /// including the initial distribution.
+    pub custody_loads: std::sync::atomic::AtomicU64,
+    /// Mirror broadcasts ([`FrameKind::StateSync`]).
+    pub state_syncs: std::sync::atomic::AtomicU64,
+    /// Worker-native hop rounds ([`FrameKind::HopRound`]).
+    pub hops: std::sync::atomic::AtomicU64,
+}
+
+/// The worker↔worker shuffle backend (coordinator side): the same
+/// spawned workers, sockets, and frame protocol as [`ProcTransport`]
+/// (which it wraps for every coordinator-routed round), plus the mesh
+/// control plane — `Peers` roster, value-mirror sync, hop descriptors,
+/// and peer-to-peer custody rewires.  See the module docs for the
+/// protocol and `EXPERIMENTS.md` §Distributed protocol for the frame
+/// walk-through.
+#[derive(Debug)]
+pub struct ShuffleTransport {
+    links: ProcTransport,
+    /// Generation id of the graph the workers hold custody of.
+    custody: Option<u64>,
+    /// Content hash of the worker-side value mirror.
+    mirror: Option<u64>,
+    stats: std::sync::Arc<ShuffleStats>,
+}
+
+impl ShuffleTransport {
+    /// Spawn `machines` workers (exactly [`ProcTransport::spawn`]) and
+    /// bring up the worker mesh: ship each the `Peers` roster built from
+    /// the Hello mesh ports and barrier on every `PeersAck`.
+    pub fn spawn(machines: usize, worker_bin: &Path) -> Result<ShuffleTransport, TransportError> {
+        Self::from_links(ProcTransport::spawn(machines, worker_bin)?)
+    }
+
+    /// Build over already-connected streams (fault-injection tests play
+    /// the worker side), running the proc handshake plus the mesh roster.
+    pub fn from_connected(streams: Vec<TcpStream>) -> Result<ShuffleTransport, TransportError> {
+        Self::from_links(ProcTransport::from_connected(streams)?)
+    }
+
+    fn from_links(mut links: ProcTransport) -> Result<ShuffleTransport, TransportError> {
+        let p = links.machines;
+        links.seq += 1;
+        let seq = links.seq;
+        let mut roster = Vec::with_capacity(4 + p * 6);
+        roster.extend_from_slice(&(p as u32).to_le_bytes());
+        for j in 0..p {
+            roster.extend_from_slice(&(j as u32).to_le_bytes());
+            roster.extend_from_slice(&links.mesh_ports[j].to_le_bytes());
+        }
+        for j in 0..p {
+            write_frame(&mut links.conns[j].writer, FrameKind::Peers, seq, &roster)
+                .map_err(|e| links.crash_context(j, e))?;
+        }
+        for j in 0..p {
+            let frame =
+                read_frame(&mut links.conns[j].reader).map_err(|e| links.crash_context(j, e))?;
+            match frame.kind {
+                FrameKind::PeersAck => {}
+                FrameKind::WorkerErr => {
+                    return Err(TransportError::Protocol {
+                        worker: Some(j),
+                        detail: String::from_utf8_lossy(&frame.body).into_owned(),
+                    })
+                }
+                other => {
+                    return Err(TransportError::Protocol {
+                        worker: Some(j),
+                        detail: format!("expected PeersAck, got {other:?}"),
+                    })
+                }
+            }
+        }
+        Ok(ShuffleTransport {
+            links,
+            custody: None,
+            mirror: None,
+            stats: std::sync::Arc::new(ShuffleStats::default()),
+        })
+    }
+
+    pub fn num_machines(&self) -> usize {
+        self.links.num_machines()
+    }
+
+    /// See [`ProcTransport::link_bytes_counter`].
+    pub fn link_bytes_counter(&self) -> std::sync::Arc<std::sync::atomic::AtomicU64> {
+        self.links.link_bytes_counter()
+    }
+
+    /// Shared observability counters (see [`ShuffleStats`]).
+    pub fn stats(&self) -> std::sync::Arc<ShuffleStats> {
+        std::sync::Arc::clone(&self.stats)
+    }
+
+    /// Initial shard distribution; establishes custody of `g`.
+    pub fn load_graph(&mut self, g: &ShardedGraph) -> Result<(), TransportError> {
+        self.establish_custody(g)
+    }
+
+    /// Kill worker `j`'s process outright (fault injection; see
+    /// [`ProcTransport::kill_worker`]).
+    pub fn kill_worker(&mut self, j: usize) {
+        self.links.kill_worker(j);
+    }
+
+    /// Graceful shutdown (see [`ProcTransport::shutdown`]).
+    pub fn shutdown(self) -> Result<(), TransportError> {
+        self.links.shutdown()
+    }
+
+    /// Read one control ack of `want` from worker `j`, surfacing
+    /// `WorkerErr` and kind/seq mismatches as typed protocol errors.
+    fn read_ack(&mut self, j: usize, want: FrameKind, seq: u64) -> Result<Frame, TransportError> {
+        let frame = read_frame(&mut self.links.conns[j].reader)
+            .map_err(|e| self.links.crash_context(j, e))?;
+        if frame.kind == FrameKind::WorkerErr {
+            return Err(TransportError::Protocol {
+                worker: Some(j),
+                detail: String::from_utf8_lossy(&frame.body).into_owned(),
+            });
+        }
+        if frame.kind != want {
+            return Err(TransportError::Protocol {
+                worker: Some(j),
+                detail: format!("expected {want:?}, got {:?}", frame.kind),
+            });
+        }
+        if frame.seq != seq {
+            return Err(TransportError::Protocol {
+                worker: Some(j),
+                detail: format!("{want:?} seq {} != {seq}", frame.seq),
+            });
+        }
+        Ok(frame)
+    }
+}
+
+/// Canonical payload checksum of shard `s` of `g`: the spill-cached one
+/// when the graph is on disk, recomputed from the resident edges
+/// otherwise (the same [`spill::checksum_edges`] either way).
+fn shard_payload_checksum(g: &ShardedGraph, s: usize) -> u64 {
+    match g.shard_checksum(s) {
+        Some(c) => c,
+        None => spill::checksum_edges(&g.shard_data(s)),
+    }
+}
+
+impl Exchange for ShuffleTransport {
+    fn name(&self) -> &'static str {
+        "shuffle"
+    }
+
+    fn wants_wire(&self) -> bool {
+        true
+    }
+
+    fn machines(&self) -> Option<usize> {
+        Some(self.links.machines)
+    }
+
+    /// Rounds without a worker-native descriptor (grouped reduces,
+    /// per-message maps, untagged folds, charge-only barriers) flow
+    /// through the coordinator exactly as on the proc backend — same
+    /// routing, same receiver-side accounting, same bit-identity.
+    fn exchange(
+        &mut self,
+        label: &str,
+        charge: RoundCharge<'_>,
+        payloads: Vec<Vec<u8>>,
+        fold: Option<WireOp>,
+    ) -> Result<ExchangeAck, TransportError> {
+        self.links.exchange(label, charge, payloads, fold)
+    }
+
+    fn shuffle(&mut self) -> Option<&mut dyn crate::mpc::transport::ShuffleOps> {
+        Some(self)
+    }
+}
+
+impl crate::mpc::transport::ShuffleOps for ShuffleTransport {
+    fn custody(&self) -> Option<u64> {
+        self.custody
+    }
+
+    fn establish_custody(&mut self, g: &ShardedGraph) -> Result<(), TransportError> {
+        self.links.load_graph(g)?;
+        self.custody = Some(g.generation());
+        self.stats
+            .custody_loads
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        Ok(())
+    }
+
+    fn mirror_hash(&self) -> Option<u64> {
+        self.mirror
+    }
+
+    fn sync_mirror(
+        &mut self,
+        value_bytes: u8,
+        data: &[u8],
+        hash: u64,
+    ) -> Result<(), TransportError> {
+        let p = self.links.machines;
+        self.links.seq += 1;
+        let seq = self.links.seq;
+        let mut head = Vec::with_capacity(1 + 8);
+        head.push(value_bytes);
+        head.extend_from_slice(&(data.len() as u64).to_le_bytes());
+        for j in 0..p {
+            write_frame_parts(
+                &mut self.links.conns[j].writer,
+                FrameKind::StateSync,
+                seq,
+                &head,
+                data,
+            )
+            .map_err(|e| self.links.crash_context(j, e))?;
+        }
+        for j in 0..p {
+            let ack = self.read_ack(j, FrameKind::StateAck, seq)?;
+            let mut r = BodyReader::new(&ack.body);
+            let got = r.u64("state ack hash").map_err(|e| e.for_worker(j))?;
+            r.expect_end("state ack").map_err(|e| e.for_worker(j))?;
+            if got != hash {
+                return Err(TransportError::Protocol {
+                    worker: Some(j),
+                    detail: format!(
+                        "worker applied a mirror hashing {got:#018x}, coordinator sent {hash:#018x}"
+                    ),
+                });
+            }
+        }
+        self.mirror = Some(hash);
+        self.stats
+            .state_syncs
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        Ok(())
+    }
+
+    fn set_mirror_hash(&mut self, hash: u64) {
+        self.mirror = Some(hash);
+    }
+
+    fn begin_hop(
+        &mut self,
+        spec: &crate::mpc::transport::HopSpec<'_>,
+        charge: &RoundCharge<'_>,
+    ) -> Result<u64, TransportError> {
+        let p = self.links.machines;
+        debug_assert_eq!(charge.machine_bytes.len(), p);
+        self.links.seq += 1;
+        let seq = self.links.seq;
+        let label = spec.label.as_bytes();
+        let label_len = label.len().min(u16::MAX as usize);
+        // one shared descriptor body: the workers need no per-machine
+        // fields (loads are validated coordinator-side from the acks)
+        let mut body = Vec::with_capacity(1 + 1 + 2 + label_len);
+        body.push(spec.op.code());
+        body.push(u8::from(spec.include_self));
+        body.extend_from_slice(&(label_len as u16).to_le_bytes());
+        body.extend_from_slice(&label[..label_len]);
+        for j in 0..p {
+            write_frame(&mut self.links.conns[j].writer, FrameKind::HopRound, seq, &body)
+                .map_err(|e| self.links.crash_context(j, e))?;
+        }
+        self.stats
+            .hops
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        Ok(seq)
+    }
+
+    fn finish_hop(
+        &mut self,
+        seq: u64,
+        spec: &crate::mpc::transport::HopSpec<'_>,
+        charge: &RoundCharge<'_>,
+        expected_folds: &[u64],
+    ) -> Result<(), TransportError> {
+        let p = self.links.machines;
+        debug_assert_eq!(expected_folds.len(), p);
+        // Read every ack before judging: a worker that failed its round
+        // answers WorkerErr while poisoning its mesh phases
+        // (coordinator/worker.rs), so its peers complete fast with
+        // *damaged* loads/folds — the root-cause WorkerErr must win the
+        // attribution over those symptoms.  Socket-level failures (crash,
+        // truncation) still abort immediately.
+        let mut root_cause: Option<TransportError> = None;
+        let mut damage: Option<TransportError> = None;
+        for j in 0..p {
+            let frame = read_frame(&mut self.links.conns[j].reader)
+                .map_err(|e| self.links.crash_context(j, e))?;
+            if frame.kind == FrameKind::WorkerErr {
+                root_cause.get_or_insert(TransportError::Protocol {
+                    worker: Some(j),
+                    detail: String::from_utf8_lossy(&frame.body).into_owned(),
+                });
+                continue;
+            }
+            if frame.kind != FrameKind::HopAck || frame.seq != seq {
+                damage.get_or_insert(TransportError::Protocol {
+                    worker: Some(j),
+                    detail: format!(
+                        "expected HopAck seq {seq}, got {:?} seq {}",
+                        frame.kind, frame.seq
+                    ),
+                });
+                continue;
+            }
+            let parsed = (|| -> Result<(u64, u64), TransportError> {
+                let mut r = BodyReader::new(&frame.body);
+                let received = r.u64("hop ack received")?;
+                let fold = r.u64("hop ack fold checksum")?;
+                r.expect_end("hop ack")?;
+                Ok((received, fold))
+            })();
+            let (received, fold) = match parsed {
+                Ok(v) => v,
+                Err(e) => {
+                    damage.get_or_insert(e.for_worker(j));
+                    continue;
+                }
+            };
+            if received != charge.machine_bytes[j] {
+                damage.get_or_insert(TransportError::AccountingMismatch {
+                    label: spec.label.to_string(),
+                    machine: j,
+                    expected: charge.machine_bytes[j],
+                    actual: received,
+                });
+            } else if fold != expected_folds[j] {
+                damage.get_or_insert(TransportError::Protocol {
+                    worker: Some(j),
+                    detail: format!(
+                        "round {:?}: worker fold image hashes {fold:#018x}, \
+                         coordinator computed {:#018x}",
+                        spec.label, expected_folds[j]
+                    ),
+                });
+            }
+        }
+        match root_cause.or(damage) {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
+    fn rewire(&mut self, map: &[u32], new: &ShardedGraph) -> Result<(), TransportError> {
+        let p = self.links.machines;
+        // the map rides the mirror channel (wire-encoded u32s)
+        let mut data = Vec::with_capacity(map.len() * 4);
+        for &m in map {
+            data.extend_from_slice(&m.to_le_bytes());
+        }
+        let hash = mirror_hash_of(4, &data);
+        if self.mirror != Some(hash) {
+            self.sync_mirror(4, &data, hash)?;
+        }
+        self.links.seq += 1;
+        let seq = self.links.seq;
+        let body = (new.num_vertices() as u64).to_le_bytes();
+        for j in 0..p {
+            write_frame(&mut self.links.conns[j].writer, FrameKind::Rewire, seq, &body)
+                .map_err(|e| self.links.crash_context(j, e))?;
+        }
+        for j in 0..p {
+            let ack = self.read_ack(j, FrameKind::RewireAck, seq)?;
+            let mut r = BodyReader::new(&ack.body);
+            let parsed = (|| -> Result<(u64, u64, Vec<u64>), TransportError> {
+                let len = r.u64("rewire ack len")?;
+                let checksum = r.u64("rewire ack checksum")?;
+                let ack_p = r.u32("rewire ack shard count")? as usize;
+                let mut peers = Vec::with_capacity(ack_p.min(1 << 16));
+                for _ in 0..ack_p {
+                    peers.push(r.u64("rewire ack peer count")?);
+                }
+                r.expect_end("rewire ack")?;
+                Ok((len, checksum, peers))
+            })()
+            .map_err(|e| e.for_worker(j))?;
+            let (len, checksum, peers) = parsed;
+            let stats = new.shard_stats(j);
+            if len != stats.len
+                || peers != stats.peer_counts
+                || checksum != shard_payload_checksum(new, j)
+            {
+                return Err(TransportError::Protocol {
+                    worker: Some(j),
+                    detail: format!(
+                        "rewired shard diverges from the coordinator's generation \
+                         ({len} edges, checksum {checksum:#018x})"
+                    ),
+                });
+            }
+        }
+        self.custody = Some(new.generation());
+        self.stats
+            .rewires
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        Ok(())
     }
 }
 

@@ -36,10 +36,15 @@
 //! all eight algorithms.  A transport failure unwinds with the typed
 //! [`TransportError`] as payload (see [`super::transport`] module docs).
 
-use super::metrics::{Metrics, RoundMetrics, WireSize};
+use super::metrics::{Metrics, RoundMetrics, RoundTiming, WireSize};
 use super::pool;
-use super::transport::{Exchange, InProcess, RoundCharge, TransportError, WireFold, WireOp};
+use super::transport::{
+    Exchange, HopSpec, InProcess, RoundCharge, TransportError, WireFold, WireOp,
+};
+use crate::graph::spill::Fnv1a;
+use crate::graph::{ShardedGraph, Vertex};
 use crate::util::rng::splitmix64;
+use std::time::Instant;
 
 /// Simulator configuration.
 #[derive(Debug, Clone)]
@@ -113,6 +118,18 @@ pub struct Simulator {
     pub cfg: MpcConfig,
     pub metrics: Metrics,
     transport: Box<dyn Exchange>,
+    /// Per-machine byte scratch, cleared (not dropped) between rounds so
+    /// the in-process engine stops re-allocating a `Vec` per round on the
+    /// bench path (§Perf).
+    scratch_mb: Vec<u64>,
+    /// Touched-key bitset scratch (one bit per output slot), same
+    /// clear-not-drop lifecycle — this is the O(n) per-round allocation
+    /// of the fold rounds.
+    scratch_touched: Vec<u64>,
+    /// Wall-clock of the current round's generate / fold stages, consumed
+    /// into a [`RoundTiming`] row when the round completes.
+    pending_gen_ms: f64,
+    pending_fold_ms: f64,
 }
 
 impl std::fmt::Debug for Simulator {
@@ -147,6 +164,10 @@ impl Simulator {
             cfg,
             metrics: Metrics::new(),
             transport,
+            scratch_mb: Vec::new(),
+            scratch_touched: Vec::new(),
+            pending_gen_ms: 0.0,
+            pending_fold_ms: 0.0,
         }
     }
 
@@ -167,6 +188,54 @@ impl Simulator {
     #[inline]
     pub fn machine_of(&self, key: u64) -> usize {
         machine_of(key, self.cfg.machines)
+    }
+
+    /// Borrow the per-machine byte scratch, zeroed to `p` slots.  Return
+    /// it with [`put_mb`](Self::put_mb) so the allocation survives the
+    /// round (cleared, not dropped).
+    fn take_mb(&mut self, p: usize) -> Vec<u64> {
+        let mut mb = std::mem::take(&mut self.scratch_mb);
+        mb.clear();
+        mb.resize(p, 0);
+        mb
+    }
+
+    fn put_mb(&mut self, mb: Vec<u64>) {
+        self.scratch_mb = mb;
+    }
+
+    /// Borrow the touched-key bitset scratch, zeroed to `words` words.
+    fn take_touched(&mut self, words: usize) -> Vec<u64> {
+        let mut t = std::mem::take(&mut self.scratch_touched);
+        t.clear();
+        t.resize(words, 0);
+        t
+    }
+
+    fn put_touched(&mut self, t: Vec<u64>) {
+        self.scratch_touched = t;
+    }
+
+    /// Attribute wall time to the current round's generate stage.
+    #[inline]
+    fn note_gen(&mut self, since: Instant) {
+        self.pending_gen_ms += since.elapsed().as_secs_f64() * 1e3;
+    }
+
+    /// Attribute wall time to the current round's fold stage (before the
+    /// round completes).
+    #[inline]
+    fn note_fold(&mut self, since: Instant) {
+        self.pending_fold_ms += since.elapsed().as_secs_f64() * 1e3;
+    }
+
+    /// Attribute post-exchange reduce/merge time to the round that just
+    /// completed.
+    #[inline]
+    fn note_fold_after(&mut self, since: Instant) {
+        if let Some(t) = self.metrics.timings.last_mut() {
+            t.fold_ms += since.elapsed().as_secs_f64() * 1e3;
+        }
     }
 
     /// Execute one MapReduce round.
@@ -190,11 +259,12 @@ impl Simulator {
         // Pre-size for the uniform-hash expectation so the buckets do not
         // realloc through millions of pushes (skewed keys still grow
         // amortized; §Perf).
+        let t_gen = Instant::now();
         let bucket_cap = messages.len() / p + 1;
         let mut per_machine: Vec<Vec<(u64, V)>> =
             (0..p).map(|_| Vec::with_capacity(bucket_cap)).collect();
         let mut bytes = 0u64;
-        let mut machine_bytes = vec![0u64; p];
+        let mut machine_bytes = self.take_mb(p);
         let n_messages = messages.len() as u64;
         for (key, value) in messages {
             let m = self.machine_of(key);
@@ -212,7 +282,10 @@ impl Simulator {
         } else {
             Vec::new()
         };
+        self.note_gen(t_gen);
         self.complete_round(label, n_messages, bytes, &machine_bytes, payloads, None);
+        self.put_mb(machine_bytes);
+        let t_fold = Instant::now();
 
         // ---- per-machine: group by key, reduce ------------------------------
         let threads = self.cfg.threads.max(1).min(p);
@@ -251,7 +324,9 @@ impl Simulator {
             pool::global().run_jobs(jobs).into_iter().flatten().collect()
         };
 
-        outputs.into_iter().flatten().collect()
+        let out = outputs.into_iter().flatten().collect();
+        self.note_fold_after(t_fold);
+        out
     }
 
     /// Fast path for **associative, commutative per-key folds** (the min/max
@@ -293,15 +368,17 @@ impl Simulator {
         let p = self.cfg.machines.max(1);
         let wire = self.wire_mode();
         let remote = wire && fold.wire.is_some();
+        let t_gen = Instant::now();
         let mut bufs: Vec<Vec<u8>> = if wire {
             (0..p).map(|_| Vec::new()).collect()
         } else {
             Vec::new()
         };
-        let mut machine_bytes = vec![0u64; p];
+        let mut machine_bytes = self.take_mb(p);
+        let words = out.len().div_ceil(64);
+        let mut touched = self.take_touched(words);
         let mut bytes = 0u64;
         let mut n_messages = 0u64;
-        let mut touched = vec![false; out.len()];
         for (key, value) in messages {
             let sz = 8 + value.wire_size();
             bytes += sz;
@@ -314,14 +391,15 @@ impl Simulator {
             }
             if !remote {
                 let k = key as usize;
-                out[k] = if touched[k] {
+                out[k] = if (touched[k / 64] >> (k % 64)) & 1 == 1 {
                     (fold.f)(out[k], value)
                 } else {
                     value
                 };
-                touched[k] = true;
+                touched[k / 64] |= 1u64 << (k % 64);
             }
         }
+        self.note_gen(t_gen);
         let folded = self.complete_round(
             label,
             n_messages,
@@ -330,8 +408,12 @@ impl Simulator {
             bufs,
             if remote { fold.wire } else { None },
         );
+        self.put_mb(machine_bytes);
+        self.put_touched(touched);
         if remote {
+            let t_fold = Instant::now();
             apply_folded(out, folded.expect("wire transport returned no fold results"));
+            self.note_fold_after(t_fold);
         }
     }
 
@@ -347,12 +429,13 @@ impl Simulator {
     {
         let p = self.cfg.machines.max(1);
         let wire = self.wire_mode();
+        let t_gen = Instant::now();
         let mut bufs: Vec<Vec<u8>> = if wire {
             (0..p).map(|_| Vec::new()).collect()
         } else {
             Vec::new()
         };
-        let mut machine_bytes = vec![0u64; p];
+        let mut machine_bytes = self.take_mb(p);
         let mut bytes = 0u64;
         let mut n_messages = 0u64;
         let messages = messages.into_iter();
@@ -369,7 +452,9 @@ impl Simulator {
             }
             out.push(f(key, value));
         }
+        self.note_gen(t_gen);
         self.complete_round(label, n_messages, bytes, &machine_bytes, bufs, None);
+        self.put_mb(machine_bytes);
         out
     }
 
@@ -587,17 +672,23 @@ impl Simulator {
         }
         let op = fold.f;
         let t = self.cfg.threads.max(1).min(shards.len().max(1));
+        let t_fold = Instant::now();
         let mut msgs_seen = 0u64;
         if t <= 1 || shards.len() <= 1 {
             // Serial: exactly `round_fold` over the concatenated shards,
             // minus the per-message accounting the charge already carries.
-            let mut touched = vec![false; out.len()];
+            let mut touched = self.take_touched(out.len().div_ceil(64));
             for (key, value) in shards.into_iter().flatten() {
                 msgs_seen += 1;
                 let k = key as usize;
-                out[k] = if touched[k] { op(out[k], value) } else { value };
-                touched[k] = true;
+                out[k] = if (touched[k / 64] >> (k % 64)) & 1 == 1 {
+                    op(out[k], value)
+                } else {
+                    value
+                };
+                touched[k / 64] |= 1u64 << (k % 64);
             }
+            self.put_touched(touched);
         } else {
             let n = out.len();
             let words = n.div_ceil(64);
@@ -654,6 +745,7 @@ impl Simulator {
             "shard charge disagrees with the message stream ({label})"
         );
         let _ = msgs_seen;
+        self.note_fold(t_fold);
         self.complete_round(
             label,
             charge.messages,
@@ -838,6 +930,225 @@ impl Simulator {
         self.complete_round(label, messages, bytes, machine_bytes, Vec::new(), None);
     }
 
+    /// One **worker-native** hop round on a shuffle-capable transport
+    /// ([`super::transport::ShuffleOps`]), or `None` when the transport
+    /// has no worker data plane / the fold has no wire identity — the
+    /// caller then takes the generic (coordinator-routed) wire path.
+    ///
+    /// The coordinator side of the round is pure control plane:
+    ///
+    /// 1. ensure the workers hold custody of `g` (peer-to-peer rewires
+    ///    keep it current across contractions; a coordinator re-ship is
+    ///    the fallback for graphs rebuilt outside the rewire protocol)
+    ///    and a mirror of `vals` (hash-checked; chained hops skip the
+    ///    sync because the fold all-gather keeps worker mirrors current);
+    /// 2. issue the O(1) hop descriptor — workers generate the messages
+    ///    from their shards, shuffle worker↔worker, and fold;
+    /// 3. **while they shuffle**, compute the same fold locally (the
+    ///    algorithm needs the output here anyway — this is the same
+    ///    in-process fold the `inproc` engine runs) and the canonical
+    ///    per-machine fold-image checksums;
+    /// 4. collect the O(machines) acks and validate: receiver-observed
+    ///    loads against the shard-derived charge
+    ///    ([`TransportError::AccountingMismatch`]), worker fold images
+    ///    against the local fold ([`TransportError::Protocol`]) — the
+    ///    bit-identity guarantee, enforced every round.
+    ///
+    /// Transport failures unwind with the typed error like every round.
+    pub fn try_shuffle_hop<V>(
+        &mut self,
+        label: &str,
+        g: &ShardedGraph,
+        vals: &[V],
+        include_self: bool,
+        fold: WireFold<V>,
+        charge: &ShardRound,
+    ) -> Option<Vec<V>>
+    where
+        V: WireSize + Copy,
+    {
+        let op = fold.wire?;
+        let n = vals.len();
+        if n == 0 || self.transport.shuffle().is_none() {
+            return None;
+        }
+        let vb = op.value_bytes();
+        if vals[0].wire_size() as usize != vb {
+            return None; // shape mismatch: keep the per-message wire path
+        }
+        let p = self.cfg.machines.max(1);
+        debug_assert_eq!(charge.machine_bytes.len(), p);
+        let abort = |e: TransportError| -> ! { std::panic::panic_any(e) };
+
+        // ---- control plane: custody + mirror, then the descriptor ------
+        // The mirror hash is computed incrementally (vb-byte tmp buffer);
+        // the full O(n·vb) mirror image materializes only when a sync is
+        // actually needed — on the steady-state chained-hop path (the
+        // all-gather kept worker mirrors current) this is allocation-free.
+        let t_gen = Instant::now();
+        let gen = g.generation();
+        let hash = {
+            let mut h = Fnv1a::new();
+            h.update(&[vb as u8]);
+            h.update(&((n * vb) as u64).to_le_bytes());
+            let mut tmp = Vec::with_capacity(vb);
+            for v in vals {
+                tmp.clear();
+                v.encode_wire(&mut tmp);
+                h.update(&tmp);
+            }
+            h.finish()
+        };
+        let spec = HopSpec {
+            label,
+            op,
+            include_self,
+        };
+        let rc = RoundCharge {
+            messages: charge.messages,
+            bytes: charge.bytes,
+            machine_bytes: &charge.machine_bytes,
+        };
+        let seq = {
+            let sh = self.transport.shuffle().expect("checked above");
+            if sh.custody() != Some(gen) {
+                if let Err(e) = sh.establish_custody(g) {
+                    abort(e);
+                }
+            }
+            if sh.mirror_hash() != Some(hash) {
+                let mut data = Vec::with_capacity(n * vb);
+                for v in vals {
+                    v.encode_wire(&mut data);
+                }
+                debug_assert_eq!(crate::mpc::net::mirror_hash_of(vb as u8, &data), hash);
+                if let Err(e) = sh.sync_mirror(vb as u8, &data, hash) {
+                    abort(e);
+                }
+            }
+            match sh.begin_hop(&spec, &rc) {
+                Ok(seq) => seq,
+                Err(e) => abort(e),
+            }
+        };
+        self.note_gen(t_gen);
+
+        // ---- the same fold, locally, while the workers shuffle ---------
+        let t_fold = Instant::now();
+        let opf = fold.f;
+        let mut out: Vec<V> = vals.to_vec();
+        let words = n.div_ceil(64);
+        let mut touched = self.take_touched(words);
+        let mut msgs_seen = 0u64;
+        {
+            let mut fold_in = |k: Vertex, value: V| {
+                let k = k as usize;
+                out[k] = if (touched[k / 64] >> (k % 64)) & 1 == 1 {
+                    opf(out[k], value)
+                } else {
+                    value
+                };
+                touched[k / 64] |= 1u64 << (k % 64);
+                msgs_seen += 1;
+            };
+            for s in 0..p {
+                let shard = g.shard_data(s);
+                for &(u, v) in shard.iter() {
+                    fold_in(u, vals[v as usize]);
+                    fold_in(v, vals[u as usize]);
+                }
+                if include_self {
+                    let (sa, sb) = pool::chunk_range(n, p, s);
+                    for v in sa..sb {
+                        fold_in(v as Vertex, vals[v]);
+                    }
+                }
+            }
+        }
+        debug_assert_eq!(
+            msgs_seen, charge.messages,
+            "shard charge disagrees with the message stream ({label})"
+        );
+        let _ = msgs_seen;
+
+        // canonical per-machine fold images (ascending keys — exactly the
+        // worker encoding) hashed incrementally, plus the post-hop mirror
+        // hash, in one pass
+        let mut fold_hash: Vec<Fnv1a> = (0..p).map(|_| Fnv1a::new()).collect();
+        let mut mirror_h = Fnv1a::new();
+        mirror_h.update(&[vb as u8]);
+        mirror_h.update(&((n * vb) as u64).to_le_bytes());
+        let mut tmp = Vec::with_capacity(vb);
+        for (k, v) in out.iter().enumerate() {
+            tmp.clear();
+            v.encode_wire(&mut tmp);
+            mirror_h.update(&tmp);
+            if (touched[k / 64] >> (k % 64)) & 1 == 1 {
+                let h = &mut fold_hash[machine_of(k as u64, p)];
+                h.update(&(k as u64).to_le_bytes());
+                h.update(&tmp);
+            }
+        }
+        self.put_touched(touched);
+        let expected: Vec<u64> = fold_hash.into_iter().map(Fnv1a::finish).collect();
+        self.note_fold(t_fold);
+
+        // ---- the barrier: O(machines) summaries, validated -------------
+        let t_shuffle = Instant::now();
+        {
+            let sh = self.transport.shuffle().expect("checked above");
+            if let Err(e) = sh.finish_hop(seq, &spec, &rc, &expected) {
+                abort(e);
+            }
+            sh.set_mirror_hash(mirror_h.finish());
+        }
+        self.finish_round(label, charge.messages, charge.bytes, &charge.machine_bytes);
+        self.metrics.timings.push(RoundTiming {
+            label: label.to_string(),
+            gen_ms: std::mem::take(&mut self.pending_gen_ms),
+            shuffle_ms: t_shuffle.elapsed().as_secs_f64() * 1e3,
+            fold_ms: std::mem::take(&mut self.pending_fold_ms),
+        });
+        Some(out)
+    }
+
+    /// Custody handoff after a graph rewrite (contraction, prune): on a
+    /// shuffle transport whose workers hold `old`, broadcast the rewrite
+    /// `map` (`u32::MAX` = dropped vertex) and have the workers relabel
+    /// their own edges and re-ship them **peer to peer** into the next
+    /// generation, validated shard-by-shard against `new` (the
+    /// coordinator's locally-computed generation — stats + payload
+    /// checksum).  A no-op on other transports, and when the workers hold
+    /// some other generation (custody then re-establishes lazily at the
+    /// next descriptor round).  The model rounds this realizes are
+    /// charged by the caller ([`Simulator::charge_round`]); failures
+    /// unwind typed.
+    /// Does the transport's worker fleet currently hold custody of `g`?
+    /// `false` on non-shuffle transports.  Callers that must *build* a
+    /// rewrite map for [`shuffle_rewire`](Self::shuffle_rewire) check
+    /// this first so the in-process and proc paths never pay the O(n)
+    /// map materialization.
+    pub fn has_shuffle_custody(&mut self, g: &ShardedGraph) -> bool {
+        let gen = g.generation();
+        self.transport
+            .shuffle()
+            .map(|sh| sh.custody() == Some(gen))
+            .unwrap_or(false)
+    }
+
+    pub fn shuffle_rewire(&mut self, old: &ShardedGraph, map: &[Vertex], new: &ShardedGraph) {
+        let old_gen = old.generation();
+        let Some(sh) = self.transport.shuffle() else {
+            return;
+        };
+        if sh.custody() != Some(old_gen) {
+            return;
+        }
+        if let Err(e) = sh.rewire(map, new) {
+            std::panic::panic_any(e);
+        }
+    }
+
     /// Every round ends here: run the exchange on the transport (payload
     /// bytes move and the barrier blocks on a wire backend; pure
     /// accounting in-process), validate the receiver-observed loads
@@ -854,6 +1165,7 @@ impl Simulator {
         payloads: Vec<Vec<u8>>,
         fold: Option<WireOp>,
     ) -> Option<Vec<Vec<u8>>> {
+        let t0 = Instant::now();
         let ack = match self.transport.exchange(
             label,
             RoundCharge {
@@ -867,6 +1179,12 @@ impl Simulator {
             Ok(ack) => ack,
             Err(e) => std::panic::panic_any(e),
         };
+        self.metrics.timings.push(RoundTiming {
+            label: label.to_string(),
+            gen_ms: std::mem::take(&mut self.pending_gen_ms),
+            shuffle_ms: t0.elapsed().as_secs_f64() * 1e3,
+            fold_ms: std::mem::take(&mut self.pending_fold_ms),
+        });
         if ack.machine_bytes.len() != machine_bytes.len() {
             std::panic::panic_any(TransportError::Protocol {
                 worker: None,

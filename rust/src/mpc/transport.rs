@@ -51,8 +51,15 @@ pub enum TransportMode {
     /// Single-process simulator (the default).
     #[default]
     InProc,
-    /// Multi-process workers on localhost ([`crate::mpc::net`]).
+    /// Multi-process workers on localhost ([`crate::mpc::net`]); the
+    /// coordinator routes every round's byte image.
     Proc,
+    /// Multi-process workers with a worker↔worker data plane
+    /// ([`crate::mpc::net::ShuffleTransport`]): workers generate the hop
+    /// and rewire rounds from their owned shards and shuffle peer to
+    /// peer; the coordinator is a control plane (descriptors + barriers +
+    /// O(machines) summaries).
+    Shuffle,
 }
 
 impl TransportMode {
@@ -61,7 +68,8 @@ impl TransportMode {
         match s {
             "inproc" | "in-process" | "local" => TransportMode::InProc,
             "proc" | "process" | "multi-process" => TransportMode::Proc,
-            other => panic!("unknown transport {other:?} (try: inproc, proc)"),
+            "shuffle" | "mesh" => TransportMode::Shuffle,
+            other => panic!("unknown transport {other:?} (try: inproc, proc, shuffle)"),
         }
     }
 
@@ -69,6 +77,7 @@ impl TransportMode {
         match self {
             TransportMode::InProc => "inproc",
             TransportMode::Proc => "proc",
+            TransportMode::Shuffle => "shuffle",
         }
     }
 }
@@ -425,6 +434,105 @@ pub trait Exchange: fmt::Debug {
         payloads: Vec<Vec<u8>>,
         fold: Option<WireOp>,
     ) -> Result<ExchangeAck, TransportError>;
+
+    /// Descriptor-driven worker-native rounds, when this backend has a
+    /// worker↔worker data plane ([`ShuffleOps`]).  `None` (the default)
+    /// means rounds flow through [`exchange`](Exchange::exchange) with
+    /// coordinator-routed payloads.
+    fn shuffle(&mut self) -> Option<&mut dyn ShuffleOps> {
+        None
+    }
+}
+
+/// One worker-native hop round, described instead of shipped: each worker
+/// generates the round's messages from its **owned shard** and the
+/// synchronized value mirror (`(u, vals[v])` and `(v, vals[u])` per edge,
+/// plus its `chunk_range(n, p, s)` slice of the self messages when
+/// `include_self`), shuffles them straight to the peer workers owning the
+/// keys, and folds what it receives with `op`.
+#[derive(Debug, Clone, Copy)]
+pub struct HopSpec<'a> {
+    pub label: &'a str,
+    pub op: WireOp,
+    pub include_self: bool,
+}
+
+/// The control-plane operations of a shuffle-capable transport
+/// ([`crate::mpc::net::ShuffleTransport`]).  Everything here moves
+/// O(machines) or O(n) bytes over the coordinator links — descriptors,
+/// state mirrors, and summaries — never the O(m) message stream, which
+/// stays on the worker mesh.
+///
+/// **Validation model.**  The coordinator computes every descriptor
+/// round's result locally too (it is the algorithm driver and needs the
+/// output anyway); workers return per-machine load counts and fold/shard
+/// *checksums*, which the engine validates against the local result.  A
+/// divergence — wrong bytes moved, wrong fold computed, wrong custody
+/// adopted — is a typed [`TransportError`], never a silently different
+/// answer.
+pub trait ShuffleOps {
+    /// Generation id of the [`crate::graph::ShardedGraph`] the workers
+    /// currently hold custody of (`None` before the first load).
+    fn custody(&self) -> Option<u64>;
+
+    /// Re-ship shard custody for `g` over the coordinator links (the
+    /// fallback when an algorithm rebuilt the graph coordinator-side;
+    /// contractions and prunes stay peer-to-peer via
+    /// [`rewire`](ShuffleOps::rewire)).
+    fn establish_custody(&mut self, g: &crate::graph::ShardedGraph)
+        -> Result<(), TransportError>;
+
+    /// Content hash of the value mirror the workers currently hold.
+    fn mirror_hash(&self) -> Option<u64>;
+
+    /// Broadcast a new value mirror (wire-encoded, `value_bytes` per
+    /// vertex) to every worker; `hash` is the caller-computed
+    /// [`mirror_hash_of`](crate::mpc::net::mirror_hash_of), echoed by each
+    /// worker as its application receipt.
+    fn sync_mirror(
+        &mut self,
+        value_bytes: u8,
+        data: &[u8],
+        hash: u64,
+    ) -> Result<(), TransportError>;
+
+    /// Record that the workers' mirrors now hash to `hash` (they applied
+    /// the validated fold results of a hop in place).
+    fn set_mirror_hash(&mut self, hash: u64);
+
+    /// Issue a hop descriptor to every worker and return the round's
+    /// sequence number; workers start generating/shuffling immediately
+    /// while the coordinator computes its local fold.
+    fn begin_hop(
+        &mut self,
+        spec: &HopSpec<'_>,
+        charge: &RoundCharge<'_>,
+    ) -> Result<u64, TransportError>;
+
+    /// Collect the hop acks (the barrier): validate each worker's
+    /// receiver-observed load against the charge and its fold checksum
+    /// against `expected_folds[j]` (the coordinator-computed canonical
+    /// fold image of machine `j`'s keys).
+    fn finish_hop(
+        &mut self,
+        seq: u64,
+        spec: &HopSpec<'_>,
+        charge: &RoundCharge<'_>,
+        expected_folds: &[u64],
+    ) -> Result<(), TransportError>;
+
+    /// Peer-to-peer custody handoff after a graph rewrite: broadcast
+    /// `map` (old vertex → new vertex; `u32::MAX` = dropped), have every
+    /// worker rewrite its own edges, re-bucket them by the new ownership,
+    /// ship them straight to the new owner workers, and adopt the merged
+    /// result as its next-generation shard.  Each worker's new shard
+    /// statistics and payload checksum are validated against `new` (the
+    /// coordinator's locally-computed generation) before custody advances.
+    fn rewire(
+        &mut self,
+        map: &[u32],
+        new: &crate::graph::ShardedGraph,
+    ) -> Result<(), TransportError>;
 }
 
 /// The in-process backend: machines share the address space, so routing
@@ -465,8 +573,10 @@ mod tests {
     fn transport_mode_parses() {
         assert_eq!(TransportMode::parse("inproc"), TransportMode::InProc);
         assert_eq!(TransportMode::parse("proc"), TransportMode::Proc);
+        assert_eq!(TransportMode::parse("shuffle"), TransportMode::Shuffle);
         assert_eq!(TransportMode::InProc.name(), "inproc");
         assert_eq!(TransportMode::Proc.name(), "proc");
+        assert_eq!(TransportMode::Shuffle.name(), "shuffle");
     }
 
     #[test]

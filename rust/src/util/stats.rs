@@ -1,5 +1,20 @@
 //! Summary statistics and histograms for the experiment harness.
 
+/// Peak resident set size of this process in bytes (`VmHWM` from
+/// `/proc/self/status`), `None` where the kernel interface is absent
+/// (non-Linux).  Recorded in perf artifacts so the out-of-core and
+/// distributed protocols' memory behavior is visible in CI.
+pub fn peak_rss_bytes() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let kb: u64 = rest.trim().trim_end_matches("kB").trim().parse().ok()?;
+            return Some(kb * 1024);
+        }
+    }
+    None
+}
+
 /// Mean of a sample (0.0 for empty input).
 pub fn mean(xs: &[f64]) -> f64 {
     if xs.is_empty() {

@@ -1,20 +1,26 @@
-//! Transport equivalence: the multi-process backend must be
+//! Transport equivalence: the multi-process backends must be
 //! observationally identical to the in-process engine.
 //!
 //! For every algorithm and machine count, labels, per-round metrics
 //! (message counts, shuffled bytes, per-machine loads), phase series, and
-//! transport-driven graph rewrites must compare **bit-identical** between
-//! `inproc` and `proc` — the workers are real OS processes spawned from
-//! the `lcc` binary, the payloads really cross sockets, and the hop folds
-//! are reduced remotely, so this suite is the end-to-end proof that the
-//! `Exchange` boundary carries the full semantics.
+//! transport-driven graph rewrites must compare **bit-identical** across
+//! `inproc`, `proc`, and `shuffle` — the workers are real OS processes
+//! spawned from the `lcc` binary, the payloads really cross sockets (on
+//! `shuffle`, worker↔worker over the mesh, generated from the worker-held
+//! shards), and the hop folds are reduced remotely, so this suite is the
+//! end-to-end proof that the `Exchange` boundary carries the full
+//! semantics.  The shuffle transport additionally must keep the
+//! coordinator link down to O(machines) summary bytes per described
+//! round, and keep shard custody on the workers across contractions
+//! (peer-to-peer re-shipping, no coordinator re-load).
 
 use std::path::Path;
+use std::sync::atomic::Ordering;
 
 use lcc::cc::common::{contract_mpc, min_hop};
 use lcc::cc::{self, CcAlgorithm, CcResult, RunOptions};
 use lcc::graph::{generators, Graph, ShardedGraph, SpillPolicy};
-use lcc::mpc::net::ProcTransport;
+use lcc::mpc::net::{ProcTransport, ShuffleTransport};
 use lcc::mpc::{MpcConfig, Simulator};
 use lcc::util::rng::Rng;
 
@@ -33,6 +39,12 @@ fn cfg(machines: usize) -> MpcConfig {
 
 fn proc_sim(g: &ShardedGraph, machines: usize) -> Simulator {
     let mut t = ProcTransport::spawn(machines, worker_bin()).expect("spawn workers");
+    t.load_graph(g).expect("distribute shards");
+    Simulator::with_transport(cfg(machines), Box::new(t))
+}
+
+fn shuffle_sim(g: &ShardedGraph, machines: usize) -> Simulator {
+    let mut t = ShuffleTransport::spawn(machines, worker_bin()).expect("spawn mesh workers");
     t.load_graph(g).expect("distribute shards");
     Simulator::with_transport(cfg(machines), Box::new(t))
 }
@@ -62,31 +74,35 @@ fn all_algorithms_bit_identical_across_transports() {
         let g = ShardedGraph::from_graph(&flat, machines);
         for algo in cc::ALL_ALGORITHMS {
             let local = run_algo(algo, &g, Simulator::new(cfg(machines)), 7);
-            let remote = run_algo(algo, &g, proc_sim(&g, machines), 7);
-            assert_eq!(
-                local.labels, remote.labels,
-                "{algo} machines={machines}: labels diverge"
-            );
             assert_eq!(local.labels, want, "{algo} machines={machines}: wrong labels");
-            assert_eq!(
-                local.phases, remote.phases,
-                "{algo} machines={machines}: phases diverge"
-            );
-            assert_eq!(
-                local.edges_per_phase, remote.edges_per_phase,
-                "{algo} machines={machines}: phase series diverge"
-            );
-            assert_eq!(
-                local.metrics.rounds, remote.metrics.rounds,
-                "{algo} machines={machines}: per-round metrics diverge"
-            );
+            for (mode, remote) in [
+                ("proc", run_algo(algo, &g, proc_sim(&g, machines), 7)),
+                ("shuffle", run_algo(algo, &g, shuffle_sim(&g, machines), 7)),
+            ] {
+                assert_eq!(
+                    local.labels, remote.labels,
+                    "{algo} machines={machines} {mode}: labels diverge"
+                );
+                assert_eq!(
+                    local.phases, remote.phases,
+                    "{algo} machines={machines} {mode}: phases diverge"
+                );
+                assert_eq!(
+                    local.edges_per_phase, remote.edges_per_phase,
+                    "{algo} machines={machines} {mode}: phase series diverge"
+                );
+                assert_eq!(
+                    local.metrics.rounds, remote.metrics.rounds,
+                    "{algo} machines={machines} {mode}: per-round metrics diverge"
+                );
+            }
         }
     }
 }
 
 #[test]
 fn transport_driven_rewrites_produce_identical_graphs() {
-    // hop + contract under both transports: the *final graphs* must be
+    // hop + contract under all transports: the *final graphs* must be
     // bit-identical, not just the labels
     let flat = test_graph();
     let machines = 4;
@@ -99,27 +115,106 @@ fn transport_driven_rewrites_produce_identical_graphs() {
         (hopped, contracted, node_map, sim.metrics.rounds)
     };
     let (h_l, c_l, m_l, r_l) = run(Simulator::new(cfg(machines)));
-    let (h_p, c_p, m_p, r_p) = run(proc_sim(&g, machines));
-    assert_eq!(h_l, h_p, "hop values diverge");
-    assert_eq!(m_l, m_p, "compaction maps diverge");
-    assert_eq!(c_l, c_p, "contracted sharded graphs diverge");
-    assert_eq!(c_l.to_graph(), c_p.to_graph(), "flattened graphs diverge");
-    assert_eq!(r_l, r_p, "rewrite round metrics diverge");
+    for (mode, sim) in [
+        ("proc", proc_sim(&g, machines)),
+        ("shuffle", shuffle_sim(&g, machines)),
+    ] {
+        let (h_p, c_p, m_p, r_p) = run(sim);
+        assert_eq!(h_l, h_p, "{mode}: hop values diverge");
+        assert_eq!(m_l, m_p, "{mode}: compaction maps diverge");
+        assert_eq!(c_l, c_p, "{mode}: contracted sharded graphs diverge");
+        assert_eq!(
+            c_l.to_graph(),
+            c_p.to_graph(),
+            "{mode}: flattened graphs diverge"
+        );
+        assert_eq!(r_l, r_p, "{mode}: rewrite round metrics diverge");
+    }
 }
 
 #[test]
 fn spilled_shards_ship_without_rehydration_and_match() {
-    // a disk-backed graph: the proc transport reads the shard files
-    // verbatim off the spill dir; results must still be bit-identical
+    // a disk-backed graph: both wire transports read the shard files
+    // verbatim off the spill dir; results must still be bit-identical —
+    // and the shuffle run re-ships contraction custody peer to peer.
     let flat = test_graph();
     let machines = 4;
     let g = ShardedGraph::from_graph_with(&flat, machines, SpillPolicy::budget(0));
     assert!(g.is_spilled(), "budget 0 must spill");
     let local = run_algo("lc", &g, Simulator::new(cfg(machines)), 3);
-    let remote = run_algo("lc", &g, proc_sim(&g, machines), 3);
-    assert_eq!(local.labels, remote.labels);
-    assert_eq!(local.metrics.rounds, remote.metrics.rounds);
+    let proc_res = run_algo("lc", &g, proc_sim(&g, machines), 3);
+    assert_eq!(local.labels, proc_res.labels);
+    assert_eq!(local.metrics.rounds, proc_res.metrics.rounds);
+
+    let mut t = ShuffleTransport::spawn(machines, worker_bin()).expect("spawn mesh workers");
+    t.load_graph(&g).expect("distribute shards");
+    let stats = t.stats();
+    let shuffle = run_algo("lc", &g, Simulator::with_transport(cfg(machines), Box::new(t)), 3);
+    assert_eq!(local.labels, shuffle.labels);
+    assert_eq!(local.metrics.rounds, shuffle.metrics.rounds);
     assert_eq!(local.labels, cc::oracle::components(&flat));
+
+    // custody stayed worker-resident: the initial distribution is the
+    // only coordinator-link shard load; every contraction (and prune)
+    // re-shipped peer to peer
+    assert_eq!(
+        stats.custody_loads.load(Ordering::Relaxed),
+        1,
+        "contractions must not re-load custody through the coordinator"
+    );
+    assert!(
+        stats.rewires.load(Ordering::Relaxed) >= 1,
+        "LC on a spilled graph must trigger peer-to-peer custody re-shipping"
+    );
+    assert!(stats.hops.load(Ordering::Relaxed) >= 2, "hops run worker-native");
+}
+
+/// The acceptance property of the shuffle data plane: for a described
+/// round whose message volume is ≫ machines, the coordinator link moves
+/// only O(machines) summary bytes — descriptors out, load/checksum acks
+/// back.  The O(m) stream stays on the worker mesh.
+#[test]
+fn shuffle_coordinator_link_is_o_machines_per_round() {
+    let machines = 4;
+    let n = 2000;
+    let flat = generators::gnp(n, 8.0 / n as f64, &mut Rng::new(17));
+    let g = ShardedGraph::from_graph(&flat, machines);
+    let mut t = ShuffleTransport::spawn(machines, worker_bin()).expect("spawn mesh workers");
+    t.load_graph(&g).expect("distribute shards");
+    let link_bytes = t.link_bytes_counter();
+    let mut sim = Simulator::with_transport(cfg(machines), Box::new(t));
+    let vals: Vec<u32> = (0..n as u32).collect();
+
+    // hop 1 syncs the value mirror (an O(n) broadcast); hop 2 chains on
+    // hop 1's output, whose all-gather already kept the mirrors current —
+    // a steady-state round
+    let h1 = min_hop(&mut sim, "hop1", &g, &vals, true);
+    let before = link_bytes.load(Ordering::Relaxed);
+    let h2 = min_hop(&mut sim, "hop2", &g, &h1, true);
+    let delta = link_bytes.load(Ordering::Relaxed) - before;
+
+    let round = sim.metrics.rounds.last().expect("hop recorded");
+    assert!(
+        round.bytes > 100_000,
+        "test graph too small to be meaningful: {} round bytes",
+        round.bytes
+    );
+    assert!(
+        delta <= 512 * machines as u64,
+        "coordinator link moved {delta} bytes for one described round — \
+         not O(machines) summaries"
+    );
+    assert!(
+        round.bytes >= 50 * delta,
+        "round message volume ({}) must dwarf coordinator traffic ({delta})",
+        round.bytes
+    );
+
+    // and the values are still exactly the engine's
+    let mut reference = Simulator::new(cfg(machines));
+    let r1 = min_hop(&mut reference, "hop1", &g, &vals, true);
+    let r2 = min_hop(&mut reference, "hop2", &g, &r1, true);
+    assert_eq!(h2, r2, "steady-state shuffle hop diverges from inproc");
 }
 
 #[test]
@@ -148,6 +243,36 @@ fn driver_runs_the_proc_transport_end_to_end() {
     })
     .run_named(&flat, "equiv");
     assert_eq!(inproc.transport, "inproc");
+    assert_eq!(report.rounds, inproc.rounds);
+    assert_eq!(report.total_shuffle_bytes, inproc.total_shuffle_bytes);
+    assert_eq!(report.max_round_bytes, inproc.max_round_bytes);
+}
+
+#[test]
+fn driver_runs_the_shuffle_transport_end_to_end() {
+    use lcc::coordinator::{Driver, RunConfig};
+    use lcc::mpc::TransportMode;
+    let flat = test_graph();
+    let driver = Driver::new(RunConfig {
+        algorithm: "lc".into(),
+        machines: 4,
+        transport: TransportMode::Shuffle,
+        worker_bin: Some(worker_bin().to_path_buf()),
+        verify: true,
+        ..Default::default()
+    });
+    let report = driver.try_run_named(&flat, "equiv").expect("shuffle run");
+    assert_eq!(report.verified, Some(true));
+    assert_eq!(report.transport, "shuffle");
+    assert!(report.completed);
+
+    let inproc = Driver::new(RunConfig {
+        algorithm: "lc".into(),
+        machines: 4,
+        verify: true,
+        ..Default::default()
+    })
+    .run_named(&flat, "equiv");
     assert_eq!(report.rounds, inproc.rounds);
     assert_eq!(report.total_shuffle_bytes, inproc.total_shuffle_bytes);
     assert_eq!(report.max_round_bytes, inproc.max_round_bytes);

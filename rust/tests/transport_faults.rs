@@ -13,9 +13,9 @@ use std::net::{TcpListener, TcpStream};
 use std::path::Path;
 
 use lcc::graph::{generators, ShardedGraph};
-use lcc::mpc::net::{self, FrameKind, ProcTransport, PROTO_VERSION};
+use lcc::mpc::net::{self, FrameKind, ProcTransport, ShuffleTransport, PROTO_VERSION};
 use lcc::mpc::{
-    Exchange, MpcConfig, RoundCharge, Simulator, TransportError, WireOp,
+    Exchange, HopSpec, MpcConfig, RoundCharge, ShuffleOps, Simulator, TransportError, WireOp,
 };
 use lcc::util::rng::Rng;
 
@@ -116,9 +116,10 @@ impl FakePeer {
         let addr = listener.local_addr().unwrap();
         let fake = std::thread::spawn(move || {
             let stream = TcpStream::connect(addr).unwrap();
-            // worker side of the handshake: version + pid
+            // worker side of the handshake: version + pid + mesh port
             let mut hello = PROTO_VERSION.to_le_bytes().to_vec();
             hello.extend_from_slice(&std::process::id().to_le_bytes());
+            hello.extend_from_slice(&0u16.to_le_bytes());
             let mut w = stream.try_clone().unwrap();
             net::write_frame(&mut w, FrameKind::Hello, 0, &hello).unwrap();
             let mut r = stream.try_clone().unwrap();
@@ -367,6 +368,365 @@ fn frame_codec_faults_are_typed_at_the_byte_level() {
         net::read_frame(&mut &corrupt[..]),
         Err(TransportError::ChecksumMismatch { .. })
     ));
+}
+
+// ---------------------------------------------------------------------------
+// shuffle-transport faults: the worker↔worker data plane
+
+/// A fake shuffle worker for one-machine control-plane faults: completes
+/// the proc handshake plus the `Peers` roster, then hands the test raw
+/// frame control.
+fn shuffle_pair() -> (ShuffleTransport, FakePeer) {
+    let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+    let addr = listener.local_addr().unwrap();
+    let fake = std::thread::spawn(move || {
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut hello = PROTO_VERSION.to_le_bytes().to_vec();
+        hello.extend_from_slice(&std::process::id().to_le_bytes());
+        hello.extend_from_slice(&0u16.to_le_bytes());
+        let mut w = stream.try_clone().unwrap();
+        net::write_frame(&mut w, FrameKind::Hello, 0, &hello).unwrap();
+        let mut r = stream.try_clone().unwrap();
+        let assign = net::read_frame(&mut r).unwrap();
+        assert_eq!(assign.kind, FrameKind::Assign);
+        let peers = net::read_frame(&mut r).unwrap();
+        assert_eq!(peers.kind, FrameKind::Peers);
+        net::write_frame(&mut w, FrameKind::PeersAck, peers.seq, &[]).unwrap();
+        FakePeer { stream }
+    });
+    let (coord_side, _) = listener.accept().unwrap();
+    let transport = ShuffleTransport::from_connected(vec![coord_side]).unwrap();
+    (transport, fake.join().unwrap())
+}
+
+/// Serve a correct StateSync ack (echo the mirror hash) on a fake.
+fn fake_ack_state(peer: &mut FakePeer) {
+    let sync = peer.read();
+    assert_eq!(sync.kind, FrameKind::StateSync);
+    let vb = sync.body[0];
+    let data = &sync.body[9..];
+    let hash = net::mirror_hash_of(vb, data);
+    peer.send(FrameKind::StateAck, sync.seq, &hash.to_le_bytes());
+}
+
+#[test]
+fn shuffle_killed_worker_mid_run_is_typed_not_a_hang() {
+    let g = small_graph(2);
+    let mut t = ShuffleTransport::spawn(2, worker_bin()).expect("spawn");
+    t.load_graph(&g).expect("load");
+    t.kill_worker(0);
+    t.kill_worker(1);
+    let mut sim = Simulator::with_transport(
+        MpcConfig {
+            machines: 2,
+            space_per_machine: None,
+            spill_budget: None,
+            threads: 1,
+        },
+        Box::new(t),
+    );
+    let vals: Vec<u32> = (0..g.num_vertices() as u32).collect();
+    let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        let _ = lcc::cc::common::min_hop(&mut sim, "hop", &g, &vals, true);
+    }))
+    .expect_err("dead workers must abort the hop");
+    let err = caught
+        .downcast::<TransportError>()
+        .expect("typed panic payload");
+    match *err {
+        TransportError::WorkerCrashed { .. }
+        | TransportError::ShortRead { .. }
+        | TransportError::Io { .. }
+        | TransportError::Protocol { .. } => {}
+        ref other => panic!("expected a crash-shaped error, got {other}"),
+    }
+}
+
+#[test]
+fn shuffle_lying_hop_load_is_an_accounting_mismatch() {
+    let (mut t, mut peer) = shuffle_pair();
+    let handle = std::thread::spawn(move || {
+        fake_ack_state(&mut peer);
+        let hop = peer.read();
+        assert_eq!(hop.kind, FrameKind::HopRound);
+        let mut body = Vec::new();
+        body.extend_from_slice(&999u64.to_le_bytes()); // lie about the load
+        body.extend_from_slice(&0u64.to_le_bytes());
+        peer.send(FrameKind::HopAck, hop.seq, &body);
+        peer.serve_shutdown();
+    });
+    let data = [1u32, 2].iter().flat_map(|v| v.to_le_bytes()).collect::<Vec<u8>>();
+    let hash = net::mirror_hash_of(4, &data);
+    t.sync_mirror(4, &data, hash).expect("mirror sync");
+    let spec = HopSpec {
+        label: "hop",
+        op: WireOp::MinU32,
+        include_self: true,
+    };
+    let mb = [24u64];
+    let charge = RoundCharge {
+        messages: 2,
+        bytes: 24,
+        machine_bytes: &mb,
+    };
+    let seq = t.begin_hop(&spec, &charge).expect("begin");
+    let err = t
+        .finish_hop(seq, &spec, &charge, &[0u64])
+        .expect_err("lying load must fail the round");
+    assert!(
+        matches!(err, TransportError::AccountingMismatch { .. }),
+        "expected AccountingMismatch, got {err}"
+    );
+    drop(t);
+    handle.join().unwrap();
+}
+
+#[test]
+fn shuffle_diverging_fold_checksum_is_a_protocol_error() {
+    let (mut t, mut peer) = shuffle_pair();
+    let handle = std::thread::spawn(move || {
+        fake_ack_state(&mut peer);
+        let hop = peer.read();
+        let mut body = Vec::new();
+        body.extend_from_slice(&24u64.to_le_bytes()); // load is right...
+        body.extend_from_slice(&0xDEADu64.to_le_bytes()); // ...fold is not
+        peer.send(FrameKind::HopAck, hop.seq, &body);
+        peer.serve_shutdown();
+    });
+    let data = [7u32, 9].iter().flat_map(|v| v.to_le_bytes()).collect::<Vec<u8>>();
+    let hash = net::mirror_hash_of(4, &data);
+    t.sync_mirror(4, &data, hash).expect("mirror sync");
+    let spec = HopSpec {
+        label: "hop",
+        op: WireOp::MinU32,
+        include_self: true,
+    };
+    let mb = [24u64];
+    let charge = RoundCharge {
+        messages: 2,
+        bytes: 24,
+        machine_bytes: &mb,
+    };
+    let seq = t.begin_hop(&spec, &charge).expect("begin");
+    let err = t
+        .finish_hop(seq, &spec, &charge, &[1234u64])
+        .expect_err("a diverging fold must fail the round");
+    assert!(
+        matches!(err, TransportError::Protocol { .. }),
+        "expected Protocol, got {err}"
+    );
+    drop(t);
+    handle.join().unwrap();
+}
+
+/// Spawn one real `lcc worker` process connected to `addr` (the manual
+/// counterpart of `ProcTransport::spawn` for mixed real/fake topologies).
+/// The peer-connect deadline is shortened so refusal faults surface in
+/// milliseconds instead of the production retry window.
+fn spawn_real_worker(addr: std::net::SocketAddr) -> std::process::Child {
+    std::process::Command::new(worker_bin())
+        .arg("worker")
+        .arg("--connect")
+        .arg(addr.to_string())
+        .env("LCC_PEER_CONNECT_DEADLINE_MS", "300")
+        .stdin(std::process::Stdio::null())
+        .stdout(std::process::Stdio::null())
+        .stderr(std::process::Stdio::inherit())
+        .spawn()
+        .expect("spawn real worker")
+}
+
+#[test]
+fn shuffle_peer_connect_refused_is_typed() {
+    // fake worker 0 advertises a mesh port nobody listens on; real worker
+    // 1 must surface the refused peer connect as a typed error through
+    // the coordinator — not hang in the mesh setup.  Port 1 is reserved
+    // (unprivileged processes cannot bind it), so the refusal is
+    // deterministic even with parallel tests binding ephemeral ports.
+    let dead_port: u16 = 1;
+    let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+    let addr = listener.local_addr().unwrap();
+
+    // fake first: accept order assigns it worker id 0
+    let fake = std::thread::spawn(move || {
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut hello = PROTO_VERSION.to_le_bytes().to_vec();
+        hello.extend_from_slice(&std::process::id().to_le_bytes());
+        hello.extend_from_slice(&dead_port.to_le_bytes());
+        let mut w = stream.try_clone().unwrap();
+        net::write_frame(&mut w, FrameKind::Hello, 0, &hello).unwrap();
+        let mut r = stream.try_clone().unwrap();
+        let assign = net::read_frame(&mut r).unwrap();
+        assert_eq!(assign.kind, FrameKind::Assign);
+        let peers = net::read_frame(&mut r).unwrap();
+        assert_eq!(peers.kind, FrameKind::Peers);
+        net::write_frame(&mut w, FrameKind::PeersAck, peers.seq, &[]).unwrap();
+        stream
+    });
+    let (fake_side, _) = listener.accept().unwrap();
+    let mut child = spawn_real_worker(addr);
+    let (real_side, _) = listener.accept().unwrap();
+
+    let err = ShuffleTransport::from_connected(vec![fake_side, real_side])
+        .err()
+        .expect("refused peer connect must fail the mesh");
+    assert!(
+        matches!(err, TransportError::Protocol { .. }),
+        "expected Protocol, got {err}"
+    );
+    assert!(
+        err.to_string().contains("mesh setup failed"),
+        "unexpected detail: {err}"
+    );
+    let _ = fake.join().unwrap();
+    let _ = child.kill();
+    let _ = child.wait();
+}
+
+#[test]
+fn shuffle_corrupted_peer_frame_is_typed() {
+    // real worker 0 owns a shard and serves a hop; fake worker 1 answers
+    // the mesh shuffle with a corrupted PeerMsgs frame — the real worker
+    // must detect it (checksummed mesh frames) and fail the round typed.
+    let g = small_graph(2);
+    let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+    let addr = listener.local_addr().unwrap();
+
+    let mut child = spawn_real_worker(addr);
+    let (real_side, _) = listener.accept().unwrap();
+
+    let fake_mesh = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+    let fake_port = fake_mesh.local_addr().unwrap().port();
+    let fake = std::thread::spawn(move || {
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut hello = PROTO_VERSION.to_le_bytes().to_vec();
+        hello.extend_from_slice(&std::process::id().to_le_bytes());
+        hello.extend_from_slice(&fake_port.to_le_bytes());
+        let mut w = stream.try_clone().unwrap();
+        net::write_frame(&mut w, FrameKind::Hello, 0, &hello).unwrap();
+        let mut r = stream.try_clone().unwrap();
+        let assign = net::read_frame(&mut r).unwrap();
+        assert_eq!(assign.kind, FrameKind::Assign);
+
+        // mesh: worker 1 initiates to worker 0's advertised port
+        let peers = net::read_frame(&mut r).unwrap();
+        assert_eq!(peers.kind, FrameKind::Peers);
+        let real_mesh_port = {
+            // body: count u32 | (id u32, port u16) × count — find id 0
+            let mut port = 0u16;
+            let count = u32::from_le_bytes(peers.body[..4].try_into().unwrap()) as usize;
+            for i in 0..count {
+                let off = 4 + i * 6;
+                let id = u32::from_le_bytes(peers.body[off..off + 4].try_into().unwrap());
+                let p = u16::from_le_bytes(peers.body[off + 4..off + 6].try_into().unwrap());
+                if id == 0 {
+                    port = p;
+                }
+            }
+            port
+        };
+        let mesh = TcpStream::connect(("127.0.0.1", real_mesh_port)).unwrap();
+        {
+            let mut mw = mesh.try_clone().unwrap();
+            net::write_frame(&mut mw, FrameKind::PeerHello, 0, &1u32.to_le_bytes()).unwrap();
+        }
+        net::write_frame(&mut w, FrameKind::PeersAck, peers.seq, &[]).unwrap();
+
+        // shard custody for machine 1, answered honestly
+        let load = net::read_frame(&mut r).unwrap();
+        assert_eq!(load.kind, FrameKind::LoadShard);
+        let image = &load.body[12..];
+        let (edges, checksum) = lcc::graph::spill::read_shard_bytes(
+            image,
+            1,
+            2,
+            Path::new("<test>"),
+        )
+        .unwrap();
+        let stats = lcc::graph::spill::ShardStats::from_edges(&edges, 2, 1);
+        let mut body = Vec::new();
+        body.extend_from_slice(&1u32.to_le_bytes());
+        body.extend_from_slice(&stats.len.to_le_bytes());
+        body.extend_from_slice(&checksum.to_le_bytes());
+        body.extend_from_slice(&2u32.to_le_bytes());
+        for &c in &stats.peer_counts {
+            body.extend_from_slice(&c.to_le_bytes());
+        }
+        net::write_frame(&mut w, FrameKind::LoadAck, load.seq, &body).unwrap();
+
+        // mirror + hop descriptor
+        let sync = net::read_frame(&mut r).unwrap();
+        assert_eq!(sync.kind, FrameKind::StateSync);
+        let hash = net::mirror_hash_of(sync.body[0], &sync.body[9..]);
+        net::write_frame(&mut w, FrameKind::StateAck, sync.seq, &hash.to_le_bytes()).unwrap();
+        let hop = net::read_frame(&mut r).unwrap();
+        assert_eq!(hop.kind, FrameKind::HopRound);
+
+        // the real worker ships its bucket for machine 1...
+        let mut mr = mesh.try_clone().unwrap();
+        let msgs = net::read_frame(&mut mr).unwrap();
+        assert_eq!(msgs.kind, FrameKind::PeerMsgs);
+
+        // ...and we answer with a corrupted frame: one flipped payload bit
+        let mut buf = Vec::new();
+        net::write_frame(&mut buf, FrameKind::PeerMsgs, hop.seq, &[0u8; 24]).unwrap();
+        let last = buf.len() - 1;
+        buf[last] ^= 0x40;
+        let mut raw = mesh.try_clone().unwrap();
+        raw.write_all(&buf).unwrap();
+        raw.flush().unwrap();
+
+        // ack our own side of the round (the coordinator reads every ack
+        // before judging, so the real worker's WorkerErr wins attribution)
+        let mut body = Vec::new();
+        body.extend_from_slice(&0u64.to_le_bytes());
+        body.extend_from_slice(&0u64.to_le_bytes());
+        net::write_frame(&mut w, FrameKind::HopAck, hop.seq, &body).unwrap();
+
+        // the real worker's WorkerErr goes to the coordinator; we just
+        // linger until teardown
+        let _ = net::read_frame(&mut r);
+        (stream, mesh)
+    });
+
+    // the fake's coordinator stream was accepted second (the real worker
+    // connected before the fake thread started)
+    let (fake_side, _) = listener.accept().unwrap();
+    let mut t =
+        ShuffleTransport::from_connected(vec![real_side, fake_side]).expect("mesh up");
+    t.establish_custody(&g).expect("custody");
+    let data: Vec<u8> = (0..g.num_vertices() as u32)
+        .flat_map(|v| v.to_le_bytes())
+        .collect();
+    let hash = net::mirror_hash_of(4, &data);
+    t.sync_mirror(4, &data, hash).expect("mirror");
+    let charge_round = g.hop_charge(12, true);
+    let spec = HopSpec {
+        label: "hop",
+        op: WireOp::MinU32,
+        include_self: true,
+    };
+    let charge = RoundCharge {
+        messages: charge_round.messages,
+        bytes: charge_round.bytes,
+        machine_bytes: &charge_round.machine_bytes,
+    };
+    let seq = t.begin_hop(&spec, &charge).expect("begin");
+    let err = t
+        .finish_hop(seq, &spec, &charge, &vec![0u64; 2])
+        .expect_err("corrupted peer frame must fail the round");
+    assert!(
+        matches!(err, TransportError::Protocol { .. }),
+        "expected Protocol (worker-detected mesh corruption), got {err}"
+    );
+    assert!(
+        err.to_string().contains("checksum"),
+        "unexpected detail: {err}"
+    );
+    drop(t);
+    let _ = fake.join();
+    let _ = child.kill();
+    let _ = child.wait();
 }
 
 /// `exchange` used directly (same entry the simulator uses) must also

@@ -1,0 +1,116 @@
+#!/usr/bin/env python3
+"""Diff a fresh `lcc perf` JSON artifact against checked-in baselines.
+
+Usage: bench_compare.py FRESH.json BASELINE.json [BASELINE2.json ...]
+
+Gate: fail (exit 1) on a >25% regression in either
+  * wall time  — a bench's `median_s` vs the same-named bench in a
+    baseline, or
+  * rounds     — the `round_breakdown.rounds` count of a run recorded in
+    both artifacts for the same algo/machines/transport.
+
+Baselines that are missing, still `pending-first-measurement`, or have no
+overlapping benches produce a warning and exit 0 — the gate arms itself
+the first time CI lands real numbers in BENCH_PR*.json.
+"""
+
+import json
+import sys
+
+THRESHOLD = 1.25
+
+
+def load(path):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"bench_compare: cannot read {path}: {e}", file=sys.stderr)
+        return None
+
+
+def bench_index(doc):
+    """name -> median_s for measured benches (skip non-numeric/zero)."""
+    out = {}
+    for b in doc.get("benches", []):
+        name, median = b.get("name"), b.get("median_s")
+        if isinstance(name, str) and isinstance(median, (int, float)) and median > 0:
+            out[name] = float(median)
+    return out
+
+
+def breakdown_key(doc):
+    bd = doc.get("round_breakdown")
+    if not isinstance(bd, dict):
+        return None, None
+    key = (bd.get("algo"), bd.get("machines"), bd.get("transport"))
+    rounds = bd.get("rounds")
+    return key, len(rounds) if isinstance(rounds, list) else None
+
+
+def main(argv):
+    if len(argv) < 3:
+        print(__doc__.strip(), file=sys.stderr)
+        return 2
+    fresh_path, baseline_paths = argv[1], argv[2:]
+    fresh = load(fresh_path)
+    if fresh is None:
+        print("bench_compare: no fresh artifact; nothing to gate", file=sys.stderr)
+        return 1
+    fresh_benches = bench_index(fresh)
+    fresh_bd_key, fresh_rounds = breakdown_key(fresh)
+
+    regressions = []
+    compared = 0
+    for path in baseline_paths:
+        base = load(path)
+        if base is None:
+            print(f"bench_compare: WARNING: baseline {path} missing — skipped")
+            continue
+        if base.get("status") == "pending-first-measurement" or not base.get("benches"):
+            print(
+                f"bench_compare: WARNING: baseline {path} has no measurements yet "
+                "(pending) — skipped"
+            )
+            continue
+        for name, base_median in bench_index(base).items():
+            if name not in fresh_benches:
+                continue
+            compared += 1
+            ratio = fresh_benches[name] / base_median
+            if ratio > THRESHOLD:
+                regressions.append(
+                    f"{name}: {fresh_benches[name]:.4f}s vs baseline "
+                    f"{base_median:.4f}s ({path}) — {ratio:.2f}x"
+                )
+        base_bd_key, base_rounds = breakdown_key(base)
+        if (
+            base_bd_key is not None
+            and base_bd_key == fresh_bd_key
+            and base_rounds
+            and fresh_rounds
+        ):
+            compared += 1
+            if fresh_rounds > base_rounds * THRESHOLD:
+                regressions.append(
+                    f"round count: {fresh_rounds} vs baseline {base_rounds} "
+                    f"({path}) — {fresh_rounds / base_rounds:.2f}x"
+                )
+
+    if compared == 0:
+        print(
+            "bench_compare: WARNING: no comparable measurements in any baseline — "
+            "no-op until CI fills BENCH_PR*.json"
+        )
+        return 0
+    if regressions:
+        print(f"bench_compare: {len(regressions)} regression(s) over 25%:")
+        for r in regressions:
+            print(f"  REGRESSION {r}")
+        return 1
+    print(f"bench_compare: OK — {compared} comparison(s), none above 25%")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
