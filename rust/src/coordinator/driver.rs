@@ -58,6 +58,24 @@ pub struct RunConfig {
     pub worker_bin: Option<std::path::PathBuf>,
     /// Cross-check the labels against the sequential oracle.
     pub verify: bool,
+    /// Socket I/O timeout in seconds (`--io-timeout`); `None` = the
+    /// environment (`LCC_IO_TIMEOUT_MS`) or [`crate::mpc::net::IO_TIMEOUT`].
+    pub io_timeout_secs: Option<u64>,
+    /// Worker mesh connect attempt budget, exponential backoff
+    /// (`--connect-retries`); `None` = environment or default.
+    pub connect_retries: Option<usize>,
+    /// Deterministic fault plan (`--fault-plan`,
+    /// e.g. `"kill:w2@round=3,delay:w1@round=5"`), shipped to the
+    /// spawned workers through their environment.
+    pub fault_plan: Option<String>,
+    /// Worker respawn attempts per recovery (`--respawn-budget`; 0
+    /// disables recovery — a dead worker is then terminal).  `None` =
+    /// environment or default.
+    pub respawn_budget: Option<usize>,
+    /// Persist per-generation run checkpoints into this directory
+    /// (`--checkpoint-dir`); `None` = a run-private temp dir whenever
+    /// recovery is enabled on the shuffle transport.
+    pub checkpoint_dir: Option<std::path::PathBuf>,
 }
 
 impl Default for RunConfig {
@@ -78,6 +96,11 @@ impl Default for RunConfig {
             transport: TransportMode::InProc,
             worker_bin: None,
             verify: false,
+            io_timeout_secs: None,
+            connect_retries: None,
+            fault_plan: None,
+            respawn_budget: None,
+            checkpoint_dir: None,
         }
     }
 }
@@ -218,16 +241,63 @@ impl Driver {
                 }),
             }
         };
+        // CLI flags overlay the environment; the environment overlays the
+        // compiled-in defaults (see NetConfig::from_env).
+        let net_cfg = || {
+            let mut c = crate::mpc::net::NetConfig::from_env();
+            if let Some(secs) = self.cfg.io_timeout_secs {
+                c.io_timeout = std::time::Duration::from_secs(secs);
+            }
+            if let Some(n) = self.cfg.connect_retries {
+                c.connect_retries = n;
+            }
+            if self.cfg.fault_plan.is_some() {
+                c.fault_plan = self.cfg.fault_plan.clone();
+            }
+            if let Some(n) = self.cfg.respawn_budget {
+                c.respawn_budget = n;
+            }
+            if self.cfg.checkpoint_dir.is_some() {
+                c.checkpoint_dir = self.cfg.checkpoint_dir.clone();
+            }
+            c
+        };
         match self.cfg.transport {
             TransportMode::InProc => Ok(Simulator::new(mpc)),
             TransportMode::Proc => {
-                let mut transport = ProcTransport::spawn(self.cfg.machines.max(1), &worker_bin()?)?;
+                let mut transport = ProcTransport::spawn_with(
+                    self.cfg.machines.max(1),
+                    &worker_bin()?,
+                    net_cfg(),
+                )?;
                 transport.load_graph(g)?;
                 Ok(Simulator::with_transport(mpc, Box::new(transport)))
             }
             TransportMode::Shuffle => {
-                let mut transport =
-                    ShuffleTransport::spawn(self.cfg.machines.max(1), &worker_bin()?)?;
+                let cfg = net_cfg();
+                let recovery_on = cfg.respawn_budget > 0;
+                let checkpoint_root = cfg.checkpoint_dir.clone();
+                let mut transport = ShuffleTransport::spawn_with(
+                    self.cfg.machines.max(1),
+                    &worker_bin()?,
+                    cfg,
+                )?;
+                if recovery_on {
+                    // Recovery re-ships custody from the checkpointed spill
+                    // files, so checkpointing is on whenever respawn is.
+                    let dir = match checkpoint_root {
+                        Some(d) => {
+                            std::fs::create_dir_all(&d).map_err(|e| TransportError::Io {
+                                worker: None,
+                                op: "create checkpoint dir",
+                                source: e,
+                            })?;
+                            crate::graph::spill::SpillDir::adopt(d)
+                        }
+                        None => crate::graph::spill::SpillDir::create_temp(None)?,
+                    };
+                    transport.set_checkpoint(dir, Rng::new(self.cfg.seed).state());
+                }
                 transport.load_graph(g)?;
                 Ok(Simulator::with_transport(mpc, Box::new(transport)))
             }

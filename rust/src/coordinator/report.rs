@@ -1,6 +1,7 @@
 //! Run reports: the JSON/text record every harness run emits.
 
 use crate::cc::CcResult;
+use crate::mpc::RecoveryMetrics;
 use crate::util::json::Json;
 
 /// Everything a single algorithm run produced.
@@ -27,6 +28,9 @@ pub struct Report {
     pub xla_calls: u64,
     /// Round transport the run shuffled on (`"inproc"` / `"proc"`).
     pub transport: String,
+    /// Worker-recovery log (shuffle transport; empty for undisturbed
+    /// runs).  Observability only — never part of bit-identity.
+    pub recovery: RecoveryMetrics,
 }
 
 impl Report {
@@ -71,6 +75,7 @@ impl Report {
             verified: None,
             xla_calls: 0,
             transport: "inproc".to_string(),
+            recovery: res.metrics.recovery.clone(),
         }
     }
 
@@ -100,12 +105,41 @@ impl Report {
             )
             .set("xla_calls", self.xla_calls)
             .set("transport", self.transport.as_str())
+            .set(
+                "recovery",
+                Json::obj()
+                    .set("replayed_rounds", self.recovery.replayed_rounds)
+                    .set("total_ms", self.recovery.total_ms)
+                    .set(
+                        "events",
+                        Json::Arr(
+                            self.recovery
+                                .events
+                                .iter()
+                                .map(|e| {
+                                    Json::obj()
+                                        .set("label", e.label.as_str())
+                                        .set(
+                                            "worker",
+                                            match e.worker {
+                                                None => Json::Null,
+                                                Some(w) => Json::from(w),
+                                            },
+                                        )
+                                        .set("cause", e.cause.as_str())
+                                        .set("respawn_attempts", e.respawn_attempts)
+                                        .set("wall_ms", e.wall_ms)
+                                })
+                                .collect(),
+                        ),
+                    ),
+            )
     }
 
     /// One-line human summary.
     pub fn summary(&self) -> String {
         format!(
-            "{:<22} {:>9} comps  {:>3} phases  {:>4} rounds  {:>12} shuffle-B  {:>9.1} ms{}{}",
+            "{:<22} {:>9} comps  {:>3} phases  {:>4} rounds  {:>12} shuffle-B  {:>9.1} ms{}{}{}",
             format!("{}/{}", self.algorithm, self.dataset),
             self.num_components,
             self.phases,
@@ -117,6 +151,11 @@ impl Report {
                 Some(true) => "  [verified]",
                 Some(false) => "  [VERIFY-FAILED]",
                 None => "",
+            },
+            if self.recovery.events.is_empty() {
+                String::new()
+            } else {
+                format!("  [recovered x{}]", self.recovery.events.len())
             },
         )
     }

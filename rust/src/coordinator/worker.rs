@@ -32,9 +32,21 @@
 //! I/O failures end the process.  A dead peer is an immediate typed
 //! error, not a hang: every mesh socket has a dedicated reader thread
 //! (EOF/corruption surfaces the moment it happens), writes carry the
-//! shared [`net::IO_TIMEOUT`], and mesh waits are bounded by the same
-//! timeout.  EOF at a coordinator frame boundary means the coordinator
-//! is gone: exit cleanly.
+//! shared I/O timeout ([`net::IO_TIMEOUT`] unless the coordinator
+//! shipped `LCC_IO_TIMEOUT_MS`, the `--io-timeout` flag), and mesh
+//! waits are bounded by the same timeout.  EOF at a coordinator frame
+//! boundary means the coordinator is gone: exit cleanly.  A *panic*
+//! anywhere in the serve loop is caught, answered as a `WorkerErr`
+//! carrying the panic message, and exits the process nonzero — the
+//! coordinator sees the cause, never an opaque short read.
+//!
+//! **Deterministic fault injection.**  `LCC_FAULT_PLAN` (the
+//! `--fault-plan` flag, shipped through the spawn environment) names
+//! kill/delay actions per worker at exact protocol sites
+//! ([`net::FaultPlan`]); this worker enacts its own actions — exit
+//! before serving its n-th round frame, or immediately after acking its
+//! n-th `Rewire` (the generation boundary).  The chaos suite drives
+//! recovery through these, bit-identically reproducible.
 
 use std::io::{BufReader, BufWriter};
 use std::net::{TcpListener, TcpStream};
@@ -51,19 +63,29 @@ use crate::mpc::pool::chunk_range;
 use crate::mpc::simulator::machine_of;
 use crate::mpc::transport::{TransportError, WireOp};
 
-/// How long a worker keeps retrying a peer connect before reporting the
-/// refusal (covers the race where a peer has not yet processed `Peers`;
-/// its listener is bound since startup, so real refusals persist).
-/// Overridable via `LCC_PEER_CONNECT_DEADLINE_MS` (fault tests shorten
-/// it so a refused connect surfaces in milliseconds).
-const PEER_CONNECT_DEADLINE: Duration = Duration::from_secs(5);
+/// Per-peer connect attempt budget (covers the race where a peer has
+/// not yet processed `Peers`; its listener is bound since startup, so
+/// real refusals persist through the backoff).  `LCC_CONNECT_RETRIES`
+/// (the `--connect-retries` flag) overrides — fault tests shrink it so
+/// a refused connect surfaces in milliseconds.  Backoff doubles from
+/// [`net::CONNECT_BACKOFF_MS`] per attempt.
+fn connect_retries() -> usize {
+    std::env::var("LCC_CONNECT_RETRIES")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .unwrap_or(net::DEFAULT_CONNECT_RETRIES)
+        .max(1)
+}
 
-fn peer_connect_deadline() -> Duration {
-    std::env::var("LCC_PEER_CONNECT_DEADLINE_MS")
+/// The worker-side I/O timeout: [`net::IO_TIMEOUT`] unless the
+/// coordinator shipped `LCC_IO_TIMEOUT_MS` (the `--io-timeout` flag).
+fn io_timeout() -> Duration {
+    std::env::var("LCC_IO_TIMEOUT_MS")
         .ok()
         .and_then(|s| s.parse::<u64>().ok())
+        .filter(|&ms| ms > 0)
         .map(Duration::from_millis)
-        .unwrap_or(PEER_CONNECT_DEADLINE)
+        .unwrap_or(net::IO_TIMEOUT)
 }
 /// How long a worker waits for all inbound peer connections.
 const MESH_ACCEPT_DEADLINE: Duration = Duration::from_secs(20);
@@ -83,13 +105,15 @@ struct Mesh {
     /// Writer half per peer; `None` at this worker's own index.
     links: Vec<Option<BufWriter<TcpStream>>>,
     rx: mpsc::Receiver<PeerEvent>,
+    /// The effective I/O timeout, captured once at mesh setup.
+    timeout: Duration,
 }
 
 impl Mesh {
     /// Wait for the next peer event, bounding the wait by the shared I/O
     /// timeout so a wedged mesh is a typed error, not a hang.
     fn recv(&self) -> Result<PeerEvent, TransportError> {
-        match self.rx.recv_timeout(net::IO_TIMEOUT) {
+        match self.rx.recv_timeout(self.timeout) {
             Ok(ev) => Ok(ev),
             Err(mpsc::RecvTimeoutError::Timeout) => Err(TransportError::Io {
                 worker: None,
@@ -150,7 +174,7 @@ pub fn serve(stream: TcpStream) -> Result<(), TransportError> {
     // a coordinator that stops draining must not block an ack write
     // forever; reads stay untimed — idling between rounds is normal
     stream
-        .set_write_timeout(Some(net::IO_TIMEOUT))
+        .set_write_timeout(Some(io_timeout()))
         .map_err(|e| TransportError::Io {
             worker: None,
             op: "set write timeout",
@@ -212,33 +236,116 @@ pub fn serve(stream: TcpStream) -> Result<(), TransportError> {
         mirror: Vec::new(),
         mirror_vb: 0,
     };
+    // this worker's slice of the deterministic fault plan (the id is
+    // only known post-Assign, so the plan parses here)
+    let faults = match std::env::var("LCC_FAULT_PLAN") {
+        Ok(s) if !s.is_empty() => match net::FaultPlan::parse(&s) {
+            Ok(plan) => plan.for_worker(worker_id as usize),
+            Err(detail) => {
+                let msg = format!("bad LCC_FAULT_PLAN: {detail}");
+                worker_err(&mut writer, 0, &msg)?;
+                return Err(TransportError::Protocol {
+                    worker: None,
+                    detail: msg,
+                });
+            }
+        },
+        _ => Vec::new(),
+    };
 
+    // A panic anywhere in the serve loop must reach the coordinator as
+    // its message, not as an opaque ShortRead when the process dies with
+    // the socket: catch it, answer WorkerErr, exit nonzero via Err.
+    let served = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        serve_loop(&mut state, &faults, &mut reader, &mut writer)
+    }));
+    match served {
+        Ok(result) => result,
+        Err(payload) => {
+            let msg = if let Some(s) = payload.downcast_ref::<&str>() {
+                (*s).to_string()
+            } else if let Some(s) = payload.downcast_ref::<String>() {
+                s.clone()
+            } else {
+                "non-string panic payload".to_string()
+            };
+            let detail = format!("worker panicked: {msg}");
+            let _ = worker_err(&mut writer, 0, &detail);
+            Err(TransportError::Protocol {
+                worker: None,
+                detail,
+            })
+        }
+    }
+}
+
+fn serve_loop(
+    state: &mut WorkerState,
+    faults: &[net::FaultAction],
+    reader: &mut BufReader<TcpStream>,
+    writer: &mut BufWriter<TcpStream>,
+) -> Result<(), TransportError> {
+    // 1-based fault-site counters: round frames served, rewires acked
+    let mut rounds_served = 0u64;
+    let mut gens_acked = 0u64;
     loop {
-        let frame = match net::read_frame(&mut reader) {
+        let frame = match net::read_frame(reader) {
             Ok(f) => f,
             // EOF at a frame boundary: the coordinator dropped the
             // connection (its transport was dropped) — clean exit.
             Err(TransportError::ShortRead { got: 0, .. }) => return Ok(()),
             Err(e) => return Err(e),
         };
+        if matches!(
+            frame.kind,
+            FrameKind::Round | FrameKind::HopRound | FrameKind::Rewire
+        ) {
+            rounds_served += 1;
+            enact_faults(faults, net::FaultSite::Round(rounds_served));
+        }
         match frame.kind {
-            FrameKind::LoadShard => handle_load(&mut state, &frame, &mut writer)?,
-            FrameKind::Round => handle_round(&state, &frame, &mut writer)?,
-            FrameKind::Peers => handle_peers(&mut state, &frame, &mut writer)?,
-            FrameKind::StateSync => handle_state_sync(&mut state, &frame, &mut writer)?,
-            FrameKind::HopRound => handle_hop(&mut state, &frame, &mut writer)?,
-            FrameKind::Rewire => handle_rewire(&mut state, &frame, &mut writer)?,
+            FrameKind::LoadShard => handle_load(state, &frame, writer)?,
+            FrameKind::Round => handle_round(state, &frame, writer)?,
+            FrameKind::Peers => handle_peers(state, &frame, writer)?,
+            FrameKind::StateSync => handle_state_sync(state, &frame, writer)?,
+            FrameKind::HopRound => handle_hop(state, &frame, writer)?,
+            FrameKind::Rewire => {
+                handle_rewire(state, &frame, writer)?;
+                // the generation boundary: custody advanced and the ack
+                // is flushed — a gen-site kill dies exactly here
+                gens_acked += 1;
+                enact_faults(faults, net::FaultSite::Gen(gens_acked));
+            }
+            FrameKind::Ping => {
+                net::write_frame(writer, FrameKind::Pong, frame.seq, &[])?;
+            }
             FrameKind::Shutdown => {
-                net::write_frame(&mut writer, FrameKind::Bye, frame.seq, &[])?;
+                net::write_frame(writer, FrameKind::Bye, frame.seq, &[])?;
                 return Ok(());
             }
             other => {
                 worker_err(
-                    &mut writer,
+                    writer,
                     frame.seq,
                     &format!("unexpected frame kind {other:?}"),
                 )?;
             }
+        }
+    }
+}
+
+/// Enact this worker's fault-plan actions matching `site`: `kill` exits
+/// the process on the spot (sockets drop mid-protocol — the coordinator
+/// sees a crash); `delay` sleeps 100 ms, exercising the timeout/backoff
+/// paths without a casualty.
+fn enact_faults(faults: &[net::FaultAction], site: net::FaultSite) {
+    for f in faults {
+        if f.site != site {
+            continue;
+        }
+        match f.kind {
+            net::FaultKind::Kill => std::process::exit(17),
+            net::FaultKind::Delay => std::thread::sleep(Duration::from_millis(100)),
         }
     }
 }
@@ -365,6 +472,7 @@ fn register_peer(
     tx: &mpsc::Sender<PeerEvent>,
     from: usize,
     sock: TcpStream,
+    timeout: Duration,
 ) -> Result<(), TransportError> {
     let io = |op: &'static str| {
         move |e: std::io::Error| TransportError::Io {
@@ -376,7 +484,7 @@ fn register_peer(
     sock.set_nodelay(true).map_err(io("peer nodelay"))?;
     // peer writes carry the same timeout as coordinator links: a peer
     // that stops draining is a typed error, not a hang
-    sock.set_write_timeout(Some(net::IO_TIMEOUT))
+    sock.set_write_timeout(Some(timeout))
         .map_err(io("peer write timeout"))?;
     // reads have no socket timeout: the dedicated reader thread blocks
     // legitimately between rounds; round waits are bounded by Mesh::recv
@@ -412,16 +520,23 @@ fn setup_mesh(
 ) -> Result<Mesh, TransportError> {
     let (tx, rx) = mpsc::channel();
     let mut links: Vec<Option<BufWriter<TcpStream>>> = (0..p).map(|_| None).collect();
+    let timeout = io_timeout();
+    let retries = connect_retries();
 
-    // outbound: worker `my` initiates to every j < my
+    // outbound: worker `my` initiates to every j < my, retrying with
+    // exponential backoff up to the configured attempt budget
     for (j, &port) in ports.iter().enumerate().take(my) {
-        let deadline = Instant::now() + peer_connect_deadline();
+        let mut attempt = 0usize;
         let sock = loop {
             match TcpStream::connect(("127.0.0.1", port)) {
                 Ok(s) => break s,
-                Err(e) if Instant::now() < deadline => {
+                Err(e) if attempt + 1 < retries => {
                     let _ = e;
-                    std::thread::sleep(Duration::from_millis(10));
+                    let shift = attempt.min(16) as u32;
+                    std::thread::sleep(Duration::from_millis(
+                        net::CONNECT_BACKOFF_MS << shift,
+                    ));
+                    attempt += 1;
                 }
                 Err(e) => {
                     return Err(TransportError::Io {
@@ -432,7 +547,7 @@ fn setup_mesh(
                 }
             }
         };
-        sock.set_write_timeout(Some(net::IO_TIMEOUT))
+        sock.set_write_timeout(Some(timeout))
             .map_err(|e| TransportError::Io {
                 worker: Some(j),
                 op: "peer write timeout",
@@ -446,7 +561,7 @@ fn setup_mesh(
             })?;
             net::write_frame(&mut w, FrameKind::PeerHello, 0, &(my as u32).to_le_bytes())?;
         }
-        register_peer(&mut links, &tx, j, sock)?;
+        register_peer(&mut links, &tx, j, sock, timeout)?;
     }
 
     // inbound: every j > my connects to us
@@ -468,7 +583,7 @@ fn setup_mesh(
                     source: e,
                 })?;
                 // bound the hello read; cleared again by register_peer
-                sock.set_read_timeout(Some(net::IO_TIMEOUT))
+                sock.set_read_timeout(Some(timeout))
                     .map_err(|e| TransportError::Io {
                         worker: None,
                         op: "peer hello timeout",
@@ -497,7 +612,7 @@ fn setup_mesh(
                         detail: format!("peer {from} must not initiate to worker {my}"),
                     });
                 }
-                register_peer(&mut links, &tx, from, sock)?;
+                register_peer(&mut links, &tx, from, sock, timeout)?;
                 pending -= 1;
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -520,7 +635,7 @@ fn setup_mesh(
             }
         }
     }
-    Ok(Mesh { links, rx })
+    Ok(Mesh { links, rx, timeout })
 }
 
 /// `Peers`: establish the worker↔worker mesh from the roster.

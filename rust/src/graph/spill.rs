@@ -849,7 +849,41 @@ pub struct Manifest {
     pub shards: Vec<ManifestShard>,
 }
 
-/// Serialize + write a manifest (body FNV-checksummed like the shards).
+/// Crash-consistent file replacement: write the full image to a sibling
+/// `.tmp` file, fsync it, then atomically rename over `path`.  A crash at
+/// any point leaves either the old file intact or the new one complete —
+/// never a torn mix — which is what lets the manifest double as a
+/// recovery checkpoint.
+pub fn write_atomic(path: &Path, bytes: &[u8]) -> Result<(), SpillError> {
+    let tmp = match (path.parent(), path.file_name()) {
+        (Some(dir), Some(name)) => {
+            let mut t = name.to_os_string();
+            t.push(".tmp");
+            dir.join(t)
+        }
+        _ => {
+            return Err(SpillError::Corrupt {
+                path: path.to_path_buf(),
+                detail: "atomic write target has no parent directory".into(),
+            })
+        }
+    };
+    let write = || -> std::io::Result<()> {
+        let f = File::create(&tmp)?;
+        let mut w = BufWriter::new(f);
+        w.write_all(bytes)?;
+        w.flush()?;
+        // fsync before the rename: the rename must never become durable
+        // ahead of the data it points at
+        w.get_ref().sync_all()
+    };
+    write().map_err(|e| SpillError::io(&tmp, "write", e))?;
+    fs::rename(&tmp, path).map_err(|e| SpillError::io(path, "rename", e))
+}
+
+/// Serialize + write a manifest (body FNV-checksummed like the shards),
+/// via tmp-write + fsync + atomic rename: a crash mid-write can never
+/// leave a torn manifest in place of a valid one.
 pub fn write_manifest(path: &Path, m: &Manifest) -> Result<(), SpillError> {
     let mut body: Vec<u8> = Vec::new();
     body.extend_from_slice(&m.n.to_le_bytes());
@@ -864,15 +898,11 @@ pub fn write_manifest(path: &Path, m: &Manifest) -> Result<(), SpillError> {
     let mut h = Fnv1a::new();
     h.update(&body);
     let h = h.finish();
-    let f = File::create(path).map_err(|e| SpillError::io(path, "create", e))?;
-    let mut w = BufWriter::new(f);
-    let write = |w: &mut BufWriter<File>| -> std::io::Result<()> {
-        w.write_all(MANIFEST_MAGIC)?;
-        w.write_all(&body)?;
-        w.write_all(&h.to_le_bytes())?;
-        w.flush()
-    };
-    write(&mut w).map_err(|e| SpillError::io(path, "write", e))
+    let mut image = Vec::with_capacity(8 + body.len() + 8);
+    image.extend_from_slice(MANIFEST_MAGIC);
+    image.extend_from_slice(&body);
+    image.extend_from_slice(&h.to_le_bytes());
+    write_atomic(path, &image)
 }
 
 /// Read + validate a manifest (magic, exact length, body checksum).
@@ -944,6 +974,131 @@ pub fn read_manifest(path: &Path) -> Result<Manifest, SpillError> {
         n,
         p: p as u32,
         shards,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// per-generation run checkpoint (fault-tolerant shuffle recovery)
+
+/// Magic of a persisted run checkpoint.
+pub const CHECKPOINT_MAGIC: &[u8; 8] = b"LCCCKPT1";
+/// File name of the checkpoint inside a checkpoint directory.
+pub const CHECKPOINT_NAME: &str = "checkpoint.lcc";
+
+/// Coordinator-side recovery state at one contraction generation
+/// boundary: which graph generation the workers hold custody of (its
+/// shard files live in `custody_dir`, in the spill framing), the content
+/// hash of the value mirror, the run's RNG stream position, and the
+/// transport round counter.  Written via [`write_atomic`] at every
+/// custody change — a crash mid-write leaves the previous checkpoint
+/// valid.
+///
+/// Layout: `LCCCKPT1 | generation u64 | machines u32 | mirror u8 |
+/// mirror_hash u64 | rng_state 4×u64 | rounds u64 | dir_len u32 |
+/// custody_dir | fnv1a64(body) u64`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunCheckpoint {
+    /// Generation id of the [`crate::graph::ShardedGraph`] checkpointed.
+    pub generation: u64,
+    pub machines: u32,
+    /// Content hash of the worker value mirror (`None` before any sync).
+    pub mirror_hash: Option<u64>,
+    /// The run RNG's stream position (Xoshiro256++ state words).
+    pub rng_state: [u64; 4],
+    /// Transport round counter at the boundary (replayed rounds are
+    /// charged once; this pins where the charge log stood).
+    pub rounds: u64,
+    /// Name of the per-generation shard directory, relative to the
+    /// checkpoint directory (`gen-<generation>`).
+    pub custody_dir: String,
+}
+
+/// Serialize + write a run checkpoint atomically ([`write_atomic`]).
+pub fn write_checkpoint(path: &Path, c: &RunCheckpoint) -> Result<(), SpillError> {
+    let dir = c.custody_dir.as_bytes();
+    let mut body: Vec<u8> = Vec::with_capacity(8 + 4 + 1 + 8 + 32 + 8 + 4 + dir.len());
+    body.extend_from_slice(&c.generation.to_le_bytes());
+    body.extend_from_slice(&c.machines.to_le_bytes());
+    body.push(u8::from(c.mirror_hash.is_some()));
+    body.extend_from_slice(&c.mirror_hash.unwrap_or(0).to_le_bytes());
+    for w in c.rng_state {
+        body.extend_from_slice(&w.to_le_bytes());
+    }
+    body.extend_from_slice(&c.rounds.to_le_bytes());
+    body.extend_from_slice(&(dir.len() as u32).to_le_bytes());
+    body.extend_from_slice(dir);
+    let mut h = Fnv1a::new();
+    h.update(&body);
+    let h = h.finish();
+    let mut image = Vec::with_capacity(8 + body.len() + 8);
+    image.extend_from_slice(CHECKPOINT_MAGIC);
+    image.extend_from_slice(&body);
+    image.extend_from_slice(&h.to_le_bytes());
+    write_atomic(path, &image)
+}
+
+/// Read + validate a run checkpoint (magic, exact length, checksum).
+pub fn read_checkpoint(path: &Path) -> Result<RunCheckpoint, SpillError> {
+    let bytes = fs::read(path).map_err(|e| SpillError::io(path, "read", e))?;
+    const FIXED: usize = 8 + 4 + 1 + 8 + 32 + 8 + 4;
+    if bytes.len() < 8 + FIXED + 8 {
+        return Err(SpillError::Truncated {
+            path: path.to_path_buf(),
+            expected_bytes: (8 + FIXED + 8) as u64,
+            actual_bytes: bytes.len() as u64,
+        });
+    }
+    if &bytes[..8] != CHECKPOINT_MAGIC {
+        return Err(SpillError::BadMagic {
+            path: path.to_path_buf(),
+        });
+    }
+    let body = &bytes[8..bytes.len() - 8];
+    let mut fnv = Fnv1a::new();
+    fnv.update(body);
+    let h = fnv.finish();
+    let stored = u64::from_le_bytes(bytes[bytes.len() - 8..].try_into().unwrap());
+    if h != stored {
+        return Err(SpillError::ChecksumMismatch {
+            path: path.to_path_buf(),
+            expected: stored,
+            actual: h,
+        });
+    }
+    let corrupt = |detail: String| SpillError::Corrupt {
+        path: path.to_path_buf(),
+        detail,
+    };
+    let u64_at = |off: usize| -> u64 { u64::from_le_bytes(body[off..off + 8].try_into().unwrap()) };
+    let generation = u64_at(0);
+    let machines = u32::from_le_bytes(body[8..12].try_into().unwrap());
+    let mirror_hash = match body[12] {
+        0 => None,
+        1 => Some(u64_at(13)),
+        tag => return Err(corrupt(format!("bad mirror-presence tag {tag}"))),
+    };
+    let mut rng_state = [0u64; 4];
+    for (i, w) in rng_state.iter_mut().enumerate() {
+        *w = u64_at(21 + 8 * i);
+    }
+    let rounds = u64_at(53);
+    let dir_len = u32::from_le_bytes(body[61..65].try_into().unwrap()) as usize;
+    if body.len() != FIXED + dir_len {
+        return Err(corrupt(format!(
+            "checkpoint body is {} bytes, inconsistent with dir_len={dir_len}",
+            body.len()
+        )));
+    }
+    let custody_dir = std::str::from_utf8(&body[65..])
+        .map_err(|_| corrupt("custody dir name is not UTF-8".into()))?
+        .to_string();
+    Ok(RunCheckpoint {
+        generation,
+        machines,
+        mirror_hash,
+        rng_state,
+        rounds,
+        custody_dir,
     })
 }
 
@@ -1096,6 +1251,67 @@ mod tests {
             read_manifest(&path),
             Err(SpillError::ChecksumMismatch { .. })
         ));
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_and_corruption() {
+        let dir = tmp();
+        let c = RunCheckpoint {
+            generation: 42,
+            machines: 4,
+            mirror_hash: Some(0xdead_beef_cafe_f00d),
+            rng_state: [1, 2, 3, u64::MAX],
+            rounds: 17,
+            custody_dir: "gen-42".into(),
+        };
+        let path = dir.path().join(CHECKPOINT_NAME);
+        write_checkpoint(&path, &c).unwrap();
+        assert_eq!(read_checkpoint(&path).unwrap(), c);
+
+        // no mirror yet
+        let c2 = RunCheckpoint {
+            mirror_hash: None,
+            ..c.clone()
+        };
+        write_checkpoint(&path, &c2).unwrap();
+        assert_eq!(read_checkpoint(&path).unwrap(), c2);
+
+        // corruption is a typed checksum mismatch
+        let mut bytes = fs::read(&path).unwrap();
+        bytes[20] ^= 0x40;
+        fs::write(&path, &bytes).unwrap();
+        assert!(matches!(
+            read_checkpoint(&path),
+            Err(SpillError::ChecksumMismatch { .. })
+        ));
+        // foreign file / truncation are typed too
+        fs::write(&path, b"not a checkpoint").unwrap();
+        assert!(matches!(
+            read_checkpoint(&path),
+            Err(SpillError::Truncated { .. })
+        ));
+        fs::write(&path, [b"XXXXXXXX".as_slice(), &[0u8; 80]].concat()).unwrap();
+        assert!(matches!(
+            read_checkpoint(&path),
+            Err(SpillError::BadMagic { .. })
+        ));
+    }
+
+    #[test]
+    fn atomic_write_replaces_and_survives_stale_tmp() {
+        let dir = tmp();
+        let path = dir.path().join("target.bin");
+        write_atomic(&path, b"first image").unwrap();
+        assert_eq!(fs::read(&path).unwrap(), b"first image");
+        // a stale tmp from a crashed previous writer must not break the
+        // next write — it is simply overwritten and renamed away
+        fs::write(dir.path().join("target.bin.tmp"), b"torn garbage").unwrap();
+        write_atomic(&path, b"second image").unwrap();
+        assert_eq!(fs::read(&path).unwrap(), b"second image");
+        assert!(
+            !dir.path().join("target.bin.tmp").exists(),
+            "tmp renamed into place"
+        );
     }
 
     #[test]

@@ -72,6 +72,17 @@ Common flags:
   --exp decay|depth|loglog|path|comm|cycles (theory)
   --exp finisher|pruning|mtl|machines|dense (ablation)
 
+Fault tolerance (proc/shuffle transports; run/perf):
+  --io-timeout SECS (socket I/O timeout; env LCC_IO_TIMEOUT_MS; default 120)
+  --connect-retries N (worker mesh connect attempts, exponential backoff;
+                       env LCC_CONNECT_RETRIES; default 10)
+  --respawn-budget N (worker respawns per recovery; 0 = dead worker is
+                      terminal; env LCC_RESPAWN_BUDGET; default 3)
+  --checkpoint-dir DIR (persist per-generation run checkpoints here;
+                        default: run-private temp dir when respawn is on)
+  --fault-plan PLAN (deterministic fault injection for the chaos suite,
+                     e.g. \"kill:w2@round=3,delay:w1@round=5\"; env LCC_FAULT_PLAN)
+
 Worker mode (spawned by the proc transport; not for direct use):
   lcc worker --connect HOST:PORT";
 
@@ -123,6 +134,15 @@ fn transport(args: &Args) -> TransportMode {
     TransportMode::parse(&args.str_or("transport", "inproc"))
 }
 
+/// `--fault-plan "kill:w2@round=3,..."`, validated at the flag so a typo
+/// fails before any worker is spawned.
+fn fault_plan(args: &Args) -> Option<String> {
+    args.str_opt("fault-plan").map(|s| {
+        lcc::mpc::net::FaultPlan::parse(s).unwrap_or_else(|e| panic!("--fault-plan: {e}"));
+        s.to_string()
+    })
+}
+
 fn cmd_run(args: &Args) {
     let (g, name) = load_graph(args);
     let cfg = RunConfig {
@@ -138,6 +158,11 @@ fn cmd_run(args: &Args) {
         spill_budget: spill_budget(args),
         transport: transport(args),
         verify: args.bool_or("verify", true),
+        io_timeout_secs: args.nonzero_u64_opt("io-timeout"),
+        connect_retries: args.nonzero_usize_opt("connect-retries"),
+        fault_plan: fault_plan(args),
+        respawn_budget: args.usize_opt("respawn-budget"),
+        checkpoint_dir: args.str_opt("checkpoint-dir").map(std::path::PathBuf::from),
         ..Default::default()
     };
     let driver = Driver::new(cfg);
@@ -297,6 +322,24 @@ fn cmd_perf(args: &Args) {
     let machines = args.nonzero_usize_or("machines", 16);
     let budget = spill_budget(args);
     let mode = transport(args);
+    // Fault-tolerance knobs ride through the environment: the perf suite's
+    // signature stays unchanged and every transport it builds (plus the
+    // workers those spawn) inherits them via NetConfig::from_env.
+    if let Some(secs) = args.nonzero_u64_opt("io-timeout") {
+        std::env::set_var("LCC_IO_TIMEOUT_MS", (secs * 1000).to_string());
+    }
+    if let Some(n) = args.nonzero_usize_opt("connect-retries") {
+        std::env::set_var("LCC_CONNECT_RETRIES", n.to_string());
+    }
+    if let Some(n) = args.usize_opt("respawn-budget") {
+        std::env::set_var("LCC_RESPAWN_BUDGET", n.to_string());
+    }
+    if let Some(plan) = fault_plan(args) {
+        std::env::set_var("LCC_FAULT_PLAN", plan);
+    }
+    if let Some(dir) = args.str_opt("checkpoint-dir") {
+        std::env::set_var("LCC_CHECKPOINT_DIR", dir);
+    }
     let measurements = perf::standard_suite(quick, machines, budget, mode);
     for m in &measurements {
         println!("{}", m.report_line());

@@ -39,6 +39,46 @@ pub struct RoundTiming {
     pub fold_ms: f64,
 }
 
+/// One worker-recovery incident: a disconnect-shaped transport fault the
+/// engine healed by respawning the fleet and replaying from the last
+/// generation barrier.  Pure observability, like [`RoundTiming`]: never
+/// part of any bit-identity comparison (an undisturbed run has zero
+/// events; a recovered run's [`RoundMetrics`] are still identical).
+#[derive(Debug, Clone, Default)]
+pub struct RecoveryEvent {
+    /// Label of the round the fault interrupted.
+    pub label: String,
+    /// Worker the fault was attributed to, when known.
+    pub worker: Option<usize>,
+    /// Human-readable cause (the underlying [`super::TransportError`]).
+    pub cause: String,
+    /// Respawn attempts consumed before the mesh came back.
+    pub respawn_attempts: u64,
+    /// Wall-clock of the respawn + mesh rebuild, in milliseconds.
+    pub wall_ms: f64,
+}
+
+/// Replay accounting of a run's worker recoveries.  Replayed rounds are
+/// charged **once** in [`Metrics::rounds`] (only the successful attempt
+/// records) — the replay cost is logged here instead.
+#[derive(Debug, Clone, Default)]
+pub struct RecoveryMetrics {
+    /// One entry per healed fault, in occurrence order.
+    pub events: Vec<RecoveryEvent>,
+    /// Rounds that ran more than once because a fault interrupted them
+    /// (each counted once per extra attempt).
+    pub replayed_rounds: u64,
+    /// Total wall-clock spent in recovery, in milliseconds.
+    pub total_ms: f64,
+}
+
+impl RecoveryMetrics {
+    pub fn record(&mut self, event: RecoveryEvent) {
+        self.total_ms += event.wall_ms;
+        self.events.push(event);
+    }
+}
+
 /// Accumulated metrics for a run.
 #[derive(Debug, Clone, Default)]
 pub struct Metrics {
@@ -48,6 +88,10 @@ pub struct Metrics {
     /// [`Metrics::record`] carry no timing row).  Reported by `lcc perf`;
     /// excluded from every bit-identity comparison.
     pub timings: Vec<RoundTiming>,
+    /// Worker-recovery log (shuffle transport).  Like `timings`,
+    /// excluded from every bit-identity comparison: recovered runs must
+    /// still produce `rounds` identical to undisturbed ones.
+    pub recovery: RecoveryMetrics,
 }
 
 impl Metrics {
@@ -87,6 +131,9 @@ impl Metrics {
     pub fn extend(&mut self, other: Metrics) {
         self.rounds.extend(other.rounds);
         self.timings.extend(other.timings);
+        self.recovery.events.extend(other.recovery.events);
+        self.recovery.replayed_rounds += other.recovery.replayed_rounds;
+        self.recovery.total_ms += other.recovery.total_ms;
     }
 }
 
@@ -330,7 +377,18 @@ mod tests {
         let mut b = Metrics::new();
         b.record(RoundMetrics::default());
         b.record(RoundMetrics::default());
+        b.recovery.record(RecoveryEvent {
+            label: "hop".into(),
+            worker: Some(1),
+            cause: "worker 1 crashed".into(),
+            respawn_attempts: 1,
+            wall_ms: 12.5,
+        });
+        b.recovery.replayed_rounds = 2;
         a.extend(b);
         assert_eq!(a.num_rounds(), 3);
+        assert_eq!(a.recovery.events.len(), 1);
+        assert_eq!(a.recovery.replayed_rounds, 2);
+        assert!((a.recovery.total_ms - 12.5).abs() < 1e-9);
     }
 }

@@ -70,10 +70,10 @@ pub mod simulator;
 pub mod transport;
 
 pub use dht::Dht;
-pub use metrics::{Metrics, RoundMetrics, RoundTiming, WireSize};
+pub use metrics::{Metrics, RecoveryEvent, RecoveryMetrics, RoundMetrics, RoundTiming, WireSize};
 pub use pool::WorkerPool;
 pub use simulator::{MpcConfig, ShardRound, Simulator};
 pub use transport::{
-    Exchange, ExchangeAck, HopSpec, InProcess, RoundCharge, ShuffleOps, TransportError,
-    TransportMode, WireFold, WireOp,
+    Exchange, ExchangeAck, HopSpec, InProcess, RecoveryInfo, RoundCharge, ShuffleOps,
+    TransportError, TransportMode, WireFold, WireOp,
 };

@@ -72,8 +72,10 @@ use crate::graph::ShardedGraph;
 pub const FRAME_MAGIC: &[u8; 8] = b"LCCFRME1";
 /// Protocol version exchanged in the handshake.  v2: `Hello` carries the
 /// worker's mesh listener port and the worker↔worker shuffle frames
-/// exist.
-pub const PROTO_VERSION: u32 = 2;
+/// exist.  v3: `Ping`/`Pong` heartbeats and the fault-injection /
+/// recovery envs (`LCC_FAULT_PLAN`, `LCC_IO_TIMEOUT_MS`,
+/// `LCC_CONNECT_RETRIES`).
+pub const PROTO_VERSION: u32 = 3;
 /// Sanity cap on a peer-declared frame body, 4 GiB (a garbage length
 /// must not drive a huge allocation).
 pub const MAX_FRAME_BODY: u64 = 1 << 32;
@@ -81,10 +83,190 @@ pub const MAX_FRAME_BODY: u64 = 1 << 32;
 const FRAME_HEADER_BYTES: u64 = 8 + 1 + 8 + 8 + 8;
 
 /// Per-read/per-write socket timeout: a wedged peer (one that neither
-/// answers nor drains) becomes a typed I/O error, not a hang.
+/// answers nor drains) becomes a typed I/O error, not a hang.  This is
+/// the *default*; runs override it via [`NetConfig::io_timeout`]
+/// (`--io-timeout` / `LCC_IO_TIMEOUT_MS`).
 pub const IO_TIMEOUT: Duration = Duration::from_secs(120);
 /// How long the coordinator waits for all workers to connect.
 const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(20);
+/// Default worker→peer connect retry budget (exponential backoff,
+/// [`CONNECT_BACKOFF_MS`] base, doubling — ~5 s total at the default).
+pub const DEFAULT_CONNECT_RETRIES: usize = 10;
+/// Base backoff of the peer-connect retry loop, in milliseconds.
+pub const CONNECT_BACKOFF_MS: u64 = 5;
+/// Default worker respawn budget of shuffle recovery (`--respawn-budget`
+/// / `LCC_RESPAWN_BUDGET`; 0 disables recovery).
+pub const DEFAULT_RESPAWN_BUDGET: usize = 3;
+/// Base backoff between respawn attempts, in milliseconds (doubles per
+/// attempt).
+pub const DEFAULT_RESPAWN_BACKOFF_MS: u64 = 50;
+
+// ---------------------------------------------------------------------------
+// transport configuration + deterministic fault injection
+
+/// Tunable knobs of the wire transports.  Every knob has an env spelling
+/// so spawned `lcc worker` processes (which parse no run flags) inherit
+/// the coordinator's settings; [`NetConfig::from_env`] is the worker-side
+/// (and default coordinator-side) reader, and the driver overlays its
+/// `--io-timeout`/`--connect-retries`/`--fault-plan`/`--respawn-budget`
+/// flags on top.
+#[derive(Debug, Clone)]
+pub struct NetConfig {
+    /// Per-read/per-write socket timeout (`LCC_IO_TIMEOUT_MS`).
+    pub io_timeout: Duration,
+    /// Worker→peer mesh connect attempts, exponential backoff
+    /// (`LCC_CONNECT_RETRIES`).
+    pub connect_retries: usize,
+    /// Deterministic fault plan, raw CLI spelling (`LCC_FAULT_PLAN`);
+    /// shipped to the workers verbatim via their environment.  Parse with
+    /// [`FaultPlan::parse`].
+    pub fault_plan: Option<String>,
+    /// Worker respawn attempts per recovery (`LCC_RESPAWN_BUDGET`;
+    /// 0 = recovery disabled, a dead worker is terminal).
+    pub respawn_budget: usize,
+    /// Base respawn backoff in milliseconds, doubling per attempt
+    /// (`LCC_RESPAWN_BACKOFF_MS`).
+    pub respawn_backoff_ms: u64,
+    /// Directory for per-generation run checkpoints
+    /// (`LCC_CHECKPOINT_DIR`); `None` = a run-private temp dir when
+    /// checkpointing is active.
+    pub checkpoint_dir: Option<std::path::PathBuf>,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            io_timeout: IO_TIMEOUT,
+            connect_retries: DEFAULT_CONNECT_RETRIES,
+            fault_plan: None,
+            respawn_budget: DEFAULT_RESPAWN_BUDGET,
+            respawn_backoff_ms: DEFAULT_RESPAWN_BACKOFF_MS,
+            checkpoint_dir: None,
+        }
+    }
+}
+
+fn env_u64(key: &str) -> Option<u64> {
+    std::env::var(key).ok().and_then(|v| v.trim().parse().ok())
+}
+
+impl NetConfig {
+    /// Read the env spellings over the defaults (unparseable values fall
+    /// back to the default rather than crashing a worker mid-handshake).
+    pub fn from_env() -> NetConfig {
+        let mut cfg = NetConfig::default();
+        if let Some(ms) = env_u64("LCC_IO_TIMEOUT_MS").filter(|&ms| ms > 0) {
+            cfg.io_timeout = Duration::from_millis(ms);
+        }
+        if let Some(n) = env_u64("LCC_CONNECT_RETRIES") {
+            cfg.connect_retries = n as usize;
+        }
+        if let Some(plan) = std::env::var("LCC_FAULT_PLAN").ok().filter(|s| !s.is_empty()) {
+            cfg.fault_plan = Some(plan);
+        }
+        if let Some(n) = env_u64("LCC_RESPAWN_BUDGET") {
+            cfg.respawn_budget = n as usize;
+        }
+        if let Some(ms) = env_u64("LCC_RESPAWN_BACKOFF_MS") {
+            cfg.respawn_backoff_ms = ms;
+        }
+        if let Some(dir) = std::env::var("LCC_CHECKPOINT_DIR").ok().filter(|s| !s.is_empty()) {
+            cfg.checkpoint_dir = Some(std::path::PathBuf::from(dir));
+        }
+        cfg
+    }
+}
+
+/// What an injected fault does.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// `kill`: the worker exits immediately (no ack, socket dropped) —
+    /// the coordinator sees a crash.
+    Kill,
+    /// `delay`: the worker sleeps 100 ms before serving the frame —
+    /// exercises the timeout/backoff paths without killing anyone.
+    Delay,
+}
+
+/// Where in the run an injected fault fires, counted per worker.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultSite {
+    /// Before serving the worker's `n`-th round frame (`Round`,
+    /// `HopRound`, or `Rewire`; 1-based).
+    Round(u64),
+    /// Immediately *after* acking the worker's `n`-th `Rewire` frame
+    /// (1-based) — the generation boundary: custody advanced, then the
+    /// worker dies.
+    Gen(u64),
+}
+
+/// One injected fault: `kill:w2@round=3` = worker 2 exits on its 3rd
+/// round frame.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultAction {
+    pub kind: FaultKind,
+    pub worker: usize,
+    pub site: FaultSite,
+}
+
+/// A deterministic fault plan: comma-separated actions, each
+/// `<kill|delay>:w<ID>@<round|gen>=<N>` (`--fault-plan
+/// "kill:w2@round=3,delay:w1@round=5"`).  Workers receive the raw string
+/// via `LCC_FAULT_PLAN`, parse it after learning their id from `Assign`,
+/// and enact only their own actions — every failure is reproducible by
+/// construction (frame counters, not wall clocks).
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct FaultPlan {
+    pub actions: Vec<FaultAction>,
+}
+
+impl FaultPlan {
+    /// Parse the CLI/env spelling; `Err` carries a message naming the
+    /// offending clause.
+    pub fn parse(s: &str) -> Result<FaultPlan, String> {
+        let mut actions = Vec::new();
+        for clause in s.split(',').map(str::trim).filter(|c| !c.is_empty()) {
+            let bad = |why: &str| format!("bad fault clause {clause:?}: {why}");
+            let (kind, rest) = clause
+                .split_once(':')
+                .ok_or_else(|| bad("expected <kill|delay>:w<ID>@<round|gen>=<N>"))?;
+            let kind = match kind {
+                "kill" => FaultKind::Kill,
+                "delay" => FaultKind::Delay,
+                other => return Err(bad(&format!("unknown action {other:?}"))),
+            };
+            let (who, site) = rest
+                .split_once('@')
+                .ok_or_else(|| bad("expected w<ID>@<round|gen>=<N>"))?;
+            let worker: usize = who
+                .strip_prefix('w')
+                .and_then(|id| id.parse().ok())
+                .ok_or_else(|| bad("worker must be w<ID>"))?;
+            let (at, n) = site
+                .split_once('=')
+                .ok_or_else(|| bad("expected <round|gen>=<N>"))?;
+            let n: u64 = n.parse().map_err(|_| bad("count must be an integer"))?;
+            if n == 0 {
+                return Err(bad("counts are 1-based (got 0)"));
+            }
+            let site = match at {
+                "round" => FaultSite::Round(n),
+                "gen" => FaultSite::Gen(n),
+                other => return Err(bad(&format!("unknown site {other:?}"))),
+            };
+            if kind == FaultKind::Delay && matches!(site, FaultSite::Gen(_)) {
+                return Err(bad("delay is only meaningful at round sites"));
+            }
+            actions.push(FaultAction { kind, worker, site });
+        }
+        Ok(FaultPlan { actions })
+    }
+
+    /// The actions worker `w` must enact.
+    pub fn for_worker(&self, w: usize) -> Vec<FaultAction> {
+        self.actions.iter().copied().filter(|a| a.worker == w).collect()
+    }
+}
 
 /// Frame discriminators.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -160,6 +342,14 @@ pub enum FrameKind {
     /// peer → peer: rewritten edges owned by the receiver after a
     /// [`FrameKind::Rewire`] (raw `(u32, u32)` pairs).
     PeerEdges,
+
+    // ---- liveness (coordinator link; O(1)) ----
+    /// coordinator → worker: empty body — heartbeat probe.  Sent at
+    /// generation boundaries so a worker that died *between* rounds is a
+    /// typed crash before the next round's traffic, not mid-protocol.
+    Ping,
+    /// worker → coordinator: empty body — heartbeat answer.
+    Pong,
 }
 
 impl FrameKind {
@@ -186,6 +376,8 @@ impl FrameKind {
             FrameKind::PeerMsgs => 19,
             FrameKind::PeerFold => 20,
             FrameKind::PeerEdges => 21,
+            FrameKind::Ping => 22,
+            FrameKind::Pong => 23,
         }
     }
 
@@ -212,6 +404,8 @@ impl FrameKind {
             19 => FrameKind::PeerMsgs,
             20 => FrameKind::PeerFold,
             21 => FrameKind::PeerEdges,
+            22 => FrameKind::Ping,
+            23 => FrameKind::Pong,
             _ => return None,
         })
     }
@@ -612,14 +806,45 @@ pub struct ProcTransport {
     machines: usize,
     seq: u64,
     finished: bool,
+    /// Configuration this transport (and its spawned workers) runs under.
+    cfg: NetConfig,
+    /// The binary replacement workers respawn from (`None` for
+    /// [`ProcTransport::from_connected`]: nothing to respawn).
+    worker_bin: Option<std::path::PathBuf>,
 }
 
 impl ProcTransport {
     /// Spawn `machines` worker processes (`worker_bin worker --connect
     /// ADDR`) on localhost and complete the handshake with each.  The
     /// driver passes its own executable; tests pass
-    /// `env!("CARGO_BIN_EXE_lcc")`.
+    /// `env!("CARGO_BIN_EXE_lcc")`.  Configuration comes from the
+    /// environment ([`NetConfig::from_env`]); use
+    /// [`spawn_with`](ProcTransport::spawn_with) for explicit settings.
     pub fn spawn(machines: usize, worker_bin: &Path) -> Result<ProcTransport, TransportError> {
+        Self::spawn_with(machines, worker_bin, NetConfig::from_env())
+    }
+
+    /// [`spawn`](ProcTransport::spawn) under an explicit [`NetConfig`]:
+    /// the workers inherit `cfg`'s io-timeout / connect-retries / fault
+    /// plan through their environment.
+    pub fn spawn_with(
+        machines: usize,
+        worker_bin: &Path,
+        cfg: NetConfig,
+    ) -> Result<ProcTransport, TransportError> {
+        let counter = std::sync::Arc::new(std::sync::atomic::AtomicU64::new(0));
+        Self::spawn_counted(machines, worker_bin, cfg, counter, 0)
+    }
+
+    /// The spawn body; `counter`/`seq0` let a recovery respawn keep the
+    /// original transport's byte counter and round counter.
+    fn spawn_counted(
+        machines: usize,
+        worker_bin: &Path,
+        cfg: NetConfig,
+        counter: std::sync::Arc<std::sync::atomic::AtomicU64>,
+        seq0: u64,
+    ) -> Result<ProcTransport, TransportError> {
         let machines = machines.max(1);
         let listener = TcpListener::bind(("127.0.0.1", 0))
             .map_err(|e| io_err("bind coordinator listener", e))?;
@@ -632,15 +857,23 @@ impl ProcTransport {
 
         let mut children: Vec<Child> = Vec::with_capacity(machines);
         for j in 0..machines {
-            let spawned = Command::new(worker_bin)
-                .arg("worker")
+            let mut cmd = Command::new(worker_bin);
+            cmd.arg("worker")
                 .arg("--connect")
                 .arg(addr.to_string())
+                .env("LCC_IO_TIMEOUT_MS", cfg.io_timeout.as_millis().to_string())
+                .env("LCC_CONNECT_RETRIES", cfg.connect_retries.to_string())
                 .stdin(Stdio::null())
                 .stdout(Stdio::null())
-                .stderr(Stdio::inherit())
-                .spawn();
-            match spawned {
+                .stderr(Stdio::inherit());
+            // the plan must not leak into replacement workers (their
+            // predecessors already enacted it — an inherited env would
+            // re-kill every respawn), so an absent plan is scrubbed
+            match &cfg.fault_plan {
+                Some(plan) => cmd.env("LCC_FAULT_PLAN", plan),
+                None => cmd.env_remove("LCC_FAULT_PLAN"),
+            };
+            match cmd.spawn() {
                 Ok(c) => children.push(c),
                 Err(e) => {
                     kill_children(&mut children);
@@ -690,13 +923,14 @@ impl ProcTransport {
             }
         }
 
-        let mut t = match Self::handshake(streams) {
+        let mut t = match Self::handshake(streams, cfg, counter, seq0) {
             Ok(t) => t,
             Err(e) => {
                 kill_children(&mut children);
                 return Err(e);
             }
         };
+        t.worker_bin = Some(worker_bin.to_path_buf());
         // Worker ids follow accept order, children spawn order — align
         // them by the pid each worker reported in its Hello so
         // `children[j]` really is worker `j`'s process (kill_worker and
@@ -717,10 +951,16 @@ impl ProcTransport {
     /// `Hello`/`Assign` handshake on each (the fault-injection tests play
     /// the worker side themselves; no processes are owned).
     pub fn from_connected(streams: Vec<TcpStream>) -> Result<ProcTransport, TransportError> {
-        Self::handshake(streams)
+        let counter = std::sync::Arc::new(std::sync::atomic::AtomicU64::new(0));
+        Self::handshake(streams, NetConfig::from_env(), counter, 0)
     }
 
-    fn handshake(streams: Vec<TcpStream>) -> Result<ProcTransport, TransportError> {
+    fn handshake(
+        streams: Vec<TcpStream>,
+        cfg: NetConfig,
+        link_bytes: std::sync::Arc<std::sync::atomic::AtomicU64>,
+        seq0: u64,
+    ) -> Result<ProcTransport, TransportError> {
         if streams.is_empty() {
             return Err(TransportError::Protocol {
                 worker: None,
@@ -728,7 +968,6 @@ impl ProcTransport {
             });
         }
         let machines = streams.len();
-        let link_bytes = std::sync::Arc::new(std::sync::atomic::AtomicU64::new(0));
         let mut conns = Vec::with_capacity(streams.len());
         let mut worker_pids = Vec::with_capacity(streams.len());
         let mut mesh_ports = Vec::with_capacity(streams.len());
@@ -738,11 +977,11 @@ impl ProcTransport {
                 s.set_nonblocking(false)
                     .map_err(|e| io_err("stream blocking mode", e))?;
                 s.set_nodelay(true).map_err(|e| io_err("set nodelay", e))?;
-                s.set_read_timeout(Some(IO_TIMEOUT))
+                s.set_read_timeout(Some(cfg.io_timeout))
                     .map_err(|e| io_err("set read timeout", e))?;
                 // writes too: a worker that stops draining must not block
                 // a large LoadShard/Round write forever
-                s.set_write_timeout(Some(IO_TIMEOUT))
+                s.set_write_timeout(Some(cfg.io_timeout))
                     .map_err(|e| io_err("set write timeout", e))?;
                 let dup = s.try_clone().map_err(|e| io_err("clone stream", e))?;
                 let reader = BufReader::new(Meter {
@@ -791,8 +1030,10 @@ impl ProcTransport {
             mesh_ports,
             link_bytes,
             machines,
-            seq: 0,
+            seq: seq0,
             finished: false,
+            cfg,
+            worker_bin: None,
         })
     }
 
@@ -814,6 +1055,22 @@ impl ProcTransport {
     /// cross-checks the ack against its cached stats so custody
     /// divergence is a typed error before any round runs.
     pub fn load_graph(&mut self, g: &ShardedGraph) -> Result<(), TransportError> {
+        self.load_graph_from(g, None)
+    }
+
+    /// [`load_graph`](ProcTransport::load_graph), optionally preferring
+    /// shard files under `override_dir` (a generation checkpoint's
+    /// custody directory) over the graph's own residency: recovery
+    /// re-ships a respawned fleet from the checkpointed spill files so
+    /// custody restoration never depends on the live graph having stayed
+    /// spilled.  Every source is validated against the same cached
+    /// coordinator checksum, so a stale or torn checkpoint file is a
+    /// typed divergence, not silent corruption.
+    pub fn load_graph_from(
+        &mut self,
+        g: &ShardedGraph,
+        override_dir: Option<&Path>,
+    ) -> Result<(), TransportError> {
         if g.num_shards() != self.machines {
             return Err(TransportError::Protocol {
                 worker: None,
@@ -829,24 +1086,27 @@ impl ProcTransport {
         let seq = self.seq;
         let mut want_checksums = Vec::with_capacity(p);
         for s in 0..p {
-            let (image, checksum) = match g.spill_dir() {
-                Some(dir) => {
-                    let path = dir.join(spill::shard_file_name(s));
-                    let bytes = std::fs::read(&path).map_err(|e| TransportError::Io {
-                        worker: Some(s),
-                        op: "read spilled shard for shipping",
-                        source: e,
-                    })?;
-                    let ck = g
-                        .shard_checksum(s)
-                        .expect("spilled graph caches shard checksums");
-                    (bytes, ck)
-                }
-                None => {
-                    let data = g.shard_data(s);
-                    spill::encode_shard_bytes(s as u32, p as u32, &data)
-                }
+            let checkpointed = override_dir
+                .map(|d| d.join(spill::shard_file_name(s)))
+                .and_then(|path| std::fs::read(path).ok());
+            let image = match checkpointed {
+                Some(bytes) => bytes,
+                None => match g.spill_dir() {
+                    Some(dir) => {
+                        let path = dir.join(spill::shard_file_name(s));
+                        std::fs::read(&path).map_err(|e| TransportError::Io {
+                            worker: Some(s),
+                            op: "read spilled shard for shipping",
+                            source: e,
+                        })?
+                    }
+                    None => {
+                        let data = g.shard_data(s);
+                        spill::encode_shard_bytes(s as u32, p as u32, &data).0
+                    }
+                },
             };
+            let checksum = shard_payload_checksum(g, s);
             want_checksums.push(checksum);
             let mut head = Vec::with_capacity(4 + 8);
             head.extend_from_slice(&(s as u32).to_le_bytes());
@@ -959,6 +1219,61 @@ impl ProcTransport {
             }
         }
         e.for_worker(j)
+    }
+
+    /// Heartbeat barrier: `Ping` every worker and require a `Pong` back.
+    /// Called at generation boundaries only — the per-hop paths stay
+    /// heartbeat-free so the O(machines)-per-round coordinator-link bound
+    /// is unchanged.  A dead worker surfaces here as a typed
+    /// [`TransportError::WorkerCrashed`] *before* a multi-round replay
+    /// window opens, which is what keeps recovery replay windows at most
+    /// one generation deep.
+    pub fn probe_workers(&mut self) -> Result<(), TransportError> {
+        self.seq += 1;
+        let seq = self.seq;
+        for j in 0..self.conns.len() {
+            write_frame(&mut self.conns[j].writer, FrameKind::Ping, seq, &[])
+                .map_err(|e| self.crash_context(j, e))?;
+        }
+        for j in 0..self.conns.len() {
+            let frame =
+                read_frame(&mut self.conns[j].reader).map_err(|e| self.crash_context(j, e))?;
+            if frame.kind != FrameKind::Pong || frame.seq != seq {
+                return Err(TransportError::Protocol {
+                    worker: Some(j),
+                    detail: format!(
+                        "expected Pong seq {seq}, got {:?} seq {}",
+                        frame.kind, frame.seq
+                    ),
+                });
+            }
+        }
+        Ok(())
+    }
+
+    /// Spawn a replacement fleet: same machine count, same binary, same
+    /// shared byte counter and round counter, but with the fault plan
+    /// scrubbed (the dead workers already enacted it; replacements
+    /// re-running the same kills would make recovery a fixpoint-free
+    /// loop).  The old fleet is killed first so replacement listeners
+    /// never race the casualties for ports.  `Err` if this transport
+    /// doesn't own its workers ([`ProcTransport::from_connected`]).
+    fn respawn_fleet(&mut self) -> Result<ProcTransport, TransportError> {
+        let bin = self.worker_bin.clone().ok_or_else(|| TransportError::Protocol {
+            worker: None,
+            detail: "transport owns no worker binary to respawn from".into(),
+        })?;
+        self.conns.clear();
+        kill_children(&mut self.children);
+        let mut cfg = self.cfg.clone();
+        cfg.fault_plan = None;
+        Self::spawn_counted(
+            self.machines,
+            &bin,
+            cfg,
+            std::sync::Arc::clone(&self.link_bytes),
+            self.seq,
+        )
     }
 
     /// Graceful shutdown: every worker acks with `Bye` and exits; child
@@ -1156,6 +1471,10 @@ pub struct ShuffleStats {
     pub state_syncs: std::sync::atomic::AtomicU64,
     /// Worker-native hop rounds ([`FrameKind::HopRound`]).
     pub hops: std::sync::atomic::AtomicU64,
+    /// Generation checkpoints persisted ([`spill::write_checkpoint`]).
+    pub checkpoints: std::sync::atomic::AtomicU64,
+    /// Successful worker-fleet recoveries ([`ShuffleOps::recover`]).
+    pub recoveries: std::sync::atomic::AtomicU64,
 }
 
 /// The worker↔worker shuffle backend (coordinator side): the same
@@ -1173,6 +1492,22 @@ pub struct ShuffleTransport {
     /// Content hash of the worker-side value mirror.
     mirror: Option<u64>,
     stats: std::sync::Arc<ShuffleStats>,
+    /// Generation-checkpoint state; `None` = checkpointing off.
+    checkpoint: Option<CheckpointState>,
+}
+
+/// Where and what the coordinator checkpoints at generation boundaries.
+#[derive(Debug)]
+struct CheckpointState {
+    /// Owns `checkpoint.lcc` plus one `gen-<id>/` custody directory of
+    /// spill files per live checkpoint.
+    dir: spill::SpillDir,
+    /// The run's RNG stream position, recorded in every
+    /// [`spill::RunCheckpoint`].  In-stack recovery keeps the live RNG
+    /// (the algorithm state never dies), so this is captured once at run
+    /// start for the on-disk format's completeness and external resume
+    /// tooling, not re-sampled per generation.
+    rng_state: [u64; 4],
 }
 
 impl ShuffleTransport {
@@ -1183,6 +1518,16 @@ impl ShuffleTransport {
         Self::from_links(ProcTransport::spawn(machines, worker_bin)?)
     }
 
+    /// [`spawn`](ShuffleTransport::spawn) under an explicit
+    /// [`NetConfig`] (see [`ProcTransport::spawn_with`]).
+    pub fn spawn_with(
+        machines: usize,
+        worker_bin: &Path,
+        cfg: NetConfig,
+    ) -> Result<ShuffleTransport, TransportError> {
+        Self::from_links(ProcTransport::spawn_with(machines, worker_bin, cfg)?)
+    }
+
     /// Build over already-connected streams (fault-injection tests play
     /// the worker side), running the proc handshake plus the mesh roster.
     pub fn from_connected(streams: Vec<TcpStream>) -> Result<ShuffleTransport, TransportError> {
@@ -1190,6 +1535,21 @@ impl ShuffleTransport {
     }
 
     fn from_links(mut links: ProcTransport) -> Result<ShuffleTransport, TransportError> {
+        Self::mesh_up(&mut links)?;
+        Ok(ShuffleTransport {
+            links,
+            custody: None,
+            mirror: None,
+            stats: std::sync::Arc::new(ShuffleStats::default()),
+            checkpoint: None,
+        })
+    }
+
+    /// Bring up the worker↔worker mesh over `links`: ship each worker the
+    /// `Peers` roster built from the Hello mesh ports, barrier on every
+    /// `PeersAck`.  Also the respawn path's mesh bring-up during
+    /// [`ShuffleOps::recover`].
+    fn mesh_up(links: &mut ProcTransport) -> Result<(), TransportError> {
         let p = links.machines;
         links.seq += 1;
         let seq = links.seq;
@@ -1222,12 +1582,58 @@ impl ShuffleTransport {
                 }
             }
         }
-        Ok(ShuffleTransport {
-            links,
-            custody: None,
-            mirror: None,
-            stats: std::sync::Arc::new(ShuffleStats::default()),
-        })
+        Ok(())
+    }
+
+    /// Enable per-generation checkpointing into `dir` (see
+    /// [`spill::RunCheckpoint`]); `rng_state` is the run's RNG stream
+    /// position as seeded ([`crate::util::rng::Rng::state`]).
+    pub fn set_checkpoint(&mut self, dir: spill::SpillDir, rng_state: [u64; 4]) {
+        self.checkpoint = Some(CheckpointState { dir, rng_state });
+    }
+
+    /// Persist the generation checkpoint for `g`: custody spill files
+    /// first, the checksummed [`spill::RunCheckpoint`] after (atomic
+    /// tmp-write + fsync + rename), so a crash mid-persist leaves the
+    /// previous checkpoint intact and pointing at intact files.  Older
+    /// generation directories are pruned only once the new checkpoint is
+    /// durable.  No-op when checkpointing is off.
+    fn checkpoint_generation(&mut self, g: &ShardedGraph) -> Result<(), TransportError> {
+        let Some(ck) = &self.checkpoint else {
+            return Ok(());
+        };
+        let generation = g.generation();
+        let custody_dir = format!("gen-{generation}");
+        g.persist_spilled(ck.dir.path().join(&custody_dir))?;
+        spill::write_checkpoint(
+            &ck.dir.path().join(spill::CHECKPOINT_NAME),
+            &spill::RunCheckpoint {
+                generation,
+                machines: self.links.machines as u32,
+                mirror_hash: self.mirror,
+                rng_state: ck.rng_state,
+                rounds: self.links.seq,
+                custody_dir,
+            },
+        )?;
+        // best-effort prune: a stale generation directory is inert (the
+        // checkpoint no longer names it), just disk
+        if let Ok(entries) = std::fs::read_dir(ck.dir.path()) {
+            for entry in entries.flatten() {
+                let name = entry.file_name();
+                let name = name.to_string_lossy();
+                if let Some(old) = name.strip_prefix("gen-").and_then(|s| s.parse::<u64>().ok())
+                {
+                    if old != generation {
+                        let _ = std::fs::remove_dir_all(entry.path());
+                    }
+                }
+            }
+        }
+        self.stats
+            .checkpoints
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        Ok(())
     }
 
     pub fn num_machines(&self) -> usize {
@@ -1335,12 +1741,24 @@ impl crate::mpc::transport::ShuffleOps for ShuffleTransport {
     }
 
     fn establish_custody(&mut self, g: &ShardedGraph) -> Result<(), TransportError> {
-        self.links.load_graph(g)?;
+        // generation-boundary heartbeat: surface a dead worker as a typed
+        // crash before a multi-frame custody ship starts (hop paths stay
+        // heartbeat-free — the O(machines)-per-round link bound holds)
+        self.links.probe_workers()?;
+        // a respawned fleet re-ships from the checkpointed custody files
+        // when this generation has them (the live graph may have mutated
+        // residency since the checkpoint was cut)
+        let ckpt_dir = self
+            .checkpoint
+            .as_ref()
+            .map(|ck| ck.dir.path().join(format!("gen-{}", g.generation())))
+            .filter(|d| d.is_dir());
+        self.links.load_graph_from(g, ckpt_dir.as_deref())?;
         self.custody = Some(g.generation());
         self.stats
             .custody_loads
             .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        Ok(())
+        self.checkpoint_generation(g)
     }
 
     fn mirror_hash(&self) -> Option<u64> {
@@ -1498,6 +1916,8 @@ impl crate::mpc::transport::ShuffleOps for ShuffleTransport {
     }
 
     fn rewire(&mut self, map: &[u32], new: &ShardedGraph) -> Result<(), TransportError> {
+        // generation-boundary heartbeat (see establish_custody)
+        self.links.probe_workers()?;
         let p = self.links.machines;
         // the map rides the mirror channel (wire-encoded u32s)
         let mut data = Vec::with_capacity(map.len() * 4);
@@ -1549,7 +1969,69 @@ impl crate::mpc::transport::ShuffleOps for ShuffleTransport {
         self.stats
             .rewires
             .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        Ok(())
+        self.checkpoint_generation(new)
+    }
+
+    fn recover(
+        &mut self,
+        cause: &TransportError,
+    ) -> Result<crate::mpc::transport::RecoveryInfo, TransportError> {
+        let start = Instant::now();
+        let budget = self.links.cfg.respawn_budget;
+        if budget == 0 {
+            return Err(TransportError::RecoveryExhausted {
+                attempts: 0,
+                detail: format!("respawn disabled (budget 0); fault: {cause}"),
+            });
+        }
+        if self.links.worker_bin.is_none() {
+            return Err(TransportError::RecoveryExhausted {
+                attempts: 0,
+                detail: format!("no worker binary to respawn from; fault: {cause}"),
+            });
+        }
+        let mut last_err: Option<TransportError> = None;
+        for attempt in 1..=budget {
+            if attempt > 1 {
+                // exponential backoff between attempts: base, 2x, 4x, ...
+                let shift = (attempt as u32 - 2).min(16);
+                let ms = self
+                    .links
+                    .cfg
+                    .respawn_backoff_ms
+                    .saturating_mul(1u64 << shift);
+                std::thread::sleep(Duration::from_millis(ms));
+            }
+            let fleet = self.links.respawn_fleet().and_then(|mut links| {
+                Self::mesh_up(&mut links)?;
+                Ok(links)
+            });
+            match fleet {
+                Ok(links) => {
+                    self.links = links;
+                    // custody and mirror died with the old fleet: the
+                    // next round lazily re-establishes both, from this
+                    // generation's checkpointed custody files when on
+                    self.custody = None;
+                    self.mirror = None;
+                    self.stats
+                        .recoveries
+                        .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    return Ok(crate::mpc::transport::RecoveryInfo {
+                        respawn_attempts: attempt,
+                        wall_ms: start.elapsed().as_secs_f64() * 1e3,
+                    });
+                }
+                Err(e) => last_err = Some(e),
+            }
+        }
+        Err(TransportError::RecoveryExhausted {
+            attempts: budget,
+            detail: match last_err {
+                Some(e) => format!("fault: {cause}; last respawn error: {e}"),
+                None => format!("fault: {cause}"),
+            },
+        })
     }
 }
 
@@ -1689,5 +2171,67 @@ mod tests {
     fn fold_payload_rejects_ragged_input() {
         assert!(fold_wire_payload(WireOp::MinU32, &[0u8; 13]).is_err());
         assert!(fold_wire_payload(WireOp::MaxU64, &[0u8; 20]).is_err());
+    }
+
+    #[test]
+    fn fault_plan_parses_the_cli_grammar() {
+        let plan = FaultPlan::parse("kill:w2@round=3,delay:w1@round=5,kill:w0@gen=1").unwrap();
+        assert_eq!(plan.actions.len(), 3);
+        assert_eq!(plan.actions[0].kind, FaultKind::Kill);
+        assert_eq!(plan.actions[0].worker, 2);
+        assert_eq!(plan.actions[0].site, FaultSite::Round(3));
+        assert_eq!(plan.actions[1].kind, FaultKind::Delay);
+        assert_eq!(plan.actions[1].site, FaultSite::Round(5));
+        assert_eq!(plan.actions[2].site, FaultSite::Gen(1));
+        let mine = plan.for_worker(2);
+        assert_eq!(mine.len(), 1);
+        assert_eq!(mine[0].site, FaultSite::Round(3));
+        assert!(plan.for_worker(9).is_empty());
+    }
+
+    #[test]
+    fn fault_plan_rejects_malformed_specs() {
+        for bad in [
+            "boom:w1@round=2",  // unknown kind
+            "kill:x1@round=2",  // bad worker tag
+            "kill:w1@epoch=2",  // unknown site
+            "kill:w1@round=0",  // counts are 1-based
+            "delay:w1@gen=2",   // delay only at round sites
+            "kill:w1",          // missing site
+            "",                 // empty action
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn net_config_defaults_are_sane() {
+        let cfg = NetConfig::default();
+        assert_eq!(cfg.io_timeout, IO_TIMEOUT);
+        assert_eq!(cfg.connect_retries, DEFAULT_CONNECT_RETRIES);
+        assert_eq!(cfg.respawn_budget, DEFAULT_RESPAWN_BUDGET);
+        assert_eq!(cfg.respawn_backoff_ms, DEFAULT_RESPAWN_BACKOFF_MS);
+        assert!(cfg.fault_plan.is_none());
+        assert!(cfg.checkpoint_dir.is_none());
+    }
+
+    #[test]
+    fn run_checkpoint_survives_a_spill_roundtrip() {
+        // the net-layer view of the spill-layer format: what rewire
+        // persists, recovery's establish_custody must read back verbatim
+        let dir = std::env::temp_dir().join(format!("lcc-net-ckpt-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(spill::CHECKPOINT_NAME);
+        let cp = spill::RunCheckpoint {
+            generation: 4,
+            machines: 8,
+            mirror_hash: Some(0xfeed_beef),
+            rng_state: [9, 8, 7, 6],
+            rounds: 123,
+            custody_dir: "gen-4".into(),
+        };
+        spill::write_checkpoint(&path, &cp).unwrap();
+        assert_eq!(spill::read_checkpoint(&path).unwrap(), cp);
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 }

@@ -978,14 +978,11 @@ impl Simulator {
         }
         let p = self.cfg.machines.max(1);
         debug_assert_eq!(charge.machine_bytes.len(), p);
-        let abort = |e: TransportError| -> ! { std::panic::panic_any(e) };
 
-        // ---- control plane: custody + mirror, then the descriptor ------
         // The mirror hash is computed incrementally (vb-byte tmp buffer);
         // the full O(n·vb) mirror image materializes only when a sync is
         // actually needed — on the steady-state chained-hop path (the
         // all-gather kept worker mirrors current) this is allocation-free.
-        let t_gen = Instant::now();
         let gen = g.generation();
         let hash = {
             let mut h = Fnv1a::new();
@@ -1009,107 +1006,196 @@ impl Simulator {
             bytes: charge.bytes,
             machine_bytes: &charge.machine_bytes,
         };
-        let seq = {
-            let sh = self.transport.shuffle().expect("checked above");
-            if sh.custody() != Some(gen) {
-                if let Err(e) = sh.establish_custody(g) {
-                    abort(e);
-                }
-            }
-            if sh.mirror_hash() != Some(hash) {
-                let mut data = Vec::with_capacity(n * vb);
-                for v in vals {
-                    v.encode_wire(&mut data);
-                }
-                debug_assert_eq!(crate::mpc::net::mirror_hash_of(vb as u8, &data), hash);
-                if let Err(e) = sh.sync_mirror(vb as u8, &data, hash) {
-                    abort(e);
-                }
-            }
-            match sh.begin_hop(&spec, &rc) {
-                Ok(seq) => seq,
-                Err(e) => abort(e),
-            }
-        };
-        self.note_gen(t_gen);
 
-        // ---- the same fold, locally, while the workers shuffle ---------
-        let t_fold = Instant::now();
-        let opf = fold.f;
-        let mut out: Vec<V> = vals.to_vec();
-        let words = n.div_ceil(64);
-        let mut touched = self.take_touched(words);
-        let mut msgs_seen = 0u64;
-        {
-            let mut fold_in = |k: Vertex, value: V| {
-                let k = k as usize;
-                out[k] = if (touched[k / 64] >> (k % 64)) & 1 == 1 {
-                    opf(out[k], value)
-                } else {
-                    value
+        // The whole round is one replayable attempt: a recoverable fault
+        // anywhere (descriptor write, mid-shuffle crash, barrier read)
+        // respawns the fleet and retries from the control plane — the
+        // replay lazily re-establishes custody (checkpointed spill files)
+        // and the mirror, exactly the lazy paths an undisturbed run uses.
+        // The local fold is computed once and cached across replays (it
+        // is a pure function of `g` and `vals`); the round is charged
+        // once, on the attempt that completes — bit-identical metrics by
+        // construction.
+        let mut folded: Option<(Vec<V>, Vec<u64>, u64)> = None;
+        let mut replays = 0usize;
+        loop {
+            // ---- control plane: custody + mirror, then the descriptor --
+            let t_gen = Instant::now();
+            let ctrl = {
+                let sh = self.transport.shuffle().expect("checked above");
+                let mut step = || -> Result<u64, TransportError> {
+                    if sh.custody() != Some(gen) {
+                        sh.establish_custody(g)?;
+                    }
+                    if sh.mirror_hash() != Some(hash) {
+                        let mut data = Vec::with_capacity(n * vb);
+                        for v in vals {
+                            v.encode_wire(&mut data);
+                        }
+                        debug_assert_eq!(
+                            crate::mpc::net::mirror_hash_of(vb as u8, &data),
+                            hash
+                        );
+                        sh.sync_mirror(vb as u8, &data, hash)?;
+                    }
+                    sh.begin_hop(&spec, &rc)
                 };
-                touched[k / 64] |= 1u64 << (k % 64);
-                msgs_seen += 1;
+                step()
             };
-            for s in 0..p {
-                let shard = g.shard_data(s);
-                for &(u, v) in shard.iter() {
-                    fold_in(u, vals[v as usize]);
-                    fold_in(v, vals[u as usize]);
+            self.note_gen(t_gen);
+            let seq = match ctrl {
+                Ok(seq) => seq,
+                Err(e) => {
+                    self.recover_or_abort(label, &mut replays, e);
+                    continue;
                 }
-                if include_self {
-                    let (sa, sb) = pool::chunk_range(n, p, s);
-                    for v in sa..sb {
-                        fold_in(v as Vertex, vals[v]);
+            };
+
+            // ---- the same fold, locally, while the workers shuffle -----
+            if folded.is_none() {
+                let t_fold = Instant::now();
+                let opf = fold.f;
+                let mut out: Vec<V> = vals.to_vec();
+                let words = n.div_ceil(64);
+                let mut touched = self.take_touched(words);
+                let mut msgs_seen = 0u64;
+                {
+                    let mut fold_in = |k: Vertex, value: V| {
+                        let k = k as usize;
+                        out[k] = if (touched[k / 64] >> (k % 64)) & 1 == 1 {
+                            opf(out[k], value)
+                        } else {
+                            value
+                        };
+                        touched[k / 64] |= 1u64 << (k % 64);
+                        msgs_seen += 1;
+                    };
+                    for s in 0..p {
+                        let shard = g.shard_data(s);
+                        for &(u, v) in shard.iter() {
+                            fold_in(u, vals[v as usize]);
+                            fold_in(v, vals[u as usize]);
+                        }
+                        if include_self {
+                            let (sa, sb) = pool::chunk_range(n, p, s);
+                            for v in sa..sb {
+                                fold_in(v as Vertex, vals[v]);
+                            }
+                        }
                     }
                 }
-            }
-        }
-        debug_assert_eq!(
-            msgs_seen, charge.messages,
-            "shard charge disagrees with the message stream ({label})"
-        );
-        let _ = msgs_seen;
+                debug_assert_eq!(
+                    msgs_seen, charge.messages,
+                    "shard charge disagrees with the message stream ({label})"
+                );
+                let _ = msgs_seen;
 
-        // canonical per-machine fold images (ascending keys — exactly the
-        // worker encoding) hashed incrementally, plus the post-hop mirror
-        // hash, in one pass
-        let mut fold_hash: Vec<Fnv1a> = (0..p).map(|_| Fnv1a::new()).collect();
-        let mut mirror_h = Fnv1a::new();
-        mirror_h.update(&[vb as u8]);
-        mirror_h.update(&((n * vb) as u64).to_le_bytes());
-        let mut tmp = Vec::with_capacity(vb);
-        for (k, v) in out.iter().enumerate() {
-            tmp.clear();
-            v.encode_wire(&mut tmp);
-            mirror_h.update(&tmp);
-            if (touched[k / 64] >> (k % 64)) & 1 == 1 {
-                let h = &mut fold_hash[machine_of(k as u64, p)];
-                h.update(&(k as u64).to_le_bytes());
-                h.update(&tmp);
+                // canonical per-machine fold images (ascending keys —
+                // exactly the worker encoding) hashed incrementally, plus
+                // the post-hop mirror hash, in one pass
+                let mut fold_hash: Vec<Fnv1a> = (0..p).map(|_| Fnv1a::new()).collect();
+                let mut mirror_h = Fnv1a::new();
+                mirror_h.update(&[vb as u8]);
+                mirror_h.update(&((n * vb) as u64).to_le_bytes());
+                let mut tmp = Vec::with_capacity(vb);
+                for (k, v) in out.iter().enumerate() {
+                    tmp.clear();
+                    v.encode_wire(&mut tmp);
+                    mirror_h.update(&tmp);
+                    if (touched[k / 64] >> (k % 64)) & 1 == 1 {
+                        let h = &mut fold_hash[machine_of(k as u64, p)];
+                        h.update(&(k as u64).to_le_bytes());
+                        h.update(&tmp);
+                    }
+                }
+                self.put_touched(touched);
+                let expected: Vec<u64> = fold_hash.into_iter().map(Fnv1a::finish).collect();
+                self.note_fold(t_fold);
+                folded = Some((out, expected, mirror_h.finish()));
             }
-        }
-        self.put_touched(touched);
-        let expected: Vec<u64> = fold_hash.into_iter().map(Fnv1a::finish).collect();
-        self.note_fold(t_fold);
+            let (_, expected, post_mirror) = folded.as_ref().expect("just computed");
 
-        // ---- the barrier: O(machines) summaries, validated -------------
-        let t_shuffle = Instant::now();
-        {
-            let sh = self.transport.shuffle().expect("checked above");
-            if let Err(e) = sh.finish_hop(seq, &spec, &rc, &expected) {
-                abort(e);
+            // ---- the barrier: O(machines) summaries, validated ---------
+            let t_shuffle = Instant::now();
+            let fin = {
+                let sh = self.transport.shuffle().expect("checked above");
+                match sh.finish_hop(seq, &spec, &rc, expected) {
+                    Ok(()) => {
+                        sh.set_mirror_hash(*post_mirror);
+                        Ok(())
+                    }
+                    Err(e) => Err(e),
+                }
+            };
+            match fin {
+                Ok(()) => {
+                    self.finish_round(
+                        label,
+                        charge.messages,
+                        charge.bytes,
+                        &charge.machine_bytes,
+                    );
+                    self.metrics.timings.push(RoundTiming {
+                        label: label.to_string(),
+                        gen_ms: std::mem::take(&mut self.pending_gen_ms),
+                        shuffle_ms: t_shuffle.elapsed().as_secs_f64() * 1e3,
+                        fold_ms: std::mem::take(&mut self.pending_fold_ms),
+                    });
+                    let (out, _, _) = folded.expect("just computed");
+                    return Some(out);
+                }
+                Err(e) => {
+                    self.recover_or_abort(label, &mut replays, e);
+                    continue;
+                }
             }
-            sh.set_mirror_hash(mirror_h.finish());
         }
-        self.finish_round(label, charge.messages, charge.bytes, &charge.machine_bytes);
-        self.metrics.timings.push(RoundTiming {
-            label: label.to_string(),
-            gen_ms: std::mem::take(&mut self.pending_gen_ms),
-            shuffle_ms: t_shuffle.elapsed().as_secs_f64() * 1e3,
-            fold_ms: std::mem::take(&mut self.pending_fold_ms),
-        });
-        Some(out)
+    }
+
+    /// How many times one round may replay through recovery before the
+    /// run aborts with [`TransportError::RecoveryExhausted`] — the
+    /// backstop that turns "the same round keeps dying on every fresh
+    /// fleet" (a genuine bug, not a transient fault) into a typed error
+    /// instead of an unbounded respawn loop.
+    const MAX_ROUND_REPLAYS: usize = 5;
+
+    /// Heal a recoverable transport fault in place — respawn the worker
+    /// fleet ([`super::transport::ShuffleOps::recover`]), record the
+    /// [`RecoveryEvent`], count the replay — or unwind with the typed
+    /// error: correctness faults (checksum/accounting/protocol
+    /// divergence) abort immediately, as does an exhausted or disabled
+    /// respawn budget and a round replayed past
+    /// [`Self::MAX_ROUND_REPLAYS`].
+    fn recover_or_abort(&mut self, label: &str, replays: &mut usize, e: TransportError) {
+        if !e.recoverable() {
+            std::panic::panic_any(e);
+        }
+        if *replays >= Self::MAX_ROUND_REPLAYS {
+            std::panic::panic_any(TransportError::RecoveryExhausted {
+                attempts: *replays,
+                detail: format!(
+                    "round {label:?} failed on {} consecutive fleets; last fault: {e}",
+                    *replays + 1
+                ),
+            });
+        }
+        let Some(sh) = self.transport.shuffle() else {
+            std::panic::panic_any(e);
+        };
+        match sh.recover(&e) {
+            Ok(info) => {
+                *replays += 1;
+                self.metrics.recovery.replayed_rounds += 1;
+                self.metrics.recovery.record(crate::mpc::metrics::RecoveryEvent {
+                    label: label.to_string(),
+                    worker: e.worker(),
+                    cause: e.to_string(),
+                    respawn_attempts: info.respawn_attempts as u64,
+                    wall_ms: info.wall_ms,
+                });
+            }
+            Err(re) => std::panic::panic_any(re),
+        }
     }
 
     /// Custody handoff after a graph rewrite (contraction, prune): on a
@@ -1138,14 +1224,26 @@ impl Simulator {
 
     pub fn shuffle_rewire(&mut self, old: &ShardedGraph, map: &[Vertex], new: &ShardedGraph) {
         let old_gen = old.generation();
-        let Some(sh) = self.transport.shuffle() else {
-            return;
-        };
-        if sh.custody() != Some(old_gen) {
-            return;
-        }
-        if let Err(e) = sh.rewire(map, new) {
-            std::panic::panic_any(e);
+        let mut replays = 0usize;
+        loop {
+            let res = {
+                let Some(sh) = self.transport.shuffle() else {
+                    return;
+                };
+                if sh.custody() != Some(old_gen) {
+                    // No old-generation custody to relabel — also the
+                    // post-recovery state: a respawned fleet re-ships the
+                    // *new* generation lazily at its next descriptor
+                    // round (from the checkpointed custody files), so
+                    // there is nothing left to rewire peer-to-peer.
+                    return;
+                }
+                sh.rewire(map, new)
+            };
+            match res {
+                Ok(()) => return,
+                Err(e) => self.recover_or_abort("rewire", &mut replays, e),
+            }
         }
     }
 
@@ -1166,18 +1264,33 @@ impl Simulator {
         fold: Option<WireOp>,
     ) -> Option<Vec<Vec<u8>>> {
         let t0 = Instant::now();
-        let ack = match self.transport.exchange(
-            label,
-            RoundCharge {
-                messages,
-                bytes,
-                machine_bytes,
-            },
-            payloads,
-            fold,
-        ) {
-            Ok(ack) => ack,
-            Err(e) => std::panic::panic_any(e),
+        let virtual_round = payloads.is_empty();
+        let mut payloads = Some(payloads);
+        let mut replays = 0usize;
+        let ack = loop {
+            let round_payloads = payloads.take().unwrap_or_default();
+            match self.transport.exchange(
+                label,
+                RoundCharge {
+                    messages,
+                    bytes,
+                    machine_bytes,
+                },
+                round_payloads,
+                fold,
+            ) {
+                Ok(ack) => break ack,
+                // Only charge-only barriers replay: their (empty) payload
+                // is still intact after a failed attempt, so a recovered
+                // fleet re-acks the declared load bit-identically.  A
+                // payload round's buffers were consumed by the send —
+                // those propagate (the shuffle data plane, where chaos
+                // faults land, never routes payloads through here).
+                Err(e) if virtual_round => {
+                    self.recover_or_abort(label, &mut replays, e);
+                }
+                Err(e) => std::panic::panic_any(e),
+            }
         };
         self.metrics.timings.push(RoundTiming {
             label: label.to_string(),

@@ -281,6 +281,10 @@ pub enum TransportError {
     /// Shard shipping hit a spill-layer fault (the shard wire format is
     /// the spill file framing).
     Spill(crate::graph::spill::SpillError),
+    /// Worker recovery ran out of respawn attempts (or respawn was
+    /// disabled): the run cannot make progress.  `detail` carries the
+    /// underlying fault that triggered recovery.
+    RecoveryExhausted { attempts: usize, detail: String },
 }
 
 impl TransportError {
@@ -326,6 +330,33 @@ impl TransportError {
                 detail,
             },
             other => other,
+        }
+    }
+
+    /// Is this a disconnect-shaped fault a worker respawn can heal?
+    /// Crashes, short reads, and socket I/O errors are; correctness
+    /// failures (checksum/accounting/protocol divergence, spill faults)
+    /// are not — replaying a lying worker would launder a wrong answer.
+    pub fn recoverable(&self) -> bool {
+        matches!(
+            self,
+            TransportError::WorkerCrashed { .. }
+                | TransportError::ShortRead { .. }
+                | TransportError::Io { .. }
+        )
+    }
+
+    /// The worker index the fault is attributed to, when known.
+    pub fn worker(&self) -> Option<usize> {
+        match self {
+            TransportError::Io { worker, .. }
+            | TransportError::ShortRead { worker, .. }
+            | TransportError::BadMagic { worker }
+            | TransportError::ChecksumMismatch { worker, .. }
+            | TransportError::Protocol { worker, .. } => *worker,
+            TransportError::WorkerCrashed { worker, .. } => Some(*worker),
+            TransportError::AccountingMismatch { machine, .. } => Some(*machine),
+            TransportError::Spill(_) | TransportError::RecoveryExhausted { .. } => None,
         }
     }
 }
@@ -387,6 +418,10 @@ impl fmt::Display for TransportError {
                  model charged {expected}"
             ),
             TransportError::Spill(e) => write!(f, "shard shipping: {e}"),
+            TransportError::RecoveryExhausted { attempts, detail } => write!(
+                f,
+                "worker recovery exhausted after {attempts} respawn attempt(s): {detail}"
+            ),
         }
     }
 }
@@ -455,6 +490,17 @@ pub struct HopSpec<'a> {
     pub label: &'a str,
     pub op: WireOp,
     pub include_self: bool,
+}
+
+/// What one successful [`ShuffleOps::recover`] did: how many respawn
+/// attempts it took and how long the mesh rebuild ran.  The engine logs
+/// this into [`crate::mpc::Metrics`]' recovery block.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RecoveryInfo {
+    /// Respawn attempts consumed (1 = first respawn succeeded).
+    pub respawn_attempts: usize,
+    /// Wall-clock of the respawn + mesh rebuild, in milliseconds.
+    pub wall_ms: f64,
 }
 
 /// The control-plane operations of a shuffle-capable transport
@@ -533,6 +579,18 @@ pub trait ShuffleOps {
         map: &[u32],
         new: &crate::graph::ShardedGraph,
     ) -> Result<(), TransportError>;
+
+    /// Heal the mesh after a disconnect-shaped fault (`cause`): kill the
+    /// surviving workers, respawn a fresh fleet with bounded
+    /// retry-with-exponential-backoff, and rebuild the peer mesh.  Shard
+    /// custody and the value mirror are *not* re-shipped here — recovery
+    /// drops them so the next round's custody/mirror checks lazily
+    /// re-establish both (from the generation checkpoint's spill files
+    /// when checkpointing is on), replaying from the last generation
+    /// barrier.  A respawn budget of zero (respawn disabled) or an
+    /// exhausted budget fails with the typed
+    /// [`TransportError::RecoveryExhausted`].
+    fn recover(&mut self, cause: &TransportError) -> Result<RecoveryInfo, TransportError>;
 }
 
 /// The in-process backend: machines share the address space, so routing
@@ -648,5 +706,57 @@ mod tests {
             actual: 8,
         };
         assert!(e.to_string().contains("charged 12"), "{e}");
+        let e = TransportError::RecoveryExhausted {
+            attempts: 3,
+            detail: "worker 2 crashed".into(),
+        };
+        assert!(e.to_string().contains("3 respawn attempt"), "{e}");
+        assert!(e.to_string().contains("worker 2 crashed"), "{e}");
+    }
+
+    #[test]
+    fn only_disconnect_faults_are_recoverable() {
+        assert!(TransportError::WorkerCrashed {
+            worker: 1,
+            detail: "gone".into()
+        }
+        .recoverable());
+        assert!(TransportError::ShortRead {
+            worker: None,
+            wanted: 8,
+            got: 0
+        }
+        .recoverable());
+        assert!(TransportError::Io {
+            worker: Some(0),
+            op: "read",
+            source: std::io::Error::from(std::io::ErrorKind::ConnectionReset),
+        }
+        .recoverable());
+        // correctness failures must abort, never replay
+        assert!(!TransportError::BadMagic { worker: None }.recoverable());
+        assert!(!TransportError::ChecksumMismatch {
+            worker: None,
+            expected: 1,
+            actual: 2
+        }
+        .recoverable());
+        assert!(!TransportError::Protocol {
+            worker: Some(0),
+            detail: "lied".into()
+        }
+        .recoverable());
+        assert!(!TransportError::AccountingMismatch {
+            label: "hop".into(),
+            machine: 0,
+            expected: 1,
+            actual: 2
+        }
+        .recoverable());
+        assert!(!TransportError::RecoveryExhausted {
+            attempts: 0,
+            detail: "off".into()
+        }
+        .recoverable());
     }
 }

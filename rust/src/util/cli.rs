@@ -83,12 +83,43 @@ impl Args {
     where
         T::Err: std::fmt::Display,
     {
-        match self.str_opt(key) {
-            None => default,
-            Some(v) => v
-                .parse()
-                .unwrap_or_else(|e| panic!("--{key}: cannot parse {v:?}: {e}")),
+        self.typed_opt(key).unwrap_or(default)
+    }
+
+    fn typed_opt<T: std::str::FromStr>(&self, key: &str) -> Option<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        self.str_opt(key).map(|v| {
+            v.parse()
+                .unwrap_or_else(|e| panic!("--{key}: cannot parse {v:?}: {e}"))
+        })
+    }
+
+    /// Optional count flag: `None` when absent (callers fall back to an
+    /// environment variable or a compiled-in default).
+    pub fn usize_opt(&self, key: &str) -> Option<usize> {
+        self.typed_opt(key)
+    }
+
+    /// Optional count flag where 0 is invalid (timeouts, retry budgets):
+    /// `None` when absent, fails at the flag on 0 — a zero timeout would
+    /// otherwise surface downstream as an instantly-dead socket.
+    pub fn nonzero_u64_opt(&self, key: &str) -> Option<u64> {
+        let v: u64 = self.typed_opt(key)?;
+        if v == 0 {
+            panic!("--{key}: must be >= 1 (got 0)");
         }
+        Some(v)
+    }
+
+    /// [`nonzero_u64_opt`](Args::nonzero_u64_opt) for `usize` flags.
+    pub fn nonzero_usize_opt(&self, key: &str) -> Option<usize> {
+        let v: usize = self.typed_opt(key)?;
+        if v == 0 {
+            panic!("--{key}: must be >= 1 (got 0)");
+        }
+        Some(v)
     }
 
     /// Count flag where 0 is invalid (machine/thread/worker counts): a
@@ -229,6 +260,31 @@ mod tests {
     fn zero_threads_is_rejected() {
         let a = parse(&["--threads", "0"]);
         let _ = a.nonzero_usize_or("threads", 8);
+    }
+
+    #[test]
+    fn optional_counts_pass_through_or_stay_none() {
+        let a = parse(&["--io-timeout", "30", "--connect-retries", "4"]);
+        assert_eq!(a.nonzero_u64_opt("io-timeout"), Some(30));
+        assert_eq!(a.nonzero_usize_opt("connect-retries"), Some(4));
+        assert_eq!(a.nonzero_u64_opt("absent"), None);
+        assert_eq!(a.usize_opt("respawn-budget"), None);
+        let b = parse(&["--respawn-budget", "0"]);
+        assert_eq!(b.usize_opt("respawn-budget"), Some(0)); // 0 = disable, valid
+    }
+
+    #[test]
+    #[should_panic(expected = "--io-timeout: must be >= 1")]
+    fn zero_io_timeout_is_rejected() {
+        let a = parse(&["--io-timeout", "0"]);
+        let _ = a.nonzero_u64_opt("io-timeout");
+    }
+
+    #[test]
+    #[should_panic(expected = "--connect-retries: must be >= 1")]
+    fn zero_connect_retries_is_rejected() {
+        let a = parse(&["--connect-retries", "0"]);
+        let _ = a.nonzero_usize_opt("connect-retries");
     }
 
     #[test]

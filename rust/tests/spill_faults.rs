@@ -232,6 +232,62 @@ fn reload_rejects_degenerate_manifest_dimensions() {
 }
 
 #[test]
+fn torn_manifest_rewrite_never_shadows_the_valid_one() {
+    // Crash window of write_atomic: the full new image lands in
+    // `manifest.lcm.tmp` first, so a crash mid-write leaves a torn tmp
+    // next to the intact old manifest.  Reopening must see the old
+    // manifest untouched — bit-identically — and never read the tmp.
+    let flat = generators::gnp(130, 0.03, &mut Rng::new(9));
+    let g = ShardedGraph::from_graph_with(&flat, 4, SpillPolicy::budget(0));
+    let dir = persist_dir("torn");
+    g.persist_spilled(&dir).unwrap();
+    let want = g.to_graph();
+
+    let manifest = dir.join(lcc::graph::spill::MANIFEST_NAME);
+    let before = fs::read(&manifest).unwrap();
+    // half the valid image, then garbage: a realistic torn write
+    let mut torn = before[..before.len() / 2].to_vec();
+    torn.extend_from_slice(b"crashed mid-write");
+    fs::write(dir.join("manifest.lcm.tmp"), &torn).unwrap();
+
+    let h = ShardedGraph::open_spilled(&dir, SpillPolicy::unbounded()).unwrap();
+    assert_eq!(h.to_graph(), want);
+    assert_eq!(fs::read(&manifest).unwrap(), before, "old manifest intact");
+
+    // ... and the next persist simply rewrites over the stale tmp
+    g.persist_spilled(&dir).unwrap();
+    assert!(!dir.join("manifest.lcm.tmp").exists());
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn torn_checkpoint_rewrite_keeps_the_previous_generation() {
+    // Same crash window for the run checkpoint: a torn
+    // `checkpoint.lcc.tmp` must not shadow the durable generation, and a
+    // truncated checkpoint file itself must be a typed error, not a panic.
+    use lcc::graph::spill::{read_checkpoint, write_checkpoint, RunCheckpoint, CHECKPOINT_NAME};
+    let dir = persist_dir("ckpt-torn");
+    fs::create_dir_all(&dir).unwrap();
+    let ckpt = RunCheckpoint {
+        generation: 3,
+        machines: 4,
+        mirror_hash: Some(0xFEED_BEEF),
+        rng_state: [1, 2, 3, 4],
+        rounds: 17,
+        custody_dir: "gen-3".to_string(),
+    };
+    let path = dir.join(CHECKPOINT_NAME);
+    write_checkpoint(&path, &ckpt).unwrap();
+    fs::write(dir.join(format!("{CHECKPOINT_NAME}.tmp")), b"torn").unwrap();
+    assert_eq!(read_checkpoint(&path).unwrap(), ckpt);
+
+    let bytes = fs::read(&path).unwrap();
+    fs::write(&path, &bytes[..bytes.len() - 3]).unwrap();
+    assert!(read_checkpoint(&path).is_err(), "truncated checkpoint is typed");
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
 fn persist_works_from_a_resident_graph_too() {
     // persist/open is backend-agnostic: a resident graph persists the
     // same files a spilled one would.

@@ -410,9 +410,13 @@ fn fake_ack_state(peer: &mut FakePeer) {
 }
 
 #[test]
-fn shuffle_killed_worker_mid_run_is_typed_not_a_hang() {
+fn shuffle_killed_workers_with_respawn_disabled_is_typed_not_a_hang() {
+    // respawn budget 0: a dead worker is terminal — the run must die with
+    // the typed RecoveryExhausted (never hang, never retry forever)
     let g = small_graph(2);
-    let mut t = ShuffleTransport::spawn(2, worker_bin()).expect("spawn");
+    let mut cfg = net::NetConfig::from_env();
+    cfg.respawn_budget = 0;
+    let mut t = ShuffleTransport::spawn_with(2, worker_bin(), cfg).expect("spawn");
     t.load_graph(&g).expect("load");
     t.kill_worker(0);
     t.kill_worker(1);
@@ -434,12 +438,46 @@ fn shuffle_killed_worker_mid_run_is_typed_not_a_hang() {
         .downcast::<TransportError>()
         .expect("typed panic payload");
     match *err {
-        TransportError::WorkerCrashed { .. }
-        | TransportError::ShortRead { .. }
-        | TransportError::Io { .. }
-        | TransportError::Protocol { .. } => {}
-        ref other => panic!("expected a crash-shaped error, got {other}"),
+        TransportError::RecoveryExhausted { attempts, ref detail } => {
+            assert_eq!(attempts, 0);
+            assert!(detail.contains("respawn disabled"), "{detail}");
+        }
+        ref other => panic!("expected RecoveryExhausted, got {other}"),
     }
+}
+
+#[test]
+fn shuffle_killed_workers_recover_and_the_hop_is_bit_identical() {
+    // same hop, three ways: in-process reference, undisturbed shuffle,
+    // and a shuffle whose whole fleet is killed before the round — the
+    // recovered run must produce the identical fold
+    let g = small_graph(2);
+    let vals: Vec<u32> = (0..g.num_vertices() as u32).map(|v| v * 7 % 13).collect();
+    let mpc = || MpcConfig {
+        machines: 2,
+        space_per_machine: None,
+        spill_budget: None,
+        threads: 1,
+    };
+    let mut sim_ref = Simulator::new(mpc());
+    let want = lcc::cc::common::min_hop(&mut sim_ref, "hop", &g, &vals, true);
+
+    let mut t = ShuffleTransport::spawn(2, worker_bin()).expect("spawn");
+    t.load_graph(&g).expect("load");
+    t.kill_worker(0);
+    t.kill_worker(1);
+    let mut sim = Simulator::with_transport(mpc(), Box::new(t));
+    let got = lcc::cc::common::min_hop(&mut sim, "hop", &g, &vals, true);
+    assert_eq!(got, want, "recovered hop diverged");
+    assert!(
+        !sim.metrics.recovery.events.is_empty(),
+        "the kill must be logged as a recovery event"
+    );
+    assert_eq!(
+        sim.metrics.num_rounds(),
+        sim_ref.metrics.num_rounds(),
+        "replayed rounds are charged once"
+    );
 }
 
 #[test]
@@ -521,14 +559,14 @@ fn shuffle_diverging_fold_checksum_is_a_protocol_error() {
 
 /// Spawn one real `lcc worker` process connected to `addr` (the manual
 /// counterpart of `ProcTransport::spawn` for mixed real/fake topologies).
-/// The peer-connect deadline is shortened so refusal faults surface in
-/// milliseconds instead of the production retry window.
+/// The peer-connect retry budget is shortened so refusal faults surface
+/// in milliseconds instead of the production backoff window.
 fn spawn_real_worker(addr: std::net::SocketAddr) -> std::process::Child {
     std::process::Command::new(worker_bin())
         .arg("worker")
         .arg("--connect")
         .arg(addr.to_string())
-        .env("LCC_PEER_CONNECT_DEADLINE_MS", "300")
+        .env("LCC_CONNECT_RETRIES", "3")
         .stdin(std::process::Stdio::null())
         .stdout(std::process::Stdio::null())
         .stderr(std::process::Stdio::inherit())
@@ -632,8 +670,16 @@ fn shuffle_corrupted_peer_frame_is_typed() {
         }
         net::write_frame(&mut w, FrameKind::PeersAck, peers.seq, &[]).unwrap();
 
-        // shard custody for machine 1, answered honestly
-        let load = net::read_frame(&mut r).unwrap();
+        // shard custody for machine 1, answered honestly (serving the
+        // coordinator's generation-boundary heartbeat first)
+        let load = loop {
+            let f = net::read_frame(&mut r).unwrap();
+            if f.kind == FrameKind::Ping {
+                net::write_frame(&mut w, FrameKind::Pong, f.seq, &[]).unwrap();
+                continue;
+            }
+            break f;
+        };
         assert_eq!(load.kind, FrameKind::LoadShard);
         let image = &load.body[12..];
         let (edges, checksum) = lcc::graph::spill::read_shard_bytes(
@@ -727,6 +773,110 @@ fn shuffle_corrupted_peer_frame_is_typed() {
     let _ = fake.join();
     let _ = child.kill();
     let _ = child.wait();
+}
+
+// ---------------------------------------------------------------------------
+// chaos matrix: coordinator-driven recovery at the generation boundaries
+//
+// Each case injects `kill:w<W>@gen=<G>` into one worker of a real shuffle
+// fleet via the deterministic fault plan: the worker exits right after
+// acking its G-th Rewire — the generation boundary — and the run must
+// recover (respawn + custody re-ship + replay) to a report bit-identical
+// to the undisturbed baseline, with the kill logged as a recovery event.
+
+use lcc::coordinator::{Driver, Report, RunConfig};
+use lcc::mpc::TransportMode;
+
+fn chaos_cfg(machines: usize, fault_plan: Option<String>) -> RunConfig {
+    RunConfig {
+        algorithm: "lc".into(),
+        machines,
+        transport: TransportMode::Shuffle,
+        worker_bin: Some(worker_bin().to_path_buf()),
+        verify: true,
+        fault_plan,
+        respawn_budget: Some(3),
+        ..Default::default()
+    }
+}
+
+/// Everything bit-identity covers: labels (via the oracle check) plus the
+/// full round/byte accounting.  Replayed rounds are charged once, so a
+/// recovered run's metrics must equal an undisturbed run's exactly.
+fn assert_bit_identical(case: &str, got: &Report, want: &Report) {
+    assert_eq!(got.verified, Some(true), "{case}: oracle check");
+    assert_eq!(got.num_components, want.num_components, "{case}");
+    assert_eq!(got.largest_component, want.largest_component, "{case}");
+    assert_eq!(got.phases, want.phases, "{case}");
+    assert_eq!(got.rounds, want.rounds, "{case}");
+    assert_eq!(got.edges_per_phase, want.edges_per_phase, "{case}");
+    assert_eq!(got.nodes_per_phase, want.nodes_per_phase, "{case}");
+    assert_eq!(got.total_shuffle_bytes, want.total_shuffle_bytes, "{case}");
+    assert_eq!(got.max_round_bytes, want.max_round_bytes, "{case}");
+    assert_eq!(got.dht_ops, want.dht_ops, "{case}");
+}
+
+#[test]
+fn chaos_matrix_kills_every_worker_at_early_boundaries_m4() {
+    // a cycle contracts over ~log n generations: boundaries 1 and 2 are
+    // guaranteed mid-run, so every injected kill actually fires
+    let flat = generators::cycle(96);
+    let base = Driver::new(chaos_cfg(4, None))
+        .try_run_named(&flat, "chaos")
+        .expect("undisturbed baseline");
+    assert_eq!(base.verified, Some(true));
+    assert!(base.recovery.events.is_empty(), "baseline saw no faults");
+    let mut recovered = 0usize;
+    for w in 0..4 {
+        for gen in [1u64, 2] {
+            let plan = format!("kill:w{w}@gen={gen}");
+            let r = Driver::new(chaos_cfg(4, Some(plan.clone())))
+                .try_run_named(&flat, "chaos")
+                .unwrap_or_else(|e| panic!("{plan}: {e}"));
+            assert_bit_identical(&plan, &r, &base);
+            recovered += r.recovery.events.len();
+        }
+    }
+    assert!(
+        recovered >= 8,
+        "every mid-run kill must be healed and logged (got {recovered})"
+    );
+}
+
+#[test]
+fn chaos_matrix_kills_every_worker_at_the_first_boundary_m16() {
+    let flat = generators::cycle(192);
+    let base = Driver::new(chaos_cfg(16, None))
+        .try_run_named(&flat, "chaos")
+        .expect("undisturbed baseline");
+    assert_eq!(base.verified, Some(true));
+    let mut recovered = 0usize;
+    for w in 0..16 {
+        let plan = format!("kill:w{w}@gen=1");
+        let r = Driver::new(chaos_cfg(16, Some(plan.clone())))
+            .try_run_named(&flat, "chaos")
+            .unwrap_or_else(|e| panic!("{plan}: {e}"));
+        assert_bit_identical(&plan, &r, &base);
+        recovered += r.recovery.events.len();
+    }
+    assert!(
+        recovered >= 16,
+        "every mid-run kill must be healed and logged (got {recovered})"
+    );
+}
+
+#[test]
+fn chaos_with_respawn_disabled_is_a_typed_recovery_exhaustion() {
+    let flat = generators::cycle(64);
+    let mut cfg = chaos_cfg(4, Some("kill:w1@gen=1".into()));
+    cfg.respawn_budget = Some(0);
+    match Driver::new(cfg).try_run_named(&flat, "chaos") {
+        Err(TransportError::RecoveryExhausted { attempts, detail }) => {
+            assert_eq!(attempts, 0);
+            assert!(detail.contains("respawn disabled"), "{detail}");
+        }
+        other => panic!("expected RecoveryExhausted, got {other:?}"),
+    }
 }
 
 /// `exchange` used directly (same entry the simulator uses) must also
