@@ -152,6 +152,9 @@ pub fn round_breakdown(machines: usize, transport: TransportMode) -> Option<crat
                     .set("gen_ms", t.gen_ms)
                     .set("shuffle_ms", t.shuffle_ms)
                     .set("fold_ms", t.fold_ms)
+                    .set("allocs", t.allocs)
+                    .set("shard_bytes_mapped", t.shard_bytes_mapped)
+                    .set("shard_bytes_copied", t.shard_bytes_copied)
             })
             .collect(),
     );
@@ -471,6 +474,22 @@ pub fn suite_json(
         Some(b) => doc.set("round_breakdown", b),
         None => doc,
     };
+    // Process-cumulative data-plane counters: how many shard-payload
+    // bytes this run walked in place (mmap / borrowed frame) vs copied
+    // through owned buffers.  CI's spilled run gates on these — a
+    // regression that silently rehydrates shards flips `shard_copies`
+    // nonzero and fails the job (see scripts/bench_compare.py and the
+    // spill job in .github/workflows/tier1.yml).
+    let dp = crate::graph::spill::data_plane_counters();
+    let doc = doc.set(
+        "data_plane",
+        Json::obj()
+            .set("shard_bytes_mapped", dp.shard_bytes_mapped)
+            .set("shard_bytes_copied", dp.shard_bytes_copied)
+            .set("shard_maps", dp.shard_maps)
+            .set("shard_copies", dp.shard_copies)
+            .set("allocs", crate::util::alloc::allocation_count()),
+    );
     doc
         .set(
             "threads_available",
@@ -536,6 +555,12 @@ mod tests {
         assert!(rounds[0].get("gen_ms").and_then(|j| j.as_f64()).is_some());
         assert!(rounds[0].get("shuffle_ms").and_then(|j| j.as_f64()).is_some());
         assert!(rounds[0].get("fold_ms").and_then(|j| j.as_f64()).is_some());
+        assert!(rounds[0].get("allocs").and_then(|j| j.as_i64()).is_some());
+        // the zero-copy gate's counters ride in every artifact
+        let dp = doc.get("data_plane").expect("data_plane present");
+        for k in ["shard_bytes_mapped", "shard_bytes_copied", "shard_maps", "shard_copies", "allocs"] {
+            assert!(dp.get(k).and_then(|j| j.as_i64()).is_some(), "missing data_plane.{k}");
+        }
         // round-trips through the parser
         let text = doc.pretty();
         assert!(crate::util::json::parse(&text).is_ok());

@@ -101,12 +101,28 @@ where
         return out;
     }
     let mut out: Vec<V> = vals.to_vec();
+    // Sub-shard splitting (non-wire only): with more pool threads than
+    // shards, whole-shard chunks would leave workers idle; splitting by
+    // row range keeps them fed, and a mapped (spilled) shard hands each
+    // sub-chunk a borrowed cursor slice over the same image — no copy.
+    // The fold being associative + commutative, and the charge being
+    // pre-computed, values and metrics stay bit-identical for every
+    // `parts`.  The wire path keeps one chunk per shard: it serializes
+    // each machine's byte image in chunk stream order, which must not
+    // depend on the thread count.
+    let parts = if sim.wire_mode() {
+        1
+    } else {
+        sim.cfg.threads.max(1)
+    };
     // vertices with no messages keep their own value (out prefilled), and
     // the fold *replaces* on a key's first message, so with
     // include_self=false a vertex's own value correctly drops out as soon
-    // as any neighbor message arrives, and is kept otherwise.
-    let chunks = g.msg_chunks(move |s, edges| {
-        let (sa, sb) = if include_self {
+    // as any neighbor message arrives, and is kept otherwise.  The shard's
+    // `1/p` range of self messages rides on its primary chunk only, so
+    // splitting never duplicates them.
+    let chunks = g.msg_chunks_split(parts, move |s, primary, edges| {
+        let (sa, sb) = if include_self && primary {
             chunk_range(n, p, s)
         } else {
             (0, 0)

@@ -103,7 +103,7 @@ where
                 bytes: 16 * m_edges,
                 machine_bytes,
             };
-            let chunks = cur.msg_chunks(|_s, edges| edges.map(|(u, v)| (0u64, (u, v))));
+            let chunks = cur.msg_chunks(|_s, _primary, edges| edges.map(|(u, v)| (0u64, (u, v))));
             let _: Vec<()> = sim.round_map_sharded("finisher/ship", chunks, charge, |_, _| ());
             let node_labels = oracle::components_sharded(&cur); // min node id per comp
             let m = min_orig(cur.num_vertices(), &node_of, &resolved);

@@ -54,7 +54,7 @@ pub fn min_neighbor(g: &ShardedGraph, rho: &Priorities, sim: &mut Simulator) -> 
 pub fn rewire(g: &ShardedGraph, m: &[Vertex], sim: &mut Simulator) -> ShardedGraph {
     let n = g.num_vertices();
     let p = g.num_shards();
-    let chunks = g.msg_chunks(move |s, edges| {
+    let chunks = g.msg_chunks(move |s, _primary, edges| {
         let (sa, sb) = chunk_range(n, p, s);
         edges
             .flat_map(move |(u, v)| {

@@ -222,7 +222,7 @@ mod tests {
         let res = run(500, g.edges().iter().copied(), &cfg(3));
         assert_eq!(res.summary.num_shards(), 3);
         for s in 0..3 {
-            for &(u, v) in res.summary.read_shard(s).unwrap().iter() {
+            for (u, v) in res.summary.read_shard(s).unwrap().iter() {
                 assert_eq!(machine_of(u.min(v) as u64, 3), s);
             }
         }

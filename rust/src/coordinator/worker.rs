@@ -131,15 +131,48 @@ impl Mesh {
     }
 }
 
+/// Custody of one shard generation, held as its **framed file image**:
+/// the `LoadShard` body (or the image re-encoded from peer-shipped
+/// rewire edges) is kept verbatim — exactly the bytes a spill file of
+/// this shard holds — and every described round walks it in place
+/// through a borrowed [`spill::ShardCursor`].  The checksum is verified
+/// once when custody is taken; per-round reads re-parse only the cheap
+/// header.  No rehydrated `Vec<(u32, u32)>` copy of the shard exists for
+/// the lifetime of a generation.
+struct ShardCustody {
+    /// The full shard-file image (columnar layout; see `graph::spill`).
+    image: Vec<u8>,
+    shard: u32,
+    machines: u32,
+    /// Statistics re-derived independently from the image — the
+    /// coordinator cross-checks these against its own cache.
+    stats: ShardStats,
+    /// Logical row-major payload checksum ([`spill::checksum_edges`]).
+    checksum: u64,
+}
+
+impl ShardCustody {
+    /// Borrowed cursor over the retained image.  Header-only re-parse:
+    /// the image was fully validated (checksum + index) at custody.
+    fn cursor(&self) -> spill::ShardCursor<'_> {
+        let (cursor, checksum) =
+            spill::parse_shard_header(&self.image, self.shard, self.machines, Path::new("<custody>"))
+                .expect("custody image was validated when custody was taken");
+        debug_assert_eq!(checksum, self.checksum);
+        debug_assert_eq!(cursor.len() as u64, self.stats.len);
+        cursor
+    }
+}
+
 /// One worker's custody state.
 struct WorkerState {
     worker_id: u32,
     machines: u32,
-    /// The shard this machine owns (edges + independently derived stats),
-    /// once the coordinator shipped it.  On the shuffle transport the
-    /// edges are the generation source of every described round; after a
-    /// `Rewire` the slot advances to the next generation peer-to-peer.
-    shard: Option<(Vec<(Vertex, Vertex)>, ShardStats)>,
+    /// The shard this machine owns, once the coordinator shipped it.  On
+    /// the shuffle transport the image is the generation source of every
+    /// described round; after a `Rewire` the slot advances to the next
+    /// generation peer-to-peer.
+    shard: Option<ShardCustody>,
     /// Mesh listener, bound at startup (its port travels in the Hello),
     /// consumed when the `Peers` roster arrives.
     mesh_listener: Option<TcpListener>,
@@ -368,7 +401,7 @@ fn handle_load<W: std::io::Write>(
     writer: &mut W,
 ) -> Result<(), TransportError> {
     let mut r = BodyReader::new(&frame.body);
-    let parsed = (|| -> Result<(u32, Vec<(Vertex, Vertex)>, u64), SpillError> {
+    let parsed = (|| -> Result<(u32, &[u8]), SpillError> {
         let shard = r
             .u32("load shard index")
             .map_err(|e| SpillError::Corrupt {
@@ -385,14 +418,20 @@ fn handle_load<W: std::io::Write>(
                 path: "<frame>".into(),
                 detail: e.to_string(),
             })?;
-        let (edges, checksum) =
-            spill::read_shard_bytes(image, shard, state.machines, Path::new("<frame>"))?;
-        Ok((shard, edges, checksum))
+        Ok((shard, image))
     })();
-    let (shard, edges, checksum) = match parsed {
+    let (shard, image) = match parsed {
         Ok(v) => v,
         Err(e) => return worker_err(writer, frame.seq, &format!("shard image rejected: {e}")),
     };
+    // Full validation — checksum walk + range index — happens exactly
+    // once, here at the custody boundary; the image is then kept as the
+    // working representation and only header-parsed per round.
+    let (cursor, checksum) =
+        match spill::parse_shard_image(image, shard, state.machines, Path::new("<frame>")) {
+            Ok(v) => v,
+            Err(e) => return worker_err(writer, frame.seq, &format!("shard image rejected: {e}")),
+        };
     if shard != state.worker_id {
         return worker_err(
             writer,
@@ -402,7 +441,7 @@ fn handle_load<W: std::io::Write>(
     }
     // shard-ownership invariant, validated on the machine taking custody
     let p = state.machines as usize;
-    for &(u, v) in &edges {
+    for (u, v) in cursor.iter() {
         if u >= v || machine_of(u as u64, p) != state.worker_id as usize {
             return worker_err(
                 writer,
@@ -411,7 +450,7 @@ fn handle_load<W: std::io::Write>(
             );
         }
     }
-    let stats = ShardStats::from_edges(&edges, p, state.worker_id as usize);
+    let stats = ShardStats::from_pairs(cursor.iter(), p, state.worker_id as usize);
     let mut body = Vec::with_capacity(4 + 8 + 8 + 4 + 8 * p);
     body.extend_from_slice(&shard.to_le_bytes());
     body.extend_from_slice(&stats.len.to_le_bytes());
@@ -421,7 +460,13 @@ fn handle_load<W: std::io::Write>(
         body.extend_from_slice(&c.to_le_bytes());
     }
     net::write_frame(writer, FrameKind::LoadAck, frame.seq, &body)?;
-    state.shard = Some((edges, stats));
+    state.shard = Some(ShardCustody {
+        image: image.to_vec(),
+        shard,
+        machines: state.machines,
+        stats,
+        checksum,
+    });
     Ok(())
 }
 
@@ -864,7 +909,7 @@ fn hop_inner(
         )));
     }
     let n = state.mirror.len() / vb;
-    let Some((edges, _stats)) = state.shard.as_ref() else {
+    let Some(custody) = state.shard.as_ref() else {
         return Err(proto("hop before shard custody".into()));
     };
     if state.mesh.is_none() && p > 1 {
@@ -872,6 +917,8 @@ fn hop_inner(
     }
 
     // ---- generate: the owned shard × the mirror ------------------------
+    // The custody image is walked in place — no row materialization.
+    let cursor = custody.cursor();
     let mirror = &state.mirror;
     let val = |v: Vertex| &mirror[v as usize * vb..(v as usize + 1) * vb];
     let mut buckets: Vec<Vec<u8>> = (0..p).map(|_| Vec::new()).collect();
@@ -880,7 +927,7 @@ fn hop_inner(
         b.extend_from_slice(&(key as u64).to_le_bytes());
         b.extend_from_slice(val(value_of));
     };
-    for &(u, v) in edges {
+    for (u, v) in cursor.iter() {
         if (u as usize) >= n || (v as usize) >= n {
             return Err(proto(format!(
                 "edge ({u},{v}) outside the {n}-vertex mirror"
@@ -997,13 +1044,11 @@ fn handle_rewire<W: std::io::Write>(
     }
 }
 
-type NextShard = (Vec<(Vertex, Vertex)>, ShardStats);
-
 fn rewire_inner(
     state: &mut WorkerState,
     frame: &Frame,
     edges_sent: &mut Vec<bool>,
-) -> Result<(Vec<u8>, NextShard), TransportError> {
+) -> Result<(Vec<u8>, ShardCustody), TransportError> {
     let seq = frame.seq;
     let new_n = {
         let mut r = BodyReader::new(&frame.body);
@@ -1021,7 +1066,7 @@ fn rewire_inner(
     let map_at = |v: usize| -> u32 {
         u32::from_le_bytes(mirror[v * 4..v * 4 + 4].try_into().unwrap())
     };
-    let Some((edges, _stats)) = state.shard.as_ref() else {
+    let Some(custody) = state.shard.as_ref() else {
         return Err(proto("rewire before shard custody".into()));
     };
     if state.mesh.is_none() && p > 1 {
@@ -1029,8 +1074,9 @@ fn rewire_inner(
     }
 
     // ---- relabel + re-bucket by the next generation's ownership --------
+    let cursor = custody.cursor();
     let mut buckets: Vec<Vec<u8>> = (0..p).map(|_| Vec::new()).collect();
-    for &(u, v) in edges {
+    for (u, v) in cursor.iter() {
         if (u as usize) >= map_len || (v as usize) >= map_len {
             return Err(proto(format!("edge ({u},{v}) outside the map")));
         }
@@ -1094,7 +1140,11 @@ fn rewire_inner(
     new_edges.sort_unstable();
     new_edges.dedup();
     let stats = ShardStats::from_edges(&new_edges, p, my);
-    let checksum = spill::checksum_edges(&new_edges);
+    // Re-frame the next generation once, at the custody boundary — the
+    // encode returns the same logical row-major checksum the coordinator
+    // pins, and the image is what every later round (and any onward
+    // custody transfer) walks directly.
+    let (image, checksum) = spill::encode_shard_bytes(my as u32, p as u32, &new_edges);
     let mut body = Vec::with_capacity(8 + 8 + 4 + 8 * p);
     body.extend_from_slice(&stats.len.to_le_bytes());
     body.extend_from_slice(&checksum.to_le_bytes());
@@ -1102,7 +1152,16 @@ fn rewire_inner(
     for &c in &stats.peer_counts {
         body.extend_from_slice(&c.to_le_bytes());
     }
-    Ok((body, (new_edges, stats)))
+    Ok((
+        body,
+        ShardCustody {
+            image,
+            shard: my as u32,
+            machines: p as u32,
+            stats,
+            checksum,
+        },
+    ))
 }
 
 #[cfg(test)]

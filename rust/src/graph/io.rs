@@ -33,11 +33,21 @@ pub fn write_pairs<W: Write>(w: &mut W, edges: &[(Vertex, Vertex)]) -> std::io::
     Ok(())
 }
 
-/// Read exactly `m` edge pairs.  `m` pre-allocates, so callers must have
-/// validated it against the file length first (see [`read_binary`] and the
-/// spill framing in [`super::spill`]).
+/// Cap on the *eager* reservation a declared edge count may drive before
+/// any payload byte has been seen: 1 Mi pairs (8 MiB).  Larger vectors
+/// grow amortized as real data actually arrives, so a validated caller
+/// pays at most one extra copy while a lying header read through an
+/// unvalidated path cannot reserve unbounded memory up front.
+const READ_PAIRS_RESERVE_CAP: usize = 1 << 20;
+
+/// Read exactly `m` edge pairs.  Callers are expected to validate `m`
+/// against the source length first (see [`read_binary`] and the spill
+/// framing in [`super::spill`]); defensively, the pre-allocation is
+/// clamped to [`READ_PAIRS_RESERVE_CAP`] regardless, so a declared count
+/// can never reserve more than the payload bytes actually delivered plus
+/// one bounded chunk.
 pub fn read_pairs<R: Read>(r: &mut R, m: usize) -> std::io::Result<Vec<(Vertex, Vertex)>> {
-    let mut edges = Vec::with_capacity(m);
+    let mut edges = Vec::with_capacity(m.min(READ_PAIRS_RESERVE_CAP));
     let mut pair = [0u8; 8];
     for _ in 0..m {
         r.read_exact(&mut pair)?;
@@ -243,6 +253,17 @@ mod tests {
         std::fs::write(&p2, &bytes).unwrap();
         let err = read_binary(&p2).unwrap_err().to_string();
         assert!(err.contains("truncated or corrupt"), "{err}");
+    }
+
+    #[test]
+    fn lying_edge_count_cannot_reserve_unbounded_memory() {
+        // A declared count in the exabyte range must fail with a clean
+        // read error, not drive `Vec::with_capacity` to an allocator
+        // abort.  Reaching the `Err` at all is the regression check: an
+        // unclamped reservation for this count would be ~100 PiB.
+        let mut short: &[u8] = &[1, 0, 0, 0, 2, 0, 0, 0];
+        let err = read_pairs(&mut short, usize::MAX / 16).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::UnexpectedEof);
     }
 
     #[test]

@@ -119,7 +119,7 @@ impl PartialEq for ShardedGraph {
                     return false; // sound negative: no disk read needed
                 }
             }
-            if *self.shard_data(s) != *other.shard_data(s) {
+            if !self.shard_data(s).iter().eq(other.shard_data(s).iter()) {
                 return false;
             }
         }
@@ -289,25 +289,38 @@ fn finish_shards(
     })
 }
 
-/// A lazily-loaded per-shard message chunk (see
-/// [`ShardedGraph::msg_chunks`]): the shard is read — for spilled
-/// backends, loaded from disk — on the worker that *iterates* the chunk,
-/// so a round holds at most one shard per pool thread in RAM.
+/// A lazily-materialized message chunk over rows `lo..hi` of one shard
+/// (see [`ShardedGraph::msg_chunks`] /
+/// [`msg_chunks_split`](ShardedGraph::msg_chunks_split)): the shard is
+/// read — for spilled backends, mmap'd — on the worker that *iterates*
+/// the chunk, and a mapped shard hands each worker a borrowed
+/// [`ShardCursor`](super::spill::ShardCursor) slice over the shared
+/// image, so splitting one spilled shard across threads costs no copy.
+/// Exactly one chunk per shard carries `primary == true`; per-shard
+/// extras (the self-message range) must chain onto the primary chunk
+/// only, so splitting never duplicates per-vertex messages.
 pub struct ShardMsgChunk<'g, M> {
     g: &'g ShardedGraph,
     s: usize,
+    lo: usize,
+    hi: usize,
+    primary: bool,
     make: M,
 }
 
 impl<'g, M, I> IntoIterator for ShardMsgChunk<'g, M>
 where
-    M: FnOnce(usize, ShardDataIter<'g>) -> I,
+    M: FnOnce(usize, bool, ShardDataIter<'g>) -> I,
     I: Iterator,
 {
     type Item = I::Item;
     type IntoIter = I;
     fn into_iter(self) -> I {
-        (self.make)(self.s, self.g.shard_data(self.s).into_iter())
+        (self.make)(
+            self.s,
+            self.primary,
+            self.g.shard_data(self.s).into_range_iter(self.lo, self.hi),
+        )
     }
 }
 
@@ -521,21 +534,57 @@ impl ShardedGraph {
     }
 
     /// One lazily-loaded message chunk per shard for the sharded round
-    /// entry points: `make(s, edges)` runs on the worker that consumes
-    /// shard `s` and builds its message iterator, so at most
+    /// entry points: `make(s, primary, edges)` runs on the worker that
+    /// consumes shard `s` and builds its message iterator, so at most
     /// `min(threads, machines)` shards are resident during a round.
+    /// Every chunk is the full shard, so `primary` is always `true`.
     pub fn msg_chunks<'g, M, I>(&'g self, make: M) -> Vec<ShardMsgChunk<'g, M>>
     where
-        M: Fn(usize, ShardDataIter<'g>) -> I + Clone,
+        M: Fn(usize, bool, ShardDataIter<'g>) -> I + Clone,
         I: Iterator,
     {
-        (0..self.num_shards())
-            .map(|s| ShardMsgChunk {
-                g: self,
-                s,
-                make: make.clone(),
-            })
-            .collect()
+        self.msg_chunks_split(1, make)
+    }
+
+    /// [`msg_chunks`](Self::msg_chunks) with each shard further split into
+    /// up to `parts` contiguous row sub-ranges, so a round over few (or
+    /// one) spilled shards still saturates every pool thread: a mapped
+    /// shard hands each sub-chunk a borrowed cursor slice over the same
+    /// image — no per-thread copy.  The split is planned purely from the
+    /// RAM-cached shard stats ([`chunk_range`] over `stats.len`), so the
+    /// chunk list — and therefore chunk order and every metric derived
+    /// from it — is identical for resident and spilled backends and for
+    /// any thread count.  Exactly the first sub-chunk of each shard has
+    /// `primary == true`; callers chain per-shard extras (self messages)
+    /// onto primary chunks only.
+    pub fn msg_chunks_split<'g, M, I>(
+        &'g self,
+        parts: usize,
+        make: M,
+    ) -> Vec<ShardMsgChunk<'g, M>>
+    where
+        M: Fn(usize, bool, ShardDataIter<'g>) -> I + Clone,
+        I: Iterator,
+    {
+        let mut chunks = Vec::new();
+        for s in 0..self.num_shards() {
+            let m = self.store.as_store().stats(s).len as usize;
+            // never emit an empty non-primary chunk: a shard with fewer
+            // rows than `parts` splits into at most one chunk per row
+            let k = parts.clamp(1, m.max(1));
+            for i in 0..k {
+                let (lo, hi) = chunk_range(m, k, i);
+                chunks.push(ShardMsgChunk {
+                    g: self,
+                    s,
+                    lo,
+                    hi,
+                    primary: i == 0,
+                    make: make.clone(),
+                });
+            }
+        }
+        chunks
     }
 
     /// Per-machine ownership histogram of the vertex id space.
@@ -558,7 +607,7 @@ impl ShardedGraph {
     pub fn try_to_graph(&self) -> Result<Graph, SpillError> {
         let mut edges: Vec<(Vertex, Vertex)> = Vec::with_capacity(self.num_edges());
         for s in 0..self.num_shards() {
-            edges.extend_from_slice(&self.read_shard(s)?);
+            edges.extend(self.read_shard(s)?);
         }
         // no dedup needed: equal edges share a shard, and shards are deduped
         crate::util::radix::par_sort_edge_pairs(&mut edges, false);
@@ -615,11 +664,16 @@ impl ShardedGraph {
                     (a..b)
                         .map(|s| {
                             let data = self.read_shard(s)?;
+                            let len = data.len() as u64;
+                            // write_shard_file streams a contiguous slice;
+                            // a mapped source copies once here, off the
+                            // hot round path
+                            let edges = data.into_vec();
                             let path = dir.join(spill::shard_file_name(s));
                             let checksum =
-                                spill::write_shard_file(&path, s as u32, p as u32, &data)?;
+                                spill::write_shard_file(&path, s as u32, p as u32, &edges)?;
                             Ok(spill::ManifestShard {
-                                len: data.len() as u64,
+                                len,
                                 checksum,
                                 peer_counts: self.shard_stats(s).peer_counts.clone(),
                             })
@@ -684,14 +738,14 @@ impl ShardedGraph {
                     ),
                 });
             }
-            metas.push(SpilledShard {
+            metas.push(SpilledShard::new(
                 path,
-                stats: ShardStats {
+                ShardStats {
                     len: ms.len,
                     peer_counts: ms.peer_counts.clone(),
                 },
-                checksum: ms.checksum,
-            });
+                ms.checksum,
+            ));
         }
         Ok(ShardedGraph {
             n,
@@ -728,7 +782,7 @@ impl ShardedGraph {
                         let mut deg = vec![0u32; n];
                         for s in a..b {
                             let data = self.shard_data(s);
-                            for &(u, v) in data.iter() {
+                            for (u, v) in data.iter() {
                                 deg[u as usize] += 1;
                                 deg[v as usize] += 1;
                             }
@@ -795,7 +849,7 @@ impl ShardedGraph {
                             (0..new_p).map(|_| Vec::new()).collect();
                         for s in a..b {
                             let data = self.shard_data(s);
-                            for &(u, v) in data.iter() {
+                            for (u, v) in data.iter() {
                                 if let Some((x, y)) = f(u, v) {
                                     let (x, y) = if x <= y { (x, y) } else { (y, x) };
                                     if x != y {
@@ -874,7 +928,7 @@ impl ShardedGraph {
                             let data = self.read_shard(s)?;
                             let mut bufs: Vec<Vec<(Vertex, Vertex)>> =
                                 (0..new_p).map(|_| Vec::new()).collect();
-                            for &(u, v) in data.iter() {
+                            for (u, v) in data.iter() {
                                 if let Some((x, y)) = f(u, v) {
                                     let (x, y) = if x <= y { (x, y) } else { (y, x) };
                                     if x != y {
@@ -1157,7 +1211,7 @@ mod tests {
                 let data = g.read_shard(s).unwrap();
                 let mut prev: Option<(Vertex, Vertex)> = None;
                 let mut peers = vec![0u64; 8];
-                for &(u, v) in data.iter() {
+                for (u, v) in data.iter() {
                     assert!(u < v, "non-canonical ({u},{v})");
                     assert_eq!(machine_of(u as u64, 8), s, "wrong owner for ({u},{v})");
                     peers[machine_of(v as u64, 8)] += 1;

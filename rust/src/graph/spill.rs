@@ -32,12 +32,52 @@
 //! they run correctly over spilled shards but are not bounded by the
 //! budget.
 //!
-//! **File framing** (shared little-endian pair payload with
-//! [`super::io`]): `LCCSHRD1 | shard u32 | num_shards u32 | m u64 |
-//! fnv1a64(payload) u64 | m × (u32, u32)`.  Readers validate the header's
-//! edge count against the actual file length *before* allocating, then
-//! verify the payload checksum — truncation, corruption, and vanished
-//! files surface as typed [`SpillError`]s, never as silently-wrong edges.
+//! **File framing.**  One columnar zero-copy layout serves disk and wire
+//! — the file image written here is the frame body `crate::mpc::net`
+//! ships, and both are read in place through a [`ShardCursor`] without
+//! rehydrating a `Vec<(Vertex, Vertex)>`:
+//!
+//! ```text
+//! off  len
+//!   0    8  magic "LCCSHRD2"
+//!   8    4  shard id (u32 LE)
+//!  12    4  num_shards (u32 LE)
+//!  16    8  m = edge count (u64 LE)
+//!  24    8  fnv1a64 over the logical row-major LE pair encoding
+//!  32    4  index bucket count B (u32 LE); min(m, 4096), 0 if unindexed
+//!  36    4  index span = max(src) + 1 (u32 LE, saturating)
+//!  40       src column: m × u32 LE
+//!  40+4m    dst column: m × u32 LE
+//!  40+8m    index offsets: (B+1) × u64 LE, present iff B > 0
+//! ```
+//!
+//! The checksum stays the *logical* row-major pair hash
+//! ([`checksum_edges`]) rather than a hash of the physical columns, so
+//! manifests, transport acks, and generation pins written against the
+//! legacy framing keep their values unchanged.  The index maps a source
+//! vertex to bucket `v·B/span` (clamped), whose stored offset pair
+//! brackets a binary search — O(1)+O(log(m/B)) per [`ShardCursor::
+//! vertex_range`] lookup.  Every field is read via `from_le_bytes` on
+//! byte slices, so images need no alignment: an mmap'd file and a frame
+//! body at an arbitrary offset parse identically.
+//!
+//! Readers validate the header's edge count against the actual image
+//! length *before* allocating, then verify the payload checksum and (the
+//! checksum does not cover the index bytes) rebuild the expected index
+//! from the src column during the same walk — truncation, corruption, a
+//! lying header, and vanished files all surface as typed [`SpillError`]s,
+//! never as silently-wrong edges.  The legacy row-major `LCCSHRD1`
+//! framing (`header | m × (u32, u32)`) is still accepted on read, so
+//! persisted spills from earlier generations reload.
+//!
+//! **Mmap data plane.**  [`Spilled`] loads map the shard file once per
+//! generation (checksum + index verified on first touch, cached in the
+//! store), after which every read re-parses only the 40-byte header and
+//! iterates the borrowed columns in place: steady-state spilled rounds do
+//! zero per-edge heap allocation, and the mapped pages are clean page
+//! cache the kernel can evict and fault back on demand.  The
+//! [`data_plane_counters`] atomics record bytes mapped vs copied so perf
+//! runs (and CI) can prove the zero-copy path actually ran.
 
 use std::fmt;
 use std::fs::{self, File};
@@ -46,11 +86,13 @@ use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use super::edgelist::Vertex;
-use super::io::{write_pairs, PAIR_BYTES};
+use super::io::PAIR_BYTES;
 use crate::mpc::simulator::machine_of;
 
-/// Magic of one spilled shard file.
+/// Magic of the legacy row-major shard framing (read-only compatibility).
 pub const SHARD_MAGIC: &[u8; 8] = b"LCCSHRD1";
+/// Magic of the columnar zero-copy shard framing (what we write).
+pub const SHARD_MAGIC_V2: &[u8; 8] = b"LCCSHRD2";
 /// Magic of a persisted spill manifest.
 pub const MANIFEST_MAGIC: &[u8; 8] = b"LCCSPILL";
 /// File name of the manifest inside a persisted spill directory.
@@ -58,8 +100,31 @@ pub const MANIFEST_NAME: &str = "manifest.lcm";
 /// Bytes of RAM one resident edge costs (the budget unit).
 pub const EDGE_BYTES: u64 = PAIR_BYTES;
 
-/// magic + shard + num_shards + m + checksum.
+/// Legacy header: magic + shard + num_shards + m + checksum.
 const SHARD_HEADER_BYTES: u64 = 8 + 4 + 4 + 8 + 8;
+/// Columnar header: legacy fields + index bucket count + index span.
+const V2_HEADER_BYTES: u64 = SHARD_HEADER_BYTES + 4 + 4;
+/// Cap on index buckets per shard: 4096 offsets (32 KiB) bound the index
+/// to a rounding error of the file size while keeping buckets of ~m/4096
+/// rows — small enough that the bracketed binary search touches one or
+/// two cache lines of the src column.
+const INDEX_MAX_BUCKETS: u64 = 4096;
+
+/// Bucket count of a shard of `m` edges: one bucket per edge up to the
+/// cap (an empty shard carries no index).
+fn index_buckets(m: u64) -> u64 {
+    m.min(INDEX_MAX_BUCKETS)
+}
+
+/// The bucket holding source vertex `v`: monotone in `v`, so equal
+/// sources share a bucket and each bucket covers a contiguous row range
+/// of the sorted src column.
+#[inline]
+fn index_bucket(v: Vertex, buckets: u64, span: u32) -> usize {
+    debug_assert!(buckets > 0);
+    let b = (v as u64 * buckets) / (span.max(1) as u64);
+    b.min(buckets - 1) as usize
+}
 
 /// File name of shard `s` inside a spill directory.
 pub fn shard_file_name(s: usize) -> String {
@@ -194,15 +259,22 @@ impl Default for Fnv1a {
     }
 }
 
-/// [`Fnv1a`] over the little-endian pair encoding of `edges` — the
-/// payload checksum of the shard framing.
-pub fn checksum_edges(edges: &[(Vertex, Vertex)]) -> u64 {
+/// [`Fnv1a`] over the little-endian row-major pair encoding of a pair
+/// stream — the payload checksum of the shard framing.  Streaming so
+/// borrowed cursors (wire frames, mapped files) checksum without
+/// collecting into a vector.
+pub fn checksum_pairs<I: IntoIterator<Item = (Vertex, Vertex)>>(pairs: I) -> u64 {
     let mut h = Fnv1a::new();
-    for &(u, v) in edges {
+    for (u, v) in pairs {
         h.update(&u.to_le_bytes());
         h.update(&v.to_le_bytes());
     }
     h.finish()
+}
+
+/// [`checksum_pairs`] over a slice of edges.
+pub fn checksum_edges(edges: &[(Vertex, Vertex)]) -> u64 {
+    checksum_pairs(edges.iter().copied())
 }
 
 // ---------------------------------------------------------------------------
@@ -220,11 +292,17 @@ pub struct ShardStats {
 }
 
 impl ShardStats {
-    /// Compute from canonical shard edges.  Debug builds verify the
+    /// Compute from a canonical pair stream (a borrowed cursor or any
+    /// edge iterator) without materializing it.  Debug builds verify the
     /// shard-ownership invariant (`machine_of(min endpoint) == s`).
-    pub fn from_edges(edges: &[(Vertex, Vertex)], p: usize, s: usize) -> ShardStats {
+    pub fn from_pairs<I: IntoIterator<Item = (Vertex, Vertex)>>(
+        pairs: I,
+        p: usize,
+        s: usize,
+    ) -> ShardStats {
         let mut peer_counts = vec![0u64; p];
-        for &(u, v) in edges {
+        let mut len = 0u64;
+        for (u, v) in pairs {
             debug_assert!(u < v, "non-canonical edge ({u},{v})");
             debug_assert_eq!(
                 machine_of(u as u64, p),
@@ -232,12 +310,15 @@ impl ShardStats {
                 "edge ({u},{v}) stored on the wrong shard"
             );
             peer_counts[machine_of(v as u64, p)] += 1;
+            len += 1;
         }
         let _ = s;
-        ShardStats {
-            len: edges.len() as u64,
-            peer_counts,
-        }
+        ShardStats { len, peer_counts }
+    }
+
+    /// [`ShardStats::from_pairs`] over a slice of canonical edges.
+    pub fn from_edges(edges: &[(Vertex, Vertex)], p: usize, s: usize) -> ShardStats {
+        ShardStats::from_pairs(edges.iter().copied(), p, s)
     }
 }
 
@@ -301,31 +382,93 @@ impl EdgeShard {
     }
 }
 
-/// A borrow-or-load view of one shard's edges: `Borrowed` from a resident
-/// store (zero-copy), `Loaded` from a spill file (owned, freed when the
-/// view drops — the "at most one shard per worker" half of the residency
-/// invariant).
+/// A view of one shard's edges: `Borrowed` from a resident store
+/// (zero-copy slice), `Loaded` from the spill fallback path (owned, freed
+/// when the view drops), or `Mapped` — a [`ShardCursor`] walking a
+/// validated shard-file image in place (an mmap'd spill file or a
+/// received wire frame; zero per-edge allocation).
+///
+/// Consumers iterate ([`ShardData::iter`] / `into_iter`) rather than
+/// deref to a slice: a columnar image has no `&[(Vertex, Vertex)]` to
+/// hand out, and that is the point.
 #[derive(Debug)]
 pub enum ShardData<'a> {
     Borrowed(&'a [(Vertex, Vertex)]),
     Loaded(Vec<(Vertex, Vertex)>),
+    Mapped {
+        cursor: ShardCursor<'a>,
+        /// The full framed file image backing the cursor (header +
+        /// columns + index) — transports ship these bytes verbatim, so a
+        /// mapped shard goes on the wire without re-encoding.
+        image: &'a [u8],
+    },
 }
 
-impl std::ops::Deref for ShardData<'_> {
-    type Target = [(Vertex, Vertex)];
-    fn deref(&self) -> &[(Vertex, Vertex)] {
+impl<'a> ShardData<'a> {
+    pub fn len(&self) -> usize {
         match self {
-            ShardData::Borrowed(e) => e,
-            ShardData::Loaded(e) => e,
+            ShardData::Borrowed(e) => e.len(),
+            ShardData::Loaded(e) => e.len(),
+            ShardData::Mapped { cursor, .. } => cursor.len(),
         }
     }
-}
 
-impl ShardData<'_> {
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Borrowing edge iterator (the view stays usable).
+    pub fn iter(&self) -> ShardDataIter<'_> {
+        match self {
+            ShardData::Borrowed(e) => ShardDataIter::Borrowed(e.iter().copied()),
+            ShardData::Loaded(e) => ShardDataIter::Borrowed(e.iter().copied()),
+            ShardData::Mapped { cursor, .. } => ShardDataIter::Cursor(cursor.iter()),
+        }
+    }
+
+    /// The complete framed file image, when this view is backed by one —
+    /// the zero-copy source for shipping the shard on the wire.
+    pub fn image(&self) -> Option<&'a [u8]> {
+        match self {
+            ShardData::Mapped { image, .. } => Some(image),
+            _ => None,
+        }
+    }
+
+    /// The contiguous row-major pairs, when the view borrows them from a
+    /// resident store (`None` for owned or columnar-mapped views — those
+    /// have no `&'a` slice to hand out).  Lets encoders avoid the
+    /// [`into_vec`](Self::into_vec) copy on the resident path.
+    pub fn as_pairs(&self) -> Option<&'a [(Vertex, Vertex)]> {
+        match self {
+            ShardData::Borrowed(e) => Some(e),
+            _ => None,
+        }
+    }
+
+    /// Consume into an owned edge vector (the rehydration escape hatch
+    /// for paths that genuinely need a slice).
     pub fn into_vec(self) -> Vec<(Vertex, Vertex)> {
         match self {
             ShardData::Borrowed(e) => e.to_vec(),
             ShardData::Loaded(e) => e,
+            ShardData::Mapped { cursor, .. } => cursor.iter().collect(),
+        }
+    }
+
+    /// Consume into an iterator over rows `lo..hi` only — the sub-shard
+    /// streaming primitive behind `ShardedGraph::msg_chunks_split`.
+    /// Borrowed and mapped views slice for free; the owned fallback
+    /// trims in place.
+    pub fn into_range_iter(self, lo: usize, hi: usize) -> ShardDataIter<'a> {
+        match self {
+            ShardData::Borrowed(e) => ShardDataIter::Borrowed(e[lo..hi].iter().copied()),
+            ShardData::Loaded(mut e) => {
+                e.truncate(hi);
+                drop(e.drain(..lo));
+                ShardDataIter::Loaded(e.into_iter())
+            }
+            ShardData::Mapped { cursor, .. } => ShardDataIter::Cursor(cursor.slice(lo, hi).iter()),
         }
     }
 }
@@ -334,6 +477,7 @@ impl ShardData<'_> {
 pub enum ShardDataIter<'a> {
     Borrowed(std::iter::Copied<std::slice::Iter<'a, (Vertex, Vertex)>>),
     Loaded(std::vec::IntoIter<(Vertex, Vertex)>),
+    Cursor(CursorIter<'a>),
 }
 
 impl Iterator for ShardDataIter<'_> {
@@ -343,15 +487,19 @@ impl Iterator for ShardDataIter<'_> {
         match self {
             ShardDataIter::Borrowed(it) => it.next(),
             ShardDataIter::Loaded(it) => it.next(),
+            ShardDataIter::Cursor(it) => it.next(),
         }
     }
     fn size_hint(&self) -> (usize, Option<usize>) {
         match self {
             ShardDataIter::Borrowed(it) => it.size_hint(),
             ShardDataIter::Loaded(it) => it.size_hint(),
+            ShardDataIter::Cursor(it) => it.size_hint(),
         }
     }
 }
+
+impl ExactSizeIterator for ShardDataIter<'_> {}
 
 impl<'a> IntoIterator for ShardData<'a> {
     type Item = (Vertex, Vertex);
@@ -360,7 +508,354 @@ impl<'a> IntoIterator for ShardData<'a> {
         match self {
             ShardData::Borrowed(e) => ShardDataIter::Borrowed(e.iter().copied()),
             ShardData::Loaded(e) => ShardDataIter::Loaded(e.into_iter()),
+            ShardData::Mapped { cursor, .. } => ShardDataIter::Cursor(cursor.iter()),
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// zero-copy cursor over a shard image
+
+#[derive(Debug, Clone)]
+enum CursorKind<'a> {
+    /// Legacy `LCCSHRD1` payload: `m × (src u32, dst u32)` row-major LE.
+    Rows { pairs: &'a [u8] },
+    /// Columnar `LCCSHRD2` payload: split src/dst columns plus the
+    /// optional bucket index over the sorted src column.
+    Columns {
+        src: &'a [u8],
+        dst: &'a [u8],
+        /// `(B+1) × u64 LE` bucket offsets; empty when the image carries
+        /// no index (empty shard, unsorted payload, or a sliced cursor).
+        index: &'a [u8],
+        span: u32,
+    },
+}
+
+/// Borrowed walk of one shard image — the working representation of a
+/// spilled or wire-received shard.  All reads go through `from_le_bytes`
+/// on byte slices, so the backing image needs no alignment: an mmap'd
+/// file, a frame body at an arbitrary offset inside a receive buffer,
+/// and an owned fallback copy parse identically, and iteration performs
+/// zero heap allocation.
+#[derive(Debug, Clone)]
+pub struct ShardCursor<'a> {
+    kind: CursorKind<'a>,
+    len: usize,
+}
+
+#[inline]
+fn le_u32(bytes: &[u8], off: usize) -> u32 {
+    u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap())
+}
+
+#[inline]
+fn le_u64(bytes: &[u8], off: usize) -> u64 {
+    u64::from_le_bytes(bytes[off..off + 8].try_into().unwrap())
+}
+
+impl<'a> ShardCursor<'a> {
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The edge at row `i`.
+    #[inline]
+    pub fn get(&self, i: usize) -> (Vertex, Vertex) {
+        debug_assert!(i < self.len);
+        match &self.kind {
+            CursorKind::Rows { pairs } => {
+                let off = i * PAIR_BYTES as usize;
+                (le_u32(pairs, off), le_u32(pairs, off + 4))
+            }
+            CursorKind::Columns { src, dst, .. } => (le_u32(src, i * 4), le_u32(dst, i * 4)),
+        }
+    }
+
+    #[inline]
+    fn src_at(&self, i: usize) -> Vertex {
+        match &self.kind {
+            CursorKind::Rows { pairs } => le_u32(pairs, i * PAIR_BYTES as usize),
+            CursorKind::Columns { src, .. } => le_u32(src, i * 4),
+        }
+    }
+
+    pub fn iter(&self) -> CursorIter<'a> {
+        CursorIter {
+            cursor: self.clone(),
+            pos: 0,
+            end: self.len,
+        }
+    }
+
+    /// Sub-cursor over rows `lo..hi` — the per-thread sub-shard view.
+    /// The absolute bucket index does not survive slicing, so sliced
+    /// cursors answer [`ShardCursor::vertex_range`] by plain binary
+    /// search over their (still sorted) sub-range.
+    pub fn slice(&self, lo: usize, hi: usize) -> ShardCursor<'a> {
+        assert!(lo <= hi && hi <= self.len);
+        let kind = match &self.kind {
+            CursorKind::Rows { pairs } => CursorKind::Rows {
+                pairs: &pairs[lo * PAIR_BYTES as usize..hi * PAIR_BYTES as usize],
+            },
+            CursorKind::Columns { src, dst, .. } => CursorKind::Columns {
+                src: &src[lo * 4..hi * 4],
+                dst: &dst[lo * 4..hi * 4],
+                index: &[],
+                span: 0,
+            },
+        };
+        ShardCursor { kind, len: hi - lo }
+    }
+
+    /// The row range holding every edge with source `v` (empty when
+    /// none).  Bucketed O(1)+O(log(m/B)) on indexed columnar images,
+    /// plain binary search otherwise — both require the canonical shard
+    /// invariant (sorted by `(src, dst)`), which every shard file and
+    /// frame in the engine satisfies.  This is the touched-range
+    /// streaming entry point: hop generators that only need a vertex
+    /// neighborhood read just these rows, not the shard.
+    pub fn vertex_range(&self, v: Vertex) -> std::ops::Range<usize> {
+        let (mut lo, mut hi) = (0usize, self.len);
+        if let CursorKind::Columns { index, span, .. } = &self.kind {
+            if !index.is_empty() {
+                let buckets = (index.len() / 8 - 1) as u64;
+                let b = index_bucket(v, buckets, *span);
+                lo = le_u64(index, b * 8) as usize;
+                hi = le_u64(index, (b + 1) * 8) as usize;
+            }
+        }
+        let start = self.partition(lo, hi, |s| s < v);
+        let end = self.partition(start, hi, |s| s <= v);
+        start..end
+    }
+
+    /// First row in `lo..hi` whose src fails `pred` (binary search; `pred`
+    /// must be monotone over the sorted src column).
+    fn partition(&self, mut lo: usize, mut hi: usize, pred: impl Fn(Vertex) -> bool) -> usize {
+        while lo < hi {
+            let mid = lo + (hi - lo) / 2;
+            if pred(self.src_at(mid)) {
+                lo = mid + 1;
+            } else {
+                hi = mid;
+            }
+        }
+        lo
+    }
+}
+
+/// Allocation-free edge iterator over a [`ShardCursor`].
+#[derive(Debug, Clone)]
+pub struct CursorIter<'a> {
+    cursor: ShardCursor<'a>,
+    pos: usize,
+    end: usize,
+}
+
+impl Iterator for CursorIter<'_> {
+    type Item = (Vertex, Vertex);
+    #[inline]
+    fn next(&mut self) -> Option<(Vertex, Vertex)> {
+        if self.pos < self.end {
+            let e = self.cursor.get(self.pos);
+            self.pos += 1;
+            Some(e)
+        } else {
+            None
+        }
+    }
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        let rem = self.end - self.pos;
+        (rem, Some(rem))
+    }
+}
+
+impl ExactSizeIterator for CursorIter<'_> {}
+
+// ---------------------------------------------------------------------------
+// data-plane counters
+
+static SHARD_BYTES_MAPPED: AtomicU64 = AtomicU64::new(0);
+static SHARD_BYTES_COPIED: AtomicU64 = AtomicU64::new(0);
+static SHARD_MAPS: AtomicU64 = AtomicU64::new(0);
+static SHARD_COPIES: AtomicU64 = AtomicU64::new(0);
+
+/// Process-wide spilled-shard load accounting: how many shard file
+/// images were mmap'd in place vs read through the owned-copy fallback.
+/// Steady state on a healthy unix host is `shard_copies == 0` — CI
+/// asserts exactly that on the spill job, so a silent regression to the
+/// copy path fails the gate instead of just running slower.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DataPlaneCounters {
+    pub shard_bytes_mapped: u64,
+    pub shard_bytes_copied: u64,
+    pub shard_maps: u64,
+    pub shard_copies: u64,
+}
+
+/// Snapshot the process-wide data-plane counters.
+pub fn data_plane_counters() -> DataPlaneCounters {
+    DataPlaneCounters {
+        shard_bytes_mapped: SHARD_BYTES_MAPPED.load(Ordering::Relaxed),
+        shard_bytes_copied: SHARD_BYTES_COPIED.load(Ordering::Relaxed),
+        shard_maps: SHARD_MAPS.load(Ordering::Relaxed),
+        shard_copies: SHARD_COPIES.load(Ordering::Relaxed),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// mmap backing
+
+#[cfg(unix)]
+mod mmap {
+    use std::fs::File;
+    use std::os::unix::io::AsRawFd;
+
+    // Minimal raw bindings: std already links libc on unix and the crate
+    // adds no dependencies, so declare exactly the two symbols we need.
+    extern "C" {
+        fn mmap(
+            addr: *mut core::ffi::c_void,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut core::ffi::c_void;
+        fn munmap(addr: *mut core::ffi::c_void, len: usize) -> i32;
+    }
+
+    const PROT_READ: i32 = 1;
+    const MAP_PRIVATE: i32 = 2;
+
+    /// A read-only private mapping of a whole file.  The pages are clean
+    /// page cache: the kernel evicts cold shards under memory pressure
+    /// and faults them back on demand, which is what makes a mapped
+    /// spill read cheaper than an owned buffer of the same size.
+    pub struct Mmap {
+        ptr: *mut core::ffi::c_void,
+        len: usize,
+    }
+
+    // PROT_READ for the mapping's whole lifetime: immutable shared bytes.
+    unsafe impl Send for Mmap {}
+    unsafe impl Sync for Mmap {}
+
+    impl Mmap {
+        pub fn map(file: &File, len: usize) -> std::io::Result<Mmap> {
+            if len == 0 {
+                // zero-length mmap is EINVAL; an empty file needs no pages
+                return Ok(Mmap {
+                    ptr: std::ptr::null_mut(),
+                    len: 0,
+                });
+            }
+            let ptr = unsafe {
+                mmap(
+                    std::ptr::null_mut(),
+                    len,
+                    PROT_READ,
+                    MAP_PRIVATE,
+                    file.as_raw_fd(),
+                    0,
+                )
+            };
+            if ptr as isize == -1 {
+                return Err(std::io::Error::last_os_error());
+            }
+            Ok(Mmap { ptr, len })
+        }
+
+        pub fn as_slice(&self) -> &[u8] {
+            if self.len == 0 {
+                &[]
+            } else {
+                unsafe { std::slice::from_raw_parts(self.ptr as *const u8, self.len) }
+            }
+        }
+    }
+
+    impl Drop for Mmap {
+        fn drop(&mut self) {
+            if self.len != 0 {
+                unsafe {
+                    munmap(self.ptr, self.len);
+                }
+            }
+        }
+    }
+
+    impl std::fmt::Debug for Mmap {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            f.debug_struct("Mmap").field("len", &self.len).finish()
+        }
+    }
+}
+
+/// The backing bytes of one shard-file image: a live mapping on unix, an
+/// owned copy on the fallback path (non-unix targets, or a host whose
+/// filesystem refuses `mmap`).
+#[derive(Debug)]
+pub enum ShardImage {
+    #[cfg(unix)]
+    Mapped(mmap::Mmap),
+    Owned(Vec<u8>),
+}
+
+impl ShardImage {
+    pub fn bytes(&self) -> &[u8] {
+        match self {
+            #[cfg(unix)]
+            ShardImage::Mapped(m) => m.as_slice(),
+            ShardImage::Owned(v) => v,
+        }
+    }
+}
+
+/// Map (or, failing that, copy) a whole shard file into a [`ShardImage`],
+/// charging the data-plane counters.
+fn load_shard_image(path: &Path) -> Result<ShardImage, SpillError> {
+    let bytes_via_copy = |path: &Path| -> Result<Vec<u8>, SpillError> {
+        fs::read(path).map_err(|e| SpillError::io(path, "read", e))
+    };
+    #[cfg(unix)]
+    {
+        let f = File::open(path).map_err(|e| SpillError::io(path, "open", e))?;
+        let len = f
+            .metadata()
+            .map_err(|e| SpillError::io(path, "stat", e))?
+            .len();
+        let len = usize::try_from(len).map_err(|_| SpillError::Corrupt {
+            path: path.to_path_buf(),
+            detail: format!("file length {len} exceeds the address space"),
+        })?;
+        match mmap::Mmap::map(&f, len) {
+            Ok(m) => {
+                SHARD_MAPS.fetch_add(1, Ordering::Relaxed);
+                SHARD_BYTES_MAPPED.fetch_add(len as u64, Ordering::Relaxed);
+                Ok(ShardImage::Mapped(m))
+            }
+            // exotic filesystems can refuse mmap; stay correct (and
+            // visibly slower in the counters) rather than fail the run
+            Err(_) => {
+                let v = bytes_via_copy(path)?;
+                SHARD_COPIES.fetch_add(1, Ordering::Relaxed);
+                SHARD_BYTES_COPIED.fetch_add(v.len() as u64, Ordering::Relaxed);
+                Ok(ShardImage::Owned(v))
+            }
+        }
+    }
+    #[cfg(not(unix))]
+    {
+        let v = bytes_via_copy(path)?;
+        SHARD_COPIES.fetch_add(1, Ordering::Relaxed);
+        SHARD_BYTES_COPIED.fetch_add(v.len() as u64, Ordering::Relaxed);
+        Ok(ShardImage::Owned(v))
     }
 }
 
@@ -460,27 +955,81 @@ impl Drop for SpillDir {
 // ---------------------------------------------------------------------------
 // shard file framing
 
-/// Encode one shard's canonical edges as a complete shard-file image
-/// (header + payload) in memory, returning the bytes and the payload
-/// checksum.  This is the **shard wire format**: [`write_shard_file`]
-/// writes exactly these bytes, and the multi-process transport
-/// (`crate::mpc::net`) ships them verbatim when distributing shards to
-/// worker processes — so a spilled shard file can go on the wire without
-/// rehydration, and a resident shard serializes identically.
+/// Index layout of a shard about to be encoded: bucket count (0 when the
+/// payload is empty or not sorted by src — the index requires the
+/// canonical sort) and the span `max(src) + 1` (saturating).
+fn index_plan(edges: &[(Vertex, Vertex)]) -> (u64, u32) {
+    if edges.is_empty() {
+        return (0, 0);
+    }
+    let mut max_src = 0u32;
+    let mut prev = 0u32;
+    let mut sorted = true;
+    for (i, &(u, _)) in edges.iter().enumerate() {
+        if i > 0 && u < prev {
+            sorted = false;
+        }
+        prev = u;
+        max_src = max_src.max(u);
+    }
+    let span = max_src.saturating_add(1);
+    if sorted {
+        (index_buckets(edges.len() as u64), span)
+    } else {
+        (0, span)
+    }
+}
+
+/// Bucket offsets (`B+1` entries, `offs[0] == 0`, `offs[B] == m`) of the
+/// sorted src column under ([`index_bucket`], `span`).
+fn build_index(edges: &[(Vertex, Vertex)], buckets: u64, span: u32) -> Vec<u64> {
+    let mut offs = vec![0u64; buckets as usize + 1];
+    for &(u, _) in edges {
+        offs[index_bucket(u, buckets, span) + 1] += 1;
+    }
+    for i in 1..offs.len() {
+        offs[i] += offs[i - 1];
+    }
+    offs
+}
+
+/// Encode one shard's canonical edges as a complete columnar shard-file
+/// image (header + src/dst columns + index) in memory, returning the
+/// bytes and the logical payload checksum.  This is the **shard wire
+/// format**: [`write_shard_file`] writes exactly these bytes, and the
+/// multi-process transport (`crate::mpc::net`) ships them verbatim when
+/// distributing shards to worker processes — a spilled shard file goes on
+/// the wire without rehydration, and a resident shard serializes
+/// identically.
 pub fn encode_shard_bytes(
     shard: u32,
     num_shards: u32,
     edges: &[(Vertex, Vertex)],
 ) -> (Vec<u8>, u64) {
     let checksum = checksum_edges(edges);
-    let mut out =
-        Vec::with_capacity(SHARD_HEADER_BYTES as usize + edges.len() * PAIR_BYTES as usize);
-    out.extend_from_slice(SHARD_MAGIC);
+    let (buckets, span) = index_plan(edges);
+    let index_bytes = if buckets > 0 { (buckets as usize + 1) * 8 } else { 0 };
+    let mut out = Vec::with_capacity(
+        V2_HEADER_BYTES as usize + edges.len() * PAIR_BYTES as usize + index_bytes,
+    );
+    out.extend_from_slice(SHARD_MAGIC_V2);
     out.extend_from_slice(&shard.to_le_bytes());
     out.extend_from_slice(&num_shards.to_le_bytes());
     out.extend_from_slice(&(edges.len() as u64).to_le_bytes());
     out.extend_from_slice(&checksum.to_le_bytes());
-    write_pairs(&mut out, edges).expect("infallible Vec write");
+    out.extend_from_slice(&(buckets as u32).to_le_bytes());
+    out.extend_from_slice(&span.to_le_bytes());
+    for &(u, _) in edges {
+        out.extend_from_slice(&u.to_le_bytes());
+    }
+    for &(_, v) in edges {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    if buckets > 0 {
+        for off in build_index(edges, buckets, span) {
+            out.extend_from_slice(&off.to_le_bytes());
+        }
+    }
     (out, checksum)
 }
 
@@ -498,29 +1047,81 @@ pub fn write_shard_file(
     let f = File::create(path).map_err(|e| SpillError::io(path, "create", e))?;
     let mut w = BufWriter::new(f);
     let checksum = checksum_edges(edges);
+    let (buckets, span) = index_plan(edges);
     let write = |w: &mut BufWriter<File>| -> std::io::Result<()> {
-        w.write_all(SHARD_MAGIC)?;
+        w.write_all(SHARD_MAGIC_V2)?;
         w.write_all(&shard.to_le_bytes())?;
         w.write_all(&num_shards.to_le_bytes())?;
         w.write_all(&(edges.len() as u64).to_le_bytes())?;
         w.write_all(&checksum.to_le_bytes())?;
-        write_pairs(w, edges)?;
+        w.write_all(&(buckets as u32).to_le_bytes())?;
+        w.write_all(&span.to_le_bytes())?;
+        for &(u, _) in edges {
+            w.write_all(&u.to_le_bytes())?;
+        }
+        for &(_, v) in edges {
+            w.write_all(&v.to_le_bytes())?;
+        }
+        if buckets > 0 {
+            for off in build_index(edges, buckets, span) {
+                w.write_all(&off.to_le_bytes())?;
+            }
+        }
         w.flush()
     };
     write(&mut w).map_err(|e| SpillError::io(path, "write", e))?;
     Ok(checksum)
 }
 
+/// The exact image length of a well-formed shard of `m` edges in the
+/// given framing (`None` on arithmetic overflow — a lying header).
+fn expected_image_len(v2: bool, m: u64, buckets: u64) -> Option<u64> {
+    let payload = m.checked_mul(PAIR_BYTES)?;
+    if v2 {
+        let index = if buckets > 0 {
+            buckets.checked_add(1)?.checked_mul(8)?
+        } else {
+            0
+        };
+        payload
+            .checked_add(V2_HEADER_BYTES)?
+            .checked_add(index)
+    } else {
+        payload.checked_add(SHARD_HEADER_BYTES)
+    }
+}
+
 /// Check a shard file's header-claimed size against the actual file
 /// length without reading the payload (the cheap validation
-/// `ShardedGraph::open_spilled` runs eagerly per shard).
+/// `ShardedGraph::open_spilled` runs eagerly per shard).  Peeks the magic
+/// to pick the framing: canonical columnar files carry the deterministic
+/// `min(m, 4096)`-bucket index, legacy row-major files carry none.
 pub fn validate_shard_file_len(path: &Path, expected_edges: u64) -> Result<(), SpillError> {
-    let actual = fs::metadata(path)
+    let mut magic = [0u8; 8];
+    let mut f = File::open(path).map_err(|e| SpillError::io(path, "open", e))?;
+    let actual = f
+        .metadata()
         .map_err(|e| SpillError::io(path, "stat", e))?
         .len();
-    let expected = expected_edges
-        .checked_mul(PAIR_BYTES)
-        .and_then(|p| p.checked_add(SHARD_HEADER_BYTES))
+    if actual < 8 {
+        return Err(SpillError::Truncated {
+            path: path.to_path_buf(),
+            expected_bytes: V2_HEADER_BYTES,
+            actual_bytes: actual,
+        });
+    }
+    f.read_exact(&mut magic)
+        .map_err(|e| SpillError::io(path, "read", e))?;
+    let v2 = match &magic {
+        m if m == SHARD_MAGIC_V2 => true,
+        m if m == SHARD_MAGIC => false,
+        _ => {
+            return Err(SpillError::BadMagic {
+                path: path.to_path_buf(),
+            })
+        }
+    };
+    let expected = expected_image_len(v2, expected_edges, index_buckets(expected_edges))
         .ok_or_else(|| SpillError::Corrupt {
             path: path.to_path_buf(),
             detail: format!("edge count {expected_edges} overflows the file length"),
@@ -535,36 +1136,44 @@ pub fn validate_shard_file_len(path: &Path, expected_edges: u64) -> Result<(), S
     Ok(())
 }
 
-/// Parse and fully validate one shard-file image from memory: magic,
-/// shard identity, header count vs actual length (before allocating the
-/// edge vector), payload checksum.  Returns the edges plus the verified
-/// payload checksum.  `origin` names the byte source in errors (a file
-/// path, or a synthetic name like `<frame>` for transport traffic).
-///
-/// This is the read half of the shard wire format
-/// ([`encode_shard_bytes`]): shard files on disk and shards shipped to
-/// worker processes validate through the same code.
-pub fn read_shard_bytes(
-    bytes: &[u8],
+/// Parse one shard image's header without walking the payload: magic
+/// (both framings), shard identity, declared counts vs the actual image
+/// length — **before any allocation**, so a lying header cannot drive a
+/// reservation.  Returns the borrowed cursor plus the header-declared
+/// (not yet verified) checksum.  This is the cheap re-parse used on
+/// images already validated once ([`parse_shard_image`] for the full
+/// walk).  `origin` names the byte source in errors (a file path, or a
+/// synthetic name like `<frame>` for transport traffic).
+pub fn parse_shard_header<'a>(
+    bytes: &'a [u8],
     shard: u32,
     num_shards: u32,
     origin: &Path,
-) -> Result<(Vec<(Vertex, Vertex)>, u64), SpillError> {
+) -> Result<(ShardCursor<'a>, u64), SpillError> {
     let actual_len = bytes.len() as u64;
-    if actual_len < SHARD_HEADER_BYTES {
-        return Err(SpillError::Truncated {
-            path: origin.to_path_buf(),
-            expected_bytes: SHARD_HEADER_BYTES,
-            actual_bytes: actual_len,
-        });
+    let truncated = |expected: u64| SpillError::Truncated {
+        path: origin.to_path_buf(),
+        expected_bytes: expected,
+        actual_bytes: actual_len,
+    };
+    if actual_len < 8 {
+        return Err(truncated(V2_HEADER_BYTES));
     }
-    if &bytes[..8] != SHARD_MAGIC {
-        return Err(SpillError::BadMagic {
-            path: origin.to_path_buf(),
-        });
+    let v2 = match &bytes[..8] {
+        m if m == SHARD_MAGIC_V2 => true,
+        m if m == SHARD_MAGIC => false,
+        _ => {
+            return Err(SpillError::BadMagic {
+                path: origin.to_path_buf(),
+            })
+        }
+    };
+    let header = if v2 { V2_HEADER_BYTES } else { SHARD_HEADER_BYTES };
+    if actual_len < header {
+        return Err(truncated(header));
     }
-    let got_shard = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
-    let got_p = u32::from_le_bytes(bytes[12..16].try_into().unwrap());
+    let got_shard = le_u32(bytes, 8);
+    let got_p = le_u32(bytes, 12);
     if (got_shard, got_p) != (shard, num_shards) {
         return Err(SpillError::Corrupt {
             path: origin.to_path_buf(),
@@ -573,34 +1182,131 @@ pub fn read_shard_bytes(
             ),
         });
     }
-    let m = u64::from_le_bytes(bytes[16..24].try_into().unwrap());
-    let expected_checksum = u64::from_le_bytes(bytes[24..32].try_into().unwrap());
-    // validate the claimed count against the actual length BEFORE allocating
-    let expected_len = m
-        .checked_mul(PAIR_BYTES)
-        .and_then(|p| p.checked_add(SHARD_HEADER_BYTES));
-    match expected_len {
-        Some(expected) if expected == actual_len => {}
-        _ => {
-            return Err(SpillError::Truncated {
-                path: origin.to_path_buf(),
-                expected_bytes: expected_len.unwrap_or(u64::MAX),
-                actual_bytes: actual_len,
-            })
-        }
-    }
-    let payload = &bytes[SHARD_HEADER_BYTES as usize..];
-    let mut h = Fnv1a::new();
-    h.update(payload);
-    let actual_checksum = h.finish();
-    if actual_checksum != expected_checksum {
-        return Err(SpillError::ChecksumMismatch {
+    let m = le_u64(bytes, 16);
+    let declared_checksum = le_u64(bytes, 24);
+    let buckets = if v2 { le_u32(bytes, 32) as u64 } else { 0 };
+    let span = if v2 { le_u32(bytes, 36) } else { 0 };
+    if v2 && buckets != 0 && buckets != index_buckets(m) {
+        return Err(SpillError::Corrupt {
             path: origin.to_path_buf(),
-            expected: expected_checksum,
-            actual: actual_checksum,
+            detail: format!(
+                "index declares {buckets} buckets; a shard of {m} edges has {} or none",
+                index_buckets(m)
+            ),
         });
     }
-    Ok((crate::graph::io::decode_pairs(payload), actual_checksum))
+    // validate the claimed count against the actual length BEFORE
+    // trusting any derived offset
+    match expected_image_len(v2, m, buckets) {
+        Some(expected) if expected == actual_len => {}
+        other => return Err(truncated(other.unwrap_or(u64::MAX))),
+    }
+    let len = m as usize;
+    let kind = if v2 {
+        let cols = V2_HEADER_BYTES as usize;
+        CursorKind::Columns {
+            src: &bytes[cols..cols + len * 4],
+            dst: &bytes[cols + len * 4..cols + len * 8],
+            index: &bytes[cols + len * 8..],
+            span,
+        }
+    } else {
+        CursorKind::Rows {
+            pairs: &bytes[SHARD_HEADER_BYTES as usize..],
+        }
+    };
+    Ok((ShardCursor { kind, len }, declared_checksum))
+}
+
+/// Parse and **fully validate** one shard image: everything
+/// [`parse_shard_header`] checks, then one walk of the payload verifying
+/// the declared checksum and — because the logical checksum does not
+/// cover the index bytes — rebuilding the expected bucket offsets from
+/// the src column and comparing them to the stored index.  Returns the
+/// borrowed cursor plus the verified payload checksum.
+///
+/// This is the read half of the shard wire format
+/// ([`encode_shard_bytes`]): shard files on disk and shards shipped to
+/// worker processes validate through the same code.
+pub fn parse_shard_image<'a>(
+    bytes: &'a [u8],
+    shard: u32,
+    num_shards: u32,
+    origin: &Path,
+) -> Result<(ShardCursor<'a>, u64), SpillError> {
+    let (cursor, declared) = parse_shard_header(bytes, shard, num_shards, origin)?;
+    let corrupt = |detail: String| SpillError::Corrupt {
+        path: origin.to_path_buf(),
+        detail,
+    };
+    let span = match &cursor.kind {
+        CursorKind::Columns { span, .. } => *span,
+        CursorKind::Rows { .. } => 0,
+    };
+    let mut counts: Vec<u64> = match &cursor.kind {
+        CursorKind::Columns { index, .. } if !index.is_empty() => vec![0u64; index.len() / 8 - 1],
+        _ => Vec::new(),
+    };
+    let mut h = Fnv1a::new();
+    let mut prev_src = 0u32;
+    let mut sorted = true;
+    for i in 0..cursor.len {
+        let (u, v) = cursor.get(i);
+        h.update(&u.to_le_bytes());
+        h.update(&v.to_le_bytes());
+        if i > 0 && u < prev_src {
+            sorted = false;
+        }
+        prev_src = u;
+        if !counts.is_empty() {
+            counts[index_bucket(u, counts.len() as u64, span)] += 1;
+        }
+    }
+    let actual = h.finish();
+    if actual != declared {
+        return Err(SpillError::ChecksumMismatch {
+            path: origin.to_path_buf(),
+            expected: declared,
+            actual,
+        });
+    }
+    if let CursorKind::Columns { index, .. } = &cursor.kind {
+        if !index.is_empty() {
+            // the index is only meaningful over a sorted src column
+            if !sorted {
+                return Err(corrupt("indexed image's src column is not sorted".into()));
+            }
+            let mut running = 0u64;
+            if le_u64(index, 0) != 0 {
+                return Err(corrupt("index bucket 0 does not start at row 0".into()));
+            }
+            for (b, &c) in counts.iter().enumerate() {
+                running += c;
+                let stored = le_u64(index, (b + 1) * 8);
+                if stored != running {
+                    return Err(corrupt(format!(
+                        "index bucket {b} ends at row {stored}, src column says {running}"
+                    )));
+                }
+            }
+        }
+    }
+    Ok((cursor, actual))
+}
+
+/// Parse, fully validate, and rehydrate one shard image into an owned
+/// edge vector (see [`parse_shard_image`] for the checks; the allocation
+/// is bounded by the *validated* image length, never by the header).
+/// The escape hatch for consumers that need owned pairs — the engine's
+/// round paths walk the cursor in place instead.
+pub fn read_shard_bytes(
+    bytes: &[u8],
+    shard: u32,
+    num_shards: u32,
+    origin: &Path,
+) -> Result<(Vec<(Vertex, Vertex)>, u64), SpillError> {
+    let (cursor, checksum) = parse_shard_image(bytes, shard, num_shards, origin)?;
+    Ok((cursor.iter().collect(), checksum))
 }
 
 thread_local! {
@@ -740,12 +1446,38 @@ impl ShardStore for Resident {
     }
 }
 
-/// Metadata of one spilled shard (the RAM footprint of the shard).
-#[derive(Debug, Clone)]
+/// Metadata of one spilled shard (the RAM footprint of the shard), plus
+/// the lazily-established mapping of its file image.
+#[derive(Debug)]
 pub struct SpilledShard {
     pub path: PathBuf,
     pub stats: ShardStats,
     pub checksum: u64,
+    /// The shard's file image, mapped and fully validated on first read
+    /// (checksum walk + index verification happen once per generation —
+    /// shard files are immutable once written); later reads re-parse only
+    /// the header.  Mapped pages are clean page cache, so the RAM cost of
+    /// keeping this "cached" is whatever the kernel decides is warm.
+    image: std::sync::OnceLock<ShardImage>,
+}
+
+impl SpilledShard {
+    pub fn new(path: PathBuf, stats: ShardStats, checksum: u64) -> SpilledShard {
+        SpilledShard {
+            path,
+            stats,
+            checksum,
+            image: std::sync::OnceLock::new(),
+        }
+    }
+}
+
+impl Clone for SpilledShard {
+    fn clone(&self) -> SpilledShard {
+        // the mapping is not shared across clones: each clone re-maps
+        // (and re-validates) lazily, keeping clone cheap and `Drop` exact
+        SpilledShard::new(self.path.clone(), self.stats.clone(), self.checksum)
+    }
 }
 
 /// All shards on disk; clones share the directory via `Arc` (shard files
@@ -782,30 +1514,43 @@ impl ShardStore for Spilled {
 
     fn read(&self, s: usize) -> Result<ShardData<'_>, SpillError> {
         let meta = &self.shards[s];
-        let (edges, checksum) =
-            read_shard_file(&meta.path, s as u32, self.shards.len() as u32)?;
-        if edges.len() as u64 != meta.stats.len {
-            return Err(SpillError::Corrupt {
-                path: meta.path.clone(),
-                detail: format!(
-                    "file holds {} edges, store expected {}",
-                    edges.len(),
-                    meta.stats.len
-                ),
-            });
+        let num_shards = self.shards.len() as u32;
+        if meta.image.get().is_none() {
+            // first touch of this generation: map the file and pay the one
+            // full validation walk (header, payload checksum, index)
+            let image = load_shard_image(&meta.path)?;
+            let (cursor, checksum) =
+                parse_shard_image(image.bytes(), s as u32, num_shards, &meta.path)?;
+            if cursor.len() as u64 != meta.stats.len {
+                return Err(SpillError::Corrupt {
+                    path: meta.path.clone(),
+                    detail: format!(
+                        "file holds {} edges, store expected {}",
+                        cursor.len(),
+                        meta.stats.len
+                    ),
+                });
+            }
+            // the file's header checksum only proves self-consistency; the
+            // store's cached checksum pins the *generation* — a stale but
+            // intact file (e.g. an interrupted re-persist) must not be read
+            // as if it matched the RAM-cached stats
+            if checksum != meta.checksum {
+                return Err(SpillError::ChecksumMismatch {
+                    path: meta.path.clone(),
+                    expected: meta.checksum,
+                    actual: checksum,
+                });
+            }
+            // benign race: if two threads validated concurrently, the
+            // loser's mapping is simply dropped (unmapped) here
+            let _ = meta.image.set(image);
         }
-        // the file's header checksum only proves self-consistency; the
-        // store's cached checksum pins the *generation* — a stale but
-        // intact file (e.g. an interrupted re-persist) must not be read
-        // as if it matched the RAM-cached stats
-        if checksum != meta.checksum {
-            return Err(SpillError::ChecksumMismatch {
-                path: meta.path.clone(),
-                expected: meta.checksum,
-                actual: checksum,
-            });
-        }
-        Ok(ShardData::Loaded(edges))
+        let image = meta.image.get().expect("image cached above").bytes();
+        // already validated once for this generation: the cheap header
+        // re-parse only re-derives the borrowed column bounds
+        let (cursor, _) = parse_shard_header(image, s as u32, num_shards, &meta.path)?;
+        Ok(ShardData::Mapped { cursor, image })
     }
 
     fn is_spilled(&self) -> bool {
@@ -822,11 +1567,7 @@ pub fn spill_shard(
 ) -> Result<SpilledShard, SpillError> {
     let path = dir.path().join(shard_file_name(s));
     let checksum = write_shard_file(&path, s as u32, num_shards as u32, shard.edges())?;
-    Ok(SpilledShard {
-        path,
-        stats: shard.stats().clone(),
-        checksum,
-    })
+    Ok(SpilledShard::new(path, shard.stats().clone(), checksum))
 }
 
 // ---------------------------------------------------------------------------
@@ -1184,13 +1925,197 @@ mod tests {
         let path = dir.path().join(shard_file_name(2));
         write_shard_file(&path, 2, 4, &edges).unwrap();
         let mut bytes = fs::read(&path).unwrap();
-        let last = bytes.len() - 1;
-        bytes[last] ^= 0x40;
+        // flip a dst-column byte (the columns are what the checksum covers)
+        let mid = V2_HEADER_BYTES as usize + edges.len() * 4;
+        bytes[mid] ^= 0x40;
         fs::write(&path, &bytes).unwrap();
         assert!(matches!(
             read_shard_file(&path, 2, 4),
             Err(SpillError::ChecksumMismatch { .. })
         ));
+    }
+
+    #[test]
+    fn corrupt_index_bucket_is_typed_corrupt() {
+        // the logical checksum does not cover the index bytes, so index
+        // damage must be caught by the rebuild-and-compare walk instead
+        let dir = tmp();
+        let edges = canonical_edges(4, 2);
+        let path = dir.path().join(shard_file_name(2));
+        write_shard_file(&path, 2, 4, &edges).unwrap();
+        let mut bytes = fs::read(&path).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x40; // last index offset no longer equals m
+        fs::write(&path, &bytes).unwrap();
+        match read_shard_file(&path, 2, 4) {
+            Err(SpillError::Corrupt { detail, .. }) => {
+                assert!(detail.contains("index bucket"), "{detail}")
+            }
+            other => panic!("expected Corrupt, got {other:?}"),
+        }
+        // a lying bucket *count* is typed before any offset is trusted
+        let mut bytes = fs::read(&path).unwrap();
+        bytes[32] ^= 0x01;
+        fs::write(&path, &bytes).unwrap();
+        assert!(matches!(
+            read_shard_file(&path, 2, 4),
+            Err(SpillError::Corrupt { .. })
+        ));
+    }
+
+    #[test]
+    fn legacy_row_major_framing_still_reads() {
+        // a v1 image (what pre-columnar generations persisted): header +
+        // row-major pairs, no index — must parse, verify, and iterate
+        let edges = canonical_edges(4, 1);
+        let checksum = checksum_edges(&edges);
+        let mut v1 = Vec::new();
+        v1.extend_from_slice(SHARD_MAGIC);
+        v1.extend_from_slice(&1u32.to_le_bytes());
+        v1.extend_from_slice(&4u32.to_le_bytes());
+        v1.extend_from_slice(&(edges.len() as u64).to_le_bytes());
+        v1.extend_from_slice(&checksum.to_le_bytes());
+        for &(u, v) in &edges {
+            v1.extend_from_slice(&u.to_le_bytes());
+            v1.extend_from_slice(&v.to_le_bytes());
+        }
+        let (decoded, ck) = read_shard_bytes(&v1, 1, 4, Path::new("<v1>")).unwrap();
+        assert_eq!((decoded, ck), (edges.clone(), checksum));
+        // and the cursor answers vertex_range by binary search
+        let (cursor, _) = parse_shard_image(&v1, 1, 4, Path::new("<v1>")).unwrap();
+        for &(u, _) in &edges {
+            let r = cursor.vertex_range(u);
+            assert!(!r.is_empty());
+            for i in r {
+                assert_eq!(cursor.get(i).0, u);
+            }
+        }
+        // a legacy file on disk reloads through the store path too
+        let dir = tmp();
+        let path = dir.path().join(shard_file_name(1));
+        fs::write(&path, &v1).unwrap();
+        validate_shard_file_len(&path, edges.len() as u64).unwrap();
+        assert_eq!(read_shard_file(&path, 1, 4).unwrap(), (edges, checksum));
+    }
+
+    #[test]
+    fn cursor_index_brackets_every_vertex() {
+        let edges = canonical_edges(4, 2);
+        let (bytes, _) = encode_shard_bytes(2, 4, &edges);
+        let (cursor, _) = parse_shard_image(&bytes, 2, 4, Path::new("<mem>")).unwrap();
+        assert_eq!(cursor.len(), edges.len());
+        assert_eq!(cursor.iter().collect::<Vec<_>>(), edges);
+        // every present source maps to exactly its rows; absent ones to none
+        let max_src = edges.iter().map(|&(u, _)| u).max().unwrap();
+        for v in 0..=max_src + 3 {
+            let expect: Vec<usize> = (0..edges.len()).filter(|&i| edges[i].0 == v).collect();
+            let got: Vec<usize> = cursor.vertex_range(v).collect();
+            assert_eq!(got, expect, "vertex {v}");
+        }
+    }
+
+    #[test]
+    fn cursor_slices_match_full_iteration() {
+        let edges = canonical_edges(4, 0);
+        let (bytes, _) = encode_shard_bytes(0, 4, &edges);
+        let (cursor, _) = parse_shard_image(&bytes, 0, 4, Path::new("<mem>")).unwrap();
+        let m = cursor.len();
+        for (lo, hi) in [(0, m), (0, m / 2), (m / 2, m), (m / 3, 2 * m / 3), (m, m)] {
+            let got: Vec<_> = cursor.slice(lo, hi).iter().collect();
+            assert_eq!(got, edges[lo..hi].to_vec(), "slice {lo}..{hi}");
+        }
+        // sliced cursors still answer vertex_range (by binary search)
+        let half = cursor.slice(0, m / 2);
+        let (u0, _) = edges[0];
+        assert_eq!(
+            half.vertex_range(u0).collect::<Vec<_>>(),
+            (0..m / 2).filter(|&i| edges[i].0 == u0).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn misaligned_image_offset_parses_identically() {
+        // frame bodies land at arbitrary offsets inside receive buffers;
+        // the cursor must not care about the image's alignment
+        let edges = canonical_edges(4, 3);
+        let (bytes, ck) = encode_shard_bytes(3, 4, &edges);
+        for pad in 1..8usize {
+            let mut buf = vec![0u8; pad];
+            buf.extend_from_slice(&bytes);
+            let (cursor, got_ck) =
+                parse_shard_image(&buf[pad..], 3, 4, Path::new("<frame>")).unwrap();
+            assert_eq!(got_ck, ck);
+            assert_eq!(cursor.iter().collect::<Vec<_>>(), edges, "pad {pad}");
+        }
+    }
+
+    #[test]
+    fn empty_shard_roundtrips_without_index() {
+        let dir = tmp();
+        let path = dir.path().join(shard_file_name(0));
+        write_shard_file(&path, 0, 4, &[]).unwrap();
+        assert_eq!(
+            fs::metadata(&path).unwrap().len(),
+            V2_HEADER_BYTES,
+            "empty shard is header-only"
+        );
+        validate_shard_file_len(&path, 0).unwrap();
+        let (edges, _) = read_shard_file(&path, 0, 4).unwrap();
+        assert!(edges.is_empty());
+    }
+
+    #[test]
+    fn spilled_reads_are_mapped_not_copied() {
+        let dir = tmp();
+        let p = 4;
+        let shards: Vec<SpilledShard> = (0..p)
+            .map(|s| {
+                let shard = EdgeShard::new_canonical(canonical_edges(p, s), p, s);
+                spill_shard(&dir, s, p, &shard).unwrap()
+            })
+            .collect();
+        let edges0 = canonical_edges(p, 0);
+        let dir = std::sync::Arc::new(dir);
+        let store = Spilled::from_parts(dir, shards);
+        let before = data_plane_counters();
+        let first = store.read(0).unwrap();
+        assert!(matches!(first, ShardData::Mapped { .. }));
+        assert_eq!(first.iter().collect::<Vec<_>>(), edges0);
+        let p1 = first.image().unwrap().as_ptr();
+        // later reads reuse the cached validated mapping (same bytes)
+        let again = store.read(0).unwrap();
+        assert_eq!(again.image().unwrap().as_ptr(), p1);
+        // counters are process-global (other tests run concurrently), so
+        // only monotonicity is asserted here
+        let after = data_plane_counters();
+        #[cfg(unix)]
+        assert!(after.shard_maps > before.shard_maps);
+        #[cfg(not(unix))]
+        assert!(after.shard_copies > before.shard_copies);
+    }
+
+    #[test]
+    fn read_buf_capacity_is_capped_after_oversized_read() {
+        // one giant staging read must not pin its high-water capacity in
+        // the thread-local buffer for the rest of the run
+        let dir = tmp();
+        let path = dir.path().join("big.raw");
+        let pairs: Vec<(Vertex, Vertex)> = (0..(READ_BUF_RETAIN as u32 / 8 + 1024))
+            .map(|i| (i, i + 1))
+            .collect();
+        let mut image = Vec::new();
+        crate::graph::io::write_pairs(&mut image, &pairs).unwrap();
+        assert!(image.len() > READ_BUF_RETAIN);
+        fs::write(&path, &image).unwrap();
+        let got = read_raw_pairs(&path, image.len() as u64).unwrap();
+        assert_eq!(got.len(), pairs.len());
+        READ_BUF.with(|b| {
+            assert!(
+                b.borrow().capacity() <= READ_BUF_RETAIN,
+                "retained {} > cap {READ_BUF_RETAIN}",
+                b.borrow().capacity()
+            );
+        });
     }
 
     #[test]

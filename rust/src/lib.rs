@@ -15,6 +15,12 @@
 //! Python never runs on the request path: after `make artifacts`, the
 //! `lcc` binary is self-contained.
 
+/// Allocation-counting [`System`](std::alloc::System) wrapper: the
+/// per-round `allocs` metric and the CI zero-copy gate read its counter
+/// (see [`util::alloc`]).
+#[global_allocator]
+static GLOBAL_ALLOC: util::alloc::CountingAlloc = util::alloc::CountingAlloc;
+
 pub mod bench;
 pub mod cc;
 pub mod coordinator;

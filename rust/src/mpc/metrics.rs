@@ -37,6 +37,18 @@ pub struct RoundTiming {
     pub gen_ms: f64,
     pub shuffle_ms: f64,
     pub fold_ms: f64,
+    /// Heap allocations performed process-wide during the round (counting
+    /// global allocator, [`crate::util::alloc`]).  Steady-state spilled
+    /// hop rounds must keep this O(machines), never O(edges): shard
+    /// payloads stream through borrowed cursors over mmap'd images.
+    pub allocs: u64,
+    /// Spilled-shard bytes served zero-copy from mmap'd images during the
+    /// round ([`crate::graph::spill::data_plane_counters`]).
+    pub shard_bytes_mapped: u64,
+    /// Spilled-shard bytes served through the owned-read fallback during
+    /// the round — nonzero on the hot path means the zero-copy plane
+    /// silently degraded (the CI spill gate checks the run-level total).
+    pub shard_bytes_copied: u64,
 }
 
 /// One worker-recovery incident: a disconnect-shaped transport fault the

@@ -9,13 +9,22 @@
 //! LCCFRME1 | kind u8 | seq u64 | body_len u64 | fnv1a64(body) u64 | body
 //! ```
 //!
+//! **Shard custody frames carry the one zero-copy shard layout** — the
+//! `LCCSHRD2` columnar image defined in [`crate::graph::spill`] (header +
+//! checksummed `src[]`/`dst[]` columns + vertex→range index).  The
+//! [`FrameKind::LoadShard`] body *is* the shard file image: a spilled
+//! shard ships its mmap'd bytes borrowed straight into the socket write
+//! (no decode, no re-encode), a resident shard encodes once
+//! ([`crate::graph::spill::encode_shard_bytes`]), and the receiving
+//! worker keeps the frame body as its working representation, walking it
+//! through a borrowed [`crate::graph::spill::ShardCursor`] — disk, wire,
+//! and round generation all read the same bytes in place.
+//!
 //! Two wire backends implement [`super::transport::Exchange`]:
 //!
 //! * [`ProcTransport`] — the coordinator **is** the data plane: it spawns
-//!   `machines` copies of `lcc worker`, hands each its
-//!   [`crate::graph::EdgeShard`] in the spill file framing
-//!   ([`crate::graph::spill::encode_shard_bytes`] — a spilled shard ships
-//!   as its raw file bytes, no rehydration), and drives one
+//!   `machines` copies of `lcc worker`, hands each custody of its shard
+//!   in the image framing above, and drives one
 //!   [`FrameKind::Round`] exchange per model round, serializing and
 //!   routing every machine's exact charged byte image itself.  Each
 //!   machine counts its bytes on the receiving side and, for
@@ -1086,32 +1095,44 @@ impl ProcTransport {
         let seq = self.seq;
         let mut want_checksums = Vec::with_capacity(p);
         for s in 0..p {
+            // The frame body IS the shard file image (one layout on disk
+            // and wire): a checkpointed file ships verbatim, a spilled
+            // shard ships its mmap'd image borrowed straight into the
+            // socket write — no decode, no re-encode, no copy — and only
+            // a resident shard encodes fresh bytes.
             let checkpointed = override_dir
                 .map(|d| d.join(spill::shard_file_name(s)))
                 .and_then(|path| std::fs::read(path).ok());
-            let image = match checkpointed {
-                Some(bytes) => bytes,
-                None => match g.spill_dir() {
-                    Some(dir) => {
-                        let path = dir.join(spill::shard_file_name(s));
-                        std::fs::read(&path).map_err(|e| TransportError::Io {
-                            worker: Some(s),
-                            op: "read spilled shard for shipping",
-                            source: e,
-                        })?
+            let mut mapped: Option<&[u8]> = None;
+            let owned: Option<Vec<u8>> = match checkpointed {
+                Some(bytes) => Some(bytes),
+                None => {
+                    let data = g.shard_data(s);
+                    match (data.image(), data.as_pairs()) {
+                        // image/as_pairs borrow from the store (`'g`),
+                        // not the view, so the borrow outlives `data`
+                        (Some(img), _) => {
+                            mapped = Some(img);
+                            None
+                        }
+                        (None, Some(pairs)) => {
+                            Some(spill::encode_shard_bytes(s as u32, p as u32, pairs).0)
+                        }
+                        (None, None) => Some(
+                            spill::encode_shard_bytes(s as u32, p as u32, &data.into_vec()).0,
+                        ),
                     }
-                    None => {
-                        let data = g.shard_data(s);
-                        spill::encode_shard_bytes(s as u32, p as u32, &data).0
-                    }
-                },
+                }
             };
+            let image: &[u8] = mapped
+                .or(owned.as_deref())
+                .expect("shard image resolved above");
             let checksum = shard_payload_checksum(g, s);
             want_checksums.push(checksum);
             let mut head = Vec::with_capacity(4 + 8);
             head.extend_from_slice(&(s as u32).to_le_bytes());
             head.extend_from_slice(&(image.len() as u64).to_le_bytes());
-            write_frame_parts(&mut self.conns[s].writer, FrameKind::LoadShard, seq, &head, &image)
+            write_frame_parts(&mut self.conns[s].writer, FrameKind::LoadShard, seq, &head, image)
                 .map_err(|e| self.crash_context(s, e))?;
         }
         for s in 0..p {
@@ -1699,7 +1720,7 @@ impl ShuffleTransport {
 fn shard_payload_checksum(g: &ShardedGraph, s: usize) -> u64 {
     match g.shard_checksum(s) {
         Some(c) => c,
-        None => spill::checksum_edges(&g.shard_data(s)),
+        None => spill::checksum_pairs(g.shard_data(s).iter()),
     }
 }
 

@@ -130,6 +130,11 @@ pub struct Simulator {
     /// into a [`RoundTiming`] row when the round completes.
     pending_gen_ms: f64,
     pending_fold_ms: f64,
+    /// Data-plane watermarks (process-global counters as of the previous
+    /// timing row) — the per-round `allocs` / mapped / copied deltas in
+    /// [`RoundTiming`] are measured against these.
+    alloc_mark: u64,
+    dp_mark: crate::graph::spill::DataPlaneCounters,
 }
 
 impl std::fmt::Debug for Simulator {
@@ -168,6 +173,8 @@ impl Simulator {
             scratch_touched: Vec::new(),
             pending_gen_ms: 0.0,
             pending_fold_ms: 0.0,
+            alloc_mark: crate::util::alloc::allocation_count(),
+            dp_mark: crate::graph::spill::data_plane_counters(),
         }
     }
 
@@ -236,6 +243,26 @@ impl Simulator {
         if let Some(t) = self.metrics.timings.last_mut() {
             t.fold_ms += since.elapsed().as_secs_f64() * 1e3;
         }
+    }
+
+    /// Data-plane deltas (allocation count, spilled-shard bytes mapped /
+    /// copied) since the previous timing row, advancing the watermarks.
+    /// The counters are process-global, so concurrently-running engines
+    /// bleed into each other's rows — pure observability, excluded from
+    /// every bit-identity comparison exactly like the wall-clock timings.
+    fn data_plane_delta(&mut self) -> (u64, u64, u64) {
+        let allocs = crate::util::alloc::allocation_count();
+        let dp = crate::graph::spill::data_plane_counters();
+        let d_allocs = allocs.saturating_sub(self.alloc_mark);
+        let d_mapped = dp
+            .shard_bytes_mapped
+            .saturating_sub(self.dp_mark.shard_bytes_mapped);
+        let d_copied = dp
+            .shard_bytes_copied
+            .saturating_sub(self.dp_mark.shard_bytes_copied);
+        self.alloc_mark = allocs;
+        self.dp_mark = dp;
+        (d_allocs, d_mapped, d_copied)
     }
 
     /// Execute one MapReduce round.
@@ -627,12 +654,12 @@ impl Simulator {
     /// metrics are bit-identical for every `threads` setting.  Keys must
     /// be `< out.len()`.
     ///
-    /// Known trade-off: a shard is the unit of work, so wall-clock
-    /// parallelism is capped at `min(threads, machines)` — with fewer
-    /// machines than threads the round under-uses the pool (the default
-    /// 16 machines saturates it; sub-shard splitting is a possible later
-    /// extension since the merge order, not the split, carries the
-    /// determinism).
+    /// Chunks need not be whole shards: the merge order, not the split,
+    /// carries the determinism, so callers with more threads than
+    /// machines pass sub-shard row ranges
+    /// ([`crate::graph::ShardedGraph::msg_chunks_split`]) — a mapped
+    /// spilled shard then feeds every thread from borrowed cursor slices
+    /// over one shared image.
     pub fn round_fold_sharded<V, C>(
         &mut self,
         label: &str,
@@ -1072,7 +1099,7 @@ impl Simulator {
                     };
                     for s in 0..p {
                         let shard = g.shard_data(s);
-                        for &(u, v) in shard.iter() {
+                        for (u, v) in shard.iter() {
                             fold_in(u, vals[v as usize]);
                             fold_in(v, vals[u as usize]);
                         }
@@ -1135,11 +1162,16 @@ impl Simulator {
                         charge.bytes,
                         &charge.machine_bytes,
                     );
+                    let (allocs, shard_bytes_mapped, shard_bytes_copied) =
+                        self.data_plane_delta();
                     self.metrics.timings.push(RoundTiming {
                         label: label.to_string(),
                         gen_ms: std::mem::take(&mut self.pending_gen_ms),
                         shuffle_ms: t_shuffle.elapsed().as_secs_f64() * 1e3,
                         fold_ms: std::mem::take(&mut self.pending_fold_ms),
+                        allocs,
+                        shard_bytes_mapped,
+                        shard_bytes_copied,
                     });
                     let (out, _, _) = folded.expect("just computed");
                     return Some(out);
@@ -1292,11 +1324,15 @@ impl Simulator {
                 Err(e) => std::panic::panic_any(e),
             }
         };
+        let (allocs, shard_bytes_mapped, shard_bytes_copied) = self.data_plane_delta();
         self.metrics.timings.push(RoundTiming {
             label: label.to_string(),
             gen_ms: std::mem::take(&mut self.pending_gen_ms),
             shuffle_ms: t0.elapsed().as_secs_f64() * 1e3,
             fold_ms: std::mem::take(&mut self.pending_fold_ms),
+            allocs,
+            shard_bytes_mapped,
+            shard_bytes_copied,
         });
         if ack.machine_bytes.len() != machine_bytes.len() {
             std::panic::panic_any(TransportError::Protocol {

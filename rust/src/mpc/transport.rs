@@ -29,7 +29,12 @@
 //!   exchanging length-prefixed checksummed frames per round over
 //!   localhost sockets.  Fold rounds tagged with a [`WireOp`] are reduced
 //!   *by the worker processes* and merged back; everything else ships its
-//!   exact charged byte image for receiver-side accounting.
+//!   exact charged byte image for receiver-side accounting.  Shard
+//!   custody crosses this boundary zero-copy: a `LoadShard` body is the
+//!   columnar shard-file image of [`crate::graph::spill`] verbatim —
+//!   mmap'd spill bytes are written borrowed into the socket, and the
+//!   receiving worker keeps the frame body as its working representation,
+//!   walking it through a borrowed [`crate::graph::spill::ShardCursor`].
 //!
 //! The eight algorithms and the contraction loop are written against
 //! [`super::Simulator`]'s round API only — they compile and run unchanged

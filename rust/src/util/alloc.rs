@@ -1,0 +1,74 @@
+//! Counting global allocator: [`System`] plus one relaxed atomic
+//! increment per allocation.
+//!
+//! The zero-copy data plane's contract is *counted*, not assumed: a
+//! steady-state spilled hop round must perform no per-edge heap
+//! allocation (shard payloads stream through borrowed cursors over
+//! mmap'd images — see `graph::spill`).  The per-round `allocs` delta in
+//! [`crate::mpc::RoundTiming`] and the run totals in the `lcc perf` JSON
+//! come from this counter, and the CI spill gate fails when a round's
+//! allocation count scales with the edge count again.
+//!
+//! Only allocation *events* are counted (alloc / realloc / zeroed-alloc;
+//! frees are not): the gate cares about churn on the hot path, and an
+//! event count is cheaper and less ambiguous than tracking live bytes
+//! under realloc.  The counter is process-global and monotone; readers
+//! take deltas between two [`allocation_count`] snapshots.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
+
+/// The crate's `#[global_allocator]` (registered in `lib.rs`).
+pub struct CountingAlloc;
+
+// SAFETY: defers every operation to `System`, which upholds the
+// GlobalAlloc contract; the counter is a side effect with no aliasing.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}
+
+/// Allocation events since process start (monotone; take deltas).
+pub fn allocation_count() -> u64 {
+    ALLOCATIONS.load(Ordering::Relaxed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allocations_are_counted() {
+        let before = allocation_count();
+        let v: Vec<u64> = Vec::with_capacity(1024);
+        let after = allocation_count();
+        assert!(after > before, "Vec allocation was not counted");
+        drop(v);
+    }
+
+    #[test]
+    fn count_is_monotone() {
+        let a = allocation_count();
+        let _s = format!("{a}");
+        let b = allocation_count();
+        assert!(b >= a);
+    }
+}

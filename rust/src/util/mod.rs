@@ -5,6 +5,7 @@
 //! `serde`, `clap`, `proptest`, `criterion`) are unavailable; these modules
 //! provide the small slices of them the system needs (see DESIGN.md §5).
 
+pub mod alloc;
 pub mod cli;
 pub mod dsu;
 pub mod json;

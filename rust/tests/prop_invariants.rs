@@ -331,7 +331,7 @@ fn prop_machine_of_partition_and_reshard_roundtrip() {
                 // shard-ownership invariant on every stored edge
                 for s in 0..g.num_shards() {
                     let data = g.read_shard(s).map_err(|e| format!("p={p}: {e}"))?;
-                    for &(u, v) in data.iter() {
+                    for (u, v) in data.iter() {
                         lcc::prop_assert!(
                             u < v && machine_of(u as u64, p) == s,
                             "p={p}: edge ({u},{v}) misplaced on shard {s}"
@@ -366,12 +366,12 @@ fn prop_machine_of_partition_and_reshard_roundtrip() {
 
 /// Recompute a shard's ownership histogram from its actual edges.
 fn brute_peer_counts(
-    edges: &[(lcc::graph::Vertex, lcc::graph::Vertex)],
+    edges: impl IntoIterator<Item = (lcc::graph::Vertex, lcc::graph::Vertex)>,
     p: usize,
 ) -> Vec<u64> {
     use lcc::mpc::simulator::machine_of;
     let mut peers = vec![0u64; p];
-    for &(_, v) in edges {
+    for (_, v) in edges {
         peers[machine_of(v as u64, p)] += 1;
     }
     peers
@@ -402,7 +402,7 @@ fn check_histogram_caches(
         );
         lcc::prop_assert_eq!(
             stats.peer_counts,
-            brute_peer_counts(&data, p),
+            brute_peer_counts(data.iter(), p),
             "{tag}: stale peer_counts cache on shard {s}"
         );
     }

@@ -82,7 +82,7 @@ fn prop_shard_ownership_and_cached_stats() {
                 for s in 0..g.num_shards() {
                     let data = g.read_shard(s).map_err(|e| e.to_string())?;
                     let mut peers = vec![0u64; p];
-                    for &(u, v) in data.iter() {
+                    for (u, v) in data.iter() {
                         if u >= v {
                             return Err(format!("non-canonical edge ({u},{v})"));
                         }

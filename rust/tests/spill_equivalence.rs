@@ -165,6 +165,76 @@ fn prop_graph_ops_bit_identical_across_backends() {
 }
 
 #[test]
+fn prop_cursor_walk_is_bit_identical_to_row_decode() {
+    // The zero-copy read path against the legacy row path: walking a
+    // columnar shard image through its borrowed cursor must yield exactly
+    // the edge sequence of a row-major decode — and every derived view
+    // (sub-shard slices, per-vertex touched ranges) must agree with brute
+    // force over that sequence.
+    use lcc::graph::{io, spill};
+    Prop::new(16).check_sized(
+        "cursor-vs-row-decode",
+        400,
+        |rng, size| {
+            let n = size.max(2) as u64;
+            let m = rng.gen_range(4 * n) as usize;
+            let mut edges: Vec<(Vertex, Vertex)> = (0..m)
+                .map(|_| (rng.gen_range(n) as Vertex, rng.gen_range(n) as Vertex))
+                .collect();
+            // canonical shard order, as every engine shard file holds
+            edges.sort_unstable();
+            edges.dedup();
+            let p = 1 + rng.gen_range(7) as u32;
+            let s = rng.gen_range(p as u64) as u32;
+            (edges, s, p)
+        },
+        |(edges, s, p)| {
+            let (image, ck) = spill::encode_shard_bytes(*s, *p, edges);
+            if ck != spill::checksum_edges(edges) {
+                return Err("encode checksum is not the logical row checksum".into());
+            }
+            let (cursor, vck) =
+                spill::parse_shard_image(&image, *s, *p, std::path::Path::new("<prop>"))
+                    .map_err(|e| format!("self-encoded image rejected: {e}"))?;
+            if vck != ck {
+                return Err("verified checksum differs from declared".into());
+            }
+            // bit-identity vs the row-major decode
+            let mut rows = Vec::new();
+            io::write_pairs(&mut rows, edges).unwrap();
+            let decoded = io::decode_pairs(&rows);
+            let walked: Vec<(Vertex, Vertex)> = cursor.iter().collect();
+            if walked != decoded {
+                return Err("cursor walk differs from row decode".into());
+            }
+            // sub-shard slices stream exactly their row ranges
+            let m = edges.len();
+            for (lo, hi) in [(0, m), (m / 3, 2 * m / 3), (m.saturating_sub(1), m)] {
+                let sliced: Vec<(Vertex, Vertex)> = cursor.slice(lo, hi).iter().collect();
+                if sliced != decoded[lo..hi] {
+                    return Err(format!("slice {lo}..{hi} differs from row decode"));
+                }
+            }
+            // the vertex index brackets exactly the rows of each source
+            let mut probes: Vec<Vertex> = edges.iter().map(|&(u, _)| u).collect();
+            probes.push(edges.last().map(|&(u, _)| u + 1).unwrap_or(0));
+            probes.push(0);
+            for v in probes {
+                let got = cursor.vertex_range(v);
+                let want_start = decoded.partition_point(|&(u, _)| u < v);
+                let want_end = decoded.partition_point(|&(u, _)| u <= v);
+                if got != (want_start..want_end) {
+                    return Err(format!(
+                        "vertex_range({v}) = {got:?}, brute force says {want_start}..{want_end}"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn tight_budget_actually_spills_and_unbounded_does_not() {
     // Guard against the suite silently testing resident-vs-resident: the
     // tight budget must put the ingest generation on disk.

@@ -64,8 +64,12 @@ fn corrupt_shard_payload_is_typed_error_not_wrong_labels() {
         .find(|p| fs::metadata(p).unwrap().len() > 40)
         .expect("a non-empty shard");
     let mut bytes = fs::read(victim).unwrap();
-    let last = bytes.len() - 1;
-    bytes[last] ^= 0x01; // flip one payload bit: same length, different edge
+    // flip one payload bit (the last byte of the dst column — the file's
+    // tail is the vertex index, which is a *different* fault): same
+    // length, different edge
+    let m = u64::from_le_bytes(bytes[16..24].try_into().unwrap()) as usize;
+    let dst_end = 40 + 8 * m;
+    bytes[dst_end - 1] ^= 0x01;
     fs::write(victim, &bytes).unwrap();
     let s = files.iter().position(|p| p == victim).unwrap();
     // a store without checksums would hand back a silently different edge
@@ -80,6 +84,31 @@ fn corrupt_shard_payload_is_typed_error_not_wrong_labels() {
         g.try_to_graph(),
         Err(SpillError::ChecksumMismatch { .. })
     ));
+}
+
+#[test]
+fn corrupt_vertex_index_is_typed_corrupt() {
+    // The columnar file ends with the vertex→range index.  Corrupting it
+    // leaves every edge intact (the payload checksum passes), so a store
+    // that trusted the index would serve wrong ranges; ours re-derives
+    // the bucket histogram during the checksum walk and refuses.
+    let g = spilled_graph(11);
+    let files = shard_files(&g);
+    let victim = files
+        .iter()
+        .find(|p| fs::metadata(p).unwrap().len() > 40)
+        .expect("a non-empty shard");
+    let mut bytes = fs::read(victim).unwrap();
+    let last = bytes.len() - 1;
+    bytes[last] ^= 0x01; // the final byte of the last index offset
+    fs::write(victim, &bytes).unwrap();
+    let s = files.iter().position(|p| p == victim).unwrap();
+    match g.read_shard(s) {
+        Err(SpillError::Corrupt { detail, .. }) => {
+            assert!(detail.contains("index"), "detail names the index: {detail}")
+        }
+        other => panic!("expected SpillError::Corrupt, got {other:?}"),
+    }
 }
 
 #[test]

@@ -9,9 +9,13 @@ Gate: fail (exit 1) on a >25% regression in either
   * rounds     — the `round_breakdown.rounds` count of a run recorded in
     both artifacts for the same algo/machines/transport.
 
-Baselines that are missing, still `pending-first-measurement`, or have no
-overlapping benches produce a warning and exit 0 — the gate arms itself
-the first time CI lands real numbers in BENCH_PR*.json.
+Baselines that are missing or still `pending-first-measurement` produce a
+warning and exit 0 — the gate arms itself the first time CI lands real
+numbers in BENCH_PR*.json (scripts/publish_bench.py checks them in).
+Once ANY baseline carries measurements the gate is strict: zero
+overlapping benches with every measured baseline is itself a failure
+(renaming the whole suite must update the baselines in the same change,
+not silently disarm the gate).
 """
 
 import json
@@ -62,6 +66,7 @@ def main(argv):
 
     regressions = []
     compared = 0
+    measured_baselines = 0
     for path in baseline_paths:
         base = load(path)
         if base is None:
@@ -73,6 +78,7 @@ def main(argv):
                 "(pending) — skipped"
             )
             continue
+        measured_baselines += 1
         for name, base_median in bench_index(base).items():
             if name not in fresh_benches:
                 continue
@@ -98,6 +104,15 @@ def main(argv):
                 )
 
     if compared == 0:
+        if measured_baselines > 0:
+            # strict mode: a measured baseline exists but shares nothing
+            # with the fresh artifact — the gate must not silently disarm
+            print(
+                "bench_compare: FAIL: baselines carry measurements but none "
+                "overlap the fresh artifact; update BENCH_PR*.json in the "
+                "same change that renamed the suite"
+            )
+            return 1
         print(
             "bench_compare: WARNING: no comparable measurements in any baseline — "
             "no-op until CI fills BENCH_PR*.json"
