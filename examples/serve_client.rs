@@ -1,0 +1,65 @@
+//! Client for the `lcc serve` incremental connectivity daemon.
+//!
+//! Start the daemon in one terminal (port 0 = ephemeral, announced on
+//! stdout):
+//!
+//!     cargo run --release -- serve --graph gnp --n 100000 --avg-deg 2 \
+//!         --machines 8 --port 7171 --recontract-threshold 5000
+//!
+//! then talk to it:
+//!
+//!     cargo run --release --example serve_client 7171
+//!
+//! The example issues each protocol op once — point queries, a size
+//! listing, a streamed insertion batch, a flush barrier — and prints the
+//! raw newline-JSON exchange, so it doubles as protocol documentation.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+fn main() {
+    let port: u16 = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(7171);
+
+    let stream = TcpStream::connect(("127.0.0.1", port))
+        .unwrap_or_else(|e| panic!("cannot connect to lcc serve on port {port}: {e}"));
+    let mut reader = BufReader::new(stream.try_clone().expect("clone stream"));
+    let mut writer = stream;
+
+    let mut request = |line: &str| -> String {
+        writeln!(writer, "{line}").expect("send request");
+        writer.flush().expect("flush request");
+        let mut reply = String::new();
+        reader.read_line(&mut reply).expect("read reply");
+        println!("-> {line}");
+        println!("<- {}", reply.trim_end());
+        reply
+    };
+
+    // Point queries answer out of the current lock-free snapshot.
+    request(r#"{"op":"component-of","u":0}"#);
+    request(r#"{"op":"same-component","u":0,"v":1}"#);
+    request(r#"{"op":"component-sizes","top":5}"#);
+
+    // Stream an insertion batch; the daemon applies it incrementally
+    // (union-find over the contracted core) and recontracts in the
+    // background once enough core edges accumulate.
+    request(r#"{"op":"insert","edges":[[0,1],[1,2],[2,3]]}"#);
+
+    // flush is the read-your-writes barrier: everything queued before it
+    // is applied before the ack.
+    let ack = request(r#"{"op":"flush"}"#);
+    assert!(ack.contains("\"ok\":true"), "flush failed: {ack}");
+
+    // The inserted chain must now be connected.
+    let reply = request(r#"{"op":"same-component","u":0,"v":3}"#);
+    assert!(
+        reply.contains("\"same\":true"),
+        "0 and 3 should be connected after the insert: {reply}"
+    );
+
+    request(r#"{"op":"stats"}"#);
+    println!("serve_client: OK");
+}

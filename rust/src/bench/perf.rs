@@ -165,10 +165,16 @@ pub fn round_breakdown(machines: usize, transport: TransportMode) -> Option<crat
         .set("machines", machines)
         .set("transport", transport.name())
         .set("rounds", rounds);
-    Some(match crate::util::stats::peak_rss_bytes() {
-        Some(rss) => doc.set("peak_rss_bytes", rss),
-        None => doc,
-    })
+    // Key always present, null when the platform can't report it
+    // (/proc/self/status VmHWM is Linux-only) — consumers key on the
+    // value, not the key's presence (see scripts/bench_compare.py).
+    Some(doc.set(
+        "peak_rss_bytes",
+        match crate::util::stats::peak_rss_bytes() {
+            Some(rss) => Json::from(rss),
+            None => Json::Null,
+        },
+    ))
 }
 
 /// L3 primitive: one min-hop MPC round over a sharded G(n,p) graph,
@@ -466,10 +472,15 @@ pub fn suite_json(
         Some(b) => doc.set("spill_budget", b),
         None => doc,
     };
-    let doc = match crate::util::stats::peak_rss_bytes() {
-        Some(rss) => doc.set("peak_rss_bytes", rss),
-        None => doc,
-    };
+    // null (not absent) when unavailable, so the schema is stable across
+    // platforms and bench_compare.py can tell "no RSS" from "old file"
+    let doc = doc.set(
+        "peak_rss_bytes",
+        match crate::util::stats::peak_rss_bytes() {
+            Some(rss) => Json::from(rss),
+            None => Json::Null,
+        },
+    );
     let doc = match round_breakdown {
         Some(b) => doc.set("round_breakdown", b),
         None => doc,

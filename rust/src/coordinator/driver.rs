@@ -76,6 +76,12 @@ pub struct RunConfig {
     /// (`--checkpoint-dir`); `None` = a run-private temp dir whenever
     /// recovery is enabled on the shuffle transport.
     pub checkpoint_dir: Option<std::path::PathBuf>,
+    /// How many checkpointed `gen-<id>/` custody directories to retain
+    /// (`--keep-generations`); `None` = environment
+    /// (`LCC_KEEP_GENERATIONS`) or the compiled-in default of 1.
+    /// Long-lived sessions ([`Driver::into_session`]) recontract
+    /// indefinitely, so retention is what bounds their checkpoint disk.
+    pub keep_generations: Option<usize>,
 }
 
 impl Default for RunConfig {
@@ -101,6 +107,7 @@ impl Default for RunConfig {
             fault_plan: None,
             respawn_budget: None,
             checkpoint_dir: None,
+            keep_generations: None,
         }
     }
 }
@@ -260,6 +267,9 @@ impl Driver {
             if self.cfg.checkpoint_dir.is_some() {
                 c.checkpoint_dir = self.cfg.checkpoint_dir.clone();
             }
+            if let Some(k) = self.cfg.keep_generations {
+                c.keep_generations = k.max(1);
+            }
             c
         };
         match self.cfg.transport {
@@ -310,8 +320,23 @@ impl Driver {
         dataset: &str,
         seed: u64,
     ) -> Result<Report, TransportError> {
-        let algo = cc::by_name(&self.cfg.algorithm);
         let mut sim = self.build_simulator(g)?;
+        self.run_in(&mut sim, g, dataset, seed).map(|(_, report)| report)
+    }
+
+    /// One run of the configured algorithm on an already-built engine —
+    /// the body every entry point (and every [`DriverSession`] run)
+    /// shares.  Returns the labels alongside the report: batch callers
+    /// drop them, the incremental service (`lcc serve`) publishes them as
+    /// its next snapshot.
+    fn run_in(
+        &self,
+        sim: &mut Simulator,
+        g: &ShardedGraph,
+        dataset: &str,
+        seed: u64,
+    ) -> Result<(Vec<u32>, Report), TransportError> {
+        let algo = cc::by_name(&self.cfg.algorithm);
         let mut rng = Rng::new(seed);
         let xla_before = self.executor.as_ref().map(|e| e.calls.get()).unwrap_or(0);
         let opts = RunOptions {
@@ -329,7 +354,7 @@ impl Driver {
         // typed error as payload (see mpc::transport docs): catch it here
         // and hand it back as a Result; any other panic is re-raised.
         let res = match std::panic::catch_unwind(AssertUnwindSafe(|| {
-            algo.run_sharded(g, &mut sim, &mut rng, &opts)
+            algo.run_sharded(g, sim, &mut rng, &opts)
         })) {
             Ok(res) => res,
             Err(payload) => match payload.downcast::<TransportError>() {
@@ -353,7 +378,24 @@ impl Driver {
         if self.cfg.verify {
             report.verified = Some(res.labels == cc::oracle::components_sharded(g));
         }
-        Ok(report)
+        Ok((res.labels, report))
+    }
+
+    /// Bring up the configured transport once and keep it: the returned
+    /// session owns the driver and the live engine, and every
+    /// [`DriverSession::run`] reuses the fleet (persistent workers, warm
+    /// sockets, checkpoint state) instead of spawning and tearing it down
+    /// per run.  This is the `lcc serve` lifecycle; batch entry points
+    /// are unchanged.  `g` is the first resident graph — it is shipped to
+    /// the workers here, so the first `run` on the same graph pays no
+    /// second custody load.
+    pub fn into_session(self, g: &ShardedGraph) -> Result<DriverSession, TransportError> {
+        let sim = self.build_simulator(g)?;
+        Ok(DriverSession {
+            driver: self,
+            sim,
+            runs: 0,
+        })
     }
 
     /// Median-of-`k`-seeds wall time protocol (§6: "we have taken a median
@@ -377,6 +419,55 @@ impl Driver {
             .collect();
         reports.sort_by(|a, b| a.wall_ms.partial_cmp(&b.wall_ms).unwrap());
         reports.swap_remove(k / 2)
+    }
+}
+
+/// A persistent run session ([`Driver::into_session`]): the transport is
+/// brought up once and every run reuses it.  On the wire transports the
+/// worker fleet, its sockets, and its checkpoint state survive between
+/// runs — the daemon lifecycle `lcc serve` is built on; in-process, the
+/// session simply keeps the engine's scratch warm.  Dropping the session
+/// drops the engine, which tears the fleet down.
+pub struct DriverSession {
+    driver: Driver,
+    sim: Simulator,
+    /// Completed runs; run 0's graph was already shipped by
+    /// [`Driver::into_session`], every later run re-establishes custody
+    /// (the workers hold the *contracted* generation after a run, never
+    /// the input one).
+    runs: u64,
+}
+
+impl DriverSession {
+    /// The configuration every run of this session executes under.
+    pub fn config(&self) -> &RunConfig {
+        &self.driver.cfg
+    }
+
+    /// Transport backend name (`"inproc"` / `"proc"` / `"shuffle"`).
+    pub fn transport_name(&self) -> &'static str {
+        self.sim.transport_name()
+    }
+
+    /// Run the configured algorithm on `g` over the live fleet,
+    /// returning the canonical labels (min vertex id per component —
+    /// what the incremental service publishes as a snapshot) alongside
+    /// the usual report.  `g` must be sharded to the session's machine
+    /// count.  Runs are seeded like [`Driver::run_median`]'s protocol
+    /// (base seed + 1000 per run) so successive recontractions draw
+    /// independent priority streams; labels are canonical, hence
+    /// seed-independent.
+    pub fn run(
+        &mut self,
+        g: &ShardedGraph,
+        dataset: &str,
+    ) -> Result<(Vec<u32>, Report), TransportError> {
+        if self.runs > 0 {
+            self.sim.begin_run(g)?;
+        }
+        let seed = self.driver.cfg.seed.wrapping_add(self.runs * 1000);
+        self.runs += 1;
+        self.driver.run_in(&mut self.sim, g, dataset, seed)
     }
 }
 

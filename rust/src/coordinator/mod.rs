@@ -10,6 +10,6 @@ pub mod pipeline;
 pub mod report;
 pub mod worker;
 
-pub use driver::{Driver, RunConfig};
+pub use driver::{Driver, DriverSession, RunConfig};
 pub use pipeline::{PipelineConfig, PipelineResult, PipelineStats};
 pub use report::Report;

@@ -172,16 +172,35 @@ pub fn preferential_attachment(n: usize, m_per_vertex: usize, rng: &mut Rng) -> 
     let m = m_per_vertex;
     let mut targets: Vec<Vertex> = Vec::with_capacity(2 * n * m);
     let mut edges = Vec::with_capacity(n * m);
+    let mut picked: Vec<Vertex> = Vec::with_capacity(m);
     for v in 1..n {
-        for i in 0..m.min(v) {
-            // Choose uniformly from the endpoint multiset = degree-biased.
-            let t = if targets.is_empty() || rng.gen_bool(0.5) && v > 1 {
-                // mix in a uniform choice to keep the tail from exploding
-                rng.gen_range(v as u64) as Vertex
-            } else {
-                targets[rng.gen_range(targets.len() as u64) as usize]
+        picked.clear();
+        for _ in 0..m.min(v) {
+            // Choose uniformly from the endpoint multiset = degree-biased,
+            // mixing in a uniform choice to keep the tail from exploding.
+            let mut draw = |rng: &mut Rng| -> Vertex {
+                if targets.is_empty() || rng.gen_bool(0.5) && v > 1 {
+                    rng.gen_range(v as u64) as Vertex
+                } else {
+                    targets[rng.gen_range(targets.len() as u64) as usize]
+                }
             };
-            let t = if t as usize >= v { (v - 1 - i) as Vertex } else { t };
+            // Rejection-sample away duplicate targets for the same source:
+            // repeats would collapse under normalize() and starve the
+            // realized edge count below sum_v min(m, v).  Retries are
+            // bounded so generation stays O(n*m) even on hub-heavy draws.
+            let mut t = draw(rng);
+            let mut tries = 0;
+            while (t as usize >= v || picked.contains(&t)) && tries < 32 {
+                t = draw(rng);
+                tries += 1;
+            }
+            if t as usize >= v || picked.contains(&t) {
+                // Deterministic fallback: the smallest id not yet attached
+                // this batch (exists because picked.len() < m.min(v) <= v).
+                t = (0..v as Vertex).find(|c| !picked.contains(c)).unwrap();
+            }
+            picked.push(t);
             edges.push((v as Vertex, t));
             targets.push(t);
             targets.push(v as Vertex);
@@ -465,6 +484,40 @@ mod tests {
         assert_eq!(components(&g).components(), 1);
         let deg = g.degrees();
         assert!(*deg.iter().max().unwrap() > 30);
+    }
+
+    #[test]
+    fn preferential_attachment_realizes_full_density() {
+        // Regression: duplicate targets for one source used to collapse
+        // under normalize(), silently starving the realized density.
+        // Distinct in-range targets per batch make the normalized edge
+        // count exactly sum_v min(m, v).
+        for seed in [1, 11, 42] {
+            for (n, m) in [(200usize, 3usize), (400, 8), (50, 60)] {
+                let g = preferential_attachment(n, m, &mut Rng::new(seed));
+                let want: usize = (1..n).map(|v| m.min(v)).sum();
+                assert_eq!(
+                    g.num_edges(),
+                    want,
+                    "n={n} m={m} seed={seed}: batches must be duplicate- and loop-free"
+                );
+                assert!(g.edges().iter().all(|&(u, v)| u != v), "self edge");
+                // realized density == target implies avg degree ~ 2m once
+                // n >> m; spot-check the usual regime
+                if n > 10 * m {
+                    let avg = 2.0 * g.num_edges() as f64 / n as f64;
+                    assert!(
+                        (avg - 2.0 * m as f64).abs() < 0.2 * m as f64,
+                        "n={n} m={m}: avg degree {avg} vs target {}",
+                        2 * m
+                    );
+                }
+            }
+        }
+        // m > n exercises the bounded-retry fallback on every batch: the
+        // result must be the complete graph
+        let g = preferential_attachment(50, 60, &mut Rng::new(9));
+        assert_eq!(g.num_edges(), 50 * 49 / 2);
     }
 
     #[test]

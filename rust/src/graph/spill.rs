@@ -1843,6 +1843,47 @@ pub fn read_checkpoint(path: &Path) -> Result<RunCheckpoint, SpillError> {
     })
 }
 
+/// Generation-retention policy for long-lived processes: remove all but
+/// the `keep_last` highest-numbered `gen-<id>/` custody directories under
+/// `root`, returning how many were removed.
+///
+/// A bounded batch run cuts a handful of generations and exits; a serve
+/// daemon recontracts indefinitely, so without pruning the checkpoint
+/// root grows one custody directory (O(edges) of spill files) per
+/// contraction generation.  Generation ids are process-monotone
+/// ([`crate::graph::ShardedGraph::generation`]), so "the `keep_last`
+/// highest ids" is exactly "the `keep_last` most recent snapshots".
+/// Removal is best-effort: a directory that cannot be removed (e.g. a
+/// concurrent reader holds a file open) is skipped, not an error — a
+/// stale generation directory is inert, just disk.
+pub fn prune_generations(root: &Path, keep_last: usize) -> usize {
+    let keep_last = keep_last.max(1);
+    let Ok(entries) = fs::read_dir(root) else {
+        return 0;
+    };
+    let mut gens: Vec<(u64, PathBuf)> = entries
+        .flatten()
+        .filter_map(|e| {
+            let name = e.file_name();
+            let id = name
+                .to_string_lossy()
+                .strip_prefix("gen-")?
+                .parse::<u64>()
+                .ok()?;
+            let path = e.path();
+            path.is_dir().then_some((id, path))
+        })
+        .collect();
+    if gens.len() <= keep_last {
+        return 0;
+    }
+    gens.sort_by_key(|&(id, _)| std::cmp::Reverse(id));
+    gens.split_off(keep_last)
+        .into_iter()
+        .filter(|(_, path)| fs::remove_dir_all(path).is_ok())
+        .count()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1860,6 +1901,34 @@ mod tests {
         edges.sort_unstable();
         edges.dedup();
         edges
+    }
+
+    #[test]
+    fn prune_generations_keeps_last_k() {
+        let dir = tmp();
+        // N "recontractions" leave N gen dirs plus unrelated entries …
+        for id in [3u64, 7, 11, 12, 40] {
+            let d = dir.path().join(format!("gen-{id}"));
+            fs::create_dir_all(&d).unwrap();
+            fs::write(d.join(shard_file_name(0)), b"custody").unwrap();
+        }
+        fs::create_dir_all(dir.path().join("gen-not-a-number")).unwrap();
+        fs::write(dir.path().join(CHECKPOINT_NAME), b"ck").unwrap();
+        // … retention keeps the K highest ids and nothing else is touched
+        assert_eq!(prune_generations(dir.path(), 2), 3);
+        let survivors: Vec<bool> = [3u64, 7, 11, 12, 40]
+            .iter()
+            .map(|id| dir.path().join(format!("gen-{id}")).is_dir())
+            .collect();
+        assert_eq!(survivors, [false, false, false, true, true]);
+        assert!(dir.path().join("gen-not-a-number").is_dir());
+        assert!(dir.path().join(CHECKPOINT_NAME).is_file());
+        // idempotent at or under the bound; keep_last=0 still keeps one
+        assert_eq!(prune_generations(dir.path(), 2), 0);
+        assert_eq!(prune_generations(dir.path(), 0), 1);
+        assert!(dir.path().join("gen-40").is_dir());
+        // a root that does not exist is a no-op, not a panic
+        assert_eq!(prune_generations(&dir.path().join("absent"), 3), 0);
     }
 
     #[test]

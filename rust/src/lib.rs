@@ -27,4 +27,5 @@ pub mod coordinator;
 pub mod graph;
 pub mod mpc;
 pub mod runtime;
+pub mod serve;
 pub mod util;

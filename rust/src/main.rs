@@ -2,6 +2,7 @@
 //!
 //! Subcommands:
 //!   run       run one algorithm on a generated or loaded graph
+//!   serve     long-lived incremental connectivity daemon (newline-JSON TCP)
 //!   worker    serve as one machine of the multi-process transport
 //!   pipeline  stream a graph through the sharded local-contraction pipeline
 //!   table1    regenerate Table 1 (dataset inventory)
@@ -29,6 +30,7 @@ fn main() {
         .unwrap_or("help");
     match cmd {
         "run" => cmd_run(&args),
+        "serve" => cmd_serve(&args),
         "worker" => cmd_worker(&args),
         "pipeline" => cmd_pipeline(&args),
         "table1" => cmd_table(&args, 1),
@@ -52,7 +54,7 @@ fn main() {
 
 const HELP: &str = "lcc — Connected Components at Scale via Local Contractions
 
-USAGE: lcc <run|worker|pipeline|table1|table2|table3|figure1|theory|ablation|perf|generate|runtime-check> [flags]
+USAGE: lcc <run|serve|worker|pipeline|table1|table2|table3|figure1|theory|ablation|perf|generate|runtime-check> [flags]
 
 Common flags:
   --algo lc|lc-mtl|tc|tc-dht|cracker|two-phase|htm|hash-min
@@ -80,8 +82,19 @@ Fault tolerance (proc/shuffle transports; run/perf):
                       terminal; env LCC_RESPAWN_BUDGET; default 3)
   --checkpoint-dir DIR (persist per-generation run checkpoints here;
                         default: run-private temp dir when respawn is on)
+  --keep-generations K (retain the last K gen-<id>/ checkpoint dirs;
+                        env LCC_KEEP_GENERATIONS; default 1)
   --fault-plan PLAN (deterministic fault injection for the chaos suite,
                      e.g. \"kill:w2@round=3,delay:w1@round=5\"; env LCC_FAULT_PLAN)
+
+Incremental service (lcc serve; all run flags above also apply):
+  --port N (TCP port; 0 = ephemeral, announced as {\"event\":\"serving\",...}
+            on stdout; newline-JSON ops: same-component, component-of,
+            component-sizes, insert, flush, stats, shutdown)
+  --recontract-threshold N (distinct core edges accumulated since the last
+                            contraction that trigger a full pass; default 4096)
+  --queue-capacity N (bounded ingest queue in messages — full queue blocks
+                      inserting clients; default 4)
 
 Worker mode (spawned by the proc transport; not for direct use):
   lcc worker --connect HOST:PORT";
@@ -163,6 +176,7 @@ fn cmd_run(args: &Args) {
         fault_plan: fault_plan(args),
         respawn_budget: args.usize_opt("respawn-budget"),
         checkpoint_dir: args.str_opt("checkpoint-dir").map(std::path::PathBuf::from),
+        keep_generations: args.nonzero_usize_opt("keep-generations"),
         ..Default::default()
     };
     let driver = Driver::new(cfg);
@@ -181,6 +195,46 @@ fn cmd_run(args: &Args) {
     }
     if report.verified == Some(false) {
         std::process::exit(1);
+    }
+}
+
+fn cmd_serve(args: &Args) {
+    let (g, name) = load_graph(args);
+    let cfg = RunConfig {
+        algorithm: args.str_or("algo", "lc"),
+        seed: args.u64_or("seed", 42),
+        machines: args.nonzero_usize_or("machines", 16),
+        threads: args.nonzero_usize_or("threads", lcc::mpc::pool::default_threads().max(1)),
+        finisher_threshold: args.usize_or("finisher", 0),
+        prune_isolated: args.bool_or("prune-isolated", true),
+        max_phases: args.u64_or("max-phases", 200) as u32,
+        state_cap: args.u64_or("state-cap", 0),
+        use_xla: args.bool_or("use-xla", false),
+        spill_budget: spill_budget(args),
+        transport: transport(args),
+        // queries must answer out of the published snapshot, not wait on
+        // an oracle pass per recontraction; the smoke tests verify
+        // against the oracle externally
+        verify: false,
+        io_timeout_secs: args.nonzero_u64_opt("io-timeout"),
+        connect_retries: args.nonzero_usize_opt("connect-retries"),
+        fault_plan: fault_plan(args),
+        respawn_budget: args.usize_opt("respawn-budget"),
+        checkpoint_dir: args.str_opt("checkpoint-dir").map(std::path::PathBuf::from),
+        keep_generations: args.nonzero_usize_opt("keep-generations"),
+        ..Default::default()
+    };
+    let serve_cfg = lcc::serve::ServeConfig {
+        port: args.u64_or("port", 0) as u16,
+        queue_capacity: args.nonzero_usize_or("queue-capacity", 4),
+        recontract_threshold: args.nonzero_usize_or("recontract-threshold", 4096),
+    };
+    // serve blocks for the daemon lifetime — main's post-dispatch
+    // unknown-flag check would never print
+    args.warn_unknown("serve");
+    if let Err(e) = lcc::serve::serve(Driver::new(cfg), &g, &name, &serve_cfg) {
+        eprintln!("serve: transport error: {e}");
+        std::process::exit(3);
     }
 }
 
@@ -339,6 +393,9 @@ fn cmd_perf(args: &Args) {
     }
     if let Some(dir) = args.str_opt("checkpoint-dir") {
         std::env::set_var("LCC_CHECKPOINT_DIR", dir);
+    }
+    if let Some(k) = args.nonzero_usize_opt("keep-generations") {
+        std::env::set_var("LCC_KEEP_GENERATIONS", k.to_string());
     }
     let measurements = perf::standard_suite(quick, machines, budget, mode);
     for m in &measurements {

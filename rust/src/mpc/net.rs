@@ -109,6 +109,13 @@ pub const DEFAULT_RESPAWN_BUDGET: usize = 3;
 /// Base backoff between respawn attempts, in milliseconds (doubles per
 /// attempt).
 pub const DEFAULT_RESPAWN_BACKOFF_MS: u64 = 50;
+/// Default generation-checkpoint retention (`--keep-generations` /
+/// `LCC_KEEP_GENERATIONS`): how many `gen-<id>/` custody directories
+/// survive each checkpoint.  A bounded batch run only ever needs the
+/// current one; `lcc serve` raises it so a recontraction that fails
+/// mid-persist still has the previous durable generation to recover
+/// from.
+pub const DEFAULT_KEEP_GENERATIONS: usize = 1;
 
 // ---------------------------------------------------------------------------
 // transport configuration + deterministic fault injection
@@ -140,6 +147,11 @@ pub struct NetConfig {
     /// (`LCC_CHECKPOINT_DIR`); `None` = a run-private temp dir when
     /// checkpointing is active.
     pub checkpoint_dir: Option<std::path::PathBuf>,
+    /// How many checkpointed `gen-<id>/` custody directories to retain
+    /// (`LCC_KEEP_GENERATIONS`; clamped to ≥ 1).  Long-lived processes
+    /// that recontract repeatedly prune to this bound at every
+    /// checkpoint — see [`spill::prune_generations`].
+    pub keep_generations: usize,
 }
 
 impl Default for NetConfig {
@@ -151,6 +163,7 @@ impl Default for NetConfig {
             respawn_budget: DEFAULT_RESPAWN_BUDGET,
             respawn_backoff_ms: DEFAULT_RESPAWN_BACKOFF_MS,
             checkpoint_dir: None,
+            keep_generations: DEFAULT_KEEP_GENERATIONS,
         }
     }
 }
@@ -181,6 +194,9 @@ impl NetConfig {
         }
         if let Some(dir) = std::env::var("LCC_CHECKPOINT_DIR").ok().filter(|s| !s.is_empty()) {
             cfg.checkpoint_dir = Some(std::path::PathBuf::from(dir));
+        }
+        if let Some(k) = env_u64("LCC_KEEP_GENERATIONS").filter(|&k| k > 0) {
+            cfg.keep_generations = k as usize;
         }
         cfg
     }
@@ -1375,6 +1391,13 @@ impl Exchange for ProcTransport {
         Some(self.machines)
     }
 
+    /// Persistent-session reload: re-ship every shard of `g` to the live
+    /// fleet (workers replace their custody on a fresh `LoadShard` — the
+    /// same path recovery re-ships through).
+    fn load_graph(&mut self, g: &ShardedGraph) -> Result<(), TransportError> {
+        ProcTransport::load_graph(self, g)
+    }
+
     fn exchange(
         &mut self,
         label: &str,
@@ -1637,20 +1660,11 @@ impl ShuffleTransport {
                 custody_dir,
             },
         )?;
-        // best-effort prune: a stale generation directory is inert (the
-        // checkpoint no longer names it), just disk
-        if let Ok(entries) = std::fs::read_dir(ck.dir.path()) {
-            for entry in entries.flatten() {
-                let name = entry.file_name();
-                let name = name.to_string_lossy();
-                if let Some(old) = name.strip_prefix("gen-").and_then(|s| s.parse::<u64>().ok())
-                {
-                    if old != generation {
-                        let _ = std::fs::remove_dir_all(entry.path());
-                    }
-                }
-            }
-        }
+        // best-effort retention prune: keep the configured window of most
+        // recent generations (a stale directory beyond it is inert — the
+        // checkpoint no longer names it — just disk, which a long-lived
+        // serve process cannot afford to leak per recontraction)
+        spill::prune_generations(ck.dir.path(), self.links.cfg.keep_generations);
         self.stats
             .checkpoints
             .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
@@ -1735,6 +1749,14 @@ impl Exchange for ShuffleTransport {
 
     fn machines(&self) -> Option<usize> {
         Some(self.links.machines)
+    }
+
+    /// Persistent-session reload: establish custody of the new
+    /// generation on the live mesh (probe → re-ship → checkpoint), so a
+    /// serve daemon's recontractions reuse the fleet instead of
+    /// respawning it.
+    fn load_graph(&mut self, g: &ShardedGraph) -> Result<(), TransportError> {
+        crate::mpc::transport::ShuffleOps::establish_custody(self, g)
     }
 
     /// Rounds without a worker-native descriptor (grouped reduces,

@@ -183,6 +183,23 @@ impl Simulator {
         self.transport.name()
     }
 
+    /// Re-arm the engine for another run in a persistent session (`lcc
+    /// serve`): (re)establish `g` on the transport — the wire backends
+    /// re-ship shard custody to the live fleet; in-process is a no-op —
+    /// and reset the accumulated metrics and timing watermarks so every
+    /// run's report stands alone, exactly as if the engine were freshly
+    /// built.  The scratch buffers survive (that is the point of the
+    /// session: no per-run teardown).
+    pub fn begin_run(&mut self, g: &ShardedGraph) -> Result<(), TransportError> {
+        self.transport.load_graph(g)?;
+        self.metrics = Metrics::new();
+        self.pending_gen_ms = 0.0;
+        self.pending_fold_ms = 0.0;
+        self.alloc_mark = crate::util::alloc::allocation_count();
+        self.dp_mark = crate::graph::spill::data_plane_counters();
+        Ok(())
+    }
+
     /// Does the transport physically move bytes?  The round helpers in
     /// `cc::common` use this to pick shippable round shapes (e.g. two
     /// real hop rounds instead of the shared-memory fused traversal).

@@ -459,6 +459,17 @@ pub trait Exchange: fmt::Debug {
         None
     }
 
+    /// (Re)establish the resident graph on the backend between runs —
+    /// the persistent-session path (`lcc serve`): a long-lived fleet is
+    /// handed each new generation instead of being torn down and
+    /// respawned per run.  The wire backends re-ship shard custody; the
+    /// in-process backend holds no remote state, so the default is a
+    /// no-op.
+    fn load_graph(&mut self, g: &crate::graph::ShardedGraph) -> Result<(), TransportError> {
+        let _ = g;
+        Ok(())
+    }
+
     /// Execute one round's communication: deliver `payloads[j]` to
     /// machine `j` (an **empty** `payloads` vector marks a charge-only
     /// round whose bytes never materialize — fused phases, graph-layer

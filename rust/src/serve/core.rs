@@ -1,0 +1,362 @@
+//! The write side of `lcc serve`: incremental label maintenance plus the
+//! batching ingest sink.
+//!
+//! One [`ServiceCore`] owns the accumulated edge multiset, a streaming
+//! union-find over it, and the persistent [`DriverSession`] fleet.  Edge
+//! batches update labels incrementally (union-find over the contracted
+//! core — §6's streaming finisher applied online); once the number of
+//! **distinct core edges** (label pairs bridging current components)
+//! inserted since the last contraction crosses
+//! [`ServeConfig::recontract_threshold`](super::ServeConfig), a full
+//! contraction pass runs through the regular [`Driver`] stack over the
+//! live worker fleet and the fresh labeling is swapped in atomically.
+//! Because labels are canonical (min vertex id per component), the
+//! incremental path and the full pass agree **bit for bit** — the
+//! recontraction revalidates and rebases rather than changing answers.
+//!
+//! Ingest is decoupled from connection handlers by a bounded
+//! [`sync_channel`]: handlers block in `send` when the ingest thread
+//! falls behind, mirroring the backpressure discipline of the bounded
+//! frame queues in [`crate::mpc::net`] — memory stays bounded and slow
+//! consumers throttle producers instead of OOMing the daemon.
+
+use std::collections::HashSet;
+use std::sync::mpsc::{Receiver, SyncSender, TryRecvError};
+use std::sync::Arc;
+
+use crate::coordinator::{Driver, DriverSession};
+use crate::graph::{Graph, ShardedGraph, SpillPolicy};
+use crate::mpc::TransportError;
+use crate::util::dsu::DisjointSet;
+
+use super::snapshot::{Snapshot, SnapshotCell};
+
+/// A message into the ingest sink.
+pub enum IngestMsg {
+    /// A batch of undirected edges to insert.
+    Edges(Vec<(u32, u32)>),
+    /// Barrier: apply everything queued before this message, then reply
+    /// with the service state.  Lets clients (and the smoke tests) wait
+    /// for their insertions to be visible.
+    Flush(SyncSender<FlushAck>),
+    /// Drain the queue, then exit the ingest loop.
+    Shutdown,
+}
+
+/// Reply to an [`IngestMsg::Flush`] barrier.
+#[derive(Debug, Clone)]
+pub struct FlushAck {
+    /// Epoch of the snapshot covering everything before the barrier.
+    pub epoch: u64,
+    pub num_components: usize,
+    /// Distinct core edges accumulated since the last contraction.
+    pub core_edges: usize,
+    /// Full contraction passes completed so far.
+    pub recontractions: u64,
+    /// Total edges accepted since startup (graph + inserted).
+    pub edges: usize,
+    /// Inserted edges rejected for being out of range or self-loops.
+    pub rejected: u64,
+}
+
+/// What one batch did (exposed for the in-process stress tests).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BatchOutcome {
+    /// Components merged by this batch.
+    pub merged: usize,
+    /// Whether the batch tripped a full recontraction pass.
+    pub recontracted: bool,
+}
+
+/// Incremental connectivity state over a persistent fleet.
+pub struct ServiceCore {
+    n: usize,
+    /// Dataset name stamped on recontraction reports.
+    dataset: String,
+    /// The full accumulated edge multiset (initial graph + insertions);
+    /// recontractions and the oracle both rebuild from it.
+    edges: Vec<(u32, u32)>,
+    /// Streaming union-find over the contracted core, reseeded from the
+    /// published labels after every full pass.
+    dsu: DisjointSet,
+    /// Current canonical labels (always equal to
+    /// `dsu.canonical_labels()`).
+    labels: Vec<u32>,
+    /// Distinct `(min label, max label)` pairs that bridged two live
+    /// components when inserted, accumulated since the last full pass —
+    /// a measure of how much contracted core the streaming finisher is
+    /// holding, and the trigger for the next pass.
+    core: HashSet<(u32, u32)>,
+    session: DriverSession,
+    cell: Arc<SnapshotCell>,
+    recontract_threshold: usize,
+    epoch: u64,
+    recontractions: u64,
+    batches: u64,
+    inserted: u64,
+    rejected: u64,
+}
+
+impl ServiceCore {
+    /// Bring up the fleet, run the bootstrap contraction on `g`, and
+    /// publish the first snapshot.
+    pub fn bootstrap(
+        driver: Driver,
+        g: &Graph,
+        dataset: &str,
+        recontract_threshold: usize,
+    ) -> Result<ServiceCore, TransportError> {
+        let n = g.num_vertices();
+        let machines = driver.config().machines.max(1);
+        let policy = SpillPolicy::with_budget(driver.config().spill_budget);
+        let sharded = ShardedGraph::from_graph_with(g, machines, policy);
+        let mut session = driver.into_session(&sharded)?;
+        let (labels, _report) = session.run(&sharded, dataset)?;
+        let mut dsu = DisjointSet::new(n);
+        for v in 0..n as u32 {
+            dsu.union(v, labels[v as usize]);
+        }
+        let cell = Arc::new(SnapshotCell::new(Snapshot::from_labels(
+            1,
+            0,
+            labels.clone(),
+        )));
+        Ok(ServiceCore {
+            n,
+            dataset: dataset.to_string(),
+            edges: g.edges().to_vec(),
+            dsu,
+            labels,
+            core: HashSet::new(),
+            session,
+            cell,
+            recontract_threshold: recontract_threshold.max(1),
+            epoch: 1,
+            recontractions: 0,
+            batches: 0,
+            inserted: 0,
+            rejected: 0,
+        })
+    }
+
+    /// The cell query handlers subscribe to.
+    pub fn cell(&self) -> Arc<SnapshotCell> {
+        Arc::clone(&self.cell)
+    }
+
+    pub fn num_vertices(&self) -> usize {
+        self.n
+    }
+
+    pub fn core_edges(&self) -> usize {
+        self.core.len()
+    }
+
+    pub fn recontractions(&self) -> u64 {
+        self.recontractions
+    }
+
+    pub fn transport_name(&self) -> &'static str {
+        self.session.transport_name()
+    }
+
+    fn ack(&self) -> FlushAck {
+        FlushAck {
+            epoch: self.epoch,
+            num_components: self.dsu.components(),
+            core_edges: self.core.len(),
+            recontractions: self.recontractions,
+            edges: self.edges.len(),
+            rejected: self.rejected,
+        }
+    }
+
+    /// Apply one batch of inserted edges: union-find over the contracted
+    /// core, snapshot publish if anything merged, full recontraction if
+    /// the core crossed the threshold.  Out-of-range endpoints and
+    /// self-loops are counted and skipped, never fatal.
+    pub fn apply_batch(&mut self, batch: &[(u32, u32)]) -> BatchOutcome {
+        self.batches += 1;
+        let mut merged = 0usize;
+        for &(u, v) in batch {
+            if u as usize >= self.n || v as usize >= self.n || u == v {
+                self.rejected += 1;
+                continue;
+            }
+            self.inserted += 1;
+            self.edges.push((u.min(v), u.max(v)));
+            let (lu, lv) = (self.labels[u as usize], self.labels[v as usize]);
+            if lu != lv {
+                // a genuine core edge: it bridges two components of the
+                // last contraction's labeling
+                self.core.insert((lu.min(lv), lu.max(lv)));
+            }
+            if self.dsu.union(u, v) {
+                merged += 1;
+            }
+        }
+        if merged > 0 {
+            self.labels = self.dsu.canonical_labels();
+            self.epoch += 1;
+            self.cell.publish(Snapshot::from_labels(
+                self.epoch,
+                self.recontractions,
+                self.labels.clone(),
+            ));
+        }
+        let mut recontracted = false;
+        if self.core.len() >= self.recontract_threshold {
+            match self.recontract() {
+                Ok(()) => recontracted = true,
+                Err(e) => {
+                    // Keep answering out of the (still correct) incremental
+                    // labels; the next threshold cross retries the pass.
+                    eprintln!("[serve] recontraction failed, staying incremental: {e}");
+                }
+            }
+        }
+        BatchOutcome {
+            merged,
+            recontracted,
+        }
+    }
+
+    /// One full contraction pass over the accumulated edge multiset on
+    /// the live fleet.  Canonical labels make this a *revalidation*: the
+    /// distributed result must agree bit-for-bit with the incremental
+    /// labels (divergence means a bug; we log it loudly and adopt the
+    /// distributed answer, which the verify path cross-checks).
+    fn recontract(&mut self) -> Result<(), TransportError> {
+        let machines = self.session.config().machines.max(1);
+        let policy = SpillPolicy::with_budget(self.session.config().spill_budget);
+        let g = Graph::from_edges(self.n, self.edges.clone());
+        let sharded = ShardedGraph::from_graph_with(&g, machines, policy);
+        let (labels, _report) = self.session.run(&sharded, &self.dataset)?;
+        if labels != self.labels {
+            eprintln!(
+                "[serve] WARNING: recontraction labels diverge from incremental \
+                 labels — adopting the distributed result"
+            );
+            self.labels = labels;
+        }
+        // rebase: fresh union-find seeded from the contracted labeling,
+        // empty core — the threshold now measures post-pass insertions
+        self.dsu = DisjointSet::new(self.n);
+        for v in 0..self.n as u32 {
+            self.dsu.union(v, self.labels[v as usize]);
+        }
+        self.core.clear();
+        self.recontractions += 1;
+        self.epoch += 1;
+        self.cell.publish(Snapshot::from_labels(
+            self.epoch,
+            self.recontractions,
+            self.labels.clone(),
+        ));
+        // Checkpoint retention for the long-lived fleet: the transport
+        // prunes on every generation write, but a run that ends without
+        // writing (e.g. recovery disabled) would otherwise accumulate
+        // dirs across recontractions.
+        if let Some(dir) = &self.session.config().checkpoint_dir {
+            let keep = self.session.config().keep_generations.unwrap_or(1);
+            crate::graph::spill::prune_generations(dir, keep);
+        }
+        Ok(())
+    }
+
+    /// The ingest loop: drain the bounded channel until shutdown.
+    /// Consecutive queued `Edges` messages are coalesced into one batch
+    /// so a burst of small insertions pays one label rebuild, not many.
+    pub fn run_ingest(mut self, rx: Receiver<IngestMsg>) -> ServiceCore {
+        let mut pending: Option<IngestMsg> = None;
+        loop {
+            let msg = match pending.take() {
+                Some(m) => m,
+                None => match rx.recv() {
+                    Ok(m) => m,
+                    Err(_) => break, // all senders gone
+                },
+            };
+            match msg {
+                IngestMsg::Edges(mut batch) => {
+                    // coalesce whatever else is already queued
+                    loop {
+                        match rx.try_recv() {
+                            Ok(IngestMsg::Edges(more)) => batch.extend(more),
+                            Ok(other) => {
+                                pending = Some(other);
+                                break;
+                            }
+                            Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
+                        }
+                    }
+                    self.apply_batch(&batch);
+                }
+                IngestMsg::Flush(reply) => {
+                    // best-effort: the client may have hung up
+                    let _ = reply.send(self.ack());
+                }
+                IngestMsg::Shutdown => break,
+            }
+        }
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::RunConfig;
+    use crate::graph::generators;
+    use crate::util::rng::Rng;
+
+    fn core_on(g: &Graph, threshold: usize) -> ServiceCore {
+        let driver = Driver::new(RunConfig {
+            machines: 4,
+            ..Default::default()
+        });
+        ServiceCore::bootstrap(driver, g, "test", threshold).expect("bootstrap")
+    }
+
+    #[test]
+    fn bootstrap_publishes_oracle_labels() {
+        let g = generators::gnp(200, 0.01, &mut Rng::new(3));
+        let core = core_on(&g, 1_000_000);
+        let snap = core.cell().load();
+        assert_eq!(snap.labels, crate::cc::oracle::components(&g));
+        assert_eq!(snap.epoch, 1);
+    }
+
+    #[test]
+    fn incremental_batches_match_oracle_and_recontract() {
+        let g = generators::gnp(120, 0.008, &mut Rng::new(5));
+        let mut core = core_on(&g, 6);
+        let mut all_edges = g.edges().to_vec();
+        let mut recontracted = false;
+        // chain batches force many inter-component merges
+        for start in (0..110u32).step_by(10) {
+            let batch: Vec<(u32, u32)> = (start..start + 9).map(|v| (v, v + 1)).collect();
+            all_edges.extend(&batch);
+            let out = core.apply_batch(&batch);
+            recontracted |= out.recontracted;
+            let want = crate::cc::oracle::components(&Graph::from_edges(120, all_edges.clone()));
+            let snap = core.cell().load();
+            assert_eq!(snap.labels, want, "after batch at {start}");
+        }
+        assert!(recontracted, "threshold 6 must trip at least one full pass");
+        assert!(core.recontractions() >= 1);
+        // after a pass the core counter was rebased
+        assert!(core.core_edges() < 6);
+    }
+
+    #[test]
+    fn bad_edges_are_rejected_not_fatal() {
+        let g = generators::path(10);
+        let mut core = core_on(&g, 1_000_000);
+        let out = core.apply_batch(&[(3, 3), (900, 2), (1, 90_000)]);
+        assert_eq!(out.merged, 0);
+        assert_eq!(core.ack().rejected, 3);
+        let snap = core.cell().load();
+        assert_eq!(snap.epoch, 1, "rejected-only batch publishes nothing");
+    }
+}

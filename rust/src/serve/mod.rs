@@ -1,0 +1,355 @@
+//! `lcc serve` — a long-lived incremental connectivity service.
+//!
+//! The daemon brings the worker mesh up **once** (via
+//! [`crate::coordinator::DriverSession`]), keeps shard custody and the
+//! canonical label array warm, and answers connectivity queries over a
+//! newline-delimited JSON TCP protocol:
+//!
+//! ```text
+//! -> {"op":"same-component","u":3,"v":17}
+//! <- {"ok":true,"same":true,"epoch":4}
+//! -> {"op":"component-of","u":3}
+//! <- {"ok":true,"label":0,"epoch":4}
+//! -> {"op":"component-sizes","top":3}
+//! <- {"ok":true,"components":9,"sizes":[[0,812],[640,9],[771,4]],"epoch":4}
+//! -> {"op":"insert","edges":[[1,2],[2,3]]}
+//! <- {"ok":true,"queued":2}
+//! -> {"op":"flush"}
+//! <- {"ok":true,"epoch":5,"components":8,...}
+//! ```
+//!
+//! The module splits cleanly along the read/write axis:
+//!
+//! * [`snapshot`] — immutable generation-swapped label snapshots; the
+//!   query path is **lock-free** (one atomic epoch load per query
+//!   against a per-connection cached `Arc`).
+//! * [`core`] — the single-writer ingest sink: bounded-queue batching,
+//!   incremental union-find over the contracted core, and
+//!   threshold-triggered full recontraction passes over the live fleet.
+//!
+//! Queries never wait on ingest, ingest never waits on queries, and a
+//! recontraction (seconds of fleet work) happens entirely on the write
+//! side — readers keep answering out of the previous snapshot until the
+//! new one is swapped in.
+
+pub mod core;
+pub mod snapshot;
+
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{sync_channel, SyncSender};
+use std::sync::Arc;
+
+use crate::coordinator::Driver;
+use crate::graph::Graph;
+use crate::mpc::TransportError;
+use crate::util::json::{self, Json};
+
+use self::core::{FlushAck, IngestMsg, ServiceCore};
+use self::snapshot::SnapshotReader;
+
+/// Service-plane knobs (the fleet/run knobs live in
+/// [`crate::coordinator::RunConfig`]).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// TCP port to listen on (`0` = ephemeral; the chosen port is
+    /// announced on stdout).
+    pub port: u16,
+    /// Bound of the ingest queue in *messages* — senders block when it
+    /// is full (backpressure, mirroring [`crate::mpc::net`]'s bounded
+    /// frame queues).
+    pub queue_capacity: usize,
+    /// Full-pass trigger: distinct core edges accumulated since the
+    /// last contraction.
+    pub recontract_threshold: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            port: 0,
+            queue_capacity: 4,
+            recontract_threshold: 4096,
+        }
+    }
+}
+
+/// Bring up the fleet, bind the socket, and serve until a `shutdown`
+/// request arrives.  Blocks the calling thread for the daemon lifetime;
+/// the announced `{"event":"serving",...}` line on stdout is the ready
+/// signal scripts and tests wait for.
+pub fn serve(driver: Driver, g: &Graph, dataset: &str, cfg: &ServeConfig) -> Result<(), TransportError> {
+    let core = ServiceCore::bootstrap(driver, g, dataset, cfg.recontract_threshold)?;
+    let cell = core.cell();
+    let transport = core.transport_name();
+
+    let listener = TcpListener::bind(("127.0.0.1", cfg.port)).map_err(|e| TransportError::Io {
+        worker: None,
+        op: "bind serve socket",
+        source: e,
+    })?;
+    let port = listener
+        .local_addr()
+        .map_err(|e| TransportError::Io {
+            worker: None,
+            op: "resolve serve socket",
+            source: e,
+        })?
+        .port();
+    set_serve_port(port);
+
+    let (tx, rx) = sync_channel::<IngestMsg>(cfg.queue_capacity.max(1));
+    let ingest = std::thread::Builder::new()
+        .name("lcc-serve-ingest".into())
+        .spawn(move || core.run_ingest(rx))
+        .expect("spawn ingest thread");
+
+    // The ready line: exactly one JSON object, explicitly flushed —
+    // stdout is block-buffered when piped, and clients parse this line
+    // to learn the ephemeral port.
+    let ready = Json::obj()
+        .set("event", "serving")
+        .set("port", port as u64)
+        .set("n", g.num_vertices())
+        .set("edges", g.num_edges())
+        .set("transport", transport)
+        .set("recontract_threshold", cfg.recontract_threshold as u64);
+    println!("{}", ready.dumps());
+    std::io::stdout().flush().ok();
+
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let mut handlers = Vec::new();
+    for stream in listener.incoming() {
+        if shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        let stream = match stream {
+            Ok(s) => s,
+            Err(_) => continue,
+        };
+        let reader = cell.reader();
+        let tx = tx.clone();
+        let shutdown = Arc::clone(&shutdown);
+        handlers.push(
+            std::thread::Builder::new()
+                .name("lcc-serve-conn".into())
+                .spawn(move || handle_connection(stream, reader, tx, shutdown))
+                .expect("spawn connection handler"),
+        );
+    }
+    // Shutdown path: stop ingest first (it may still be recontracting),
+    // then join the handlers that are still draining their sockets.
+    let _ = tx.send(IngestMsg::Shutdown);
+    drop(tx);
+    let _ = ingest.join();
+    for h in handlers {
+        let _ = h.join();
+    }
+    Ok(())
+}
+
+/// One client connection: newline-JSON requests in, newline-JSON
+/// responses out.  Owns its [`SnapshotReader`], so queries are a single
+/// atomic load against the cached snapshot.
+fn handle_connection(
+    stream: TcpStream,
+    mut reader: SnapshotReader,
+    tx: SyncSender<IngestMsg>,
+    shutdown: Arc<AtomicBool>,
+) {
+    let peer_read = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let mut lines = BufReader::new(peer_read);
+    let mut out = BufWriter::new(stream);
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match lines.read_line(&mut line) {
+            Ok(0) | Err(_) => return, // peer hung up
+            Ok(_) => {}
+        }
+        if line.trim().is_empty() {
+            continue;
+        }
+        let (reply, quit) = handle_request(line.trim(), &mut reader, &tx, &shutdown);
+        if writeln!(out, "{}", reply.dumps()).and_then(|_| out.flush()).is_err() {
+            return;
+        }
+        if quit {
+            return;
+        }
+    }
+}
+
+fn err(msg: &str) -> Json {
+    Json::obj().set("ok", false).set("error", msg)
+}
+
+fn ack_json(ack: &FlushAck) -> Json {
+    Json::obj()
+        .set("ok", true)
+        .set("epoch", ack.epoch)
+        .set("components", ack.num_components)
+        .set("core_edges", ack.core_edges)
+        .set("recontractions", ack.recontractions)
+        .set("edges", ack.edges)
+        .set("rejected", ack.rejected)
+}
+
+/// Decode and execute one request line.  Returns the reply and whether
+/// the connection should close after sending it.
+fn handle_request(
+    line: &str,
+    reader: &mut SnapshotReader,
+    tx: &SyncSender<IngestMsg>,
+    shutdown: &Arc<AtomicBool>,
+) -> (Json, bool) {
+    let req = match json::parse(line) {
+        Ok(j) => j,
+        Err(e) => return (err(&format!("bad json: {e}")), false),
+    };
+    let op = match req.get("op").and_then(|o| o.as_str()) {
+        Some(op) => op.to_string(),
+        None => return (err("missing op"), false),
+    };
+    let vertex = |key: &str| -> Option<u32> {
+        req.get(key)
+            .and_then(|v| v.as_i64())
+            .and_then(|v| u32::try_from(v).ok())
+    };
+    match op.as_str() {
+        "same-component" => {
+            let (Some(u), Some(v)) = (vertex("u"), vertex("v")) else {
+                return (err("same-component needs u and v"), false);
+            };
+            let snap = reader.current();
+            match snap.same_component(u, v) {
+                Some(same) => (
+                    Json::obj()
+                        .set("ok", true)
+                        .set("same", same)
+                        .set("epoch", snap.epoch),
+                    false,
+                ),
+                None => (err("vertex out of range"), false),
+            }
+        }
+        "component-of" => {
+            let Some(u) = vertex("u") else {
+                return (err("component-of needs u"), false);
+            };
+            let snap = reader.current();
+            match snap.component_of(u) {
+                Some(label) => (
+                    Json::obj()
+                        .set("ok", true)
+                        .set("label", label)
+                        .set("epoch", snap.epoch),
+                    false,
+                ),
+                None => (err("vertex out of range"), false),
+            }
+        }
+        "component-sizes" => {
+            let top = req
+                .get("top")
+                .and_then(|t| t.as_i64())
+                .map(|t| t.max(0) as usize)
+                .unwrap_or(10);
+            let snap = reader.current();
+            let sizes: Vec<Json> = snap
+                .sizes
+                .iter()
+                .take(top)
+                .map(|&(label, size)| Json::Arr(vec![Json::from(label as u64), Json::from(size)]))
+                .collect();
+            (
+                Json::obj()
+                    .set("ok", true)
+                    .set("components", snap.num_components())
+                    .set("n", snap.num_vertices())
+                    .set("sizes", Json::Arr(sizes))
+                    .set("epoch", snap.epoch),
+                false,
+            )
+        }
+        "insert" => {
+            let Some(raw) = req.get("edges").and_then(|e| e.as_arr()) else {
+                return (err("insert needs edges: [[u,v],...]"), false);
+            };
+            let mut edges = Vec::with_capacity(raw.len());
+            for pair in raw {
+                let uv = pair.as_arr().filter(|p| p.len() == 2).and_then(|p| {
+                    Some((
+                        u32::try_from(p[0].as_i64()?).ok()?,
+                        u32::try_from(p[1].as_i64()?).ok()?,
+                    ))
+                });
+                match uv {
+                    Some(e) => edges.push(e),
+                    None => return (err("edges entries must be [u,v] pairs"), false),
+                }
+            }
+            let queued = edges.len();
+            // blocking send = backpressure: a full queue throttles the
+            // inserting client instead of growing daemon memory
+            if tx.send(IngestMsg::Edges(edges)).is_err() {
+                return (err("ingest stopped"), false);
+            }
+            (Json::obj().set("ok", true).set("queued", queued), false)
+        }
+        "flush" => {
+            let (ack_tx, ack_rx) = sync_channel::<FlushAck>(1);
+            if tx.send(IngestMsg::Flush(ack_tx)).is_err() {
+                return (err("ingest stopped"), false);
+            }
+            match ack_rx.recv() {
+                Ok(ack) => (ack_json(&ack), false),
+                Err(_) => (err("ingest stopped"), false),
+            }
+        }
+        "stats" => {
+            // flush doubles as the stats barrier: the ack carries every
+            // counter the service tracks
+            let (ack_tx, ack_rx) = sync_channel::<FlushAck>(1);
+            if tx.send(IngestMsg::Flush(ack_tx)).is_err() {
+                return (err("ingest stopped"), false);
+            }
+            match ack_rx.recv() {
+                Ok(ack) => {
+                    let snap = reader.current();
+                    (
+                        ack_json(&ack)
+                            .set("n", snap.num_vertices())
+                            .set("snapshot_epoch", snap.epoch),
+                        false,
+                    )
+                }
+                Err(_) => (err("ingest stopped"), false),
+            }
+        }
+        "shutdown" => {
+            shutdown.store(true, Ordering::SeqCst);
+            // wake the acceptor loop so it observes the flag
+            let _ = TcpStream::connect(("127.0.0.1", local_port(tx)));
+            (Json::obj().set("ok", true).set("stopping", true), true)
+        }
+        other => (err(&format!("unknown op: {other}")), false),
+    }
+}
+
+/// The acceptor wake-up needs the listening port; rather than threading
+/// it through every handler we stash it in a process-global set once by
+/// [`serve`].  (A `SyncSender` can't tell us.)
+static SERVE_PORT: std::sync::atomic::AtomicU32 = std::sync::atomic::AtomicU32::new(0);
+
+fn local_port(_tx: &SyncSender<IngestMsg>) -> u16 {
+    SERVE_PORT.load(Ordering::SeqCst) as u16
+}
+
+pub(crate) fn set_serve_port(port: u16) {
+    SERVE_PORT.store(port as u32, Ordering::SeqCst);
+}

@@ -160,6 +160,16 @@ impl Args {
         }
     }
 
+    /// Print the unused-flag warning now.  Long-running commands
+    /// (`lcc serve`) never return to `main`'s post-dispatch check, so
+    /// they call this once all flags are consumed, before blocking.
+    pub fn warn_unknown(&self, cmd: &str) {
+        let unknown = self.unknown_flags();
+        if !unknown.is_empty() {
+            eprintln!("warning: {cmd}: unused flags: {unknown:?}");
+        }
+    }
+
     /// Flags present on the command line but never consumed by a getter.
     pub fn unknown_flags(&self) -> Vec<String> {
         let seen = self.seen.borrow();

@@ -1,0 +1,324 @@
+//! Smoke tests for `lcc serve`, the incremental connectivity daemon.
+//!
+//! Three layers:
+//!  * end to end — the real binary, a real TCP client, streamed
+//!    insertions, a threshold-triggered recontraction, and bit-identity
+//!    of every answer against the from-scratch union-find oracle;
+//!  * concurrency — reader threads hammering the lock-free snapshot
+//!    while the writer ingests and recontracts (no torn reads, answers
+//!    monotone under edge insertion);
+//!  * retention — a shuffle-transport service with `--keep-generations`
+//!    leaves at most K `gen-*` checkpoint dirs behind N recontractions.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use lcc::coordinator::{Driver, RunConfig};
+use lcc::graph::{generators, Graph};
+use lcc::mpc::TransportMode;
+use lcc::serve::core::ServiceCore;
+use lcc::util::json::{self, Json};
+use lcc::util::rng::Rng;
+
+/// Kill the daemon even when an assertion unwinds the test.
+struct ChildGuard(Child);
+
+impl Drop for ChildGuard {
+    fn drop(&mut self) {
+        let _ = self.0.kill();
+        let _ = self.0.wait();
+    }
+}
+
+/// One newline-JSON request/response exchange.
+fn request(stream: &mut TcpStream, reader: &mut BufReader<TcpStream>, req: &Json) -> Json {
+    writeln!(stream, "{}", req.dumps()).expect("send request");
+    stream.flush().expect("flush request");
+    let mut line = String::new();
+    reader.read_line(&mut line).expect("read reply");
+    json::parse(line.trim()).unwrap_or_else(|e| panic!("bad reply {line:?}: {e}"))
+}
+
+fn get_u64(j: &Json, key: &str) -> u64 {
+    j.get(key)
+        .and_then(|v| v.as_i64())
+        .unwrap_or_else(|| panic!("missing {key} in {}", j.dumps())) as u64
+}
+
+// ---------------------------------------------------------------------------
+// end to end: real binary, real socket, oracle bit-identity
+
+#[test]
+fn serve_answers_queries_inserts_and_recontracts_bit_identically() {
+    let (n, avg, seed) = (500usize, 2.0f64, 7u64);
+    // the exact graph `lcc serve --graph gnp` builds (main.rs load_graph)
+    let g = generators::gnp(n, avg / n as f64, &mut Rng::new(seed));
+
+    let mut child = ChildGuard(
+        Command::new(env!("CARGO_BIN_EXE_lcc"))
+            .args([
+                "serve",
+                "--graph",
+                "gnp",
+                "--n",
+                "500",
+                "--avg-deg",
+                "2",
+                "--seed",
+                "7",
+                "--machines",
+                "4",
+                "--transport",
+                "proc",
+                "--port",
+                "0",
+                "--recontract-threshold",
+                "8",
+            ])
+            .stdout(Stdio::piped())
+            .stderr(Stdio::null())
+            .spawn()
+            .expect("spawn lcc serve"),
+    );
+    let mut ready_line = String::new();
+    BufReader::new(child.0.stdout.take().expect("child stdout"))
+        .read_line(&mut ready_line)
+        .expect("read ready line");
+    let ready = json::parse(ready_line.trim()).expect("ready line is JSON");
+    assert_eq!(ready.get("event").and_then(|e| e.as_str()), Some("serving"));
+    assert_eq!(get_u64(&ready, "n") as usize, n);
+    let port = get_u64(&ready, "port") as u16;
+
+    let mut stream = TcpStream::connect(("127.0.0.1", port)).expect("connect");
+    let mut reader = BufReader::new(stream.try_clone().expect("clone"));
+
+    // 1. bootstrap labels: every component-of answer matches the oracle
+    let labels = lcc::cc::oracle::components(&g);
+    for u in (0..n as u32).step_by(7) {
+        let reply = request(
+            &mut stream,
+            &mut reader,
+            &Json::obj().set("op", "component-of").set("u", u),
+        );
+        assert_eq!(
+            get_u64(&reply, "label") as u32,
+            labels[u as usize],
+            "component-of({u}) diverges from the oracle"
+        );
+    }
+
+    // 2. component-sizes agrees with the oracle's histogram
+    let reply = request(
+        &mut stream,
+        &mut reader,
+        &Json::obj().set("op", "component-sizes").set("top", 1),
+    );
+    let mut counts = std::collections::HashMap::new();
+    for &l in &labels {
+        *counts.entry(l).or_insert(0u64) += 1;
+    }
+    assert_eq!(get_u64(&reply, "components") as usize, counts.len());
+    let top = reply.get("sizes").and_then(|s| s.as_arr()).expect("sizes")[0]
+        .as_arr()
+        .expect("pair");
+    assert_eq!(
+        top[1].as_i64().unwrap() as u64,
+        *counts.values().max().unwrap()
+    );
+
+    // 3. stream a chain over every vertex: enough inter-component core
+    // edges to cross threshold 8 and force a full recontraction pass
+    let mut all_edges = g.edges().to_vec();
+    for start in (0..n as u32 - 1).step_by(50) {
+        let end = (start + 50).min(n as u32 - 1);
+        let batch: Vec<Json> = (start..end)
+            .map(|v| Json::Arr(vec![Json::from(v), Json::from(v + 1)]))
+            .collect();
+        all_edges.extend((start..end).map(|v| (v, v + 1)));
+        let want_queued = (end - start) as u64;
+        let reply = request(
+            &mut stream,
+            &mut reader,
+            &Json::obj().set("op", "insert").set("edges", Json::Arr(batch)),
+        );
+        assert_eq!(get_u64(&reply, "queued"), want_queued);
+    }
+
+    // 4. flush = read-your-writes barrier; the chain connected everything
+    let ack = request(&mut stream, &mut reader, &Json::obj().set("op", "flush"));
+    assert_eq!(get_u64(&ack, "components"), 1, "chain must connect the graph");
+    assert!(
+        get_u64(&ack, "recontractions") >= 1,
+        "threshold 8 must have triggered a full pass: {}",
+        ack.dumps()
+    );
+
+    // 5. post-recontraction: answers are bit-identical to a from-scratch
+    // oracle over the accumulated edge multiset
+    let want = lcc::cc::oracle::components(&Graph::from_edges(n, all_edges));
+    for u in (0..n as u32).step_by(11) {
+        let reply = request(
+            &mut stream,
+            &mut reader,
+            &Json::obj().set("op", "component-of").set("u", u),
+        );
+        assert_eq!(get_u64(&reply, "label") as u32, want[u as usize]);
+    }
+    let reply = request(
+        &mut stream,
+        &mut reader,
+        &Json::obj()
+            .set("op", "same-component")
+            .set("u", 0)
+            .set("v", n as u32 - 1),
+    );
+    assert_eq!(
+        reply.get("same").map(|s| s.dumps()),
+        Some("true".to_string()),
+        "0 and n-1 connected after the chain"
+    );
+
+    // 6. malformed requests are errors, not disconnects
+    writeln!(stream, "not json").unwrap();
+    stream.flush().unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("\"ok\":false"), "bad line must yield an error reply");
+
+    // 7. clean shutdown: daemon exits by itself
+    let reply = request(&mut stream, &mut reader, &Json::obj().set("op", "shutdown"));
+    assert_eq!(reply.get("stopping").map(|s| s.dumps()), Some("true".into()));
+    let status = child.0.wait().expect("daemon exit");
+    assert!(status.success(), "daemon exited {status:?}");
+}
+
+// ---------------------------------------------------------------------------
+// concurrency: lock-free readers vs live ingest + forced recontraction
+
+#[test]
+fn snapshot_reads_are_consistent_under_concurrent_ingest() {
+    // 200 disconnected edges (2i)-(2i+1); the writer then chains pairs
+    // together, repeatedly crossing a tiny recontraction threshold.
+    let n = 400usize;
+    let base: Vec<(u32, u32)> = (0..n as u32 / 2).map(|i| (2 * i, 2 * i + 1)).collect();
+    let g = Graph::from_edges(n, base.clone());
+    let driver = Driver::new(RunConfig {
+        machines: 4,
+        ..Default::default()
+    });
+    let mut core = ServiceCore::bootstrap(driver, &g, "stress", 5).expect("bootstrap");
+    let cell = core.cell();
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let readers: Vec<_> = (0..4)
+        .map(|r| {
+            let cell = Arc::clone(&cell);
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                let mut reader = cell.reader();
+                let mut last_epoch = 0u64;
+                // connectivity is monotone under insertion: once a pair
+                // answers true it may never flip back
+                let mut connected = vec![false; n / 2];
+                let mut observations = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    let snap = reader.current();
+                    // no torn reads: a snapshot is internally consistent
+                    assert_eq!(snap.labels.len(), n, "reader {r}: torn label array");
+                    assert!(snap.epoch >= last_epoch, "reader {r}: epoch regressed");
+                    last_epoch = snap.epoch;
+                    for i in 0..n as u32 / 2 {
+                        let same = snap.same_component(2 * i, (2 * i + 2) % n as u32).unwrap();
+                        if connected[i as usize] {
+                            assert!(
+                                same,
+                                "reader {r}: pair {i} flipped connected -> disconnected"
+                            );
+                        }
+                        connected[i as usize] = same;
+                        observations += 1;
+                    }
+                }
+                observations
+            })
+        })
+        .collect();
+
+    // writer: chain neighbouring pairs, forcing incremental merges and
+    // (threshold 5) repeated full recontraction passes mid-read
+    let mut all_edges = base;
+    for i in 0..(n as u32 / 2 - 1) {
+        let e = (2 * i + 1, 2 * i + 2);
+        all_edges.push(e);
+        core.apply_batch(&[e]);
+    }
+    stop.store(true, Ordering::Relaxed);
+    for r in readers {
+        let obs = r.join().expect("reader thread");
+        assert!(obs > 0, "reader made no observations");
+    }
+    assert!(
+        core.recontractions() >= 3,
+        "chaining 199 core edges at threshold 5 must recontract repeatedly, got {}",
+        core.recontractions()
+    );
+    // final snapshot is bit-identical to the from-scratch oracle
+    let want = lcc::cc::oracle::components(&Graph::from_edges(n, all_edges));
+    assert_eq!(cell.load().labels, want);
+}
+
+// ---------------------------------------------------------------------------
+// retention: N recontractions leave at most K generation dirs
+
+#[test]
+fn recontractions_leave_at_most_k_generation_dirs() {
+    let dir: PathBuf = std::env::temp_dir().join(format!(
+        "lcc-serve-retention-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("create checkpoint dir");
+
+    let n = 48usize;
+    let base: Vec<(u32, u32)> = (0..n as u32 / 2).map(|i| (2 * i, 2 * i + 1)).collect();
+    let g = Graph::from_edges(n, base);
+    let driver = Driver::new(RunConfig {
+        machines: 2,
+        transport: TransportMode::Shuffle,
+        worker_bin: Some(env!("CARGO_BIN_EXE_lcc").into()),
+        checkpoint_dir: Some(dir.clone()),
+        keep_generations: Some(2),
+        ..Default::default()
+    });
+    let mut core = ServiceCore::bootstrap(driver, &g, "retention", 5).expect("bootstrap");
+
+    // every 5 chained inserts cross the threshold: >= 3 full passes over
+    // the persistent shuffle fleet, each checkpointing generations
+    for i in 0..(n as u32 / 2 - 1) {
+        core.apply_batch(&[(2 * i + 1, 2 * i + 2)]);
+    }
+    assert!(
+        core.recontractions() >= 3,
+        "expected repeated recontractions, got {}",
+        core.recontractions()
+    );
+
+    let gens: Vec<String> = std::fs::read_dir(&dir)
+        .expect("read checkpoint dir")
+        .flatten()
+        .filter_map(|e| {
+            let name = e.file_name().to_string_lossy().into_owned();
+            name.starts_with("gen-").then_some(name)
+        })
+        .collect();
+    assert!(
+        gens.len() <= 2,
+        "retention must cap gen dirs at keep_generations=2, found {gens:?}"
+    );
+    drop(core);
+    let _ = std::fs::remove_dir_all(&dir);
+}

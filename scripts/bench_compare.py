@@ -3,11 +3,15 @@
 
 Usage: bench_compare.py FRESH.json BASELINE.json [BASELINE2.json ...]
 
-Gate: fail (exit 1) on a >25% regression in either
+Gate: fail (exit 1) on a >25% regression in any of
   * wall time  — a bench's `median_s` vs the same-named bench in a
-    baseline, or
+    baseline,
   * rounds     — the `round_breakdown.rounds` count of a run recorded in
-    both artifacts for the same algo/machines/transport.
+    both artifacts for the same algo/machines/transport, or
+  * peak RSS   — `peak_rss_bytes` when both artifacts carry a measured
+    value.  The field is `null` (or absent in pre-PR8 artifacts) on
+    platforms without /proc VmHWM; such pairs are skipped with a note,
+    never compared against 0.
 
 Baselines that are missing or still `pending-first-measurement` produce a
 warning and exit 0 — the gate arms itself the first time CI lands real
@@ -41,6 +45,19 @@ def bench_index(doc):
         if isinstance(name, str) and isinstance(median, (int, float)) and median > 0:
             out[name] = float(median)
     return out
+
+
+def peak_rss(doc):
+    """Measured peak RSS in bytes, or None when unavailable.
+
+    `peak_rss_bytes` is null when the platform can't report VmHWM and
+    absent in artifacts predating the field; both mean "no measurement",
+    as does a non-positive value (the old conflated-with-0 encoding).
+    """
+    rss = doc.get("peak_rss_bytes")
+    if isinstance(rss, (int, float)) and rss > 0:
+        return float(rss)
+    return None
 
 
 def breakdown_key(doc):
@@ -89,6 +106,19 @@ def main(argv):
                     f"{name}: {fresh_benches[name]:.4f}s vs baseline "
                     f"{base_median:.4f}s ({path}) — {ratio:.2f}x"
                 )
+        fresh_rss, base_rss = peak_rss(fresh), peak_rss(base)
+        if fresh_rss is not None and base_rss is not None:
+            compared += 1
+            if fresh_rss > base_rss * THRESHOLD:
+                regressions.append(
+                    f"peak RSS: {fresh_rss / 2**20:.1f}MiB vs baseline "
+                    f"{base_rss / 2**20:.1f}MiB ({path}) — {fresh_rss / base_rss:.2f}x"
+                )
+        elif base_rss is not None or fresh_rss is not None:
+            print(
+                f"bench_compare: note: peak_rss_bytes unavailable in "
+                f"{'fresh artifact' if fresh_rss is None else path} — RSS not compared"
+            )
         base_bd_key, base_rounds = breakdown_key(base)
         if (
             base_bd_key is not None

@@ -1,0 +1,174 @@
+#!/usr/bin/env python3
+"""CI smoke test for `lcc serve`, the incremental connectivity daemon.
+
+Usage: serve_smoke.py [path/to/lcc]   (default: rust/target/release/lcc)
+
+Drives the release binary end to end:
+  1. `lcc generate` writes a SNAP-text G(n,p) graph;
+  2. `lcc serve --graph file:... --transport shuffle --port 0` brings up
+     the persistent worker fleet and announces its ephemeral port;
+  3. a from-scratch union-find oracle over the same file checks every
+     sampled `component-of` answer bit for bit;
+  4. streamed chain insertions cross `--recontract-threshold`, forcing at
+     least one full contraction pass over the live fleet;
+  5. post-recontraction answers are re-checked against the oracle over
+     the accumulated edge multiset, then the daemon is shut down cleanly.
+
+Exit 0 = all checks passed. Any divergence, hang (watchdog timeouts on
+every socket op), or unclean daemon exit fails the job.
+"""
+
+import json
+import os
+import socket
+import subprocess
+import sys
+import tempfile
+
+TIMEOUT_S = 120
+
+
+def fail(msg):
+    print(f"serve_smoke: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+class UnionFind:
+    def __init__(self, n):
+        self.p = list(range(n))
+
+    def find(self, x):
+        while self.p[x] != x:
+            self.p[x] = self.p[self.p[x]]
+            x = self.p[x]
+        return x
+
+    def union(self, a, b):
+        ra, rb = self.find(a), self.find(b)
+        if ra != rb:
+            self.p[rb] = ra
+
+    def canonical_labels(self):
+        n = len(self.p)
+        mins = {}
+        for v in range(n):
+            r = self.find(v)
+            mins[r] = min(mins.get(r, v), v)
+        return [mins[self.find(v)] for v in range(n)]
+
+
+def load_snap(path):
+    """Replicate rust/src/graph/io.rs parse_snap_text: ids remapped to
+    dense 0..n in first-seen order."""
+    remap, edges = {}, []
+    with open(path) as f:
+        for line in f:
+            t = line.strip()
+            if not t or t.startswith("#"):
+                continue
+            a, b = t.split()[:2]
+            u = remap.setdefault(a, len(remap))
+            v = remap.setdefault(b, len(remap))
+            edges.append((u, v))
+    return len(remap), edges
+
+
+class Client:
+    def __init__(self, port):
+        self.sock = socket.create_connection(("127.0.0.1", port), timeout=TIMEOUT_S)
+        self.rfile = self.sock.makefile("r")
+
+    def request(self, **req):
+        self.sock.sendall((json.dumps(req) + "\n").encode())
+        line = self.rfile.readline()
+        if not line:
+            fail(f"daemon hung up on {req}")
+        reply = json.loads(line)
+        if not reply.get("ok"):
+            fail(f"{req} -> {reply}")
+        return reply
+
+
+def main():
+    lcc = sys.argv[1] if len(sys.argv) > 1 else "rust/target/release/lcc"
+    if not os.path.exists(lcc):
+        fail(f"binary {lcc} not found (build with cargo build --release)")
+
+    tmp = tempfile.mkdtemp(prefix="lcc-serve-smoke-")
+    graph_path = os.path.join(tmp, "g.txt")
+    subprocess.run(
+        [lcc, "generate", "--graph", "gnp", "--n", "3000", "--avg-deg", "2",
+         "--seed", "7", "--out", graph_path],
+        check=True, timeout=TIMEOUT_S,
+    )
+    n, edges = load_snap(graph_path)
+    print(f"serve_smoke: graph n={n} m={len(edges)}")
+
+    daemon = subprocess.Popen(
+        [lcc, "serve", "--graph", f"file:{graph_path}", "--machines", "4",
+         "--transport", "shuffle", "--port", "0",
+         "--recontract-threshold", "16", "--keep-generations", "2"],
+        stdout=subprocess.PIPE, text=True,
+    )
+    try:
+        ready = json.loads(daemon.stdout.readline())
+        if ready.get("event") != "serving":
+            fail(f"unexpected ready line: {ready}")
+        if ready.get("n") != n:
+            fail(f"daemon sees n={ready.get('n')}, oracle sees n={n}")
+        print(f"serve_smoke: daemon up on port {ready['port']} "
+              f"(transport={ready.get('transport')})")
+        client = Client(ready["port"])
+
+        # bootstrap labels vs the from-scratch oracle
+        uf = UnionFind(n)
+        for u, v in edges:
+            uf.union(u, v)
+        labels = uf.canonical_labels()
+        sample = range(0, n, 97)
+        for u in sample:
+            got = client.request(op="component-of", u=u)["label"]
+            if got != labels[u]:
+                fail(f"component-of({u}) = {got}, oracle says {labels[u]}")
+        print(f"serve_smoke: {len(list(sample))} bootstrap queries match the oracle")
+
+        # streamed chain insertions: forces inter-component merges and at
+        # least one threshold-triggered recontraction at threshold 16
+        for start in range(0, n - 1, 250):
+            chain = [[v, v + 1] for v in range(start, min(start + 250, n - 1))]
+            client.request(op="insert", edges=chain)
+            for u, v in chain:
+                uf.union(u, v)
+        ack = client.request(op="flush")
+        if ack["components"] != 1:
+            fail(f"chain must connect everything, got {ack['components']} components")
+        if ack["recontractions"] < 1:
+            fail(f"expected a threshold-triggered recontraction, got {ack}")
+        print(f"serve_smoke: {ack['recontractions']} recontraction(s), "
+              f"epoch {ack['epoch']}, {ack['edges']} edges accumulated")
+
+        # post-recontraction answers must be bit-identical to the oracle
+        # over the accumulated edge multiset
+        labels = uf.canonical_labels()
+        for u in sample:
+            got = client.request(op="component-of", u=u)["label"]
+            if got != labels[u]:
+                fail(f"post-recontraction component-of({u}) = {got}, "
+                     f"oracle says {labels[u]}")
+        same = client.request(op="same-component", u=0, v=n - 1)
+        if same["same"] is not True:
+            fail(f"0 and {n-1} must be connected after the chain: {same}")
+        print("serve_smoke: post-recontraction queries match the oracle")
+
+        client.request(op="shutdown")
+        if daemon.wait(timeout=TIMEOUT_S) != 0:
+            fail(f"daemon exited {daemon.returncode}")
+        print("serve_smoke: OK")
+    finally:
+        if daemon.poll() is None:
+            daemon.kill()
+            daemon.wait()
+
+
+if __name__ == "__main__":
+    main()
