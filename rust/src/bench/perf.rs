@@ -165,6 +165,25 @@ pub fn round_breakdown(machines: usize, transport: TransportMode) -> Option<crat
         .set("machines", machines)
         .set("transport", transport.name())
         .set("rounds", rounds);
+    // Mesh data-plane counters (shuffle transport only; null elsewhere —
+    // same stable-schema convention as peak_rss_bytes).  These are what
+    // the delta-sync and batch-pipelining work is measured by: sync vs
+    // mesh bytes, delta adoption, batches vs hops.
+    let doc = doc.set(
+        "mesh",
+        match sim.mesh_metrics() {
+            Some(ms) => Json::obj()
+                .set("hops", ms.hops)
+                .set("hop_batches", ms.hop_batches)
+                .set("state_syncs", ms.state_syncs)
+                .set("delta_syncs", ms.delta_syncs)
+                .set("sync_bytes", ms.sync_bytes)
+                .set("mesh_bytes", ms.mesh_bytes)
+                .set("rewires", ms.rewires)
+                .set("custody_loads", ms.custody_loads),
+            None => Json::Null,
+        },
+    );
     // Key always present, null when the platform can't report it
     // (/proc/self/status VmHWM is Linux-only) — consumers key on the
     // value, not the key's presence (see scripts/bench_compare.py).
@@ -567,6 +586,11 @@ mod tests {
         assert!(rounds[0].get("shuffle_ms").and_then(|j| j.as_f64()).is_some());
         assert!(rounds[0].get("fold_ms").and_then(|j| j.as_f64()).is_some());
         assert!(rounds[0].get("allocs").and_then(|j| j.as_i64()).is_some());
+        // mesh counters key is always present; null off the shuffle transport
+        assert!(
+            matches!(bd.get("mesh"), Some(crate::util::json::Json::Null)),
+            "inproc breakdown has null mesh counters"
+        );
         // the zero-copy gate's counters ride in every artifact
         let dp = doc.get("data_plane").expect("data_plane present");
         for k in ["shard_bytes_mapped", "shard_bytes_copied", "shard_maps", "shard_copies", "allocs"] {

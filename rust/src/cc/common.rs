@@ -200,6 +200,22 @@ where
     debug_assert_eq!(csr.num_vertices(), n);
     check_shards(g, sim);
     if sim.wire_mode() {
+        // The two hops have no coordinator data dependency between them
+        // (hop 2 folds hop 1's output over the same graph) — on a
+        // shuffle transport they ship as ONE pipelined descriptor batch
+        // and the workers run them back-to-back, acking once.  Charges
+        // and outputs are bit-identical to the sequential rounds below.
+        let msg_size: u64 = vals.first().map(|v| 8 + v.wire_size()).unwrap_or(0);
+        if vals.iter().all(|v| 8 + v.wire_size() == msg_size) {
+            let charge = g.hop_charge(msg_size, true);
+            let plan = crate::mpc::RoundPlan {
+                labels: &[labels.0, labels.1],
+                include_self: true,
+            };
+            if let Some(out) = sim.try_shuffle_hop_plan(plan, g, vals, fold, &charge) {
+                return out;
+            }
+        }
         let h1 = neighborhood_fold(sim, labels.0, g, vals, true, fold);
         return neighborhood_fold(sim, labels.1, g, &h1, true, fold);
     }

@@ -52,6 +52,14 @@ pub fn min_neighbor(g: &ShardedGraph, rho: &Priorities, sim: &mut Simulator) -> 
 /// are re-bucketed into their owner shards by `ShardedGraph::from_edges`
 /// — that shuffle *is* the semantics of the round.
 pub fn rewire(g: &ShardedGraph, m: &[Vertex], sim: &mut Simulator) -> ShardedGraph {
+    // Worker-native path (shuffle transport): the `GatherPairU32` reduce
+    // program ships in the descriptor and the workers derive, normalize,
+    // and adopt the rewired generation peer-to-peer — the O(m) hub pairs
+    // never rebound through the coordinator.  Accounting and the built
+    // graph are bit-identical to the `round_map` path below.
+    if let Some(new) = sim.try_shuffle_gather_rewire("cracker/rewire", g, m) {
+        return new;
+    }
     let n = g.num_vertices();
     let p = g.num_shards();
     let chunks = g.msg_chunks(move |s, _primary, edges| {

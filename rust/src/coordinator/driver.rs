@@ -373,6 +373,7 @@ impl Driver {
             wall_ms,
         );
         report.transport = self.cfg.transport.name().to_string();
+        report.mesh = sim.mesh_metrics();
         report.xla_calls =
             self.executor.as_ref().map(|e| e.calls.get()).unwrap_or(0) - xla_before;
         if self.cfg.verify {

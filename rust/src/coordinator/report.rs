@@ -1,7 +1,7 @@
 //! Run reports: the JSON/text record every harness run emits.
 
 use crate::cc::CcResult;
-use crate::mpc::RecoveryMetrics;
+use crate::mpc::{MeshMetrics, RecoveryMetrics};
 use crate::util::json::Json;
 
 /// Everything a single algorithm run produced.
@@ -31,6 +31,10 @@ pub struct Report {
     /// Worker-recovery log (shuffle transport; empty for undisturbed
     /// runs).  Observability only — never part of bit-identity.
     pub recovery: RecoveryMetrics,
+    /// Mesh data-plane counters (shuffle transport only): sync vs mesh
+    /// bytes, delta-sync and pipelined-batch adoption.  Observability
+    /// only, like `recovery`.
+    pub mesh: Option<MeshMetrics>,
 }
 
 impl Report {
@@ -76,6 +80,7 @@ impl Report {
             xla_calls: 0,
             transport: "inproc".to_string(),
             recovery: res.metrics.recovery.clone(),
+            mesh: None,
         }
     }
 
@@ -133,6 +138,21 @@ impl Report {
                                 .collect(),
                         ),
                     ),
+            )
+            .set(
+                "mesh",
+                match &self.mesh {
+                    None => Json::Null,
+                    Some(m) => Json::obj()
+                        .set("hops", m.hops)
+                        .set("hop_batches", m.hop_batches)
+                        .set("state_syncs", m.state_syncs)
+                        .set("delta_syncs", m.delta_syncs)
+                        .set("sync_bytes", m.sync_bytes)
+                        .set("mesh_bytes", m.mesh_bytes)
+                        .set("rewires", m.rewires)
+                        .set("custody_loads", m.custody_loads),
+                },
             )
     }
 

@@ -179,10 +179,43 @@ struct WorkerState {
     /// The peer mesh, once `Peers` established it.
     mesh: Option<Mesh>,
     /// Wire-encoded per-vertex values (the hop inputs / rewire map),
-    /// maintained by `StateSync` broadcasts and hop fold all-gathers.
+    /// maintained by `StateSync` broadcasts, `StateDelta` patches, and
+    /// hop fold all-gathers.
     mirror: Vec<u8>,
     /// Wire width of one mirror value (0 = no mirror yet).
     mirror_vb: usize,
+    /// Retained per-peer write buffers of the round shuffles
+    /// (clear-don't-drop, capacity-capped like the spill layer's
+    /// `READ_BUF`): bucketing a round reuses last round's allocations
+    /// instead of growing p fresh vectors per round.
+    bucket_bufs: Vec<Vec<u8>>,
+}
+
+/// Retained-capacity cap of one reusable per-peer write buffer — the
+/// same bound as the spill layer's `READ_BUF_RETAIN`: one pathological
+/// round must not pin its peak allocation for the process lifetime.
+const WRITE_BUF_RETAIN: usize = 8 << 20;
+
+/// Take `p` cleared buckets out of the pool (reusing retained capacity).
+fn take_buckets(pool: &mut Vec<Vec<u8>>, p: usize) -> Vec<Vec<u8>> {
+    let mut buckets = std::mem::take(pool);
+    buckets.resize_with(p, Vec::new);
+    for b in &mut buckets {
+        b.clear();
+    }
+    buckets
+}
+
+/// Return buckets to the pool, clearing and capping each.  Error paths
+/// may skip the put-back — the next take simply starts fresh.
+fn put_buckets(pool: &mut Vec<Vec<u8>>, mut buckets: Vec<Vec<u8>>) {
+    for b in &mut buckets {
+        b.clear();
+        if b.capacity() > WRITE_BUF_RETAIN {
+            b.shrink_to(WRITE_BUF_RETAIN);
+        }
+    }
+    *pool = buckets;
 }
 
 /// Connect to the coordinator and serve until shutdown (the `lcc worker`
@@ -268,6 +301,7 @@ pub fn serve(stream: TcpStream) -> Result<(), TransportError> {
         mesh: None,
         mirror: Vec::new(),
         mirror_vb: 0,
+        bucket_bufs: Vec::new(),
     };
     // this worker's slice of the deterministic fault plan (the id is
     // only known post-Assign, so the plan parses here)
@@ -331,7 +365,7 @@ fn serve_loop(
         };
         if matches!(
             frame.kind,
-            FrameKind::Round | FrameKind::HopRound | FrameKind::Rewire
+            FrameKind::Round | FrameKind::HopRound | FrameKind::Rewire | FrameKind::GatherRewire
         ) {
             rounds_served += 1;
             enact_faults(faults, net::FaultSite::Round(rounds_served));
@@ -341,11 +375,23 @@ fn serve_loop(
             FrameKind::Round => handle_round(state, &frame, writer)?,
             FrameKind::Peers => handle_peers(state, &frame, writer)?,
             FrameKind::StateSync => handle_state_sync(state, &frame, writer)?,
+            FrameKind::StateDelta => handle_state_delta(state, &frame, writer)?,
             FrameKind::HopRound => handle_hop(state, &frame, writer)?,
+            // a pipelined batch counts its rounds one by one inside the
+            // handler, so round-site faults land mid-batch exactly where
+            // they would in an unpipelined run
+            FrameKind::HopBatch => {
+                handle_hop_batch(state, &frame, writer, faults, &mut rounds_served)?
+            }
             FrameKind::Rewire => {
                 handle_rewire(state, &frame, writer)?;
                 // the generation boundary: custody advanced and the ack
                 // is flushed — a gen-site kill dies exactly here
+                gens_acked += 1;
+                enact_faults(faults, net::FaultSite::Gen(gens_acked));
+            }
+            FrameKind::GatherRewire => {
+                handle_gather_rewire(state, &frame, writer)?;
                 gens_acked += 1;
                 enact_faults(faults, net::FaultSite::Gen(gens_acked));
             }
@@ -764,6 +810,52 @@ fn handle_state_sync<W: std::io::Write>(
     net::write_frame(writer, FrameKind::StateAck, frame.seq, &hash.to_le_bytes())
 }
 
+/// `StateDelta`: patch the existing mirror in place with `(index, value)`
+/// pairs.  The receipt hashes the **full** resulting mirror — exactly
+/// like a full `StateSync` ack — so a patch applied over a base the
+/// coordinator did not expect diverges at the cross-check instead of
+/// corrupting later rounds silently.
+fn handle_state_delta<W: std::io::Write>(
+    state: &mut WorkerState,
+    frame: &Frame,
+    writer: &mut W,
+) -> Result<(), TransportError> {
+    let applied = (|| -> Result<(), TransportError> {
+        let mut r = BodyReader::new(&frame.body);
+        let vb = r.u8("delta value width")? as usize;
+        let total = r.u64("delta mirror length")? as usize;
+        let count = r.u64("delta entry count")? as usize;
+        if vb == 0 || total % vb != 0 {
+            return Err(proto(format!(
+                "delta mirror of {total} bytes is not a multiple of width {vb}"
+            )));
+        }
+        if state.mirror_vb != vb || state.mirror.len() != total {
+            return Err(proto(format!(
+                "delta targets a {total}-byte width-{vb} mirror; holding {} bytes width {}",
+                state.mirror.len(),
+                state.mirror_vb
+            )));
+        }
+        let n = total / vb;
+        for _ in 0..count {
+            let idx = r.u32("delta entry index")? as usize;
+            let value = r.bytes(vb, "delta entry value")?;
+            if idx >= n {
+                return Err(proto(format!("delta index {idx} outside mirror of {n}")));
+            }
+            state.mirror[idx * vb..(idx + 1) * vb].copy_from_slice(value);
+        }
+        r.expect_end("state delta")?;
+        Ok(())
+    })();
+    if let Err(e) = applied {
+        return worker_err(writer, frame.seq, &format!("bad mirror delta: {e}"));
+    }
+    let hash = net::mirror_hash_of(state.mirror_vb as u8, &state.mirror);
+    net::write_frame(writer, FrameKind::StateAck, frame.seq, &hash.to_le_bytes())
+}
+
 /// Collect `PeerMsgs` then `PeerFold` frames of the round `seq` from
 /// every peer, tolerating arrival interleaving (a fast peer's fold can
 /// land before a slow peer's messages).
@@ -855,19 +947,31 @@ fn poison_peers(state: &mut WorkerState, seq: u64, kind: FrameKind, sent: &[bool
 
 /// `HopRound`: generate this round's messages from the owned shard and
 /// the value mirror, shuffle them peer-to-peer, fold the received keys,
-/// all-gather the fold images, ack the load + fold checksum.  Every
-/// failure — descriptor, mesh I/O, corrupted peer frame, malformed fold
-/// — is answered as a `WorkerErr` (a typed protocol error at the
-/// coordinator), never a silent worker death, with the unreached mesh
-/// sends poisoned so no peer stalls on this worker.
+/// all-gather the fold images, ack the load + fold checksum + mesh
+/// bytes shipped.  Every failure — descriptor, mesh I/O, corrupted peer
+/// frame, malformed fold — is answered as a `WorkerErr` (a typed
+/// protocol error at the coordinator), never a silent worker death,
+/// with the unreached mesh sends poisoned so no peer stalls on this
+/// worker.
 fn handle_hop<W: std::io::Write>(
     state: &mut WorkerState,
     frame: &Frame,
     writer: &mut W,
 ) -> Result<(), TransportError> {
+    let desc = match parse_hop_desc(&frame.body) {
+        Ok(desc) => desc,
+        Err(e) => return worker_err(writer, frame.seq, &format!("hop failed: {e}")),
+    };
     let mut sent = HopProgress::default();
-    match hop_inner(state, frame, &mut sent) {
-        Ok(body) => net::write_frame(writer, FrameKind::HopAck, frame.seq, &body),
+    let mut stash = Vec::new();
+    match hop_core(state, frame.seq, frame.seq, &desc, &mut stash, &mut sent) {
+        Ok((received, checksum, mesh_sent)) => {
+            let mut body = Vec::with_capacity(24);
+            body.extend_from_slice(&received.to_le_bytes());
+            body.extend_from_slice(&checksum.to_le_bytes());
+            body.extend_from_slice(&mesh_sent.to_le_bytes());
+            net::write_frame(writer, FrameKind::HopAck, frame.seq, &body)
+        }
         Err(e) => {
             poison_peers(state, frame.seq, FrameKind::PeerMsgs, &sent.msgs);
             poison_peers(state, frame.seq, FrameKind::PeerFold, &sent.fold);
@@ -883,22 +987,93 @@ fn proto(detail: String) -> TransportError {
     }
 }
 
-fn hop_inner(
+/// One hop round's shipped program: which fold to run and whether the
+/// primary chunk self-messages ride along.  The label travels for the
+/// coordinator's error attribution only; workers discard it.
+struct HopDesc {
+    op: WireOp,
+    include_self: bool,
+}
+
+fn parse_hop_desc(body: &[u8]) -> Result<HopDesc, TransportError> {
+    let mut r = BodyReader::new(body);
+    let desc = read_hop_desc(&mut r)?;
+    r.expect_end("hop round")?;
+    Ok(desc)
+}
+
+fn read_hop_desc(r: &mut BodyReader<'_>) -> Result<HopDesc, TransportError> {
+    let op = WireOp::from_code(r.u8("hop op")?)
+        .ok_or_else(|| proto("unknown hop wire op".into()))?;
+    let include_self = r.u8("hop include_self")? != 0;
+    let label_len = r.u16("hop label length")? as usize;
+    let _label = r.bytes(label_len, "hop label")?;
+    Ok(HopDesc { op, include_self })
+}
+
+/// `HopBatch` body: `count u16 | descriptor×count` — the descriptors of
+/// `count` consecutive hop rounds with no coordinator data dependency
+/// between them.
+fn parse_hop_batch(body: &[u8]) -> Result<Vec<HopDesc>, TransportError> {
+    let mut r = BodyReader::new(body);
+    let count = r.u16("hop batch count")? as usize;
+    if count == 0 {
+        return Err(proto("empty hop batch".into()));
+    }
+    let mut descs = Vec::with_capacity(count);
+    for _ in 0..count {
+        descs.push(read_hop_desc(&mut r)?);
+    }
+    r.expect_end("hop batch")?;
+    Ok(descs)
+}
+
+/// Receive one mesh event for round `seq`, stashing frames of *later*
+/// rounds of the same batch (`seq < f.seq <= max_seq`) instead of
+/// failing on them.  Inside a pipelined batch a faster peer legally
+/// runs ahead — its `PeerMsgs` for round `k+1` can land while this
+/// worker is still folding round `k` — and the stash replays those
+/// frames when their round starts.  Outside a batch `max_seq == seq`,
+/// so nothing stashes and any out-of-round frame surfaces as the
+/// protocol error it is (via `RoundInbox::file`).
+fn recv_for(
+    mesh: &Mesh,
+    stash: &mut Vec<(usize, Frame)>,
+    seq: u64,
+    max_seq: u64,
+) -> Result<PeerEvent, TransportError> {
+    if let Some(pos) = stash.iter().position(|(_, f)| f.seq == seq) {
+        let (from, frame) = stash.remove(pos);
+        return Ok(PeerEvent {
+            from,
+            frame: Ok(frame),
+        });
+    }
+    loop {
+        let ev = mesh.recv()?;
+        if let Ok(frame) = &ev.frame {
+            if frame.seq > seq && frame.seq <= max_seq {
+                let frame = ev.frame.expect("checked Ok");
+                stash.push((ev.from, frame));
+                continue;
+            }
+        }
+        return Ok(ev);
+    }
+}
+
+/// The body of one hop round at mesh sequence `seq`; `max_seq` bounds
+/// the stash window for pipelined batches.  Returns
+/// `(received_bytes, fold_checksum, mesh_bytes_sent)`.
+fn hop_core(
     state: &mut WorkerState,
-    frame: &Frame,
+    seq: u64,
+    max_seq: u64,
+    desc: &HopDesc,
+    stash: &mut Vec<(usize, Frame)>,
     sent: &mut HopProgress,
-) -> Result<Vec<u8>, TransportError> {
-    let seq = frame.seq;
-    let (op, include_self) = {
-        let mut r = BodyReader::new(&frame.body);
-        let op = WireOp::from_code(r.u8("hop op")?)
-            .ok_or_else(|| proto("unknown hop wire op".into()))?;
-        let include_self = r.u8("hop include_self")? != 0;
-        let label_len = r.u16("hop label length")? as usize;
-        let _label = r.bytes(label_len, "hop label")?;
-        r.expect_end("hop round")?;
-        (op, include_self)
-    };
+) -> Result<(u64, u64, u64), TransportError> {
+    let (op, include_self) = (desc.op, desc.include_self);
     let p = state.machines as usize;
     let my = state.worker_id as usize;
     let vb = op.value_bytes();
@@ -918,10 +1093,12 @@ fn hop_inner(
 
     // ---- generate: the owned shard × the mirror ------------------------
     // The custody image is walked in place — no row materialization.
+    // Buckets come from the retained pool: round-over-round the write
+    // buffers keep their high-water capacity instead of reallocating.
+    let mut buckets = take_buckets(&mut state.bucket_bufs, p);
     let cursor = custody.cursor();
     let mirror = &state.mirror;
     let val = |v: Vertex| &mirror[v as usize * vb..(v as usize + 1) * vb];
-    let mut buckets: Vec<Vec<u8>> = (0..p).map(|_| Vec::new()).collect();
     let mut push = |buckets: &mut Vec<Vec<u8>>, key: Vertex, value_of: Vertex| {
         let b = &mut buckets[machine_of(key as u64, p)];
         b.extend_from_slice(&(key as u64).to_le_bytes());
@@ -944,7 +1121,10 @@ fn hop_inner(
     }
 
     // ---- shuffle: every bucket straight to its owner -------------------
+    let mut mesh_sent = 0u64;
     let mut inbox = RoundInbox::new(p, my);
+    // The own bucket's allocation migrates into the inbox (and is freed
+    // with it) — only the p-1 peer buckets return to the pool.
     inbox.msgs[my] = Some(std::mem::take(&mut buckets[my]));
     sent.msgs.resize(p, false);
     sent.fold.resize(p, false);
@@ -957,13 +1137,15 @@ fn hop_inner(
                 net::write_frame(link, FrameKind::PeerMsgs, seq, bucket)
                     .map_err(|e| e.for_worker(j))?;
                 sent.msgs[j] = true;
+                mesh_sent += net::FRAME_HEADER_BYTES + bucket.len() as u64;
             }
         }
         while inbox.want_msgs > 0 {
-            let ev = mesh.recv()?;
+            let ev = recv_for(mesh, stash, seq, max_seq)?;
             inbox.file(seq, ev)?;
         }
     }
+    put_buckets(&mut state.bucket_bufs, buckets);
 
     // ---- fold the keys this machine owns -------------------------------
     let received: u64 = inbox
@@ -993,10 +1175,11 @@ fn hop_inner(
                 net::write_frame(link, FrameKind::PeerFold, seq, &folded)
                     .map_err(|e| e.for_worker(j))?;
                 sent.fold[j] = true;
+                mesh_sent += net::FRAME_HEADER_BYTES + folded.len() as u64;
             }
         }
         while inbox.want_folds > 0 {
-            let ev = mesh.recv()?;
+            let ev = recv_for(mesh, stash, seq, max_seq)?;
             inbox.file(seq, ev)?;
         }
     }
@@ -1015,10 +1198,64 @@ fn hop_inner(
         }
     }
 
-    let mut body = Vec::with_capacity(16);
-    body.extend_from_slice(&received.to_le_bytes());
-    body.extend_from_slice(&checksum.to_le_bytes());
-    Ok(body)
+    Ok((received, checksum, mesh_sent))
+}
+
+/// `HopBatch`: run `count` consecutive hop rounds back-to-back without
+/// returning to the coordinator between them, then ack the whole batch
+/// once.  Round `k` of the batch runs at mesh sequence `base + k`, so
+/// peer frames stay unambiguous; faults are enacted and `rounds_served`
+/// advances per round, exactly as if the rounds had been shipped
+/// individually.  On a failure in round `k` the current round's
+/// unreached sends are poisoned with the per-link `sent` map and every
+/// *later* round of the batch is poisoned outright — peers that raced
+/// ahead complete instantly and the coordinator replays the whole batch
+/// against this worker's `WorkerErr`.
+fn handle_hop_batch<W: std::io::Write>(
+    state: &mut WorkerState,
+    frame: &Frame,
+    writer: &mut W,
+    faults: &[net::FaultAction],
+    rounds_served: &mut u64,
+) -> Result<(), TransportError> {
+    let descs = match parse_hop_batch(&frame.body) {
+        Ok(descs) => descs,
+        Err(e) => return worker_err(writer, frame.seq, &format!("hop batch failed: {e}")),
+    };
+    let base = frame.seq;
+    let last = base + descs.len() as u64 - 1;
+    let mut stash = Vec::new();
+    let mut acks: Vec<(u64, u64, u64)> = Vec::with_capacity(descs.len());
+    for (k, desc) in descs.iter().enumerate() {
+        *rounds_served += 1;
+        enact_faults(faults, net::FaultSite::Round(*rounds_served));
+        let seq = base + k as u64;
+        let mut sent = HopProgress::default();
+        match hop_core(state, seq, last, desc, &mut stash, &mut sent) {
+            Ok(triple) => acks.push(triple),
+            Err(e) => {
+                poison_peers(state, seq, FrameKind::PeerMsgs, &sent.msgs);
+                poison_peers(state, seq, FrameKind::PeerFold, &sent.fold);
+                for later in seq + 1..=last {
+                    poison_peers(state, later, FrameKind::PeerMsgs, &[]);
+                    poison_peers(state, later, FrameKind::PeerFold, &[]);
+                }
+                return worker_err(
+                    writer,
+                    base,
+                    &format!("hop batch round {k} failed: {e}"),
+                );
+            }
+        }
+    }
+    let mut body = Vec::with_capacity(2 + acks.len() * 24);
+    body.extend_from_slice(&(acks.len() as u16).to_le_bytes());
+    for (received, checksum, mesh_sent) in acks {
+        body.extend_from_slice(&received.to_le_bytes());
+        body.extend_from_slice(&checksum.to_le_bytes());
+        body.extend_from_slice(&mesh_sent.to_le_bytes());
+    }
+    net::write_frame(writer, FrameKind::HopBatchAck, base, &body)
 }
 
 /// `Rewire`: relabel the owned edges through the map mirror, ship each
@@ -1057,7 +1294,6 @@ fn rewire_inner(
         new_n
     };
     let p = state.machines as usize;
-    let my = state.worker_id as usize;
     if state.mirror_vb != 4 {
         return Err(proto("rewire needs a u32 map mirror".into()));
     }
@@ -1074,8 +1310,8 @@ fn rewire_inner(
     }
 
     // ---- relabel + re-bucket by the next generation's ownership --------
+    let mut buckets = take_buckets(&mut state.bucket_bufs, p);
     let cursor = custody.cursor();
-    let mut buckets: Vec<Vec<u8>> = (0..p).map(|_| Vec::new()).collect();
     for (u, v) in cursor.iter() {
         if (u as usize) >= map_len || (v as usize) >= map_len {
             return Err(proto(format!("edge ({u},{v}) outside the map")));
@@ -1093,7 +1329,29 @@ fn rewire_inner(
         bucket.extend_from_slice(&b.to_le_bytes());
     }
 
+    ship_and_adopt(state, seq, buckets, new_n, edges_sent)
+}
+
+/// Ship normalized `(a, b)` edge buckets peer-to-peer, merge what this
+/// machine owns in the next generation, adopt the canonical result as
+/// the new custody, and build the `RewireAck` body
+/// (`len | checksum | p | peer_counts | mesh_sent`).  Shared by the
+/// map-shipped `Rewire` and the worker-native `GatherRewire` — the two
+/// differ only in how the buckets are generated.
+fn ship_and_adopt(
+    state: &mut WorkerState,
+    seq: u64,
+    mut buckets: Vec<Vec<u8>>,
+    new_n: u64,
+    edges_sent: &mut Vec<bool>,
+) -> Result<(Vec<u8>, ShardCustody), TransportError> {
+    let p = state.machines as usize;
+    let my = state.worker_id as usize;
+
     // ---- ship: custody moves peer-to-peer, never via the coordinator ---
+    // The own bucket's allocation migrates into the merge buffer; only
+    // the p-1 peer buckets return to the retained pool.
+    let mut mesh_sent = 0u64;
     let mut own = std::mem::take(&mut buckets[my]);
     edges_sent.resize(p, false);
     if let Some(mesh) = state.mesh.as_mut() {
@@ -1105,6 +1363,7 @@ fn rewire_inner(
                 net::write_frame(link, FrameKind::PeerEdges, seq, bucket)
                     .map_err(|e| e.for_worker(j))?;
                 edges_sent[j] = true;
+                mesh_sent += net::FRAME_HEADER_BYTES + bucket.len() as u64;
             }
         }
         let mut pending = p - 1;
@@ -1121,6 +1380,7 @@ fn rewire_inner(
             pending -= 1;
         }
     }
+    put_buckets(&mut state.bucket_bufs, buckets);
 
     // ---- adopt the next generation (canonical order = global dedup) ----
     if own.len() % 8 != 0 {
@@ -1145,13 +1405,14 @@ fn rewire_inner(
     // pins, and the image is what every later round (and any onward
     // custody transfer) walks directly.
     let (image, checksum) = spill::encode_shard_bytes(my as u32, p as u32, &new_edges);
-    let mut body = Vec::with_capacity(8 + 8 + 4 + 8 * p);
+    let mut body = Vec::with_capacity(8 + 8 + 4 + 8 * p + 8);
     body.extend_from_slice(&stats.len.to_le_bytes());
     body.extend_from_slice(&checksum.to_le_bytes());
     body.extend_from_slice(&(p as u32).to_le_bytes());
     for &c in &stats.peer_counts {
         body.extend_from_slice(&c.to_le_bytes());
     }
+    body.extend_from_slice(&mesh_sent.to_le_bytes());
     Ok((
         body,
         ShardCustody {
@@ -1162,6 +1423,108 @@ fn rewire_inner(
             checksum,
         },
     ))
+}
+
+/// `GatherRewire`: the worker-native Cracker hub rewire.  Instead of
+/// the coordinator gathering every `(hub, spoke)` pair and shipping the
+/// rebuilt shards back out (two O(m) traversals of the coordinator
+/// links), each worker derives the next generation's edges directly
+/// from the map mirror it already holds: per owned edge `(u, v)` the
+/// hub pairs `(m[u], v)` and `(m[v], u)`, plus `(m[v], v)` for every
+/// `v` in this shard's primary chunk — the same message set Cracker's
+/// `rewire` emits through `round_map_chunked` — then normalizes,
+/// ships, and adopts through the shared `ship_and_adopt` path.  The
+/// ack's stats + checksum are pinned against the coordinator's locally
+/// built graph, so the shard is bit-identical by construction.
+fn handle_gather_rewire<W: std::io::Write>(
+    state: &mut WorkerState,
+    frame: &Frame,
+    writer: &mut W,
+) -> Result<(), TransportError> {
+    let mut edges_sent = Vec::new();
+    match gather_rewire_inner(state, frame, &mut edges_sent) {
+        Ok((body, next)) => {
+            net::write_frame(writer, FrameKind::RewireAck, frame.seq, &body)?;
+            state.shard = Some(next);
+            Ok(())
+        }
+        Err(e) => {
+            poison_peers(state, frame.seq, FrameKind::PeerEdges, &edges_sent);
+            worker_err(writer, frame.seq, &format!("gather rewire failed: {e}"))
+        }
+    }
+}
+
+fn gather_rewire_inner(
+    state: &mut WorkerState,
+    frame: &Frame,
+    edges_sent: &mut Vec<bool>,
+) -> Result<(Vec<u8>, ShardCustody), TransportError> {
+    let seq = frame.seq;
+    let (new_n, program) = {
+        let mut r = BodyReader::new(&frame.body);
+        let new_n = r.u64("gather rewire new n")?;
+        let program = WireOp::from_code(r.u8("gather rewire program")?)
+            .ok_or_else(|| proto("unknown gather rewire program".into()))?;
+        r.expect_end("gather rewire")?;
+        (new_n, program)
+    };
+    if program != WireOp::GatherPairU32 {
+        return Err(proto(format!(
+            "gather rewire only runs {:?}, got {program:?}",
+            WireOp::GatherPairU32
+        )));
+    }
+    let p = state.machines as usize;
+    let my = state.worker_id as usize;
+    if state.mirror_vb != 4 {
+        return Err(proto("gather rewire needs a u32 map mirror".into()));
+    }
+    let map_len = state.mirror.len() / 4;
+    let mirror = &state.mirror;
+    let map_at = |v: usize| -> u32 {
+        u32::from_le_bytes(mirror[v * 4..v * 4 + 4].try_into().unwrap())
+    };
+    let Some(custody) = state.shard.as_ref() else {
+        return Err(proto("gather rewire before shard custody".into()));
+    };
+    if state.mesh.is_none() && p > 1 {
+        return Err(proto("gather rewire before the peer mesh is up".into()));
+    }
+
+    // ---- generate the hub pairs from the owned shard + the map ---------
+    let mut buckets = take_buckets(&mut state.bucket_bufs, p);
+    let mut push = |buckets: &mut Vec<Vec<u8>>, hub: u32, spoke: u32| {
+        if hub == spoke {
+            return; // self-loop vanishes under normalization
+        }
+        let (a, b) = if hub < spoke { (hub, spoke) } else { (spoke, hub) };
+        let bucket = &mut buckets[machine_of(a as u64, p)];
+        bucket.extend_from_slice(&a.to_le_bytes());
+        bucket.extend_from_slice(&b.to_le_bytes());
+    };
+    let cursor = custody.cursor();
+    for (u, v) in cursor.iter() {
+        if (u as usize) >= map_len || (v as usize) >= map_len {
+            return Err(proto(format!("edge ({u},{v}) outside the map")));
+        }
+        let (mu, mv) = (map_at(u as usize), map_at(v as usize));
+        if mu == u32::MAX || mv == u32::MAX {
+            return Err(proto(format!("map drops endpoint of live edge ({u},{v})")));
+        }
+        push(&mut buckets, mu, v);
+        push(&mut buckets, mv, u);
+    }
+    let (sa, sb) = chunk_range(map_len, p, my);
+    for v in sa..sb {
+        let mv = map_at(v);
+        if mv == u32::MAX {
+            return Err(proto(format!("map drops live vertex {v}")));
+        }
+        push(&mut buckets, mv, v as u32);
+    }
+
+    ship_and_adopt(state, seq, buckets, new_n, edges_sent)
 }
 
 #[cfg(test)]
@@ -1415,7 +1778,97 @@ mod tests {
             spill::checksum_edges(&[(0u32, 1u32)])
         );
 
-        net::write_frame(&mut writer, FrameKind::Shutdown, 7, &[]).unwrap();
+        // delta sync over the contracted generation: full base [5, 7],
+        // then a one-entry patch — the ack must hash the FULL mirror
+        let base: [u32; 2] = [5, 7];
+        let mut data = Vec::new();
+        for v in base {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        let mut body = vec![4u8];
+        body.extend_from_slice(&(data.len() as u64).to_le_bytes());
+        body.extend_from_slice(&data);
+        net::write_frame(&mut writer, FrameKind::StateSync, 7, &body).unwrap();
+        assert_eq!(net::read_frame(&mut reader).unwrap().kind, FrameKind::StateAck);
+        let mut body = vec![4u8];
+        body.extend_from_slice(&8u64.to_le_bytes()); // mirror total bytes
+        body.extend_from_slice(&1u64.to_le_bytes()); // one changed entry
+        body.extend_from_slice(&1u32.to_le_bytes()); // index 1
+        body.extend_from_slice(&9u32.to_le_bytes()); // new value
+        net::write_frame(&mut writer, FrameKind::StateDelta, 8, &body).unwrap();
+        let ack = net::read_frame(&mut reader).unwrap();
+        assert_eq!(ack.kind, FrameKind::StateAck, "{:?}", ack.body);
+        let mut patched = Vec::new();
+        for v in [5u32, 9] {
+            patched.extend_from_slice(&v.to_le_bytes());
+        }
+        assert_eq!(
+            u64::from_le_bytes(ack.body[..8].try_into().unwrap()),
+            net::mirror_hash_of(4, &patched)
+        );
+
+        // a pipelined batch of two min hops over the contracted edge
+        // (0,1) with mirror [5, 9]: round one folds the mirror to
+        // [5, 5], round two is a fixed point — one ack for both
+        let mut body = 2u16.to_le_bytes().to_vec();
+        for label in ["h1", "h2"] {
+            body.push(WireOp::MinU32.code());
+            body.push(1u8);
+            body.extend_from_slice(&(label.len() as u16).to_le_bytes());
+            body.extend_from_slice(label.as_bytes());
+        }
+        net::write_frame(&mut writer, FrameKind::HopBatch, 9, &body).unwrap();
+        let ack = net::read_frame(&mut reader).unwrap();
+        assert_eq!(ack.kind, FrameKind::HopBatchAck, "{:?}", ack.body);
+        let mut r = BodyReader::new(&ack.body);
+        assert_eq!(r.u16("count").unwrap(), 2);
+        let fold_hash = |vals: [(u64, u32); 2]| {
+            let mut img = Vec::new();
+            for (k, v) in vals {
+                img.extend_from_slice(&k.to_le_bytes());
+                img.extend_from_slice(&v.to_le_bytes());
+            }
+            let mut h = Fnv1a::new();
+            h.update(&img);
+            h.finish()
+        };
+        for round in 0..2u32 {
+            // edge msgs both ways + 2 self msgs = 4 × 12 bytes
+            assert_eq!(r.u64("received").unwrap(), 48, "round {round}");
+            assert_eq!(
+                r.u64("fold checksum").unwrap(),
+                fold_hash([(0, 5), (1, 5)]),
+                "round {round}"
+            );
+            // one machine: nothing crossed the mesh
+            assert_eq!(r.u64("mesh sent").unwrap(), 0, "round {round}");
+        }
+
+        // worker-native gather rewire through map [0, 0]: both hub pairs
+        // of edge (0,1) plus the chunk self-pairs normalize to (0,1)
+        let map: [u32; 2] = [0, 0];
+        let mut data = Vec::new();
+        for m in map {
+            data.extend_from_slice(&m.to_le_bytes());
+        }
+        let mut body = vec![4u8];
+        body.extend_from_slice(&(data.len() as u64).to_le_bytes());
+        body.extend_from_slice(&data);
+        net::write_frame(&mut writer, FrameKind::StateSync, 11, &body).unwrap();
+        assert_eq!(net::read_frame(&mut reader).unwrap().kind, FrameKind::StateAck);
+        let mut body = 2u64.to_le_bytes().to_vec();
+        body.push(WireOp::GatherPairU32.code());
+        net::write_frame(&mut writer, FrameKind::GatherRewire, 12, &body).unwrap();
+        let ack = net::read_frame(&mut reader).unwrap();
+        assert_eq!(ack.kind, FrameKind::RewireAck, "{:?}", ack.body);
+        let mut r = BodyReader::new(&ack.body);
+        assert_eq!(r.u64("len").unwrap(), 1);
+        assert_eq!(
+            r.u64("checksum").unwrap(),
+            spill::checksum_edges(&[(0u32, 1u32)])
+        );
+
+        net::write_frame(&mut writer, FrameKind::Shutdown, 13, &[]).unwrap();
         assert_eq!(net::read_frame(&mut reader).unwrap().kind, FrameKind::Bye);
         worker.join().unwrap().unwrap();
     }

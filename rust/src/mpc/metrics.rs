@@ -91,6 +91,39 @@ impl RecoveryMetrics {
     }
 }
 
+/// Mesh data-plane counters of a shuffle-transport run: what the worker
+/// mesh and the coordinator's state channel actually moved, snapshotted
+/// from the transport's `ShuffleStats` at run end.  Pure observability,
+/// like [`RoundTiming`]: never part of any bit-identity comparison —
+/// the same run with delta sync or pipelining disabled produces
+/// identical [`RoundMetrics`] and different counters here.  Reported in
+/// the `mesh` section of [`crate::coordinator::Report`] / `lcc perf`.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct MeshMetrics {
+    /// Descriptor hop rounds issued (batched rounds count individually).
+    pub hops: u64,
+    /// Pipelined `HopBatch` descriptors issued (each covers ≥1 hop).
+    pub hop_batches: u64,
+    /// Mirror synchronizations, full broadcasts and deltas together.
+    pub state_syncs: u64,
+    /// The subset of `state_syncs` that shipped as `(index, value)`
+    /// deltas instead of full broadcasts.
+    pub delta_syncs: u64,
+    /// Coordinator→worker bytes spent on mirror sync (frame headers
+    /// included), summed over all workers.  With delta sync this is
+    /// O(changed) after the first generation, not O(n).
+    pub sync_bytes: u64,
+    /// Worker↔worker mesh bytes (peer messages, fold images, rewired
+    /// edges; frame headers included), as reported by the workers in
+    /// their acks.
+    pub mesh_bytes: u64,
+    /// Peer-to-peer generation rewires (map-shipped + gather).
+    pub rewires: u64,
+    /// Custody establishments that re-shipped shards via the
+    /// coordinator (recovery / non-rewire generations).
+    pub custody_loads: u64,
+}
+
 /// Accumulated metrics for a run.
 #[derive(Debug, Clone, Default)]
 pub struct Metrics {

@@ -70,9 +70,11 @@ pub mod simulator;
 pub mod transport;
 
 pub use dht::Dht;
-pub use metrics::{Metrics, RecoveryEvent, RecoveryMetrics, RoundMetrics, RoundTiming, WireSize};
+pub use metrics::{
+    MeshMetrics, Metrics, RecoveryEvent, RecoveryMetrics, RoundMetrics, RoundTiming, WireSize,
+};
 pub use pool::WorkerPool;
-pub use simulator::{MpcConfig, ShardRound, Simulator};
+pub use simulator::{MpcConfig, RoundPlan, ShardRound, Simulator};
 pub use transport::{
     Exchange, ExchangeAck, HopSpec, InProcess, RecoveryInfo, RoundCharge, ShuffleOps,
     TransportError, TransportMode, WireFold, WireOp,

@@ -83,13 +83,18 @@ pub const FRAME_MAGIC: &[u8; 8] = b"LCCFRME1";
 /// worker's mesh listener port and the worker↔worker shuffle frames
 /// exist.  v3: `Ping`/`Pong` heartbeats and the fault-injection /
 /// recovery envs (`LCC_FAULT_PLAN`, `LCC_IO_TIMEOUT_MS`,
-/// `LCC_CONNECT_RETRIES`).
-pub const PROTO_VERSION: u32 = 3;
+/// `LCC_CONNECT_RETRIES`).  v4: the mesh data-plane perf frames —
+/// `StateDelta` mirror patches, `HopBatch`/`HopBatchAck` pipelined round
+/// plans, `GatherRewire` worker-native grouped contraction — and acks
+/// carry the worker's mesh byte meter.
+pub const PROTO_VERSION: u32 = 4;
 /// Sanity cap on a peer-declared frame body, 4 GiB (a garbage length
 /// must not drive a huge allocation).
 pub const MAX_FRAME_BODY: u64 = 1 << 32;
-/// magic + kind + seq + len + checksum.
-const FRAME_HEADER_BYTES: u64 = 8 + 1 + 8 + 8 + 8;
+/// magic + kind + seq + len + checksum — the fixed per-frame overhead
+/// (workers count it when metering their mesh sends, the coordinator
+/// when metering sync broadcasts).
+pub const FRAME_HEADER_BYTES: u64 = 8 + 1 + 8 + 8 + 8;
 
 /// Per-read/per-write socket timeout: a wedged peer (one that neither
 /// answers nor drains) becomes a typed I/O error, not a hang.  This is
@@ -152,6 +157,12 @@ pub struct NetConfig {
     /// that recontract repeatedly prune to this bound at every
     /// checkpoint — see [`spill::prune_generations`].
     pub keep_generations: usize,
+    /// Whether mirror syncs may ship [`FrameKind::StateDelta`] patches
+    /// instead of full [`FrameKind::StateSync`] broadcasts when few
+    /// entries changed (`LCC_DELTA_SYNC`; `0`/`off` disables).  On by
+    /// default; disabling forces every sync down the full-broadcast path
+    /// (the bit-identity baseline the delta path is tested against).
+    pub delta_sync: bool,
 }
 
 impl Default for NetConfig {
@@ -164,6 +175,7 @@ impl Default for NetConfig {
             respawn_backoff_ms: DEFAULT_RESPAWN_BACKOFF_MS,
             checkpoint_dir: None,
             keep_generations: DEFAULT_KEEP_GENERATIONS,
+            delta_sync: true,
         }
     }
 }
@@ -197,6 +209,12 @@ impl NetConfig {
         }
         if let Some(k) = env_u64("LCC_KEEP_GENERATIONS").filter(|&k| k > 0) {
             cfg.keep_generations = k as usize;
+        }
+        if let Ok(v) = std::env::var("LCC_DELTA_SYNC") {
+            let v = v.trim();
+            if v == "0" || v.eq_ignore_ascii_case("off") {
+                cfg.delta_sync = false;
+            }
         }
         cfg
     }
@@ -375,6 +393,34 @@ pub enum FrameKind {
     Ping,
     /// worker → coordinator: empty body — heartbeat answer.
     Pong,
+
+    // ---- mesh data-plane perf (v4; coordinator link) ----
+    /// coordinator → worker: `value_bytes u8 | total_len u64 | count u64
+    /// | (index u32 | value value_bytes) × count` — patch `count`
+    /// entries of the worker's existing value mirror in place.  The
+    /// worker's [`FrameKind::StateAck`] receipt hashes the *full*
+    /// resulting mirror, so applying a delta over the wrong base is a
+    /// typed divergence, never silent skew.
+    StateDelta,
+    /// coordinator → worker: `count u16 | (op u8 | include_self u8 |
+    /// label_len u16 | label) × count` — a pipelined plan of consecutive
+    /// hop rounds with no coordinator data dependency between them.  The
+    /// batch frame carries the *base* seq; round `k` of the plan runs at
+    /// `base + k` on the mesh, and the worker acks the whole plan once
+    /// with [`FrameKind::HopBatchAck`] at the base seq.
+    HopBatch,
+    /// worker → coordinator: `count u16 | (received u64 | fold_checksum
+    /// u64 | mesh_sent u64) × count` — per-round receipts of a
+    /// [`FrameKind::HopBatch`], same fields as [`FrameKind::HopAck`],
+    /// one ack frame per batch.
+    HopBatchAck,
+    /// coordinator → worker: `new_n u64 | program u8` — worker-native
+    /// grouped contraction: rewrite custody through the previously-synced
+    /// map mirror, gathering *every* distinct rewritten edge per owner
+    /// under the shipped [`WireOp`] gather program (not a 1-per-key
+    /// fold), and re-ship peer to peer.  Acked with
+    /// [`FrameKind::RewireAck`].
+    GatherRewire,
 }
 
 impl FrameKind {
@@ -403,6 +449,10 @@ impl FrameKind {
             FrameKind::PeerEdges => 21,
             FrameKind::Ping => 22,
             FrameKind::Pong => 23,
+            FrameKind::StateDelta => 24,
+            FrameKind::HopBatch => 25,
+            FrameKind::HopBatchAck => 26,
+            FrameKind::GatherRewire => 27,
         }
     }
 
@@ -431,6 +481,10 @@ impl FrameKind {
             21 => FrameKind::PeerEdges,
             22 => FrameKind::Ping,
             23 => FrameKind::Pong,
+            24 => FrameKind::StateDelta,
+            25 => FrameKind::HopBatch,
+            26 => FrameKind::HopBatchAck,
+            27 => FrameKind::GatherRewire,
             _ => return None,
         })
     }
@@ -763,6 +817,30 @@ pub fn fold_wire_payload(op: WireOp, payload: &[u8]) -> Result<Vec<u8>, String> 
                 out.extend_from_slice(&b.to_le_bytes());
             },
         ),
+        // a gather is not a 1-per-key fold: every distinct (key, pair)
+        // record survives, sorted lexicographically and deduped exactly —
+        // the canonical image of a grouped reduce
+        WireOp::GatherPairU32 => {
+            let mut recs: Vec<(u64, u32, u32)> = payload
+                .chunks_exact(rec)
+                .map(|c| {
+                    (
+                        u64::from_le_bytes(c[..8].try_into().unwrap()),
+                        u32::from_le_bytes(c[8..12].try_into().unwrap()),
+                        u32::from_le_bytes(c[12..16].try_into().unwrap()),
+                    )
+                })
+                .collect();
+            recs.sort_unstable();
+            recs.dedup();
+            let mut out = Vec::with_capacity(recs.len() * rec);
+            for (k, a, b) in recs {
+                out.extend_from_slice(&k.to_le_bytes());
+                out.extend_from_slice(&a.to_le_bytes());
+                out.extend_from_slice(&b.to_le_bytes());
+            }
+            out
+        }
     })
 }
 
@@ -1511,10 +1589,25 @@ pub struct ShuffleStats {
     /// Coordinator-link custody (re-)loads ([`FrameKind::LoadShard`]),
     /// including the initial distribution.
     pub custody_loads: std::sync::atomic::AtomicU64,
-    /// Mirror broadcasts ([`FrameKind::StateSync`]).
+    /// Mirror broadcasts ([`FrameKind::StateSync`]) *and* delta patches
+    /// ([`FrameKind::StateDelta`]) — every mirror sync, either encoding.
     pub state_syncs: std::sync::atomic::AtomicU64,
-    /// Worker-native hop rounds ([`FrameKind::HopRound`]).
+    /// Mirror syncs that shipped as [`FrameKind::StateDelta`] patches
+    /// (subset of `state_syncs`).
+    pub delta_syncs: std::sync::atomic::AtomicU64,
+    /// Worker-native hop rounds ([`FrameKind::HopRound`] plus every
+    /// round of each [`FrameKind::HopBatch`]).
     pub hops: std::sync::atomic::AtomicU64,
+    /// Pipelined hop plans shipped ([`FrameKind::HopBatch`]).
+    pub hop_batches: std::sync::atomic::AtomicU64,
+    /// Coordinator→worker mirror-sync bytes (frame headers + bodies of
+    /// every `StateSync`/`StateDelta`, summed across workers) — the
+    /// O(changed)-vs-O(n) surface the delta path is measured on.
+    pub sync_bytes: std::sync::atomic::AtomicU64,
+    /// Worker↔worker mesh bytes as metered by the workers themselves
+    /// (frame headers + bodies of `PeerMsgs`/`PeerFold`/`PeerEdges`
+    /// sends, accumulated from hop/rewire acks).
+    pub mesh_bytes: std::sync::atomic::AtomicU64,
     /// Generation checkpoints persisted ([`spill::write_checkpoint`]).
     pub checkpoints: std::sync::atomic::AtomicU64,
     /// Successful worker-fleet recoveries ([`ShuffleOps::recover`]).
@@ -1535,6 +1628,13 @@ pub struct ShuffleTransport {
     custody: Option<u64>,
     /// Content hash of the worker-side value mirror.
     mirror: Option<u64>,
+    /// The synced mirror's wire bytes, retained as the base the next
+    /// [`ShuffleOps::sync_mirror`] diffs against (empty = no base; the
+    /// next sync is a full broadcast).
+    mirror_data: Vec<u8>,
+    /// Value width of `mirror_data` (a width change forces a full
+    /// broadcast — deltas never patch across shapes).
+    mirror_vb: u8,
     stats: std::sync::Arc<ShuffleStats>,
     /// Generation-checkpoint state; `None` = checkpointing off.
     checkpoint: Option<CheckpointState>,
@@ -1584,6 +1684,8 @@ impl ShuffleTransport {
             links,
             custody: None,
             mirror: None,
+            mirror_data: Vec::new(),
+            mirror_vb: 0,
             stats: std::sync::Arc::new(ShuffleStats::default()),
             checkpoint: None,
         })
@@ -1726,6 +1828,49 @@ impl ShuffleTransport {
         }
         Ok(frame)
     }
+
+    /// Validate every worker's `RewireAck` against the coordinator's own
+    /// next-generation shards (shared by [`ShuffleOps::rewire`] and
+    /// [`ShuffleOps::gather_rewire`] — both custody handoffs ack the
+    /// adopted shard's statistics, payload checksum, and mesh meter).
+    fn read_rewire_acks(&mut self, seq: u64, new: &ShardedGraph) -> Result<(), TransportError> {
+        let p = self.links.machines;
+        for j in 0..p {
+            let ack = self.read_ack(j, FrameKind::RewireAck, seq)?;
+            let mut r = BodyReader::new(&ack.body);
+            let parsed = (|| -> Result<(u64, u64, Vec<u64>, u64), TransportError> {
+                let len = r.u64("rewire ack len")?;
+                let checksum = r.u64("rewire ack checksum")?;
+                let ack_p = r.u32("rewire ack shard count")? as usize;
+                let mut peers = Vec::with_capacity(ack_p.min(1 << 16));
+                for _ in 0..ack_p {
+                    peers.push(r.u64("rewire ack peer count")?);
+                }
+                let mesh = r.u64("rewire ack mesh bytes")?;
+                r.expect_end("rewire ack")?;
+                Ok((len, checksum, peers, mesh))
+            })()
+            .map_err(|e| e.for_worker(j))?;
+            let (len, checksum, peers, mesh) = parsed;
+            self.stats
+                .mesh_bytes
+                .fetch_add(mesh, std::sync::atomic::Ordering::Relaxed);
+            let stats = new.shard_stats(j);
+            if len != stats.len
+                || peers != stats.peer_counts
+                || checksum != shard_payload_checksum(new, j)
+            {
+                return Err(TransportError::Protocol {
+                    worker: Some(j),
+                    detail: format!(
+                        "rewired shard diverges from the coordinator's generation \
+                         ({len} edges, checksum {checksum:#018x})"
+                    ),
+                });
+            }
+        }
+        Ok(())
+    }
 }
 
 /// Canonical payload checksum of shard `s` of `g`: the spill-cached one
@@ -1776,6 +1921,21 @@ impl Exchange for ShuffleTransport {
     fn shuffle(&mut self) -> Option<&mut dyn crate::mpc::transport::ShuffleOps> {
         Some(self)
     }
+
+    fn mesh_stats(&self) -> Option<crate::mpc::metrics::MeshMetrics> {
+        use std::sync::atomic::Ordering::Relaxed;
+        let s = &self.stats;
+        Some(crate::mpc::metrics::MeshMetrics {
+            hops: s.hops.load(Relaxed),
+            hop_batches: s.hop_batches.load(Relaxed),
+            state_syncs: s.state_syncs.load(Relaxed),
+            delta_syncs: s.delta_syncs.load(Relaxed),
+            sync_bytes: s.sync_bytes.load(Relaxed),
+            mesh_bytes: s.mesh_bytes.load(Relaxed),
+            rewires: s.rewires.load(Relaxed),
+            custody_loads: s.custody_loads.load(Relaxed),
+        })
+    }
 }
 
 impl crate::mpc::transport::ShuffleOps for ShuffleTransport {
@@ -1815,26 +1975,80 @@ impl crate::mpc::transport::ShuffleOps for ShuffleTransport {
         hash: u64,
     ) -> Result<(), TransportError> {
         let p = self.links.machines;
+        // Delta path: the workers hold a validated base of the same
+        // shape, so ship only the changed entries as (index, value)
+        // patches.  Past n/4 changed entries the per-entry index stops
+        // paying for itself and a full broadcast is cheaper — and the
+        // first sync (no base) or a width change is always full.
+        let vb = value_bytes as usize;
+        let mut delta: Option<Vec<u8>> = None;
+        if self.links.cfg.delta_sync
+            && self.mirror.is_some()
+            && self.mirror_vb == value_bytes
+            && self.mirror_data.len() == data.len()
+            && vb > 0
+        {
+            let n = data.len() / vb;
+            let mut changed: Vec<u32> = Vec::new();
+            for i in 0..n {
+                let at = i * vb;
+                if data[at..at + vb] != self.mirror_data[at..at + vb] {
+                    changed.push(i as u32);
+                }
+            }
+            if changed.len() <= n / 4 {
+                let mut body = Vec::with_capacity(1 + 8 + 8 + changed.len() * (4 + vb));
+                body.push(value_bytes);
+                body.extend_from_slice(&(data.len() as u64).to_le_bytes());
+                body.extend_from_slice(&(changed.len() as u64).to_le_bytes());
+                for &i in &changed {
+                    body.extend_from_slice(&i.to_le_bytes());
+                    let at = i as usize * vb;
+                    body.extend_from_slice(&data[at..at + vb]);
+                }
+                delta = Some(body);
+            }
+        }
+        let is_delta = delta.is_some();
         self.links.seq += 1;
         let seq = self.links.seq;
-        let mut head = Vec::with_capacity(1 + 8);
-        head.push(value_bytes);
-        head.extend_from_slice(&(data.len() as u64).to_le_bytes());
-        for j in 0..p {
-            write_frame_parts(
-                &mut self.links.conns[j].writer,
-                FrameKind::StateSync,
-                seq,
-                &head,
-                data,
-            )
-            .map_err(|e| self.links.crash_context(j, e))?;
-        }
+        let wire_body_len = match &delta {
+            Some(body) => {
+                for j in 0..p {
+                    write_frame(
+                        &mut self.links.conns[j].writer,
+                        FrameKind::StateDelta,
+                        seq,
+                        body,
+                    )
+                    .map_err(|e| self.links.crash_context(j, e))?;
+                }
+                body.len() as u64
+            }
+            None => {
+                let mut head = Vec::with_capacity(1 + 8);
+                head.push(value_bytes);
+                head.extend_from_slice(&(data.len() as u64).to_le_bytes());
+                for j in 0..p {
+                    write_frame_parts(
+                        &mut self.links.conns[j].writer,
+                        FrameKind::StateSync,
+                        seq,
+                        &head,
+                        data,
+                    )
+                    .map_err(|e| self.links.crash_context(j, e))?;
+                }
+                (head.len() + data.len()) as u64
+            }
+        };
         for j in 0..p {
             let ack = self.read_ack(j, FrameKind::StateAck, seq)?;
             let mut r = BodyReader::new(&ack.body);
             let got = r.u64("state ack hash").map_err(|e| e.for_worker(j))?;
             r.expect_end("state ack").map_err(|e| e.for_worker(j))?;
+            // the receipt always hashes the worker's *full* resulting
+            // mirror, so a delta applied over a skewed base diverges here
             if got != hash {
                 return Err(TransportError::Protocol {
                     worker: Some(j),
@@ -1845,14 +2059,29 @@ impl crate::mpc::transport::ShuffleOps for ShuffleTransport {
             }
         }
         self.mirror = Some(hash);
+        self.mirror_vb = value_bytes;
+        self.mirror_data.clear();
+        self.mirror_data.extend_from_slice(data);
         self.stats
             .state_syncs
             .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        if is_delta {
+            self.stats
+                .delta_syncs
+                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        }
+        self.stats.sync_bytes.fetch_add(
+            (FRAME_HEADER_BYTES + wire_body_len) * p as u64,
+            std::sync::atomic::Ordering::Relaxed,
+        );
         Ok(())
     }
 
-    fn set_mirror_hash(&mut self, hash: u64) {
+    fn set_mirror(&mut self, value_bytes: u8, data: &[u8], hash: u64) {
         self.mirror = Some(hash);
+        self.mirror_vb = value_bytes;
+        self.mirror_data.clear();
+        self.mirror_data.extend_from_slice(data);
     }
 
     fn begin_hop(
@@ -1920,20 +2149,24 @@ impl crate::mpc::transport::ShuffleOps for ShuffleTransport {
                 });
                 continue;
             }
-            let parsed = (|| -> Result<(u64, u64), TransportError> {
+            let parsed = (|| -> Result<(u64, u64, u64), TransportError> {
                 let mut r = BodyReader::new(&frame.body);
                 let received = r.u64("hop ack received")?;
                 let fold = r.u64("hop ack fold checksum")?;
+                let mesh = r.u64("hop ack mesh bytes")?;
                 r.expect_end("hop ack")?;
-                Ok((received, fold))
+                Ok((received, fold, mesh))
             })();
-            let (received, fold) = match parsed {
+            let (received, fold, mesh) = match parsed {
                 Ok(v) => v,
                 Err(e) => {
                     damage.get_or_insert(e.for_worker(j));
                     continue;
                 }
             };
+            self.stats
+                .mesh_bytes
+                .fetch_add(mesh, std::sync::atomic::Ordering::Relaxed);
             if received != charge.machine_bytes[j] {
                 damage.get_or_insert(TransportError::AccountingMismatch {
                     label: spec.label.to_string(),
@@ -1950,6 +2183,136 @@ impl crate::mpc::transport::ShuffleOps for ShuffleTransport {
                         spec.label, expected_folds[j]
                     ),
                 });
+            }
+        }
+        match root_cause.or(damage) {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
+    fn begin_hop_batch(
+        &mut self,
+        specs: &[crate::mpc::transport::HopSpec<'_>],
+        charge: &RoundCharge<'_>,
+    ) -> Result<u64, TransportError> {
+        let p = self.links.machines;
+        debug_assert_eq!(charge.machine_bytes.len(), p);
+        debug_assert!(!specs.is_empty());
+        // the batch frame ships at the base seq; round k of the plan
+        // runs at base + k on the mesh, so the shared counter advances
+        // once per round exactly as if the rounds had shipped singly
+        let base = self.links.seq + 1;
+        self.links.seq += specs.len() as u64;
+        let mut body = Vec::with_capacity(2 + specs.len() * 16);
+        body.extend_from_slice(&(specs.len() as u16).to_le_bytes());
+        for spec in specs {
+            let label = spec.label.as_bytes();
+            let label_len = label.len().min(u16::MAX as usize);
+            body.push(spec.op.code());
+            body.push(u8::from(spec.include_self));
+            body.extend_from_slice(&(label_len as u16).to_le_bytes());
+            body.extend_from_slice(&label[..label_len]);
+        }
+        for j in 0..p {
+            write_frame(&mut self.links.conns[j].writer, FrameKind::HopBatch, base, &body)
+                .map_err(|e| self.links.crash_context(j, e))?;
+        }
+        self.stats
+            .hops
+            .fetch_add(specs.len() as u64, std::sync::atomic::Ordering::Relaxed);
+        self.stats
+            .hop_batches
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        Ok(base)
+    }
+
+    fn finish_hop_batch(
+        &mut self,
+        seq: u64,
+        specs: &[crate::mpc::transport::HopSpec<'_>],
+        charge: &RoundCharge<'_>,
+        expected_folds: &[Vec<u64>],
+    ) -> Result<(), TransportError> {
+        let p = self.links.machines;
+        debug_assert_eq!(expected_folds.len(), specs.len());
+        // same root-cause-over-symptoms attribution as finish_hop: a
+        // worker that failed mid-batch poisons its mesh phases, so its
+        // peers ack with damaged loads — the WorkerErr wins
+        let mut root_cause: Option<TransportError> = None;
+        let mut damage: Option<TransportError> = None;
+        for j in 0..p {
+            let frame = read_frame(&mut self.links.conns[j].reader)
+                .map_err(|e| self.links.crash_context(j, e))?;
+            if frame.kind == FrameKind::WorkerErr {
+                root_cause.get_or_insert(TransportError::Protocol {
+                    worker: Some(j),
+                    detail: String::from_utf8_lossy(&frame.body).into_owned(),
+                });
+                continue;
+            }
+            if frame.kind != FrameKind::HopBatchAck || frame.seq != seq {
+                damage.get_or_insert(TransportError::Protocol {
+                    worker: Some(j),
+                    detail: format!(
+                        "expected HopBatchAck seq {seq}, got {:?} seq {}",
+                        frame.kind, frame.seq
+                    ),
+                });
+                continue;
+            }
+            let parsed = (|| -> Result<Vec<(u64, u64, u64)>, TransportError> {
+                let mut r = BodyReader::new(&frame.body);
+                let count = r.u16("batch ack count")? as usize;
+                let mut acks = Vec::with_capacity(count.min(1 << 16));
+                for _ in 0..count {
+                    let received = r.u64("batch ack received")?;
+                    let fold = r.u64("batch ack fold checksum")?;
+                    let mesh = r.u64("batch ack mesh bytes")?;
+                    acks.push((received, fold, mesh));
+                }
+                r.expect_end("hop batch ack")?;
+                Ok(acks)
+            })();
+            let acks = match parsed {
+                Ok(v) => v,
+                Err(e) => {
+                    damage.get_or_insert(e.for_worker(j));
+                    continue;
+                }
+            };
+            if acks.len() != specs.len() {
+                damage.get_or_insert(TransportError::Protocol {
+                    worker: Some(j),
+                    detail: format!(
+                        "batch ack covers {} rounds, plan has {}",
+                        acks.len(),
+                        specs.len()
+                    ),
+                });
+                continue;
+            }
+            for (k, &(received, fold, mesh)) in acks.iter().enumerate() {
+                self.stats
+                    .mesh_bytes
+                    .fetch_add(mesh, std::sync::atomic::Ordering::Relaxed);
+                if received != charge.machine_bytes[j] {
+                    damage.get_or_insert(TransportError::AccountingMismatch {
+                        label: specs[k].label.to_string(),
+                        machine: j,
+                        expected: charge.machine_bytes[j],
+                        actual: received,
+                    });
+                } else if fold != expected_folds[k][j] {
+                    damage.get_or_insert(TransportError::Protocol {
+                        worker: Some(j),
+                        detail: format!(
+                            "round {:?}: worker fold image hashes {fold:#018x}, \
+                             coordinator computed {:#018x}",
+                            specs[k].label, expected_folds[k][j]
+                        ),
+                    });
+                }
             }
         }
         match root_cause.or(damage) {
@@ -1978,36 +2341,40 @@ impl crate::mpc::transport::ShuffleOps for ShuffleTransport {
             write_frame(&mut self.links.conns[j].writer, FrameKind::Rewire, seq, &body)
                 .map_err(|e| self.links.crash_context(j, e))?;
         }
-        for j in 0..p {
-            let ack = self.read_ack(j, FrameKind::RewireAck, seq)?;
-            let mut r = BodyReader::new(&ack.body);
-            let parsed = (|| -> Result<(u64, u64, Vec<u64>), TransportError> {
-                let len = r.u64("rewire ack len")?;
-                let checksum = r.u64("rewire ack checksum")?;
-                let ack_p = r.u32("rewire ack shard count")? as usize;
-                let mut peers = Vec::with_capacity(ack_p.min(1 << 16));
-                for _ in 0..ack_p {
-                    peers.push(r.u64("rewire ack peer count")?);
-                }
-                r.expect_end("rewire ack")?;
-                Ok((len, checksum, peers))
-            })()
-            .map_err(|e| e.for_worker(j))?;
-            let (len, checksum, peers) = parsed;
-            let stats = new.shard_stats(j);
-            if len != stats.len
-                || peers != stats.peer_counts
-                || checksum != shard_payload_checksum(new, j)
-            {
-                return Err(TransportError::Protocol {
-                    worker: Some(j),
-                    detail: format!(
-                        "rewired shard diverges from the coordinator's generation \
-                         ({len} edges, checksum {checksum:#018x})"
-                    ),
-                });
-            }
+        self.read_rewire_acks(seq, new)?;
+        self.custody = Some(new.generation());
+        self.stats
+            .rewires
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.checkpoint_generation(new)
+    }
+
+    fn gather_rewire(&mut self, map: &[u32], new: &ShardedGraph) -> Result<(), TransportError> {
+        // generation-boundary heartbeat (see establish_custody)
+        self.links.probe_workers()?;
+        let p = self.links.machines;
+        // the map rides the mirror channel exactly like rewire's — and
+        // since the labels usually just synced after the last hop, the
+        // repeat sync here is a cheap delta, not a second broadcast
+        let mut data = Vec::with_capacity(map.len() * 4);
+        for &m in map {
+            data.extend_from_slice(&m.to_le_bytes());
         }
+        let hash = mirror_hash_of(4, &data);
+        if self.mirror != Some(hash) {
+            self.sync_mirror(4, &data, hash)?;
+        }
+        self.links.seq += 1;
+        let seq = self.links.seq;
+        // the reduce program ships in the descriptor like a fold op does
+        let mut body = Vec::with_capacity(8 + 1);
+        body.extend_from_slice(&(new.num_vertices() as u64).to_le_bytes());
+        body.push(WireOp::GatherPairU32.code());
+        for j in 0..p {
+            write_frame(&mut self.links.conns[j].writer, FrameKind::GatherRewire, seq, &body)
+                .map_err(|e| self.links.crash_context(j, e))?;
+        }
+        self.read_rewire_acks(seq, new)?;
         self.custody = Some(new.generation());
         self.stats
             .rewires
@@ -2055,8 +2422,12 @@ impl crate::mpc::transport::ShuffleOps for ShuffleTransport {
                     // custody and mirror died with the old fleet: the
                     // next round lazily re-establishes both, from this
                     // generation's checkpointed custody files when on
+                    // (and the delta base goes with them — the first
+                    // sync after recovery is a full broadcast)
                     self.custody = None;
                     self.mirror = None;
+                    self.mirror_data.clear();
+                    self.mirror_vb = 0;
                     self.stats
                         .recoveries
                         .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
@@ -2214,6 +2585,27 @@ mod tests {
     fn fold_payload_rejects_ragged_input() {
         assert!(fold_wire_payload(WireOp::MinU32, &[0u8; 13]).is_err());
         assert!(fold_wire_payload(WireOp::MaxU64, &[0u8; 20]).is_err());
+        assert!(fold_wire_payload(WireOp::GatherPairU32, &[0u8; 15]).is_err());
+    }
+
+    #[test]
+    fn gather_payload_keeps_every_distinct_pair_per_key() {
+        // not a 1-per-key fold: both of key 1's distinct pairs survive,
+        // the exact duplicate collapses, and keys come out ascending
+        let mut payload = Vec::new();
+        for (k, a, b) in [(5u64, 8u32, 2u32), (1, 7, 3), (1, 2, 9), (1, 7, 3)] {
+            payload.extend_from_slice(&k.to_le_bytes());
+            payload.extend_from_slice(&a.to_le_bytes());
+            payload.extend_from_slice(&b.to_le_bytes());
+        }
+        let out = fold_wire_payload(WireOp::GatherPairU32, &payload).unwrap();
+        let mut expect = Vec::new();
+        for (k, a, b) in [(1u64, 2u32, 9u32), (1, 7, 3), (5, 8, 2)] {
+            expect.extend_from_slice(&k.to_le_bytes());
+            expect.extend_from_slice(&a.to_le_bytes());
+            expect.extend_from_slice(&b.to_le_bytes());
+        }
+        assert_eq!(out, expect);
     }
 
     #[test]
@@ -2256,6 +2648,7 @@ mod tests {
         assert_eq!(cfg.respawn_backoff_ms, DEFAULT_RESPAWN_BACKOFF_MS);
         assert!(cfg.fault_plan.is_none());
         assert!(cfg.checkpoint_dir.is_none());
+        assert!(cfg.delta_sync);
     }
 
     #[test]

@@ -1060,7 +1060,7 @@ impl Simulator {
         // is a pure function of `g` and `vals`); the round is charged
         // once, on the attempt that completes — bit-identical metrics by
         // construction.
-        let mut folded: Option<(Vec<V>, Vec<u64>, u64)> = None;
+        let mut folded: Option<(Vec<V>, Vec<u64>, u64, Vec<u8>)> = None;
         let mut replays = 0usize;
         loop {
             // ---- control plane: custody + mirror, then the descriptor --
@@ -1098,66 +1098,18 @@ impl Simulator {
             // ---- the same fold, locally, while the workers shuffle -----
             if folded.is_none() {
                 let t_fold = Instant::now();
-                let opf = fold.f;
-                let mut out: Vec<V> = vals.to_vec();
-                let words = n.div_ceil(64);
-                let mut touched = self.take_touched(words);
-                let mut msgs_seen = 0u64;
-                {
-                    let mut fold_in = |k: Vertex, value: V| {
-                        let k = k as usize;
-                        out[k] = if (touched[k / 64] >> (k % 64)) & 1 == 1 {
-                            opf(out[k], value)
-                        } else {
-                            value
-                        };
-                        touched[k / 64] |= 1u64 << (k % 64);
-                        msgs_seen += 1;
-                    };
-                    for s in 0..p {
-                        let shard = g.shard_data(s);
-                        for (u, v) in shard.iter() {
-                            fold_in(u, vals[v as usize]);
-                            fold_in(v, vals[u as usize]);
-                        }
-                        if include_self {
-                            let (sa, sb) = pool::chunk_range(n, p, s);
-                            for v in sa..sb {
-                                fold_in(v as Vertex, vals[v]);
-                            }
-                        }
-                    }
-                }
-                debug_assert_eq!(
-                    msgs_seen, charge.messages,
-                    "shard charge disagrees with the message stream ({label})"
-                );
-                let _ = msgs_seen;
-
-                // canonical per-machine fold images (ascending keys —
-                // exactly the worker encoding) hashed incrementally, plus
-                // the post-hop mirror hash, in one pass
-                let mut fold_hash: Vec<Fnv1a> = (0..p).map(|_| Fnv1a::new()).collect();
-                let mut mirror_h = Fnv1a::new();
-                mirror_h.update(&[vb as u8]);
-                mirror_h.update(&((n * vb) as u64).to_le_bytes());
-                let mut tmp = Vec::with_capacity(vb);
-                for (k, v) in out.iter().enumerate() {
-                    tmp.clear();
-                    v.encode_wire(&mut tmp);
-                    mirror_h.update(&tmp);
-                    if (touched[k / 64] >> (k % 64)) & 1 == 1 {
-                        let h = &mut fold_hash[machine_of(k as u64, p)];
-                        h.update(&(k as u64).to_le_bytes());
-                        h.update(&tmp);
-                    }
-                }
-                self.put_touched(touched);
-                let expected: Vec<u64> = fold_hash.into_iter().map(Fnv1a::finish).collect();
+                folded = Some(self.local_hop_fold(
+                    label,
+                    g,
+                    vals,
+                    include_self,
+                    fold.f,
+                    vb,
+                    charge.messages,
+                ));
                 self.note_fold(t_fold);
-                folded = Some((out, expected, mirror_h.finish()));
             }
-            let (_, expected, post_mirror) = folded.as_ref().expect("just computed");
+            let (_, expected, post_mirror, post_bytes) = folded.as_ref().expect("just computed");
 
             // ---- the barrier: O(machines) summaries, validated ---------
             let t_shuffle = Instant::now();
@@ -1165,7 +1117,9 @@ impl Simulator {
                 let sh = self.transport.shuffle().expect("checked above");
                 match sh.finish_hop(seq, &spec, &rc, expected) {
                     Ok(()) => {
-                        sh.set_mirror_hash(*post_mirror);
+                        // pin the post-hop mirror bytes: the retained
+                        // image is the delta base of the next sync
+                        sh.set_mirror(vb as u8, post_bytes, *post_mirror);
                         Ok(())
                     }
                     Err(e) => Err(e),
@@ -1190,7 +1144,7 @@ impl Simulator {
                         shard_bytes_mapped,
                         shard_bytes_copied,
                     });
-                    let (out, _, _) = folded.expect("just computed");
+                    let (out, _, _, _) = folded.expect("just computed");
                     return Some(out);
                 }
                 Err(e) => {
@@ -1199,6 +1153,400 @@ impl Simulator {
                 }
             }
         }
+    }
+
+    /// The in-process fold of one hop round — the computation
+    /// [`Self::try_shuffle_hop`] runs locally while the workers
+    /// shuffle.  Returns the fold output, the canonical per-machine
+    /// fold-image hashes (ascending keys — exactly the worker
+    /// encoding), the post-hop mirror hash, and the post-hop mirror
+    /// image bytes (retained as the delta base of the next sync).
+    fn local_hop_fold<V>(
+        &mut self,
+        label: &str,
+        g: &ShardedGraph,
+        vals: &[V],
+        include_self: bool,
+        opf: fn(V, V) -> V,
+        vb: usize,
+        expect_messages: u64,
+    ) -> (Vec<V>, Vec<u64>, u64, Vec<u8>)
+    where
+        V: WireSize + Copy,
+    {
+        let n = vals.len();
+        let p = self.cfg.machines.max(1);
+        let mut out: Vec<V> = vals.to_vec();
+        let words = n.div_ceil(64);
+        let mut touched = self.take_touched(words);
+        let mut msgs_seen = 0u64;
+        {
+            let mut fold_in = |k: Vertex, value: V| {
+                let k = k as usize;
+                out[k] = if (touched[k / 64] >> (k % 64)) & 1 == 1 {
+                    opf(out[k], value)
+                } else {
+                    value
+                };
+                touched[k / 64] |= 1u64 << (k % 64);
+                msgs_seen += 1;
+            };
+            for s in 0..p {
+                let shard = g.shard_data(s);
+                for (u, v) in shard.iter() {
+                    fold_in(u, vals[v as usize]);
+                    fold_in(v, vals[u as usize]);
+                }
+                if include_self {
+                    let (sa, sb) = pool::chunk_range(n, p, s);
+                    for v in sa..sb {
+                        fold_in(v as Vertex, vals[v]);
+                    }
+                }
+            }
+        }
+        debug_assert_eq!(
+            msgs_seen, expect_messages,
+            "shard charge disagrees with the message stream ({label})"
+        );
+        let _ = msgs_seen;
+
+        // canonical per-machine fold images (ascending keys — exactly
+        // the worker encoding) hashed incrementally, plus the post-hop
+        // mirror hash + image, in one pass
+        let mut fold_hash: Vec<Fnv1a> = (0..p).map(|_| Fnv1a::new()).collect();
+        let mut mirror_h = Fnv1a::new();
+        mirror_h.update(&[vb as u8]);
+        mirror_h.update(&((n * vb) as u64).to_le_bytes());
+        let mut image = Vec::with_capacity(n * vb);
+        let mut tmp = Vec::with_capacity(vb);
+        for (k, v) in out.iter().enumerate() {
+            tmp.clear();
+            v.encode_wire(&mut tmp);
+            mirror_h.update(&tmp);
+            image.extend_from_slice(&tmp);
+            if (touched[k / 64] >> (k % 64)) & 1 == 1 {
+                let h = &mut fold_hash[machine_of(k as u64, p)];
+                h.update(&(k as u64).to_le_bytes());
+                h.update(&tmp);
+            }
+        }
+        self.put_touched(touched);
+        let expected: Vec<u64> = fold_hash.into_iter().map(Fnv1a::finish).collect();
+        (out, expected, mirror_h.finish(), image)
+    }
+
+    /// One **worker-native pipelined batch** of consecutive hop rounds
+    /// ([`RoundPlan`]) on a shuffle-capable transport, or `None` when
+    /// the transport has no worker data plane / the fold has no wire
+    /// identity — the caller then runs the rounds one at a time.
+    ///
+    /// The coordinator ships the whole plan as ONE descriptor batch and
+    /// reads ONE barrier of O(machines) acks; workers run each round's
+    /// generate→shuffle→fold back-to-back without re-synchronizing with
+    /// the coordinator in between.  The coordinator computes the same
+    /// chained folds locally (round `k+1` folds round `k`'s output) and
+    /// validates every round's per-machine fold images from the batch
+    /// ack — bit-identity enforced per round, exactly like the
+    /// unpipelined path.  A fault anywhere replays the WHOLE batch on a
+    /// recovered fleet, and the rounds are charged once, on the attempt
+    /// that completes, so `Metrics` stay engine-invariant.
+    pub fn try_shuffle_hop_plan<V>(
+        &mut self,
+        plan: RoundPlan<'_>,
+        g: &ShardedGraph,
+        vals: &[V],
+        fold: WireFold<V>,
+        charge: &ShardRound,
+    ) -> Option<Vec<V>>
+    where
+        V: WireSize + Copy,
+    {
+        let rounds = plan.labels.len();
+        if rounds == 0 {
+            return None;
+        }
+        if rounds == 1 {
+            // a one-round plan IS the unpipelined round
+            return self.try_shuffle_hop(plan.labels[0], g, vals, plan.include_self, fold, charge);
+        }
+        let op = fold.wire?;
+        let n = vals.len();
+        if n == 0 || self.transport.shuffle().is_none() {
+            return None;
+        }
+        let vb = op.value_bytes();
+        if vals[0].wire_size() as usize != vb {
+            return None; // shape mismatch: keep the per-message wire path
+        }
+        let p = self.cfg.machines.max(1);
+        debug_assert_eq!(charge.machine_bytes.len(), p);
+
+        let gen = g.generation();
+        let hash = {
+            let mut h = Fnv1a::new();
+            h.update(&[vb as u8]);
+            h.update(&((n * vb) as u64).to_le_bytes());
+            let mut tmp = Vec::with_capacity(vb);
+            for v in vals {
+                tmp.clear();
+                v.encode_wire(&mut tmp);
+                h.update(&tmp);
+            }
+            h.finish()
+        };
+        let specs: Vec<HopSpec<'_>> = plan
+            .labels
+            .iter()
+            .map(|&label| HopSpec {
+                label,
+                op,
+                include_self: plan.include_self,
+            })
+            .collect();
+        let rc = RoundCharge {
+            messages: charge.messages,
+            bytes: charge.bytes,
+            machine_bytes: &charge.machine_bytes,
+        };
+
+        let mut folded: Option<(Vec<V>, Vec<Vec<u64>>, u64, Vec<u8>)> = None;
+        let mut replays = 0usize;
+        loop {
+            // ---- control plane: custody + mirror + ONE batch descriptor
+            let t_gen = Instant::now();
+            let ctrl = {
+                let sh = self.transport.shuffle().expect("checked above");
+                let mut step = || -> Result<u64, TransportError> {
+                    if sh.custody() != Some(gen) {
+                        sh.establish_custody(g)?;
+                    }
+                    if sh.mirror_hash() != Some(hash) {
+                        let mut data = Vec::with_capacity(n * vb);
+                        for v in vals {
+                            v.encode_wire(&mut data);
+                        }
+                        debug_assert_eq!(
+                            crate::mpc::net::mirror_hash_of(vb as u8, &data),
+                            hash
+                        );
+                        sh.sync_mirror(vb as u8, &data, hash)?;
+                    }
+                    sh.begin_hop_batch(&specs, &rc)
+                };
+                step()
+            };
+            self.note_gen(t_gen);
+            let base = match ctrl {
+                Ok(base) => base,
+                Err(e) => {
+                    self.recover_or_abort(plan.labels[0], &mut replays, e);
+                    continue;
+                }
+            };
+
+            // ---- the same chained folds, locally, while they pipeline --
+            if folded.is_none() {
+                let t_fold = Instant::now();
+                let mut cur: Vec<V> = vals.to_vec();
+                let mut expected_all: Vec<Vec<u64>> = Vec::with_capacity(rounds);
+                let mut post = (0u64, Vec::new());
+                for &label in plan.labels {
+                    let (out, expected, post_hash, post_image) = self.local_hop_fold(
+                        label,
+                        g,
+                        &cur,
+                        plan.include_self,
+                        fold.f,
+                        vb,
+                        charge.messages,
+                    );
+                    cur = out;
+                    expected_all.push(expected);
+                    post = (post_hash, post_image);
+                }
+                self.note_fold(t_fold);
+                folded = Some((cur, expected_all, post.0, post.1));
+            }
+            let (_, expected_all, post_mirror, post_bytes) =
+                folded.as_ref().expect("just computed");
+
+            // ---- ONE barrier for the whole batch, validated per round --
+            let t_shuffle = Instant::now();
+            let fin = {
+                let sh = self.transport.shuffle().expect("checked above");
+                match sh.finish_hop_batch(base, &specs, &rc, expected_all) {
+                    Ok(()) => {
+                        sh.set_mirror(vb as u8, post_bytes, *post_mirror);
+                        Ok(())
+                    }
+                    Err(e) => Err(e),
+                }
+            };
+            match fin {
+                Ok(()) => {
+                    let shuffle_ms = t_shuffle.elapsed().as_secs_f64() * 1e3;
+                    for (k, &label) in plan.labels.iter().enumerate() {
+                        // every round of the batch is charged
+                        // individually — `Metrics` can't tell a batch
+                        // from the same rounds run one at a time
+                        self.finish_round(
+                            label,
+                            charge.messages,
+                            charge.bytes,
+                            &charge.machine_bytes,
+                        );
+                        let (allocs, shard_bytes_mapped, shard_bytes_copied) =
+                            self.data_plane_delta();
+                        self.metrics.timings.push(RoundTiming {
+                            label: label.to_string(),
+                            // the batch's one-off wall costs land on its
+                            // first round; the later rounds rode along
+                            gen_ms: if k == 0 {
+                                std::mem::take(&mut self.pending_gen_ms)
+                            } else {
+                                0.0
+                            },
+                            shuffle_ms: if k == 0 { shuffle_ms } else { 0.0 },
+                            fold_ms: if k == 0 {
+                                std::mem::take(&mut self.pending_fold_ms)
+                            } else {
+                                0.0
+                            },
+                            allocs,
+                            shard_bytes_mapped,
+                            shard_bytes_copied,
+                        });
+                    }
+                    let (out, _, _, _) = folded.expect("just computed");
+                    return Some(out);
+                }
+                Err(e) => {
+                    self.recover_or_abort(plan.labels[0], &mut replays, e);
+                    continue;
+                }
+            }
+        }
+    }
+
+    /// One **worker-native** hub rewire (Cracker's
+    /// `{(m(v), u) : u ∈ N(v) ∪ {v}}` — see `cc::cracker::rewire`) on a
+    /// shuffle transport, or `None` — the caller then takes the
+    /// coordinator-routed `round_map` path, which charges identically.
+    ///
+    /// The coordinator computes the same next generation locally (the
+    /// algorithm needs it here anyway) together with the exact
+    /// per-message accounting of the hub-keyed round, then ships the
+    /// O(1) `GatherRewire` descriptor — the new vertex count plus the
+    /// [`WireOp::GatherPairU32`] reduce program, wire-shipped like a
+    /// fold op — and validates the shard-by-shard stats + checksums the
+    /// workers ack against the local build: the adopted custody is
+    /// bit-identical to `from_edges_like` by construction, and the
+    /// O(m) hub pairs never touch a coordinator link.
+    pub fn try_shuffle_gather_rewire(
+        &mut self,
+        label: &str,
+        g: &ShardedGraph,
+        m: &[Vertex],
+    ) -> Option<ShardedGraph> {
+        let n = g.num_vertices();
+        if n == 0 || m.len() != n || self.transport.shuffle().is_none() {
+            return None;
+        }
+        let p = self.cfg.machines.max(1);
+        let gen = g.generation();
+
+        let mut built: Option<(ShardedGraph, u64, u64, Vec<u64>)> = None;
+        let mut replays = 0usize;
+        loop {
+            // ---- control plane: custody (lazy re-ship after recovery) --
+            let ctrl = {
+                let sh = self.transport.shuffle().expect("checked above");
+                if sh.custody() != Some(gen) {
+                    sh.establish_custody(g)
+                } else {
+                    Ok(())
+                }
+            };
+            if let Err(e) = ctrl {
+                self.recover_or_abort(label, &mut replays, e);
+                continue;
+            }
+
+            // ---- the same round, locally: edges + exact accounting -----
+            // Replicates `round_map` over `cc::cracker::rewire`'s chunk
+            // stream message for message: per edge the two hub pairs,
+            // per primary-chunk vertex the self pair, each 16 wire
+            // bytes charged to the machine owning its hub key.
+            if built.is_none() {
+                let t_gen = Instant::now();
+                let mut machine_bytes = vec![0u64; p];
+                let mut messages = 0u64;
+                let mut edges: Vec<(Vertex, Vertex)> = Vec::new();
+                {
+                    let mut push = |key: u64, pair: (Vertex, Vertex)| {
+                        machine_bytes[machine_of(key, p)] += 16;
+                        messages += 1;
+                        edges.push(pair);
+                    };
+                    for s in 0..p {
+                        let shard = g.shard_data(s);
+                        for (u, v) in shard.iter() {
+                            let (mu, mv) = (m[u as usize], m[v as usize]);
+                            push(mu as u64, (mu, v));
+                            push(mv as u64, (mv, u));
+                        }
+                        let (sa, sb) = pool::chunk_range(n, p, s);
+                        for v in sa..sb {
+                            push(m[v] as u64, (m[v], v as Vertex));
+                        }
+                    }
+                }
+                let bytes = messages * 16;
+                let new = g.from_edges_like(edges);
+                self.note_gen(t_gen);
+                built = Some((new, messages, bytes, machine_bytes));
+            }
+            let (new, messages, bytes, machine_bytes) =
+                built.as_ref().expect("just computed");
+
+            // ---- ship the descriptor; workers gather + adopt peer-to-peer
+            let t_shuffle = Instant::now();
+            let res = {
+                let sh = self.transport.shuffle().expect("checked above");
+                sh.gather_rewire(m, new)
+            };
+            match res {
+                Ok(()) => {
+                    self.finish_round(label, *messages, *bytes, machine_bytes);
+                    let (allocs, shard_bytes_mapped, shard_bytes_copied) =
+                        self.data_plane_delta();
+                    self.metrics.timings.push(RoundTiming {
+                        label: label.to_string(),
+                        gen_ms: std::mem::take(&mut self.pending_gen_ms),
+                        shuffle_ms: t_shuffle.elapsed().as_secs_f64() * 1e3,
+                        fold_ms: std::mem::take(&mut self.pending_fold_ms),
+                        allocs,
+                        shard_bytes_mapped,
+                        shard_bytes_copied,
+                    });
+                    let (new, _, _, _) = built.expect("just computed");
+                    return Some(new);
+                }
+                Err(e) => {
+                    self.recover_or_abort(label, &mut replays, e);
+                    continue;
+                }
+            }
+        }
+    }
+
+    /// Mesh data-plane counters of a shuffle transport, `None` on the
+    /// others: the per-run evidence that delta sync and pipelining
+    /// moved fewer bytes.  Observability only — never part of the
+    /// bit-identity surface the equivalence tests compare.
+    pub fn mesh_metrics(&self) -> Option<crate::mpc::metrics::MeshMetrics> {
+        self.transport.mesh_stats()
     }
 
     /// How many times one round may replay through recovery before the
@@ -1409,6 +1757,23 @@ impl Simulator {
             });
         }
     }
+}
+
+/// A plan of consecutive hop rounds with no intervening coordinator
+/// data dependency: every round folds the previous round's output over
+/// the same graph with the same wire fold (the fused two-hop of
+/// `cc::common` is the canonical instance).  On a shuffle transport
+/// [`Simulator::try_shuffle_hop_plan`] ships the plan as one
+/// `HopBatch` descriptor and the workers pipeline the rounds
+/// back-to-back, acking once per batch — per-round metrics are still
+/// charged individually, so `Metrics` stay engine-invariant.
+#[derive(Debug, Clone, Copy)]
+pub struct RoundPlan<'a> {
+    /// One label per round, in execution order.
+    pub labels: &'a [&'a str],
+    /// Whether each vertex's own value rides along (applied to every
+    /// round of the plan).
+    pub include_self: bool,
 }
 
 /// Serialize already-partitioned per-machine buckets into their wire

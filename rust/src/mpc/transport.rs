@@ -101,6 +101,13 @@ pub enum WireOp {
     /// Cracker's and TreeContraction's pointer rounds).
     MinPairU32,
     MaxPairU32,
+    /// Grouped **gather** over `(u32, u32)` pairs: not a 1-per-key fold —
+    /// the receiving machine sorts its `(key, pair)` records, drops exact
+    /// duplicates, and keeps *every* distinct pair per key.  This is the
+    /// reduce program of grouped rounds (Cracker's hub rewire gathers all
+    /// rewritten edges incident to a hub), shipped in the same round
+    /// header slot the fold ops use.
+    GatherPairU32,
 }
 
 impl WireOp {
@@ -112,6 +119,7 @@ impl WireOp {
             WireOp::MaxU64 => 4,
             WireOp::MinPairU32 => 5,
             WireOp::MaxPairU32 => 6,
+            WireOp::GatherPairU32 => 7,
         }
     }
 
@@ -123,6 +131,7 @@ impl WireOp {
             4 => WireOp::MaxU64,
             5 => WireOp::MinPairU32,
             6 => WireOp::MaxPairU32,
+            7 => WireOp::GatherPairU32,
             _ => return None,
         })
     }
@@ -131,7 +140,11 @@ impl WireOp {
     pub fn value_bytes(self) -> usize {
         match self {
             WireOp::MinU32 | WireOp::MaxU32 => 4,
-            WireOp::MinU64 | WireOp::MaxU64 | WireOp::MinPairU32 | WireOp::MaxPairU32 => 8,
+            WireOp::MinU64
+            | WireOp::MaxU64
+            | WireOp::MinPairU32
+            | WireOp::MaxPairU32
+            | WireOp::GatherPairU32 => 8,
         }
     }
 }
@@ -493,6 +506,13 @@ pub trait Exchange: fmt::Debug {
     fn shuffle(&mut self) -> Option<&mut dyn ShuffleOps> {
         None
     }
+
+    /// Snapshot of the mesh data-plane counters (hops, batches, mirror
+    /// syncs, worker↔worker and sync bytes), when this backend has a mesh
+    /// to meter.  `None` for backends without one.
+    fn mesh_stats(&self) -> Option<crate::mpc::metrics::MeshMetrics> {
+        None
+    }
 }
 
 /// One worker-native hop round, described instead of shipped: each worker
@@ -547,10 +567,15 @@ pub trait ShuffleOps {
     /// Content hash of the value mirror the workers currently hold.
     fn mirror_hash(&self) -> Option<u64>;
 
-    /// Broadcast a new value mirror (wire-encoded, `value_bytes` per
-    /// vertex) to every worker; `hash` is the caller-computed
+    /// Bring every worker's value mirror to `data` (wire-encoded,
+    /// `value_bytes` per vertex); `hash` is the caller-computed
     /// [`mirror_hash_of`](crate::mpc::net::mirror_hash_of), echoed by each
-    /// worker as its application receipt.
+    /// worker as its application receipt — always over the worker's
+    /// **full** resulting mirror, so the receipt pins the mirror contents
+    /// whichever encoding travelled.  The transport is free to ship only
+    /// the `(vertex, new_value)` pairs that changed since the mirror it
+    /// last synced (the delta path), falling back to the full broadcast
+    /// when too much changed or the shapes differ.
     fn sync_mirror(
         &mut self,
         value_bytes: u8,
@@ -558,9 +583,12 @@ pub trait ShuffleOps {
         hash: u64,
     ) -> Result<(), TransportError>;
 
-    /// Record that the workers' mirrors now hash to `hash` (they applied
-    /// the validated fold results of a hop in place).
-    fn set_mirror_hash(&mut self, hash: u64);
+    /// Record that the workers' mirrors now hold `data` hashing to `hash`
+    /// (they applied the validated fold results of a hop in place).  The
+    /// transport retains the bytes as the base the next
+    /// [`sync_mirror`](ShuffleOps::sync_mirror) computes its delta
+    /// against.
+    fn set_mirror(&mut self, value_bytes: u8, data: &[u8], hash: u64);
 
     /// Issue a hop descriptor to every worker and return the round's
     /// sequence number; workers start generating/shuffling immediately
@@ -581,6 +609,52 @@ pub trait ShuffleOps {
         spec: &HopSpec<'_>,
         charge: &RoundCharge<'_>,
         expected_folds: &[u64],
+    ) -> Result<(), TransportError>;
+
+    /// Ship a whole [`RoundPlan`](crate::mpc::simulator::RoundPlan) of
+    /// consecutive hop rounds as **one** descriptor batch: the workers
+    /// run generate→shuffle→fold back-to-back for every round in the
+    /// plan (their mirrors self-advance through the fold all-gather, so
+    /// no coordinator data dependency exists between the rounds) and ack
+    /// once at the end.  All rounds share `charge` — a plan is only legal
+    /// when the graph (and therefore every round's message shape) is
+    /// unchanged across it.  Returns the batch's base sequence number;
+    /// round `k` of the plan runs at `base + k` on the mesh.
+    fn begin_hop_batch(
+        &mut self,
+        specs: &[HopSpec<'_>],
+        charge: &RoundCharge<'_>,
+    ) -> Result<u64, TransportError>;
+
+    /// Collect the one-per-worker batch acks: per round `k` and worker
+    /// `j`, validate the receiver-observed load against `charge` and the
+    /// fold checksum against `expected_folds[k][j]` — exactly the
+    /// [`finish_hop`](ShuffleOps::finish_hop) validation, once per round
+    /// of the plan.
+    fn finish_hop_batch(
+        &mut self,
+        seq: u64,
+        specs: &[HopSpec<'_>],
+        charge: &RoundCharge<'_>,
+        expected_folds: &[Vec<u64>],
+    ) -> Result<(), TransportError>;
+
+    /// Worker-native grouped rewrite (the wire-programmable grouped
+    /// reduce): broadcast `map` as the mirror, ship a one-byte reduce
+    /// program ([`WireOp::GatherPairU32`]), and have every worker emit
+    /// `(map[u], v)` / `(map[v], u)` per owned edge plus `(map[v], v)`
+    /// for its `chunk_range` slice of the vertices, normalize each pair
+    /// (min endpoint first, self-loops dropped), ship them to the new
+    /// owner workers, and adopt the sorted-deduped merge as its
+    /// next-generation shard — Cracker's hub rewire without rebounding
+    /// the edges through the coordinator.  Validated like
+    /// [`rewire`](ShuffleOps::rewire): each worker's new shard statistics
+    /// and payload checksum must match `new` (the coordinator's
+    /// locally-computed generation) before custody advances.
+    fn gather_rewire(
+        &mut self,
+        map: &[u32],
+        new: &crate::graph::ShardedGraph,
     ) -> Result<(), TransportError>;
 
     /// Peer-to-peer custody handoff after a graph rewrite: broadcast
@@ -668,11 +742,17 @@ mod tests {
             WireOp::MaxU64,
             WireOp::MinPairU32,
             WireOp::MaxPairU32,
+            WireOp::GatherPairU32,
         ] {
             assert_eq!(WireOp::from_code(op.code()), Some(op));
         }
         assert_eq!(WireOp::from_code(0), None);
         assert_eq!(WireOp::from_code(200), None);
+    }
+
+    #[test]
+    fn gather_program_is_pair_width() {
+        assert_eq!(WireOp::GatherPairU32.value_bytes(), 8);
     }
 
     #[test]

@@ -20,7 +20,7 @@ use std::sync::atomic::Ordering;
 use lcc::cc::common::{contract_mpc, min_hop};
 use lcc::cc::{self, CcAlgorithm, CcResult, RunOptions};
 use lcc::graph::{generators, Graph, ShardedGraph, SpillPolicy};
-use lcc::mpc::net::{ProcTransport, ShuffleTransport};
+use lcc::mpc::net::{NetConfig, ProcTransport, ShuffleTransport};
 use lcc::mpc::{MpcConfig, Simulator};
 use lcc::util::rng::Rng;
 
@@ -45,6 +45,20 @@ fn proc_sim(g: &ShardedGraph, machines: usize) -> Simulator {
 
 fn shuffle_sim(g: &ShardedGraph, machines: usize) -> Simulator {
     let mut t = ShuffleTransport::spawn(machines, worker_bin()).expect("spawn mesh workers");
+    t.load_graph(g).expect("distribute shards");
+    Simulator::with_transport(cfg(machines), Box::new(t))
+}
+
+/// Shuffle transport with mirror deltas disabled: every sync takes the
+/// full-broadcast path — the baseline the delta encoding must stay
+/// bit-identical to.
+fn shuffle_sim_full_sync(g: &ShardedGraph, machines: usize) -> Simulator {
+    let net = NetConfig {
+        delta_sync: false,
+        ..NetConfig::default()
+    };
+    let mut t =
+        ShuffleTransport::spawn_with(machines, worker_bin(), net).expect("spawn mesh workers");
     t.load_graph(g).expect("distribute shards");
     Simulator::with_transport(cfg(machines), Box::new(t))
 }
@@ -78,6 +92,12 @@ fn all_algorithms_bit_identical_across_transports() {
             for (mode, remote) in [
                 ("proc", run_algo(algo, &g, proc_sim(&g, machines), 7)),
                 ("shuffle", run_algo(algo, &g, shuffle_sim(&g, machines), 7)),
+                // deltas off: full-broadcast syncs must be a pure
+                // encoding change, invisible to labels and metrics
+                (
+                    "shuffle-full-sync",
+                    run_algo(algo, &g, shuffle_sim_full_sync(&g, machines), 7),
+                ),
             ] {
                 assert_eq!(
                     local.labels, remote.labels,
@@ -118,6 +138,7 @@ fn transport_driven_rewrites_produce_identical_graphs() {
     for (mode, sim) in [
         ("proc", proc_sim(&g, machines)),
         ("shuffle", shuffle_sim(&g, machines)),
+        ("shuffle-full-sync", shuffle_sim_full_sync(&g, machines)),
     ] {
         let (h_p, c_p, m_p, r_p) = run(sim);
         assert_eq!(h_l, h_p, "{mode}: hop values diverge");
@@ -169,12 +190,17 @@ fn spilled_shards_ship_without_rehydration_and_match() {
     assert!(stats.hops.load(Ordering::Relaxed) >= 2, "hops run worker-native");
 }
 
-/// The acceptance property of the shuffle data plane: for a described
-/// round whose message volume is ≫ machines, the coordinator link moves
+/// The acceptance property of the shuffle data plane: for described
+/// rounds whose message volume is ≫ machines, the coordinator link moves
 /// only O(machines) summary bytes — descriptors out, load/checksum acks
-/// back.  The O(m) stream stays on the worker mesh.
+/// back.  The O(m) stream stays on the worker mesh.  With pipelined
+/// batches the bound is per *batch*: a fused two-hop ships one
+/// descriptor batch and one ack exchange for its two charged rounds.
 #[test]
-fn shuffle_coordinator_link_is_o_machines_per_round() {
+fn shuffle_coordinator_link_is_o_machines_per_batch() {
+    use lcc::cc::common::fused_two_hop;
+    use lcc::graph::Csr;
+    use lcc::mpc::WireFold;
     let machines = 4;
     let n = 2000;
     let flat = generators::gnp(n, 8.0 / n as f64, &mut Rng::new(17));
@@ -182,17 +208,38 @@ fn shuffle_coordinator_link_is_o_machines_per_round() {
     let mut t = ShuffleTransport::spawn(machines, worker_bin()).expect("spawn mesh workers");
     t.load_graph(&g).expect("distribute shards");
     let link_bytes = t.link_bytes_counter();
+    let stats = t.stats();
     let mut sim = Simulator::with_transport(cfg(machines), Box::new(t));
     let vals: Vec<u32> = (0..n as u32).collect();
 
-    // hop 1 syncs the value mirror (an O(n) broadcast); hop 2 chains on
-    // hop 1's output, whose all-gather already kept the mirrors current —
-    // a steady-state round
+    // hop 1 syncs the value mirror (an O(n) broadcast); the fused
+    // two-hop chains on hop 1's output, whose retained post-fold image
+    // already keeps the mirrors current — two steady-state rounds
+    // shipped as ONE pipelined batch
     let h1 = min_hop(&mut sim, "hop1", &g, &vals, true);
+    let csr = Csr::build_sharded(&g);
+    let rounds_before = sim.metrics.rounds.len();
     let before = link_bytes.load(Ordering::Relaxed);
-    let h2 = min_hop(&mut sim, "hop2", &g, &h1, true);
+    let h3 = fused_two_hop(
+        &mut sim,
+        ("hop2", "hop3"),
+        &g,
+        &csr,
+        &h1,
+        WireFold::min_u32(),
+    );
     let delta = link_bytes.load(Ordering::Relaxed) - before;
 
+    assert_eq!(
+        sim.metrics.rounds.len(),
+        rounds_before + 2,
+        "a pipelined batch still charges each round individually"
+    );
+    assert_eq!(
+        stats.hop_batches.load(Ordering::Relaxed),
+        1,
+        "the fused two-hop must ship as one descriptor batch"
+    );
     let round = sim.metrics.rounds.last().expect("hop recorded");
     assert!(
         round.bytes > 100_000,
@@ -201,7 +248,7 @@ fn shuffle_coordinator_link_is_o_machines_per_round() {
     );
     assert!(
         delta <= 512 * machines as u64,
-        "coordinator link moved {delta} bytes for one described round — \
+        "coordinator link moved {delta} bytes for a two-round batch — \
          not O(machines) summaries"
     );
     assert!(
@@ -213,8 +260,70 @@ fn shuffle_coordinator_link_is_o_machines_per_round() {
     // and the values are still exactly the engine's
     let mut reference = Simulator::new(cfg(machines));
     let r1 = min_hop(&mut reference, "hop1", &g, &vals, true);
-    let r2 = min_hop(&mut reference, "hop2", &g, &r1, true);
-    assert_eq!(h2, r2, "steady-state shuffle hop diverges from inproc");
+    let r3 = fused_two_hop(
+        &mut reference,
+        ("hop2", "hop3"),
+        &g,
+        &csr,
+        &r1,
+        WireFold::min_u32(),
+    );
+    assert_eq!(h3, r3, "steady-state pipelined batch diverges from inproc");
+}
+
+/// The acceptance property of the delta mirror sync: once the workers
+/// hold a generation's mirror, a sync whose value vector changed in few
+/// places ships an index/value patch, not an O(n) re-broadcast.  Over a
+/// 16-machine power-law graph the steady-state sync must cost under 30%
+/// of the full-broadcast baseline — and stay bit-identical to it.
+#[test]
+fn delta_mirror_sync_ships_under_30_percent_of_full_broadcast() {
+    let machines = 16;
+    let n = 4000;
+    let flat = generators::chung_lu(n, 8.0, 2.5, &mut Rng::new(23));
+    let g = ShardedGraph::from_graph(&flat, machines);
+
+    // One steady-state sync per mode: hop, perturb a small fraction of
+    // the output (the shape of a converging label sequence), hop again.
+    // The second hop's mirror sync is the measured quantity.
+    let run = |delta_sync: bool| {
+        let net = NetConfig {
+            delta_sync,
+            ..NetConfig::default()
+        };
+        let mut t = ShuffleTransport::spawn_with(machines, worker_bin(), net)
+            .expect("spawn mesh workers");
+        t.load_graph(&g).expect("distribute shards");
+        let stats = t.stats();
+        let mut sim = Simulator::with_transport(cfg(machines), Box::new(t));
+        let vals: Vec<u32> = (0..n as u32).collect();
+        let h1 = min_hop(&mut sim, "hop1", &g, &vals, true);
+        let mut perturbed = h1.clone();
+        for v in (0..n).step_by(40) {
+            perturbed[v] = perturbed[v].wrapping_add(1);
+        }
+        let before = stats.sync_bytes.load(Ordering::Relaxed);
+        let h2 = min_hop(&mut sim, "hop2", &g, &perturbed, true);
+        let synced = stats.sync_bytes.load(Ordering::Relaxed) - before;
+        let deltas = stats.delta_syncs.load(Ordering::Relaxed);
+        (h2, sim.metrics.rounds, synced, deltas)
+    };
+    let (h_full, r_full, sync_full, d_full) = run(false);
+    let (h_delta, r_delta, sync_delta, d_delta) = run(true);
+
+    // the encoding is invisible to the model
+    assert_eq!(h_full, h_delta, "delta-synced hop diverges from full-broadcast");
+    assert_eq!(r_full, r_delta, "per-round metrics diverge across sync encodings");
+    assert_eq!(d_full, 0, "deltas disabled must never ship a StateDelta");
+    assert!(d_delta >= 1, "steady-state sync must take the delta path");
+
+    // and the delta is the claimed byte win
+    assert!(sync_full > 0, "baseline run must re-broadcast the mirror");
+    assert!(
+        sync_delta * 10 < sync_full * 3,
+        "steady-state delta sync moved {sync_delta} bytes — \
+         not under 30% of the {sync_full}-byte full broadcast"
+    );
 }
 
 #[test]

@@ -481,6 +481,56 @@ fn shuffle_killed_workers_recover_and_the_hop_is_bit_identical() {
 }
 
 #[test]
+fn shuffle_mid_batch_kill_replays_the_whole_batch_and_charges_rounds_once() {
+    // a worker dies while serving round 2 of a pipelined two-round batch
+    // (`kill:w1@round=3`: round 1 is the warm-up hop, the batch is rounds
+    // 2 and 3): recovery must replay the WHOLE batch — the descriptor
+    // frame ships again — yet labels and per-round metrics must stay
+    // bit-identical to an undisturbed in-process run
+    use lcc::cc::common::{fused_two_hop, min_hop};
+    use lcc::graph::Csr;
+    use lcc::mpc::WireFold;
+    let g = small_graph(2);
+    let vals: Vec<u32> = (0..g.num_vertices() as u32).map(|v| v * 7 % 13).collect();
+    let csr = Csr::build_sharded(&g);
+    let mpc = || MpcConfig {
+        machines: 2,
+        space_per_machine: None,
+        spill_budget: None,
+        threads: 1,
+    };
+    let mut sim_ref = Simulator::new(mpc());
+    let w1 = min_hop(&mut sim_ref, "hop1", &g, &vals, true);
+    let want = fused_two_hop(&mut sim_ref, ("hop2", "hop3"), &g, &csr, &w1, WireFold::min_u32());
+
+    let mut cfg = net::NetConfig::from_env();
+    cfg.fault_plan = Some("kill:w1@round=3".into());
+    let mut t = ShuffleTransport::spawn_with(2, worker_bin(), cfg).expect("spawn");
+    t.load_graph(&g).expect("load");
+    let stats = t.stats();
+    let mut sim = Simulator::with_transport(mpc(), Box::new(t));
+    let h1 = min_hop(&mut sim, "hop1", &g, &vals, true);
+    let got = fused_two_hop(&mut sim, ("hop2", "hop3"), &g, &csr, &h1, WireFold::min_u32());
+
+    assert_eq!(got, want, "recovered batch diverged");
+    assert_eq!(
+        sim.metrics.rounds, sim_ref.metrics.rounds,
+        "replayed batch rounds must be charged exactly once"
+    );
+    assert!(
+        !sim.metrics.recovery.events.is_empty(),
+        "the mid-batch kill must be logged as a recovery event"
+    );
+    assert_eq!(
+        stats
+            .hop_batches
+            .load(std::sync::atomic::Ordering::Relaxed),
+        2,
+        "recovery must re-ship the whole descriptor batch, not a suffix"
+    );
+}
+
+#[test]
 fn shuffle_lying_hop_load_is_an_accounting_mismatch() {
     let (mut t, mut peer) = shuffle_pair();
     let handle = std::thread::spawn(move || {
@@ -490,6 +540,7 @@ fn shuffle_lying_hop_load_is_an_accounting_mismatch() {
         let mut body = Vec::new();
         body.extend_from_slice(&999u64.to_le_bytes()); // lie about the load
         body.extend_from_slice(&0u64.to_le_bytes());
+        body.extend_from_slice(&0u64.to_le_bytes()); // mesh byte meter
         peer.send(FrameKind::HopAck, hop.seq, &body);
         peer.serve_shutdown();
     });
@@ -528,6 +579,7 @@ fn shuffle_diverging_fold_checksum_is_a_protocol_error() {
         let mut body = Vec::new();
         body.extend_from_slice(&24u64.to_le_bytes()); // load is right...
         body.extend_from_slice(&0xDEADu64.to_le_bytes()); // ...fold is not
+        body.extend_from_slice(&0u64.to_le_bytes()); // mesh byte meter
         peer.send(FrameKind::HopAck, hop.seq, &body);
         peer.serve_shutdown();
     });
@@ -727,6 +779,7 @@ fn shuffle_corrupted_peer_frame_is_typed() {
         let mut body = Vec::new();
         body.extend_from_slice(&0u64.to_le_bytes());
         body.extend_from_slice(&0u64.to_le_bytes());
+        body.extend_from_slice(&0u64.to_le_bytes()); // mesh byte meter
         net::write_frame(&mut w, FrameKind::HopAck, hop.seq, &body).unwrap();
 
         // the real worker's WorkerErr goes to the coordinator; we just

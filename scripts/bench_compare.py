@@ -12,6 +12,9 @@ Gate: fail (exit 1) on a >25% regression in any of
     value.  The field is `null` (or absent in pre-PR8 artifacts) on
     platforms without /proc VmHWM; such pairs are skipped with a note,
     never compared against 0.
+  * mesh bytes — `round_breakdown.mesh.{sync_bytes,mesh_bytes}` when both
+    artifacts record the same shuffle run (same algo/machines/transport):
+    a sync-byte blow-up means the delta mirror path stopped engaging.
 
 Baselines that are missing or still `pending-first-measurement` produce a
 warning and exit 0 — the gate arms itself the first time CI lands real
@@ -67,6 +70,13 @@ def breakdown_key(doc):
     key = (bd.get("algo"), bd.get("machines"), bd.get("transport"))
     rounds = bd.get("rounds")
     return key, len(rounds) if isinstance(rounds, list) else None
+
+
+def mesh_counters(doc):
+    """round_breakdown.mesh dict, or None off the shuffle transport."""
+    bd = doc.get("round_breakdown")
+    mesh = bd.get("mesh") if isinstance(bd, dict) else None
+    return mesh if isinstance(mesh, dict) else None
 
 
 def main(argv):
@@ -132,6 +142,17 @@ def main(argv):
                     f"round count: {fresh_rounds} vs baseline {base_rounds} "
                     f"({path}) — {fresh_rounds / base_rounds:.2f}x"
                 )
+        fresh_mesh, base_mesh = mesh_counters(fresh), mesh_counters(base)
+        if base_bd_key is not None and base_bd_key == fresh_bd_key and fresh_mesh and base_mesh:
+            for key in ("sync_bytes", "mesh_bytes"):
+                fv, bv = fresh_mesh.get(key), base_mesh.get(key)
+                if isinstance(fv, (int, float)) and isinstance(bv, (int, float)) and bv > 0:
+                    compared += 1
+                    if fv > bv * THRESHOLD:
+                        regressions.append(
+                            f"mesh {key}: {fv} vs baseline {bv} ({path}) — "
+                            f"{fv / bv:.2f}x"
+                        )
 
     if compared == 0:
         if measured_baselines > 0:

@@ -29,7 +29,12 @@ import json
 import os
 import sys
 
-ARTIFACTS = ["BENCH_PR2.json", "BENCH_SPILL.json", "BENCH_TRANSPORT.json"]
+ARTIFACTS = [
+    "BENCH_PR2.json",
+    "BENCH_SPILL.json",
+    "BENCH_TRANSPORT.json",
+    "BENCH_MESH.json",
+]
 SEED_BASELINE = "BENCH_PR1.json"
 EXPERIMENTS = "EXPERIMENTS.md"
 BEGIN, END = "<!-- BENCH:BEGIN -->", "<!-- BENCH:END -->"
@@ -111,6 +116,22 @@ def trajectory_table(root):
                     dp.get("shard_bytes_copied", 0),
                     dp.get("shard_copies", 0),
                     dp.get("allocs", 0),
+                )
+            )
+        mesh = (doc.get("round_breakdown") or {}).get("mesh")
+        if isinstance(mesh, dict):
+            dp_lines.append(
+                "- `{}` mesh data plane: {} sync bytes over {} sync(s) "
+                "({} delta), {} worker-mesh bytes, {} hop(s) in "
+                "{} batch(es), {} rewire(s)".format(
+                    name,
+                    mesh.get("sync_bytes", 0),
+                    mesh.get("state_syncs", 0),
+                    mesh.get("delta_syncs", 0),
+                    mesh.get("mesh_bytes", 0),
+                    mesh.get("hops", 0),
+                    mesh.get("hop_batches", 0),
+                    mesh.get("rewires", 0),
                 )
             )
     if rows == 0:
