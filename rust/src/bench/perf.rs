@@ -180,7 +180,8 @@ pub fn round_breakdown(machines: usize, transport: TransportMode) -> Option<crat
                 .set("sync_bytes", ms.sync_bytes)
                 .set("mesh_bytes", ms.mesh_bytes)
                 .set("rewires", ms.rewires)
-                .set("custody_loads", ms.custody_loads),
+                .set("custody_loads", ms.custody_loads)
+                .set("worker_threads", ms.worker_threads),
             None => Json::Null,
         },
     );
@@ -194,6 +195,69 @@ pub fn round_breakdown(machines: usize, transport: TransportMode) -> Option<crat
             None => Json::Null,
         },
     ))
+}
+
+/// `lcc perf --thread-sweep`: the round breakdown re-run at worker
+/// thread counts 1, 2, 4 and 8, one JSON row per count.  Each row sums
+/// the per-round generate/shuffle/fold wall-clock so
+/// `scripts/bench_compare.py` can gate "threads > 1 must not regress
+/// generate or fold versus threads = 1" inside a single artifact — the
+/// only comparison that is hardware-apples-to-apples.  The thread count
+/// flows to the spawned fleet via `LCC_WORKER_THREADS` (restored
+/// afterwards); rows whose fleet failed to spawn are skipped, and
+/// `reported_threads` echoes what the workers' Hello frames actually
+/// claimed (null off the shuffle transport, where the env is inert).
+pub fn thread_sweep(machines: usize, transport: TransportMode) -> crate::util::json::Json {
+    use crate::util::json::Json;
+    let sum_ms = |doc: &Json, key: &str| -> f64 {
+        doc.get("rounds")
+            .and_then(|j| j.as_arr())
+            .map(|rounds| {
+                rounds
+                    .iter()
+                    .filter_map(|r| r.get(key).and_then(|j| j.as_f64()))
+                    .sum()
+            })
+            .unwrap_or(0.0)
+    };
+    let saved = std::env::var("LCC_WORKER_THREADS").ok();
+    let mut rows = Vec::new();
+    for threads in [1usize, 2, 4, 8] {
+        std::env::set_var("LCC_WORKER_THREADS", threads.to_string());
+        let Some(doc) = round_breakdown(machines, transport) else {
+            eprintln!("[perf] thread sweep: fleet spawn failed at {threads} threads; row skipped");
+            continue;
+        };
+        let reported = doc
+            .get("mesh")
+            .and_then(|m| m.get("worker_threads"))
+            .and_then(|j| j.as_i64());
+        let nrounds = doc
+            .get("rounds")
+            .and_then(|j| j.as_arr())
+            .map(|a| a.len())
+            .unwrap_or(0);
+        rows.push(
+            Json::obj()
+                .set("worker_threads", threads)
+                .set(
+                    "reported_threads",
+                    match reported {
+                        Some(t) => Json::from(t),
+                        None => Json::Null,
+                    },
+                )
+                .set("rounds", nrounds)
+                .set("gen_ms", sum_ms(&doc, "gen_ms"))
+                .set("shuffle_ms", sum_ms(&doc, "shuffle_ms"))
+                .set("fold_ms", sum_ms(&doc, "fold_ms")),
+        );
+    }
+    match saved {
+        Some(v) => std::env::set_var("LCC_WORKER_THREADS", v),
+        None => std::env::remove_var("LCC_WORKER_THREADS"),
+    }
+    Json::Arr(rows)
 }
 
 /// L3 primitive: one min-hop MPC round over a sharded G(n,p) graph,
@@ -599,5 +663,32 @@ mod tests {
         // round-trips through the parser
         let text = doc.pretty();
         assert!(crate::util::json::parse(&text).is_ok());
+    }
+
+    #[test]
+    fn thread_sweep_rows_are_well_formed() {
+        // Inproc never spawns a fleet, so the sweep is pure schema here:
+        // four rows, the env knob inert, reported_threads null.
+        let before = std::env::var("LCC_WORKER_THREADS").ok();
+        let sweep = thread_sweep(2, TransportMode::InProc);
+        let rows = sweep.as_arr().expect("sweep is an array");
+        assert_eq!(rows.len(), 4, "one row per thread count");
+        let mut want = [1i64, 2, 4, 8].iter();
+        for row in rows {
+            assert_eq!(
+                row.get("worker_threads").and_then(|j| j.as_i64()),
+                Some(*want.next().unwrap())
+            );
+            assert!(matches!(
+                row.get("reported_threads"),
+                Some(crate::util::json::Json::Null)
+            ));
+            assert!(row.get("rounds").and_then(|j| j.as_i64()).unwrap() > 0);
+            for k in ["gen_ms", "shuffle_ms", "fold_ms"] {
+                assert!(row.get(k).and_then(|j| j.as_f64()).is_some(), "missing {k}");
+            }
+        }
+        // the sweep restores the env it borrowed
+        assert_eq!(std::env::var("LCC_WORKER_THREADS").ok(), before);
     }
 }

@@ -82,6 +82,11 @@ pub struct RunConfig {
     /// Long-lived sessions ([`Driver::into_session`]) recontract
     /// indefinitely, so retention is what bounds their checkpoint disk.
     pub keep_generations: Option<usize>,
+    /// Data-plane threads per spawned worker (`--worker-threads`,
+    /// shipped as `LCC_WORKER_THREADS`); `None` = environment or the
+    /// serial default of 1.  Bit-identical outputs at every value —
+    /// this is pure wall-clock parallelism inside the worker processes.
+    pub worker_threads: Option<usize>,
 }
 
 impl Default for RunConfig {
@@ -108,6 +113,7 @@ impl Default for RunConfig {
             respawn_budget: None,
             checkpoint_dir: None,
             keep_generations: None,
+            worker_threads: None,
         }
     }
 }
@@ -269,6 +275,9 @@ impl Driver {
             }
             if let Some(k) = self.cfg.keep_generations {
                 c.keep_generations = k.max(1);
+            }
+            if let Some(t) = self.cfg.worker_threads {
+                c.worker_threads = t.max(1);
             }
             c
         };

@@ -151,7 +151,8 @@ impl Report {
                         .set("sync_bytes", m.sync_bytes)
                         .set("mesh_bytes", m.mesh_bytes)
                         .set("rewires", m.rewires)
-                        .set("custody_loads", m.custody_loads),
+                        .set("custody_loads", m.custody_loads)
+                        .set("worker_threads", m.worker_threads),
                 },
             )
     }

@@ -27,6 +27,23 @@
 //! tagged, ack — the receiver-side accounting the coordinator validates
 //! against the model charge.
 //!
+//! **Parallel data plane.**  `LCC_WORKER_THREADS` (the
+//! `--worker-threads` flag, shipped through the spawn environment and
+//! echoed back in the Hello) sizes a per-process [`WorkerPool`] that
+//! every worker-native round runs on, **bit-identically by
+//! construction**: generation splits the custody cursor into contiguous
+//! per-thread row ranges ([`chunk_range`]) bucketed into thread-local
+//! per-peer buffers that are shipped in chunk order — every bucket's
+//! byte stream equals the serial cursor-order stream; the fold
+//! partitions the received payloads by key range, folds sub-ranges on
+//! the pool, and concatenates the partial images in key order — the
+//! exact bytes of the serial ascending-key fold (see
+//! [`net::fold_wire_payload_in_range`]).  Sends are staggered
+//! `(my + j) % p` so the fleet doesn't convoy on worker 0, and inbound
+//! `PeerMsgs`/`PeerFold` frames are drained opportunistically between
+//! sends instead of strictly after them.  `worker_threads == 1` keeps
+//! the serial hot path (the pool runs jobs inline).
+//!
 //! Protocol violations the worker detects are answered with a
 //! `WorkerErr` frame (surfaced as typed [`TransportError::Protocol`]);
 //! I/O failures end the process.  A dead peer is an immediate typed
@@ -59,7 +76,7 @@ use crate::graph::Vertex;
 use crate::mpc::net::{
     self, BodyReader, Frame, FrameKind, PROTO_VERSION,
 };
-use crate::mpc::pool::chunk_range;
+use crate::mpc::pool::{chunk_range, WorkerPool};
 use crate::mpc::simulator::machine_of;
 use crate::mpc::transport::{TransportError, WireOp};
 
@@ -129,6 +146,13 @@ impl Mesh {
             }),
         }
     }
+
+    /// Take one peer event if one is already queued, without blocking —
+    /// the opportunistic drain the send loops run between frame writes
+    /// so receive processing overlaps generation and shipping.
+    fn try_recv(&self) -> Option<PeerEvent> {
+        self.rx.try_recv().ok()
+    }
 }
 
 /// Custody of one shard generation, held as its **framed file image**:
@@ -184,38 +208,67 @@ struct WorkerState {
     mirror: Vec<u8>,
     /// Wire width of one mirror value (0 = no mirror yet).
     mirror_vb: usize,
-    /// Retained per-peer write buffers of the round shuffles
-    /// (clear-don't-drop, capacity-capped like the spill layer's
+    /// Data-plane parallelism: how many contiguous chunks every
+    /// worker-native round splits its generate/fold work into
+    /// (`LCC_WORKER_THREADS`, clamped ≥ 1).  Chunk-order merges keep the
+    /// output bytes identical for every value.
+    threads: usize,
+    /// The round pool the chunks run on; zero workers (inline execution)
+    /// when `threads == 1`, so the single-threaded hot path stays free
+    /// of queue traffic.
+    pool: WorkerPool,
+    /// Retained write buffers of the round shuffles, flat across chunk
+    /// sets (clear-don't-drop, capacity-capped like the spill layer's
     /// `READ_BUF`): bucketing a round reuses last round's allocations
-    /// instead of growing p fresh vectors per round.
+    /// instead of growing `threads × p` fresh vectors per round.
     bucket_bufs: Vec<Vec<u8>>,
 }
 
-/// Retained-capacity cap of one reusable per-peer write buffer — the
-/// same bound as the spill layer's `READ_BUF_RETAIN`: one pathological
-/// round must not pin its peak allocation for the process lifetime.
+/// Retained-capacity cap of one reusable write buffer — the same bound
+/// as the spill layer's `READ_BUF_RETAIN`: one pathological round must
+/// not pin its peak allocation for the process lifetime.
 const WRITE_BUF_RETAIN: usize = 8 << 20;
 
-/// Take `p` cleared buckets out of the pool (reusing retained capacity).
-fn take_buckets(pool: &mut Vec<Vec<u8>>, p: usize) -> Vec<Vec<u8>> {
-    let mut buckets = std::mem::take(pool);
-    buckets.resize_with(p, Vec::new);
-    for b in &mut buckets {
-        b.clear();
+/// Retained-capacity cap across the **whole** bucket pool.  The pool
+/// holds up to `2 · threads · p` buffers; capping each one alone still
+/// lets a skewed round pin `O(threads · p · WRITE_BUF_RETAIN)` RAM for
+/// the process lifetime, so the put-back walks a shared budget and
+/// shrinks everything past it to zero retained capacity.
+const WRITE_BUF_RETAIN_TOTAL: usize = 32 << 20;
+
+/// Take `chunks` cleared bucket sets of `p` buffers each out of the
+/// flat retained pool (reusing capacity; missing buffers start fresh).
+fn take_bucket_sets(pool: &mut Vec<Vec<u8>>, chunks: usize, p: usize) -> Vec<Vec<Vec<u8>>> {
+    let mut flat = std::mem::take(pool);
+    flat.resize_with(chunks * p, Vec::new);
+    let mut sets = Vec::with_capacity(chunks);
+    let mut rest = flat;
+    for _ in 0..chunks {
+        let mut set = rest.split_off(p);
+        std::mem::swap(&mut set, &mut rest);
+        for b in &mut set {
+            b.clear();
+        }
+        sets.push(set);
     }
-    buckets
+    sets
 }
 
-/// Return buckets to the pool, clearing and capping each.  Error paths
+/// Return bucket sets to the flat pool, clearing every buffer and
+/// capping retained capacity per buffer **and** in total.  Error paths
 /// may skip the put-back — the next take simply starts fresh.
-fn put_buckets(pool: &mut Vec<Vec<u8>>, mut buckets: Vec<Vec<u8>>) {
-    for b in &mut buckets {
+fn put_bucket_sets(pool: &mut Vec<Vec<u8>>, sets: Vec<Vec<Vec<u8>>>) {
+    let mut flat: Vec<Vec<u8>> = sets.into_iter().flatten().collect();
+    let mut budget = WRITE_BUF_RETAIN_TOTAL;
+    for b in &mut flat {
         b.clear();
-        if b.capacity() > WRITE_BUF_RETAIN {
-            b.shrink_to(WRITE_BUF_RETAIN);
+        let keep = b.capacity().min(WRITE_BUF_RETAIN).min(budget);
+        if b.capacity() > keep {
+            b.shrink_to(keep);
         }
+        budget = budget.saturating_sub(b.capacity());
     }
-    *pool = buckets;
+    *pool = flat;
 }
 
 /// Connect to the coordinator and serve until shutdown (the `lcc worker`
@@ -230,8 +283,22 @@ pub fn run_worker(connect: &str) -> Result<(), TransportError> {
 }
 
 /// Serve the worker protocol over an established stream (exposed so
-/// tests can run a worker against an in-test coordinator).
+/// tests can run a worker against an in-test coordinator).  The
+/// data-plane thread count comes from `LCC_WORKER_THREADS` (shipped by
+/// the coordinator's spawn environment; absent = serial).
 pub fn serve(stream: TcpStream) -> Result<(), TransportError> {
+    let threads = std::env::var("LCC_WORKER_THREADS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&t| t > 0)
+        .unwrap_or(1);
+    serve_with_threads(stream, threads)
+}
+
+/// [`serve`] with an explicit data-plane thread count (tests drive the
+/// parallel rounds without touching process environment).
+pub fn serve_with_threads(stream: TcpStream, threads: usize) -> Result<(), TransportError> {
+    let threads = threads.max(1);
     stream.set_nodelay(true).map_err(|e| TransportError::Io {
         worker: None,
         op: "set nodelay",
@@ -270,11 +337,13 @@ pub fn serve(stream: TcpStream) -> Result<(), TransportError> {
         .port();
 
     // handshake: version + our pid (the coordinator aligns its spawned
-    // children to worker ids by it) + our mesh port
-    let mut hello = Vec::with_capacity(10);
+    // children to worker ids by it) + our mesh port + the data-plane
+    // thread count this process will actually run (v5)
+    let mut hello = Vec::with_capacity(14);
     hello.extend_from_slice(&PROTO_VERSION.to_le_bytes());
     hello.extend_from_slice(&std::process::id().to_le_bytes());
     hello.extend_from_slice(&mesh_port.to_le_bytes());
+    hello.extend_from_slice(&(threads as u32).to_le_bytes());
     net::write_frame(&mut writer, FrameKind::Hello, 0, &hello)?;
     let assign = net::read_frame(&mut reader)?;
     if assign.kind != FrameKind::Assign {
@@ -301,6 +370,10 @@ pub fn serve(stream: TcpStream) -> Result<(), TransportError> {
         mesh: None,
         mirror: Vec::new(),
         mirror_vb: 0,
+        threads,
+        // threads == 1 keeps a zero-worker pool: run_jobs executes
+        // inline, so the serial path never pays queue traffic
+        pool: WorkerPool::new(if threads <= 1 { 0 } else { threads }),
         bucket_bufs: Vec::new(),
     };
     // this worker's slice of the deterministic fault plan (the id is
@@ -1062,6 +1135,47 @@ fn recv_for(
     }
 }
 
+/// File every already-arrived mesh event of round `seq` into `inbox`
+/// without blocking — the compute/comms overlap: the send loops call
+/// this between frame writes (and `hop_core` before generation), so a
+/// fast peer's `PeerMsgs`/`PeerFold` is absorbed while this worker is
+/// still producing its own, instead of queueing until the tail wait.
+/// Later-round frames of a pipelined batch stash exactly as in
+/// [`recv_for`]; peer errors surface immediately.
+fn drain_ready(
+    mesh: &Mesh,
+    stash: &mut Vec<(usize, Frame)>,
+    inbox: &mut RoundInbox,
+    seq: u64,
+    max_seq: u64,
+) -> Result<(), TransportError> {
+    while let Some(pos) = stash.iter().position(|(_, f)| f.seq == seq) {
+        let (from, frame) = stash.remove(pos);
+        inbox.file(seq, PeerEvent { from, frame: Ok(frame) })?;
+    }
+    while let Some(ev) = mesh.try_recv() {
+        if let Ok(frame) = &ev.frame {
+            if frame.seq > seq && frame.seq <= max_seq {
+                let frame = ev.frame.expect("checked Ok");
+                stash.push((ev.from, frame));
+                continue;
+            }
+        }
+        inbox.file(seq, ev)?;
+    }
+    Ok(())
+}
+
+/// One parallel-generate chunk of a hop round: a contiguous sub-cursor
+/// of the custody shard, or a contiguous sub-range of the primary-chunk
+/// self-messages.  Jobs are submitted edge chunks first, self chunks
+/// after, each in range order — so per-bucket concatenation in job
+/// order reproduces the serial cursor-then-self byte stream exactly.
+enum GenSpan<'a> {
+    Edges(spill::ShardCursor<'a>),
+    Selfs(usize, usize),
+}
+
 /// The body of one hop round at mesh sequence `seq`; `max_seq` bounds
 /// the stash window for pipelined batches.  Returns
 /// `(received_bytes, fold_checksum, mesh_bytes_sent)`.
@@ -1091,92 +1205,164 @@ fn hop_core(
         return Err(proto("hop before the peer mesh is up".into()));
     }
 
-    // ---- generate: the owned shard × the mirror ------------------------
+    // ---- generate: the owned shard × the mirror, chunked ---------------
     // The custody image is walked in place — no row materialization.
-    // Buckets come from the retained pool: round-over-round the write
-    // buffers keep their high-water capacity instead of reallocating.
-    let mut buckets = take_buckets(&mut state.bucket_bufs, p);
+    // Each pool job buckets one contiguous row range (then one self
+    // sub-range) into its own per-peer buffer set; buffer sets come from
+    // the retained pool, so round-over-round the write buffers keep
+    // their (total-capped) capacity instead of reallocating.  Per-bucket
+    // concatenation in job order reproduces the serial byte stream for
+    // every thread count.
+    let t = state.threads.max(1);
+    let sets_needed = if include_self { 2 * t } else { t };
+    let taken = take_bucket_sets(&mut state.bucket_bufs, sets_needed, p);
     let cursor = custody.cursor();
-    let mirror = &state.mirror;
-    let val = |v: Vertex| &mirror[v as usize * vb..(v as usize + 1) * vb];
-    let mut push = |buckets: &mut Vec<Vec<u8>>, key: Vertex, value_of: Vertex| {
-        let b = &mut buckets[machine_of(key as u64, p)];
-        b.extend_from_slice(&(key as u64).to_le_bytes());
-        b.extend_from_slice(val(value_of));
-    };
-    for (u, v) in cursor.iter() {
-        if (u as usize) >= n || (v as usize) >= n {
-            return Err(proto(format!(
-                "edge ({u},{v}) outside the {n}-vertex mirror"
-            )));
+    let rows = cursor.len();
+    let mut specs: Vec<(GenSpan<'_>, Vec<Vec<u8>>)> = Vec::with_capacity(sets_needed);
+    {
+        let mut taken = taken.into_iter();
+        for i in 0..t {
+            let (lo, hi) = chunk_range(rows, t, i);
+            specs.push((
+                GenSpan::Edges(cursor.slice(lo, hi)),
+                taken.next().expect("one set per chunk"),
+            ));
         }
-        push(&mut buckets, u, v);
-        push(&mut buckets, v, u);
+        if include_self {
+            let (sa, sb) = chunk_range(n, p, my);
+            for i in 0..t {
+                let (lo, hi) = chunk_range(sb - sa, t, i);
+                specs.push((
+                    GenSpan::Selfs(sa + lo, sa + hi),
+                    taken.next().expect("one set per chunk"),
+                ));
+            }
+        }
     }
-    if include_self {
-        let (sa, sb) = chunk_range(n, p, my);
-        for v in sa..sb {
-            push(&mut buckets, v as Vertex, v as Vertex);
-        }
+    let mirror = &state.mirror;
+    let jobs: Vec<_> = specs
+        .into_iter()
+        .map(|(span, mut set)| {
+            move || -> Result<Vec<Vec<u8>>, String> {
+                let mut push = |set: &mut Vec<Vec<u8>>, key: Vertex, value_of: Vertex| {
+                    let b = &mut set[machine_of(key as u64, p)];
+                    b.extend_from_slice(&(key as u64).to_le_bytes());
+                    b.extend_from_slice(
+                        &mirror[value_of as usize * vb..(value_of as usize + 1) * vb],
+                    );
+                };
+                match span {
+                    GenSpan::Edges(sub) => {
+                        for (u, v) in sub.iter() {
+                            if (u as usize) >= n || (v as usize) >= n {
+                                return Err(format!(
+                                    "edge ({u},{v}) outside the {n}-vertex mirror"
+                                ));
+                            }
+                            push(&mut set, u, v);
+                            push(&mut set, v, u);
+                        }
+                    }
+                    GenSpan::Selfs(lo, hi) => {
+                        for v in lo..hi {
+                            push(&mut set, v as Vertex, v as Vertex);
+                        }
+                    }
+                }
+                Ok(set)
+            }
+        })
+        .collect();
+    // results come back in job order = range order; the first error in
+    // that order is exactly the error the serial walk would hit first
+    let mut sets: Vec<Vec<Vec<u8>>> = Vec::with_capacity(sets_needed);
+    for r in state.pool.run_jobs(jobs) {
+        sets.push(r.map_err(proto)?);
     }
 
     // ---- shuffle: every bucket straight to its owner -------------------
+    // Buckets ship as chunk-slice lists (`write_frame_slices` — wire
+    // bytes equal the serial single-buffer frame), staggered
+    // `(my + jj) % p` so the fleet doesn't convoy on worker 0, with an
+    // opportunistic inbox drain between writes.  The own bucket never
+    // moves: its chunk slices feed the fold in place.
     let mut mesh_sent = 0u64;
     let mut inbox = RoundInbox::new(p, my);
-    // The own bucket's allocation migrates into the inbox (and is freed
-    // with it) — only the p-1 peer buckets return to the pool.
-    inbox.msgs[my] = Some(std::mem::take(&mut buckets[my]));
     sent.msgs.resize(p, false);
     sent.fold.resize(p, false);
     if let Some(mesh) = state.mesh.as_mut() {
-        for (j, bucket) in buckets.iter().enumerate() {
-            if j == my {
-                continue;
-            }
+        drain_ready(mesh, stash, &mut inbox, seq, max_seq)?;
+        for jj in 1..p {
+            let j = (my + jj) % p;
             if let Some(link) = mesh.links[j].as_mut() {
-                net::write_frame(link, FrameKind::PeerMsgs, seq, bucket)
+                let parts: Vec<&[u8]> = sets.iter().map(|s| s[j].as_slice()).collect();
+                let len: u64 = parts.iter().map(|b| b.len() as u64).sum();
+                net::write_frame_slices(link, FrameKind::PeerMsgs, seq, &parts)
                     .map_err(|e| e.for_worker(j))?;
                 sent.msgs[j] = true;
-                mesh_sent += net::FRAME_HEADER_BYTES + bucket.len() as u64;
+                mesh_sent += net::FRAME_HEADER_BYTES + len;
             }
+            drain_ready(mesh, stash, &mut inbox, seq, max_seq)?;
         }
         while inbox.want_msgs > 0 {
             let ev = recv_for(mesh, stash, seq, max_seq)?;
             inbox.file(seq, ev)?;
         }
     }
-    put_buckets(&mut state.bucket_bufs, buckets);
 
     // ---- fold the keys this machine owns -------------------------------
-    let received: u64 = inbox
-        .msgs
-        .iter()
-        .map(|m| m.as_ref().map(|b| b.len() as u64).unwrap_or(0))
-        .sum();
-    let mut all = Vec::with_capacity(received as usize);
-    for m in inbox.msgs.iter_mut() {
-        all.extend_from_slice(m.as_ref().expect("msgs complete"));
-        *m = None; // free as we go
+    // Zero staging: the receive volume is folded in place — own chunk
+    // buckets plus peer frame bodies as one multi-slice part list.
+    // `threads > 1` folds disjoint key ranges on the pool and
+    // concatenates the partial images in key order — byte-identical to
+    // the serial ascending-key fold; the last range runs unbounded so
+    // any garbage key (≥ n, caught at mirror apply) folds exactly once.
+    let mut parts: Vec<&[u8]> = Vec::with_capacity(sets.len() + p);
+    for s in &sets {
+        parts.push(s[my].as_slice());
     }
-    let folded = net::fold_wire_payload(op, &all)
+    for (j, m) in inbox.msgs.iter().enumerate() {
+        if j != my {
+            parts.push(m.as_deref().expect("msgs complete"));
+        }
+    }
+    let received: u64 = parts.iter().map(|b| b.len() as u64).sum();
+    net::validate_fold_parts(op, &parts)
         .map_err(|detail| proto(format!("hop fold: {detail}")))?;
-    drop(all);
+    let folded = if t <= 1 {
+        net::fold_wire_payload_in_range(op, &parts, 0, None)
+    } else {
+        let parts_ref = &parts;
+        let jobs: Vec<_> = (0..t)
+            .map(|i| {
+                let (lo, hi) = chunk_range(n, t, i);
+                let hi = if i + 1 == t { None } else { Some(hi as u64) };
+                move || net::fold_wire_payload_in_range(op, parts_ref, lo as u64, hi)
+            })
+            .collect();
+        let folds = state.pool.run_jobs(jobs);
+        let mut folded = Vec::with_capacity(folds.iter().map(Vec::len).sum());
+        for f in &folds {
+            folded.extend_from_slice(f);
+        }
+        folded
+    };
+    put_bucket_sets(&mut state.bucket_bufs, sets);
     let mut h = Fnv1a::new();
     h.update(&folded);
     let checksum = h.finish();
 
     // ---- all-gather the fold images: every mirror stays current --------
     if let Some(mesh) = state.mesh.as_mut() {
-        for j in 0..p {
-            if j == my {
-                continue;
-            }
+        for jj in 1..p {
+            let j = (my + jj) % p;
             if let Some(link) = mesh.links[j].as_mut() {
                 net::write_frame(link, FrameKind::PeerFold, seq, &folded)
                     .map_err(|e| e.for_worker(j))?;
                 sent.fold[j] = true;
                 mesh_sent += net::FRAME_HEADER_BYTES + folded.len() as u64;
             }
+            drain_ready(mesh, stash, &mut inbox, seq, max_seq)?;
         }
         while inbox.want_folds > 0 {
             let ev = recv_for(mesh, stash, seq, max_seq)?;
@@ -1298,10 +1484,6 @@ fn rewire_inner(
         return Err(proto("rewire needs a u32 map mirror".into()));
     }
     let map_len = state.mirror.len() / 4;
-    let mirror = &state.mirror;
-    let map_at = |v: usize| -> u32 {
-        u32::from_le_bytes(mirror[v * 4..v * 4 + 4].try_into().unwrap())
-    };
     let Some(custody) = state.shard.as_ref() else {
         return Err(proto("rewire before shard custody".into()));
     };
@@ -1310,26 +1492,51 @@ fn rewire_inner(
     }
 
     // ---- relabel + re-bucket by the next generation's ownership --------
-    let mut buckets = take_buckets(&mut state.bucket_bufs, p);
+    // Chunked like hop generation: each pool job relabels one contiguous
+    // row range into its own bucket set.  Order never matters past this
+    // point — the adopting side sorts + dedups — but chunk-order merges
+    // keep the shipped bytes identical across thread counts anyway.
+    let t = state.threads.max(1);
+    let taken = take_bucket_sets(&mut state.bucket_bufs, t, p);
     let cursor = custody.cursor();
-    for (u, v) in cursor.iter() {
-        if (u as usize) >= map_len || (v as usize) >= map_len {
-            return Err(proto(format!("edge ({u},{v}) outside the map")));
-        }
-        let (nu, nv) = (map_at(u as usize), map_at(v as usize));
-        if nu == u32::MAX || nv == u32::MAX {
-            return Err(proto(format!("map drops endpoint of live edge ({u},{v})")));
-        }
-        if nu == nv {
-            continue; // self-loop vanishes
-        }
-        let (a, b) = if nu < nv { (nu, nv) } else { (nv, nu) };
-        let bucket = &mut buckets[machine_of(a as u64, p)];
-        bucket.extend_from_slice(&a.to_le_bytes());
-        bucket.extend_from_slice(&b.to_le_bytes());
+    let rows = cursor.len();
+    let jobs: Vec<_> = taken
+        .into_iter()
+        .enumerate()
+        .map(|(i, mut set)| {
+            let (lo, hi) = chunk_range(rows, t, i);
+            let sub = cursor.slice(lo, hi);
+            let mirror = &state.mirror;
+            move || -> Result<Vec<Vec<u8>>, String> {
+                let map_at = |v: usize| -> u32 {
+                    u32::from_le_bytes(mirror[v * 4..v * 4 + 4].try_into().unwrap())
+                };
+                for (u, v) in sub.iter() {
+                    if (u as usize) >= map_len || (v as usize) >= map_len {
+                        return Err(format!("edge ({u},{v}) outside the map"));
+                    }
+                    let (nu, nv) = (map_at(u as usize), map_at(v as usize));
+                    if nu == u32::MAX || nv == u32::MAX {
+                        return Err(format!("map drops endpoint of live edge ({u},{v})"));
+                    }
+                    if nu == nv {
+                        continue; // self-loop vanishes
+                    }
+                    let (a, b) = if nu < nv { (nu, nv) } else { (nv, nu) };
+                    let bucket = &mut set[machine_of(a as u64, p)];
+                    bucket.extend_from_slice(&a.to_le_bytes());
+                    bucket.extend_from_slice(&b.to_le_bytes());
+                }
+                Ok(set)
+            }
+        })
+        .collect();
+    let mut sets: Vec<Vec<Vec<u8>>> = Vec::with_capacity(t);
+    for r in state.pool.run_jobs(jobs) {
+        sets.push(r.map_err(proto)?);
     }
 
-    ship_and_adopt(state, seq, buckets, new_n, edges_sent)
+    ship_and_adopt(state, seq, sets, new_n, edges_sent)
 }
 
 /// Ship normalized `(a, b)` edge buckets peer-to-peer, merge what this
@@ -1337,34 +1544,62 @@ fn rewire_inner(
 /// the new custody, and build the `RewireAck` body
 /// (`len | checksum | p | peer_counts | mesh_sent`).  Shared by the
 /// map-shipped `Rewire` and the worker-native `GatherRewire` — the two
-/// differ only in how the buckets are generated.
+/// differ only in how the bucket sets are generated.  Buckets arrive as
+/// chunk sets; each peer's frame ships the chunk slices in order
+/// (serial-identical bytes), and the own edges decode straight from
+/// their chunk buffers plus the received frame bodies — no merge-buffer
+/// staging copy on either side of the wire.
 fn ship_and_adopt(
     state: &mut WorkerState,
     seq: u64,
-    mut buckets: Vec<Vec<u8>>,
+    sets: Vec<Vec<Vec<u8>>>,
     new_n: u64,
     edges_sent: &mut Vec<bool>,
 ) -> Result<(Vec<u8>, ShardCustody), TransportError> {
     let p = state.machines as usize;
     let my = state.worker_id as usize;
 
+    // decode one normalized-edge payload slice straight into the merge
+    // vector, enforcing the next-generation invariant per edge; the
+    // canonicalizing sort + dedup below makes decode order irrelevant
+    let mut new_edges: Vec<(Vertex, Vertex)> = Vec::new();
+    let decode_into =
+        |new_edges: &mut Vec<(Vertex, Vertex)>, body: &[u8]| -> Result<(), TransportError> {
+            if body.len() % 8 != 0 {
+                return Err(proto("ragged rewired-edge payload".into()));
+            }
+            new_edges.reserve(body.len() / 8);
+            for pair in body.chunks_exact(8) {
+                let a = u32::from_le_bytes(pair[..4].try_into().unwrap());
+                let b = u32::from_le_bytes(pair[4..].try_into().unwrap());
+                if a >= b || (b as u64) >= new_n || machine_of(a as u64, p) != my {
+                    return Err(proto(format!(
+                        "rewired edge ({a},{b}) violates the next-generation invariant"
+                    )));
+                }
+                new_edges.push((a, b));
+            }
+            Ok(())
+        };
+
     // ---- ship: custody moves peer-to-peer, never via the coordinator ---
-    // The own bucket's allocation migrates into the merge buffer; only
-    // the p-1 peer buckets return to the retained pool.
     let mut mesh_sent = 0u64;
-    let mut own = std::mem::take(&mut buckets[my]);
     edges_sent.resize(p, false);
     if let Some(mesh) = state.mesh.as_mut() {
-        for (j, bucket) in buckets.iter().enumerate() {
-            if j == my {
-                continue;
-            }
+        for jj in 1..p {
+            let j = (my + jj) % p;
             if let Some(link) = mesh.links[j].as_mut() {
-                net::write_frame(link, FrameKind::PeerEdges, seq, bucket)
+                let parts: Vec<&[u8]> = sets.iter().map(|s| s[j].as_slice()).collect();
+                let len: u64 = parts.iter().map(|b| b.len() as u64).sum();
+                net::write_frame_slices(link, FrameKind::PeerEdges, seq, &parts)
                     .map_err(|e| e.for_worker(j))?;
                 edges_sent[j] = true;
-                mesh_sent += net::FRAME_HEADER_BYTES + bucket.len() as u64;
+                mesh_sent += net::FRAME_HEADER_BYTES + len;
             }
+        }
+        // own edges decode while the peers are still shipping theirs
+        for s in &sets {
+            decode_into(&mut new_edges, &s[my])?;
         }
         let mut pending = p - 1;
         while pending > 0 {
@@ -1376,27 +1611,17 @@ fn ship_and_adopt(
                     peer_frame.kind, peer_frame.seq
                 )));
             }
-            own.extend_from_slice(&peer_frame.body);
+            decode_into(&mut new_edges, &peer_frame.body)?;
             pending -= 1;
         }
+    } else {
+        for s in &sets {
+            decode_into(&mut new_edges, &s[my])?;
+        }
     }
-    put_buckets(&mut state.bucket_bufs, buckets);
+    put_bucket_sets(&mut state.bucket_bufs, sets);
 
     // ---- adopt the next generation (canonical order = global dedup) ----
-    if own.len() % 8 != 0 {
-        return Err(proto("ragged rewired-edge payload".into()));
-    }
-    let mut new_edges: Vec<(Vertex, Vertex)> = Vec::with_capacity(own.len() / 8);
-    for pair in own.chunks_exact(8) {
-        let a = u32::from_le_bytes(pair[..4].try_into().unwrap());
-        let b = u32::from_le_bytes(pair[4..].try_into().unwrap());
-        if a >= b || (b as u64) >= new_n || machine_of(a as u64, p) != my {
-            return Err(proto(format!(
-                "rewired edge ({a},{b}) violates the next-generation invariant"
-            )));
-        }
-        new_edges.push((a, b));
-    }
     new_edges.sort_unstable();
     new_edges.dedup();
     let stats = ShardStats::from_edges(&new_edges, p, my);
@@ -1481,10 +1706,6 @@ fn gather_rewire_inner(
         return Err(proto("gather rewire needs a u32 map mirror".into()));
     }
     let map_len = state.mirror.len() / 4;
-    let mirror = &state.mirror;
-    let map_at = |v: usize| -> u32 {
-        u32::from_le_bytes(mirror[v * 4..v * 4 + 4].try_into().unwrap())
-    };
     let Some(custody) = state.shard.as_ref() else {
         return Err(proto("gather rewire before shard custody".into()));
     };
@@ -1493,38 +1714,84 @@ fn gather_rewire_inner(
     }
 
     // ---- generate the hub pairs from the owned shard + the map ---------
-    let mut buckets = take_buckets(&mut state.bucket_bufs, p);
-    let mut push = |buckets: &mut Vec<Vec<u8>>, hub: u32, spoke: u32| {
-        if hub == spoke {
-            return; // self-loop vanishes under normalization
-        }
-        let (a, b) = if hub < spoke { (hub, spoke) } else { (spoke, hub) };
-        let bucket = &mut buckets[machine_of(a as u64, p)];
-        bucket.extend_from_slice(&a.to_le_bytes());
-        bucket.extend_from_slice(&b.to_le_bytes());
-    };
+    // Chunked like hop generation: edge-row chunks first, primary-chunk
+    // self-pair sub-ranges after, each job into its own bucket set.
+    let t = state.threads.max(1);
+    let taken = take_bucket_sets(&mut state.bucket_bufs, 2 * t, p);
     let cursor = custody.cursor();
-    for (u, v) in cursor.iter() {
-        if (u as usize) >= map_len || (v as usize) >= map_len {
-            return Err(proto(format!("edge ({u},{v}) outside the map")));
+    let rows = cursor.len();
+    let mut specs: Vec<(GenSpan<'_>, Vec<Vec<u8>>)> = Vec::with_capacity(2 * t);
+    {
+        let mut taken = taken.into_iter();
+        for i in 0..t {
+            let (lo, hi) = chunk_range(rows, t, i);
+            specs.push((
+                GenSpan::Edges(cursor.slice(lo, hi)),
+                taken.next().expect("one set per chunk"),
+            ));
         }
-        let (mu, mv) = (map_at(u as usize), map_at(v as usize));
-        if mu == u32::MAX || mv == u32::MAX {
-            return Err(proto(format!("map drops endpoint of live edge ({u},{v})")));
+        let (sa, sb) = chunk_range(map_len, p, my);
+        for i in 0..t {
+            let (lo, hi) = chunk_range(sb - sa, t, i);
+            specs.push((
+                GenSpan::Selfs(sa + lo, sa + hi),
+                taken.next().expect("one set per chunk"),
+            ));
         }
-        push(&mut buckets, mu, v);
-        push(&mut buckets, mv, u);
     }
-    let (sa, sb) = chunk_range(map_len, p, my);
-    for v in sa..sb {
-        let mv = map_at(v);
-        if mv == u32::MAX {
-            return Err(proto(format!("map drops live vertex {v}")));
-        }
-        push(&mut buckets, mv, v as u32);
+    let mirror = &state.mirror;
+    let jobs: Vec<_> = specs
+        .into_iter()
+        .map(|(span, mut set)| {
+            move || -> Result<Vec<Vec<u8>>, String> {
+                let map_at = |v: usize| -> u32 {
+                    u32::from_le_bytes(mirror[v * 4..v * 4 + 4].try_into().unwrap())
+                };
+                let mut push = |set: &mut Vec<Vec<u8>>, hub: u32, spoke: u32| {
+                    if hub == spoke {
+                        return; // self-loop vanishes under normalization
+                    }
+                    let (a, b) = if hub < spoke { (hub, spoke) } else { (spoke, hub) };
+                    let bucket = &mut set[machine_of(a as u64, p)];
+                    bucket.extend_from_slice(&a.to_le_bytes());
+                    bucket.extend_from_slice(&b.to_le_bytes());
+                };
+                match span {
+                    GenSpan::Edges(sub) => {
+                        for (u, v) in sub.iter() {
+                            if (u as usize) >= map_len || (v as usize) >= map_len {
+                                return Err(format!("edge ({u},{v}) outside the map"));
+                            }
+                            let (mu, mv) = (map_at(u as usize), map_at(v as usize));
+                            if mu == u32::MAX || mv == u32::MAX {
+                                return Err(format!(
+                                    "map drops endpoint of live edge ({u},{v})"
+                                ));
+                            }
+                            push(&mut set, mu, v);
+                            push(&mut set, mv, u);
+                        }
+                    }
+                    GenSpan::Selfs(lo, hi) => {
+                        for v in lo..hi {
+                            let mv = map_at(v);
+                            if mv == u32::MAX {
+                                return Err(format!("map drops live vertex {v}"));
+                            }
+                            push(&mut set, mv, v as u32);
+                        }
+                    }
+                }
+                Ok(set)
+            }
+        })
+        .collect();
+    let mut sets: Vec<Vec<Vec<u8>>> = Vec::with_capacity(2 * t);
+    for r in state.pool.run_jobs(jobs) {
+        sets.push(r.map_err(proto)?);
     }
 
-    ship_and_adopt(state, seq, buckets, new_n, edges_sent)
+    ship_and_adopt(state, seq, sets, new_n, edges_sent)
 }
 
 #[cfg(test)]
@@ -1556,6 +1823,9 @@ mod tests {
             let _pid = r.u32("pid").unwrap();
             let port = r.u16("mesh port").unwrap();
             assert!(port != 0, "worker must advertise a mesh port");
+            let threads = r.u32("worker threads").unwrap();
+            assert!(threads >= 1, "worker must advertise its thread count");
+            r.expect_end("hello").unwrap();
         }
         let p = 2u32;
         let mut body = Vec::new();
@@ -1682,14 +1952,16 @@ mod tests {
     /// A single-machine shuffle session end to end: roster (empty mesh),
     /// mirror sync, a descriptor hop (generated from the shard, folded
     /// locally, mirror updated), and a rewire that contracts the shard —
-    /// all without one payload byte crossing the coordinator link.
-    #[test]
-    fn worker_serves_descriptor_rounds_on_one_machine() {
+    /// all without one payload byte crossing the coordinator link.  The
+    /// session pins exact received byte counts and fold checksums, so
+    /// running it at several thread counts is the bit-identity assertion
+    /// for the chunked generate / key-range fold paths.
+    fn drive_descriptor_session(threads: usize) {
         let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
         let addr = listener.local_addr().unwrap();
         let worker = std::thread::spawn(move || {
             let stream = TcpStream::connect(addr).unwrap();
-            serve(stream)
+            serve_with_threads(stream, threads)
         });
         let (coord, _) = listener.accept().unwrap();
         let mut reader = BufReader::new(coord.try_clone().unwrap());
@@ -1871,5 +2143,17 @@ mod tests {
         net::write_frame(&mut writer, FrameKind::Shutdown, 13, &[]).unwrap();
         assert_eq!(net::read_frame(&mut reader).unwrap().kind, FrameKind::Bye);
         worker.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn worker_serves_descriptor_rounds_on_one_machine() {
+        drive_descriptor_session(1);
+    }
+
+    /// The same session, every ack pinned to the same bytes, with the
+    /// data plane running chunked on a 4-thread pool.
+    #[test]
+    fn descriptor_rounds_are_bit_identical_on_a_thread_pool() {
+        drive_descriptor_session(4);
     }
 }

@@ -68,8 +68,13 @@ Common flags:
                            coordinator issues descriptors; run/pipeline/perf)
   --spill-budget BYTES[K|M|G] (resident edge-memory budget; larger graphs
                         run with disk-backed shards; run/pipeline/perf)
+  --worker-threads N (data-plane threads inside each spawned worker process;
+                      bit-identical outputs at every value; env
+                      LCC_WORKER_THREADS; default 1; run/serve/perf)
   --finisher N  --use-xla  --verify  --json
   --out FILE (perf: write the machine-readable suite JSON, BENCH_PR2.json schema)
+  --thread-sweep (perf: rerun the shuffle round breakdown at worker-thread
+                  counts 1,2,4,8 and emit one JSON row per count)
   --scale N (table/figure dataset size)  --runs N (median-of-N)
   --exp decay|depth|loglog|path|comm|cycles (theory)
   --exp finisher|pruning|mtl|machines|dense (ablation)
@@ -177,6 +182,7 @@ fn cmd_run(args: &Args) {
         respawn_budget: args.usize_opt("respawn-budget"),
         checkpoint_dir: args.str_opt("checkpoint-dir").map(std::path::PathBuf::from),
         keep_generations: args.nonzero_usize_opt("keep-generations"),
+        worker_threads: args.nonzero_usize_opt("worker-threads"),
         ..Default::default()
     };
     let driver = Driver::new(cfg);
@@ -222,6 +228,7 @@ fn cmd_serve(args: &Args) {
         respawn_budget: args.usize_opt("respawn-budget"),
         checkpoint_dir: args.str_opt("checkpoint-dir").map(std::path::PathBuf::from),
         keep_generations: args.nonzero_usize_opt("keep-generations"),
+        worker_threads: args.nonzero_usize_opt("worker-threads"),
         ..Default::default()
     };
     let serve_cfg = lcc::serve::ServeConfig {
@@ -397,6 +404,9 @@ fn cmd_perf(args: &Args) {
     if let Some(k) = args.nonzero_usize_opt("keep-generations") {
         std::env::set_var("LCC_KEEP_GENERATIONS", k.to_string());
     }
+    if let Some(t) = args.nonzero_usize_opt("worker-threads") {
+        std::env::set_var("LCC_WORKER_THREADS", t.to_string());
+    }
     let measurements = perf::standard_suite(quick, machines, budget, mode);
     for m in &measurements {
         println!("{}", m.report_line());
@@ -405,7 +415,10 @@ fn cmd_perf(args: &Args) {
     let out_path = args.str_opt("out").map(String::from);
     if want_json || out_path.is_some() {
         let breakdown = perf::round_breakdown(machines, mode);
-        let doc = perf::suite_json(&measurements, quick, machines, budget, mode, breakdown);
+        let mut doc = perf::suite_json(&measurements, quick, machines, budget, mode, breakdown);
+        if args.bool_or("thread-sweep", false) {
+            doc = doc.set("thread_sweep", perf::thread_sweep(machines, mode));
+        }
         let text = doc.pretty();
         if let Some(path) = &out_path {
             std::fs::write(path, &text)

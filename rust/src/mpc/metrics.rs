@@ -122,6 +122,11 @@ pub struct MeshMetrics {
     /// Custody establishments that re-shipped shards via the
     /// coordinator (recovery / non-rewire generations).
     pub custody_loads: u64,
+    /// Data-plane threads each worker process ran its rounds on, as
+    /// reported in the v5 Hello (1 = the serial path).  Observability
+    /// only — thread count never changes [`RoundMetrics`] by
+    /// construction, and the equivalence suites enforce it.
+    pub worker_threads: u64,
 }
 
 /// Accumulated metrics for a run.

@@ -86,8 +86,10 @@ pub const FRAME_MAGIC: &[u8; 8] = b"LCCFRME1";
 /// `LCC_CONNECT_RETRIES`).  v4: the mesh data-plane perf frames —
 /// `StateDelta` mirror patches, `HopBatch`/`HopBatchAck` pipelined round
 /// plans, `GatherRewire` worker-native grouped contraction — and acks
-/// carry the worker's mesh byte meter.
-pub const PROTO_VERSION: u32 = 4;
+/// carry the worker's mesh byte meter.  v5: `Hello` carries the worker's
+/// data-plane thread count (`LCC_WORKER_THREADS`), reported back in the
+/// mesh metrics so an artifact records how parallel the fleet ran.
+pub const PROTO_VERSION: u32 = 5;
 /// Sanity cap on a peer-declared frame body, 4 GiB (a garbage length
 /// must not drive a huge allocation).
 pub const MAX_FRAME_BODY: u64 = 1 << 32;
@@ -163,6 +165,12 @@ pub struct NetConfig {
     /// default; disabling forces every sync down the full-broadcast path
     /// (the bit-identity baseline the delta path is tested against).
     pub delta_sync: bool,
+    /// Data-plane threads per worker process (`LCC_WORKER_THREADS`;
+    /// clamped to ≥ 1).  1 = the serial hot path; above it each worker
+    /// runs generate/fold on a [`crate::mpc::pool::WorkerPool`] with
+    /// chunk-merge order pinned so every byte stream stays identical to
+    /// the serial one.
+    pub worker_threads: usize,
 }
 
 impl Default for NetConfig {
@@ -176,6 +184,7 @@ impl Default for NetConfig {
             checkpoint_dir: None,
             keep_generations: DEFAULT_KEEP_GENERATIONS,
             delta_sync: true,
+            worker_threads: 1,
         }
     }
 }
@@ -215,6 +224,9 @@ impl NetConfig {
             if v == "0" || v.eq_ignore_ascii_case("off") {
                 cfg.delta_sync = false;
             }
+        }
+        if let Some(t) = env_u64("LCC_WORKER_THREADS").filter(|&t| t > 0) {
+            cfg.worker_threads = t as usize;
         }
         cfg
     }
@@ -315,10 +327,11 @@ impl FaultPlan {
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum FrameKind {
     /// worker → coordinator, first frame after connect: `version u32 |
-    /// pid u32 | mesh_port u16` (the pid lets the coordinator align
-    /// spawned children with the accept-order worker ids; the mesh port
-    /// is where this worker accepts peer connections — used only by the
-    /// shuffle transport).
+    /// pid u32 | mesh_port u16 | worker_threads u32` (the pid lets the
+    /// coordinator align spawned children with the accept-order worker
+    /// ids; the mesh port is where this worker accepts peer connections —
+    /// used only by the shuffle transport; worker_threads is the
+    /// data-plane pool width the worker runs its rounds on, v5).
     Hello,
     /// coordinator → worker: `version u32 | worker_id u32 | machines u32`.
     Assign,
@@ -553,11 +566,28 @@ pub fn write_frame_parts<W: Write>(
     head: &[u8],
     tail: &[u8],
 ) -> Result<(), TransportError> {
+    write_frame_slices(w, kind, seq, &[head, tail])
+}
+
+/// The general form of [`write_frame_parts`]: the body is the
+/// concatenation of `parts` (checksum and declared length cover the
+/// whole), each slice written straight from where it lives.  The parallel
+/// generate path sends a peer bucket as its per-thread chunk slices in
+/// chunk order — the wire bytes equal the serial single-buffer stream
+/// without ever merging the chunks into one allocation.
+pub fn write_frame_slices<W: Write>(
+    w: &mut W,
+    kind: FrameKind,
+    seq: u64,
+    parts: &[&[u8]],
+) -> Result<(), TransportError> {
     let mut h = Fnv1a::new();
-    h.update(head);
-    h.update(tail);
+    let mut body_len = 0u64;
+    for part in parts {
+        h.update(part);
+        body_len += part.len() as u64;
+    }
     let checksum = h.finish();
-    let body_len = head.len() as u64 + tail.len() as u64;
     let mut header = Vec::with_capacity(FRAME_HEADER_BYTES as usize);
     header.extend_from_slice(FRAME_MAGIC);
     header.push(kind.code());
@@ -565,9 +595,10 @@ pub fn write_frame_parts<W: Write>(
     header.extend_from_slice(&body_len.to_le_bytes());
     header.extend_from_slice(&checksum.to_le_bytes());
     w.write_all(&header).map_err(|e| io_err("write frame header", e))?;
-    w.write_all(head).map_err(|e| io_err("write frame body", e))?;
-    if !tail.is_empty() {
-        w.write_all(tail).map_err(|e| io_err("write frame body", e))?;
+    for part in parts {
+        if !part.is_empty() {
+            w.write_all(part).map_err(|e| io_err("write frame body", e))?;
+        }
     }
     w.flush().map_err(|e| io_err("flush frame", e))
 }
@@ -750,21 +781,30 @@ pub fn decode_round_body(body: &[u8]) -> Result<RoundMsg<'_>, TransportError> {
 
 /// Fold `(key u64, value)` records into one value per key with min/max
 /// over `Ord`, emitting `key | value` pairs in ascending key order
-/// (`BTreeMap` iteration — deterministic).
+/// (`BTreeMap` iteration — deterministic).  Consumes the payload as a
+/// list of slices (a `RoundInbox`'s buckets, fed in place) and folds only
+/// keys in `[lo, hi)` (`hi` `None` = unbounded).
 fn fold_records<V: Ord + Copy>(
-    payload: &[u8],
+    parts: &[&[u8]],
     rec: usize,
+    lo: u64,
+    hi: Option<u64>,
     take_min: bool,
     decode: impl Fn(&[u8]) -> V,
     encode: impl Fn(V, &mut Vec<u8>),
 ) -> Vec<u8> {
     let mut acc: std::collections::BTreeMap<u64, V> = std::collections::BTreeMap::new();
-    for c in payload.chunks_exact(rec) {
-        let k = u64::from_le_bytes(c[..8].try_into().unwrap());
-        let v = decode(&c[8..]);
-        acc.entry(k)
-            .and_modify(|cur| *cur = if take_min { (*cur).min(v) } else { (*cur).max(v) })
-            .or_insert(v);
+    for part in parts {
+        for c in part.chunks_exact(rec) {
+            let k = u64::from_le_bytes(c[..8].try_into().unwrap());
+            if k < lo || hi.is_some_and(|h| k >= h) {
+                continue;
+            }
+            let v = decode(&c[8..]);
+            acc.entry(k)
+                .and_modify(|cur| *cur = if take_min { (*cur).min(v) } else { (*cur).max(v) })
+                .or_insert(v);
+        }
     }
     let mut out = Vec::with_capacity(acc.len() * rec);
     for (k, v) in acc {
@@ -774,37 +814,83 @@ fn fold_records<V: Ord + Copy>(
     out
 }
 
+/// Reject any payload slice that is not a whole number of `op` records.
+/// Split from the fold itself so every thread count validates (and
+/// errors) identically before any sub-range fold runs.
+pub fn validate_fold_parts(op: WireOp, parts: &[&[u8]]) -> Result<(), String> {
+    let rec = 8 + op.value_bytes();
+    for part in parts {
+        if part.len() % rec != 0 {
+            return Err(format!(
+                "fold payload is {} bytes, not a multiple of the {rec}-byte record",
+                part.len()
+            ));
+        }
+    }
+    Ok(())
+}
+
 /// Fold a round payload (`(key u64, value)` records, value width implied
 /// by `op`) the way the owning machine would: one folded value per
 /// distinct key, emitted in ascending key order (deterministic).  Shared
 /// by the worker process and the in-process loopback tests.
 pub fn fold_wire_payload(op: WireOp, payload: &[u8]) -> Result<Vec<u8>, String> {
+    fold_wire_payload_multi(op, &[payload])
+}
+
+/// [`fold_wire_payload`] over a list of payload slices, consumed where
+/// they already live (a worker's own bucket plus each received peer
+/// bucket) — the staging concat of the receive volume is gone.  Record
+/// *order* across slices is irrelevant to the output: the min/max ops are
+/// commutative and the gather sorts + dedups, so any slice order produces
+/// the same ascending-key image.
+pub fn fold_wire_payload_multi(op: WireOp, parts: &[&[u8]]) -> Result<Vec<u8>, String> {
+    validate_fold_parts(op, parts)?;
+    Ok(fold_wire_payload_in_range(op, parts, 0, None))
+}
+
+/// Fold only the records of `parts` whose key lies in `[lo, hi)` (`hi`
+/// `None` = unbounded), emitting ascending keys.  `parts` must already
+/// have passed [`validate_fold_parts`].  Because the full fold image is
+/// ascending in the key, concatenating the images of consecutive key
+/// ranges reproduces it byte for byte — this is what makes the worker's
+/// key-partitioned parallel fold bit-identical to the serial one by
+/// construction.  The **last** range of a partition must run unbounded so
+/// garbage keys from a corrupt peer (≥ every valid key) still land in
+/// exactly one range and surface downstream as the same typed error the
+/// serial path raises.
+pub fn fold_wire_payload_in_range(
+    op: WireOp,
+    parts: &[&[u8]],
+    lo: u64,
+    hi: Option<u64>,
+) -> Vec<u8> {
     let rec = 8 + op.value_bytes();
-    if payload.len() % rec != 0 {
-        return Err(format!(
-            "fold payload is {} bytes, not a multiple of the {rec}-byte record",
-            payload.len()
-        ));
-    }
     let take_min = matches!(op, WireOp::MinU32 | WireOp::MinU64 | WireOp::MinPairU32);
-    Ok(match op {
+    match op {
         WireOp::MinU32 | WireOp::MaxU32 => fold_records(
-            payload,
+            parts,
             rec,
+            lo,
+            hi,
             take_min,
             |b| u32::from_le_bytes(b[..4].try_into().unwrap()),
             |v, out| out.extend_from_slice(&v.to_le_bytes()),
         ),
         WireOp::MinU64 | WireOp::MaxU64 => fold_records(
-            payload,
+            parts,
             rec,
+            lo,
+            hi,
             take_min,
             |b| u64::from_le_bytes(b[..8].try_into().unwrap()),
             |v, out| out.extend_from_slice(&v.to_le_bytes()),
         ),
         WireOp::MinPairU32 | WireOp::MaxPairU32 => fold_records(
-            payload,
+            parts,
             rec,
+            lo,
+            hi,
             take_min,
             |b| {
                 (
@@ -819,18 +905,23 @@ pub fn fold_wire_payload(op: WireOp, payload: &[u8]) -> Result<Vec<u8>, String> 
         ),
         // a gather is not a 1-per-key fold: every distinct (key, pair)
         // record survives, sorted lexicographically and deduped exactly —
-        // the canonical image of a grouped reduce
+        // the canonical image of a grouped reduce.  Duplicates share a
+        // key, so a key-range partition never splits a dedup pair.
         WireOp::GatherPairU32 => {
-            let mut recs: Vec<(u64, u32, u32)> = payload
-                .chunks_exact(rec)
-                .map(|c| {
-                    (
-                        u64::from_le_bytes(c[..8].try_into().unwrap()),
+            let mut recs: Vec<(u64, u32, u32)> = Vec::new();
+            for part in parts {
+                for c in part.chunks_exact(rec) {
+                    let k = u64::from_le_bytes(c[..8].try_into().unwrap());
+                    if k < lo || hi.is_some_and(|h| k >= h) {
+                        continue;
+                    }
+                    recs.push((
+                        k,
                         u32::from_le_bytes(c[8..12].try_into().unwrap()),
                         u32::from_le_bytes(c[12..16].try_into().unwrap()),
-                    )
-                })
-                .collect();
+                    ));
+                }
+            }
             recs.sort_unstable();
             recs.dedup();
             let mut out = Vec::with_capacity(recs.len() * rec);
@@ -841,7 +932,7 @@ pub fn fold_wire_payload(op: WireOp, payload: &[u8]) -> Result<Vec<u8>, String> 
             }
             out
         }
-    })
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -903,6 +994,10 @@ pub struct ProcTransport {
     /// Worker mesh-listener port per machine (from the v2 Hello), used
     /// only by the shuffle transport's `Peers` roster.
     mesh_ports: Vec<u16>,
+    /// Data-plane thread count each worker reported in its v5 Hello
+    /// (what the fleet *actually* runs, not what the coordinator asked
+    /// for) — surfaced through the mesh metrics.
+    worker_threads: Vec<u32>,
     /// Total bytes moved over the coordinator links, both directions
     /// (shared by every [`Meter`]).
     link_bytes: std::sync::Arc<std::sync::atomic::AtomicU64>,
@@ -966,6 +1061,7 @@ impl ProcTransport {
                 .arg(addr.to_string())
                 .env("LCC_IO_TIMEOUT_MS", cfg.io_timeout.as_millis().to_string())
                 .env("LCC_CONNECT_RETRIES", cfg.connect_retries.to_string())
+                .env("LCC_WORKER_THREADS", cfg.worker_threads.max(1).to_string())
                 .stdin(Stdio::null())
                 .stdout(Stdio::null())
                 .stderr(Stdio::inherit());
@@ -1074,6 +1170,7 @@ impl ProcTransport {
         let mut conns = Vec::with_capacity(streams.len());
         let mut worker_pids = Vec::with_capacity(streams.len());
         let mut mesh_ports = Vec::with_capacity(streams.len());
+        let mut worker_threads = Vec::with_capacity(streams.len());
         for (j, s) in streams.into_iter().enumerate() {
             let counter = std::sync::Arc::clone(&link_bytes);
             let prep = || -> Result<Conn, TransportError> {
@@ -1116,8 +1213,10 @@ impl ProcTransport {
             }
             let pid = r.u32("hello pid").map_err(|e| e.for_worker(j))?;
             let port = r.u16("hello mesh port").map_err(|e| e.for_worker(j))?;
+            let threads = r.u32("hello worker threads").map_err(|e| e.for_worker(j))?;
             worker_pids.push(pid);
             mesh_ports.push(port);
+            worker_threads.push(threads.max(1));
             let mut body = Vec::with_capacity(12);
             body.extend_from_slice(&PROTO_VERSION.to_le_bytes());
             body.extend_from_slice(&(j as u32).to_le_bytes());
@@ -1131,6 +1230,7 @@ impl ProcTransport {
             children: Vec::new(),
             worker_pids,
             mesh_ports,
+            worker_threads,
             link_bytes,
             machines,
             seq: seq0,
@@ -1934,6 +2034,15 @@ impl Exchange for ShuffleTransport {
             mesh_bytes: s.mesh_bytes.load(Relaxed),
             rewires: s.rewires.load(Relaxed),
             custody_loads: s.custody_loads.load(Relaxed),
+            // what the fleet reported in its Hellos, not what was asked
+            // for (a worker clamps); homogeneous fleets make max == all
+            worker_threads: self
+                .links
+                .worker_threads
+                .iter()
+                .copied()
+                .max()
+                .unwrap_or(1) as u64,
         })
     }
 }
@@ -2609,6 +2718,80 @@ mod tests {
     }
 
     #[test]
+    fn sliced_frame_writes_match_the_single_buffer_stream() {
+        // a bucket shipped as chunk slices must put the exact same bytes
+        // on the wire as the merged buffer — header, checksum, and all
+        let body = b"chunk0chunk1chunk2";
+        let mut whole = Vec::new();
+        write_frame(&mut whole, FrameKind::PeerMsgs, 9, body).unwrap();
+        let mut sliced = Vec::new();
+        write_frame_slices(
+            &mut sliced,
+            FrameKind::PeerMsgs,
+            9,
+            &[b"chunk0", b"", b"chunk1", b"chunk2"],
+        )
+        .unwrap();
+        assert_eq!(whole, sliced);
+        let frame = read_frame(&mut &sliced[..]).unwrap();
+        assert_eq!(frame.body, body);
+    }
+
+    #[test]
+    fn multi_slice_fold_matches_the_concatenated_fold() {
+        let mut a = Vec::new();
+        a.extend(rec_u32(5, 30));
+        a.extend(rec_u32(2, 9));
+        let mut b = Vec::new();
+        b.extend(rec_u32(5, 11));
+        b.extend(rec_u32(2, 40));
+        let mut all = a.clone();
+        all.extend_from_slice(&b);
+        for op in [WireOp::MinU32, WireOp::MaxU32] {
+            assert_eq!(
+                fold_wire_payload_multi(op, &[&a, &b]).unwrap(),
+                fold_wire_payload(op, &all).unwrap()
+            );
+            // slice order is irrelevant: the ops are commutative
+            assert_eq!(
+                fold_wire_payload_multi(op, &[&b, &a]).unwrap(),
+                fold_wire_payload(op, &all).unwrap()
+            );
+        }
+        // raggedness is caught per slice, before any folding
+        assert!(fold_wire_payload_multi(WireOp::MinU32, &[&a, &[0u8; 13]]).is_err());
+    }
+
+    #[test]
+    fn ranged_folds_concatenate_to_the_full_image() {
+        let mut payload = Vec::new();
+        for (k, v) in [(7u64, 1u32), (0, 5), (3, 2), (7, 9), (1, 4), (0, 8)] {
+            payload.extend(rec_u32(k, v));
+        }
+        let parts: &[&[u8]] = &[&payload];
+        let full = fold_wire_payload(WireOp::MinU32, &payload).unwrap();
+        // key space [0, 8) in 3 contiguous ranges, last one unbounded so
+        // out-of-mirror garbage keys would land exactly once
+        let mut cat = fold_wire_payload_in_range(WireOp::MinU32, parts, 0, Some(3));
+        cat.extend(fold_wire_payload_in_range(WireOp::MinU32, parts, 3, Some(6)));
+        cat.extend(fold_wire_payload_in_range(WireOp::MinU32, parts, 6, None));
+        assert_eq!(cat, full);
+        // the gather variant partitions the same way (dedup pairs share
+        // their key, so a range never splits one)
+        let mut gp = Vec::new();
+        for (k, a, b) in [(4u64, 7u32, 3u32), (1, 2, 9), (4, 7, 3), (0, 1, 1)] {
+            gp.extend_from_slice(&k.to_le_bytes());
+            gp.extend_from_slice(&a.to_le_bytes());
+            gp.extend_from_slice(&b.to_le_bytes());
+        }
+        let gparts: &[&[u8]] = &[&gp];
+        let gfull = fold_wire_payload(WireOp::GatherPairU32, &gp).unwrap();
+        let mut gcat = fold_wire_payload_in_range(WireOp::GatherPairU32, gparts, 0, Some(2));
+        gcat.extend(fold_wire_payload_in_range(WireOp::GatherPairU32, gparts, 2, None));
+        assert_eq!(gcat, gfull);
+    }
+
+    #[test]
     fn fault_plan_parses_the_cli_grammar() {
         let plan = FaultPlan::parse("kill:w2@round=3,delay:w1@round=5,kill:w0@gen=1").unwrap();
         assert_eq!(plan.actions.len(), 3);
@@ -2649,6 +2832,7 @@ mod tests {
         assert!(cfg.fault_plan.is_none());
         assert!(cfg.checkpoint_dir.is_none());
         assert!(cfg.delta_sync);
+        assert_eq!(cfg.worker_threads, 1);
     }
 
     #[test]

@@ -120,6 +120,84 @@ fn all_algorithms_bit_identical_across_transports() {
     }
 }
 
+/// The acceptance property of the parallel worker data plane: a fleet
+/// running its generate/fold/rewire stages on a thread pool must be
+/// observationally indistinguishable from the serial fleet — labels,
+/// phase series, and per-round metrics (message counts, shuffled bytes,
+/// per-machine loads) bit-identical, and the mesh byte counters equal to
+/// the byte, because the chunk-order merge reproduces the serial byte
+/// stream exactly.  Fold checksums are cross-checked worker-vs-
+/// coordinator inside every StateAck, so any parallel-fold divergence
+/// fails the run itself, not just these asserts.
+#[test]
+fn parallel_data_plane_is_bit_identical_across_thread_counts() {
+    use std::sync::atomic::AtomicU64;
+    let flat = test_graph();
+    let want = cc::oracle::components(&flat);
+    let snapshot = |s: &lcc::mpc::net::ShuffleStats| -> Vec<u64> {
+        let ld = |c: &AtomicU64| c.load(Ordering::Relaxed);
+        vec![
+            ld(&s.rewires),
+            ld(&s.custody_loads),
+            ld(&s.state_syncs),
+            ld(&s.delta_syncs),
+            ld(&s.hops),
+            ld(&s.hop_batches),
+            ld(&s.sync_bytes),
+            ld(&s.mesh_bytes),
+        ]
+    };
+    for machines in [1usize, 4, 16] {
+        let g = ShardedGraph::from_graph(&flat, machines);
+        for algo in cc::ALL_ALGORITHMS {
+            let run_at = |threads: usize| {
+                let net = NetConfig {
+                    worker_threads: threads,
+                    ..NetConfig::default()
+                };
+                let mut t = ShuffleTransport::spawn_with(machines, worker_bin(), net)
+                    .expect("spawn mesh workers");
+                t.load_graph(&g).expect("distribute shards");
+                let stats = t.stats();
+                let res = run_algo(
+                    algo,
+                    &g,
+                    Simulator::with_transport(cfg(machines), Box::new(t)),
+                    7,
+                );
+                (res, snapshot(&stats))
+            };
+            let (serial, counters_serial) = run_at(1);
+            assert_eq!(
+                serial.labels, want,
+                "{algo} machines={machines} threads=1: wrong labels"
+            );
+            let (pooled, counters_pooled) = run_at(4);
+            assert_eq!(
+                serial.labels, pooled.labels,
+                "{algo} machines={machines}: labels diverge at 4 worker threads"
+            );
+            assert_eq!(
+                serial.phases, pooled.phases,
+                "{algo} machines={machines}: phases diverge at 4 worker threads"
+            );
+            assert_eq!(
+                serial.edges_per_phase, pooled.edges_per_phase,
+                "{algo} machines={machines}: phase series diverge at 4 worker threads"
+            );
+            assert_eq!(
+                serial.metrics.rounds, pooled.metrics.rounds,
+                "{algo} machines={machines}: per-round metrics diverge at 4 worker threads"
+            );
+            assert_eq!(
+                counters_serial, counters_pooled,
+                "{algo} machines={machines}: mesh byte counters diverge at 4 worker threads \
+                 (rewires/custody/syncs/deltas/hops/batches/sync_bytes/mesh_bytes)"
+            );
+        }
+    }
+}
+
 #[test]
 fn transport_driven_rewrites_produce_identical_graphs() {
     // hop + contract under all transports: the *final graphs* must be

@@ -116,10 +116,12 @@ impl FakePeer {
         let addr = listener.local_addr().unwrap();
         let fake = std::thread::spawn(move || {
             let stream = TcpStream::connect(addr).unwrap();
-            // worker side of the handshake: version + pid + mesh port
+            // worker side of the handshake (v5): version + pid + mesh
+            // port + worker threads
             let mut hello = PROTO_VERSION.to_le_bytes().to_vec();
             hello.extend_from_slice(&std::process::id().to_le_bytes());
             hello.extend_from_slice(&0u16.to_le_bytes());
+            hello.extend_from_slice(&1u32.to_le_bytes());
             let mut w = stream.try_clone().unwrap();
             net::write_frame(&mut w, FrameKind::Hello, 0, &hello).unwrap();
             let mut r = stream.try_clone().unwrap();
@@ -384,6 +386,7 @@ fn shuffle_pair() -> (ShuffleTransport, FakePeer) {
         let mut hello = PROTO_VERSION.to_le_bytes().to_vec();
         hello.extend_from_slice(&std::process::id().to_le_bytes());
         hello.extend_from_slice(&0u16.to_le_bytes());
+        hello.extend_from_slice(&1u32.to_le_bytes());
         let mut w = stream.try_clone().unwrap();
         net::write_frame(&mut w, FrameKind::Hello, 0, &hello).unwrap();
         let mut r = stream.try_clone().unwrap();
@@ -531,6 +534,50 @@ fn shuffle_mid_batch_kill_replays_the_whole_batch_and_charges_rounds_once() {
 }
 
 #[test]
+fn shuffle_mid_parallel_batch_kill_recovers_bit_identically() {
+    // the same mid-batch kill with the workers running their data plane
+    // on a 4-thread pool: a worker dies while its pool is mid-generate /
+    // mid-fold, recovery respawns the fleet (which comes back at the
+    // same thread count via LCC_WORKER_THREADS), replays the whole
+    // batch, and the result — and the once-charged round metrics — must
+    // still be bit-identical to the undisturbed in-process run
+    use lcc::cc::common::{fused_two_hop, min_hop};
+    use lcc::graph::Csr;
+    use lcc::mpc::WireFold;
+    let g = small_graph(2);
+    let vals: Vec<u32> = (0..g.num_vertices() as u32).map(|v| v * 7 % 13).collect();
+    let csr = Csr::build_sharded(&g);
+    let mpc = || MpcConfig {
+        machines: 2,
+        space_per_machine: None,
+        spill_budget: None,
+        threads: 1,
+    };
+    let mut sim_ref = Simulator::new(mpc());
+    let w1 = min_hop(&mut sim_ref, "hop1", &g, &vals, true);
+    let want = fused_two_hop(&mut sim_ref, ("hop2", "hop3"), &g, &csr, &w1, WireFold::min_u32());
+
+    let mut cfg = net::NetConfig::from_env();
+    cfg.fault_plan = Some("kill:w1@round=3".into());
+    cfg.worker_threads = 4;
+    let mut t = ShuffleTransport::spawn_with(2, worker_bin(), cfg).expect("spawn");
+    t.load_graph(&g).expect("load");
+    let mut sim = Simulator::with_transport(mpc(), Box::new(t));
+    let h1 = min_hop(&mut sim, "hop1", &g, &vals, true);
+    let got = fused_two_hop(&mut sim, ("hop2", "hop3"), &g, &csr, &h1, WireFold::min_u32());
+
+    assert_eq!(got, want, "recovered parallel batch diverged");
+    assert_eq!(
+        sim.metrics.rounds, sim_ref.metrics.rounds,
+        "replayed parallel-batch rounds must be charged exactly once"
+    );
+    assert!(
+        !sim.metrics.recovery.events.is_empty(),
+        "the mid-batch kill must be logged as a recovery event"
+    );
+}
+
+#[test]
 fn shuffle_lying_hop_load_is_an_accounting_mismatch() {
     let (mut t, mut peer) = shuffle_pair();
     let handle = std::thread::spawn(move || {
@@ -643,6 +690,7 @@ fn shuffle_peer_connect_refused_is_typed() {
         let mut hello = PROTO_VERSION.to_le_bytes().to_vec();
         hello.extend_from_slice(&std::process::id().to_le_bytes());
         hello.extend_from_slice(&dead_port.to_le_bytes());
+        hello.extend_from_slice(&1u32.to_le_bytes());
         let mut w = stream.try_clone().unwrap();
         net::write_frame(&mut w, FrameKind::Hello, 0, &hello).unwrap();
         let mut r = stream.try_clone().unwrap();
@@ -692,6 +740,7 @@ fn shuffle_corrupted_peer_frame_is_typed() {
         let mut hello = PROTO_VERSION.to_le_bytes().to_vec();
         hello.extend_from_slice(&std::process::id().to_le_bytes());
         hello.extend_from_slice(&fake_port.to_le_bytes());
+        hello.extend_from_slice(&1u32.to_le_bytes());
         let mut w = stream.try_clone().unwrap();
         net::write_frame(&mut w, FrameKind::Hello, 0, &hello).unwrap();
         let mut r = stream.try_clone().unwrap();

@@ -15,6 +15,12 @@ Gate: fail (exit 1) on a >25% regression in any of
   * mesh bytes — `round_breakdown.mesh.{sync_bytes,mesh_bytes}` when both
     artifacts record the same shuffle run (same algo/machines/transport):
     a sync-byte blow-up means the delta mirror path stopped engaging.
+  * thread sweep — within the FRESH artifact alone (`--thread-sweep`
+    rows): a multi-threaded row's summed generate or fold wall-clock
+    must not exceed the single-threaded row of the same run by >25%.
+    Same machine, same artifact, same run — the only thread-scaling
+    comparison that is hardware-apples-to-apples, so it needs no
+    baseline and never disarms.
 
 Baselines that are missing or still `pending-first-measurement` produce a
 warning and exit 0 — the gate arms itself the first time CI lands real
@@ -79,6 +85,48 @@ def mesh_counters(doc):
     return mesh if isinstance(mesh, dict) else None
 
 
+def check_thread_sweep(doc):
+    """Same-artifact gate on `thread_sweep` rows.
+
+    Returns (comparisons, regressions): each threads>1 row's gen_ms and
+    fold_ms vs the threads=1 row of the same sweep.  Phases measured at
+    ~0ms on either side are skipped (timer granularity, not scaling), as
+    is the whole check when the artifact has no sweep or no baseline row
+    — this gate only ever fires on data measured seconds apart on the
+    same host.
+    """
+    rows = doc.get("thread_sweep")
+    if not isinstance(rows, list):
+        return 0, []
+    serial = next(
+        (r for r in rows if isinstance(r, dict) and r.get("worker_threads") == 1),
+        None,
+    )
+    if serial is None:
+        return 0, []
+    compared, regressions = 0, []
+    for row in rows:
+        if not isinstance(row, dict) or row.get("worker_threads") == 1:
+            continue
+        threads = row.get("worker_threads")
+        for key in ("gen_ms", "fold_ms"):
+            fv, bv = row.get(key), serial.get(key)
+            measurable = (
+                isinstance(fv, (int, float))
+                and isinstance(bv, (int, float))
+                and bv > 1.0  # sub-ms serial phases are all noise
+            )
+            if not measurable:
+                continue
+            compared += 1
+            if fv > bv * THRESHOLD:
+                regressions.append(
+                    f"thread sweep {key} at {threads} threads: {fv:.1f}ms vs "
+                    f"{bv:.1f}ms single-threaded (same artifact) — {fv / bv:.2f}x"
+                )
+    return compared, regressions
+
+
 def main(argv):
     if len(argv) < 3:
         print(__doc__.strip(), file=sys.stderr)
@@ -91,7 +139,10 @@ def main(argv):
     fresh_benches = bench_index(fresh)
     fresh_bd_key, fresh_rounds = breakdown_key(fresh)
 
-    regressions = []
+    # Same-artifact thread-sweep gate: independent of the baselines, so
+    # it is tallied separately and never feeds the strict-mode overlap
+    # check below (which is about baseline coverage, not self-checks).
+    sweep_compared, regressions = check_thread_sweep(fresh)
     compared = 0
     measured_baselines = 0
     for path in baseline_paths:
@@ -158,23 +209,28 @@ def main(argv):
         if measured_baselines > 0:
             # strict mode: a measured baseline exists but shares nothing
             # with the fresh artifact — the gate must not silently disarm
+            # (self-contained sweep comparisons don't count as overlap)
             print(
                 "bench_compare: FAIL: baselines carry measurements but none "
                 "overlap the fresh artifact; update BENCH_PR*.json in the "
                 "same change that renamed the suite"
             )
             return 1
-        print(
-            "bench_compare: WARNING: no comparable measurements in any baseline — "
-            "no-op until CI fills BENCH_PR*.json"
-        )
-        return 0
+        if sweep_compared == 0:
+            print(
+                "bench_compare: WARNING: no comparable measurements in any baseline — "
+                "no-op until CI fills BENCH_PR*.json"
+            )
+            return 0
     if regressions:
         print(f"bench_compare: {len(regressions)} regression(s) over 25%:")
         for r in regressions:
             print(f"  REGRESSION {r}")
         return 1
-    print(f"bench_compare: OK — {compared} comparison(s), none above 25%")
+    print(
+        f"bench_compare: OK — {compared} baseline and {sweep_compared} "
+        "thread-sweep comparison(s), none above 25%"
+    )
     return 0
 
 
